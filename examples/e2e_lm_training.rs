@@ -1,0 +1,92 @@
+//! End-to-end driver (DESIGN.md / EXPERIMENTS.md §E2E): train the
+//! transformer language model on the synthetic Markov corpus with cyclic
+//! precision training, entirely from Rust — the full three-layer stack in
+//! one run.
+//!
+//!   make artifacts && cargo run --release --example e2e_lm_training
+//!
+//! What it does:
+//!   * loads the AOT-compiled transformer_lm artifacts via PJRT,
+//!   * trains for a few hundred optimizer steps under the CR schedule
+//!     (and a STATIC baseline for contrast),
+//!   * logs the loss curve + per-step precision to results/e2e_lm.csv,
+//!   * reports final perplexity, effective GBitOps, and throughput.
+
+use anyhow::Result;
+use cpt::prelude::*;
+
+fn main() -> Result<()> {
+    let steps = std::env::var("E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400usize);
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+    let spec = manifest.model("transformer_lm")?;
+    println!(
+        "model transformer_lm: {} params, chunk K={}, {:.1} MFLOP qGEMM/fwd",
+        spec.param_count,
+        spec.chunk,
+        spec.q_gemm_flops_fwd as f64 / 1e6
+    );
+    let model = rt.load_model(spec)?;
+    println!(
+        "compiled: init {:.0}ms, chunk {:.0}ms, step {:.0}ms, eval {:.0}ms",
+        model.init.compile_ms,
+        model.train_chunk.compile_ms,
+        model.train_step.compile_ms,
+        model.eval.compile_ms
+    );
+
+    let mut outs = Vec::new();
+    for sched in ["CR", "STATIC"] {
+        let t0 = std::time::Instant::now();
+        let out = cpt::coordinator::run_one(
+            &model,
+            "transformer_lm",
+            sched,
+            8.0,
+            0,
+            steps,
+            8,
+            (steps / 8).max(1),
+            true, // verbose: stream eval lines
+        )?;
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens = steps as f64 * 16.0 * 32.0; // batch x seq
+        println!(
+            "\n[{sched}] final perplexity {:.3} | {:.3} GBitOps | {:.1}s wall \
+             ({:.0} tokens/s, exec fraction {:.0}%)",
+            out.metric,
+            out.gbitops,
+            dt,
+            tokens / dt,
+            100.0 * out.exec_seconds / dt
+        );
+        // print a compact loss curve
+        let h = &out.history;
+        print!("loss curve: ");
+        for i in (0..h.losses.len()).step_by((h.losses.len() / 10).max(1)) {
+            print!("{:.2} ", h.losses[i].1);
+        }
+        println!("-> {:.2}", h.losses.last().unwrap().1);
+        outs.push(out);
+    }
+
+    let rep = SweepReport::new("e2e transformer LM", "perplexity", false);
+    let csv = cpt::results_dir().join("e2e_lm.csv");
+    rep.write_curves_csv(&outs, &csv)?;
+    println!("\nwrote per-step curves to {}", csv.display());
+
+    // headline comparison
+    let (cr, st) = (&outs[0], &outs[1]);
+    println!(
+        "\nCPT(CR) vs STATIC: perplexity {:.2} vs {:.2} at {:.0}% of the compute",
+        cr.metric,
+        st.metric,
+        100.0 * cr.gbitops / st.gbitops
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Quickstart: train the MLP with the original CPT schedule (CR) and
+//! compare against the static baseline.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use cpt::prelude::*;
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+    let model = rt.load_model(manifest.model("mlp")?)?;
+
+    for sched in ["CR", "RR", "STATIC"] {
+        let out = cpt::coordinator::run_one(
+            &model, "mlp", sched, 8.0, 0, 128, 8, 32, false,
+        )?;
+        println!(
+            "{sched:<8} accuracy={:.4} GBitOps={:.4} exec={:.2}s",
+            out.metric, out.gbitops, out.exec_seconds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Schedule explorer: renders the paper's Figure 2 as ASCII, prints the
+//! savings-group table, and shows how cycle count and q-range reshape a
+//! schedule. Pure L3 — no artifacts needed.
+//!
+//!   cargo run --release --example schedule_explorer
+
+use anyhow::Result;
+use cpt::prelude::*;
+use cpt::schedule::relative_cost;
+
+fn plot(s: &Schedule, total: usize, q_min: u32, q_max: u32) {
+    let width = 72usize;
+    let levels = (q_max - q_min + 1) as usize;
+    let mut rows = vec![vec![' '; width]; levels];
+    for col in 0..width {
+        let t = col * (total - 1) / (width - 1);
+        let q = s.q_at(t).clamp(q_min, q_max);
+        let row = (q_max - q) as usize;
+        rows[row][col] = '#';
+    }
+    for (i, row) in rows.iter().enumerate() {
+        println!("  q={:>2} |{}", q_max - i as u32, row.iter().collect::<String>());
+    }
+    println!("       +{}", "-".repeat(width));
+}
+
+fn main() -> Result<()> {
+    let total = 800;
+    let (q_min, q_max) = (3.0, 8.0);
+
+    println!("CPT schedule suite (paper Fig 2), T={total}, q in [3, 8], n=8\n");
+    println!(
+        "{:<9} {:<10} {:>12} {:>10}",
+        "schedule", "group", "mean q/qmax", "rel. cost"
+    );
+    for name in suite::suite_names() {
+        let s = suite::by_name(name, q_min, q_max, total, 8)?;
+        println!(
+            "{:<9} {:<10} {:>12.3} {:>10.3}",
+            name,
+            group_of(name).label(),
+            s.mean_relative_precision(total),
+            relative_cost(&s, q_max, total)
+        );
+    }
+
+    for name in ["CR", "CT", "RR", "RTH", "RTV", "ER"] {
+        let s = suite::by_name(name, q_min, q_max, total, 8)?;
+        println!(
+            "\n{name} — {} profile, {} (group {})",
+            name.chars().next().unwrap(),
+            if name.len() == 2 && name.ends_with('R') {
+                "repeated"
+            } else {
+                "triangular"
+            },
+            group_of(name).label()
+        );
+        plot(&s, total, 3, 8);
+    }
+
+    println!("\ncycle count effect on CR (n = 2, 4, 8):");
+    for n in [2usize, 4, 8] {
+        let s = suite::by_name("CR", q_min, q_max, total, n)?;
+        println!("\n  n = {n}:");
+        plot(&s, total, 3, 8);
+    }
+
+    println!("\ndeficit schedule (critical-period experiments, §5):");
+    let d = Schedule::deficit(3.0, 8.0, 200, 500);
+    plot(&d, total, 3, 8);
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: Pallas kernels (L1) + JAX models (L2) + AOT.
+
+Nothing in this package is imported at runtime — `aot.py` lowers everything
+to HLO text under artifacts/, which the Rust coordinator loads via PJRT.
+"""

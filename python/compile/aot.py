@@ -1,0 +1,170 @@
+"""AOT pipeline: lower every model to HLO text + write the manifest.
+
+This is the single build-time entry point (`make artifacts`). Python never
+runs again after this: the Rust coordinator loads `artifacts/*.hlo.txt`
+through PJRT and owns the entire training loop.
+
+Interchange is HLO **text**, not `.serialize()` — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model (argument order is the contract with rust/src/runtime):
+
+  {name}_init.hlo.txt        (seed i32[]) -> (params f32[P], opt f32[O])
+  {name}_train_chunk.hlo.txt (params, opt, stacked data[K,...]..., shared
+                              data..., q_fwd f32[K], lr f32[K],
+                              seeds i32[K], q_bwd f32[])
+                              -> (params, opt, losses f32[K], metrics f32[K])
+  {name}_train_step.hlo.txt  same with K=1 (remainder steps)
+  {name}_eval.hlo.txt        (params, data...) -> (loss f32[], metric f32[])
+
+The manifest (artifacts/manifest.json) records shapes/dtypes/flops so the
+Rust side is fully generic over models.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.models import registry, DEFAULT_CHUNK  # noqa: E402
+from compile.models import common  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(fn, arg_specs):
+    # keep_unused: some models ignore e.g. the dropout seeds, but the
+    # artifact signature is a fixed contract with the Rust runtime.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dtype_tag(dt):
+    return {jnp.float32: "f32", jnp.int32: "i32"}[dt]
+
+
+def export_model(model, out_dir, chunk=DEFAULT_CHUNK):
+    """Lower one model's four artifacts; return its manifest entry."""
+    opt = model.opt
+    init, train_chunk, eval_step = common.make_step_fns(model, opt, chunk)
+
+    p_count = model.spec.count()
+    o_count = opt.state_count(p_count)
+
+    # ---- flops accounting (single forward pass over one training batch)
+    def fwd_probe(params_flat):
+        data = {}
+        for name, shape, dtype, _ in model.data_inputs:
+            data[name] = jnp.zeros(shape, dtype)
+        p = model.spec.unflatten(params_flat)
+        return model.loss(p, data, 8.0, 8.0, jax.random.PRNGKey(0), True)
+
+    flops = common.count_gemm_flops(
+        fwd_probe, jax.ShapeDtypeStruct((p_count,), jnp.float32))
+
+    # ---- lower the four entry points
+    files = {}
+
+    def emit(tag, fn, specs):
+        text = to_hlo_text(fn, specs)
+        fname = f"{model.name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[tag] = fname
+        return text
+
+    emit("init", init, [jax.ShapeDtypeStruct((), jnp.int32)])
+    emit("train_chunk", train_chunk, common.chunk_arg_specs(model, chunk, None))
+    emit("train_step", lambda *a: train_chunk_k1(model, opt)(*a),
+         common.chunk_arg_specs(model, 1, None))
+    emit("eval", eval_step, common.eval_arg_specs(model))
+
+    entry = {
+        "name": model.name,
+        "files": files,
+        "param_count": p_count,
+        "opt_state_count": o_count,
+        "chunk": chunk,
+        "optimizer": opt.name,
+        "metric": model.metric,
+        "q_gemm_flops_fwd": int(flops.get("q_gemm", 0)),
+        "fp_gemm_flops_fwd": int(flops.get("fp_gemm", 0)),
+        # GNN aggregation GEMMs: sparse on real graphs, so the BitOps
+        # accountant rescales these by the measured graph density.
+        "agg_q_gemm_flops_fwd": int(flops.get("agg_q_gemm", 0)),
+        "agg_fp_gemm_flops_fwd": int(flops.get("agg_fp_gemm", 0)),
+        "data_inputs": [
+            {
+                "name": name,
+                "shape": list(shape),
+                "dtype": dtype_tag(dtype),
+                "stacked": bool(stacked),
+            }
+            for name, shape, dtype, stacked in model.data_inputs
+        ],
+        "param_specs": model.spec.manifest(),
+    }
+    return entry
+
+
+def train_chunk_k1(model, opt):
+    _, chunk_fn, _ = common.make_step_fns(model, opt, 1)
+    return chunk_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated model names, or 'all'")
+    ap.add_argument("--chunk", type=int, default=DEFAULT_CHUNK)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    reg = registry()
+    names = list(reg) if args.models == "all" else args.models.split(",")
+
+    entries = []
+    for name in names:
+        model = reg[name]
+        print(f"[aot] lowering {name} (P={model.spec.count()}) ...",
+              flush=True)
+        entries.append(export_model(model, out_dir, args.chunk))
+
+    path = os.path.join(out_dir, "manifest.json")
+    # Partial exports (--models a,b) merge into the existing manifest so a
+    # targeted re-lowering never drops other models' entries.
+    existing = {}
+    if os.path.exists(path) and args.models != "all":
+        with open(path) as f:
+            existing = json.load(f).get("models", {})
+    existing.update({e["name"]: e for e in entries})
+    manifest = {
+        "version": 1,
+        "chunk": args.chunk,
+        "models": existing,
+    }
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    digest = hashlib.sha256(
+        json.dumps(manifest, sort_keys=True).encode()).hexdigest()[:12]
+    print(f"[aot] wrote {len(entries)} models -> {path} (sha {digest})")
+
+
+if __name__ == "__main__":
+    main()

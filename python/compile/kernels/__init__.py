@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import ref
+from .quantize import quantize, quantize_2d
+from .qmatmul import qmatmul
+
+__all__ = ["ref", "quantize", "quantize_2d", "qmatmul"]

@@ -1,0 +1,124 @@
+"""Fused quantize→matmul Pallas kernel — the hot-spot of quantized training.
+
+The paper simulates low-precision GEMMs on GPU by clipping operands before
+each matmul. The TPU re-think (DESIGN.md §Hardware-Adaptation): instead of
+materializing quantized copies in HBM, fuse fake-quantization into the
+HBM→VMEM tile load of a blocked matmul. Each grid step loads an (bm, bk)
+A-tile and a (bk, bn) B-tile, quantizes both *in VMEM*, and feeds the MXU;
+partial products accumulate into the (bm, bn) output block across the k
+axis of the grid.
+
+Bit-widths arrive as (1, 1) scalar blocks, so a single compiled kernel
+serves every precision in [q_min, q_max] — exactly what cyclic precision
+training needs (a new q_t every iteration, no recompilation).
+
+VMEM budget at the default 128-blocks (f32): A-tile + B-tile + their
+quantized values + out block = 4 * 128*128*4 B = 256 KiB « 16 MiB, leaving
+room for double-buffering on a real TPU. The contraction feeds the MXU with
+(128, 128) operands, its native systolic shape.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls; interpret mode
+lowers to plain HLO. Structure (BlockSpec schedule) is what we optimize —
+real-TPU performance is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import _divisor_block
+
+# VMEM budget for one grid step's working set (A-tile + B-tile + out block,
+# f32). Real TPUs have ~16 MiB of VMEM; 4 MiB leaves headroom for double
+# buffering and the quantized temporaries. Within the budget we make blocks
+# as LARGE as possible: every extra grid step costs a loop iteration of
+# dynamic-slice traffic (HBM re-reads of the A/B panels on TPU; while-loop
+# overhead under interpret=True) — see EXPERIMENTS.md §Perf iteration 1.
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def _block_shapes(m, n, k, budget=None):
+    """Choose (bm, bn, bk) dividing (m, n, k), maximizing block volume
+    within the VMEM budget. Shrinks the largest axis first."""
+    budget = budget or _VMEM_BUDGET_BYTES
+    bm, bn, bk = m, n, k
+
+    def footprint(bm, bn, bk):
+        return 4 * (bm * bk + bk * bn + bm * bn)
+
+    while footprint(bm, bn, bk) > budget:
+        # halve the largest axis (to a divisor of the dim)
+        if bm >= bn and bm >= bk and bm > 8:
+            bm = _divisor_block(m, max(bm // 2, 8))
+        elif bn >= bk and bn > 8:
+            bn = _divisor_block(n, max(bn // 2, 8))
+        elif bk > 8:
+            bk = _divisor_block(k, max(bk // 2, 8))
+        else:
+            break  # minimum tile reached
+    return bm, bn, bk
+
+
+def _qmm_kernel(a_ref, b_ref, qa_ref, qb_ref, sa_ref, sb_ref, o_ref):
+    # Zero the output block on the first visit along the contraction axis.
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qa = qa_ref[0, 0]
+    qb = qb_ref[0, 0]
+    sa = sa_ref[0, 0]
+    sb = sb_ref[0, 0]
+    la = jnp.round(2.0 ** (qa - 1.0)) - 1.0
+    lb = jnp.round(2.0 ** (qb - 1.0)) - 1.0
+    # Quantize the tiles in VMEM, then contract on the MXU.
+    aq = jnp.round(jnp.clip(a_ref[...] / sa, -1.0, 1.0) * la) / la * sa
+    bq = jnp.round(jnp.clip(b_ref[...] / sb, -1.0, 1.0) * lb) / lb * sb
+    o_ref[...] += jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.named_call, name="qmatmul_pallas")
+def qmatmul(a, b, qa, qb, sa=None, sb=None):
+    """Quantized matmul: fake_quant(a, qa) @ fake_quant(b, qb).
+
+    Args:
+      a:  f32[m, k]
+      b:  f32[k, n]
+      qa, qb: scalar bit-widths (traced f32 — runtime values).
+      sa, sb: optional per-tensor scales; computed (max-abs) if omitted.
+
+    Returns f32[m, n].
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    if sa is None:
+        sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+    if sb is None:
+        sb = jnp.maximum(jnp.max(jnp.abs(b)), 1e-8)
+
+    bm, bn, bk = _block_shapes(m, k=k, n=n)
+    grid = (m // bm, n // bn, k // bk)
+
+    qa2 = jnp.asarray(qa, jnp.float32).reshape(1, 1)
+    qb2 = jnp.asarray(qb, jnp.float32).reshape(1, 1)
+    sa2 = jnp.asarray(sa, jnp.float32).reshape(1, 1)
+    sb2 = jnp.asarray(sb, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, qa2, qb2, sa2, sb2)

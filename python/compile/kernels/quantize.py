@@ -1,0 +1,85 @@
+"""Pallas fake-quantization kernel with a *runtime* bit-width.
+
+The kernel implements the same math as `ref.fake_quant`, but as an explicit
+blocked HBM→VMEM schedule. The bit-width `q` and the per-tensor scale `s`
+arrive as (1, 1) scalar blocks (SMEM-style operands on a real TPU), so one
+compiled kernel serves the entire precision range [q_min, q_max] — the CPT
+coordinator just feeds a different scalar each iteration.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO (a fori over the
+grid with dynamic-slices) which runs on any backend, and is the numerics
+ground-truth path for this repo. See DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred VMEM block: one (8, 128)-lane-aligned tile times a few sublanes.
+# 256x256 f32 = 256 KiB — comfortably inside a 16 MiB VMEM budget together
+# with the output block and scalars.
+_PREF_BLOCK = 256
+
+
+def _divisor_block(dim, pref):
+    """Largest block size <= pref that divides dim.
+
+    Pallas pads out-of-bounds blocks, which corrupts accumulation-style
+    kernels; picking an exact divisor keeps every block fully in-bounds.
+    Falls back to the full dimension (grid=1 on that axis).
+    """
+    if dim <= pref:
+        return dim
+    for cand in range(pref, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, o_ref):
+    q = q_ref[0, 0]
+    s = s_ref[0, 0]
+    lv = jnp.round(2.0 ** (q - 1.0)) - 1.0
+    x = x_ref[...]
+    o_ref[...] = jnp.round(jnp.clip(x / s, -1.0, 1.0) * lv) / lv * s
+
+
+def quantize_2d(x, q, scale):
+    """Fake-quantize a 2-D tensor to `q` bits via the Pallas kernel.
+
+    Args:
+      x:     f32[m, n]
+      q:     scalar bit-width (traced; f32)
+      scale: scalar per-tensor scale (traced; f32). Computed by the caller —
+             the max-abs reduction is a separate (XLA-fused) pass so the
+             kernel itself stays embarrassingly parallel.
+    """
+    m, n = x.shape
+    bm = _divisor_block(m, _PREF_BLOCK)
+    bn = _divisor_block(n, _PREF_BLOCK)
+    grid = (m // bm, n // bn)
+    qb = jnp.asarray(q, jnp.float32).reshape(1, 1)
+    sb = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, qb, sb)
+
+
+def quantize(x, q, scale=None):
+    """Fake-quantize a tensor of any rank (reshapes through 2-D)."""
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    orig_shape = x.shape
+    flat = x.reshape(1, -1) if x.ndim != 2 else x
+    out = quantize_2d(flat, q, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth used by pytest (and hypothesis sweeps) to verify
+the Pallas kernels in `quantize.py` / `qmatmul.py`. They implement the
+paper's quantizer exactly once, in the simplest possible form, so any
+discrepancy in the kernels is attributable to the kernel code.
+
+Quantizer (SBM/DoReFa-style symmetric uniform fake-quantization, paper §3.1):
+
+    levels(q) = 2^(q-1) - 1            # signed, symmetric around 0
+    s         = max(|x|)  (per tensor) # dynamic scale
+    Q(x; q)   = round(clip(x/s, -1, 1) * levels) / levels * s
+
+`q` is a *runtime* value (f32 scalar) — CPT changes it every iteration, and
+recompiling per bit-width would defeat the point. `round(2^(q-1))` keeps the
+level count exact for integer q while remaining a traced computation.
+"""
+
+import jax.numpy as jnp
+
+# Smallest representable scale. Guards against all-zero tensors.
+EPS = 1e-8
+
+
+def levels(q):
+    """Number of positive quantization levels for a signed q-bit format."""
+    return jnp.round(2.0 ** (jnp.asarray(q, jnp.float32) - 1.0)) - 1.0
+
+
+def dynamic_scale(x):
+    """Per-tensor dynamic range (max-abs) with an epsilon floor."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), EPS)
+
+
+def fake_quant(x, q, scale=None):
+    """Fake-quantize `x` to `q` bits (symmetric uniform, per-tensor scale).
+
+    Returns a float tensor holding the dequantized values — this is how the
+    paper (and CPT / FracTrain before it) simulates low-precision arithmetic
+    on hardware without native sub-byte support.
+    """
+    s = dynamic_scale(x) if scale is None else scale
+    lv = levels(q)
+    return jnp.round(jnp.clip(x / s, -1.0, 1.0) * lv) / lv * s
+
+
+def quant_error_bound(q, scale):
+    """Worst-case absolute rounding error of `fake_quant`: s / (2*levels)."""
+    return scale / (2.0 * levels(q))
+
+
+def qmatmul(a, b, qa, qb):
+    """Reference quantized matmul: quantize both operands, then matmul."""
+    return fake_quant(a, qa) @ fake_quant(b, qb)
+
+
+def ste_mask(x, scale=None):
+    """Straight-through-estimator clip mask: 1 where |x| <= s, else 0."""
+    s = dynamic_scale(x) if scale is None else scale
+    return (jnp.abs(x) <= s).astype(x.dtype)

@@ -1,0 +1,34 @@
+"""L2 model registry. Every entry is exported by aot.py as four HLO
+artifacts (init / train_chunk / train_step / eval) plus manifest metadata.
+
+Chunk size K: the coordinator advances K optimizer steps per executable
+call (lax.scan), passing the CPT schedule as a q_fwd[K] vector. K=8
+balances host-roundtrip amortization against artifact compile time.
+"""
+
+from .mlp import MLP
+from .cnn import resnet_tiny, resnet_deep
+from .detector import GridDetector
+from .gnn import gcn, sage
+from .lstm import LstmLM
+from .transformer import transformer_lm, transformer_cls
+
+DEFAULT_CHUNK = 8
+
+
+def registry():
+    """name -> model instance (constructed with default sizes)."""
+    models = [
+        MLP(),
+        resnet_tiny(),
+        resnet_deep(),
+        GridDetector(),
+        gcn(q_agg=True),
+        gcn(q_agg=False),
+        sage(q_agg=True),
+        sage(q_agg=False),
+        LstmLM(),
+        transformer_lm(),
+        transformer_cls(),
+    ]
+    return {m.name: m for m in models}

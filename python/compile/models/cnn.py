@@ -1,0 +1,101 @@
+"""Residual CNNs for the image-classification experiments (paper Fig 3,
+Table 1).
+
+`resnet_tiny` stands in for ResNet-74-on-CIFAR (2 residual stages), and
+`resnet_deep` for the ImageNet-scale panel (3 stages, more classes) — see
+DESIGN.md §4 for the substitution argument. Every conv is an im2col GEMM
+through the Pallas qdot path; norms are GroupNorm (stateless BN stand-in,
+kept in full precision exactly as the paper keeps BN in full precision).
+"""
+
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, conv2d_q, groupnorm, qdot
+
+
+def _add_conv(spec, name, cin, cout):
+    spec.add(f"{name}.w", (9 * cin, cout), "he")
+    spec.add(f"{name}.b", (cout,), "zeros")
+
+
+def _add_norm(spec, name, c):
+    spec.add(f"{name}.g", (c,), "ones")
+    spec.add(f"{name}.b", (c,), "zeros")
+
+
+class ResNet:
+    metric = "accuracy"
+
+    def __init__(self, name, img=16, channels=(16, 32), blocks_per_stage=1,
+                 classes=10, batch=32, weight_decay=1e-4):
+        self.name = name
+        self.img = img
+        self.channels = channels
+        self.blocks_per_stage = blocks_per_stage
+        self.classes = classes
+        self.batch = batch
+        self.opt = common.SGDM(momentum=0.9, weight_decay=weight_decay)
+
+        spec = ParamSpec()
+        _add_conv(spec, "stem", 3, channels[0])
+        _add_norm(spec, "stem.n", channels[0])
+        cin = channels[0]
+        for s, cout in enumerate(channels):
+            for b in range(blocks_per_stage):
+                pre = f"s{s}b{b}"
+                _add_conv(spec, f"{pre}.c1", cin if b == 0 else cout, cout)
+                _add_norm(spec, f"{pre}.n1", cout)
+                _add_conv(spec, f"{pre}.c2", cout, cout)
+                _add_norm(spec, f"{pre}.n2", cout)
+                if b == 0 and cin != cout:
+                    spec.add(f"{pre}.proj.w", (cin, cout), "he")
+            cin = cout
+        spec.add("head.w", (channels[-1], classes), "he")
+        spec.add("head.b", (classes,), "zeros")
+        self.spec = spec
+
+        self.data_inputs = [
+            ("x", (batch, img, img, 3), jnp.float32, True),
+            ("y", (batch,), jnp.int32, True),
+        ]
+
+    def forward(self, p, x, q_fwd, q_bwd):
+        h = conv2d_q(p, "stem", x, q_fwd, q_bwd)
+        h = jnp.maximum(groupnorm(p, "stem.n", h), 0.0)
+        for s, cout in enumerate(self.channels):
+            for b in range(self.blocks_per_stage):
+                pre = f"s{s}b{b}"
+                stride = 2 if (s > 0 and b == 0) else 1
+                y = conv2d_q(p, f"{pre}.c1", h, q_fwd, q_bwd, stride=stride)
+                y = jnp.maximum(groupnorm(p, f"{pre}.n1", y), 0.0)
+                y = conv2d_q(p, f"{pre}.c2", y, q_fwd, q_bwd)
+                y = groupnorm(p, f"{pre}.n2", y)
+                sc = h
+                if stride != 1:
+                    sc = sc[:, ::2, ::2, :]
+                if f"{pre}.proj.w" in p:
+                    bsz, hh, ww, cc = sc.shape
+                    sc = qdot(sc.reshape(-1, cc), p[f"{pre}.proj.w"],
+                              q_fwd, q_bwd).reshape(bsz, hh, ww, cout)
+                h = jnp.maximum(y + sc, 0.0)
+        pooled = jnp.mean(h, axis=(1, 2))
+        return qdot(pooled, p["head.w"], q_fwd, q_bwd) + p["head.b"]
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        logits = self.forward(p, data["x"], q_fwd, q_bwd)
+        return (common.softmax_xent(logits, data["y"]),
+                common.accuracy(logits, data["y"]))
+
+
+def resnet_tiny(batch=32):
+    """CIFAR-panel stand-in: 16x16 imgs, 2 stages, 10 classes (~25k params)."""
+    return ResNet("cnn_tiny", img=16, channels=(16, 32),
+                  blocks_per_stage=1, classes=10, batch=batch)
+
+
+def resnet_deep(batch=32):
+    """ImageNet-panel stand-in: deeper/wider, 20 classes."""
+    return ResNet("cnn_deep", img=16, channels=(16, 32, 64),
+                  blocks_per_stage=1, classes=20, batch=batch,
+                  weight_decay=1e-5)

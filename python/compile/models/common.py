@@ -1,0 +1,405 @@
+"""Shared L2 model machinery: params, layers, losses, optimizers, and the
+generic train-chunk builder every model is exported through.
+
+Design contract with the Rust coordinator (see DESIGN.md §2):
+
+* Parameters and optimizer state travel as **single flat f32 vectors** —
+  the PJRT C shim returns outputs as one tuple literal, so fewer/larger
+  leaves minimize the host↔device roundtrip the coordinator must perform.
+* A **train chunk** advances K optimizer steps per executable call via
+  `lax.scan`. The coordinator supplies per-step vectors: q_fwd[K] (the CPT
+  schedule values — evaluated in Rust), lr[K], seeds[K], plus K stacked
+  minibatches. This amortizes the roundtrip K× (EXPERIMENTS.md §Perf).
+* Bit-widths are runtime scalars; one artifact serves all of [q_min, q_max].
+
+Every GEMM in every model routes through `ops.qdot` (the Pallas fused
+quantize→matmul kernel) so the whole suite exercises the L1 hot path.
+"""
+
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import ops
+
+# --------------------------------------------------------------------------
+# GEMM FLOP accounting (paper §4.1 BitOps needs per-model GEMM FLOPs).
+# A thread-local counter is armed while abstractly tracing a model's forward
+# pass; `qdot`/`fdot` below record 2*m*k*n per call. The totals land in the
+# artifact manifest and drive rust/src/quant/bitops.rs.
+# --------------------------------------------------------------------------
+
+_COUNTER = threading.local()
+
+
+def _record(kind, flops):
+    acc = getattr(_COUNTER, "acc", None)
+    if acc is not None:
+        acc[kind] = acc.get(kind, 0) + flops
+
+
+def qdot(a, w, q_fwd, q_bwd):
+    """Counted wrapper over ops.qdot (quantized GEMM)."""
+    m, k = a.shape
+    _, n = w.shape
+    _record("q_gemm", 2 * m * k * n)
+    return ops.qdot(a, w, q_fwd, q_bwd)
+
+
+def fdot(a, b):
+    """Full-precision GEMM (counted separately — e.g. FP-Agg aggregation)."""
+    m, k = a.shape
+    _, n = b.shape
+    _record("fp_gemm", 2 * m * k * n)
+    return a @ b
+
+
+def count_gemm_flops(fn, *args):
+    """Abstractly evaluate `fn(*args)` and return {'q_gemm': .., 'fp_gemm': ..}."""
+    _COUNTER.acc = {}
+    try:
+        jax.eval_shape(fn, *args)
+        return dict(_COUNTER.acc)
+    finally:
+        _COUNTER.acc = None
+
+
+# --------------------------------------------------------------------------
+# Parameter specs and flat <-> pytree conversion
+# --------------------------------------------------------------------------
+
+class ParamSpec:
+    """Ordered list of named tensors with deterministic initialization."""
+
+    def __init__(self):
+        self.entries = []  # (name, shape, init_kind)
+
+    def add(self, name, shape, init="he"):
+        self.entries.append((name, tuple(int(s) for s in shape), init))
+        return self
+
+    def count(self):
+        total = 0
+        for _, shape, _ in self.entries:
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    def init_flat(self, key):
+        """Initialize all tensors and return them as one flat f32 vector."""
+        parts = []
+        for i, (_, shape, kind) in enumerate(self.entries):
+            k = jax.random.fold_in(key, i)
+            n = 1
+            for s in shape:
+                n *= s
+            if kind == "zeros":
+                t = jnp.zeros(shape, jnp.float32)
+            elif kind == "ones":
+                t = jnp.ones(shape, jnp.float32)
+            elif kind == "he":
+                fan_in = shape[0] if len(shape) >= 2 else max(n, 1)
+                t = jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
+            elif kind == "xavier":
+                fan_in = shape[0] if len(shape) >= 2 else n
+                fan_out = shape[-1]
+                t = jax.random.normal(k, shape) * jnp.sqrt(2.0 / (fan_in + fan_out))
+            elif kind == "embed":
+                t = jax.random.normal(k, shape) * 0.02
+            elif kind == "uniform":
+                lim = 1.0 / jnp.sqrt(shape[0])
+                t = jax.random.uniform(k, shape, minval=-lim, maxval=lim)
+            else:
+                raise ValueError(f"unknown init {kind}")
+            parts.append(t.reshape(-1).astype(jnp.float32))
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(self, flat):
+        """Flat f32[P] -> dict name -> tensor."""
+        out = {}
+        off = 0
+        for name, shape, _ in self.entries:
+            n = 1
+            for s in shape:
+                n *= s
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+            off += n
+        return out
+
+    def manifest(self):
+        return [{"name": n, "shape": list(s)} for n, s, _ in self.entries]
+
+
+# --------------------------------------------------------------------------
+# Layers (all GEMMs through qdot)
+# --------------------------------------------------------------------------
+
+def qlinear(p, prefix, x, q_fwd, q_bwd, bias=True):
+    """Quantized dense layer. x: [B, D_in] -> [B, D_out]."""
+    y = qdot(x, p[f"{prefix}.w"], q_fwd, q_bwd)
+    if bias:
+        y = y + p[f"{prefix}.b"]
+    return y
+
+
+def conv2d_q(p, prefix, x, q_fwd, q_bwd, stride=1):
+    """Quantized 3x3 same-conv as im2col + qdot.
+
+    x: [B, H, W, C_in]; weight stored as [9*C_in, C_out]. im2col keeps the
+    GEMM on the Pallas path (the paper quantizes convs the same way).
+    """
+    b, h, w, cin = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(3, 3),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H', W', 9*C_in] (feature dim = C_in * 9 per lax docs ordering)
+    ho, wo = patches.shape[1], patches.shape[2]
+    flat = patches.reshape(b * ho * wo, patches.shape[3])
+    y = qdot(flat, p[f"{prefix}.w"], q_fwd, q_bwd)
+    cout = y.shape[-1]
+    return y.reshape(b, ho, wo, cout) + p[f"{prefix}.b"]
+
+
+def groupnorm(p, prefix, x, groups=4, eps=1e-5):
+    """GroupNorm over channels (stateless BN stand-in; DESIGN.md §4 notes
+    the substitution — BN running stats would add mutable non-param state,
+    and the paper keeps norm layers in full precision anyway)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) / jnp.sqrt(var + eps)).reshape(b, h, w, c)
+    return xn * p[f"{prefix}.g"] + p[f"{prefix}.b"]
+
+
+def layernorm(p, prefix, x, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mean) / jnp.sqrt(var + eps)
+    return xn * p[f"{prefix}.g"] + p[f"{prefix}.b"]
+
+
+def dropout(x, rate, key, train):
+    if not train or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Losses / metrics
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy. labels: int[B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def masked_xent(logits, labels, mask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def masked_accuracy(logits, labels, mask):
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def focal_bce(logits, targets, gamma=2.0, alpha=0.25):
+    """Focal loss on sigmoid logits (RetinaNet-style, paper Fig 4 workload)."""
+    p = jax.nn.sigmoid(logits)
+    ce = -(targets * jnp.log(p + 1e-8) + (1 - targets) * jnp.log(1 - p + 1e-8))
+    pt = targets * p + (1 - targets) * (1 - p)
+    w = targets * alpha + (1 - targets) * (1 - alpha)
+    return jnp.mean(w * (1 - pt) ** gamma * ce)
+
+
+# --------------------------------------------------------------------------
+# Optimizers over flat vectors
+# --------------------------------------------------------------------------
+
+class SGDM:
+    """SGD + momentum (paper: momentum 0.9 for image classification)."""
+
+    name = "sgdm"
+
+    def __init__(self, momentum=0.9, weight_decay=0.0, clip_norm=0.0):
+        self.momentum = momentum
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+
+    def state_count(self, p):
+        return p
+
+    def init_state(self, p):
+        return jnp.zeros((p,), jnp.float32)
+
+    def update(self, params, state, grads, lr):
+        grads = _maybe_clip(grads, self.clip_norm)
+        if self.weight_decay:
+            grads = grads + self.weight_decay * params
+        buf = self.momentum * state + grads
+        return params - lr * buf, buf
+
+
+class Adam:
+    """Adam with bias correction; step count carried in the state tail."""
+
+    name = "adam"
+
+    def __init__(self, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                 clip_norm=0.0):
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+
+    def state_count(self, p):
+        return 2 * p + 1
+
+    def init_state(self, p):
+        return jnp.zeros((2 * p + 1,), jnp.float32)
+
+    def update(self, params, state, grads, lr):
+        grads = _maybe_clip(grads, self.clip_norm)
+        if self.weight_decay:
+            grads = grads + self.weight_decay * params
+        p = params.shape[0]
+        m, v, t = state[:p], state[p:2 * p], state[2 * p]
+        t = t + 1.0
+        m = self.b1 * m + (1 - self.b1) * grads
+        v = self.b2 * v + (1 - self.b2) * grads * grads
+        mhat = m / (1 - self.b1 ** t)
+        vhat = v / (1 - self.b2 ** t)
+        new = params - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+        return new, jnp.concatenate([m, v, t[None]])
+
+
+def _maybe_clip(g, max_norm):
+    if not max_norm:
+        return g
+    norm = jnp.sqrt(jnp.sum(g * g))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-8))
+    return g * scale
+
+
+OPTIMIZERS = {"sgdm": SGDM, "adam": Adam}
+
+
+# --------------------------------------------------------------------------
+# Generic train-chunk / eval builders
+# --------------------------------------------------------------------------
+
+def make_step_fns(model, opt, chunk):
+    """Build (init, train_chunk, train_step, eval) python callables for a
+    model object exposing:
+
+      spec:        ParamSpec
+      loss(params_dict, data_dict, q_fwd, q_bwd, rng, train) -> (loss, metric)
+      data_inputs: [(name, shape_per_step, dtype, stacked)] — see DESIGN.md
+    """
+    spec = model.spec
+    p_count = spec.count()
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = spec.init_flat(key)
+        return params, opt.init_state(p_count)
+
+    stacked = [d for d in model.data_inputs if d[3]]
+    shared = [d for d in model.data_inputs if not d[3]]
+
+    def loss_flat(params_flat, data, q_fwd, q_bwd, rng, train):
+        p = spec.unflatten(params_flat)
+        return model.loss(p, data, q_fwd, q_bwd, rng, train)
+
+    def one_step(params, state, data, q_fwd, q_bwd, lr, seed):
+        rng = jax.random.PRNGKey(seed)
+        grad_fn = jax.value_and_grad(
+            lambda pf: loss_flat(pf, data, q_fwd, q_bwd, rng, True),
+            has_aux=True,
+        )
+        (loss, metric), grads = grad_fn(params)
+        params, state = opt.update(params, state, grads, lr)
+        return params, state, loss, metric
+
+    def train_chunk(params, state, *rest):
+        # rest = stacked data (k-leading), shared data, q_fwd[k], lr[k],
+        #        seeds[k] (i32), q_bwd scalar
+        n_stacked = len(stacked)
+        n_shared = len(shared)
+        stacked_vals = rest[:n_stacked]
+        shared_vals = rest[n_stacked:n_stacked + n_shared]
+        q_fwd_v, lr_v, seeds_v, q_bwd = rest[n_stacked + n_shared:]
+
+        shared_data = {d[0]: v for d, v in zip(shared, shared_vals)}
+
+        def body(carry, xs):
+            params, state = carry
+            step_stacked, q, lr, seed = xs
+            data = dict(shared_data)
+            data.update({d[0]: v for d, v in zip(stacked, step_stacked)})
+            params, state, loss, metric = one_step(
+                params, state, data, q, q_bwd, lr, seed)
+            return (params, state), (loss, metric)
+
+        (params, state), (losses, metrics) = jax.lax.scan(
+            body, (params, state), (tuple(stacked_vals), q_fwd_v, lr_v, seeds_v))
+        return params, state, losses, metrics
+
+    def eval_step(params, *data_vals):
+        data = {d[0]: v for d, v in zip(model.data_inputs, data_vals)}
+        rng = jax.random.PRNGKey(0)
+        # Evaluation runs at full effective precision (q=32 ≈ identity);
+        # matches the paper: precision scheduling is a *training* mechanism.
+        loss, metric = loss_flat(params, data, 32.0, 32.0, rng, False)
+        return loss, metric
+
+    return init, train_chunk, eval_step
+
+
+def chunk_arg_specs(model, chunk, batch):
+    """Abstract input specs for lowering train_chunk (order must match)."""
+    spec = model.spec
+    p = spec.count()
+    args = [
+        jax.ShapeDtypeStruct((p,), jnp.float32),                    # params
+        jax.ShapeDtypeStruct((model.opt.state_count(p),), jnp.float32),
+    ]
+    for name, shape, dtype, is_stacked in model.data_inputs:
+        if is_stacked:
+            args.append(jax.ShapeDtypeStruct((chunk, *shape), dtype))
+    for name, shape, dtype, is_stacked in model.data_inputs:
+        if not is_stacked:
+            args.append(jax.ShapeDtypeStruct(shape, dtype))
+    args += [
+        jax.ShapeDtypeStruct((chunk,), jnp.float32),   # q_fwd per step
+        jax.ShapeDtypeStruct((chunk,), jnp.float32),   # lr per step
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),     # seeds per step
+        jax.ShapeDtypeStruct((), jnp.float32),         # q_bwd
+    ]
+    return args
+
+
+def eval_arg_specs(model):
+    spec = model.spec
+    p = spec.count()
+    args = [jax.ShapeDtypeStruct((p,), jnp.float32)]
+    for name, shape, dtype, _ in model.data_inputs:
+        args.append(jax.ShapeDtypeStruct(shape, dtype))
+    return args

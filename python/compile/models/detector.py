@@ -1,0 +1,85 @@
+"""Grid detector — the PascalVOC / RetinaNet stand-in (paper Fig 4).
+
+Synthetic detection task (DESIGN.md §4): images contain colored object
+patches; the model predicts, per cell of a 4x4 grid, an objectness logit
+(focal loss, as RetinaNet) and class logits (CE over object cells). The
+metric is `map_lite`: F1 of objectness@0.5 × classification accuracy on
+object cells — a scalar that moves like mAP for this workload.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, conv2d_q, groupnorm, qdot
+
+
+class GridDetector:
+    name = "detector"
+    metric = "map_lite"
+
+    def __init__(self, img=16, grid=4, classes=4, batch=16):
+        self.img, self.grid, self.classes, self.batch = img, grid, classes, batch
+        # Paper uses Adam at fixed lr for VOC.
+        self.opt = common.Adam(weight_decay=0.0)
+
+        spec = ParamSpec()
+        chans = (16, 32)
+        cin = 3
+        for i, c in enumerate(chans):
+            spec.add(f"c{i}.w", (9 * cin, c), "he")
+            spec.add(f"c{i}.b", (c,), "zeros")
+            spec.add(f"n{i}.g", (c,), "ones")
+            spec.add(f"n{i}.b", (c,), "zeros")
+            cin = c
+        self.chans = chans
+        # heads operate on per-cell features
+        spec.add("obj.w", (chans[-1], 1), "he")
+        spec.add("obj.b", (1,), "zeros")
+        spec.add("cls.w", (chans[-1], classes), "he")
+        spec.add("cls.b", (classes,), "zeros")
+        self.spec = spec
+
+        ncell = grid * grid
+        self.data_inputs = [
+            ("x", (batch, img, img, 3), jnp.float32, True),
+            ("y_obj", (batch, ncell), jnp.float32, True),
+            ("y_cls", (batch, ncell), jnp.int32, True),
+        ]
+
+    def forward(self, p, x, q_fwd, q_bwd):
+        h = x
+        for i in range(len(self.chans)):
+            stride = 2 if i > 0 else 1
+            h = conv2d_q(p, f"c{i}", h, q_fwd, q_bwd, stride=stride)
+            h = jnp.maximum(groupnorm(p, f"n{i}", h), 0.0)
+        # pool feature map down to the label grid
+        b, hh, ww, c = h.shape
+        cell = hh // self.grid
+        cells = h.reshape(b, self.grid, cell, self.grid, cell, c)
+        feats = jnp.mean(cells, axis=(2, 4)).reshape(b * self.grid * self.grid, c)
+        obj = qdot(feats, p["obj.w"], q_fwd, q_bwd) + p["obj.b"]
+        cls = qdot(feats, p["cls.w"], q_fwd, q_bwd) + p["cls.b"]
+        ncell = self.grid * self.grid
+        return obj.reshape(b, ncell), cls.reshape(b, ncell, self.classes)
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        obj, cls = self.forward(p, data["x"], q_fwd, q_bwd)
+        y_obj, y_cls = data["y_obj"], data["y_cls"]
+        l_obj = common.focal_bce(obj, y_obj)
+        # class CE only on object cells
+        logp = jnp.log(jnp.maximum(jnp.take_along_axis(
+            jnp.exp(cls) / jnp.sum(jnp.exp(cls), axis=-1, keepdims=True),
+            jnp.maximum(y_cls, 0)[..., None], axis=-1)[..., 0], 1e-8))
+        l_cls = -jnp.sum(logp * y_obj) / jnp.maximum(jnp.sum(y_obj), 1.0)
+        loss = l_obj + l_cls
+
+        # map_lite: objectness F1 @0.5 times class accuracy on object cells
+        pred_obj = jax.nn.sigmoid(obj) > 0.5
+        tp = jnp.sum(pred_obj * y_obj)
+        prec = tp / jnp.maximum(jnp.sum(pred_obj), 1.0)
+        rec = tp / jnp.maximum(jnp.sum(y_obj), 1.0)
+        f1 = 2 * prec * rec / jnp.maximum(prec + rec, 1e-8)
+        cls_hit = (jnp.argmax(cls, axis=-1) == y_cls).astype(jnp.float32)
+        cls_acc = jnp.sum(cls_hit * y_obj) / jnp.maximum(jnp.sum(y_obj), 1.0)
+        return loss, f1 * cls_acc

@@ -1,0 +1,105 @@
+"""GNN node classification — the paper's §4.3 contribution (first quantized
+*training* study for GNNs), including the FP-Agg / Q-Agg ablation (Fig 5)
+and the OGBN-Arxiv / OGBN-Products schedule sweeps (Fig 6).
+
+`GCN` (OGBN-Arxiv stand-in): full-graph H_l = relu(Â H_{l-1} W_{l-1}) on a
+dense degree-normalized adjacency with self-loops (paper Eq. 1).
+
+`SAGE` (OGBN-Products stand-in): identical code path but the coordinator
+supplies a *sampled*, truncated-neighborhood aggregation matrix per epoch,
+reproducing the random-neighbor-sampling regime (and the footnote-4
+numerical-stability argument: sampled aggregation truncates the sum).
+
+Aggregation strategies (paper Fig 5):
+  FP-Agg — Â @ (H W) in full precision (fdot; counted as fp32 GEMM).
+  Q-Agg  — messages quantized to q_t before aggregation, and the
+           aggregation GEMM itself runs quantized (qdot).
+
+The graph (features, adjacency, labels, masks) enters as *shared* (non-
+stacked) inputs: the lax.scan over the K-step chunk reuses one upload.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, qdot
+from .. import ops
+
+
+def qdot_agg(a, w, q_fwd, q_bwd):
+    """Aggregation GEMM, quantized (Q-Agg). Counted separately: on a real
+    graph this is a *sparse* matvec whose cost scales with edge count, so
+    the BitOps accountant rescales it by the graph density (the dense
+    matmul here is just the compute substrate for the simulator)."""
+    m, k = a.shape
+    _, n = w.shape
+    common._record("agg_q_gemm", 2 * m * k * n)
+    return ops.qdot(a, w, q_fwd, q_bwd)
+
+
+def fdot_agg(a, b):
+    """Aggregation GEMM, full precision (FP-Agg). Density-rescaled."""
+    m, k = a.shape
+    _, n = b.shape
+    common._record("agg_fp_gemm", 2 * m * k * n)
+    return a @ b
+
+
+class GCN:
+    metric = "accuracy"
+
+    def __init__(self, name, nodes=256, in_dim=32, hidden=64, classes=8,
+                 layers=3, q_agg=True, lr_kind="adam"):
+        self.name = name
+        self.nodes, self.in_dim, self.hidden = nodes, in_dim, hidden
+        self.classes, self.layers, self.q_agg = classes, layers, q_agg
+        self.opt = common.Adam(weight_decay=0.0)
+
+        spec = ParamSpec()
+        dims = [in_dim] + [hidden] * (layers - 1) + [classes]
+        for i in range(layers):
+            spec.add(f"l{i}.w", (dims[i], dims[i + 1]), "xavier")
+            spec.add(f"l{i}.b", (dims[i + 1],), "zeros")
+        self.spec = spec
+
+        self.data_inputs = [
+            ("feats", (nodes, in_dim), jnp.float32, False),
+            ("adj", (nodes, nodes), jnp.float32, False),
+            ("labels", (nodes,), jnp.int32, False),
+            ("mask", (nodes,), jnp.float32, False),
+        ]
+
+    def forward(self, p, feats, adj, q_fwd, q_bwd):
+        h = feats
+        for i in range(self.layers):
+            hw = qdot(h, p[f"l{i}.w"], q_fwd, q_bwd) + p[f"l{i}.b"]
+            if self.q_agg:
+                # Q-Agg: the aggregation GEMM runs quantized — qdot
+                # fake-quantizes both the adjacency and the messages to q_t.
+                h = qdot_agg(adj, hw, q_fwd, q_bwd)
+            else:
+                # FP-Agg: aggregation stays full precision
+                h = fdot_agg(adj, hw)
+            if i < self.layers - 1:
+                h = jnp.maximum(h, 0.0)
+        return h
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        logits = self.forward(p, data["feats"], data["adj"], q_fwd, q_bwd)
+        return (common.masked_xent(logits, data["labels"], data["mask"]),
+                common.masked_accuracy(logits, data["labels"], data["mask"]))
+
+
+def gcn(q_agg, nodes=512, name=None):
+    """OGBN-Arxiv stand-in: 3-layer full-graph GCN."""
+    nm = name or ("gcn_qagg" if q_agg else "gcn_fpagg")
+    return GCN(nm, nodes=nodes, in_dim=32, hidden=64, classes=8, layers=3,
+               q_agg=q_agg)
+
+
+def sage(q_agg, nodes=512, name=None):
+    """OGBN-Products stand-in: 2-layer model; the coordinator feeds a
+    sampled (truncated-neighborhood) aggregation matrix per epoch."""
+    nm = name or ("sage_qagg" if q_agg else "sage_fpagg")
+    return GCN(nm, nodes=nodes, in_dim=32, hidden=64, classes=8, layers=2,
+               q_agg=q_agg)

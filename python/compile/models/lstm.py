@@ -1,0 +1,75 @@
+"""One-layer LSTM word-level LM — the Penn Treebank stand-in (paper Fig 7).
+
+Follows the Zaremba et al. regime the paper adopts: single LSTM layer,
+dropout on the output, gradient-norm clipping 0.25, SGD whose lr is divided
+by 5 on validation plateau — the plateau logic lives in the Rust trainer
+(lr is a per-step runtime input, so the schedule decision never touches
+python). Metric is mean token cross-entropy; the coordinator reports
+perplexity = exp(ce).
+
+All four gate GEMMs are fused into two qdot calls ([x,h] @ W) so the
+recurrence exercises the Pallas kernel once per direction per step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, qdot
+
+
+class LstmLM:
+    name = "lstm_lm"
+    metric = "token_ce"
+
+    def __init__(self, vocab=64, hidden=128, seq=32, batch=16, dropout=0.5):
+        self.vocab, self.hidden, self.seq, self.batch = vocab, hidden, seq, batch
+        self.dropout_rate = dropout
+        # Paper: SGD, grad clip 0.25 (lr schedule driven from Rust).
+        self.opt = common.SGDM(momentum=0.0, weight_decay=0.0, clip_norm=0.25)
+
+        spec = ParamSpec()
+        spec.add("embed", (vocab, hidden), "embed")
+        spec.add("lstm.wx", (hidden, 4 * hidden), "uniform")
+        spec.add("lstm.wh", (hidden, 4 * hidden), "uniform")
+        spec.add("lstm.b", (4 * hidden,), "zeros")
+        spec.add("head.w", (hidden, vocab), "xavier")
+        spec.add("head.b", (vocab,), "zeros")
+        self.spec = spec
+
+        self.data_inputs = [
+            ("x", (batch, seq), jnp.int32, True),
+            ("y", (batch, seq), jnp.int32, True),
+        ]
+
+    def forward(self, p, x, q_fwd, q_bwd, rng, train):
+        b, t = x.shape
+        h_dim = self.hidden
+        emb = jnp.take(p["embed"], x, axis=0)  # [B, T, H] (kept FP: lookup)
+
+        def cell(carry, xt):
+            h, c = carry
+            gates = (qdot(xt, p["lstm.wx"], q_fwd, q_bwd)
+                     + qdot(h, p["lstm.wh"], q_fwd, q_bwd)
+                     + p["lstm.b"])
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        h0 = jnp.zeros((b, h_dim))
+        (_, _), hs = jax.lax.scan(cell, (h0, h0), jnp.swapaxes(emb, 0, 1))
+        hs = jnp.swapaxes(hs, 0, 1)  # [B, T, H]
+        hs = common.dropout(hs, self.dropout_rate, rng, train)
+        flat = hs.reshape(b * t, h_dim)
+        logits = qdot(flat, p["head.w"], q_fwd, q_bwd) + p["head.b"]
+        return logits.reshape(b, t, self.vocab)
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        logits = self.forward(p, data["x"], q_fwd, q_bwd, rng, train)
+        b, t, v = logits.shape
+        ce = common.softmax_xent(logits.reshape(b * t, v),
+                                 data["y"].reshape(b * t))
+        # metric = token CE as well (perplexity computed by the coordinator;
+        # exp() on device would overflow early in training)
+        return ce, ce

@@ -1,0 +1,41 @@
+"""Quickstart model: 2-layer quantized MLP classifier.
+
+The smallest end-to-end exercise of the stack: flat-vector params, qdot
+GEMMs, CPT-ready runtime bit-widths. Used by examples/quickstart.rs.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, qdot
+
+
+class MLP:
+    name = "mlp"
+    metric = "accuracy"
+
+    def __init__(self, in_dim=32, hidden=64, classes=4, batch=32):
+        self.in_dim, self.hidden, self.classes, self.batch = (
+            in_dim, hidden, classes, batch)
+        self.opt = common.SGDM(momentum=0.9, weight_decay=1e-4)
+        self.spec = (
+            ParamSpec()
+            .add("fc1.w", (in_dim, hidden), "he")
+            .add("fc1.b", (hidden,), "zeros")
+            .add("fc2.w", (hidden, classes), "he")
+            .add("fc2.b", (classes,), "zeros")
+        )
+        self.data_inputs = [
+            ("x", (batch, in_dim), jnp.float32, True),
+            ("y", (batch,), jnp.int32, True),
+        ]
+
+    def forward(self, p, x, q_fwd, q_bwd):
+        h = qdot(x, p["fc1.w"], q_fwd, q_bwd) + p["fc1.b"]
+        h = jnp.maximum(h, 0.0)
+        return qdot(h, p["fc2.w"], q_fwd, q_bwd) + p["fc2.b"]
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        logits = self.forward(p, data["x"], q_fwd, q_bwd)
+        return (common.softmax_xent(logits, data["y"]),
+                common.accuracy(logits, data["y"]))

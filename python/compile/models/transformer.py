@@ -1,0 +1,141 @@
+"""Transformer encoder — two exports:
+
+* `transformer_lm`  — causal LM used by the end-to-end example (train a
+  real small model on a corpus for a few hundred steps, log the loss
+  curve; EXPERIMENTS.md §E2E).
+* `transformer_cls` — sequence-pair classifier, the mBERT/XNLI stand-in
+  for the paper's Fig 7 right panel (short fine-tuning horizon, n ∈ {1,2}
+  cycles). DESIGN.md §4 records the random-init substitution for the
+  unavailable pretrained checkpoint.
+
+Attention and MLP GEMMs all route through qdot; softmax/layernorm stay in
+full precision (as in the paper's simulated-quantization setup, which
+clips GEMM operands only).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec, layernorm, qdot
+
+
+class Transformer:
+    def __init__(self, name, vocab=64, d=128, heads=4, layers=2, seq=32,
+                 batch=16, classes=None, dropout=0.1):
+        self.name = name
+        self.vocab, self.d, self.heads, self.layers = vocab, d, heads, layers
+        self.seq, self.batch, self.classes = seq, batch, classes
+        self.dropout_rate = dropout
+        self.causal = classes is None
+        self.metric = "accuracy" if classes else "token_ce"
+        self.opt = common.Adam(weight_decay=0.01, clip_norm=1.0)
+
+        spec = ParamSpec()
+        spec.add("embed", (vocab, d), "embed")
+        spec.add("pos", (seq, d), "embed")
+        for i in range(layers):
+            pre = f"l{i}"
+            spec.add(f"{pre}.qkv.w", (d, 3 * d), "xavier")
+            spec.add(f"{pre}.qkv.b", (3 * d,), "zeros")
+            spec.add(f"{pre}.proj.w", (d, d), "xavier")
+            spec.add(f"{pre}.proj.b", (d,), "zeros")
+            spec.add(f"{pre}.n1.g", (d,), "ones")
+            spec.add(f"{pre}.n1.b", (d,), "zeros")
+            spec.add(f"{pre}.mlp1.w", (d, 4 * d), "xavier")
+            spec.add(f"{pre}.mlp1.b", (4 * d,), "zeros")
+            spec.add(f"{pre}.mlp2.w", (4 * d, d), "xavier")
+            spec.add(f"{pre}.mlp2.b", (d,), "zeros")
+            spec.add(f"{pre}.n2.g", (d,), "ones")
+            spec.add(f"{pre}.n2.b", (d,), "zeros")
+        spec.add("final.g", (d,), "ones")
+        spec.add("final.b", (d,), "zeros")
+        if classes:
+            spec.add("head.w", (d, classes), "xavier")
+            spec.add("head.b", (classes,), "zeros")
+        else:
+            spec.add("head.w", (d, vocab), "xavier")
+            spec.add("head.b", (vocab,), "zeros")
+        self.spec = spec
+
+        if classes:
+            self.data_inputs = [
+                ("x", (batch, seq), jnp.int32, True),
+                ("y", (batch,), jnp.int32, True),
+            ]
+        else:
+            self.data_inputs = [
+                ("x", (batch, seq), jnp.int32, True),
+                ("y", (batch, seq), jnp.int32, True),
+            ]
+
+    def _attn(self, p, pre, h, q_fwd, q_bwd):
+        b, t, d = h.shape
+        nh = self.heads
+        hd = d // nh
+        qkv = qdot(h.reshape(b * t, d), p[f"{pre}.qkv.w"], q_fwd, q_bwd)
+        qkv = (qkv + p[f"{pre}.qkv.b"]).reshape(b, t, 3, nh, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [B,T,nh,hd]
+        q = jnp.swapaxes(q, 1, 2)  # [B,nh,T,hd]
+        k = jnp.swapaxes(k, 1, 2)
+        v = jnp.swapaxes(v, 1, 2)
+        # attention score/context matmuls stay FP (activation×activation;
+        # the paper's simulation quantizes weight-bearing GEMMs) — still
+        # counted for the BitOps denominator:
+        common._record("fp_gemm", 2 * 2 * b * nh * t * t * hd)
+        att = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(float(hd))
+        if self.causal:
+            mask = jnp.tril(jnp.ones((t, t), bool))
+            att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhts,bhsd->bhtd", att, v)
+        out = jnp.swapaxes(out, 1, 2).reshape(b * t, d)
+        out = qdot(out, p[f"{pre}.proj.w"], q_fwd, q_bwd) + p[f"{pre}.proj.b"]
+        return out.reshape(b, t, d)
+
+    def forward(self, p, x, q_fwd, q_bwd, rng, train):
+        b, t = x.shape
+        h = jnp.take(p["embed"], x, axis=0) + p["pos"][None, :t]
+        for i in range(self.layers):
+            pre = f"l{i}"
+            a = self._attn(p, pre, layernorm(p, f"{pre}.n1", h), q_fwd, q_bwd)
+            a = common.dropout(a, self.dropout_rate,
+                               jax.random.fold_in(rng, 2 * i), train)
+            h = h + a
+            m = layernorm(p, f"{pre}.n2", h)
+            m2 = qdot(m.reshape(b * t, self.d), p[f"{pre}.mlp1.w"],
+                      q_fwd, q_bwd) + p[f"{pre}.mlp1.b"]
+            m2 = jax.nn.gelu(m2)
+            m2 = qdot(m2, p[f"{pre}.mlp2.w"], q_fwd, q_bwd) + p[f"{pre}.mlp2.b"]
+            m2 = common.dropout(m2.reshape(b, t, self.d), self.dropout_rate,
+                                jax.random.fold_in(rng, 2 * i + 1), train)
+            h = h + m2
+        h = layernorm(p, "final", h)
+        if self.classes:
+            cls = jnp.mean(h, axis=1)  # mean-pool (no [CLS] in synthetic data)
+            return qdot(cls, p["head.w"], q_fwd, q_bwd) + p["head.b"]
+        flat = h.reshape(b * t, self.d)
+        logits = qdot(flat, p["head.w"], q_fwd, q_bwd) + p["head.b"]
+        return logits.reshape(b, t, self.vocab)
+
+    def loss(self, p, data, q_fwd, q_bwd, rng, train):
+        logits = self.forward(p, data["x"], q_fwd, q_bwd, rng, train)
+        if self.classes:
+            return (common.softmax_xent(logits, data["y"]),
+                    common.accuracy(logits, data["y"]))
+        b, t, v = logits.shape
+        ce = common.softmax_xent(logits.reshape(b * t, v),
+                                 data["y"].reshape(b * t))
+        return ce, ce
+
+
+def transformer_lm(batch=16, seq=32):
+    return Transformer("transformer_lm", vocab=64, d=128, heads=4, layers=2,
+                       seq=seq, batch=batch, classes=None)
+
+
+def transformer_cls(batch=16, seq=32):
+    """XNLI stand-in: 3-way sequence-pair classification (entail/neutral/
+    contradict analog on synthetic pairs)."""
+    return Transformer("transformer_cls", vocab=64, d=128, heads=4, layers=2,
+                       seq=seq, batch=batch, classes=3)

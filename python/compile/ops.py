@@ -1,0 +1,103 @@
+"""Quantized-training ops: the differentiable layer over the L1 kernels.
+
+`qdot` is the single primitive every model routes its GEMMs through. It
+implements the paper's Figure 1 dataflow:
+
+  forward:  out = Q(a; q_fwd) @ Q(w; q_fwd)          (fused Pallas kernel)
+  backward: g_q = Q(g; q_bwd)                        (gradient quantization)
+            da  = (g_q @ Q(w)ᵀ) · STE-mask(a)
+            dw  = (Q(a)ᵀ @ g_q) · STE-mask(w)
+
+Per paper §3.1, cyclic precision applies only to the forward pass; the
+backward pass quantizes gradients at the *fixed* q_max. Both bit-widths are
+runtime scalars so one compiled train-step serves the whole precision range.
+
+The straight-through estimator passes gradients unchanged inside the clip
+range [-s, s] and zeroes them outside (DoReFa-style), implemented via a
+custom_vjp so `jax.grad` of any model composes correctly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.qmatmul import qmatmul as qmatmul_pallas
+
+
+@jax.custom_vjp
+def qdot(a, w, q_fwd, q_bwd):
+    """Quantized matmul with STE backward and q_bwd gradient quantization.
+
+    Args:
+      a: f32[m, k] activations.
+      w: f32[k, n] weights.
+      q_fwd: scalar forward bit-width (cycled by the CPT schedule).
+      q_bwd: scalar backward (gradient) bit-width (pinned to q_max).
+    """
+    return qmatmul_pallas(a, w, q_fwd, q_fwd)
+
+
+def _qdot_fwd(a, w, q_fwd, q_bwd):
+    sa = ref.dynamic_scale(a)
+    sw = ref.dynamic_scale(w)
+    out = qmatmul_pallas(a, w, q_fwd, q_fwd, sa, sw)
+    # Residuals: the *quantized* operands (what the hardware would have
+    # seen) plus the STE clip scales.
+    aq = ref.fake_quant(a, q_fwd, sa)
+    wq = ref.fake_quant(w, q_fwd, sw)
+    mask_a = ref.ste_mask(a, sa)
+    mask_w = ref.ste_mask(w, sw)
+    return out, (aq, wq, mask_a, mask_w, q_bwd)
+
+
+def _qdot_bwd(res, g):
+    aq, wq, mask_a, mask_w, q_bwd = res
+    # Gradient quantization (paper Figure 1: g_q). Fixed q_bwd = q_max.
+    gq = ref.fake_quant(g, q_bwd)
+    da = (gq @ wq.T) * mask_a
+    dw = (aq.T @ gq) * mask_w
+    return da, dw, None, None
+
+
+qdot.defvjp(_qdot_fwd, _qdot_bwd)
+
+
+@jax.custom_vjp
+def quant_ste(x, q):
+    """Fake-quantize with straight-through gradients (identity in-range).
+
+    Used where a tensor (not a matmul operand) must be quantized — e.g. the
+    Q-Agg aggregation messages in the GNN models.
+    """
+    return ref.fake_quant(x, q)
+
+
+def _quant_ste_fwd(x, q):
+    s = ref.dynamic_scale(x)
+    return ref.fake_quant(x, q, s), ref.ste_mask(x, s)
+
+
+def _quant_ste_bwd(mask, g):
+    return g * mask, None
+
+
+quant_ste.defvjp(_quant_ste_fwd, _quant_ste_bwd)
+
+
+@jax.custom_vjp
+def bwd_quant(x, q_bwd):
+    """Identity forward; quantizes the cotangent to q_bwd bits on the way
+    back. Inserted after non-GEMM blocks so gradient quantization covers the
+    whole backward pass, mirroring the paper's Figure 1."""
+    return x
+
+
+def _bwd_quant_fwd(x, q_bwd):
+    return x, q_bwd
+
+
+def _bwd_quant_bwd(q_bwd, g):
+    return ref.fake_quant(g, q_bwd), None
+
+
+bwd_quant.defvjp(_bwd_quant_fwd, _bwd_quant_bwd)

@@ -1,0 +1,128 @@
+"""AOT pipeline tests: manifest consistency + artifact lowering contract.
+
+These validate the python side of the Rust<->Python contract without
+needing the Rust runtime (the Rust integration tests cover the other
+half).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.models import registry, common
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@needs_artifacts
+def test_manifest_covers_registry():
+    m = json.load(open(MANIFEST))
+    reg = registry()
+    for name in reg:
+        assert name in m["models"], f"{name} missing from manifest"
+
+
+@needs_artifacts
+def test_manifest_param_counts_match_models():
+    m = json.load(open(MANIFEST))
+    reg = registry()
+    for name, model in reg.items():
+        entry = m["models"][name]
+        assert entry["param_count"] == model.spec.count()
+        assert entry["opt_state_count"] == model.opt.state_count(
+            model.spec.count())
+        declared = sum(
+            int(jnp.prod(jnp.array(p["shape"])))
+            for p in entry["param_specs"])
+        assert declared == entry["param_count"]
+
+
+@needs_artifacts
+def test_artifact_files_exist_and_are_hlo_text():
+    m = json.load(open(MANIFEST))
+    for name, entry in m["models"].items():
+        for tag, fname in entry["files"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"{name}/{tag} missing"
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), f"{name}/{tag} not HLO text"
+            assert "custom-call" not in open(path).read(), (
+                f"{name}/{tag} contains a custom-call — Mosaic lowering "
+                f"leaked; CPU PJRT cannot run it")
+
+
+@needs_artifacts
+def test_chunk_signature_shapes():
+    """The train_chunk entry layout must match the documented contract:
+    params, opt, stacked[K,...], shared, q_fwd[K], lr[K], seeds[K], q_bwd."""
+    m = json.load(open(MANIFEST))
+    k = m["chunk"]
+    entry = m["models"]["mlp"]
+    path = os.path.join(ART, entry["files"]["train_chunk"])
+    header = open(path).read(2000)
+    # entry_computation_layout line carries the full signature
+    assert f"f32[{entry['param_count']}]" in header
+    assert f"f32[{k},32,32]" in header  # stacked x
+    assert f"s32[{k},32]" in header     # stacked y
+    assert f"s32[{k}]" in header        # seeds
+
+
+def test_flops_counting_matches_manual_mlp():
+    reg = registry()
+    mlp = reg["mlp"]
+
+    def probe(params_flat):
+        data = {
+            "x": jnp.zeros((32, 32), jnp.float32),
+            "y": jnp.zeros((32,), jnp.int32),
+        }
+        p = mlp.spec.unflatten(params_flat)
+        return mlp.loss(p, data, 8.0, 8.0, jax.random.PRNGKey(0), True)
+
+    flops = common.count_gemm_flops(
+        probe, jax.ShapeDtypeStruct((mlp.spec.count(),), jnp.float32))
+    want = 2 * 32 * 32 * 64 + 2 * 32 * 64 * 4
+    assert flops["q_gemm"] == want
+
+
+def test_gnn_agg_flops_counted_separately():
+    reg = registry()
+    for name in ["gcn_qagg", "gcn_fpagg"]:
+        g = reg[name]
+
+        def probe(params_flat, g=g):
+            n, d = g.nodes, g.in_dim
+            data = {
+                "feats": jnp.zeros((n, d), jnp.float32),
+                "adj": jnp.zeros((n, n), jnp.float32),
+                "labels": jnp.zeros((n,), jnp.int32),
+                "mask": jnp.ones((n,), jnp.float32),
+            }
+            p = g.spec.unflatten(params_flat)
+            return g.loss(p, data, 8.0, 8.0, jax.random.PRNGKey(0), True)
+
+        flops = common.count_gemm_flops(
+            probe, jax.ShapeDtypeStruct((g.spec.count(),), jnp.float32))
+        agg_key = "agg_q_gemm" if g.q_agg else "agg_fp_gemm"
+        n = g.nodes
+        # 3 layers of n x n @ n x d_out aggregation
+        want_agg = 2 * n * n * (64 + 64 + 8)
+        assert flops[agg_key] == want_agg, f"{name}: {flops}"
+        # transform GEMMs never land in the agg bucket
+        assert flops["q_gemm"] > 0
+
+
+def test_to_hlo_text_smoke():
+    text = aot.to_hlo_text(
+        lambda x: (x * 2.0,), [jax.ShapeDtypeStruct((4,), jnp.float32)])
+    assert text.startswith("HloModule")
+    assert "multiply" in text

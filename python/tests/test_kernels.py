@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and bit-widths; every case asserts exact agreement
+(the kernel and oracle compute the same float expression) plus the analytic
+quantization-error properties the paper's cost/fidelity story rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.quantize import quantize, quantize_2d, _divisor_block
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=96)
+BITS = st.integers(min_value=2, max_value=16)
+
+
+def rng_array(shape, seed=0, scale=3.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------- divisor block
+
+@given(dim=st.integers(1, 4096), pref=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_divisor_block_divides(dim, pref):
+    b = _divisor_block(dim, pref)
+    assert dim % b == 0
+    assert 1 <= b <= dim
+
+
+def test_divisor_block_prefers_large():
+    assert _divisor_block(256, 128) == 128
+    assert _divisor_block(48, 32) == 24  # largest divisor <= 32
+    assert _divisor_block(7, 128) == 7
+
+
+# ---------------------------------------------------------------- quantize
+
+@given(m=DIMS, n=DIMS, q=BITS, seed=st.integers(0, 50))
+@settings(max_examples=60, deadline=None)
+def test_quantize_matches_ref(m, n, q, seed):
+    x = rng_array((m, n), seed)
+    got = quantize_2d(x, float(q), ref.dynamic_scale(x))
+    want = ref.fake_quant(x, float(q))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(q=BITS, seed=st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_quantize_nd(q, seed):
+    x = rng_array((3, 5, 7), seed)
+    got = quantize(x, float(q))
+    want = ref.fake_quant(x, float(q))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(m=DIMS, n=DIMS, q=BITS, seed=st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_quantize_error_bound(m, n, q, seed):
+    """|Q(x) - x| <= s / (2 * levels) whenever |x| <= s (always true for
+    dynamic per-tensor scale)."""
+    x = rng_array((m, n), seed)
+    s = ref.dynamic_scale(x)
+    err = jnp.abs(ref.fake_quant(x, float(q), s) - x)
+    bound = ref.quant_error_bound(float(q), s)
+    # + f32 round-off slop: at high q the analytic bound approaches the
+    # arithmetic noise floor of the x/s*lv ... /lv*s chain.
+    assert float(jnp.max(err)) <= float(bound) * (1 + 1e-5) + 4e-5 * float(s)
+
+
+@given(m=DIMS, q=BITS, seed=st.integers(0, 50))
+@settings(max_examples=40, deadline=None)
+def test_quantize_idempotent(m, q, seed):
+    """Quantizing an already-quantized tensor is a no-op (same scale/bits)."""
+    x = rng_array((m, 8), seed)
+    s = ref.dynamic_scale(x)
+    once = ref.fake_quant(x, float(q), s)
+    twice = ref.fake_quant(once, float(q), s)
+    np.testing.assert_allclose(once, twice, rtol=0, atol=1e-6)
+
+
+@given(m=DIMS, seed=st.integers(0, 30))
+@settings(max_examples=30, deadline=None)
+def test_quantize_monotone_refinement(m, seed):
+    """More bits never increases max quantization error."""
+    x = rng_array((m, 16), seed)
+    s = ref.dynamic_scale(x)
+    errs = [
+        float(jnp.max(jnp.abs(ref.fake_quant(x, float(q), s) - x)))
+        for q in range(2, 12)
+    ]
+    for lo, hi in zip(errs, errs[1:]):
+        assert hi <= lo * (1 + 1e-5)
+
+
+def test_quantize_level_count():
+    """A q-bit quantizer produces at most 2^q - 1 distinct values."""
+    x = jnp.linspace(-1.0, 1.0, 4001)
+    for q in [2, 3, 4, 5]:
+        vals = np.unique(np.asarray(ref.fake_quant(x, float(q), 1.0)))
+        assert len(vals) <= 2 ** q - 1
+        # symmetric: -v present for every v
+        np.testing.assert_allclose(vals, -vals[::-1], atol=1e-7)
+
+
+def test_quantize_zero_tensor():
+    x = jnp.zeros((4, 4))
+    out = quantize(x, 8.0)
+    assert bool(jnp.all(out == 0))
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_quantize_preserves_sign_and_range():
+    x = rng_array((32, 32), 7)
+    s = ref.dynamic_scale(x)
+    xq = ref.fake_quant(x, 4.0, s)
+    assert float(jnp.max(jnp.abs(xq))) <= float(s) * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------- qmatmul
+
+@given(
+    m=DIMS, k=DIMS, n=DIMS,
+    qa=BITS, qb=BITS,
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=60, deadline=None)
+def test_qmatmul_matches_ref(m, k, n, qa, qb, seed):
+    a = rng_array((m, k), seed)
+    b = rng_array((k, n), seed + 1)
+    got = qmatmul(a, b, float(qa), float(qb))
+    want = ref.qmatmul(a, b, float(qa), float(qb))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_multiblock_grid():
+    """Shapes large enough to force a >1 grid on every axis."""
+    a = rng_array((256, 384), 3)
+    b = rng_array((384, 160), 4)
+    got = qmatmul(a, b, 5.0, 7.0)
+    want = ref.qmatmul(a, b, 5.0, 7.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_qmatmul_high_bits_approaches_exact():
+    """At 16+ bits the quantized matmul ~ the exact matmul."""
+    a = rng_array((64, 64), 5, scale=1.0)
+    b = rng_array((64, 64), 6, scale=1.0)
+    got = qmatmul(a, b, 16.0, 16.0)
+    exact = a @ b
+    np.testing.assert_allclose(got, exact, rtol=0, atol=0.05)
+
+
+def test_qmatmul_inside_jit_and_hlo():
+    """The kernel must lower inside jit to plain HLO (no custom-calls) so
+    the CPU PJRT runtime can execute the artifact."""
+    from jax._src.lib import xla_client as xc
+
+    f = jax.jit(lambda a, b, q: qmatmul(a, b, q, q))
+    lowered = f.lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")),
+        use_tuple_args=False,
+        return_tuple=True,
+    )
+    text = comp.as_hlo_text()
+    assert "custom-call" not in text, "Mosaic custom-call leaked into HLO"
+    # and it actually runs
+    a = rng_array((32, 32), 1)
+    b = rng_array((32, 32), 2)
+    np.testing.assert_allclose(f(a, b, 6.0), ref.qmatmul(a, b, 6.0, 6.0),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(q=BITS, seed=st.integers(0, 30))
+@settings(max_examples=20, deadline=None)
+def test_qmatmul_runtime_bits_consistency(q, seed):
+    """Same executable, different runtime q: jit once, sweep bits."""
+    a = rng_array((40, 24), seed)
+    b = rng_array((24, 56), seed + 9)
+    f = jax.jit(lambda a, b, qq: qmatmul(a, b, qq, qq))
+    got = f(a, b, float(q))
+    want = ref.qmatmul(a, b, float(q), float(q))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

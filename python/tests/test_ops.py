@@ -1,0 +1,123 @@
+"""Differentiable quantized ops: forward values and custom-vjp gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.ops import qdot, quant_ste, bwd_quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+BITS = st.integers(min_value=2, max_value=12)
+
+
+def rng(shape, seed=0, scale=2.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------- qdot fwd
+
+@given(q=BITS, seed=st.integers(0, 30))
+@settings(max_examples=30, deadline=None)
+def test_qdot_forward_matches_ref(q, seed):
+    a = rng((24, 40), seed)
+    w = rng((40, 16), seed + 1)
+    got = qdot(a, w, float(q), 8.0)
+    want = ref.qmatmul(a, w, float(q), float(q))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------- qdot bwd
+
+def test_qdot_grad_shapes_and_finite():
+    a = rng((8, 12), 0)
+    w = rng((12, 4), 1)
+
+    def loss(a, w):
+        return jnp.sum(qdot(a, w, 6.0, 8.0) ** 2)
+
+    da, dw = jax.grad(loss, argnums=(0, 1))(a, w)
+    assert da.shape == a.shape and dw.shape == w.shape
+    assert bool(jnp.all(jnp.isfinite(da))) and bool(jnp.all(jnp.isfinite(dw)))
+
+
+def test_qdot_grad_is_ste_quantized_chain():
+    """Backward must equal: quantize cotangent at q_bwd, matmul against the
+    *quantized* residuals, mask by the STE clip."""
+    a = rng((6, 10), 3)
+    w = rng((10, 5), 4)
+    g = rng((6, 5), 5)
+    q_fwd, q_bwd = 4.0, 7.0
+
+    _, vjp = jax.vjp(lambda a, w: qdot(a, w, q_fwd, q_bwd), a, w)
+    da, dw = vjp(g)
+
+    gq = ref.fake_quant(g, q_bwd)
+    aq = ref.fake_quant(a, q_fwd)
+    wq = ref.fake_quant(w, q_fwd)
+    want_da = (gq @ wq.T) * ref.ste_mask(a)
+    want_dw = (aq.T @ gq) * ref.ste_mask(w)
+    np.testing.assert_allclose(da, want_da, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dw, want_dw, rtol=1e-5, atol=1e-5)
+
+
+def test_qdot_high_bits_grad_close_to_exact():
+    """At 16 bits, qdot's gradient ≈ the exact matmul gradient."""
+    a = rng((8, 8), 6, scale=1.0)
+    w = rng((8, 8), 7, scale=1.0)
+
+    def loss_q(a, w):
+        return jnp.sum(qdot(a, w, 16.0, 16.0))
+
+    def loss_x(a, w):
+        return jnp.sum(a @ w)
+
+    da_q, dw_q = jax.grad(loss_q, argnums=(0, 1))(a, w)
+    da_x, dw_x = jax.grad(loss_x, argnums=(0, 1))(a, w)
+    np.testing.assert_allclose(da_q, da_x, atol=0.02)
+    np.testing.assert_allclose(dw_q, dw_x, atol=0.02)
+
+
+def test_qdot_no_grad_wrt_bits():
+    """Bit-widths are schedule inputs, not trainable: their grads are None
+    (declared nondifferentiable in the vjp)."""
+    a = rng((4, 4), 8)
+    w = rng((4, 4), 9)
+    # grad with respect to a only must not fail even though q is traced
+    g = jax.grad(lambda a: jnp.sum(qdot(a, w, 5.0, 8.0)))(a)
+    assert g.shape == a.shape
+
+
+# ---------------------------------------------------------------- quant_ste
+
+@given(q=BITS, seed=st.integers(0, 30))
+@settings(max_examples=30, deadline=None)
+def test_quant_ste_forward(q, seed):
+    x = rng((16, 16), seed)
+    np.testing.assert_allclose(
+        quant_ste(x, float(q)), ref.fake_quant(x, float(q)), rtol=0, atol=0
+    )
+
+
+def test_quant_ste_gradient_identity_in_range():
+    x = rng((12, 12), 11)
+    g = jax.grad(lambda x: jnp.sum(quant_ste(x, 4.0)))(x)
+    # dynamic scale = max|x|, so every element is in range: grad == 1
+    np.testing.assert_allclose(g, jnp.ones_like(x), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------- bwd_quant
+
+def test_bwd_quant_identity_forward():
+    x = rng((9, 9), 12)
+    np.testing.assert_allclose(bwd_quant(x, 5.0), x, rtol=0, atol=0)
+
+
+def test_bwd_quant_quantizes_cotangent():
+    x = rng((9, 9), 13)
+    g_in = rng((9, 9), 14)
+    _, vjp = jax.vjp(lambda x: bwd_quant(x, 5.0), x)
+    (g_out,) = vjp(g_in)
+    np.testing.assert_allclose(g_out, ref.fake_quant(g_in, 5.0), rtol=0, atol=0)

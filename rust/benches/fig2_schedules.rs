@@ -1,0 +1,63 @@
+//! Fig 2 reproduction: the schedule suite's S(t)/q_t series + the
+//! group/cost table. Analytic (no PJRT); also sweeps cycle counts.
+//!
+//!   cargo bench --bench fig2_schedules
+
+use cpt::metrics::CsvWriter;
+use cpt::schedule::{group_of, relative_cost, suite};
+
+fn main() -> anyhow::Result<()> {
+    let total = 800;
+    let (q_min, q_max) = (3.0, 8.0);
+
+    println!("=== Fig 2: CPT schedule suite (T={total}, q in [{q_min},{q_max}]) ===\n");
+    println!(
+        "{:<9} {:<10} {:>8} {:>12} {:>10}",
+        "schedule", "group", "cycles", "mean q/qmax", "rel. cost"
+    );
+    let mut w = CsvWriter::new(&["schedule", "n", "t", "s_t", "q_t"]);
+    for n in [2usize, 4, 8] {
+        for name in suite::suite_names() {
+            let s = suite::by_name(name, q_min, q_max, total, n)?;
+            if n == 8 {
+                println!(
+                    "{:<9} {:<10} {:>8} {:>12.3} {:>10.3}",
+                    name,
+                    group_of(name).label(),
+                    n,
+                    s.mean_relative_precision(total),
+                    relative_cost(&s, q_max, total)
+                );
+            }
+            for t in 0..total {
+                w.row(&[
+                    name.to_string(),
+                    n.to_string(),
+                    t.to_string(),
+                    format!("{:.5}", s.value_at(t)),
+                    s.q_at(t).to_string(),
+                ]);
+            }
+        }
+    }
+    let path = cpt::results_dir().join("fig2_schedules.csv");
+    w.write_to(&path)?;
+    println!("\nwrote series (n = 2, 4, 8) to {}", path.display());
+
+    // invariant check printed for the record: group cost ordering
+    let cost = |n: &str| {
+        relative_cost(&suite::by_name(n, q_min, q_max, total, 8).unwrap(), q_max, total)
+    };
+    let large = (cost("RR") + cost("RTH")) / 2.0;
+    let medium = ["LR", "LT", "CR", "CT", "RTV", "ETV"]
+        .iter()
+        .map(|n| cost(n))
+        .sum::<f64>()
+        / 6.0;
+    let small = (cost("ER") + cost("ETH")) / 2.0;
+    println!(
+        "\ngroup mean relative cost: Large {large:.3} < Medium {medium:.3} < Small {small:.3} ({})",
+        if large < medium && medium < small { "OK" } else { "VIOLATED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Fig 4 reproduction: object detection (PascalVOC stand-in) — mAP-lite
+//! vs training GBitOps, schedule suite × q_max ∈ {6, 8}.
+//!
+//!   cargo bench --bench fig4_detection
+
+use cpt::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let scale = cpt::bench_scale();
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+
+    let mut spec = SweepSpec::new("detector");
+    spec.trials = scale.trials();
+    spec.steps = Some(scale.steps(192, 256));
+    spec.verbose = true;
+    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let rows = aggregate(&outs);
+    let rep = SweepReport::new(
+        "Fig 4 (PascalVOC stand-in): mAP-lite vs GBitOps",
+        "mAP-lite",
+        true,
+    );
+    rep.print(&rows);
+    rep.write_csv(&rows, cpt::results_dir().join("fig4_detection.csv"))?;
+
+    println!("\nPaper shape: q_max=6 clearly deteriorates both baseline and CPT;");
+    println!("at q_max=8 all CPT variants match/exceed STATIC at lower cost.");
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Fig 8 reproduction: critical learning periods in GNN training.
+//!
+//! Left panel: train at the crippling precision (q_low = 2 on this
+//! substrate — the paper's q_min = 3 was likewise chosen as the edge
+//! where training stops progressing; our range test puts the 512-node
+//! SBM GCN's edge at 2) for the first R steps, then q_max = 8
+//! for the full normal duration — final accuracy vs R (plus the normal-
+//! training accuracy curve for reference).
+//! Right panel: a fixed-length q_min window placed at different offsets
+//! ("probing") — final accuracy vs window position.
+//!
+//!   cargo bench --bench fig8_critical_periods
+
+use cpt::metrics::CsvWriter;
+use cpt::prelude::*;
+use cpt::schedule::Schedule;
+
+fn run(
+    model: &LoadedModel,
+    schedule: Schedule,
+    total: usize,
+    trial: usize,
+) -> anyhow::Result<f32> {
+    let mut data = dataset_for("gcn_qagg", 42 + trial as u64)?;
+    let rec = recipe("gcn_qagg")?;
+    let cfg = TrainConfig {
+        total_steps: total,
+        q_bwd: 8.0,
+        eval_every: 0,
+        seed: 11 + trial as i32,
+        log_every: 8,
+        verbose: false,
+    };
+    let mut t = Trainer::new(
+        model,
+        data.as_mut(),
+        schedule,
+        rec.lr_schedule(total),
+        cfg,
+    );
+    Ok(t.run()?.final_eval_metric().unwrap_or(f32::NAN))
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = cpt::bench_scale();
+    let trials = scale.trials();
+    // "normal duration" N; deficit-R runs train R + N steps total
+    let n_steps = scale.steps(240, 480);
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+    let model = rt.load_model(manifest.model("gcn_qagg")?)?;
+
+    let mut w = CsvWriter::new(&["panel", "x", "trial", "accuracy"]);
+
+    // ---- left panel: deficit for the first R steps, then normal training
+    println!("=== Fig 8 left: initial deficit of R steps (then {n_steps} normal steps) ===");
+    println!("{:>6} {:>12}", "R", "accuracy");
+    for frac in [0.0, 0.1, 0.2, 0.3, 0.5, 0.7, 1.0] {
+        let r = (frac * n_steps as f64) as usize;
+        let mut accs = Vec::new();
+        for trial in 0..trials {
+            let s = Schedule::deficit(2.0, 8.0, 0, r);
+            let acc = run(&model, s, r + n_steps, trial)?;
+            w.row(&[
+                "deficit_R".into(),
+                r.to_string(),
+                trial.to_string(),
+                format!("{acc:.5}"),
+            ]);
+            accs.push(acc as f64);
+        }
+        let (m, s) = cpt::data::mean_std(&accs);
+        println!("{r:>6} {m:>12.4} ± {s:.4}");
+    }
+
+    // ---- reference: per-step accuracy of normal training (green curve)
+    {
+        let mut data = dataset_for("gcn_qagg", 42)?;
+        let rec = recipe("gcn_qagg")?;
+        let cfg = TrainConfig {
+            total_steps: n_steps,
+            q_bwd: 8.0,
+            eval_every: (n_steps / 12).max(1),
+            seed: 11,
+            log_every: 8,
+            verbose: false,
+        };
+        let mut t = Trainer::new(
+            &model,
+            data.as_mut(),
+            Schedule::static_q(8.0),
+            rec.lr_schedule(n_steps),
+            cfg,
+        );
+        let h = t.run()?;
+        for &(step, _l, m) in &h.evals {
+            w.row(&[
+                "normal_curve".into(),
+                step.to_string(),
+                "0".into(),
+                format!("{m:.5}"),
+            ]);
+        }
+    }
+
+    // ---- right panel: probing windows
+    let window = n_steps / 2; // paper: 500 of 1000 epochs
+    println!("\n=== Fig 8 right: {window}-step q_min window probed across training ===");
+    println!("{:>14} {:>12}", "window", "accuracy");
+    // Paper protocol: probing runs train for 2x the normal duration so
+    // every window position leaves the same recovery room; only the
+    // window position varies.
+    let probe_total = 2 * n_steps;
+    let positions = [0.0, 0.125, 0.25, 0.375, 0.5];
+    for &pos in &positions {
+        let start = (pos * n_steps as f64) as usize;
+        let mut accs = Vec::new();
+        for trial in 0..trials {
+            let s = Schedule::deficit(2.0, 8.0, start, start + window);
+            let acc = run(&model, s, probe_total, trial)?;
+            w.row(&[
+                "probe".into(),
+                start.to_string(),
+                trial.to_string(),
+                format!("{acc:.5}"),
+            ]);
+            accs.push(acc as f64);
+        }
+        let (m, s) = cpt::data::mean_std(&accs);
+        println!("[{start:>4}, {:>4}) {m:>12.4} ± {s:.4}", start + window);
+    }
+
+    let path = cpt::results_dir().join("fig8_critical_periods.csv");
+    w.write_to(&path)?;
+    println!("\nwrote {}", path.display());
+    println!("\nPaper shape: accuracy decays smoothly with R; probing shows the");
+    println!("earliest window causes the largest permanent degradation.");
+    Ok(())
+}

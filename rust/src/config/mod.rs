@@ -1,0 +1,155 @@
+//! CLI argument parsing + TOML-subset experiment presets (clap/serde are
+//! unavailable offline).
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: a subcommand, positional args, and --flags.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]). Flags are `--key value` or
+    /// `--key=value`; bare `--key` is a boolean true.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut it = args.into_iter().peekable();
+        let mut cli = Cli::default();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                cli.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // peek: next token is a value unless it's a flag
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            cli.flags.insert(key.to_string(), v);
+                        }
+                        _ => {
+                            cli.flags.insert(key.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn from_env() -> Result<Cli> {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.flag(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flag(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Reject unknown flags (catches typos in scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "unknown flag --{k} (known: {})",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = cli("train --model cnn_tiny --steps 100 --verbose --qmax=6");
+        assert_eq!(c.command, "train");
+        assert_eq!(c.flag("model"), Some("cnn_tiny"));
+        assert_eq!(c.usize_or("steps", 0).unwrap(), 100);
+        assert!(c.bool("verbose"));
+        assert_eq!(c.f64_or("qmax", 8.0).unwrap(), 6.0);
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let c = cli("sweep --schedules CR,RR,STATIC");
+        assert_eq!(c.usize_or("trials", 3).unwrap(), 3);
+        assert_eq!(
+            c.list_or("schedules", &[]),
+            vec!["CR", "RR", "STATIC"]
+        );
+        assert_eq!(c.list_or("qmaxes", &["6", "8"]), vec!["6", "8"]);
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let c = cli("train --modle x");
+        assert!(c.check_known(&["model"]).is_err());
+        let c2 = cli("train --model x");
+        assert!(c2.check_known(&["model"]).is_ok());
+    }
+
+    #[test]
+    fn require_missing() {
+        let c = cli("train");
+        assert!(c.require("model").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! TOML-subset parser for experiment preset files (configs/*.toml).
+//!
+//! Supported grammar (sufficient for flat experiment presets):
+//!   [section]
+//!   key = "string" | 123 | 1.5 | true | false | [v, v, ...]
+//!   # comments
+//!
+//! Values land in a `BTreeMap<section, BTreeMap<key, Value>>`; the root
+//! (pre-section) keys go under section "".
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Value]> {
+        match self {
+            Value::List(v) => Ok(v),
+            _ => bail!("not a list: {self:?}"),
+        }
+    }
+}
+
+pub type Section = BTreeMap<String, Value>;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        TomlDoc::parse(&src)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .with_context(|| format!("unterminated string: {s}"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .with_context(|| format!("unterminated list: {s}"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .with_context(|| format!("cannot parse value: {s}"))
+}
+
+/// Split on commas not inside quotes/brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_preset() {
+        let doc = TomlDoc::parse(
+            r#"
+# a preset
+title = "fig3"
+
+[sweep]
+model = "cnn_tiny"        # the CIFAR stand-in
+schedules = ["CR", "RR"]
+q_maxes = [6, 8]
+trials = 3
+verbose = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str().unwrap(), "fig3");
+        let s = doc.section("sweep").unwrap();
+        assert_eq!(s["model"].as_str().unwrap(), "cnn_tiny");
+        assert_eq!(s["trials"].as_usize().unwrap(), 3);
+        assert!(!s["verbose"].as_bool().unwrap());
+        let scheds = s["schedules"].as_list().unwrap();
+        assert_eq!(scheds.len(), 2);
+        assert_eq!(scheds[0].as_str().unwrap(), "CR");
+        let qs = s["q_maxes"].as_list().unwrap();
+        assert_eq!(qs[1].as_f64().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_and_nested_lists() {
+        let doc = TomlDoc::parse("a = []\nb = [[1,2],[3]]").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_list().unwrap().len(), 0);
+        let b = doc.get("", "b").unwrap().as_list().unwrap();
+        assert_eq!(b[0].as_list().unwrap()[1].as_f64().unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,272 @@
+//! Experiment coordinator — orchestrates schedule sweeps across models,
+//! q_max settings, and trials; aggregates results into the paper's
+//! figure/table rows.
+//!
+//! This is the L3 entry point every bench target drives: one
+//! `SweepSpec` describes a panel of a paper figure (model × schedule
+//! suite × q_max × trials), `run_sweep` executes it on the PJRT runtime,
+//! and `SweepReport` prints rows of (schedule, group, GBitOps, metric ±
+//! std) plus writes CSV under results/.
+
+pub mod recipes;
+pub mod report;
+
+pub use recipes::{dataset_for, recipe, report_metric, Recipe};
+pub use report::SweepReport;
+
+use anyhow::Result;
+
+use crate::data::mean_std;
+use crate::metrics::History;
+use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::schedule::{group_of, suite, Schedule};
+use crate::trainer::{TrainConfig, Trainer};
+
+/// One sweep = one figure panel.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub model: String,
+    /// Schedule names: suite members, "STATIC", or "NONE" (no quant = q32).
+    pub schedules: Vec<String>,
+    pub q_maxes: Vec<f64>,
+    pub trials: usize,
+    /// Override the recipe's default step count (None = recipe default).
+    pub steps: Option<usize>,
+    /// Override the recipe's cycle count.
+    pub cycles: Option<usize>,
+    pub eval_every: usize,
+    pub verbose: bool,
+}
+
+impl SweepSpec {
+    pub fn new(model: &str) -> Self {
+        SweepSpec {
+            model: model.to_string(),
+            schedules: suite::suite_names()
+                .iter()
+                .map(|s| s.to_string())
+                .chain(std::iter::once("STATIC".to_string()))
+                .collect(),
+            q_maxes: vec![6.0, 8.0],
+            trials: 1,
+            steps: None,
+            cycles: None,
+            eval_every: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub model: String,
+    pub schedule: String,
+    pub group: String,
+    pub q_max: f64,
+    pub trial: usize,
+    pub gbitops: f64,
+    /// figure-of-merit (accuracy / mAP-lite / perplexity)
+    pub metric: f64,
+    pub eval_loss: f64,
+    pub steps: usize,
+    pub exec_seconds: f64,
+    pub history: History,
+}
+
+/// Aggregated over trials.
+#[derive(Clone, Debug)]
+pub struct AggRow {
+    pub model: String,
+    pub schedule: String,
+    pub group: String,
+    pub q_max: f64,
+    pub gbitops: f64,
+    pub metric_mean: f64,
+    pub metric_std: f64,
+    pub trials: usize,
+}
+
+/// Build the schedule object for a named sweep entry.
+pub fn make_schedule(
+    name: &str,
+    q_min: f64,
+    q_max: f64,
+    total: usize,
+    n: usize,
+) -> Result<Schedule> {
+    match name {
+        "STATIC" => Ok(Schedule::static_q(q_max)),
+        "NONE" => Ok(Schedule::static_q(32.0)),
+        _ => suite::by_name(name, q_min, q_max, total, n),
+    }
+}
+
+/// Run one training run for (model, schedule, q_max, trial).
+pub fn run_one(
+    model: &LoadedModel,
+    spec_name: &str,
+    sched_name: &str,
+    q_max: f64,
+    trial: usize,
+    steps: usize,
+    cycles: usize,
+    eval_every: usize,
+    verbose: bool,
+) -> Result<RunOutcome> {
+    let rec = recipe(spec_name)?;
+    let schedule = make_schedule(sched_name, rec.q_min, q_max, steps, cycles)?;
+    let mut data = dataset_for(spec_name, 1000 + trial as u64)?;
+    let cfg = TrainConfig {
+        total_steps: steps,
+        q_bwd: if sched_name == "NONE" { 32.0 } else { q_max as f32 },
+        eval_every,
+        seed: 7 * (trial as i32 + 1),
+        log_every: 1,
+        verbose,
+    };
+    let lr = rec.lr_schedule(steps);
+    let mut trainer = Trainer::new(model, data.as_mut(), schedule, lr, cfg);
+    let hist = trainer.run()?;
+    let raw_metric = hist.final_eval_metric().unwrap_or(f32::NAN);
+    Ok(RunOutcome {
+        model: spec_name.to_string(),
+        schedule: sched_name.to_string(),
+        group: group_of(sched_name).label().to_string(),
+        q_max,
+        trial,
+        gbitops: hist.gbitops,
+        metric: report_metric(spec_name, raw_metric) as f64,
+        eval_loss: hist.final_eval_loss().unwrap_or(f32::NAN) as f64,
+        steps,
+        exec_seconds: hist.exec_seconds,
+        history: hist,
+    })
+}
+
+/// Execute a full sweep spec. Loads the model once and reuses the
+/// compiled executables across every schedule/trial (compilation is the
+/// dominant fixed cost on this testbed).
+pub fn run_sweep(
+    rt: &Runtime,
+    manifest: &Manifest,
+    spec: &SweepSpec,
+) -> Result<Vec<RunOutcome>> {
+    let rec = recipe(&spec.model)?;
+    let steps = spec.steps.unwrap_or(rec.steps);
+    let cycles = spec.cycles.unwrap_or(rec.cycles);
+    let model = rt.load_model(manifest.model(&spec.model)?)?;
+
+    let mut outs = Vec::new();
+    for &q_max in &spec.q_maxes {
+        for sched in &spec.schedules {
+            for trial in 0..spec.trials {
+                let out = run_one(
+                    &model, &spec.model, sched, q_max, trial, steps, cycles,
+                    spec.eval_every, spec.verbose,
+                )?;
+                if spec.verbose {
+                    eprintln!(
+                        "[sweep] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
+                        spec.model, sched, q_max, trial, out.metric, out.gbitops
+                    );
+                }
+                outs.push(out);
+            }
+        }
+    }
+    Ok(outs)
+}
+
+/// Aggregate outcomes over trials.
+pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
+    let mut rows: Vec<AggRow> = Vec::new();
+    for o in outs {
+        if rows.iter().any(|r| {
+            r.model == o.model && r.schedule == o.schedule && r.q_max == o.q_max
+        }) {
+            continue;
+        }
+        let group: Vec<&RunOutcome> = outs
+            .iter()
+            .filter(|x| {
+                x.model == o.model
+                    && x.schedule == o.schedule
+                    && x.q_max == o.q_max
+            })
+            .collect();
+        let metrics: Vec<f64> = group.iter().map(|x| x.metric).collect();
+        let (m, s) = mean_std(&metrics);
+        rows.push(AggRow {
+            model: o.model.clone(),
+            schedule: o.schedule.clone(),
+            group: o.group.clone(),
+            q_max: o.q_max,
+            gbitops: group.iter().map(|x| x.gbitops).sum::<f64>()
+                / group.len() as f64,
+            metric_mean: m,
+            metric_std: s,
+            trials: group.len(),
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(sched: &str, q: f64, trial: usize, metric: f64) -> RunOutcome {
+        RunOutcome {
+            model: "m".into(),
+            schedule: sched.into(),
+            group: group_of(sched).label().into(),
+            q_max: q,
+            trial,
+            gbitops: 1.0 + trial as f64,
+            metric,
+            eval_loss: 0.0,
+            steps: 10,
+            exec_seconds: 0.0,
+            history: crate::metrics::History::default(),
+        }
+    }
+
+    #[test]
+    fn aggregate_means_over_trials() {
+        let outs = vec![
+            outcome("CR", 8.0, 0, 0.8),
+            outcome("CR", 8.0, 1, 0.9),
+            outcome("CR", 6.0, 0, 0.5),
+            outcome("RR", 8.0, 0, 0.7),
+        ];
+        let rows = aggregate(&outs);
+        assert_eq!(rows.len(), 3);
+        let cr8 = rows
+            .iter()
+            .find(|r| r.schedule == "CR" && r.q_max == 8.0)
+            .unwrap();
+        assert!((cr8.metric_mean - 0.85).abs() < 1e-12);
+        assert_eq!(cr8.trials, 2);
+        assert!((cr8.gbitops - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn make_schedule_handles_baselines() {
+        let s = make_schedule("STATIC", 3.0, 8.0, 100, 8).unwrap();
+        assert_eq!(s.q_at(50), 8);
+        let n = make_schedule("NONE", 3.0, 8.0, 100, 8).unwrap();
+        assert_eq!(n.q_at(50), 32);
+        let c = make_schedule("CR", 3.0, 8.0, 100, 8).unwrap();
+        assert!(c.q_at(0) < 8);
+        assert!(make_schedule("BOGUS", 3.0, 8.0, 100, 8).is_err());
+    }
+
+    #[test]
+    fn sweep_spec_defaults_cover_suite_plus_static() {
+        let spec = SweepSpec::new("mlp");
+        assert_eq!(spec.schedules.len(), 11);
+        assert!(spec.schedules.contains(&"STATIC".to_string()));
+        assert_eq!(spec.q_maxes, vec![6.0, 8.0]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-model training recipes — the paper's hyperparameter settings (§4),
+//! scaled to this testbed (DESIGN.md §4), in one place so every bench and
+//! example trains identically.
+
+use anyhow::{bail, Result};
+
+use crate::data::{
+    blobs::BlobDataset, detection::DetectionDataset,
+    entailment::EntailmentDataset, graphs::GraphDataset, images::ImageDataset,
+    text::LmDataset, Dataset,
+};
+use crate::trainer::LrSchedule;
+
+/// Static recipe for one model.
+#[derive(Clone, Debug)]
+pub struct Recipe {
+    /// q_min from the precision range test (paper table of settings).
+    pub q_min: f64,
+    /// default cycle count n (paper: 8, or 2 for short fine-tunes).
+    pub cycles: usize,
+    /// default training length on this testbed.
+    pub steps: usize,
+    pub base_lr: f32,
+    pub lr_kind: LrKind,
+    /// whether a larger eval metric is better (accuracy/mAP) or smaller
+    /// (token CE -> perplexity).
+    pub higher_is_better: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LrKind {
+    /// ×0.1 at 50%/75% (paper CIFAR/ImageNet recipe)
+    StepDecay,
+    /// cosine annealing (paper OGBN recipe)
+    Cosine,
+    /// constant (paper PascalVOC recipe)
+    Constant,
+    /// linear decay ×0.1 over the run (paper XNLI recipe)
+    Linear,
+    /// divide by 5 on plateau (paper Penn Treebank recipe)
+    Plateau,
+}
+
+/// Recipe lookup. q_min values follow the paper's range-test results for
+/// the corresponding domain (CIFAR 3, ImageNet 4, VOC 5, OGBN 3, LM 5).
+pub fn recipe(model: &str) -> Result<Recipe> {
+    Ok(match model {
+        "mlp" => Recipe {
+            q_min: 3.0,
+            cycles: 8,
+            steps: 128,
+            base_lr: 0.05,
+            lr_kind: LrKind::Constant,
+            higher_is_better: true,
+        },
+        "cnn_tiny" => Recipe {
+            q_min: 3.0,
+            cycles: 8,
+            steps: 320,
+            base_lr: 0.05,
+            lr_kind: LrKind::StepDecay,
+            higher_is_better: true,
+        },
+        "cnn_deep" => Recipe {
+            q_min: 4.0,
+            cycles: 8,
+            steps: 320,
+            base_lr: 0.05,
+            lr_kind: LrKind::StepDecay,
+            higher_is_better: true,
+        },
+        "detector" => Recipe {
+            q_min: 5.0,
+            cycles: 8,
+            steps: 256,
+            base_lr: 1e-3,
+            lr_kind: LrKind::Constant,
+            higher_is_better: true,
+        },
+        "gcn_qagg" | "gcn_fpagg" => Recipe {
+            q_min: 3.0,
+            cycles: 8,
+            steps: 240,
+            base_lr: 1e-2,
+            lr_kind: LrKind::Cosine,
+            higher_is_better: true,
+        },
+        "sage_qagg" | "sage_fpagg" => Recipe {
+            q_min: 3.0,
+            cycles: 8,
+            steps: 240,
+            base_lr: 1e-2,
+            lr_kind: LrKind::Cosine,
+            higher_is_better: true,
+        },
+        "lstm_lm" => Recipe {
+            q_min: 5.0,
+            cycles: 2,
+            steps: 240,
+            base_lr: 4.0,
+            lr_kind: LrKind::Plateau,
+            higher_is_better: false,
+        },
+        "transformer_lm" => Recipe {
+            q_min: 5.0,
+            cycles: 2,
+            steps: 300,
+            base_lr: 1e-3,
+            lr_kind: LrKind::Cosine,
+            higher_is_better: false,
+        },
+        "transformer_cls" => Recipe {
+            q_min: 5.0,
+            cycles: 2,
+            steps: 240,
+            base_lr: 5e-4,
+            lr_kind: LrKind::Linear,
+            higher_is_better: true,
+        },
+        other => bail!("no recipe for model '{other}'"),
+    })
+}
+
+impl Recipe {
+    pub fn lr_schedule(&self, total_steps: usize) -> LrSchedule {
+        match self.lr_kind {
+            LrKind::StepDecay => {
+                LrSchedule::paper_step_decay(self.base_lr, total_steps)
+            }
+            LrKind::Cosine => LrSchedule::cosine(self.base_lr, total_steps),
+            LrKind::Constant => LrSchedule::Constant { lr: self.base_lr },
+            LrKind::Linear => LrSchedule::LinearDecay {
+                base: self.base_lr,
+                total: total_steps,
+                end_factor: 0.1,
+            },
+            LrKind::Plateau => LrSchedule::plateau(self.base_lr, 0.2, 3),
+        }
+    }
+}
+
+/// Construct the synthetic dataset matching a model's manifest shapes.
+pub fn dataset_for(model: &str, seed: u64) -> Result<Box<dyn Dataset>> {
+    Ok(match model {
+        "mlp" => Box::new(BlobDataset::new(seed, 32, 4, 32)),
+        "cnn_tiny" => Box::new(ImageDataset::new(seed, 16, 10, 32)),
+        "cnn_deep" => Box::new(ImageDataset::new(seed, 16, 20, 32)),
+        "detector" => Box::new(DetectionDataset::new(seed, 16, 4, 4, 16)),
+        "gcn_qagg" | "gcn_fpagg" => {
+            Box::new(GraphDataset::new(seed, 512, None))
+        }
+        "sage_qagg" | "sage_fpagg" => {
+            Box::new(GraphDataset::new(seed, 512, Some(8)))
+        }
+        "lstm_lm" => Box::new(LmDataset::new(seed, 64, 32, 16)),
+        "transformer_lm" => Box::new(LmDataset::new(seed, 64, 32, 16)),
+        "transformer_cls" => Box::new(EntailmentDataset::new(seed, 32, 16)),
+        other => bail!("no dataset for model '{other}'"),
+    })
+}
+
+/// Convert a raw eval metric into the figure-of-merit the paper reports
+/// (perplexity for LMs, metric as-is otherwise).
+pub fn report_metric(model: &str, raw: f32) -> f32 {
+    match model {
+        "lstm_lm" | "transformer_lm" => raw.exp(), // token CE -> perplexity
+        _ => raw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_have_recipe_and_dataset() {
+        for m in [
+            "mlp", "cnn_tiny", "cnn_deep", "detector", "gcn_qagg",
+            "gcn_fpagg", "sage_qagg", "sage_fpagg", "lstm_lm",
+            "transformer_lm", "transformer_cls",
+        ] {
+            recipe(m).unwrap_or_else(|e| panic!("{m}: {e}"));
+            dataset_for(m, 1).unwrap_or_else(|e| panic!("{m}: {e}"));
+        }
+        assert!(recipe("nope").is_err());
+    }
+
+    #[test]
+    fn fine_tune_models_use_short_cycles() {
+        // paper §4.4: n ∈ {1, 2} for 2-epoch fine-tuning
+        assert_eq!(recipe("transformer_cls").unwrap().cycles, 2);
+        assert_eq!(recipe("lstm_lm").unwrap().cycles, 2);
+        assert_eq!(recipe("cnn_tiny").unwrap().cycles, 8);
+    }
+
+    #[test]
+    fn perplexity_conversion() {
+        assert!((report_metric("lstm_lm", 0.0) - 1.0).abs() < 1e-6);
+        assert_eq!(report_metric("cnn_tiny", 0.7), 0.7);
+    }
+}

@@ -1,0 +1,179 @@
+//! Result reporting: paper-style tables to stdout + CSV under results/.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{AggRow, RunOutcome};
+use crate::metrics::CsvWriter;
+
+/// Pretty-printer + CSV emitter for a sweep.
+pub struct SweepReport<'a> {
+    pub title: &'a str,
+    pub metric_name: &'a str,
+    pub higher_is_better: bool,
+}
+
+impl<'a> SweepReport<'a> {
+    pub fn new(title: &'a str, metric_name: &'a str, higher_is_better: bool) -> Self {
+        SweepReport { title, metric_name, higher_is_better }
+    }
+
+    /// Print the aggregated table, grouped by q_max, sorted by GBitOps
+    /// (the x-axis of the paper's scatter figures).
+    pub fn print(&self, rows: &[AggRow]) {
+        println!("\n=== {} ===", self.title);
+        let mut q_maxes: Vec<f64> = rows.iter().map(|r| r.q_max).collect();
+        q_maxes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        q_maxes.dedup();
+        for q in q_maxes {
+            println!("\n-- q_max = {q} --");
+            println!(
+                "{:<10} {:<10} {:>12} {:>18}",
+                "schedule", "group", "GBitOps", self.metric_name
+            );
+            let mut sub: Vec<&AggRow> =
+                rows.iter().filter(|r| r.q_max == q).collect();
+            sub.sort_by(|a, b| a.gbitops.partial_cmp(&b.gbitops).unwrap());
+            for r in sub {
+                println!(
+                    "{:<10} {:<10} {:>12.4} {:>12.4} ± {:.4}",
+                    r.schedule, r.group, r.gbitops, r.metric_mean, r.metric_std
+                );
+            }
+        }
+        // headline: best schedule vs static baseline
+        if let Some(best) = self.best_row(rows) {
+            if let Some(stat) = rows
+                .iter()
+                .filter(|r| r.schedule == "STATIC")
+                .max_by(|a, b| a.q_max.partial_cmp(&b.q_max).unwrap())
+            {
+                let save = 100.0 * (1.0 - best.gbitops / stat.gbitops);
+                println!(
+                    "\nbest CPT: {} (q_max={}) {}={:.4} at {:.1}% less compute than STATIC ({:.4})",
+                    best.schedule, best.q_max, self.metric_name,
+                    best.metric_mean, save, stat.metric_mean
+                );
+            }
+        }
+    }
+
+    fn best_row<'r>(&self, rows: &'r [AggRow]) -> Option<&'r AggRow> {
+        rows.iter()
+            .filter(|r| r.schedule != "STATIC" && r.schedule != "NONE")
+            .max_by(|a, b| {
+                let (x, y) = if self.higher_is_better {
+                    (a.metric_mean, b.metric_mean)
+                } else {
+                    (-a.metric_mean, -b.metric_mean)
+                };
+                x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// Write aggregated rows as CSV.
+    pub fn write_csv(&self, rows: &[AggRow], path: impl AsRef<Path>) -> Result<()> {
+        let mut w = CsvWriter::new(&[
+            "model", "schedule", "group", "q_max", "gbitops",
+            "metric_mean", "metric_std", "trials",
+        ]);
+        for r in rows {
+            w.row(&[
+                r.model.clone(),
+                r.schedule.clone(),
+                r.group.clone(),
+                format!("{}", r.q_max),
+                format!("{:.6}", r.gbitops),
+                format!("{:.6}", r.metric_mean),
+                format!("{:.6}", r.metric_std),
+                format!("{}", r.trials),
+            ]);
+        }
+        w.write_to(path)
+    }
+
+    /// Write per-run loss curves (for the e2e example / Fig 5 style
+    /// validation curves).
+    pub fn write_curves_csv(
+        &self,
+        outs: &[RunOutcome],
+        path: impl AsRef<Path>,
+    ) -> Result<()> {
+        let mut w = CsvWriter::new(&[
+            "model", "schedule", "q_max", "trial", "step", "train_loss",
+            "q_t",
+        ]);
+        for o in outs {
+            for (i, &(step, loss)) in o.history.losses.iter().enumerate() {
+                let q = o
+                    .history
+                    .precisions
+                    .get(i)
+                    .map(|&(_, q)| q)
+                    .unwrap_or(0);
+                w.row(&[
+                    o.model.clone(),
+                    o.schedule.clone(),
+                    format!("{}", o.q_max),
+                    format!("{}", o.trial),
+                    format!("{step}"),
+                    format!("{loss:.6}"),
+                    format!("{q}"),
+                ]);
+            }
+        }
+        w.write_to(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::History;
+
+    fn row(s: &str, q: f64, g: f64, m: f64) -> AggRow {
+        AggRow {
+            model: "m".into(),
+            schedule: s.into(),
+            group: "-".into(),
+            q_max: q,
+            gbitops: g,
+            metric_mean: m,
+            metric_std: 0.0,
+            trials: 1,
+        }
+    }
+
+    #[test]
+    fn csv_emission() {
+        let rows = vec![row("CR", 8.0, 1.0, 0.9), row("STATIC", 8.0, 2.0, 0.88)];
+        let rep = SweepReport::new("t", "acc", true);
+        let dir = std::env::temp_dir().join("cpt_report_test");
+        let p = dir.join("a.csv");
+        rep.write_csv(&rows, &p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("model,schedule,group"));
+        assert_eq!(s.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn print_does_not_panic() {
+        let rows = vec![row("CR", 8.0, 1.0, 0.9), row("STATIC", 8.0, 2.0, 0.88)];
+        SweepReport::new("t", "acc", true).print(&rows);
+        let _o = RunOutcome {
+            model: "m".into(),
+            schedule: "CR".into(),
+            group: "-".into(),
+            q_max: 8.0,
+            trial: 0,
+            gbitops: 1.0,
+            metric: 0.9,
+            eval_loss: 0.1,
+            steps: 10,
+            exec_seconds: 0.0,
+            history: History::default(),
+        };
+    }
+}

@@ -1,0 +1,90 @@
+//! Gaussian-blob vector classification — the quickstart (MLP) workload.
+
+use anyhow::Result;
+
+use super::Dataset;
+use crate::runtime::HostTensor;
+use crate::util::prng::Pcg32;
+
+pub struct BlobDataset {
+    pub dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    centers: Vec<f32>,
+    rng: Pcg32,
+    eval_seed: u64,
+    n_eval: usize,
+}
+
+impl BlobDataset {
+    pub fn new(seed: u64, dim: usize, classes: usize, batch: usize) -> Self {
+        let mut crng = Pcg32::new(seed, 61);
+        let centers: Vec<f32> =
+            (0..classes * dim).map(|_| 2.0 * crng.normal()).collect();
+        BlobDataset {
+            dim,
+            classes,
+            batch,
+            centers,
+            rng: Pcg32::new(seed, 62),
+            eval_seed: seed ^ 0xB10B,
+            n_eval: 4,
+        }
+    }
+
+    fn make(&self, rng: &mut Pcg32) -> (HostTensor, HostTensor) {
+        let (b, d) = (self.batch, self.dim);
+        let mut xs = Vec::with_capacity(b * d);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let c = rng.below(self.classes as u32) as usize;
+            ys.push(c as i32);
+            for j in 0..d {
+                xs.push(self.centers[c * d + j] + rng.normal());
+            }
+        }
+        (HostTensor::F32(vec![b, d], xs), HostTensor::I32(vec![b], ys))
+    }
+}
+
+impl Dataset for BlobDataset {
+    fn train_batch(&mut self, _step: usize) -> Result<Vec<HostTensor>> {
+        let mut rng = self.rng.fork(0xB1);
+        let (x, y) = self.make(&mut rng);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Result<Vec<HostTensor>> {
+        let mut rng = Pcg32::new(self.eval_seed, i as u64);
+        let (x, y) = self.make(&mut rng);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batches(&self) -> usize {
+        self.n_eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut d = BlobDataset::new(1, 32, 4, 8);
+        let b = d.train_batch(0).unwrap();
+        assert_eq!(b[0].shape(), &[8, 32]);
+        assert_eq!(b[1].shape(), &[8]);
+    }
+
+    #[test]
+    fn distinct_batches() {
+        let mut d = BlobDataset::new(1, 32, 4, 8);
+        let a = d.train_batch(0).unwrap();
+        let b = d.train_batch(1).unwrap();
+        match (&a[0], &b[0]) {
+            (HostTensor::F32(_, x), HostTensor::F32(_, y)) => assert_ne!(x, y),
+            _ => panic!(),
+        }
+    }
+}

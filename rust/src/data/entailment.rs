@@ -1,0 +1,165 @@
+//! Synthetic entailment pairs — the XNLI stand-in (paper Fig 7 right;
+//! DESIGN.md §4).
+//!
+//! A premise is a Markov-chain sentence; the hypothesis is derived from
+//! it with a class-dependent transformation:
+//!   class 0 ("entail")     — a subsequence of the premise (light noise);
+//!   class 1 ("neutral")    — shares the premise's prefix only;
+//!   class 2 ("contradict") — premise tokens order-reversed + shifted.
+//! The pair is packed [premise SEP hypothesis] into one sequence, as BERT
+//! packs sentence pairs. A transformer must compare the two segments to
+//! classify — mirroring the relational structure of NLI.
+
+use anyhow::Result;
+
+use super::text::MarkovCorpus;
+use super::Dataset;
+use crate::runtime::HostTensor;
+use crate::util::prng::Pcg32;
+
+pub const SEP: i32 = 63; // reserved separator token (vocab 64)
+
+pub struct EntailmentDataset {
+    corpus: MarkovCorpus,
+    pub seq: usize,
+    pub batch: usize,
+    rng: Pcg32,
+    eval_seed: u64,
+    n_eval: usize,
+}
+
+impl EntailmentDataset {
+    pub fn new(seed: u64, seq: usize, batch: usize) -> Self {
+        EntailmentDataset {
+            corpus: MarkovCorpus::new(seed, 63, 40_000), // keep 63 for SEP
+            seq,
+            batch,
+            rng: Pcg32::new(seed, 51),
+            eval_seed: seed ^ 0xEA7A11,
+            n_eval: 6,
+        }
+    }
+
+    fn make_pair(&self, rng: &mut Pcg32, class: usize) -> Vec<i32> {
+        let t = self.seq;
+        let half = (t - 1) / 2;
+        let start =
+            rng.below((self.corpus.tokens.len() - 2 * t) as u32) as usize;
+        let premise = &self.corpus.tokens[start..start + half];
+        let hypothesis: Vec<i32> = match class {
+            0 => {
+                // entail: noisy subsequence
+                let mut h: Vec<i32> = premise
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % 4 != 3)
+                    .map(|(_, &x)| x)
+                    .collect();
+                while h.len() < half {
+                    h.push(premise[h.len() % premise.len()]);
+                }
+                h
+            }
+            1 => {
+                // neutral: same prefix, unrelated continuation
+                let other = rng
+                    .below((self.corpus.tokens.len() - half - 1) as u32)
+                    as usize;
+                let mut h = premise[..half / 4].to_vec();
+                h.extend_from_slice(
+                    &self.corpus.tokens[other..other + (half - half / 4)],
+                );
+                h
+            }
+            _ => {
+                // contradict: reversed + shifted premise
+                premise.iter().rev().map(|&x| (x + 7) % 63).collect()
+            }
+        };
+        let mut seqv = Vec::with_capacity(t);
+        seqv.extend_from_slice(premise);
+        seqv.push(SEP);
+        seqv.extend_from_slice(&hypothesis[..half]);
+        while seqv.len() < t {
+            seqv.push(SEP);
+        }
+        seqv.truncate(t);
+        seqv
+    }
+
+    fn make_batch(&self, rng: &mut Pcg32) -> (HostTensor, HostTensor) {
+        let (b, t) = (self.batch, self.seq);
+        let mut xs = Vec::with_capacity(b * t);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let class = rng.below(3) as usize;
+            ys.push(class as i32);
+            xs.extend(self.make_pair(rng, class));
+        }
+        (
+            HostTensor::I32(vec![b, t], xs),
+            HostTensor::I32(vec![b], ys),
+        )
+    }
+}
+
+impl Dataset for EntailmentDataset {
+    fn train_batch(&mut self, _step: usize) -> Result<Vec<HostTensor>> {
+        let mut rng = self.rng.fork(0xE1);
+        let (x, y) = self.make_batch(&mut rng);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Result<Vec<HostTensor>> {
+        let mut rng = Pcg32::new(self.eval_seed, i as u64 + 3);
+        let (x, y) = self.make_batch(&mut rng);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batches(&self) -> usize {
+        self.n_eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_classes() {
+        let mut d = EntailmentDataset::new(3, 32, 8);
+        let b = d.train_batch(0).unwrap();
+        assert_eq!(b[0].shape(), &[8, 32]);
+        assert_eq!(b[1].shape(), &[8]);
+        let HostTensor::I32(_, ys) = &b[1] else { panic!() };
+        assert!(ys.iter().all(|&y| (0..3).contains(&y)));
+        let HostTensor::I32(_, xs) = &b[0] else { panic!() };
+        assert!(xs.iter().all(|&x| (0..64).contains(&x)));
+        // every sequence contains the separator
+        for row in 0..8 {
+            assert!(xs[row * 32..(row + 1) * 32].contains(&SEP));
+        }
+    }
+
+    #[test]
+    fn entail_pairs_share_tokens_contradict_dont() {
+        let mut d = EntailmentDataset::new(5, 32, 1);
+        let mut rng = Pcg32::seeded(4);
+        let overlap = |v: &[i32]| {
+            let sep_pos = v.iter().position(|&x| x == SEP).unwrap();
+            let (p, h) = (&v[..sep_pos], &v[sep_pos + 1..]);
+            let hits = h.iter().filter(|x| p.contains(x)).count();
+            hits as f64 / h.len() as f64
+        };
+        let mut o_entail = 0.0;
+        let mut o_contra = 0.0;
+        for _ in 0..20 {
+            o_entail += overlap(&d.make_pair(&mut rng, 0));
+            o_contra += overlap(&d.make_pair(&mut rng, 2));
+        }
+        assert!(
+            o_entail > o_contra,
+            "entail overlap {o_entail} <= contradict {o_contra}"
+        );
+    }
+}

@@ -1,0 +1,312 @@
+//! Stochastic-block-model graphs — the OGBN-Arxiv / OGBN-Products
+//! stand-in (paper §4.3, Figs 5/6/8).
+//!
+//! Nodes belong to `classes` communities; intra-community edges are much
+//! likelier than inter-community ones, and node features are a noisy
+//! community prototype — so aggregation over the (mostly intra-community)
+//! neighborhood denoises features and a GCN genuinely benefits from
+//! message passing, replicating the structure that makes OGBN node
+//! classification non-trivial.
+//!
+//! Two aggregation-operator constructions:
+//! * `full_adjacency()` — degree-normalized Â = D^{-1/2}(A+I)D^{-1/2}
+//!   (GCN / full-graph training, paper Eq. 1);
+//! * `sampled_adjacency(rng, s)` — GraphSAGE-style: per node, mean over
+//!   `s` sampled neighbors (truncated sum; paper footnote 4). Re-sampled
+//!   every epoch by the dataset wrapper.
+
+use anyhow::Result;
+
+use super::Dataset;
+use crate::runtime::HostTensor;
+use crate::util::prng::Pcg32;
+
+pub struct SbmGraph {
+    pub nodes: usize,
+    pub classes: usize,
+    pub feat_dim: usize,
+    /// adjacency list (undirected, no self loops)
+    pub neighbors: Vec<Vec<usize>>,
+    pub labels: Vec<i32>,
+    pub feats: Vec<f32>, // [nodes, feat_dim]
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+}
+
+impl SbmGraph {
+    pub fn new(
+        seed: u64,
+        nodes: usize,
+        classes: usize,
+        feat_dim: usize,
+        p_in: f64,
+        p_out: f64,
+        train_frac: f64,
+    ) -> Self {
+        let mut rng = Pcg32::new(seed, 11);
+        let labels: Vec<i32> =
+            (0..nodes).map(|_| rng.below(classes as u32) as i32).collect();
+
+        // community feature prototypes
+        let mut protos = vec![0f32; classes * feat_dim];
+        for v in protos.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut feats = Vec::with_capacity(nodes * feat_dim);
+        for i in 0..nodes {
+            let c = labels[i] as usize;
+            for j in 0..feat_dim {
+                feats.push(protos[c * feat_dim + j] + 2.2 * rng.normal());
+            }
+        }
+
+        // SBM edges
+        let mut neighbors = vec![Vec::new(); nodes];
+        for i in 0..nodes {
+            for j in (i + 1)..nodes {
+                let p = if labels[i] == labels[j] { p_in } else { p_out };
+                if (rng.next_f32() as f64) < p {
+                    neighbors[i].push(j);
+                    neighbors[j].push(i);
+                }
+            }
+        }
+
+        // train/val split
+        let mut idx: Vec<usize> = (0..nodes).collect();
+        rng.shuffle(&mut idx);
+        let n_train = (nodes as f64 * train_frac) as usize;
+        let mut train_mask = vec![0f32; nodes];
+        let mut val_mask = vec![0f32; nodes];
+        for (k, &i) in idx.iter().enumerate() {
+            if k < n_train {
+                train_mask[i] = 1.0;
+            } else {
+                val_mask[i] = 1.0;
+            }
+        }
+
+        SbmGraph {
+            nodes,
+            classes,
+            feat_dim,
+            neighbors,
+            labels,
+            feats,
+            train_mask,
+            val_mask,
+        }
+    }
+
+    /// Dense Â = D^{-1/2} (A + I) D^{-1/2}.
+    pub fn full_adjacency(&self) -> Vec<f32> {
+        let n = self.nodes;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+            for &j in &self.neighbors[i] {
+                a[i * n + j] = 1.0;
+            }
+        }
+        let deg: Vec<f32> =
+            (0..n).map(|i| (0..n).map(|j| a[i * n + j]).sum()).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if a[i * n + j] != 0.0 {
+                    a[i * n + j] /= (deg[i] * deg[j]).sqrt().max(1e-6);
+                }
+            }
+        }
+        a
+    }
+
+    /// GraphSAGE-style sampled mean-aggregation operator: each row i has
+    /// 1/(s+1) on itself and on `s` sampled neighbors (with replacement if
+    /// the neighborhood is smaller). Truncates the aggregation sum —
+    /// paper footnote 4's stability argument.
+    pub fn sampled_adjacency(&self, rng: &mut Pcg32, s: usize) -> Vec<f32> {
+        let n = self.nodes;
+        let mut a = vec![0f32; n * n];
+        let w = 1.0 / (s as f32 + 1.0);
+        for i in 0..n {
+            a[i * n + i] += w;
+            let nb = &self.neighbors[i];
+            if nb.is_empty() {
+                a[i * n + i] += s as f32 * w;
+                continue;
+            }
+            for _ in 0..s {
+                let j = nb[rng.below(nb.len() as u32) as usize];
+                a[i * n + j] += w;
+            }
+        }
+        a
+    }
+}
+
+/// Dataset adapter for the GCN/SAGE artifacts. Shared inputs are
+/// (feats, adj, labels, mask); there are no stacked inputs (full-graph
+/// training — the paper trains OGBN-Arxiv on the full graph each epoch).
+pub struct GraphDataset {
+    pub graph: SbmGraph,
+    adj_full: Vec<f32>,
+    /// if Some(s): SAGE mode, re-sample an s-neighbor operator per epoch
+    pub sample_neighbors: Option<usize>,
+    pub steps_per_epoch: usize,
+    rng: Pcg32,
+    cached_epoch: Option<usize>,
+    cached_adj: Vec<f32>,
+}
+
+impl GraphDataset {
+    pub fn new(seed: u64, nodes: usize, sample_neighbors: Option<usize>) -> Self {
+        let graph = SbmGraph::new(seed, nodes, 8, 32, 0.04, 0.004, 0.6);
+        let adj_full = graph.full_adjacency();
+        GraphDataset {
+            graph,
+            adj_full,
+            sample_neighbors,
+            steps_per_epoch: 4,
+            rng: Pcg32::new(seed, 21),
+            cached_epoch: None,
+            cached_adj: Vec::new(),
+        }
+    }
+
+    fn adj_for_step(&mut self, step: usize) -> Vec<f32> {
+        match self.sample_neighbors {
+            None => self.adj_full.clone(),
+            Some(s) => {
+                let epoch = step / self.steps_per_epoch;
+                if self.cached_epoch != Some(epoch) {
+                    self.cached_adj = self.graph.sampled_adjacency(&mut self.rng, s);
+                    self.cached_epoch = Some(epoch);
+                }
+                self.cached_adj.clone()
+            }
+        }
+    }
+}
+
+impl Dataset for GraphDataset {
+    fn train_batch(&mut self, _step: usize) -> Result<Vec<HostTensor>> {
+        Ok(vec![]) // no stacked inputs: full-graph training
+    }
+
+    fn shared_inputs(&mut self, step: usize) -> Result<Vec<HostTensor>> {
+        let n = self.graph.nodes;
+        let d = self.graph.feat_dim;
+        Ok(vec![
+            HostTensor::F32(vec![n, d], self.graph.feats.clone()),
+            HostTensor::F32(vec![n, n], self.adj_for_step(step)),
+            HostTensor::I32(vec![n], self.graph.labels.clone()),
+            HostTensor::F32(vec![n], self.graph.train_mask.clone()),
+        ])
+    }
+
+    fn eval_batch(&mut self, _i: usize) -> Result<Vec<HostTensor>> {
+        let n = self.graph.nodes;
+        let d = self.graph.feat_dim;
+        Ok(vec![
+            HostTensor::F32(vec![n, d], self.graph.feats.clone()),
+            HostTensor::F32(vec![n, n], self.adj_full.clone()),
+            HostTensor::I32(vec![n], self.graph.labels.clone()),
+            HostTensor::F32(vec![n], self.graph.val_mask.clone()),
+        ])
+    }
+
+    fn eval_batches(&self) -> usize {
+        1
+    }
+
+    fn agg_density(&self) -> f64 {
+        // nnz of the full normalized adjacency (incl. self loops) / n^2;
+        // the sampled (SAGE) operator is at most as dense.
+        let n = self.graph.nodes;
+        let nnz: usize =
+            n + self.graph.neighbors.iter().map(|v| v.len()).sum::<usize>();
+        nnz as f64 / (n * n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbm_structure() {
+        let g = SbmGraph::new(5, 128, 4, 16, 0.1, 0.005, 0.6);
+        // intra-community edges dominate
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for i in 0..g.nodes {
+            for &j in &g.neighbors[i] {
+                if g.labels[i] == g.labels[j] {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        assert!(intra > inter * 2, "intra {intra} inter {inter}");
+    }
+
+    #[test]
+    fn full_adjacency_rows_normalized() {
+        let g = SbmGraph::new(6, 64, 4, 8, 0.1, 0.01, 0.5);
+        let a = g.full_adjacency();
+        // symmetric
+        for i in 0..64 {
+            for j in 0..64 {
+                assert!((a[i * 64 + j] - a[j * 64 + i]).abs() < 1e-6);
+            }
+        }
+        // spectral norm <= 1 for sym-normalized adjacency: check via power
+        // iteration that ||Âx|| <= ||x||
+        let mut x = vec![1f32; 64];
+        for _ in 0..5 {
+            let y: Vec<f32> = (0..64)
+                .map(|i| (0..64).map(|j| a[i * 64 + j] * x[j]).sum())
+                .collect();
+            let nx: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!(ny <= nx * 1.001, "norm grew: {nx} -> {ny}");
+            x = y;
+        }
+    }
+
+    #[test]
+    fn sampled_adjacency_rows_sum_to_one() {
+        let g = SbmGraph::new(7, 64, 4, 8, 0.1, 0.01, 0.5);
+        let mut rng = Pcg32::seeded(1);
+        let a = g.sampled_adjacency(&mut rng, 4);
+        for i in 0..64 {
+            let s: f32 = (0..64).map(|j| a[i * 64 + j]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn masks_partition_nodes() {
+        let g = SbmGraph::new(8, 100, 4, 8, 0.1, 0.01, 0.6);
+        for i in 0..100 {
+            assert_eq!(g.train_mask[i] + g.val_mask[i], 1.0);
+        }
+        let n_train: f32 = g.train_mask.iter().sum();
+        assert_eq!(n_train, 60.0);
+    }
+
+    #[test]
+    fn sage_resamples_per_epoch() {
+        let mut d = GraphDataset::new(9, 64, Some(4));
+        let a0 = d.shared_inputs(0).unwrap();
+        let a1 = d.shared_inputs(1).unwrap(); // same epoch -> same operator
+        let a2 = d.shared_inputs(d.steps_per_epoch).unwrap(); // next epoch
+        let get = |v: &Vec<HostTensor>| match &v[1] {
+            HostTensor::F32(_, x) => x.clone(),
+            _ => panic!(),
+        };
+        assert_eq!(get(&a0), get(&a1));
+        assert_ne!(get(&a0), get(&a2));
+    }
+}

@@ -1,0 +1,77 @@
+//! Synthetic dataset generators (DESIGN.md §4 substitutions).
+//!
+//! Each generator produces a deterministic, seeded dataset that exercises
+//! the same code path as the paper's real dataset: class-conditional
+//! images for CIFAR/ImageNet, object grids for PascalVOC, stochastic-
+//! block-model graphs for OGBN, and a Markov-chain corpus for Penn
+//! Treebank / XNLI. The `Dataset` trait yields the model's data inputs as
+//! `HostTensor`s in manifest order, so the trainer is generic.
+
+pub mod blobs;
+pub mod detection;
+pub mod entailment;
+pub mod graphs;
+pub mod images;
+pub mod text;
+
+use anyhow::Result;
+
+use crate::runtime::HostTensor;
+
+/// A source of training/eval batches for one model.
+///
+/// `train_batch(step)` returns the *stacked* inputs for one optimizer step
+/// (manifest order, stacked inputs only). `shared_inputs()` returns the
+/// per-chunk shared tensors (e.g. the graph), if any — they may change per
+/// epoch (e.g. SAGE neighbor re-sampling). `eval_batch(i)` returns the
+/// full data-input list (stacked + shared, manifest order) for evaluation.
+pub trait Dataset {
+    /// Stacked per-step inputs for optimizer step `step`.
+    fn train_batch(&mut self, step: usize) -> Result<Vec<HostTensor>>;
+
+    /// Shared (non-stacked) inputs for the chunk starting at `step`.
+    fn shared_inputs(&mut self, _step: usize) -> Result<Vec<HostTensor>> {
+        Ok(vec![])
+    }
+
+    /// Full input list for evaluation batch `i`.
+    fn eval_batch(&mut self, i: usize) -> Result<Vec<HostTensor>>;
+
+    /// Number of distinct eval batches.
+    fn eval_batches(&self) -> usize;
+
+    /// Density (nnz / n^2) of the aggregation operator, for BitOps
+    /// accounting of GNN models (1.0 for everything else).
+    fn agg_density(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!(m1, 5.0);
+        assert_eq!(s1, 0.0);
+    }
+}

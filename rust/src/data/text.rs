@@ -1,0 +1,190 @@
+//! Synthetic Markov corpus — the Penn Treebank stand-in (paper Fig 7
+//! left) and the token source for the end-to-end transformer LM example.
+//!
+//! An order-2 Markov chain over a 64-symbol vocabulary with a sparse,
+//! peaked transition table. The corpus has real sequential structure
+//! (conditional entropy well below log|V|), so an LSTM/transformer LM
+//! must learn the transition statistics to reduce perplexity — and
+//! quantization noise in training measurably slows/limits that learning,
+//! which is exactly the contrast the CPT experiments need.
+
+use anyhow::Result;
+
+use super::Dataset;
+use crate::runtime::HostTensor;
+use crate::util::prng::Pcg32;
+
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl MarkovCorpus {
+    /// Generate `len` tokens. Each (prev2, prev1) context concentrates
+    /// probability on ~4 successor symbols.
+    pub fn new(seed: u64, vocab: usize, len: usize) -> Self {
+        let mut rng = Pcg32::new(seed, 31);
+        // per-context successor candidates (deterministic hash of context)
+        let branch = 4usize;
+        let mut tokens = Vec::with_capacity(len);
+        tokens.push(rng.below(vocab as u32) as i32);
+        tokens.push(rng.below(vocab as u32) as i32);
+        for _ in 2..len {
+            let p2 = tokens[tokens.len() - 2] as u64;
+            let p1 = tokens[tokens.len() - 1] as u64;
+            // successor set keyed on the previous token (order-1 dominant,
+            // so bigram statistics carry most of the signal an LM can
+            // learn); the older token only biases *which* of the `branch`
+            // successors is chosen, adding weaker order-2 structure.
+            let h = p1
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(seed);
+            // 85%: pick one of `branch` successors of p1; 15%: uniform
+            let t = if rng.next_f32() < 0.85 {
+                let k = (rng.below(branch as u32) as u64 + p2) % branch as u64;
+                ((h >> (8 * k)) % vocab as u64) as i32
+            } else {
+                rng.below(vocab as u32) as i32
+            };
+            tokens.push(t);
+        }
+        MarkovCorpus { vocab, tokens }
+    }
+}
+
+/// Sliding-window LM batches: x = tokens[i..i+T], y = tokens[i+1..i+T+1].
+pub struct LmDataset {
+    corpus: MarkovCorpus,
+    pub seq: usize,
+    pub batch: usize,
+    rng: Pcg32,
+    /// windows reserved for eval (fixed positions at the corpus tail)
+    eval_offset: usize,
+    n_eval: usize,
+}
+
+impl LmDataset {
+    pub fn new(seed: u64, vocab: usize, seq: usize, batch: usize) -> Self {
+        let corpus_len = 40_000;
+        let corpus = MarkovCorpus::new(seed, vocab, corpus_len);
+        let eval_offset = corpus_len * 8 / 10;
+        LmDataset {
+            corpus,
+            seq,
+            batch,
+            rng: Pcg32::new(seed, 32),
+            eval_offset,
+            n_eval: 4,
+        }
+    }
+
+    fn window(&self, start: usize) -> (Vec<i32>, Vec<i32>) {
+        let t = self.seq;
+        let xs = self.corpus.tokens[start..start + t].to_vec();
+        let ys = self.corpus.tokens[start + 1..start + t + 1].to_vec();
+        (xs, ys)
+    }
+
+    fn batch_at(&mut self, train: bool, i: usize) -> (HostTensor, HostTensor) {
+        let b = self.batch;
+        let t = self.seq;
+        let mut xs = Vec::with_capacity(b * t);
+        let mut ys = Vec::with_capacity(b * t);
+        for j in 0..b {
+            let start = if train {
+                self.rng.below((self.eval_offset - t - 1) as u32) as usize
+            } else {
+                // fixed eval windows in the held-out tail
+                let span = self.corpus.tokens.len() - self.eval_offset - t - 1;
+                self.eval_offset + (i * b + j) * 131 % span
+            };
+            let (x, y) = self.window(start);
+            xs.extend(x);
+            ys.extend(y);
+        }
+        (
+            HostTensor::I32(vec![b, t], xs),
+            HostTensor::I32(vec![b, t], ys),
+        )
+    }
+}
+
+impl Dataset for LmDataset {
+    fn train_batch(&mut self, _step: usize) -> Result<Vec<HostTensor>> {
+        let (x, y) = self.batch_at(true, 0);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Result<Vec<HostTensor>> {
+        let (x, y) = self.batch_at(false, i);
+        Ok(vec![x, y])
+    }
+
+    fn eval_batches(&self) -> usize {
+        self.n_eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_in_vocab() {
+        let c = MarkovCorpus::new(1, 64, 10_000);
+        assert!(c.tokens.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_low_conditional_entropy() {
+        // bigram conditional entropy must be far below log2(64) = 6 bits
+        let c = MarkovCorpus::new(2, 64, 40_000);
+        let v = 64usize;
+        let mut pair = vec![0f64; v * v];
+        let mut uni = vec![0f64; v];
+        for w in c.tokens.windows(2) {
+            pair[w[0] as usize * v + w[1] as usize] += 1.0;
+            uni[w[0] as usize] += 1.0;
+        }
+        let n = (c.tokens.len() - 1) as f64;
+        let mut h = 0.0;
+        for a in 0..v {
+            for b in 0..v {
+                let p_ab = pair[a * v + b] / n;
+                if p_ab > 0.0 {
+                    let p_b_given_a = pair[a * v + b] / uni[a];
+                    h -= p_ab * p_b_given_a.log2();
+                }
+            }
+        }
+        assert!(h < 5.2, "conditional entropy {h} too close to uniform");
+        assert!(h > 1.0, "corpus degenerate: H={h}");
+    }
+
+    #[test]
+    fn lm_batches_shift_by_one() {
+        let mut d = LmDataset::new(3, 64, 16, 4);
+        let b = d.train_batch(0).unwrap();
+        let (HostTensor::I32(_, xs), HostTensor::I32(_, ys)) = (&b[0], &b[1])
+        else {
+            panic!()
+        };
+        // y[t] should equal x[t+1] within each row
+        for row in 0..4 {
+            for t in 0..15 {
+                assert_eq!(ys[row * 16 + t], xs[row * 16 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_windows_fixed() {
+        let mut d = LmDataset::new(3, 64, 16, 4);
+        let a = d.eval_batch(1).unwrap();
+        let b = d.eval_batch(1).unwrap();
+        match (&a[0], &b[0]) {
+            (HostTensor::I32(_, x), HostTensor::I32(_, y)) => assert_eq!(x, y),
+            _ => panic!(),
+        }
+    }
+}

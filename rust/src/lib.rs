@@ -1,0 +1,103 @@
+//! # cpt — Better Schedules for Low Precision Training
+//!
+//! A Rust + JAX + Pallas reproduction of Wolfe & Kyrillidis, *Better
+//! Schedules for Low Precision Training of Deep Neural Networks*
+//! (Machine Learning, 2024).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** Pallas kernels (python/compile/kernels): fused
+//!   quantize→matmul with runtime bit-widths;
+//! * **L2** JAX models (python/compile/models): quantized-training
+//!   fwd/bwd, AOT-lowered to HLO text;
+//! * **L3** this crate: the precision-schedule suite, PJRT runtime,
+//!   trainer, synthetic datasets, BitOps accounting and the experiment
+//!   coordinator. Python never runs at training time.
+//!
+//! Quick start:
+//! ```no_run
+//! use cpt::prelude::*;
+//!
+//! let rt = Runtime::cpu().unwrap();
+//! let manifest = Manifest::load("artifacts").unwrap();
+//! let model = rt.load_model(manifest.model("mlp").unwrap()).unwrap();
+//! let schedule = cpt::schedule::suite::by_name("CR", 3.0, 8.0, 128, 8).unwrap();
+//! let mut data = cpt::coordinator::dataset_for("mlp", 0).unwrap();
+//! let lr = LrSchedule::Constant { lr: 0.05 };
+//! let mut trainer = Trainer::new(&model, data.as_mut(), schedule, lr,
+//!                                TrainConfig::default());
+//! let history = trainer.run().unwrap();
+//! println!("final accuracy {:?}", history.final_eval_metric());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod schedule;
+pub mod trainer;
+pub mod util;
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::config::Cli;
+    pub use crate::coordinator::{
+        aggregate, dataset_for, recipe, run_one, run_sweep, SweepReport,
+        SweepSpec,
+    };
+    pub use crate::data::Dataset;
+    pub use crate::metrics::History;
+    pub use crate::quant::BitOpsAccountant;
+    pub use crate::runtime::{HostTensor, LoadedModel, Manifest, Runtime};
+    pub use crate::schedule::{
+        group_of, suite, Cycles, Profile, Reflection, Schedule,
+    };
+    pub use crate::trainer::{LrSchedule, TrainConfig, Trainer};
+}
+
+/// Default artifacts directory, overridable via CPT_ARTIFACTS.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("CPT_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into()
+}
+
+/// Default results directory, overridable via CPT_RESULTS.
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("CPT_RESULTS")
+        .unwrap_or_else(|_| "results".to_string())
+        .into()
+}
+
+/// Bench scale knob: CPT_BENCH_SCALE=quick|full (default quick). The
+/// quick scale keeps every figure reproduction minutes-long on one CPU
+/// core; full uses the paper-shaped trial counts / step counts.
+pub fn bench_scale() -> BenchScale {
+    match std::env::var("CPT_BENCH_SCALE").as_deref() {
+        Ok("full") => BenchScale::Full,
+        _ => BenchScale::Quick,
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchScale {
+    Quick,
+    Full,
+}
+
+impl BenchScale {
+    pub fn trials(self) -> usize {
+        match self {
+            BenchScale::Quick => 1,
+            BenchScale::Full => 3,
+        }
+    }
+
+    pub fn steps(self, quick: usize, full: usize) -> usize {
+        match self {
+            BenchScale::Quick => quick,
+            BenchScale::Full => full,
+        }
+    }
+}

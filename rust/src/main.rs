@@ -1,0 +1,290 @@
+//! `cpt` — command-line launcher for the CPT reproduction.
+//!
+//! Subcommands:
+//!   info                         list models in the artifact manifest
+//!   schedules [--csv PATH]       dump S(t)/q_t series for the suite (Fig 2)
+//!   train     --model M [...]    one training run with a chosen schedule
+//!   sweep     --model M [...]    schedule suite sweep (one figure panel)
+//!   range-test --model M [...]   precision range test (discovers q_min)
+//!   preset    --file F.toml      run a sweep described by a preset file
+//!
+//! Run `cpt <subcommand> --help` for flags.
+
+use anyhow::{bail, Context, Result};
+
+use cpt::coordinator::{self, recipes};
+use cpt::prelude::*;
+use cpt::quant::range_test;
+use cpt::schedule::relative_cost;
+use cpt::{artifacts_dir, config::toml::TomlDoc, results_dir};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let cli = Cli::from_env()?;
+    match cli.command.as_str() {
+        "info" => cmd_info(&cli),
+        "schedules" => cmd_schedules(&cli),
+        "train" => cmd_train(&cli),
+        "sweep" => cmd_sweep(&cli),
+        "range-test" => cmd_range_test(&cli),
+        "preset" => cmd_preset(&cli),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `cpt help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "cpt — Better Schedules for Low Precision Training (reproduction)
+
+USAGE: cpt <subcommand> [flags]
+
+  info                          list models in artifacts/manifest.json
+  schedules [--total N] [--cycles N] [--qmin Q] [--qmax Q] [--csv PATH]
+                                dump the schedule suite's q_t series (Fig 2)
+  train --model M [--schedule CR] [--steps N] [--qmax 8] [--qmin Q]
+        [--cycles N] [--trial T] [--eval-every N] [--verbose]
+                                one training run
+  sweep --model M [--schedules CR,RR,...] [--qmaxes 6,8] [--trials N]
+        [--steps N] [--cycles N] [--csv PATH] [--verbose]
+                                full schedule sweep (one figure panel)
+  range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
+                                discover q_min (paper §3.1)
+  preset --file configs/X.toml  run a sweep preset
+
+ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results)"
+    );
+}
+
+fn cmd_info(_cli: &Cli) -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    println!("chunk size K = {}", manifest.chunk);
+    println!(
+        "{:<18} {:>10} {:>10} {:>14} {:>14} {:>8}",
+        "model", "params", "opt", "qGEMM MFLOP", "fpGEMM MFLOP", "metric"
+    );
+    for (name, m) in &manifest.models {
+        println!(
+            "{:<18} {:>10} {:>10} {:>14.2} {:>14.2} {:>8}",
+            name,
+            m.param_count,
+            m.opt_state_count,
+            m.q_gemm_flops_fwd as f64 / 1e6,
+            m.fp_gemm_flops_fwd as f64 / 1e6,
+            m.metric
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedules(cli: &Cli) -> Result<()> {
+    cli.check_known(&["total", "cycles", "qmin", "qmax", "csv"])?;
+    let total = cli.usize_or("total", 800)?;
+    let n = cli.usize_or("cycles", 8)?;
+    let q_min = cli.f64_or("qmin", 3.0)?;
+    let q_max = cli.f64_or("qmax", 8.0)?;
+
+    println!(
+        "{:<10} {:<10} {:>10} {:>12}",
+        "schedule", "group", "mean q/qmax", "rel. cost"
+    );
+    for name in suite::suite_names() {
+        let s = suite::by_name(name, q_min, q_max, total, n)?;
+        println!(
+            "{:<10} {:<10} {:>10.4} {:>12.4}",
+            name,
+            group_of(name).label(),
+            s.mean_relative_precision(total),
+            relative_cost(&s, q_max, total),
+        );
+    }
+
+    if let Some(path) = cli.flag("csv") {
+        let mut w = cpt::metrics::CsvWriter::new(&["schedule", "t", "s_t", "q_t"]);
+        for name in suite::suite_names() {
+            let s = suite::by_name(name, q_min, q_max, total, n)?;
+            for t in 0..total {
+                w.row(&[
+                    name.to_string(),
+                    t.to_string(),
+                    format!("{:.4}", s.value_at(t)),
+                    s.q_at(t).to_string(),
+                ]);
+            }
+        }
+        w.write_to(path)?;
+        println!("wrote series to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "model", "schedule", "steps", "qmax", "qmin", "cycles", "trial",
+        "eval-every", "verbose", "curve-csv",
+    ])?;
+    let model_name = cli.require("model")?;
+    let sched_name = cli.str_or("schedule", "CR");
+    let rec = recipes::recipe(model_name)?;
+    let steps = cli.usize_or("steps", rec.steps)?;
+    let q_max = cli.f64_or("qmax", 8.0)?;
+    let _q_min = cli.f64_or("qmin", rec.q_min)?;
+    let cycles = cli.usize_or("cycles", rec.cycles)?;
+    let trial = cli.usize_or("trial", 0)?;
+    let eval_every = cli.usize_or("eval-every", (steps / 8).max(1))?;
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let model = rt.load_model(manifest.model(model_name)?)?;
+    let out = coordinator::run_one(
+        &model, model_name, &sched_name, q_max, trial, steps, cycles,
+        eval_every, cli.bool("verbose"),
+    )?;
+    println!(
+        "{model_name} {sched_name} q_max={q_max}: metric={:.4} eval_loss={:.4} ({:.3} GBitOps, {:.1}s exec)",
+        out.metric, out.eval_loss, out.gbitops, out.exec_seconds
+    );
+    if let Some(path) = cli.flag("curve-csv") {
+        let rep = SweepReport::new("train", "metric", rec.higher_is_better);
+        rep.write_curves_csv(&[out], path)?;
+        println!("wrote loss curve to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "model", "schedules", "qmaxes", "trials", "steps", "cycles", "csv",
+        "verbose",
+    ])?;
+    let model = cli.require("model")?;
+    let rec = recipes::recipe(model)?;
+    let mut spec = SweepSpec::new(model);
+    if let Some(_) = cli.flag("schedules") {
+        spec.schedules = cli.list_or("schedules", &[]);
+    }
+    spec.q_maxes = cli
+        .list_or("qmaxes", &["6", "8"])
+        .iter()
+        .map(|s| s.parse::<f64>().context("bad qmax"))
+        .collect::<Result<_>>()?;
+    spec.trials = cli.usize_or("trials", 1)?;
+    spec.steps = cli.flag("steps").map(|s| s.parse()).transpose()?;
+    spec.cycles = cli.flag("cycles").map(|s| s.parse()).transpose()?;
+    spec.verbose = cli.bool("verbose");
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let rows = aggregate(&outs);
+    let rep = SweepReport::new(model, "metric", rec.higher_is_better);
+    rep.print(&rows);
+    let csv = cli.str_or(
+        "csv",
+        &results_dir().join(format!("sweep_{model}.csv")).to_string_lossy(),
+    );
+    rep.write_csv(&rows, &csv)?;
+    println!("\nwrote {csv}");
+    Ok(())
+}
+
+fn cmd_range_test(cli: &Cli) -> Result<()> {
+    cli.check_known(&["model", "qlo", "qhi", "probe-steps"])?;
+    let model_name = cli.require("model")?;
+    let q_lo = cli.usize_or("qlo", 2)? as u32;
+    let q_hi = cli.usize_or("qhi", 8)? as u32;
+    let probe_steps = cli.usize_or("probe-steps", 32)?;
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let model = rt.load_model(manifest.model(model_name)?)?;
+    let rec = recipes::recipe(model_name)?;
+
+    let outcome = range_test(
+        |q: u32| {
+            let out = coordinator::run_one(
+                &model, model_name, "STATIC", q as f64, 0, probe_steps,
+                rec.cycles, 0, false,
+            )?;
+            let first = out
+                .history
+                .losses
+                .first()
+                .map(|&(_, l)| l)
+                .unwrap_or(f32::NAN);
+            let last = out.history.tail_train_loss(4);
+            println!(
+                "  probe q={q}: loss {first:.4} -> {last:.4}"
+            );
+            Ok((first, last))
+        },
+        q_lo,
+        q_hi,
+        0.02,
+    )?;
+    println!(
+        "range test for {model_name}: q_min = {} (paper protocol §3.1)",
+        outcome.q_min
+    );
+    Ok(())
+}
+
+fn cmd_preset(cli: &Cli) -> Result<()> {
+    cli.check_known(&["file"])?;
+    let path = cli.require("file")?;
+    let doc = TomlDoc::load(path)?;
+    let s = doc
+        .section("sweep")
+        .context("preset needs a [sweep] section")?;
+    let model = s
+        .get("model")
+        .context("[sweep] needs model")?
+        .as_str()?
+        .to_string();
+    let rec = recipes::recipe(&model)?;
+    let mut spec = SweepSpec::new(&model);
+    if let Some(v) = s.get("schedules") {
+        spec.schedules = v
+            .as_list()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = s.get("q_maxes") {
+        spec.q_maxes =
+            v.as_list()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?;
+    }
+    if let Some(v) = s.get("trials") {
+        spec.trials = v.as_usize()?;
+    }
+    if let Some(v) = s.get("steps") {
+        spec.steps = Some(v.as_usize()?);
+    }
+    if let Some(v) = s.get("cycles") {
+        spec.cycles = Some(v.as_usize()?);
+    }
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(artifacts_dir())?;
+    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let rows = aggregate(&outs);
+    let title = doc
+        .get("", "title")
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("preset")
+        .to_string();
+    let rep = SweepReport::new(&title, "metric", rec.higher_is_better);
+    rep.print(&rows);
+    let csv = results_dir().join(format!("{title}.csv"));
+    rep.write_csv(&rows, &csv)?;
+    println!("\nwrote {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Run metrics: training history, aggregation over trials, CSV emission.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Per-run training history.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    /// (step, train loss) — one entry per optimizer step.
+    pub losses: Vec<(usize, f32)>,
+    /// (step, train metric).
+    pub metrics: Vec<(usize, f32)>,
+    /// (step, eval loss, eval metric) at each evaluation point.
+    pub evals: Vec<(usize, f32, f32)>,
+    /// (step, q_t) — the precision actually used.
+    pub precisions: Vec<(usize, u32)>,
+    /// cumulative effective GBitOps at the end of the run.
+    pub gbitops: f64,
+    /// wall-clock seconds spent in executable calls.
+    pub exec_seconds: f64,
+    /// wall-clock seconds for the full run.
+    pub total_seconds: f64,
+}
+
+impl History {
+    pub fn final_eval_metric(&self) -> Option<f32> {
+        self.evals.last().map(|&(_, _, m)| m)
+    }
+
+    pub fn final_eval_loss(&self) -> Option<f32> {
+        self.evals.last().map(|&(_, l, _)| l)
+    }
+
+    /// Best (max) eval metric over the run.
+    pub fn best_eval_metric(&self) -> Option<f32> {
+        self.evals
+            .iter()
+            .map(|&(_, _, m)| m)
+            .fold(None, |acc, m| Some(acc.map_or(m, |a: f32| a.max(m))))
+    }
+
+    /// Mean train loss over the last `n` recorded steps.
+    pub fn tail_train_loss(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Simple CSV writer (csv crate unavailable offline).
+pub struct CsvWriter {
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{}", header.join(","));
+        CsvWriter { buf, cols: header.len() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        let _ = writeln!(self.buf, "{}", escaped.join(","));
+    }
+
+    pub fn write_to(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, &self.buf)
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_accessors() {
+        let mut h = History::default();
+        assert!(h.final_eval_metric().is_none());
+        h.evals.push((10, 2.0, 0.5));
+        h.evals.push((20, 1.5, 0.7));
+        h.evals.push((30, 1.6, 0.65));
+        assert_eq!(h.final_eval_metric(), Some(0.65));
+        assert_eq!(h.best_eval_metric(), Some(0.7));
+        h.losses = vec![(0, 4.0), (1, 2.0), (2, 1.0)];
+        assert!((h.tail_train_loss(2) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["x,y".into(), "pla\"in".into()]);
+        assert_eq!(w.as_str(), "a,b\n\"x,y\",\"pla\"\"in\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Effective BitOps accounting — the paper's training-cost metric (§4.1):
+//!
+//!   BitOps = FLOP_{a×b} · (Bit_a / 32) · (Bit_b / 32)
+//!
+//! for each dot product, summed over the run. Per the paper's protocol:
+//!
+//! * forward GEMMs run with both operands at the schedule's q_t;
+//! * backward GEMMs (2 per forward GEMM: dA and dW) contract the q_bwd-
+//!   quantized cotangent against a q_t-quantized residual, so each costs
+//!   FLOPs · (q_bwd/32)(q_t/32) — and q_bwd is pinned to q_max (§3.1);
+//! * full-precision GEMMs (FP-Agg aggregation, attention scores) cost
+//!   FLOPs · 1 in both directions.
+//!
+//! GEMM FLOP counts per model come from the artifact manifest (counted at
+//! trace time by python/compile/models/common.py).
+
+use crate::runtime::ModelSpec;
+
+/// Accumulates effective BitOps over a training run.
+#[derive(Clone, Debug)]
+pub struct BitOpsAccountant {
+    q_flops_fwd: f64,
+    fp_flops_fwd: f64,
+    q_bwd: f64,
+    total: f64,
+}
+
+/// Fold a model's aggregation GEMMs into effective FLOP counts at the
+/// given graph `density` (nnz / n² of the aggregation operator). On real
+/// graphs aggregation is a sparse matvec whose cost scales with the edge
+/// count — the paper calls it "a negligible portion of the GNN's forward
+/// pass" — while our simulator runs it as a dense GEMM; scaling by
+/// density restores the paper's accounting.
+pub fn effective_flops(spec: &ModelSpec, density: f64) -> (f64, f64) {
+    let q = spec.q_gemm_flops_fwd as f64
+        + density * spec.agg_q_gemm_flops_fwd as f64;
+    let fp = spec.fp_gemm_flops_fwd as f64
+        + density * spec.agg_fp_gemm_flops_fwd as f64;
+    (q, fp)
+}
+
+/// Final tally, in GBitOps (the unit the paper's figures use).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BitOpsTotal {
+    pub gbitops: f64,
+}
+
+impl BitOpsAccountant {
+    /// `q_bwd` is the fixed backward precision (= q_max per the paper).
+    /// `agg_density` rescales GNN aggregation GEMMs (1.0 for non-GNNs).
+    pub fn new(spec: &ModelSpec, q_bwd: f64, agg_density: f64) -> Self {
+        let (q_flops_fwd, fp_flops_fwd) = effective_flops(spec, agg_density);
+        BitOpsAccountant { q_flops_fwd, fp_flops_fwd, q_bwd, total: 0.0 }
+    }
+
+    /// Construct from raw FLOP counts (tests / analytic comparisons).
+    pub fn from_flops(q_flops_fwd: f64, fp_flops_fwd: f64, q_bwd: f64) -> Self {
+        BitOpsAccountant { q_flops_fwd, fp_flops_fwd, q_bwd, total: 0.0 }
+    }
+
+    /// Account one training step at forward precision `q_t`.
+    pub fn record_step(&mut self, q_t: f64) {
+        let rq = q_t / 32.0;
+        let rb = self.q_bwd / 32.0;
+        // forward + two backward GEMMs per quantized GEMM
+        let q_cost = self.q_flops_fwd * (rq * rq + 2.0 * rb * rq);
+        // FP GEMMs: fwd + 2 bwd at full precision
+        let fp_cost = self.fp_flops_fwd * 3.0;
+        self.total += q_cost + fp_cost;
+    }
+
+    /// Account a whole chunk of steps.
+    pub fn record_steps(&mut self, qs: &[f32]) {
+        for &q in qs {
+            self.record_step(q as f64);
+        }
+    }
+
+    pub fn total(&self) -> BitOpsTotal {
+        BitOpsTotal { gbitops: self.total / 1e9 }
+    }
+
+    /// Cost of one step at precision q (without recording).
+    pub fn step_cost(&self, q_t: f64) -> f64 {
+        let rq = q_t / 32.0;
+        let rb = self.q_bwd / 32.0;
+        self.q_flops_fwd * (rq * rq + 2.0 * rb * rq) + self.fp_flops_fwd * 3.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{suite, Schedule};
+
+    #[test]
+    fn formula_matches_paper() {
+        // one GEMM of 1000 FLOPs at 8/8 bits: 1000 * (8/32)^2 = 62.5
+        let mut acc = BitOpsAccountant::from_flops(1000.0, 0.0, 8.0);
+        acc.record_step(8.0);
+        let fwd = 1000.0 * (8.0 / 32.0) * (8.0 / 32.0);
+        let bwd = 2.0 * 1000.0 * (8.0 / 32.0) * (8.0 / 32.0);
+        assert!((acc.total().gbitops * 1e9 - (fwd + bwd)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lower_precision_costs_less() {
+        let acc = BitOpsAccountant::from_flops(1e6, 0.0, 8.0);
+        assert!(acc.step_cost(3.0) < acc.step_cost(4.0));
+        assert!(acc.step_cost(4.0) < acc.step_cost(8.0));
+    }
+
+    #[test]
+    fn fp_gemms_are_precision_independent() {
+        let acc = BitOpsAccountant::from_flops(0.0, 1e6, 8.0);
+        assert_eq!(acc.step_cost(3.0), acc.step_cost(8.0));
+    }
+
+    #[test]
+    fn schedule_total_matches_relative_cost() {
+        // BitOps of a CPT run / BitOps of the static run must equal the
+        // schedule::cost::relative_cost prediction (q-GEMMs only).
+        let total_iters = 2000;
+        let sched = suite::by_name("CR", 3.0, 8.0, total_iters, 8).unwrap();
+
+        let mut a = BitOpsAccountant::from_flops(1e6, 0.0, 8.0);
+        a.record_steps(&sched.q_vec(0, total_iters));
+        let mut b = BitOpsAccountant::from_flops(1e6, 0.0, 8.0);
+        b.record_steps(&Schedule::static_q(8.0).q_vec(0, total_iters));
+
+        let measured = a.total().gbitops / b.total().gbitops;
+        let predicted =
+            crate::schedule::cost::relative_cost(&sched, 8.0, total_iters);
+        assert!(
+            (measured - predicted).abs() < 1e-9,
+            "measured {measured} vs predicted {predicted}"
+        );
+    }
+}

@@ -1,0 +1,7 @@
+//! Quantization accounting and tooling (paper §4.1).
+
+pub mod bitops;
+pub mod range_test;
+
+pub use bitops::{BitOpsAccountant, BitOpsTotal};
+pub use range_test::{range_test, RangeTestOutcome, RangeTestProbe};

@@ -1,0 +1,89 @@
+//! Precision range test (paper §3.1 / CPT [5] §3.3): discover q_min.
+//!
+//! DNN training cannot progress when precision is too low; CPT therefore
+//! derives q_min per model-dataset pair by probing short training runs at
+//! increasing static precision and picking the lowest bit-width whose
+//! loss decreases meaningfully. The probe closure abstracts "run N steps
+//! at static precision q and report (initial_loss, final_loss)" so the
+//! test works for every model the runtime can load (and is unit-testable
+//! without a backend).
+
+use anyhow::Result;
+
+/// A probe runs a short training burst at static precision `q` and
+/// returns (initial loss, final loss).
+pub trait RangeTestProbe {
+    fn probe(&mut self, q: u32) -> Result<(f32, f32)>;
+}
+
+impl<F: FnMut(u32) -> Result<(f32, f32)>> RangeTestProbe for F {
+    fn probe(&mut self, q: u32) -> Result<(f32, f32)> {
+        self(q)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RangeTestOutcome {
+    /// The discovered minimum workable precision.
+    pub q_min: u32,
+    /// (q, initial loss, final loss, improved) per probed bit-width.
+    pub probes: Vec<(u32, f32, f32, bool)>,
+}
+
+/// Sweep q from `q_lo` up to `q_hi`; return the first precision at which
+/// the probe's loss improves by at least `min_rel_improvement` (relative),
+/// following the CPT precision-range-test protocol.
+pub fn range_test<P: RangeTestProbe>(
+    mut probe: P,
+    q_lo: u32,
+    q_hi: u32,
+    min_rel_improvement: f32,
+) -> Result<RangeTestOutcome> {
+    let mut probes = Vec::new();
+    let mut q_min = q_hi;
+    for q in q_lo..=q_hi {
+        let (init, fin) = probe.probe(q)?;
+        let improved =
+            init.is_finite() && fin.is_finite() && fin < init * (1.0 - min_rel_improvement);
+        probes.push((q, init, fin, improved));
+        if improved {
+            q_min = q;
+            // the paper only needs q_min; stop probing to save compute.
+            break;
+        }
+    }
+    Ok(RangeTestOutcome { q_min, probes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_threshold() {
+        // synthetic probe: training "works" (loss halves) from 4 bits up
+        let probe = |q: u32| -> Result<(f32, f32)> {
+            Ok(if q >= 4 { (2.0, 1.0) } else { (2.0, 2.1) })
+        };
+        let out = range_test(probe, 2, 8, 0.05).unwrap();
+        assert_eq!(out.q_min, 4);
+        assert_eq!(out.probes.len(), 3); // probed 2, 3, 4
+    }
+
+    #[test]
+    fn falls_back_to_q_hi() {
+        let probe = |_q: u32| -> Result<(f32, f32)> { Ok((2.0, 2.0)) };
+        let out = range_test(probe, 2, 6, 0.05).unwrap();
+        assert_eq!(out.q_min, 6);
+        assert_eq!(out.probes.len(), 5);
+    }
+
+    #[test]
+    fn nan_losses_do_not_count_as_improvement() {
+        let probe = |q: u32| -> Result<(f32, f32)> {
+            Ok(if q < 5 { (2.0, f32::NAN) } else { (2.0, 1.0) })
+        };
+        let out = range_test(probe, 2, 8, 0.05).unwrap();
+        assert_eq!(out.q_min, 5);
+    }
+}

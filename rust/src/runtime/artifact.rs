@@ -1,0 +1,218 @@
+//! Artifact manifest: the contract between python/compile/aot.py (which
+//! writes it) and the Rust runtime (which loads models through it).
+//!
+//! The manifest makes the Rust side fully generic over models — shapes,
+//! dtypes, optimizer-state sizes and GEMM FLOP counts all come from here,
+//! so adding a model never touches Rust code.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a data input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+/// One data input of a model (per optimizer step).
+#[derive(Clone, Debug)]
+pub struct DataInput {
+    pub name: String,
+    /// Shape per step (without the chunk axis).
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// Stacked inputs gain a leading [K] axis in the train-chunk artifact
+    /// (a fresh minibatch per step); shared inputs (e.g. a full graph) are
+    /// passed once per chunk.
+    pub stacked: bool,
+}
+
+impl DataInput {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One named parameter tensor (for checkpointing / inspection).
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything the runtime needs to know about one exported model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub opt_state_count: usize,
+    pub chunk: usize,
+    pub optimizer: String,
+    pub metric: String,
+    /// Quantized-GEMM FLOPs in one forward pass over one training batch.
+    pub q_gemm_flops_fwd: u64,
+    /// Full-precision GEMM FLOPs (e.g. attention scores).
+    pub fp_gemm_flops_fwd: u64,
+    /// GNN aggregation GEMM FLOPs, quantized (Q-Agg). Dense-simulated in
+    /// the artifact; BitOps rescale by graph density (sparse on real
+    /// graphs).
+    pub agg_q_gemm_flops_fwd: u64,
+    /// GNN aggregation GEMM FLOPs, full precision (FP-Agg).
+    pub agg_fp_gemm_flops_fwd: u64,
+    pub data_inputs: Vec<DataInput>,
+    pub params: Vec<ParamEntry>,
+    /// HLO file paths, keyed by "init" / "train_chunk" / "train_step" /
+    /// "eval".
+    pub files: std::collections::BTreeMap<String, PathBuf>,
+}
+
+impl ModelSpec {
+    pub fn stacked_inputs(&self) -> impl Iterator<Item = &DataInput> {
+        self.data_inputs.iter().filter(|d| d.stacked)
+    }
+
+    pub fn shared_inputs(&self) -> impl Iterator<Item = &DataInput> {
+        self.data_inputs.iter().filter(|d| !d.stacked)
+    }
+
+    fn from_json(v: &Json, dir: &Path) -> Result<ModelSpec> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let mut files = std::collections::BTreeMap::new();
+        for (k, f) in v.get("files")?.as_obj()? {
+            files.insert(k.clone(), dir.join(f.as_str()?));
+        }
+        let data_inputs = v
+            .get("data_inputs")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Ok(DataInput {
+                    name: d.get("name")?.as_str()?.to_string(),
+                    shape: d
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                    dtype: DType::parse(d.get("dtype")?.as_str()?)?,
+                    stacked: d.get("stacked")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let params = v
+            .get("param_specs")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelSpec {
+            name,
+            param_count: v.get("param_count")?.as_usize()?,
+            opt_state_count: v.get("opt_state_count")?.as_usize()?,
+            chunk: v.get("chunk")?.as_usize()?,
+            optimizer: v.get("optimizer")?.as_str()?.to_string(),
+            metric: v.get("metric")?.as_str()?.to_string(),
+            q_gemm_flops_fwd: v.get("q_gemm_flops_fwd")?.as_f64()? as u64,
+            fp_gemm_flops_fwd: v.get("fp_gemm_flops_fwd")?.as_f64()? as u64,
+            agg_q_gemm_flops_fwd: v
+                .opt("agg_q_gemm_flops_fwd")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(0.0) as u64,
+            agg_fp_gemm_flops_fwd: v
+                .opt("agg_fp_gemm_flops_fwd")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .unwrap_or(0.0) as u64,
+            data_inputs,
+            params,
+            files,
+        })
+    }
+
+    /// Consistency checks tying the manifest to itself.
+    pub fn validate(&self) -> Result<()> {
+        let declared: usize = self
+            .params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum();
+        if declared != self.param_count {
+            bail!(
+                "{}: param_specs sum {declared} != param_count {}",
+                self.name,
+                self.param_count
+            );
+        }
+        for tag in ["init", "train_chunk", "train_step", "eval"] {
+            let f = self
+                .files
+                .get(tag)
+                .with_context(|| format!("{}: missing artifact '{tag}'", self.name))?;
+            if !f.exists() {
+                bail!("{}: artifact file missing: {}", self.name, f.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub models: std::collections::BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&src).context("manifest.json parse error")?;
+        let mut models = std::collections::BTreeMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            models.insert(name.clone(), ModelSpec::from_json(mv, dir)?);
+        }
+        Ok(Manifest { chunk: v.get("chunk")?.as_usize()?, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}

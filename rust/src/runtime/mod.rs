@@ -1,0 +1,303 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API) following the
+//! /opt/xla-example/load_hlo pattern: HLO *text* -> HloModuleProto ->
+//! XlaComputation -> compile -> execute. Text is the interchange format
+//! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized
+//! protos.
+//!
+//! `LoadedModel` exposes the four entry points of each exported model and
+//! owns the training state (flat param/opt vectors) as host literals
+//! between calls. The PJRT shim returns outputs as a single tuple literal
+//! (untuple_result=false in the C layer), so a host roundtrip per call is
+//! unavoidable; the train-*chunk* artifact amortizes it over K optimizer
+//! steps (see DESIGN.md §2 and EXPERIMENTS.md §Perf).
+
+pub mod artifact;
+
+pub use artifact::{DType, DataInput, Manifest, ModelSpec};
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Shared PJRT client (CPU). One per process.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact.
+    pub fn compile_file(&self, path: &Path) -> Result<CompiledFn> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", path.display()))?;
+        Ok(CompiledFn { exe, compile_ms: t0.elapsed().as_secs_f64() * 1e3 })
+    }
+
+    /// Load a model's four entry points from the manifest.
+    pub fn load_model(&self, spec: &ModelSpec) -> Result<LoadedModel> {
+        spec.validate()?;
+        let get = |tag: &str| -> Result<CompiledFn> {
+            self.compile_file(spec.files.get(tag).unwrap())
+        };
+        Ok(LoadedModel {
+            spec: spec.clone(),
+            init: get("init")?,
+            train_chunk: get("train_chunk")?,
+            train_step: get("train_step")?,
+            eval: get("eval")?,
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct CompiledFn {
+    exe: PjRtLoadedExecutable,
+    pub compile_ms: f64,
+}
+
+impl CompiledFn {
+    /// Execute and untuple the single tuple output into literals.
+    pub fn call(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let outs = self.exe.execute::<Literal>(args)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+/// f32 literal with shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {:?} wants {n} elems, got {}", shape, data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {:?} wants {n} elems, got {}", shape, data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Host-side tensor (used by the data generators).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) => s,
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostTensor::F32(s, d) => lit_f32(s, d),
+            HostTensor::I32(s, d) => lit_i32(s, d),
+        }
+    }
+
+    /// Stack K same-shaped tensors along a new leading axis.
+    pub fn stack(ts: &[HostTensor]) -> Result<HostTensor> {
+        let first = ts.first().context("empty stack")?;
+        let mut shape = vec![ts.len()];
+        shape.extend_from_slice(first.shape());
+        match first {
+            HostTensor::F32(s0, _) => {
+                let mut data =
+                    Vec::with_capacity(s0.iter().product::<usize>() * ts.len());
+                for t in ts {
+                    match t {
+                        HostTensor::F32(s, d) if s == s0 => {
+                            data.extend_from_slice(d)
+                        }
+                        _ => bail!("stack: mismatched tensors"),
+                    }
+                }
+                Ok(HostTensor::F32(shape, data))
+            }
+            HostTensor::I32(s0, _) => {
+                let mut data =
+                    Vec::with_capacity(s0.iter().product::<usize>() * ts.len());
+                for t in ts {
+                    match t {
+                        HostTensor::I32(s, d) if s == s0 => {
+                            data.extend_from_slice(d)
+                        }
+                        _ => bail!("stack: mismatched tensors"),
+                    }
+                }
+                Ok(HostTensor::I32(shape, data))
+            }
+        }
+    }
+}
+
+/// Training state: flat parameter + optimizer-state vectors, kept as host
+/// literals between chunk calls.
+pub struct TrainState {
+    pub params: Literal,
+    pub opt_state: Literal,
+    /// Optimizer steps taken so far.
+    pub step: usize,
+}
+
+/// A fully-loaded model with its four entry points.
+pub struct LoadedModel {
+    pub spec: ModelSpec,
+    pub init: CompiledFn,
+    pub train_chunk: CompiledFn,
+    pub train_step: CompiledFn,
+    pub eval: CompiledFn,
+}
+
+/// Per-chunk step results.
+#[derive(Clone, Debug)]
+pub struct ChunkResult {
+    pub losses: Vec<f32>,
+    pub metrics: Vec<f32>,
+}
+
+impl LoadedModel {
+    /// Run the init artifact; returns fresh training state.
+    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let outs = self.init.call(&[scalar_i32(seed)])?;
+        if outs.len() != 2 {
+            bail!("init returned {} outputs, want 2", outs.len());
+        }
+        let mut it = outs.into_iter();
+        Ok(TrainState {
+            params: it.next().unwrap(),
+            opt_state: it.next().unwrap(),
+            step: 0,
+        })
+    }
+
+    /// Advance `k` optimizer steps (k = spec.chunk for the chunk artifact,
+    /// 1 for the step artifact). `stacked` are the K-step minibatch
+    /// tensors (with leading K axis for the chunk call), `shared` the
+    /// per-chunk tensors, `q_fwd`/`lr`/`seeds` the per-step vectors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance(
+        &self,
+        state: &mut TrainState,
+        k: usize,
+        stacked: Vec<Literal>,
+        shared: Vec<Literal>,
+        q_fwd: &[f32],
+        lr: &[f32],
+        seeds: &[i32],
+        q_bwd: f32,
+    ) -> Result<ChunkResult> {
+        if q_fwd.len() != k || lr.len() != k || seeds.len() != k {
+            bail!(
+                "advance(k={k}): vector lengths q={} lr={} seeds={}",
+                q_fwd.len(),
+                lr.len(),
+                seeds.len()
+            );
+        }
+        let exe = if k == self.spec.chunk {
+            &self.train_chunk
+        } else if k == 1 {
+            &self.train_step
+        } else {
+            bail!("advance: k={k} (chunk={}, step=1 only)", self.spec.chunk)
+        };
+
+        let mut args: Vec<Literal> =
+            Vec::with_capacity(stacked.len() + shared.len() + 6);
+        args.push(clone_literal(&state.params)?);
+        args.push(clone_literal(&state.opt_state)?);
+        args.extend(stacked);
+        args.extend(shared);
+        args.push(lit_f32(&[k], q_fwd)?);
+        args.push(lit_f32(&[k], lr)?);
+        args.push(lit_i32(&[k], seeds)?);
+        args.push(scalar_f32(q_bwd));
+
+        let outs = exe.call(&args)?;
+        if outs.len() != 4 {
+            bail!("train returned {} outputs, want 4", outs.len());
+        }
+        let mut it = outs.into_iter();
+        state.params = it.next().unwrap();
+        state.opt_state = it.next().unwrap();
+        state.step += k;
+        let losses = it.next().unwrap().to_vec::<f32>()?;
+        let metrics = it.next().unwrap().to_vec::<f32>()?;
+        Ok(ChunkResult { losses, metrics })
+    }
+
+    /// Evaluate on one batch; returns (loss, metric).
+    pub fn evaluate(
+        &self,
+        state: &TrainState,
+        data: Vec<Literal>,
+    ) -> Result<(f32, f32)> {
+        let mut args = Vec::with_capacity(data.len() + 1);
+        args.push(clone_literal(&state.params)?);
+        args.extend(data);
+        let outs = self.eval.call(&args)?;
+        if outs.len() != 2 {
+            bail!("eval returned {} outputs, want 2", outs.len());
+        }
+        let loss = outs[0].get_first_element::<f32>()?;
+        let metric = outs[1].get_first_element::<f32>()?;
+        Ok((loss, metric))
+    }
+}
+
+/// The xla crate's Literal has no Clone; round-trip through host data.
+pub fn clone_literal(l: &Literal) -> Result<Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>()?;
+            Ok(Literal::vec1(&v).reshape(&dims)?)
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>()?;
+            Ok(Literal::vec1(&v).reshape(&dims)?)
+        }
+        t => bail!("clone_literal: unsupported type {t:?}"),
+    }
+}

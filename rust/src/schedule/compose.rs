@@ -1,0 +1,214 @@
+//! Schedule composition — generalizes the paper's suite beyond its ten
+//! members (paper §6 points toward richer schedules; these combinators
+//! cover the variants the text discusses but does not sweep):
+//!
+//! * [`Composed::warmup`] — hold `q_max` for W steps, then run an inner
+//!   schedule (the §5 remedy: "delaying the use of low precision until
+//!   later during the training process");
+//! * [`Composed::sequence`] — concatenate schedules over step spans
+//!   (e.g. aggressive early, conservative late);
+//! * [`Composed::clamp`] — impose a floor/ceiling on another schedule
+//!   (e.g. raise the effective q_min during the critical period only);
+//! * [`Composed::sampled`] — re-evaluate the inner schedule every `rate`
+//!   steps (the sampling-rate knob of REX [14]; paper footnote 1 argues
+//!   integer rounding makes it less pertinent — this makes that claim
+//!   testable).
+//!
+//! All combinators preserve the `q_at = round(value_at)` contract and are
+//! accepted anywhere a base [`Schedule`] is (`trainer`, benches) via
+//! [`AnySchedule`].
+
+use super::Schedule;
+
+/// A composed precision schedule.
+#[derive(Clone, Debug)]
+pub enum Composed {
+    Base(Schedule),
+    /// q_max for `steps`, then the inner schedule (shifted).
+    Warmup { q: f64, steps: usize, inner: Box<Composed> },
+    /// Concatenation: each segment runs for its span of steps.
+    Sequence { segments: Vec<(usize, Composed)> },
+    /// Clamp the inner schedule's value into [lo, hi].
+    Clamp { lo: f64, hi: f64, inner: Box<Composed> },
+    /// Hold the inner schedule's value constant within windows of `rate`
+    /// steps (sampling rate; REX [14]).
+    Sampled { rate: usize, inner: Box<Composed> },
+}
+
+impl Composed {
+    pub fn base(s: Schedule) -> Composed {
+        Composed::Base(s)
+    }
+
+    pub fn warmup(q: f64, steps: usize, inner: Composed) -> Composed {
+        Composed::Warmup { q, steps, inner: Box::new(inner) }
+    }
+
+    pub fn sequence(segments: Vec<(usize, Composed)>) -> Composed {
+        Composed::Sequence { segments }
+    }
+
+    pub fn clamp(lo: f64, hi: f64, inner: Composed) -> Composed {
+        Composed::Clamp { lo, hi, inner: Box::new(inner) }
+    }
+
+    pub fn sampled(rate: usize, inner: Composed) -> Composed {
+        Composed::Sampled { rate: rate.max(1), inner: Box::new(inner) }
+    }
+
+    /// Continuous value S(t).
+    pub fn value_at(&self, t: usize) -> f64 {
+        match self {
+            Composed::Base(s) => s.value_at(t),
+            Composed::Warmup { q, steps, inner } => {
+                if t < *steps {
+                    *q
+                } else {
+                    inner.value_at(t - steps)
+                }
+            }
+            Composed::Sequence { segments } => {
+                let mut off = 0usize;
+                for (span, seg) in segments {
+                    if t < off + span {
+                        return seg.value_at(t - off);
+                    }
+                    off += span;
+                }
+                // past the end: hold the last segment's final value
+                match segments.last() {
+                    Some((span, seg)) => seg.value_at(span.saturating_sub(1)),
+                    None => 32.0,
+                }
+            }
+            Composed::Clamp { lo, hi, inner } => {
+                inner.value_at(t).clamp(*lo, *hi)
+            }
+            Composed::Sampled { rate, inner } => {
+                inner.value_at(t - t % rate)
+            }
+        }
+    }
+
+    /// Integer precision at step t (same contract as [`Schedule::q_at`]).
+    pub fn q_at(&self, t: usize) -> u32 {
+        self.value_at(t).round().max(1.0) as u32
+    }
+
+    pub fn q_vec(&self, start: usize, len: usize) -> Vec<f32> {
+        (start..start + len).map(|t| self.q_at(t) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{suite, Cycles, Profile};
+    use crate::util::propcheck::propcheck;
+    use crate::prop_assert;
+
+    fn cr(total: usize) -> Schedule {
+        suite::by_name("CR", 3.0, 8.0, total, 8).unwrap()
+    }
+
+    #[test]
+    fn warmup_holds_then_delegates() {
+        let c = Composed::warmup(8.0, 100, Composed::base(cr(400)));
+        for t in 0..100 {
+            assert_eq!(c.q_at(t), 8);
+        }
+        // after warmup, matches the inner schedule shifted by 100
+        let inner = cr(400);
+        for t in 100..500 {
+            assert_eq!(c.q_at(t), inner.q_at(t - 100), "t={t}");
+        }
+    }
+
+    #[test]
+    fn warmup_fixes_critical_period_exposure() {
+        // the §5 remedy: a warmup composed over an aggressive schedule
+        // spends zero early steps below q_max
+        let aggressive = suite::by_name("RR", 2.0, 8.0, 400, 8).unwrap();
+        let c = Composed::warmup(8.0, 120, Composed::base(aggressive));
+        let early_low = (0..120).filter(|&t| c.q_at(t) < 8).count();
+        assert_eq!(early_low, 0);
+    }
+
+    #[test]
+    fn sequence_concatenates_and_holds_tail() {
+        let c = Composed::sequence(vec![
+            (100, Composed::base(Schedule::static_q(4.0))),
+            (100, Composed::base(Schedule::static_q(8.0))),
+        ]);
+        assert_eq!(c.q_at(0), 4);
+        assert_eq!(c.q_at(99), 4);
+        assert_eq!(c.q_at(100), 8);
+        assert_eq!(c.q_at(199), 8);
+        assert_eq!(c.q_at(10_000), 8); // holds final value
+    }
+
+    #[test]
+    fn clamp_bounds_values() {
+        propcheck(100, |rng| {
+            let total = 200 + rng.below(400) as usize;
+            let c = Composed::clamp(4.0, 7.0, Composed::base(cr(total)));
+            for t in 0..total {
+                let q = c.q_at(t);
+                prop_assert!((4..=7).contains(&q), "q={q} at t={t}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampled_is_piecewise_constant() {
+        let c = Composed::sampled(16, Composed::base(cr(320)));
+        for t in 0..320 {
+            assert_eq!(c.q_at(t), c.q_at(t - t % 16), "t={t}");
+        }
+    }
+
+    #[test]
+    fn sampling_rate_barely_changes_integer_schedule() {
+        // paper footnote 1: rounding makes the sampling rate less
+        // pertinent for precision schedules. Quantify: a rate-8 sampled
+        // CR differs from plain CR on a small fraction of steps.
+        let total = 800;
+        let plain = Composed::base(cr(total));
+        let sampled = Composed::sampled(8, Composed::base(cr(total)));
+        let diff = (0..total)
+            .filter(|&t| plain.q_at(t) != sampled.q_at(t))
+            .count();
+        assert!(
+            (diff as f64) < 0.25 * total as f64,
+            "sampling changed {diff}/{total} steps"
+        );
+    }
+
+    #[test]
+    fn composition_nests() {
+        let s = Schedule::cpt(
+            Profile::Rex, Cycles::Repeated, 8, 2.0, 8.0, 400,
+        )
+        .unwrap();
+        let c = Composed::warmup(
+            8.0,
+            50,
+            Composed::clamp(3.0, 8.0, Composed::sampled(4, Composed::base(s))),
+        );
+        for t in 0..500 {
+            let q = c.q_at(t);
+            assert!((3..=8).contains(&q), "q={q} at t={t}");
+        }
+        assert_eq!(c.q_at(0), 8);
+    }
+
+    #[test]
+    fn q_vec_matches_pointwise() {
+        let c = Composed::warmup(8.0, 10, Composed::base(cr(100)));
+        let v = c.q_vec(5, 20);
+        for (i, &q) in v.iter().enumerate() {
+            assert_eq!(q as u32, c.q_at(5 + i));
+        }
+    }
+}

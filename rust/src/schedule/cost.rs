@@ -1,0 +1,91 @@
+//! Analytic training-cost model for schedules.
+//!
+//! The exact per-run BitOps number comes from `quant::bitops` (it needs the
+//! model's GEMM FLOP counts). This module provides the *relative* cost of a
+//! schedule against the static-q_max baseline, which is model-independent
+//! under the paper's BitOps formula:
+//!
+//!   fwd  cost(t) ∝ (q_t / 32)^2            (both GEMM operands at q_t)
+//!   bwd  cost(t) ∝ 2 · (q_bwd/32)(q_t/32)  (cotangent at fixed q_bwd =
+//!                                           q_max, residuals at q_t)
+//!
+//! so   relative_cost = Σ_t [q_t² + 2·q_max·q_t] / Σ_t [q_max² + 2·q_max²].
+
+use super::Schedule;
+
+/// Relative training cost (quantized-GEMM BitOps) of `schedule` vs a
+/// static q_max baseline, forward + backward, over `total_iters`.
+pub fn relative_cost(schedule: &Schedule, q_max: f64, total_iters: usize) -> f64 {
+    let mut num = 0.0;
+    for t in 0..total_iters {
+        let q = schedule.q_at(t) as f64;
+        num += q * q + 2.0 * q_max * q;
+    }
+    let den = total_iters as f64 * (q_max * q_max + 2.0 * q_max * q_max);
+    num / den
+}
+
+/// Forward-pass-only relative cost (used for inference-cost style
+/// comparisons and ablation reporting).
+pub fn relative_cost_fwd_only(
+    schedule: &Schedule,
+    q_max: f64,
+    total_iters: usize,
+) -> f64 {
+    let mut num = 0.0;
+    for t in 0..total_iters {
+        let q = schedule.q_at(t) as f64;
+        num += q * q;
+    }
+    num / (total_iters as f64 * q_max * q_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::suite::{by_name, group_of, suite_names, Group};
+
+    #[test]
+    fn static_baseline_costs_one() {
+        let s = Schedule::static_q(8.0);
+        assert!((relative_cost(&s, 8.0, 1000) - 1.0).abs() < 1e-12);
+        assert!((relative_cost_fwd_only(&s, 8.0, 1000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_suite_schedule_saves_compute() {
+        for name in suite_names() {
+            let s = by_name(name, 3.0, 8.0, 4000, 8).unwrap();
+            let c = relative_cost(&s, 8.0, 4000);
+            assert!(c < 1.0, "{name}: relative cost {c} >= 1");
+            assert!(c > 0.2, "{name}: implausibly low cost {c}");
+        }
+    }
+
+    #[test]
+    fn groups_order_cost() {
+        let total = 8000;
+        let cost = |n: &str| {
+            relative_cost(&by_name(n, 3.0, 8.0, total, 8).unwrap(), 8.0, total)
+        };
+        let avg = |g: Group| {
+            let names: Vec<_> = suite_names()
+                .into_iter()
+                .filter(|n| group_of(n) == g)
+                .collect();
+            names.iter().map(|n| cost(n)).sum::<f64>() / names.len() as f64
+        };
+        let (l, m, s) = (avg(Group::Large), avg(Group::Medium), avg(Group::Small));
+        assert!(l < m && m < s, "cost groups broken: {l:.3} {m:.3} {s:.3}");
+    }
+
+    #[test]
+    fn deficit_cost_between_bounds() {
+        // a window at q_min must cost less than static q_max, more than
+        // static q_min
+        let d = Schedule::deficit(3.0, 8.0, 0, 500);
+        let c = relative_cost(&d, 8.0, 1000);
+        let lo = relative_cost(&Schedule::static_q(3.0), 8.0, 1000);
+        assert!(c < 1.0 && c > lo, "c={c} lo={lo}");
+    }
+}

@@ -1,0 +1,412 @@
+//! CPT schedules — the paper's core contribution (§3).
+//!
+//! A schedule maps a training iteration t ∈ [0, T) to a precision
+//! q_t = round(S(t)) ∈ [q_min, q_max]. Schedules are built by the paper's
+//! three-step decomposition:
+//!
+//!   1. choose a *profile* (cosine / linear / exponential / REX),
+//!   2. choose the number of *cycles* n,
+//!   3. choose *repeated* or *triangular* cycles (and, for asymmetric
+//!      profiles, whether the triangular reflection is vertical or
+//!      horizontal).
+//!
+//! Repeated cycles restart at q_min each cycle and grow to q_max.
+//! Triangular cycles alternate direction — (down, up) pairs — so adjacent
+//! cycles vary precision in opposite directions and the final (up) cycle
+//! ends at q_max, per the paper's convergence constraint. The down cycle
+//! is the profile's reflection:
+//!   vertical   v(u) = 1 - f(u)      (mirror precision axis)
+//!   horizontal v(u) = f(1 - u)      (mirror time axis)
+//! For symmetric profiles these coincide (paper footnote 2) — so the suite
+//! has 10 distinct members, not 12.
+//!
+//! Besides the CPT suite, this module provides the `Static` baseline (SBM-
+//! style fixed precision), `Deficit` windows for the critical-learning-
+//! period experiments (§5), and generic composition.
+
+pub mod compose;
+pub mod cost;
+pub mod profiles;
+pub mod suite;
+
+pub use compose::Composed;
+pub use cost::{relative_cost, relative_cost_fwd_only};
+pub use profiles::Profile;
+pub use suite::{group_of, suite_names, Group};
+
+use anyhow::{bail, Result};
+
+/// Reflection used for the "down" cycles of a triangular schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reflection {
+    Vertical,
+    Horizontal,
+}
+
+/// Cycle arrangement (paper §3.2 step three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cycles {
+    /// Every cycle grows q_min -> q_max.
+    Repeated,
+    /// (down, up) pairs; requires an even cycle count.
+    Triangular(Reflection),
+}
+
+/// A fully-specified precision schedule over `total_iters` iterations.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// Fixed precision (the SBM-inspired static baseline, paper §4.1).
+    Static { q: f64 },
+    /// Cyclic precision training.
+    Cpt {
+        profile: Profile,
+        cycles: Cycles,
+        n: usize,
+        q_min: f64,
+        q_max: f64,
+        total_iters: usize,
+    },
+    /// Critical-learning-period deficit (paper §5): `q_low` inside
+    /// [start, end), `q_high` outside.
+    Deficit {
+        q_low: f64,
+        q_high: f64,
+        start: usize,
+        end: usize,
+    },
+    /// §5 remedy: hold `q_warm` for the first `steps` iterations (the
+    /// critical period), then run the inner schedule shifted — "simply
+    /// delaying the use of low precision until later during training".
+    WithWarmup {
+        q_warm: f64,
+        steps: usize,
+        inner: Box<Schedule>,
+    },
+}
+
+impl Schedule {
+    /// Build a CPT schedule, validating the paper's constraints.
+    pub fn cpt(
+        profile: Profile,
+        cycles: Cycles,
+        n: usize,
+        q_min: f64,
+        q_max: f64,
+        total_iters: usize,
+    ) -> Result<Schedule> {
+        if q_min > q_max {
+            bail!("q_min {q_min} > q_max {q_max}");
+        }
+        if n == 0 {
+            bail!("cycle count must be >= 1");
+        }
+        if matches!(cycles, Cycles::Triangular(_)) && n % 2 != 0 {
+            bail!("triangular schedules need an even cycle count (got {n})");
+        }
+        if total_iters == 0 {
+            bail!("total_iters must be >= 1");
+        }
+        Ok(Schedule::Cpt { profile, cycles, n, q_min, q_max, total_iters })
+    }
+
+    pub fn static_q(q: f64) -> Schedule {
+        Schedule::Static { q }
+    }
+
+    pub fn deficit(q_low: f64, q_high: f64, start: usize, end: usize) -> Schedule {
+        Schedule::Deficit { q_low, q_high, start, end }
+    }
+
+    pub fn with_warmup(q_warm: f64, steps: usize, inner: Schedule) -> Schedule {
+        Schedule::WithWarmup { q_warm, steps, inner: Box::new(inner) }
+    }
+
+    /// The continuous schedule value S(t) (before integer rounding).
+    pub fn value_at(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::WithWarmup { q_warm, steps, ref inner } => {
+                if t < steps {
+                    q_warm
+                } else {
+                    inner.value_at(t - steps)
+                }
+            }
+            Schedule::Static { q } => q,
+            Schedule::Deficit { q_low, q_high, start, end } => {
+                if t >= start && t < end {
+                    q_low
+                } else {
+                    q_high
+                }
+            }
+            Schedule::Cpt { profile, cycles, n, q_min, q_max, total_iters } => {
+                let t = t.min(total_iters - 1);
+                // Position within the cycle structure. Guard the final
+                // iteration to land exactly on u = 1 of the last cycle.
+                let cycle_len = total_iters as f64 / n as f64;
+                let mut cycle = ((t as f64) / cycle_len).floor() as usize;
+                if cycle >= n {
+                    cycle = n - 1;
+                }
+                let u0 = (t as f64 - cycle as f64 * cycle_len)
+                    / (cycle_len - 1.0).max(1.0);
+                let u = u0.clamp(0.0, 1.0);
+                let v = match cycles {
+                    Cycles::Repeated => profile.eval(u),
+                    Cycles::Triangular(refl) => {
+                        // (down, up) pairs: even-indexed cycles descend,
+                        // odd-indexed ascend; the last cycle (n even) is
+                        // an ascent ending at q_max.
+                        if cycle % 2 == 0 {
+                            match refl {
+                                Reflection::Vertical => 1.0 - profile.eval(u),
+                                Reflection::Horizontal => profile.eval(1.0 - u),
+                            }
+                        } else {
+                            profile.eval(u)
+                        }
+                    }
+                };
+                q_min + (q_max - q_min) * v
+            }
+        }
+    }
+
+    /// The integer precision actually used at iteration t:
+    /// q_t = round(S(t)) (paper §3.1).
+    pub fn q_at(&self, t: usize) -> u32 {
+        self.value_at(t).round().max(1.0) as u32
+    }
+
+    /// Materialize q_t for a span of iterations (what the trainer feeds
+    /// the train-chunk executable as the q_fwd vector).
+    pub fn q_vec(&self, start: usize, len: usize) -> Vec<f32> {
+        (start..start + len).map(|t| self.q_at(t) as f32).collect()
+    }
+
+    /// Bounds (q_min, q_max) this schedule moves within.
+    pub fn bounds(&self) -> (f64, f64) {
+        match *self {
+            Schedule::WithWarmup { q_warm, ref inner, .. } => {
+                let (lo, hi) = inner.bounds();
+                (lo.min(q_warm), hi.max(q_warm))
+            }
+            Schedule::Static { q } => (q, q),
+            Schedule::Deficit { q_low, q_high, .. } => (q_low, q_high),
+            Schedule::Cpt { q_min, q_max, .. } => (q_min, q_max),
+        }
+    }
+
+    /// Mean of S(t)/q_max over the run — the headline compute-savings
+    /// knob. For CPT this is governed by the profile mean.
+    pub fn mean_relative_precision(&self, total_iters: usize) -> f64 {
+        let (_, q_max) = self.bounds();
+        if q_max <= 0.0 {
+            return 1.0;
+        }
+        let s: f64 = (0..total_iters).map(|t| self.q_at(t) as f64).sum();
+        s / (total_iters as f64 * q_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::suite;
+    use crate::util::propcheck::propcheck;
+    use crate::{prop_assert, prop_assert_close};
+
+    fn any_cycles(r: &mut crate::util::prng::Pcg32) -> Cycles {
+        match r.below(3) {
+            0 => Cycles::Repeated,
+            1 => Cycles::Triangular(Reflection::Vertical),
+            _ => Cycles::Triangular(Reflection::Horizontal),
+        }
+    }
+
+    #[test]
+    fn q_within_bounds_and_integer() {
+        propcheck(300, |rng| {
+            let profile = Profile::all()[rng.below(4) as usize];
+            let cycles = any_cycles(rng);
+            let n = 2 * (1 + rng.below(6) as usize);
+            let q_min = 2.0 + rng.below(4) as f64;
+            let q_max = q_min + rng.below(8) as f64;
+            let total = 10 + rng.below(2000) as usize;
+            let s = Schedule::cpt(profile, cycles, n, q_min, q_max, total)
+                .map_err(|e| e.to_string())?;
+            for t in 0..total {
+                let v = s.value_at(t);
+                prop_assert!(
+                    v >= q_min - 1e-9 && v <= q_max + 1e-9,
+                    "S({t})={v} outside [{q_min},{q_max}]"
+                );
+                let q = s.q_at(t) as f64;
+                prop_assert!(
+                    q >= (q_min - 0.5).floor() && q <= (q_max + 0.5).ceil(),
+                    "q({t})={q}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ends_at_q_max() {
+        propcheck(200, |rng| {
+            let profile = Profile::all()[rng.below(4) as usize];
+            let cycles = any_cycles(rng);
+            let n = 2 * (1 + rng.below(4) as usize);
+            let total = n * (20 + rng.below(200) as usize);
+            let s = Schedule::cpt(profile, cycles, n, 3.0, 8.0, total)
+                .map_err(|e| e.to_string())?;
+            prop_assert_close!(s.value_at(total - 1), 8.0, 1e-6);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repeated_restarts_each_cycle_at_q_min() {
+        let total = 800;
+        for profile in Profile::all() {
+            let s = Schedule::cpt(profile, Cycles::Repeated, 8, 3.0, 8.0, total)
+                .unwrap();
+            for c in 0..8 {
+                let t0 = c * 100;
+                assert!(
+                    (s.value_at(t0) - 3.0).abs() < 0.3,
+                    "{profile}: cycle {c} starts at {}",
+                    s.value_at(t0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_adjacent_cycles_oppose() {
+        let total = 800;
+        let s = Schedule::cpt(
+            Profile::Linear,
+            Cycles::Triangular(Reflection::Vertical),
+            8, 3.0, 8.0, total,
+        )
+        .unwrap();
+        // even cycles decrease, odd cycles increase
+        for c in 0..8 {
+            let a = s.value_at(c * 100 + 10);
+            let b = s.value_at(c * 100 + 80);
+            if c % 2 == 0 {
+                assert!(a > b, "cycle {c} should descend: {a} -> {b}");
+            } else {
+                assert!(a < b, "cycle {c} should ascend: {a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_profiles_reflections_coincide() {
+        propcheck(100, |rng| {
+            let profile = if rng.below(2) == 0 {
+                Profile::Cosine
+            } else {
+                Profile::Linear
+            };
+            let total = 400;
+            let sv = Schedule::cpt(
+                profile, Cycles::Triangular(Reflection::Vertical),
+                4, 3.0, 8.0, total,
+            ).map_err(|e| e.to_string())?;
+            let sh = Schedule::cpt(
+                profile, Cycles::Triangular(Reflection::Horizontal),
+                4, 3.0, 8.0, total,
+            ).map_err(|e| e.to_string())?;
+            let t = rng.below(total as u32) as usize;
+            prop_assert_close!(sv.value_at(t), sh.value_at(t), 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn asymmetric_reflections_differ() {
+        let total = 400;
+        for profile in [Profile::Rex, Profile::Exponential] {
+            let sv = Schedule::cpt(
+                profile, Cycles::Triangular(Reflection::Vertical),
+                4, 3.0, 8.0, total,
+            ).unwrap();
+            let sh = Schedule::cpt(
+                profile, Cycles::Triangular(Reflection::Horizontal),
+                4, 3.0, 8.0, total,
+            ).unwrap();
+            let max_diff = (0..total)
+                .map(|t| (sv.value_at(t) - sh.value_at(t)).abs())
+                .fold(0.0f64, f64::max);
+            assert!(max_diff > 0.5, "{profile}: reflections identical");
+        }
+    }
+
+    #[test]
+    fn triangular_needs_even_cycles() {
+        assert!(Schedule::cpt(
+            Profile::Cosine,
+            Cycles::Triangular(Reflection::Vertical),
+            3, 3.0, 8.0, 100,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn static_and_deficit() {
+        let s = Schedule::static_q(8.0);
+        assert_eq!(s.q_at(0), 8);
+        assert_eq!(s.q_at(10_000), 8);
+
+        let d = Schedule::deficit(3.0, 8.0, 100, 600);
+        assert_eq!(d.q_at(0), 8);
+        assert_eq!(d.q_at(99), 8);
+        assert_eq!(d.q_at(100), 3);
+        assert_eq!(d.q_at(599), 3);
+        assert_eq!(d.q_at(600), 8);
+    }
+
+    #[test]
+    fn with_warmup_holds_then_shifts() {
+        let inner = suite::by_name("RR", 2.0, 8.0, 200, 8).unwrap();
+        let w = Schedule::with_warmup(8.0, 50, inner.clone());
+        for t in 0..50 {
+            assert_eq!(w.q_at(t), 8);
+        }
+        for t in 50..250 {
+            assert_eq!(w.q_at(t), inner.q_at(t - 50), "t={t}");
+        }
+        assert_eq!(w.bounds(), (2.0, 8.0));
+    }
+
+    #[test]
+    fn q_vec_matches_pointwise() {
+        let s = Schedule::cpt(
+            Profile::Rex, Cycles::Repeated, 8, 3.0, 8.0, 1000,
+        ).unwrap();
+        let v = s.q_vec(100, 64);
+        for (i, &q) in v.iter().enumerate() {
+            assert_eq!(q, s.q_at(100 + i) as f32);
+        }
+    }
+
+    #[test]
+    fn mean_relative_precision_orders_profiles() {
+        let total = 4000;
+        let mk = |p| {
+            Schedule::cpt(p, Cycles::Repeated, 8, 3.0, 8.0, total)
+                .unwrap()
+                .mean_relative_precision(total)
+        };
+        let rex = mk(Profile::Rex);
+        let lin = mk(Profile::Linear);
+        let exp = mk(Profile::Exponential);
+        assert!(rex < lin && lin < exp, "rex={rex} lin={lin} exp={exp}");
+        let st = Schedule::static_q(8.0).mean_relative_precision(total);
+        assert!((st - 1.0).abs() < 1e-9);
+        assert!(exp < st);
+    }
+}

@@ -1,0 +1,169 @@
+//! Function profiles for CPT schedules (paper §3.2, step one; Fig 2
+//! upper-left).
+//!
+//! A profile is a growth function f: [0,1] -> [0,1] with f(0)=0, f(1)=1.
+//! Precision within a cycle is q(u) = q_min + (q_max - q_min) · f(u).
+//! Only growth profiles are considered because training must *end* at high
+//! precision to converge (paper §3.2 / CPT [5]).
+//!
+//! The four profiles differ in how long they dwell near q_min — i.e. how
+//! much compute they save (mean of f over [0,1], lower = cheaper):
+//!
+//!   REX          ∫f = 2ln2 - 1 ≈ 0.386   (dwells low   → Large savings)
+//!   linear       ∫f = 0.5
+//!   cosine       ∫f = 0.5                (the original CPT profile)
+//!   exponential  ∫f ≈ 0.75 (k = 4)       (rises fast   → Small savings)
+
+use std::fmt;
+
+/// Steepness of the exponential profile. Chosen so the exponential/REX
+/// pair brackets the symmetric profiles from above/below, matching the
+/// paper's Small/Large grouping.
+pub const EXP_K: f64 = 4.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Profile {
+    /// Half-cosine growth: f(u) = (1 - cos(πu)) / 2. Symmetric.
+    Cosine,
+    /// f(u) = u. Symmetric.
+    Linear,
+    /// Fast-start saturating growth: f(u) = (1 - e^{-ku}) / (1 - e^{-k}).
+    Exponential,
+    /// Reverse-exponential (REX, Chen et al. [14]) growth: f(u) = u/(2-u).
+    /// Slow start, sharp finish.
+    Rex,
+}
+
+impl Profile {
+    /// Evaluate the growth profile at u ∈ [0, 1].
+    pub fn eval(self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        match self {
+            Profile::Cosine => 0.5 * (1.0 - (std::f64::consts::PI * u).cos()),
+            Profile::Linear => u,
+            Profile::Exponential => {
+                (1.0 - (-EXP_K * u).exp()) / (1.0 - (-EXP_K).exp())
+            }
+            Profile::Rex => u / (2.0 - u),
+        }
+    }
+
+    /// Exact mean of f over [0,1] — the per-cycle compute-savings factor.
+    pub fn mean(self) -> f64 {
+        match self {
+            Profile::Cosine => 0.5,
+            Profile::Linear => 0.5,
+            // ∫ (1-e^{-ku})/(1-e^{-k}) du = (1 - (1-e^{-k})/k) / (1-e^{-k})
+            Profile::Exponential => {
+                let k = EXP_K;
+                let denom = 1.0 - (-k).exp();
+                (1.0 - denom / k) / denom
+            }
+            // ∫ u/(2-u) du = 2 ln 2 - 1
+            Profile::Rex => 2.0 * std::f64::consts::LN_2 - 1.0,
+        }
+    }
+
+    /// Symmetric profiles satisfy f(u) + f(1-u) = 1, which makes their
+    /// horizontal and vertical reflections identical (paper footnote 2).
+    pub fn is_symmetric(self) -> bool {
+        matches!(self, Profile::Cosine | Profile::Linear)
+    }
+
+    pub fn all() -> [Profile; 4] {
+        [Profile::Cosine, Profile::Linear, Profile::Exponential, Profile::Rex]
+    }
+
+    pub fn letter(self) -> char {
+        match self {
+            Profile::Cosine => 'C',
+            Profile::Linear => 'L',
+            Profile::Exponential => 'E',
+            Profile::Rex => 'R',
+        }
+    }
+}
+
+impl fmt::Display for Profile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self {
+            Profile::Cosine => "cosine",
+            Profile::Linear => "linear",
+            Profile::Exponential => "exponential",
+            Profile::Rex => "rex",
+        };
+        write!(f, "{name}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+    use crate::{prop_assert, prop_assert_close};
+
+    #[test]
+    fn endpoints() {
+        for p in Profile::all() {
+            assert!(p.eval(0.0).abs() < 1e-12, "{p}: f(0) != 0");
+            assert!((p.eval(1.0) - 1.0).abs() < 1e-12, "{p}: f(1) != 1");
+        }
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        propcheck(200, |rng| {
+            let p = Profile::all()[rng.below(4) as usize];
+            let a = rng.next_f32() as f64;
+            let b = rng.next_f32() as f64;
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            prop_assert!(
+                p.eval(lo) <= p.eval(hi) + 1e-12,
+                "{p} not monotone at {lo},{hi}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn means_match_numeric_integral() {
+        for p in Profile::all() {
+            let n = 100_000;
+            let num: f64 = (0..n)
+                .map(|i| p.eval((i as f64 + 0.5) / n as f64))
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (num - p.mean()).abs() < 1e-4,
+                "{p}: numeric {num} vs analytic {}",
+                p.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn symmetry_flags_correct() {
+        propcheck(200, |rng| {
+            let p = Profile::all()[rng.below(4) as usize];
+            let u = rng.next_f32() as f64;
+            let sym_holds = (p.eval(u) + p.eval(1.0 - u) - 1.0).abs() < 1e-9;
+            if p.is_symmetric() {
+                prop_assert!(sym_holds, "{p} claimed symmetric, broken at {u}");
+            }
+            Ok(())
+        });
+        // and the asymmetric ones really are asymmetric somewhere
+        for p in [Profile::Exponential, Profile::Rex] {
+            assert!((p.eval(0.25) + p.eval(0.75) - 1.0).abs() > 1e-3);
+        }
+    }
+
+    #[test]
+    fn savings_ordering() {
+        // REX dwells lowest, exponential highest — the basis of the
+        // paper's Large/Medium/Small groups.
+        assert!(Profile::Rex.mean() < Profile::Linear.mean());
+        assert!(Profile::Linear.mean() < Profile::Exponential.mean());
+        assert!((Profile::Cosine.mean() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! The paper's named suite of ten CPT schedules and their savings groups
+//! (§3.2):
+//!
+//!   Group I   (Large savings):  RR, RTH
+//!   Group II  (Medium savings): LR, LT, CR, CT, RTV, ETV
+//!   Group III (Small savings):  ER, ETH
+//!
+//! Naming: first letter = profile (C osine, L inear, E xponential, R EX);
+//! suffix R = repeated, T = triangular (TV/TH = vertical/horizontal
+//! reflection for the asymmetric profiles). CR is the original CPT
+//! schedule of Fu et al. [5].
+
+use anyhow::{bail, Result};
+
+use super::{Cycles, Profile, Reflection, Schedule};
+
+/// Savings group (paper §3.2). Ordered by training-cost reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Group {
+    /// Group I — largest compute savings (most aggressive quantization).
+    Large,
+    /// Group II — medium savings.
+    Medium,
+    /// Group III — smallest savings (most conservative quantization).
+    Small,
+    /// Not part of the CPT suite (static baseline, deficit schedules).
+    None,
+}
+
+impl Group {
+    pub fn label(self) -> &'static str {
+        match self {
+            Group::Large => "I/Large",
+            Group::Medium => "II/Medium",
+            Group::Small => "III/Small",
+            Group::None => "-",
+        }
+    }
+}
+
+/// All ten suite names, in the paper's group order.
+pub fn suite_names() -> [&'static str; 10] {
+    ["RR", "RTH", "LR", "LT", "CR", "CT", "RTV", "ETV", "ER", "ETH"]
+}
+
+/// The savings group of a named schedule.
+pub fn group_of(name: &str) -> Group {
+    match name {
+        "RR" | "RTH" => Group::Large,
+        "LR" | "LT" | "CR" | "CT" | "RTV" | "ETV" => Group::Medium,
+        "ER" | "ETH" => Group::Small,
+        _ => Group::None,
+    }
+}
+
+/// Construct a named suite schedule.
+///
+/// `n` is the cycle count (paper default: 8 for full training runs, 2 for
+/// short fine-tuning); `total_iters` the training length in optimizer
+/// steps.
+pub fn by_name(
+    name: &str,
+    q_min: f64,
+    q_max: f64,
+    total_iters: usize,
+    n: usize,
+) -> Result<Schedule> {
+    let (profile, cycles) = decode(name)?;
+    Schedule::cpt(profile, cycles, n, q_min, q_max, total_iters)
+}
+
+fn decode(name: &str) -> Result<(Profile, Cycles)> {
+    let profile = match name.chars().next() {
+        Some('C') => Profile::Cosine,
+        Some('L') => Profile::Linear,
+        Some('E') => Profile::Exponential,
+        Some('R') => Profile::Rex,
+        _ => bail!("unknown schedule '{name}'"),
+    };
+    let cycles = match &name[1..] {
+        "R" => Cycles::Repeated,
+        // Symmetric profiles: one triangular variant ("T").
+        "T" if profile.is_symmetric() => {
+            Cycles::Triangular(Reflection::Vertical)
+        }
+        "TV" if !profile.is_symmetric() => {
+            Cycles::Triangular(Reflection::Vertical)
+        }
+        "TH" if !profile.is_symmetric() => {
+            Cycles::Triangular(Reflection::Horizontal)
+        }
+        suffix => bail!("unknown schedule suffix '{suffix}' in '{name}'"),
+    };
+    Ok((profile, cycles))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_construct() {
+        for name in suite_names() {
+            let s = by_name(name, 3.0, 8.0, 1000, 8)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(s.q_at(999) >= 7, "{name} must end near q_max");
+        }
+    }
+
+    #[test]
+    fn group_assignment_complete() {
+        for name in suite_names() {
+            assert_ne!(group_of(name), Group::None, "{name} ungrouped");
+        }
+        assert_eq!(group_of("STATIC"), Group::None);
+    }
+
+    #[test]
+    fn cr_is_original_cpt() {
+        // The original CPT schedule: cosine profile, repeated cycles,
+        // rising q_min -> q_max within each cycle.
+        let s = by_name("CR", 3.0, 8.0, 800, 8).unwrap();
+        assert!((s.value_at(0) - 3.0).abs() < 0.1);
+        assert!((s.value_at(99) - 8.0).abs() < 0.3);
+        assert!((s.value_at(100) - 3.0).abs() < 0.3); // restart
+    }
+
+    #[test]
+    fn groups_order_mean_precision() {
+        // Empirical check of the paper's grouping: mean relative precision
+        // must order Large < Medium < Small.
+        let total = 8000;
+        let mean = |name: &str| {
+            by_name(name, 3.0, 8.0, total, 8)
+                .unwrap()
+                .mean_relative_precision(total)
+        };
+        let large: f64 =
+            ["RR", "RTH"].iter().map(|n| mean(n)).sum::<f64>() / 2.0;
+        let medium: f64 = ["LR", "LT", "CR", "CT", "RTV", "ETV"]
+            .iter()
+            .map(|n| mean(n))
+            .sum::<f64>()
+            / 6.0;
+        let small: f64 =
+            ["ER", "ETH"].iter().map(|n| mean(n)).sum::<f64>() / 2.0;
+        assert!(
+            large < medium && medium < small,
+            "group means broken: L={large:.3} M={medium:.3} S={small:.3}"
+        );
+    }
+
+    #[test]
+    fn invalid_names_rejected() {
+        for bad in ["XX", "C", "CTV", "RT", "cosine", ""] {
+            assert!(by_name(bad, 3.0, 8.0, 100, 8).is_err(), "{bad}");
+        }
+    }
+}

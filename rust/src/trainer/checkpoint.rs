@@ -1,0 +1,157 @@
+//! Checkpoint container: save/restore the flat param + opt vectors.
+//!
+//! Simple length-prefixed binary format (magic, version, step, named f32
+//! sections). No serde offline; the format is versioned and self-checking
+//! (per-section element counts + a whole-file checksum).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"CPTCKPT1";
+
+/// A checkpoint: named flat f32 vectors + the step counter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64) -> Self {
+        Checkpoint { step, sections: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, data: Vec<f32>) {
+        self.sections.push((name.to_string(), data));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        let mut checksum = 0u64;
+        for (name, data) in &self.sections {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            for &x in data {
+                let b = x.to_le_bytes();
+                checksum = checksum
+                    .wrapping_mul(31)
+                    .wrapping_add(u32::from_le_bytes(b) as u64);
+                f.write_all(&b)?;
+            }
+        }
+        f.write_all(&checksum.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a CPT checkpoint", path.display());
+        }
+        let step = read_u64(&mut f)?;
+        let n_sections = read_u32(&mut f)? as usize;
+        let mut sections = Vec::with_capacity(n_sections);
+        let mut checksum = 0u64;
+        for _ in 0..n_sections {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let len = read_u64(&mut f)? as usize;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let mut data = Vec::with_capacity(len);
+            for c in bytes.chunks_exact(4) {
+                let w = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                checksum = checksum.wrapping_mul(31).wrapping_add(w as u64);
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            sections.push((name, data));
+        }
+        let want = read_u64(&mut f)?;
+        if want != checksum {
+            bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+        }
+        Ok(Checkpoint { step, sections })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("cpt_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let mut c = Checkpoint::new(123);
+        c.add("params", vec![1.0, -2.5, 3.25]);
+        c.add("opt", vec![0.0; 10]);
+        c.save(&path).unwrap();
+        let r = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, r);
+        assert_eq!(r.get("params").unwrap(), &[1.0, -2.5, 3.25]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let dir = std::env::temp_dir().join("cpt_ckpt_test2");
+        let path = dir.join("b.ckpt");
+        let mut c = Checkpoint::new(1);
+        c.add("x", vec![1.0; 64]);
+        c.save(&path).unwrap();
+        // flip a payload byte
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("cpt_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"NOTACKPT____").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

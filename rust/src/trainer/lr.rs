@@ -1,0 +1,173 @@
+//! Learning-rate schedules used by the paper's training recipes.
+//!
+//! * `StepDecay` — ×0.1 at 50% and 75% of training (CIFAR/ImageNet, §4.2);
+//! * `Cosine` — cosine annealing over the run (OGBN, §4.3);
+//! * `LinearDecay` — linear to `end_factor` (XNLI fine-tuning, §4.4);
+//! * `Constant` — fixed lr (PascalVOC, §4.2);
+//! * `Plateau` — divide by `factor` when the observed loss stops improving
+//!   (Penn Treebank LSTM, §4.4). The trainer calls `observe_loss` after
+//!   every chunk; because lr is a *runtime input* to the train artifact,
+//!   plateau decisions take effect on the very next chunk without any
+//!   recompilation.
+
+/// Learning-rate schedule (stateful only for Plateau).
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant {
+        lr: f32,
+    },
+    StepDecay {
+        base: f32,
+        total: usize,
+        /// (fraction of training, multiplier) milestones.
+        milestones: Vec<(f32, f32)>,
+    },
+    Cosine {
+        base: f32,
+        total: usize,
+        final_factor: f32,
+    },
+    LinearDecay {
+        base: f32,
+        total: usize,
+        end_factor: f32,
+    },
+    Plateau {
+        current: f32,
+        factor: f32,
+        /// epochs (observation windows) without improvement tolerated
+        patience: usize,
+        best: f32,
+        stale: usize,
+        min_lr: f32,
+    },
+}
+
+impl LrSchedule {
+    /// Paper §4.2 CIFAR recipe: 0.1, ×0.1 at 50% and 75%.
+    pub fn paper_step_decay(base: f32, total: usize) -> LrSchedule {
+        LrSchedule::StepDecay {
+            base,
+            total,
+            milestones: vec![(0.5, 0.1), (0.75, 0.01)],
+        }
+    }
+
+    pub fn cosine(base: f32, total: usize) -> LrSchedule {
+        LrSchedule::Cosine { base, total, final_factor: 0.1 }
+    }
+
+    pub fn plateau(base: f32, factor: f32, patience: usize) -> LrSchedule {
+        LrSchedule::Plateau {
+            current: base,
+            factor,
+            patience,
+            best: f32::INFINITY,
+            stale: 0,
+            min_lr: 1e-6,
+        }
+    }
+
+    /// lr for optimizer step `t`.
+    pub fn at(&self, t: usize) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::StepDecay { base, total, milestones } => {
+                let frac = t as f32 / (*total).max(1) as f32;
+                let mut mult = 1.0;
+                for &(at, m) in milestones {
+                    if frac >= at {
+                        mult = m;
+                    }
+                }
+                base * mult
+            }
+            LrSchedule::Cosine { base, total, final_factor } => {
+                let frac = (t as f32 / (*total).max(1) as f32).clamp(0.0, 1.0);
+                let c = 0.5 * (1.0 + (std::f32::consts::PI * frac).cos());
+                base * (final_factor + (1.0 - final_factor) * c)
+            }
+            LrSchedule::LinearDecay { base, total, end_factor } => {
+                let frac = (t as f32 / (*total).max(1) as f32).clamp(0.0, 1.0);
+                base * (1.0 + (end_factor - 1.0) * frac)
+            }
+            LrSchedule::Plateau { current, .. } => *current,
+        }
+    }
+
+    /// Feed the last observed training loss (per chunk). Only Plateau
+    /// reacts.
+    pub fn observe_loss(&mut self, _t: usize, loss: f32) {
+        if let LrSchedule::Plateau {
+            current, factor, patience, best, stale, min_lr,
+        } = self
+        {
+            if loss.is_finite() && loss < *best * 0.999 {
+                *best = loss;
+                *stale = 0;
+            } else {
+                *stale += 1;
+                if *stale > *patience {
+                    *current = (*current * *factor).max(*min_lr);
+                    *stale = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_milestones() {
+        let s = LrSchedule::paper_step_decay(0.1, 100);
+        assert!((s.at(0) - 0.1).abs() < 1e-7);
+        assert!((s.at(49) - 0.1).abs() < 1e-7);
+        assert!((s.at(50) - 0.01).abs() < 1e-7);
+        assert!((s.at(75) - 0.001).abs() < 1e-8);
+        assert!((s.at(99) - 0.001).abs() < 1e-8);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = LrSchedule::cosine(1.0, 100);
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+        for t in 0..99 {
+            assert!(s.at(t + 1) <= s.at(t) + 1e-7);
+        }
+    }
+
+    #[test]
+    fn linear_decay() {
+        let s = LrSchedule::LinearDecay { base: 1.0, total: 10, end_factor: 0.1 };
+        assert!((s.at(0) - 1.0).abs() < 1e-7);
+        assert!((s.at(10) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn plateau_divides_when_stale() {
+        let mut s = LrSchedule::plateau(20.0, 0.2, 1);
+        assert_eq!(s.at(0), 20.0);
+        s.observe_loss(0, 5.0); // improves (best=5)
+        s.observe_loss(1, 5.0); // stale 1 (within patience)
+        assert_eq!(s.at(2), 20.0);
+        s.observe_loss(2, 5.0); // stale 2 > patience -> divide
+        assert!((s.at(3) - 4.0).abs() < 1e-6);
+        // improvement resets
+        s.observe_loss(3, 1.0);
+        s.observe_loss(4, 0.5);
+        assert!((s.at(5) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn plateau_respects_min_lr() {
+        let mut s = LrSchedule::plateau(1e-5, 0.1, 0);
+        for t in 0..10 {
+            s.observe_loss(t, 1.0);
+        }
+        assert!(s.at(11) >= 1e-6);
+    }
+}

@@ -1,0 +1,211 @@
+//! The training loop: drives a `LoadedModel` over a `Dataset` with a
+//! precision `Schedule` — the L3 hot path.
+//!
+//! Per chunk of K optimizer steps:
+//!   1. evaluate the CPT schedule -> q_fwd[K] (integer-rounded bit-widths),
+//!   2. evaluate the LR schedule  -> lr[K],
+//!   3. assemble K minibatches (stacked) + shared inputs,
+//!   4. one PJRT call on the train-chunk executable,
+//!   5. account BitOps, record history, run periodic eval.
+//!
+//! Python is never involved; the schedule decisions (the paper's
+//! contribution) all happen here.
+
+pub mod checkpoint;
+pub mod lr;
+
+pub use lr::LrSchedule;
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::data::Dataset;
+use crate::metrics::History;
+use crate::quant::BitOpsAccountant;
+use crate::runtime::{HostTensor, LoadedModel, TrainState};
+use crate::schedule::Schedule;
+use crate::util::prng::Pcg32;
+
+/// Configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub total_steps: usize,
+    /// Backward precision (pinned to q_max per paper §3.1).
+    pub q_bwd: f32,
+    /// Evaluate every this many steps (0 = only at the end).
+    pub eval_every: usize,
+    /// PRNG seed for the run (init seed + per-step dropout seeds).
+    pub seed: i32,
+    /// Log train loss every this many steps into History (1 = all).
+    pub log_every: usize,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            total_steps: 200,
+            q_bwd: 8.0,
+            eval_every: 0,
+            seed: 0,
+            log_every: 1,
+            verbose: false,
+        }
+    }
+}
+
+/// Trainer: owns the run state and produces a History.
+pub struct Trainer<'m, 'd> {
+    pub model: &'m LoadedModel,
+    pub data: &'d mut dyn Dataset,
+    pub schedule: Schedule,
+    pub lr: LrSchedule,
+    pub cfg: TrainConfig,
+}
+
+impl<'m, 'd> Trainer<'m, 'd> {
+    pub fn new(
+        model: &'m LoadedModel,
+        data: &'d mut dyn Dataset,
+        schedule: Schedule,
+        lr: LrSchedule,
+        cfg: TrainConfig,
+    ) -> Self {
+        Trainer { model, data, schedule, lr, cfg }
+    }
+
+    /// Run the full training loop, returning the history.
+    pub fn run(&mut self) -> Result<History> {
+        let t_start = Instant::now();
+        let mut state = self.model.init_state(self.cfg.seed)?;
+        let mut hist = History::default();
+        let mut acc = BitOpsAccountant::new(
+            &self.model.spec,
+            self.cfg.q_bwd as f64,
+            self.data.agg_density(),
+        );
+        let mut seed_rng = Pcg32::new(self.cfg.seed as u64, 0x5EED);
+
+        let chunk = self.model.spec.chunk;
+        let total = self.cfg.total_steps;
+        let mut step = 0usize;
+        let mut exec_s = 0.0f64;
+
+        while step < total {
+            let k = chunk.min(total - step);
+            // the chunk executable is fixed at K; use K or fall back to
+            // k=1 remainder steps
+            let k = if k == chunk { chunk } else { 1 };
+
+            let q_fwd = self.schedule.q_vec(step, k);
+            let lr_v: Vec<f32> =
+                (step..step + k).map(|t| self.lr.at(t)).collect();
+            let seeds: Vec<i32> =
+                (0..k).map(|_| seed_rng.next_u32() as i32).collect();
+
+            let (stacked, shared) = self.assemble_inputs(step, k)?;
+
+            let t0 = Instant::now();
+            let res = self.model.advance(
+                &mut state, k, stacked, shared, &q_fwd, &lr_v, &seeds,
+                self.cfg.q_bwd,
+            )?;
+            exec_s += t0.elapsed().as_secs_f64();
+
+            acc.record_steps(&q_fwd);
+            for (i, (&l, &m)) in
+                res.losses.iter().zip(res.metrics.iter()).enumerate()
+            {
+                let t = step + i;
+                if t % self.cfg.log_every == 0 {
+                    hist.losses.push((t, l));
+                    hist.metrics.push((t, m));
+                    hist.precisions.push((t, q_fwd[i] as u32));
+                }
+            }
+            // plateau-style LR schedules need feedback
+            self.lr.observe_loss(step + k, res.losses[k - 1]);
+
+            step += k;
+
+            if self.cfg.eval_every > 0
+                && (step % self.cfg.eval_every == 0 || step >= total)
+            {
+                let (el, em) = self.evaluate(&state)?;
+                hist.evals.push((step, el, em));
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[train {}] step {step}/{total} q={} loss={:.4} eval_loss={el:.4} eval_metric={em:.4}",
+                        self.model.spec.name,
+                        q_fwd[k - 1],
+                        res.losses[k - 1],
+                    );
+                }
+            }
+        }
+
+        if self.cfg.eval_every == 0 {
+            let (el, em) = self.evaluate(&state)?;
+            hist.evals.push((step, el, em));
+        }
+
+        hist.gbitops = acc.total().gbitops;
+        hist.exec_seconds = exec_s;
+        hist.total_seconds = t_start.elapsed().as_secs_f64();
+        Ok(hist)
+    }
+
+    /// Mean eval loss/metric over the dataset's eval batches.
+    pub fn evaluate(&mut self, state: &TrainState) -> Result<(f32, f32)> {
+        let n = self.data.eval_batches();
+        let mut sl = 0.0f32;
+        let mut sm = 0.0f32;
+        for i in 0..n {
+            let batch = self.data.eval_batch(i)?;
+            let lits = to_literals(&batch)?;
+            let (l, m) = self.model.evaluate(state, lits)?;
+            sl += l;
+            sm += m;
+        }
+        Ok((sl / n as f32, sm / n as f32))
+    }
+
+    /// Build (stacked, shared) literals for a k-step chunk at `step`.
+    fn assemble_inputs(
+        &mut self,
+        step: usize,
+        k: usize,
+    ) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        // collect k per-step batches and stack along a new leading axis
+        let mut per_input: Vec<Vec<HostTensor>> = Vec::new();
+        for i in 0..k {
+            let batch = self.data.train_batch(step + i)?;
+            if per_input.is_empty() {
+                per_input = batch.into_iter().map(|t| vec![t]).collect();
+            } else {
+                for (slot, t) in per_input.iter_mut().zip(batch) {
+                    slot.push(t);
+                }
+            }
+        }
+        let mut stacked = Vec::with_capacity(per_input.len());
+        for ts in &per_input {
+            stacked.push(HostTensor::stack(ts)?.to_literal()?);
+        }
+        let shared = self
+            .data
+            .shared_inputs(step)?
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()
+            .context("shared inputs")?;
+        Ok((stacked, shared))
+    }
+}
+
+fn to_literals(ts: &[HostTensor]) -> Result<Vec<Literal>> {
+    ts.iter().map(|t| t.to_literal()).collect()
+}

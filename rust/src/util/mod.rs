@@ -1,0 +1,10 @@
+//! Hand-rolled substrates: PRNG, JSON, property testing.
+//!
+//! The offline vendor set contains only the `xla` crate and its build
+//! chain, so everything usually pulled from crates.io (rand, serde,
+//! proptest, csv) is implemented here, scoped to exactly what the
+//! experiment harness needs.
+
+pub mod json;
+pub mod prng;
+pub mod propcheck;

@@ -1,0 +1,99 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set). Generates seeded random cases, runs a property, and on failure
+//! reports the seed + case index so the exact case replays deterministically.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck(200, |rng| {
+//!     let n = 1 + rng.below(64) as usize;
+//!     let sched = Schedule::suite("CR", 3.0, 8.0, n * 10, 2).unwrap();
+//!     for t in 0..n * 10 {
+//!         let q = sched.q_at(t);
+//!         prop_assert!(q >= 3 && q <= 8, "q out of range: {q}");
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::prng::Pcg32;
+
+/// Result of a single property case: Err carries the failure message.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// failing case with enough context to replay it.
+pub fn propcheck<F>(cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> PropResult,
+{
+    propcheck_seeded(0xC0FFEE, cases, &mut prop);
+}
+
+/// Like [propcheck] with an explicit base seed.
+pub fn propcheck_seeded<F>(seed: u64, cases: u32, prop: &mut F)
+where
+    F: FnMut(&mut Pcg32) -> PropResult,
+{
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed, case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed (seed={seed:#x}, case={case}/{cases}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers producing PropResult-friendly errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} != {b} = {} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        propcheck(50, |rng| {
+            let x = rng.next_f32();
+            prop_assert!((0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_context() {
+        propcheck(50, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "got {x}");
+            Ok(())
+        });
+    }
+}

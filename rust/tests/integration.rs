@@ -1,0 +1,304 @@
+//! Integration tests: artifacts -> PJRT -> training loop, end to end.
+//!
+//! These need `make artifacts` to have run (the Makefile test target
+//! guarantees it). All tests share one PJRT client/compiled model set via
+//! a lazily-initialized fixture to keep wall-clock reasonable on 1 core.
+
+use cpt::prelude::*;
+use cpt::schedule::Schedule;
+
+fn artifacts() -> std::path::PathBuf {
+    // tests run from the crate root
+    cpt::artifacts_dir()
+}
+
+/// Per-test fixture (PJRT handles are not Sync, so no shared state).
+struct Fixture {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+fn fixture() -> Fixture {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load(artifacts()).expect(
+        "artifacts/manifest.json missing — run `make artifacts` first",
+    );
+    Fixture { rt, manifest }
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    let f = fixture();
+    for m in [
+        "mlp", "cnn_tiny", "cnn_deep", "detector", "gcn_qagg", "gcn_fpagg",
+        "sage_qagg", "sage_fpagg", "lstm_lm", "transformer_lm",
+        "transformer_cls",
+    ] {
+        let spec = f.manifest.model(m).unwrap();
+        spec.validate().unwrap();
+        assert!(spec.param_count > 0);
+        assert_eq!(spec.chunk, f.manifest.chunk);
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let a = model.init_state(1).unwrap();
+    let b = model.init_state(1).unwrap();
+    let c = model.init_state(2).unwrap();
+    let va = a.params.to_vec::<f32>().unwrap();
+    let vb = b.params.to_vec::<f32>().unwrap();
+    let vc = c.params.to_vec::<f32>().unwrap();
+    assert_eq!(va, vb, "same seed must give identical params");
+    assert_ne!(va, vc, "different seeds must differ");
+    assert_eq!(va.len(), model.spec.param_count);
+    assert!(va.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn mlp_trains_to_high_accuracy() {
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let out = cpt::coordinator::run_one(
+        &model, "mlp", "CR", 8.0, 0, 96, 8, 0, false,
+    )
+    .unwrap();
+    assert!(
+        out.metric > 0.9,
+        "mlp should reach >90% accuracy, got {}",
+        out.metric
+    );
+    // loss must broadly decrease
+    let first = out.history.losses.first().unwrap().1;
+    let last = out.history.tail_train_loss(8);
+    assert!(last < first * 0.7, "loss {first} -> {last}");
+}
+
+#[test]
+fn chunk_and_single_step_paths_agree() {
+    // Running K steps via the chunk artifact must equal K single-step
+    // calls (same data/schedule/seeds) — validates the lax.scan export.
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let k = model.spec.chunk;
+
+    let mut data = dataset_for("mlp", 7).unwrap();
+    let mut stacked_per_step = Vec::new();
+    for i in 0..k {
+        stacked_per_step.push(data.train_batch(i).unwrap());
+    }
+
+    let q: Vec<f32> = (0..k).map(|i| 3.0 + (i % 6) as f32).collect();
+    let lr: Vec<f32> = vec![0.05; k];
+    let seeds: Vec<i32> = (0..k as i32).collect();
+
+    // chunk path
+    let mut st_chunk = model.init_state(3).unwrap();
+    let stacked: Vec<xla::Literal> = {
+        let mut per_input: Vec<Vec<HostTensor>> = vec![Vec::new(); 2];
+        for b in &stacked_per_step {
+            for (slot, t) in per_input.iter_mut().zip(b.iter()) {
+                slot.push(t.clone());
+            }
+        }
+        per_input
+            .iter()
+            .map(|ts| HostTensor::stack(ts).unwrap().to_literal().unwrap())
+            .collect()
+    };
+    let res_chunk = model
+        .advance(&mut st_chunk, k, stacked, vec![], &q, &lr, &seeds, 8.0)
+        .unwrap();
+
+    // single-step path
+    let mut st_step = model.init_state(3).unwrap();
+    let mut losses = Vec::new();
+    for i in 0..k {
+        let stacked: Vec<xla::Literal> = stacked_per_step[i]
+            .iter()
+            .map(|t| {
+                HostTensor::stack(std::slice::from_ref(t))
+                    .unwrap()
+                    .to_literal()
+                    .unwrap()
+            })
+            .collect();
+        let r = model
+            .advance(
+                &mut st_step,
+                1,
+                stacked,
+                vec![],
+                &q[i..i + 1],
+                &lr[i..i + 1],
+                &seeds[i..i + 1],
+                8.0,
+            )
+            .unwrap();
+        losses.push(r.losses[0]);
+    }
+
+    for (a, b) in res_chunk.losses.iter().zip(&losses) {
+        assert!(
+            (a - b).abs() < 1e-5,
+            "chunk vs step loss mismatch: {a} vs {b}"
+        );
+    }
+    let pc = st_chunk.params.to_vec::<f32>().unwrap();
+    let ps = st_step.params.to_vec::<f32>().unwrap();
+    let max_diff = pc
+        .iter()
+        .zip(&ps)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "params diverge: {max_diff}");
+}
+
+#[test]
+fn runtime_precision_changes_behavior() {
+    // Same model, same data: training at q=3 vs q=8 must produce
+    // different losses (proves q_t is live at runtime).
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+
+    let run = |q: f32| -> Vec<f32> {
+        let mut st = model.init_state(5).unwrap();
+        let mut data = dataset_for("mlp", 9).unwrap();
+        let mut all = Vec::new();
+        for step in 0..2 {
+            let k = model.spec.chunk;
+            let mut per_input: Vec<Vec<HostTensor>> = vec![Vec::new(); 2];
+            for i in 0..k {
+                let b = data.train_batch(step * k + i).unwrap();
+                for (slot, t) in per_input.iter_mut().zip(b) {
+                    slot.push(t);
+                }
+            }
+            let stacked: Vec<xla::Literal> = per_input
+                .iter()
+                .map(|ts| HostTensor::stack(ts).unwrap().to_literal().unwrap())
+                .collect();
+            let r = model
+                .advance(
+                    &mut st,
+                    k,
+                    stacked,
+                    vec![],
+                    &vec![q; k],
+                    &vec![0.05; k],
+                    &(0..k as i32).collect::<Vec<_>>(),
+                    8.0,
+                )
+                .unwrap();
+            all.extend(r.losses);
+        }
+        all
+    };
+
+    let l3 = run(3.0);
+    let l8 = run(8.0);
+    assert_ne!(l3, l8, "q=3 and q=8 training identical — q_t is dead");
+}
+
+#[test]
+fn gcn_qagg_vs_fpagg_same_init_different_dynamics() {
+    let f = fixture();
+    let qagg = f.rt.load_model(f.manifest.model("gcn_qagg").unwrap()).unwrap();
+    let fpagg =
+        f.rt.load_model(f.manifest.model("gcn_fpagg").unwrap()).unwrap();
+    // identical param spec
+    assert_eq!(qagg.spec.param_count, fpagg.spec.param_count);
+
+    let run = |model: &LoadedModel, name: &str| {
+        cpt::coordinator::run_one(model, name, "STATIC", 4.0, 0, 24, 8, 0, false)
+            .unwrap()
+    };
+    let a = run(&qagg, "gcn_qagg");
+    let b = run(&fpagg, "gcn_fpagg");
+    // at q=4 the aggregation strategy must matter
+    let diff = a
+        .history
+        .losses
+        .iter()
+        .zip(&b.history.losses)
+        .map(|((_, x), (_, y))| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-5, "Q-Agg and FP-Agg identical at q=4");
+}
+
+#[test]
+fn deficit_schedule_pins_low_precision_in_window() {
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let schedule = Schedule::deficit(3.0, 8.0, 8, 24);
+    let mut data = dataset_for("mlp", 3).unwrap();
+    let cfg = TrainConfig {
+        total_steps: 32,
+        q_bwd: 8.0,
+        eval_every: 0,
+        seed: 1,
+        log_every: 1,
+        verbose: false,
+    };
+    let mut t = Trainer::new(
+        &model,
+        data.as_mut(),
+        schedule,
+        LrSchedule::Constant { lr: 0.05 },
+        cfg,
+    );
+    let hist = t.run().unwrap();
+    for &(step, q) in &hist.precisions {
+        let want = if (8..24).contains(&step) { 3 } else { 8 };
+        assert_eq!(q, want, "step {step}");
+    }
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let st = model.init_state(0).unwrap();
+    let mut data = dataset_for("mlp", 5).unwrap();
+    let batch: Vec<xla::Literal> = data
+        .eval_batch(0)
+        .unwrap()
+        .iter()
+        .map(|t| t.to_literal().unwrap())
+        .collect();
+    let batch2: Vec<xla::Literal> = data
+        .eval_batch(0)
+        .unwrap()
+        .iter()
+        .map(|t| t.to_literal().unwrap())
+        .collect();
+    let (l1, m1) = model.evaluate(&st, batch).unwrap();
+    let (l2, m2) = model.evaluate(&st, batch2).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(m1, m2);
+}
+
+#[test]
+fn bitops_scale_with_schedule() {
+    // A Large-group schedule must consume fewer GBitOps than STATIC on
+    // the same run length (the paper's x-axis).
+    let f = fixture();
+    let model = f.rt.load_model(f.manifest.model("mlp").unwrap()).unwrap();
+    let steps = 32;
+    let rr = cpt::coordinator::run_one(
+        &model, "mlp", "RR", 8.0, 0, steps, 8, 0, false,
+    )
+    .unwrap();
+    let st = cpt::coordinator::run_one(
+        &model, "mlp", "STATIC", 8.0, 0, steps, 8, 0, false,
+    )
+    .unwrap();
+    assert!(
+        rr.gbitops < st.gbitops * 0.85,
+        "RR {} !< STATIC {}",
+        rr.gbitops,
+        st.gbitops
+    );
+}
