@@ -9,7 +9,6 @@ use cpt::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let scale = cpt::bench_scale();
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(cpt::artifacts_dir())?;
 
     // The deeper ImageNet-stand-in panel only runs at full scale — at
@@ -24,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         spec.trials = scale.trials();
         spec.steps = Some(scale.steps(256, 320));
         spec.verbose = true;
-        let outs = run_sweep(&rt, &manifest, &spec)?;
+        let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!(
             "Fig 3 ({}): accuracy vs GBitOps",
@@ -32,7 +31,11 @@ fn main() -> anyhow::Result<()> {
         );
         let rep = SweepReport::new(&title, "accuracy", true);
         rep.print(&rows);
-        rep.write_csv(&rows, cpt::results_dir().join(format!("fig3_{model}.csv")))?;
+        rep.write_csv_with_timing(
+            &rows,
+            timing,
+            cpt::results_dir().join(format!("fig3_{model}.csv")),
+        )?;
     }
     println!("\nPaper shape: CPT variants cluster at lower GBitOps than STATIC;");
     println!("performance correlates with training compute; Large (RR/RTH)");

@@ -7,14 +7,13 @@ use cpt::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let scale = cpt::bench_scale();
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(cpt::artifacts_dir())?;
 
     let mut spec = SweepSpec::new("detector");
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(192, 256));
     spec.verbose = true;
-    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(
         "Fig 4 (PascalVOC stand-in): mAP-lite vs GBitOps",
@@ -22,7 +21,11 @@ fn main() -> anyhow::Result<()> {
         true,
     );
     rep.print(&rows);
-    rep.write_csv(&rows, cpt::results_dir().join("fig4_detection.csv"))?;
+    rep.write_csv_with_timing(
+        &rows,
+        timing,
+        cpt::results_dir().join("fig4_detection.csv"),
+    )?;
 
     println!("\nPaper shape: q_max=6 clearly deteriorates both baseline and CPT;");
     println!("at q_max=8 all CPT variants match/exceed STATIC at lower cost.");

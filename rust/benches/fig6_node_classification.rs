@@ -8,19 +8,22 @@ use cpt::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let scale = cpt::bench_scale();
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(cpt::artifacts_dir())?;
 
     for model in ["gcn_fpagg", "gcn_qagg", "sage_fpagg", "sage_qagg"] {
         let mut spec = SweepSpec::new(model);
         spec.trials = scale.trials();
         spec.steps = Some(scale.steps(240, 480));
-        let outs = run_sweep(&rt, &manifest, &spec)?;
+        let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!("Fig 6 ({model}): accuracy vs GBitOps");
         let rep = SweepReport::new(&title, "accuracy", true);
         rep.print(&rows);
-        rep.write_csv(&rows, cpt::results_dir().join(format!("fig6_{model}.csv")))?;
+        rep.write_csv_with_timing(
+            &rows,
+            timing,
+            cpt::results_dir().join(format!("fig6_{model}.csv")),
+        )?;
     }
     println!("\nPaper shape: on the Arxiv-like graph, Large schedules trail the");
     println!("baseline while Small/Medium match or beat it; on the Products-like");

@@ -9,7 +9,6 @@ use cpt::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let scale = cpt::bench_scale();
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(cpt::artifacts_dir())?;
 
     // LSTM LM panel (perplexity: lower is better)
@@ -17,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(160, 400));
     spec.cycles = Some(2);
-    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(
         "Fig 7 left (Penn Treebank stand-in): perplexity vs GBitOps",
@@ -25,14 +24,14 @@ fn main() -> anyhow::Result<()> {
         false,
     );
     rep.print(&rows);
-    rep.write_csv(&rows, cpt::results_dir().join("fig7_lstm.csv"))?;
+    rep.write_csv_with_timing(&rows, timing, cpt::results_dir().join("fig7_lstm.csv"))?;
 
     // transformer classifier panel (accuracy)
     let mut spec = SweepSpec::new("transformer_cls");
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(120, 240));
     spec.cycles = Some(2);
-    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(
         "Fig 7 right (XNLI stand-in): accuracy vs GBitOps",
@@ -40,7 +39,11 @@ fn main() -> anyhow::Result<()> {
         true,
     );
     rep.print(&rows);
-    rep.write_csv(&rows, cpt::results_dir().join("fig7_transformer.csv"))?;
+    rep.write_csv_with_timing(
+        &rows,
+        timing,
+        cpt::results_dir().join("fig7_transformer.csv"),
+    )?;
 
     println!("\nPaper shape: q_max=6 visibly degrades both tasks; at q_max=8 the");
     println!("schedules trade compute for metric along the usual correlation.");

@@ -3,17 +3,28 @@
 //! samples + mean/min reporting).
 //!
 //! Measures, per model:
-//!   * chunk-call latency (K optimizer steps in one PJRT call),
+//!   * chunk-call latency (K optimizer steps in one PJRT call) on the
+//!     zero-roundtrip path (HostVec state upload, arena-stacked inputs),
 //!   * K single-step calls (what the loop would cost without chunking),
-//!   * the host-side overhead components: state clone (the PJRT shim's
-//!     forced host roundtrip), batch generation, literal creation.
+//!   * the host-side overhead components, old path vs new path:
+//!       - state-clone (legacy `clone_literal` roundtrip, eliminated
+//!         from `Trainer::run`) vs state-upload (`HostVec::to_literal`),
+//!       - batch-gen via fresh `Vec<Vec<HostTensor>>` stacking vs the
+//!         reusable `LiteralArena`.
 //!
-//!   cargo bench --bench perf_hotpath
+//! Emits a machine-readable BENCH_perf_hotpath.json (override the path
+//! with CPT_BENCH_JSON) so the perf trajectory is tracked across PRs.
+//!
+//!   cargo bench --bench perf_hotpath             # 5 reps, 4 models
+//!   cargo bench --bench perf_hotpath -- --smoke  # 1 rep, mlp only
+//!
+//!   cargo bench --bench perf_hotpath -- --json out.json
 
 use std::time::Instant;
 
 use cpt::prelude::*;
 use cpt::runtime::clone_literal;
+use cpt::util::json::{num, obj, s, Json};
 
 fn time<F: FnMut() -> anyhow::Result<()>>(
     reps: usize,
@@ -32,73 +43,132 @@ fn time<F: FnMut() -> anyhow::Result<()>>(
     Ok((mean, min))
 }
 
+/// Legacy input assembly: fresh Vec<Vec<HostTensor>> regroup + stack +
+/// literal per chunk (the pre-arena path, kept as the baseline).
+fn build_inputs_legacy(
+    data: &mut Box<dyn Dataset>,
+    k: usize,
+) -> anyhow::Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+    let mut per_input: Vec<Vec<HostTensor>> = Vec::new();
+    for i in 0..k {
+        let b = data.train_batch(i)?;
+        if per_input.is_empty() {
+            per_input = b.into_iter().map(|t| vec![t]).collect();
+        } else {
+            for (slot, t) in per_input.iter_mut().zip(b) {
+                slot.push(t);
+            }
+        }
+    }
+    let stacked = per_input
+        .iter()
+        .map(|ts| HostTensor::stack(ts)?.to_literal())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let shared = data
+        .shared_inputs(0)?
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((stacked, shared))
+}
+
+/// Arena input assembly: the trainer's steady-state path.
+fn build_inputs_arena(
+    data: &mut Box<dyn Dataset>,
+    arena: &mut LiteralArena,
+    rows: &mut Vec<Vec<HostTensor>>,
+    k: usize,
+) -> anyhow::Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+    rows.clear();
+    for i in 0..k {
+        rows.push(data.train_batch(i)?);
+    }
+    let n_slots = rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut stacked = Vec::with_capacity(n_slots);
+    for j in 0..n_slots {
+        let parts: Vec<&HostTensor> = rows.iter().map(|r| &r[j]).collect();
+        stacked.push(arena.stack_literal(j, &parts)?);
+    }
+    let shared = data
+        .shared_inputs(0)?
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((stacked, shared))
+}
+
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || std::env::var("CPT_SMOKE")
+            .is_ok_and(|v| v == "1" || v == "true");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var("CPT_BENCH_JSON").ok())
+        .unwrap_or_else(|| "BENCH_perf_hotpath.json".to_string());
+    let reps = if smoke { 1 } else { 5 };
+    let models: &[&str] = if smoke {
+        &["mlp"]
+    } else {
+        &["mlp", "gcn_qagg", "lstm_lm", "transformer_lm"]
+    };
+
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(cpt::artifacts_dir())?;
 
-    println!("=== §Perf: L3 hot-path microbenchmarks (ms; mean/min of 5) ===\n");
     println!(
-        "{:<16} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12}",
-        "model", "K", "chunk(K)", "K x step(1)", "speedup",
-        "state-clone", "batch-gen"
+        "=== §Perf: L3 hot-path microbenchmarks (ms; mean of {reps}) ===\n"
+    );
+    println!(
+        "{:<16} {:>4} {:>12} {:>12} {:>9} {:>12} {:>12} {:>12} {:>12}",
+        "model",
+        "K",
+        "chunk(K)",
+        "K x step(1)",
+        "speedup",
+        "clone(old)",
+        "upload(new)",
+        "gen(old)",
+        "gen(arena)"
     );
 
-    for name in ["mlp", "gcn_qagg", "lstm_lm", "transformer_lm"] {
+    let mut model_rows: Vec<(String, Json)> = Vec::new();
+
+    for &name in models {
         let spec = manifest.model(name)?;
         let model = rt.load_model(spec)?;
         let k = spec.chunk;
         let rec = recipe(name)?;
         let mut data = dataset_for(name, 1)?;
-
-        // pre-build chunk inputs
-        let build_inputs = |data: &mut Box<dyn Dataset>,
-                            k: usize|
-         -> anyhow::Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
-            let mut per_input: Vec<Vec<HostTensor>> = Vec::new();
-            for i in 0..k {
-                let b = data.train_batch(i)?;
-                if per_input.is_empty() {
-                    per_input = b.into_iter().map(|t| vec![t]).collect();
-                } else {
-                    for (slot, t) in per_input.iter_mut().zip(b) {
-                        slot.push(t);
-                    }
-                }
-            }
-            let stacked = per_input
-                .iter()
-                .map(|ts| HostTensor::stack(ts)?.to_literal())
-                .collect::<anyhow::Result<Vec<_>>>()?;
-            let shared = data
-                .shared_inputs(0)?
-                .iter()
-                .map(|t| t.to_literal())
-                .collect::<anyhow::Result<Vec<_>>>()?;
-            Ok((stacked, shared))
-        };
+        let mut arena = LiteralArena::new();
+        let mut rows: Vec<Vec<HostTensor>> = Vec::new();
 
         let q = vec![8.0f32; k];
         let lr = vec![rec.base_lr; k];
         let seeds: Vec<i32> = (0..k as i32).collect();
 
-        // chunk call
+        // chunk call on the new path (arena inputs, HostVec state)
         let mut st = model.init_state(0)?;
-        let (mean_chunk, _) = time(5, || {
-            let (stacked, shared) = build_inputs(&mut data, k)?;
-            model.advance(&mut st, k, stacked, shared, &q, &lr, &seeds, 8.0)?;
+        let (mean_chunk, min_chunk) = time(reps, || {
+            let (stacked, shared) =
+                build_inputs_arena(&mut data, &mut arena, &mut rows, k)?;
+            model.advance(&mut st, k, &stacked, &shared, &q, &lr, &seeds, 8.0)?;
             Ok(())
         })?;
 
         // K single-step calls
         let mut st2 = model.init_state(0)?;
-        let (mean_steps, _) = time(5, || {
+        let (mean_steps, _) = time(reps, || {
             for i in 0..k {
-                let (stacked, shared) = build_inputs(&mut data, 1)?;
+                let (stacked, shared) =
+                    build_inputs_arena(&mut data, &mut arena, &mut rows, 1)?;
                 model.advance(
                     &mut st2,
                     1,
-                    stacked,
-                    shared,
+                    &stacked,
+                    &shared,
                     &q[i..i + 1],
                     &lr[i..i + 1],
                     &seeds[i..i + 1],
@@ -108,35 +178,79 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         })?;
 
-        // state clone cost (the forced host roundtrip component)
-        let (mean_clone, _) = time(5, || {
-            let _p = clone_literal(&st.params)?;
-            let _o = clone_literal(&st.opt_state)?;
+        // legacy state-clone cost (the roundtrip `Trainer::run` used to
+        // pay per chunk, now eliminated): clone an uploaded literal
+        let params_lit = st.params.to_literal()?;
+        let opt_lit = st.opt_state.to_literal()?;
+        let (mean_clone, _) = time(reps, || {
+            let _p = clone_literal(&params_lit)?;
+            let _o = clone_literal(&opt_lit)?;
             Ok(())
         })?;
 
-        // batch generation cost
-        let (mean_gen, _) = time(5, || {
-            let _ = build_inputs(&mut data, k)?;
+        // new state-upload cost (HostVec -> literal, once per advance)
+        let (mean_upload, _) = time(reps, || {
+            let _p = st.params.to_literal()?;
+            let _o = st.opt_state.to_literal()?;
             Ok(())
+        })?;
+
+        // batch generation: legacy fresh-alloc stacking vs arena reuse
+        let (mean_gen_legacy, _) =
+            time(reps, || build_inputs_legacy(&mut data, k).map(|_| ()))?;
+        let (mean_gen_arena, _) = time(reps, || {
+            build_inputs_arena(&mut data, &mut arena, &mut rows, k).map(|_| ())
         })?;
 
         println!(
-            "{:<16} {:>6} {:>14.2} {:>14.2} {:>11.2}x {:>12.3} {:>12.2}",
+            "{:<16} {:>4} {:>12.2} {:>12.2} {:>8.2}x {:>12.3} {:>12.3} {:>12.2} {:>12.2}",
             name,
             k,
             mean_chunk,
             mean_steps,
             mean_steps / mean_chunk,
             mean_clone,
-            mean_gen
+            mean_upload,
+            mean_gen_legacy,
+            mean_gen_arena
         );
+
+        model_rows.push((
+            name.to_string(),
+            obj(vec![
+                ("k", num(k as f64)),
+                ("chunk_ms_mean", num(mean_chunk)),
+                ("chunk_ms_min", num(min_chunk)),
+                ("ksteps_ms_mean", num(mean_steps)),
+                ("chunk_speedup", num(mean_steps / mean_chunk)),
+                ("state_clone_legacy_ms", num(mean_clone)),
+                ("state_upload_ms", num(mean_upload)),
+                ("batchgen_legacy_ms", num(mean_gen_legacy)),
+                ("batchgen_arena_ms", num(mean_gen_arena)),
+            ]),
+        ));
     }
 
+    let doc = obj(vec![
+        ("bench", s("perf_hotpath")),
+        ("version", num(2.0)),
+        ("reps", num(reps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "models",
+            Json::Obj(model_rows.into_iter().collect()),
+        ),
+    ]);
+    std::fs::write(&json_path, doc.to_string_pretty())?;
+    println!("\nwrote {json_path}");
+
     println!(
-        "\nInterpretation: chunking amortizes the per-call host roundtrip\n\
-         (params + opt state cloned in, tuple result copied out) over K\n\
-         steps — the 'speedup' column is the §Perf before/after for L3."
+        "\nInterpretation: 'clone(old)' is the per-chunk host roundtrip the\n\
+         trainer used to pay per state tensor pair; the new path pays only\n\
+         'upload(new)' (HostVec -> literal, once per advance) and zero\n\
+         clone_literal calls. 'gen(arena)' vs 'gen(old)' shows the stacked-\n\
+         minibatch scratch reuse. The 'speedup' column is chunking's\n\
+         amortization of the per-call PJRT overhead over K steps."
     );
     Ok(())
 }

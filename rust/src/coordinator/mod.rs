@@ -7,12 +7,27 @@
 //! suite × q_max × trials), `run_sweep` executes it on the PJRT runtime,
 //! and `SweepReport` prints rows of (schedule, group, GBitOps, metric ±
 //! std) plus writes CSV under results/.
+//!
+//! Execution model: the sweep is flattened into an ordered list of
+//! cells (schedule × q_max × trial). With `jobs == 1` the cells run
+//! serially on the caller's `Runtime`. With `jobs > 1` a work-queue
+//! executor fans the cells out over a thread pool — PJRT handles are
+//! not Sync, so each worker builds its own client and compiles its own
+//! `LoadedModel` once from the shared, pre-validated `ModelSpec` —
+//! and results funnel through a channel into index-ordered collection,
+//! so the output is byte-identical to serial mode (every cell is a
+//! fully seeded, independent run). See rust/DESIGN-perf.md.
 
 pub mod recipes;
 pub mod report;
 
 pub use recipes::{dataset_for, recipe, report_metric, Recipe};
 pub use report::SweepReport;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -36,6 +51,9 @@ pub struct SweepSpec {
     pub cycles: Option<usize>,
     pub eval_every: usize,
     pub verbose: bool,
+    /// Worker threads for the sweep executor (1 = serial on the caller's
+    /// Runtime). Defaults to `cpt::default_jobs()` (the CPT_JOBS env var).
+    pub jobs: usize,
 }
 
 impl SweepSpec {
@@ -53,8 +71,45 @@ impl SweepSpec {
             cycles: None,
             eval_every: 0,
             verbose: false,
+            jobs: crate::default_jobs(),
         }
     }
+}
+
+/// One cell of a sweep: a single training run to execute.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepCell {
+    pub schedule: String,
+    pub q_max: f64,
+    pub trial: usize,
+}
+
+/// Flatten a spec into its ordered cell list — the canonical execution
+/// (and result) order for both the serial and the parallel executor.
+pub fn sweep_cells(spec: &SweepSpec) -> Vec<SweepCell> {
+    let mut cells = Vec::with_capacity(
+        spec.q_maxes.len() * spec.schedules.len() * spec.trials,
+    );
+    for &q_max in &spec.q_maxes {
+        for sched in &spec.schedules {
+            for trial in 0..spec.trials {
+                cells.push(SweepCell {
+                    schedule: sched.clone(),
+                    q_max,
+                    trial,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Wall-clock accounting for one sweep execution.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepTiming {
+    pub wall_seconds: f64,
+    pub jobs: usize,
+    pub cells: usize,
 }
 
 /// Result of one training run.
@@ -85,6 +140,8 @@ pub struct AggRow {
     pub metric_mean: f64,
     pub metric_std: f64,
     pub trials: usize,
+    /// Mean per-cell executable wall-clock (seconds) over trials.
+    pub exec_seconds_mean: f64,
 }
 
 /// Build the schedule object for a named sweep entry.
@@ -103,6 +160,7 @@ pub fn make_schedule(
 }
 
 /// Run one training run for (model, schedule, q_max, trial).
+#[allow(clippy::too_many_arguments)]
 pub fn run_one(
     model: &LoadedModel,
     spec_name: &str,
@@ -144,72 +202,291 @@ pub fn run_one(
     })
 }
 
-/// Execute a full sweep spec. Loads the model once and reuses the
-/// compiled executables across every schedule/trial (compilation is the
-/// dominant fixed cost on this testbed).
+/// Execute a full sweep spec; see `run_sweep_timed` for the wall-clock
+/// variant.
 pub fn run_sweep(
-    rt: &Runtime,
     manifest: &Manifest,
     spec: &SweepSpec,
 ) -> Result<Vec<RunOutcome>> {
-    let rec = recipe(&spec.model)?;
-    let steps = spec.steps.unwrap_or(rec.steps);
-    let cycles = spec.cycles.unwrap_or(rec.cycles);
-    let model = rt.load_model(manifest.model(&spec.model)?)?;
+    run_sweep_timed(manifest, spec).map(|(outs, _)| outs)
+}
 
-    let mut outs = Vec::new();
-    for &q_max in &spec.q_maxes {
-        for sched in &spec.schedules {
-            for trial in 0..spec.trials {
-                let out = run_one(
-                    &model, &spec.model, sched, q_max, trial, steps, cycles,
-                    spec.eval_every, spec.verbose,
-                )?;
-                if spec.verbose {
-                    eprintln!(
-                        "[sweep] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
-                        spec.model, sched, q_max, trial, out.metric, out.gbitops
-                    );
-                }
-                outs.push(out);
-            }
+/// Execute a full sweep spec, returning outcomes in canonical cell
+/// order plus wall-clock timing. `spec.jobs > 1` selects the parallel
+/// work-queue executor; outcomes are bit-identical to serial execution
+/// (each cell is independently seeded), only wall-clock changes.
+/// The executor owns its PJRT client(s) — one for the serial path, one
+/// per worker in parallel mode — so callers never build an idle one.
+pub fn run_sweep_timed(
+    manifest: &Manifest,
+    spec: &SweepSpec,
+) -> Result<(Vec<RunOutcome>, SweepTiming)> {
+    let t0 = Instant::now();
+    let cells = sweep_cells(spec);
+    let jobs = spec.jobs.max(1).min(cells.len().max(1));
+    let outs = if jobs <= 1 {
+        run_cells_serial(manifest, spec, &cells)?
+    } else {
+        run_cells_parallel(manifest, spec, &cells, jobs)?
+    };
+    let timing = SweepTiming {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        jobs,
+        cells: cells.len(),
+    };
+    Ok((outs, timing))
+}
+
+fn sweep_params(spec: &SweepSpec) -> Result<(usize, usize)> {
+    let rec = recipe(&spec.model)?;
+    Ok((
+        spec.steps.unwrap_or(rec.steps),
+        spec.cycles.unwrap_or(rec.cycles),
+    ))
+}
+
+/// Serial executor: builds one PJRT client, loads the model once, and
+/// reuses the compiled executables across every cell (compilation is the
+/// dominant fixed cost on this testbed).
+fn run_cells_serial(
+    manifest: &Manifest,
+    spec: &SweepSpec,
+    cells: &[SweepCell],
+) -> Result<Vec<RunOutcome>> {
+    let (steps, cycles) = sweep_params(spec)?;
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(manifest.model(&spec.model)?)?;
+    let mut outs = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let out = run_one(
+            &model,
+            &spec.model,
+            &cell.schedule,
+            cell.q_max,
+            cell.trial,
+            steps,
+            cycles,
+            spec.eval_every,
+            spec.verbose,
+        )?;
+        if spec.verbose {
+            eprintln!(
+                "[sweep] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
+                spec.model,
+                cell.schedule,
+                cell.q_max,
+                cell.trial,
+                out.metric,
+                out.gbitops
+            );
         }
+        outs.push(out);
     }
     Ok(outs)
 }
 
-/// Aggregate outcomes over trials.
-pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
-    let mut rows: Vec<AggRow> = Vec::new();
-    for o in outs {
-        if rows.iter().any(|r| {
-            r.model == o.model && r.schedule == o.schedule && r.q_max == o.q_max
-        }) {
-            continue;
+/// Parallel work-queue executor. Workers pull cell indices from a shared
+/// atomic cursor; each worker owns a private PJRT client + compiled
+/// model (compiled once, from the shared pre-validated `ModelSpec`), and
+/// sends `(index, result)` down a channel. The collector writes results
+/// into index-addressed slots, so the returned order — and the values,
+/// since every cell is an independently seeded run — match the serial
+/// executor exactly. First error (lowest cell index) wins; remaining
+/// workers drain out via a stop flag.
+fn run_cells_parallel(
+    manifest: &Manifest,
+    spec: &SweepSpec,
+    cells: &[SweepCell],
+    jobs: usize,
+) -> Result<Vec<RunOutcome>> {
+    let (steps, cycles) = sweep_params(spec)?;
+    let model_spec = manifest.model(&spec.model)?.clone();
+    model_spec.validate()?; // fail fast, before spawning any workers
+
+    let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<(usize, Result<RunOutcome>)>();
+
+    // sentinel index for worker-setup failures — never a real cell, and
+    // non-fatal as long as other workers drain the queue
+    const SETUP_ERR: usize = usize::MAX;
+
+    let mut slots: Vec<Option<RunOutcome>> = Vec::new();
+    slots.resize_with(cells.len(), || None);
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    let mut setup_err: Option<anyhow::Error> = None;
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let stop = &stop;
+            let model_spec = &model_spec;
+            scope.spawn(move || {
+                // Per-worker PJRT client + compiled entry points (PJRT
+                // handles are not Sync; compilation happens once per
+                // worker, amortized over all cells it claims).
+                let loaded: Result<(Runtime, LoadedModel)> = (|| {
+                    let rt = Runtime::cpu()?;
+                    let model = rt.load_model(model_spec)?;
+                    Ok((rt, model))
+                })();
+                let (_rt, model) = match loaded {
+                    Ok(x) => x,
+                    Err(e) => {
+                        // don't set the stop flag: the queue drains on
+                        // the workers that did initialize; the sweep
+                        // only fails if cells end up unclaimed
+                        let _ = tx.send((
+                            SETUP_ERR,
+                            Err(e.context("parallel sweep worker setup")),
+                        ));
+                        return;
+                    }
+                };
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let idx = cursor.fetch_add(1, Ordering::SeqCst);
+                    if idx >= cells.len() {
+                        break;
+                    }
+                    let cell = &cells[idx];
+                    let res = run_one(
+                        &model,
+                        &spec.model,
+                        &cell.schedule,
+                        cell.q_max,
+                        cell.trial,
+                        steps,
+                        cycles,
+                        spec.eval_every,
+                        false, // workers never write per-step logs
+                    );
+                    if res.is_err() {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                    if tx.send((idx, res)).is_err() {
+                        break;
+                    }
+                }
+            });
         }
-        let group: Vec<&RunOutcome> = outs
-            .iter()
-            .filter(|x| {
-                x.model == o.model
-                    && x.schedule == o.schedule
-                    && x.q_max == o.q_max
-            })
-            .collect();
-        let metrics: Vec<f64> = group.iter().map(|x| x.metric).collect();
-        let (m, s) = mean_std(&metrics);
-        rows.push(AggRow {
-            model: o.model.clone(),
-            schedule: o.schedule.clone(),
-            group: o.group.clone(),
-            q_max: o.q_max,
-            gbitops: group.iter().map(|x| x.gbitops).sum::<f64>()
-                / group.len() as f64,
-            metric_mean: m,
-            metric_std: s,
-            trials: group.len(),
-        });
+        drop(tx); // collector exits once all workers hang up
+
+        for (idx, res) in rx {
+            match res {
+                Ok(out) => {
+                    if spec.verbose {
+                        eprintln!(
+                            "[sweep j{jobs}] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
+                            spec.model,
+                            out.schedule,
+                            out.q_max,
+                            out.trial,
+                            out.metric,
+                            out.gbitops
+                        );
+                    }
+                    slots[idx] = Some(out);
+                }
+                Err(e) if idx == SETUP_ERR => {
+                    if setup_err.is_none() {
+                        setup_err = Some(e);
+                    }
+                }
+                Err(e) => {
+                    let is_first =
+                        first_err.as_ref().map_or(true, |(i, _)| idx < *i);
+                    if is_first {
+                        first_err = Some((idx, e));
+                    }
+                }
+            }
+        }
+    });
+
+    // a real cell failure always wins (reported at its true index)
+    if let Some((idx, e)) = first_err {
+        return Err(e.context(format!(
+            "parallel sweep failed at cell {idx} ({}/{} complete)",
+            slots.iter().filter(|s| s.is_some()).count(),
+            cells.len()
+        )));
     }
-    rows
+    let done = slots.iter().filter(|s| s.is_some()).count();
+    if done != cells.len() {
+        // cells went unclaimed — only possible if workers died on setup
+        let e = setup_err
+            .unwrap_or_else(|| anyhow::anyhow!("worker(s) exited early"));
+        return Err(e.context(format!(
+            "parallel sweep incomplete: {done}/{} cells ran",
+            cells.len()
+        )));
+    }
+    if let Some(e) = setup_err {
+        // all cells ran on the surviving workers — degraded but complete
+        eprintln!("[sweep] note: a worker failed to initialize ({e:#}); sweep completed on the remaining workers");
+    }
+    Ok(slots.into_iter().flatten().collect())
+}
+
+/// Aggregate outcomes over trials. Single pass: grouped via a HashMap
+/// keyed on (model, schedule, q_max bits); output rows keep first-seen
+/// order, matching the serial cell order.
+pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
+    struct Acc {
+        model: String,
+        schedule: String,
+        group: String,
+        q_max: f64,
+        metrics: Vec<f64>,
+        gbitops_sum: f64,
+        exec_seconds_sum: f64,
+    }
+    let mut index: HashMap<(&str, &str, u64), usize> = HashMap::new();
+    let mut accs: Vec<Acc> = Vec::new();
+    for o in outs {
+        let key = (o.model.as_str(), o.schedule.as_str(), o.q_max.to_bits());
+        let i = match index.get(&key) {
+            Some(&i) => i,
+            None => {
+                accs.push(Acc {
+                    model: o.model.clone(),
+                    schedule: o.schedule.clone(),
+                    group: o.group.clone(),
+                    q_max: o.q_max,
+                    metrics: Vec::new(),
+                    gbitops_sum: 0.0,
+                    exec_seconds_sum: 0.0,
+                });
+                index.insert(key, accs.len() - 1);
+                accs.len() - 1
+            }
+        };
+        let a = &mut accs[i];
+        a.metrics.push(o.metric);
+        a.gbitops_sum += o.gbitops;
+        a.exec_seconds_sum += o.exec_seconds;
+    }
+    accs.into_iter()
+        .map(|a| {
+            let n = a.metrics.len();
+            let (m, s) = mean_std(&a.metrics);
+            AggRow {
+                model: a.model,
+                schedule: a.schedule,
+                group: a.group,
+                q_max: a.q_max,
+                gbitops: a.gbitops_sum / n as f64,
+                metric_mean: m,
+                metric_std: s,
+                trials: n,
+                exec_seconds_mean: a.exec_seconds_sum / n as f64,
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -227,7 +504,7 @@ mod tests {
             metric,
             eval_loss: 0.0,
             steps: 10,
-            exec_seconds: 0.0,
+            exec_seconds: 0.5 + trial as f64,
             history: crate::metrics::History::default(),
         }
     }
@@ -249,6 +526,47 @@ mod tests {
         assert!((cr8.metric_mean - 0.85).abs() < 1e-12);
         assert_eq!(cr8.trials, 2);
         assert!((cr8.gbitops - 1.5).abs() < 1e-12);
+        assert!((cr8.exec_seconds_mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_keeps_first_seen_order() {
+        let outs = vec![
+            outcome("RR", 6.0, 0, 0.1),
+            outcome("CR", 8.0, 0, 0.2),
+            outcome("RR", 6.0, 1, 0.3),
+            outcome("STATIC", 8.0, 0, 0.4),
+        ];
+        let rows = aggregate(&outs);
+        let order: Vec<(String, f64)> = rows
+            .iter()
+            .map(|r| (r.schedule.clone(), r.q_max))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("RR".to_string(), 6.0),
+                ("CR".to_string(), 8.0),
+                ("STATIC".to_string(), 8.0)
+            ]
+        );
+    }
+
+    #[test]
+    fn aggregate_groups_large_input_linearly() {
+        // smoke the HashMap path on a sweep-shaped input: 11 schedules ×
+        // 2 q_maxes × 5 trials
+        let mut outs = Vec::new();
+        for q in [6.0, 8.0] {
+            for s in 0..11 {
+                for t in 0..5 {
+                    outs.push(outcome(&format!("S{s}"), q, t, 0.5));
+                }
+            }
+        }
+        let rows = aggregate(&outs);
+        assert_eq!(rows.len(), 22);
+        assert!(rows.iter().all(|r| r.trials == 5));
     }
 
     #[test]
@@ -268,5 +586,22 @@ mod tests {
         assert_eq!(spec.schedules.len(), 11);
         assert!(spec.schedules.contains(&"STATIC".to_string()));
         assert_eq!(spec.q_maxes, vec![6.0, 8.0]);
+        assert!(spec.jobs >= 1);
+    }
+
+    #[test]
+    fn sweep_cells_enumerate_in_serial_loop_order() {
+        let mut spec = SweepSpec::new("mlp");
+        spec.schedules = vec!["CR".into(), "RR".into()];
+        spec.q_maxes = vec![6.0, 8.0];
+        spec.trials = 2;
+        let cells = sweep_cells(&spec);
+        assert_eq!(cells.len(), 8);
+        // q_max outermost, then schedule, then trial — the historical
+        // serial nesting
+        assert_eq!(cells[0], SweepCell { schedule: "CR".into(), q_max: 6.0, trial: 0 });
+        assert_eq!(cells[1], SweepCell { schedule: "CR".into(), q_max: 6.0, trial: 1 });
+        assert_eq!(cells[2], SweepCell { schedule: "RR".into(), q_max: 6.0, trial: 0 });
+        assert_eq!(cells[4], SweepCell { schedule: "CR".into(), q_max: 8.0, trial: 0 });
     }
 }

@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::{AggRow, RunOutcome};
+use super::{AggRow, RunOutcome, SweepTiming};
 use crate::metrics::CsvWriter;
 
 /// Pretty-printer + CSV emitter for a sweep.
@@ -72,14 +72,34 @@ impl<'a> SweepReport<'a> {
             })
     }
 
-    /// Write aggregated rows as CSV.
+    /// Write aggregated rows as CSV (no sweep timing columns).
     pub fn write_csv(&self, rows: &[AggRow], path: impl AsRef<Path>) -> Result<()> {
-        let mut w = CsvWriter::new(&[
+        self.csv(rows, None).write_to(path)
+    }
+
+    /// Write aggregated rows as CSV including sweep wall-clock and job
+    /// count, so serial-vs-parallel speedup is visible in results/
+    /// without re-instrumenting.
+    pub fn write_csv_with_timing(
+        &self,
+        rows: &[AggRow],
+        timing: SweepTiming,
+        path: impl AsRef<Path>,
+    ) -> Result<()> {
+        self.csv(rows, Some(timing)).write_to(path)
+    }
+
+    fn csv(&self, rows: &[AggRow], timing: Option<SweepTiming>) -> CsvWriter {
+        let mut header = vec![
             "model", "schedule", "group", "q_max", "gbitops",
-            "metric_mean", "metric_std", "trials",
-        ]);
+            "metric_mean", "metric_std", "trials", "exec_seconds_mean",
+        ];
+        if timing.is_some() {
+            header.extend(["sweep_wall_seconds", "sweep_jobs"]);
+        }
+        let mut w = CsvWriter::new(&header);
         for r in rows {
-            w.row(&[
+            let mut fields = vec![
                 r.model.clone(),
                 r.schedule.clone(),
                 r.group.clone(),
@@ -88,9 +108,15 @@ impl<'a> SweepReport<'a> {
                 format!("{:.6}", r.metric_mean),
                 format!("{:.6}", r.metric_std),
                 format!("{}", r.trials),
-            ]);
+                format!("{:.4}", r.exec_seconds_mean),
+            ];
+            if let Some(t) = timing {
+                fields.push(format!("{:.4}", t.wall_seconds));
+                fields.push(format!("{}", t.jobs));
+            }
+            w.row(&fields);
         }
-        w.write_to(path)
+        w
     }
 
     /// Write per-run loss curves (for the e2e example / Fig 5 style
@@ -142,6 +168,7 @@ mod tests {
             metric_mean: m,
             metric_std: 0.0,
             trials: 1,
+            exec_seconds_mean: 0.25,
         }
     }
 
@@ -154,7 +181,23 @@ mod tests {
         rep.write_csv(&rows, &p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("model,schedule,group"));
+        assert!(s.lines().next().unwrap().ends_with("exec_seconds_mean"));
         assert_eq!(s.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_with_timing_adds_sweep_columns() {
+        let rows = vec![row("CR", 8.0, 1.0, 0.9)];
+        let rep = SweepReport::new("t", "acc", true);
+        let timing = SweepTiming { wall_seconds: 12.5, jobs: 4, cells: 22 };
+        let dir = std::env::temp_dir().join("cpt_report_test_timing");
+        let p = dir.join("b.csv");
+        rep.write_csv_with_timing(&rows, timing, &p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let header = s.lines().next().unwrap();
+        assert!(header.ends_with("sweep_wall_seconds,sweep_jobs"), "{header}");
+        assert!(s.lines().nth(1).unwrap().ends_with("12.5000,4"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -63,6 +63,10 @@ impl Dataset for BlobDataset {
     fn eval_batches(&self) -> usize {
         self.n_eval
     }
+
+    fn shared_static(&self) -> bool {
+        true // no shared inputs; eval batches are seeded per index
+    }
 }
 
 #[cfg(test)]

@@ -106,6 +106,10 @@ impl Dataset for DetectionDataset {
     fn eval_batches(&self) -> usize {
         self.n_eval
     }
+
+    fn shared_static(&self) -> bool {
+        true // no shared inputs; eval batches are seeded per index
+    }
 }
 
 #[cfg(test)]

@@ -219,6 +219,13 @@ impl Dataset for GraphDataset {
         1
     }
 
+    fn shared_static(&self) -> bool {
+        // GCN full-graph training: feats/adjacency/labels/masks never
+        // change — literals can be built once per run. SAGE re-samples
+        // its aggregation operator every epoch, so it must NOT be cached.
+        self.sample_neighbors.is_none()
+    }
+
     fn agg_density(&self) -> f64 {
         // nnz of the full normalized adjacency (incl. self loops) / n^2;
         // the sampled (SAGE) operator is at most as dense.

@@ -123,6 +123,10 @@ impl Dataset for ImageDataset {
     fn eval_batches(&self) -> usize {
         self.n_eval
     }
+
+    fn shared_static(&self) -> bool {
+        true // no shared inputs; eval batches are seeded per index
+    }
 }
 
 #[cfg(test)]

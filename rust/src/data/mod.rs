@@ -37,6 +37,17 @@ pub trait Dataset {
     /// Full input list for evaluation batch `i`.
     fn eval_batch(&mut self, i: usize) -> Result<Vec<HostTensor>>;
 
+    /// Static-data hint: true when `shared_inputs` and `eval_batch(i)`
+    /// return identical contents every time they are called within one
+    /// run. The trainer then converts them to device literals exactly
+    /// once per run (the GNN adjacency and eval sets dominate host->device
+    /// traffic otherwise). Datasets that re-sample shared inputs (e.g.
+    /// SAGE neighbor sampling) must return false. Defaults to false —
+    /// caching is opt-in, never assumed.
+    fn shared_static(&self) -> bool {
+        false
+    }
+
     /// Number of distinct eval batches.
     fn eval_batches(&self) -> usize;
 

@@ -123,6 +123,10 @@ impl Dataset for LmDataset {
     fn eval_batches(&self) -> usize {
         self.n_eval
     }
+
+    fn shared_static(&self) -> bool {
+        true // no shared inputs; eval windows are fixed corpus positions
+    }
 }
 
 #[cfg(test)]

@@ -43,13 +43,15 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::Cli;
     pub use crate::coordinator::{
-        aggregate, dataset_for, recipe, run_one, run_sweep, SweepReport,
-        SweepSpec,
+        aggregate, dataset_for, recipe, run_one, run_sweep, run_sweep_timed,
+        sweep_cells, SweepCell, SweepReport, SweepSpec, SweepTiming,
     };
     pub use crate::data::Dataset;
     pub use crate::metrics::History;
     pub use crate::quant::BitOpsAccountant;
-    pub use crate::runtime::{HostTensor, LoadedModel, Manifest, Runtime};
+    pub use crate::runtime::{
+        HostTensor, LiteralArena, LoadedModel, Manifest, Runtime,
+    };
     pub use crate::schedule::{
         group_of, suite, Cycles, Profile, Reflection, Schedule,
     };
@@ -68,6 +70,17 @@ pub fn results_dir() -> std::path::PathBuf {
     std::env::var("CPT_RESULTS")
         .unwrap_or_else(|_| "results".to_string())
         .into()
+}
+
+/// Default sweep-executor worker count, overridable via CPT_JOBS (the
+/// bench targets have no CLI, so the env var is their `--jobs`).
+/// 1 = serial on the caller's runtime.
+pub fn default_jobs() -> usize {
+    std::env::var("CPT_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 /// Bench scale knob: CPT_BENCH_SCALE=quick|full (default quick). The

@@ -55,13 +55,16 @@ USAGE: cpt <subcommand> [flags]
         [--cycles N] [--trial T] [--eval-every N] [--verbose]
                                 one training run
   sweep --model M [--schedules CR,RR,...] [--qmaxes 6,8] [--trials N]
-        [--steps N] [--cycles N] [--csv PATH] [--verbose]
-                                full schedule sweep (one figure panel)
+        [--steps N] [--cycles N] [--jobs N] [--csv PATH] [--verbose]
+                                full schedule sweep (one figure panel);
+                                --jobs N > 1 fans cells over N workers
+                                (results identical to serial)
   range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
                                 discover q_min (paper §3.1)
   preset --file configs/X.toml  run a sweep preset
 
-ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results)"
+ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
+     CPT_JOBS (default sweep worker count, default: 1)"
     );
 }
 
@@ -163,13 +166,13 @@ fn cmd_train(cli: &Cli) -> Result<()> {
 
 fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "model", "schedules", "qmaxes", "trials", "steps", "cycles", "csv",
-        "verbose",
+        "model", "schedules", "qmaxes", "trials", "steps", "cycles", "jobs",
+        "csv", "verbose",
     ])?;
     let model = cli.require("model")?;
     let rec = recipes::recipe(model)?;
     let mut spec = SweepSpec::new(model);
-    if let Some(_) = cli.flag("schedules") {
+    if cli.flag("schedules").is_some() {
         spec.schedules = cli.list_or("schedules", &[]);
     }
     spec.q_maxes = cli
@@ -180,20 +183,24 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     spec.trials = cli.usize_or("trials", 1)?;
     spec.steps = cli.flag("steps").map(|s| s.parse()).transpose()?;
     spec.cycles = cli.flag("cycles").map(|s| s.parse()).transpose()?;
+    spec.jobs = cli.usize_or("jobs", spec.jobs)?;
     spec.verbose = cli.bool("verbose");
 
-    let rt = Runtime::cpu()?;
     let manifest = Manifest::load(artifacts_dir())?;
-    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(model, "metric", rec.higher_is_better);
     rep.print(&rows);
+    println!(
+        "\nsweep wall-clock: {:.2}s for {} cells on {} worker(s)",
+        timing.wall_seconds, timing.cells, timing.jobs
+    );
     let csv = cli.str_or(
         "csv",
         &results_dir().join(format!("sweep_{model}.csv")).to_string_lossy(),
     );
-    rep.write_csv(&rows, &csv)?;
-    println!("\nwrote {csv}");
+    rep.write_csv_with_timing(&rows, timing, &csv)?;
+    println!("wrote {csv}");
     Ok(())
 }
 
@@ -272,9 +279,11 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
     if let Some(v) = s.get("cycles") {
         spec.cycles = Some(v.as_usize()?);
     }
-    let rt = Runtime::cpu()?;
+    if let Some(v) = s.get("jobs") {
+        spec.jobs = v.as_usize()?;
+    }
     let manifest = Manifest::load(artifacts_dir())?;
-    let outs = run_sweep(&rt, &manifest, &spec)?;
+    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let title = doc
         .get("", "title")
@@ -283,8 +292,12 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
         .to_string();
     let rep = SweepReport::new(&title, "metric", rec.higher_is_better);
     rep.print(&rows);
+    println!(
+        "\nsweep wall-clock: {:.2}s for {} cells on {} worker(s)",
+        timing.wall_seconds, timing.cells, timing.jobs
+    );
     let csv = results_dir().join(format!("{title}.csv"));
-    rep.write_csv(&rows, &csv)?;
-    println!("\nwrote {}", csv.display());
+    rep.write_csv_with_timing(&rows, timing, &csv)?;
+    println!("wrote {}", csv.display());
     Ok(())
 }

@@ -6,11 +6,16 @@
 //! because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized
 //! protos.
 //!
-//! `LoadedModel` exposes the four entry points of each exported model and
-//! owns the training state (flat param/opt vectors) as host literals
-//! between calls. The PJRT shim returns outputs as a single tuple literal
-//! (untuple_result=false in the C layer), so a host roundtrip per call is
-//! unavoidable; the train-*chunk* artifact amortizes it over K optimizer
+//! `LoadedModel` exposes the four entry points of each exported model.
+//! Training state lives on the *host* as flat `Vec<f32>` buffers
+//! (`HostVec`) between calls: the PJRT shim returns outputs as a single
+//! tuple literal (untuple_result=false in the C layer), so one
+//! host-download per call is unavoidable — but the upload side is a
+//! single `Literal` build per `advance`, with **no** `clone_literal`
+//! roundtrips on the hot path (see rust/DESIGN-perf.md). Executables
+//! take arguments by reference (`call_refs`), so shared/eval literals
+//! can be cached by the trainer and reused across chunk calls. The
+//! train-*chunk* artifact amortizes the per-call cost over K optimizer
 //! steps (see DESIGN.md §2 and EXPERIMENTS.md §Perf).
 
 pub mod artifact;
@@ -23,7 +28,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-/// Shared PJRT client (CPU). One per process.
+/// Shared PJRT client (CPU). One per process *thread-domain*: PJRT
+/// handles are not Sync, so the parallel sweep executor builds one
+/// Runtime per worker thread.
 pub struct Runtime {
     client: PjRtClient,
 }
@@ -76,7 +83,14 @@ pub struct CompiledFn {
 impl CompiledFn {
     /// Execute and untuple the single tuple output into literals.
     pub fn call(&self, args: &[Literal]) -> Result<Vec<Literal>> {
-        let outs = self.exe.execute::<Literal>(args)?;
+        let refs: Vec<&Literal> = args.iter().collect();
+        self.call_refs(&refs)
+    }
+
+    /// Execute with borrowed arguments — lets callers keep literals
+    /// cached across calls instead of rebuilding (or cloning) them.
+    pub fn call_refs(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let outs = self.exe.execute::<&Literal>(args)?;
         let lit = outs[0][0].to_literal_sync()?;
         Ok(lit.to_tuple()?)
     }
@@ -135,8 +149,12 @@ impl HostTensor {
     }
 
     /// Stack K same-shaped tensors along a new leading axis.
+    ///
+    /// Allocates a fresh buffer per call; the hot path uses
+    /// [`LiteralArena::stack_literal`] instead, which writes into
+    /// reusable scratch memory.
     pub fn stack(ts: &[HostTensor]) -> Result<HostTensor> {
-        let first = ts.first().context("empty stack")?;
+        let first = ts.first().context("stack: empty input")?;
         let mut shape = vec![ts.len()];
         shape.extend_from_slice(first.shape());
         match first {
@@ -145,10 +163,17 @@ impl HostTensor {
                     Vec::with_capacity(s0.iter().product::<usize>() * ts.len());
                 for t in ts {
                     match t {
-                        HostTensor::F32(s, d) if s == s0 => {
-                            data.extend_from_slice(d)
+                        HostTensor::F32(s, d) => {
+                            if s != s0 {
+                                bail!(
+                                    "stack: shape mismatch ({s:?} vs {s0:?})"
+                                );
+                            }
+                            data.extend_from_slice(d);
                         }
-                        _ => bail!("stack: mismatched tensors"),
+                        HostTensor::I32(..) => {
+                            bail!("stack: dtype mismatch (i32 among f32)")
+                        }
                     }
                 }
                 Ok(HostTensor::F32(shape, data))
@@ -158,10 +183,17 @@ impl HostTensor {
                     Vec::with_capacity(s0.iter().product::<usize>() * ts.len());
                 for t in ts {
                     match t {
-                        HostTensor::I32(s, d) if s == s0 => {
-                            data.extend_from_slice(d)
+                        HostTensor::I32(s, d) => {
+                            if s != s0 {
+                                bail!(
+                                    "stack: shape mismatch ({s:?} vs {s0:?})"
+                                );
+                            }
+                            data.extend_from_slice(d);
                         }
-                        _ => bail!("stack: mismatched tensors"),
+                        HostTensor::F32(..) => {
+                            bail!("stack: dtype mismatch (f32 among i32)")
+                        }
                     }
                 }
                 Ok(HostTensor::I32(shape, data))
@@ -170,11 +202,226 @@ impl HostTensor {
     }
 }
 
-/// Training state: flat parameter + optimizer-state vectors, kept as host
-/// literals between chunk calls.
+// ------------------------------------------------------------------ arena
+
+#[derive(Debug)]
+enum Scratch {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Scratch {
+    fn capacity(&self) -> usize {
+        match self {
+            Scratch::F32(v) => v.capacity(),
+            Scratch::I32(v) => v.capacity(),
+        }
+    }
+
+    fn ptr(&self) -> usize {
+        match self {
+            Scratch::F32(v) => v.as_ptr() as usize,
+            Scratch::I32(v) => v.as_ptr() as usize,
+        }
+    }
+}
+
+/// Reusable scratch memory for stacked-minibatch assembly.
+///
+/// One slot per stacked model input: `stack_into(slot, parts)` writes the
+/// K per-step tensors contiguously into the slot's preallocated buffer
+/// (clearing, never shrinking), so the steady-state chunk path performs
+/// zero stacking allocations after the first chunk. Invalidation: a slot
+/// is overwritten by the next `stack_into` on it — callers must consume
+/// (convert to a `Literal`) before restacking the same slot.
+#[derive(Debug, Default)]
+pub struct LiteralArena {
+    slots: Vec<Option<Scratch>>,
+}
+
+impl LiteralArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stack `parts` (same shape + dtype) along a new leading axis into
+    /// slot scratch memory; returns the stacked dims `[K, shape...]`.
+    pub fn stack_into(
+        &mut self,
+        slot: usize,
+        parts: &[&HostTensor],
+    ) -> Result<Vec<i64>> {
+        let first = *parts.first().context("stack: empty input")?;
+        if self.slots.len() <= slot {
+            self.slots.resize_with(slot + 1, || None);
+        }
+        let mut dims: Vec<i64> = Vec::with_capacity(first.shape().len() + 1);
+        dims.push(parts.len() as i64);
+        dims.extend(first.shape().iter().map(|&d| d as i64));
+        match first {
+            HostTensor::F32(s0, _) => {
+                let buf = self.f32_buf(slot);
+                buf.clear();
+                for &t in parts {
+                    match t {
+                        HostTensor::F32(s, d) => {
+                            if s != s0 {
+                                bail!(
+                                    "stack: shape mismatch ({s:?} vs {s0:?})"
+                                );
+                            }
+                            buf.extend_from_slice(d);
+                        }
+                        HostTensor::I32(..) => {
+                            bail!("stack: dtype mismatch (i32 among f32)")
+                        }
+                    }
+                }
+            }
+            HostTensor::I32(s0, _) => {
+                let buf = self.i32_buf(slot);
+                buf.clear();
+                for &t in parts {
+                    match t {
+                        HostTensor::I32(s, d) => {
+                            if s != s0 {
+                                bail!(
+                                    "stack: shape mismatch ({s:?} vs {s0:?})"
+                                );
+                            }
+                            buf.extend_from_slice(d);
+                        }
+                        HostTensor::F32(..) => {
+                            bail!("stack: dtype mismatch (f32 among i32)")
+                        }
+                    }
+                }
+            }
+        }
+        Ok(dims)
+    }
+
+    /// Stack into slot scratch and build the device literal.
+    pub fn stack_literal(
+        &mut self,
+        slot: usize,
+        parts: &[&HostTensor],
+    ) -> Result<Literal> {
+        let dims = self.stack_into(slot, parts)?;
+        match self.slots[slot].as_ref().unwrap() {
+            Scratch::F32(v) => Ok(Literal::vec1(v.as_slice()).reshape(&dims)?),
+            Scratch::I32(v) => Ok(Literal::vec1(v.as_slice()).reshape(&dims)?),
+        }
+    }
+
+    fn f32_buf(&mut self, slot: usize) -> &mut Vec<f32> {
+        if !matches!(self.slots[slot], Some(Scratch::F32(_))) {
+            self.slots[slot] = Some(Scratch::F32(Vec::new()));
+        }
+        match self.slots[slot] {
+            Some(Scratch::F32(ref mut v)) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    fn i32_buf(&mut self, slot: usize) -> &mut Vec<i32> {
+        if !matches!(self.slots[slot], Some(Scratch::I32(_))) {
+            self.slots[slot] = Some(Scratch::I32(Vec::new()));
+        }
+        match self.slots[slot] {
+            Some(Scratch::I32(ref mut v)) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Current capacity of a slot's scratch buffer (0 if unused).
+    pub fn slot_capacity(&self, slot: usize) -> usize {
+        match self.slots.get(slot) {
+            Some(Some(s)) => s.capacity(),
+            _ => 0,
+        }
+    }
+
+    /// Address of a slot's scratch buffer — lets tests assert that
+    /// consecutive chunks reuse the same allocation.
+    pub fn slot_ptr(&self, slot: usize) -> usize {
+        match self.slots.get(slot) {
+            Some(Some(s)) => s.ptr(),
+            _ => 0,
+        }
+    }
+
+    /// f32 contents of a slot (None if unused or i32).
+    pub fn slot_f32(&self, slot: usize) -> Option<&[f32]> {
+        match self.slots.get(slot) {
+            Some(Some(Scratch::F32(v))) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// i32 contents of a slot (None if unused or f32).
+    pub fn slot_i32(&self, slot: usize) -> Option<&[i32]> {
+        match self.slots.get(slot) {
+            Some(Some(Scratch::I32(v))) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------- train state
+
+/// A shaped flat f32 buffer kept on the host between executable calls.
+#[derive(Clone, Debug, Default)]
+pub struct HostVec {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostVec {
+    /// Download a literal's contents once (used at init).
+    pub fn from_literal(l: &Literal) -> Result<HostVec> {
+        let shape = l.array_shape()?;
+        if !matches!(shape.ty(), xla::ElementType::F32) {
+            bail!("HostVec: expected f32 state, got {:?}", shape.ty());
+        }
+        Ok(HostVec { dims: shape.dims().to_vec(), data: l.to_vec::<f32>()? })
+    }
+
+    /// Replace contents from an executable output, keeping dims.
+    pub fn refill(&mut self, l: &Literal) -> Result<()> {
+        let v = l.to_vec::<f32>()?;
+        if v.len() != self.data.len() {
+            bail!("HostVec::refill: {} elems, expected {}", v.len(), self.data.len());
+        }
+        self.data = v;
+        Ok(())
+    }
+
+    /// Upload: build the argument literal from the cached host buffer.
+    pub fn to_literal(&self) -> Result<Literal> {
+        Ok(Literal::vec1(self.data.as_slice()).reshape(&self.dims)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Training state: flat parameter + optimizer-state vectors, cached as
+/// host buffers between chunk calls (uploaded once per `advance`, no
+/// `clone_literal` host roundtrips). Plain data, so it is `Send` and can
+/// be checkpointed directly from `params.data` / `opt_state.data`.
 pub struct TrainState {
-    pub params: Literal,
-    pub opt_state: Literal,
+    pub params: HostVec,
+    pub opt_state: HostVec,
     /// Optimizer steps taken so far.
     pub step: usize,
 }
@@ -202,10 +449,9 @@ impl LoadedModel {
         if outs.len() != 2 {
             bail!("init returned {} outputs, want 2", outs.len());
         }
-        let mut it = outs.into_iter();
         Ok(TrainState {
-            params: it.next().unwrap(),
-            opt_state: it.next().unwrap(),
+            params: HostVec::from_literal(&outs[0])?,
+            opt_state: HostVec::from_literal(&outs[1])?,
             step: 0,
         })
     }
@@ -213,14 +459,17 @@ impl LoadedModel {
     /// Advance `k` optimizer steps (k = spec.chunk for the chunk artifact,
     /// 1 for the step artifact). `stacked` are the K-step minibatch
     /// tensors (with leading K axis for the chunk call), `shared` the
-    /// per-chunk tensors, `q_fwd`/`lr`/`seeds` the per-step vectors.
+    /// per-chunk tensors (borrowed, so the trainer can cache them across
+    /// chunks), `q_fwd`/`lr`/`seeds` the per-step vectors. State is
+    /// uploaded once from the cached host buffers and refilled from the
+    /// outputs — zero `clone_literal` roundtrips.
     #[allow(clippy::too_many_arguments)]
     pub fn advance(
         &self,
         state: &mut TrainState,
         k: usize,
-        stacked: Vec<Literal>,
-        shared: Vec<Literal>,
+        stacked: &[Literal],
+        shared: &[Literal],
         q_fwd: &[f32],
         lr: &[f32],
         seeds: &[i32],
@@ -242,40 +491,60 @@ impl LoadedModel {
             bail!("advance: k={k} (chunk={}, step=1 only)", self.spec.chunk)
         };
 
-        let mut args: Vec<Literal> =
-            Vec::with_capacity(stacked.len() + shared.len() + 6);
-        args.push(clone_literal(&state.params)?);
-        args.push(clone_literal(&state.opt_state)?);
-        args.extend(stacked);
-        args.extend(shared);
-        args.push(lit_f32(&[k], q_fwd)?);
-        args.push(lit_f32(&[k], lr)?);
-        args.push(lit_i32(&[k], seeds)?);
-        args.push(scalar_f32(q_bwd));
+        let params = state.params.to_literal()?;
+        let opt = state.opt_state.to_literal()?;
+        let q_lit = lit_f32(&[k], q_fwd)?;
+        let lr_lit = lit_f32(&[k], lr)?;
+        let seed_lit = lit_i32(&[k], seeds)?;
+        let qb_lit = scalar_f32(q_bwd);
 
-        let outs = exe.call(&args)?;
+        let mut args: Vec<&Literal> =
+            Vec::with_capacity(stacked.len() + shared.len() + 6);
+        args.push(&params);
+        args.push(&opt);
+        args.extend(stacked.iter());
+        args.extend(shared.iter());
+        args.push(&q_lit);
+        args.push(&lr_lit);
+        args.push(&seed_lit);
+        args.push(&qb_lit);
+
+        let outs = exe.call_refs(&args)?;
         if outs.len() != 4 {
             bail!("train returned {} outputs, want 4", outs.len());
         }
-        let mut it = outs.into_iter();
-        state.params = it.next().unwrap();
-        state.opt_state = it.next().unwrap();
+        state.params.refill(&outs[0])?;
+        state.opt_state.refill(&outs[1])?;
         state.step += k;
-        let losses = it.next().unwrap().to_vec::<f32>()?;
-        let metrics = it.next().unwrap().to_vec::<f32>()?;
+        let losses = outs[2].to_vec::<f32>()?;
+        let metrics = outs[3].to_vec::<f32>()?;
         Ok(ChunkResult { losses, metrics })
     }
 
-    /// Evaluate on one batch; returns (loss, metric).
+    /// Evaluate on one batch (borrowed, cacheable by the caller);
+    /// returns (loss, metric). Uploads params once — callers looping
+    /// over several eval batches should upload once themselves and use
+    /// `evaluate_prepared`.
     pub fn evaluate(
         &self,
         state: &TrainState,
-        data: Vec<Literal>,
+        data: &[Literal],
     ) -> Result<(f32, f32)> {
-        let mut args = Vec::with_capacity(data.len() + 1);
-        args.push(clone_literal(&state.params)?);
-        args.extend(data);
-        let outs = self.eval.call(&args)?;
+        let params = state.params.to_literal()?;
+        self.evaluate_prepared(&params, data)
+    }
+
+    /// Evaluate with an already-uploaded params literal, so a multi-batch
+    /// evaluation pays the (large) params upload exactly once.
+    pub fn evaluate_prepared(
+        &self,
+        params: &Literal,
+        data: &[Literal],
+    ) -> Result<(f32, f32)> {
+        let mut args: Vec<&Literal> = Vec::with_capacity(data.len() + 1);
+        args.push(params);
+        args.extend(data.iter());
+        let outs = self.eval.call_refs(&args)?;
         if outs.len() != 2 {
             bail!("eval returned {} outputs, want 2", outs.len());
         }
@@ -286,6 +555,8 @@ impl LoadedModel {
 }
 
 /// The xla crate's Literal has no Clone; round-trip through host data.
+/// Kept off the hot path — only the perf bench uses it now, to measure
+/// the legacy state-clone cost against the HostVec upload path.
 pub fn clone_literal(l: &Literal) -> Result<Literal> {
     let shape = l.array_shape()?;
     let dims: Vec<i64> = shape.dims().to_vec();
@@ -299,5 +570,123 @@ pub fn clone_literal(l: &Literal) -> Result<Literal> {
             Ok(Literal::vec1(&v).reshape(&dims)?)
         }
         t => bail!("clone_literal: unsupported type {t:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32t(shape: &[usize], data: &[f32]) -> HostTensor {
+        HostTensor::F32(shape.to_vec(), data.to_vec())
+    }
+
+    fn i32t(shape: &[usize], data: &[i32]) -> HostTensor {
+        HostTensor::I32(shape.to_vec(), data.to_vec())
+    }
+
+    #[test]
+    fn stack_empty_input_errors() {
+        let err = HostTensor::stack(&[]).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn stack_shape_mismatch_errors() {
+        let a = f32t(&[2], &[1.0, 2.0]);
+        let b = f32t(&[3], &[1.0, 2.0, 3.0]);
+        let err = HostTensor::stack(&[a, b]).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn stack_dtype_mismatch_errors() {
+        let a = f32t(&[2], &[1.0, 2.0]);
+        let b = i32t(&[2], &[1, 2]);
+        let err = HostTensor::stack(&[a, b]).unwrap_err().to_string();
+        assert!(err.contains("dtype mismatch"), "{err}");
+    }
+
+    #[test]
+    fn stack_shapes_and_contents() {
+        let a = f32t(&[2], &[1.0, 2.0]);
+        let b = f32t(&[2], &[3.0, 4.0]);
+        match HostTensor::stack(&[a, b]).unwrap() {
+            HostTensor::F32(s, d) => {
+                assert_eq!(s, vec![2, 2]);
+                assert_eq!(d, vec![1.0, 2.0, 3.0, 4.0]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn arena_error_paths_match_stack() {
+        let mut arena = LiteralArena::new();
+        let err = arena.stack_into(0, &[]).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+
+        let a = f32t(&[2], &[1.0, 2.0]);
+        let b = f32t(&[3], &[1.0, 2.0, 3.0]);
+        let err = arena.stack_into(0, &[&a, &b]).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+
+        let c = i32t(&[2], &[1, 2]);
+        let err = arena.stack_into(0, &[&a, &c]).unwrap_err().to_string();
+        assert!(err.contains("dtype mismatch"), "{err}");
+    }
+
+    #[test]
+    fn arena_reuses_allocation_across_chunks() {
+        let mut arena = LiteralArena::new();
+        let a = f32t(&[3], &[1.0, 2.0, 3.0]);
+        let b = f32t(&[3], &[4.0, 5.0, 6.0]);
+
+        // chunk 1
+        let dims = arena.stack_into(0, &[&a, &b]).unwrap();
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(
+            arena.slot_f32(0).unwrap(),
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+        let cap = arena.slot_capacity(0);
+        let ptr = arena.slot_ptr(0);
+        assert!(cap >= 6);
+
+        // chunk 2: same slot, new contents — same allocation
+        let c = f32t(&[3], &[7.0, 8.0, 9.0]);
+        let d = f32t(&[3], &[10.0, 11.0, 12.0]);
+        arena.stack_into(0, &[&c, &d]).unwrap();
+        assert_eq!(
+            arena.slot_f32(0).unwrap(),
+            &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]
+        );
+        assert_eq!(arena.slot_capacity(0), cap, "capacity must not change");
+        assert_eq!(arena.slot_ptr(0), ptr, "buffer must be reused in place");
+    }
+
+    #[test]
+    fn arena_slots_are_independent_and_dtype_switchable() {
+        let mut arena = LiteralArena::new();
+        let a = f32t(&[1], &[1.5]);
+        let y = i32t(&[2], &[7, 8]);
+        arena.stack_into(0, &[&a]).unwrap();
+        arena.stack_into(1, &[&y]).unwrap();
+        assert_eq!(arena.slot_f32(0).unwrap(), &[1.5]);
+        assert_eq!(arena.slot_i32(1).unwrap(), &[7, 8]);
+        assert_eq!(arena.slot_f32(1), None);
+        // a slot can be retyped (drops the old scratch)
+        arena.stack_into(0, &[&y]).unwrap();
+        assert_eq!(arena.slot_i32(0).unwrap(), &[7, 8]);
+        assert_eq!(arena.slot_f32(0), None);
+    }
+
+    #[test]
+    fn arena_unused_slot_accessors() {
+        let arena = LiteralArena::new();
+        assert_eq!(arena.slot_capacity(3), 0);
+        assert_eq!(arena.slot_ptr(3), 0);
+        assert_eq!(arena.slot_f32(3), None);
+        assert_eq!(arena.slot_i32(3), None);
     }
 }

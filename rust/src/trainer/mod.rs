@@ -4,12 +4,17 @@
 //! Per chunk of K optimizer steps:
 //!   1. evaluate the CPT schedule -> q_fwd[K] (integer-rounded bit-widths),
 //!   2. evaluate the LR schedule  -> lr[K],
-//!   3. assemble K minibatches (stacked) + shared inputs,
-//!   4. one PJRT call on the train-chunk executable,
-//!   5. account BitOps, record history, run periodic eval.
+//!   3. assemble K minibatches into arena scratch (stacked) + shared
+//!      inputs (converted to literals once per run when the dataset marks
+//!      them static),
+//!   4. one PJRT call on the train-chunk executable (state uploaded from
+//!      cached host vectors — no clone_literal roundtrips),
+//!   5. account BitOps, record history, run periodic eval (eval-batch
+//!      literals also cached across evals for static datasets).
 //!
 //! Python is never involved; the schedule decisions (the paper's
-//! contribution) all happen here.
+//! contribution) all happen here. Caching invariants are documented in
+//! rust/DESIGN-perf.md.
 
 pub mod checkpoint;
 pub mod lr;
@@ -18,13 +23,13 @@ pub use lr::LrSchedule;
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::data::Dataset;
 use crate::metrics::History;
 use crate::quant::BitOpsAccountant;
-use crate::runtime::{HostTensor, LoadedModel, TrainState};
+use crate::runtime::{HostTensor, LiteralArena, LoadedModel, TrainState};
 use crate::schedule::Schedule;
 use crate::util::prng::Pcg32;
 
@@ -64,6 +69,19 @@ pub struct Trainer<'m, 'd> {
     pub schedule: Schedule,
     pub lr: LrSchedule,
     pub cfg: TrainConfig,
+    /// Reusable scratch for stacked-minibatch assembly (one slot per
+    /// stacked model input).
+    arena: LiteralArena,
+    /// Reusable per-chunk batch rows (outer Vec reused across chunks).
+    rows: Vec<Vec<HostTensor>>,
+    /// Shared-input literals; rebuilt per chunk unless the dataset is
+    /// static, in which case they are built exactly once per run.
+    shared_lits: Vec<Literal>,
+    shared_built: bool,
+    /// Cached eval-batch literals (static datasets only), lazily built
+    /// on first evaluation of each batch index.
+    eval_cache: Vec<Option<Vec<Literal>>>,
+    remainder_noted: bool,
 }
 
 impl<'m, 'd> Trainer<'m, 'd> {
@@ -74,7 +92,19 @@ impl<'m, 'd> Trainer<'m, 'd> {
         lr: LrSchedule,
         cfg: TrainConfig,
     ) -> Self {
-        Trainer { model, data, schedule, lr, cfg }
+        Trainer {
+            model,
+            data,
+            schedule,
+            lr,
+            cfg,
+            arena: LiteralArena::new(),
+            rows: Vec::new(),
+            shared_lits: Vec::new(),
+            shared_built: false,
+            eval_cache: Vec::new(),
+            remainder_noted: false,
+        }
     }
 
     /// Run the full training loop, returning the history.
@@ -99,6 +129,19 @@ impl<'m, 'd> Trainer<'m, 'd> {
             // the chunk executable is fixed at K; use K or fall back to
             // k=1 remainder steps
             let k = if k == chunk { chunk } else { 1 };
+            if k != chunk && !self.remainder_noted {
+                self.remainder_noted = true;
+                // one line per run, and only when this run is verbose —
+                // parallel sweep workers run quiet (their stderr would
+                // interleave across threads)
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[train {}] total_steps {total} not a multiple of chunk {chunk} — running the last {} step(s) via the k=1 artifact",
+                        self.model.spec.name,
+                        total - step,
+                    );
+                }
+            }
 
             let q_fwd = self.schedule.q_vec(step, k);
             let lr_v: Vec<f32> =
@@ -106,11 +149,18 @@ impl<'m, 'd> Trainer<'m, 'd> {
             let seeds: Vec<i32> =
                 (0..k).map(|_| seed_rng.next_u32() as i32).collect();
 
-            let (stacked, shared) = self.assemble_inputs(step, k)?;
+            let stacked = self.stacked_inputs(step, k)?;
+            self.ensure_shared(step)?;
 
             let t0 = Instant::now();
             let res = self.model.advance(
-                &mut state, k, stacked, shared, &q_fwd, &lr_v, &seeds,
+                &mut state,
+                k,
+                &stacked,
+                &self.shared_lits,
+                &q_fwd,
+                &lr_v,
+                &seeds,
                 self.cfg.q_bwd,
             )?;
             exec_s += t0.elapsed().as_secs_f64();
@@ -158,51 +208,82 @@ impl<'m, 'd> Trainer<'m, 'd> {
         Ok(hist)
     }
 
-    /// Mean eval loss/metric over the dataset's eval batches.
+    /// Mean eval loss/metric over the dataset's eval batches. For static
+    /// datasets the batch literals are built once and reused across all
+    /// evaluation points in the run.
     pub fn evaluate(&mut self, state: &TrainState) -> Result<(f32, f32)> {
         let n = self.data.eval_batches();
+        let cacheable = self.data.shared_static();
+        if cacheable && self.eval_cache.len() != n {
+            self.eval_cache = (0..n).map(|_| None).collect();
+        }
+        // upload the (large) params tensor once for all eval batches
+        let params = state.params.to_literal()?;
         let mut sl = 0.0f32;
         let mut sm = 0.0f32;
         for i in 0..n {
-            let batch = self.data.eval_batch(i)?;
-            let lits = to_literals(&batch)?;
-            let (l, m) = self.model.evaluate(state, lits)?;
+            let (l, m) = if cacheable {
+                if self.eval_cache[i].is_none() {
+                    let batch = self.data.eval_batch(i)?;
+                    self.eval_cache[i] = Some(to_literals(&batch)?);
+                }
+                let lits = self.eval_cache[i].as_ref().unwrap();
+                self.model.evaluate_prepared(&params, lits)?
+            } else {
+                let batch = self.data.eval_batch(i)?;
+                let lits = to_literals(&batch)?;
+                self.model.evaluate_prepared(&params, &lits)?
+            };
             sl += l;
             sm += m;
         }
         Ok((sl / n as f32, sm / n as f32))
     }
 
-    /// Build (stacked, shared) literals for a k-step chunk at `step`.
-    fn assemble_inputs(
-        &mut self,
-        step: usize,
-        k: usize,
-    ) -> Result<(Vec<Literal>, Vec<Literal>)> {
-        // collect k per-step batches and stack along a new leading axis
-        let mut per_input: Vec<Vec<HostTensor>> = Vec::new();
+    /// Build the stacked literals for a k-step chunk at `step`, writing
+    /// the stacked buffers into reusable arena scratch memory.
+    fn stacked_inputs(&mut self, step: usize, k: usize) -> Result<Vec<Literal>> {
+        self.rows.clear();
         for i in 0..k {
             let batch = self.data.train_batch(step + i)?;
-            if per_input.is_empty() {
-                per_input = batch.into_iter().map(|t| vec![t]).collect();
-            } else {
-                for (slot, t) in per_input.iter_mut().zip(batch) {
-                    slot.push(t);
+            if let Some(first) = self.rows.first() {
+                if batch.len() != first.len() {
+                    bail!(
+                        "train_batch({}) returned {} tensors, expected {}",
+                        step + i,
+                        batch.len(),
+                        first.len()
+                    );
                 }
             }
+            self.rows.push(batch);
         }
-        let mut stacked = Vec::with_capacity(per_input.len());
-        for ts in &per_input {
-            stacked.push(HostTensor::stack(ts)?.to_literal()?);
+        let n_slots = self.rows.first().map(|r| r.len()).unwrap_or(0);
+        let rows = &self.rows;
+        let arena = &mut self.arena;
+        let mut stacked = Vec::with_capacity(n_slots);
+        for j in 0..n_slots {
+            let parts: Vec<&HostTensor> = rows.iter().map(|r| &r[j]).collect();
+            stacked.push(
+                arena
+                    .stack_literal(j, &parts)
+                    .with_context(|| format!("stacking input slot {j}"))?,
+            );
         }
-        let shared = self
-            .data
-            .shared_inputs(step)?
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()
-            .context("shared inputs")?;
-        Ok((stacked, shared))
+        Ok(stacked)
+    }
+
+    /// Convert shared inputs to literals — once per run for static
+    /// datasets (e.g. the GNN adjacency), per chunk otherwise (e.g.
+    /// SAGE neighbor re-sampling).
+    fn ensure_shared(&mut self, step: usize) -> Result<()> {
+        if self.shared_built && self.data.shared_static() {
+            return Ok(());
+        }
+        let shared = self.data.shared_inputs(step)?;
+        self.shared_lits = to_literals(&shared).context("shared inputs")?;
+        self.shared_built = true;
+        Ok(())
     }
 }
 

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate for the cpt crate: format, lint, tests, and
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only, so the
+# bench target is compiled-and-exercised without paying full bench cost.
+#
+#   scripts/check.sh            # fmt + clippy + tests
+#   scripts/check.sh --smoke    # ... + perf_hotpath smoke run
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+SMOKE=0
+for a in "$@"; do
+  case "$a" in
+    --smoke) SMOKE=1 ;;
+    *) echo "check.sh: unknown arg '$a' (known: --smoke)" >&2; exit 2 ;;
+  esac
+done
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "check.sh: cargo not on PATH — cannot verify (toolchain-less container)" >&2
+  exit 0
+fi
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test -q"
+cargo test -q
+
+if [ "$SMOKE" = 1 ]; then
+  if [ -f artifacts/manifest.json ]; then
+    echo "== perf_hotpath --smoke (1 rep, mlp only)"
+    cargo bench --bench perf_hotpath -- --smoke
+  else
+    echo "== perf_hotpath --smoke: artifacts/manifest.json missing — building only"
+    cargo build --benches
+  fi
+fi
+
+echo "check.sh: OK"
