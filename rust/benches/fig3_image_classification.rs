@@ -4,6 +4,9 @@
 //!
 //!   cargo bench --bench fig3_image_classification
 //!   CPT_BENCH_SCALE=full cargo bench --bench fig3_image_classification
+//!
+//! Set CPT_RUN_DIR=runs to persist per-cell artifacts and resume a
+//! killed run where it stopped (full-scale panels are hours long).
 
 use cpt::prelude::*;
 
@@ -23,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         spec.trials = scale.trials();
         spec.steps = Some(scale.steps(256, 320));
         spec.verbose = true;
+        spec.apply_env_run_dir(&manifest)?;
         let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!(

@@ -2,6 +2,9 @@
 //! vs training GBitOps, schedule suite × q_max ∈ {6, 8}.
 //!
 //!   cargo bench --bench fig4_detection
+//!
+//! Set CPT_RUN_DIR=runs to persist per-cell artifacts and resume a
+//! killed run where it stopped.
 
 use cpt::prelude::*;
 
@@ -13,6 +16,7 @@ fn main() -> anyhow::Result<()> {
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(192, 256));
     spec.verbose = true;
+    spec.apply_env_run_dir(&manifest)?;
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(

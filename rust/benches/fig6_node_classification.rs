@@ -3,6 +3,9 @@
 //! GraphSAGE (OGBN-Products stand-in), each with FP-Agg and Q-Agg.
 //!
 //!   cargo bench --bench fig6_node_classification
+//!
+//! Set CPT_RUN_DIR=runs to persist per-cell artifacts and resume a
+//! killed run where it stopped.
 
 use cpt::prelude::*;
 
@@ -14,6 +17,7 @@ fn main() -> anyhow::Result<()> {
         let mut spec = SweepSpec::new(model);
         spec.trials = scale.trials();
         spec.steps = Some(scale.steps(240, 480));
+        spec.apply_env_run_dir(&manifest)?;
         let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!("Fig 6 ({model}): accuracy vs GBitOps");

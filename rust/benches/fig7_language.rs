@@ -4,6 +4,9 @@
 //! (paper §4.4 short-horizon setting).
 //!
 //!   cargo bench --bench fig7_language
+//!
+//! Set CPT_RUN_DIR=runs to persist per-cell artifacts and resume a
+//! killed run where it stopped.
 
 use cpt::prelude::*;
 
@@ -16,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(160, 400));
     spec.cycles = Some(2);
+    spec.apply_env_run_dir(&manifest)?;
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(
@@ -31,6 +35,7 @@ fn main() -> anyhow::Result<()> {
     spec.trials = scale.trials();
     spec.steps = Some(scale.steps(120, 240));
     spec.cycles = Some(2);
+    spec.apply_env_run_dir(&manifest)?;
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(

@@ -205,6 +205,31 @@ verbose = false
     }
 
     #[test]
+    fn parses_sharded_preset_fields() {
+        // the sharding/persistence keys cmd_preset reads: shard is an
+        // "I/N" string, run_dir a path string, resume a bool
+        let doc = TomlDoc::parse(
+            r#"
+title = "fig3_shard1"
+
+[sweep]
+model = "cnn_tiny"
+trials = 3
+shard = "1/4"
+run_dir = "runs/fig3/shard1"
+resume = true
+"#,
+        )
+        .unwrap();
+        let s = doc.section("sweep").unwrap();
+        assert_eq!(s["shard"].as_str().unwrap(), "1/4");
+        assert_eq!(s["run_dir"].as_str().unwrap(), "runs/fig3/shard1");
+        assert!(s["resume"].as_bool().unwrap());
+        // shard must be written as a string — a bare 1/4 is not a value
+        assert!(TomlDoc::parse("[sweep]\nshard = 1/4").is_err());
+    }
+
+    #[test]
     fn comment_inside_string_kept() {
         let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
         assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");

@@ -8,23 +8,33 @@
 //! and `SweepReport` prints rows of (schedule, group, GBitOps, metric ±
 //! std) plus writes CSV under results/.
 //!
-//! Execution model: the sweep is flattened into an ordered list of
-//! cells (schedule × q_max × trial). With `jobs == 1` the cells run
-//! serially on the caller's `Runtime`. With `jobs > 1` a work-queue
-//! executor fans the cells out over a thread pool — PJRT handles are
-//! not Sync, so each worker builds its own client and compiles its own
-//! `LoadedModel` once from the shared, pre-validated `ModelSpec` —
-//! and results funnel through a channel into index-ordered collection,
-//! so the output is byte-identical to serial mode (every cell is a
-//! fully seeded, independent run). See rust/DESIGN-perf.md.
+//! Execution model: plan → execute → merge. [`plan::SweepPlan`] flattens
+//! the spec into an ordered, content-hashed cell list (schedule × q_max ×
+//! trial) and assigns this process its shard (`--shard I/N`, round-robin
+//! by canonical index). The executor runs the owned cells — serially on
+//! one `Runtime` when `jobs == 1`, or over a work-queue thread pool (PJRT
+//! handles are not Sync, so each worker builds its own client) — with
+//! results funneled into index-ordered slots, so output is byte-identical
+//! to serial mode (every cell is a fully seeded, independent run). When a
+//! run directory is given, each completed cell is persisted through
+//! [`store::RunStore`] and cells with valid artifacts are skipped on
+//! re-run, which makes crash/preempt resume free; `cpt merge` (backed by
+//! [`store::merge_run_dirs`]) validates and recombines shard directories
+//! into the single-process result. See rust/DESIGN-sharding.md and
+//! rust/DESIGN-perf.md.
 
+pub mod plan;
 pub mod recipes;
 pub mod report;
+pub mod store;
 
+pub use plan::{PlannedCell, ShardId, SweepPlan};
 pub use recipes::{dataset_for, recipe, report_metric, Recipe};
 pub use report::SweepReport;
+pub use store::{merge_run_dirs, RunStore};
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -54,6 +64,20 @@ pub struct SweepSpec {
     /// Worker threads for the sweep executor (1 = serial on the caller's
     /// Runtime). Defaults to `cpt::default_jobs()` (the CPT_JOBS env var).
     pub jobs: usize,
+    /// Shard assignment (`I/N`): run only the cells this shard owns.
+    /// None = the whole sweep (equivalent to `1/1`).
+    pub shard: Option<ShardId>,
+    /// Persist one artifact per completed cell into this run directory
+    /// (required for multi-shard runs, useful for crash resume on any).
+    pub run_dir: Option<PathBuf>,
+    /// Allow reopening an existing run directory, skipping cells whose
+    /// valid artifacts are already recorded.
+    pub resume: bool,
+    /// Cached `store::model_fingerprint` (set by `apply_env_run_dir`, or
+    /// by any caller that already computed it) so the executor does not
+    /// re-read every HLO artifact file. Purely an I/O cache — never part
+    /// of the spec hash; computed on demand when absent.
+    pub model_fingerprint: Option<String>,
 }
 
 impl SweepSpec {
@@ -72,7 +96,37 @@ impl SweepSpec {
             eval_every: 0,
             verbose: false,
             jobs: crate::default_jobs(),
+            shard: None,
+            run_dir: None,
+            resume: false,
+            model_fingerprint: None,
         }
+    }
+
+    /// Bench-style env wiring: if CPT_RUN_DIR is set (the bench targets
+    /// have no CLI, so the env var is their `--run-dir`), persist cell
+    /// artifacts under
+    /// `<CPT_RUN_DIR>/<model>-<spec_hash[..8]>-<model_fingerprint[..8]>`
+    /// and resume across reruns. Both hashes in the directory name mean
+    /// neither a changed spec nor a regenerated `artifacts/` tree ever
+    /// collides with stale artifacts (each gets a fresh directory rather
+    /// than a resume failure), so blanket resume is safe — a killed
+    /// figure bench continues exactly where it stopped.
+    pub fn apply_env_run_dir(&mut self, manifest: &Manifest) -> Result<()> {
+        if let Ok(base) = std::env::var("CPT_RUN_DIR") {
+            if !base.is_empty() {
+                let fp =
+                    store::model_fingerprint(manifest.model(&self.model)?)?;
+                self.run_dir = Some(plan::run_dir_under(
+                    Path::new(&base),
+                    self,
+                    &fp,
+                )?);
+                self.resume = true;
+                self.model_fingerprint = Some(fp);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -109,7 +163,10 @@ pub fn sweep_cells(spec: &SweepSpec) -> Vec<SweepCell> {
 pub struct SweepTiming {
     pub wall_seconds: f64,
     pub jobs: usize,
+    /// Cells this process was responsible for (the shard's share).
     pub cells: usize,
+    /// Cells skipped because a valid artifact already existed.
+    pub resumed: usize,
 }
 
 /// Result of one training run.
@@ -211,61 +268,133 @@ pub fn run_sweep(
     run_sweep_timed(manifest, spec).map(|(outs, _)| outs)
 }
 
-/// Execute a full sweep spec, returning outcomes in canonical cell
-/// order plus wall-clock timing. `spec.jobs > 1` selects the parallel
-/// work-queue executor; outcomes are bit-identical to serial execution
-/// (each cell is independently seeded), only wall-clock changes.
-/// The executor owns its PJRT client(s) — one for the serial path, one
-/// per worker in parallel mode — so callers never build an idle one.
+/// Execute a sweep spec's owned shard, returning outcomes in canonical
+/// cell order plus wall-clock timing.
+///
+/// The spec is first compiled into a [`SweepPlan`] (stable cell order +
+/// content hash). With `spec.run_dir` set, a [`RunStore`] is opened and
+/// cells whose valid artifacts already exist are loaded instead of
+/// re-trained; every freshly computed cell is persisted before the sweep
+/// moves on, so a crash loses at most the in-flight cells. `spec.jobs >
+/// 1` selects the parallel work-queue executor; outcomes are bit-identical
+/// to serial execution (each cell is independently seeded), only
+/// wall-clock changes. The executor owns its PJRT client(s) — one for the
+/// serial path, one per worker in parallel mode — so callers never build
+/// an idle one.
 pub fn run_sweep_timed(
     manifest: &Manifest,
     spec: &SweepSpec,
 ) -> Result<(Vec<RunOutcome>, SweepTiming)> {
     let t0 = Instant::now();
-    let cells = sweep_cells(spec);
-    let jobs = spec.jobs.max(1).min(cells.len().max(1));
-    let outs = if jobs <= 1 {
-        run_cells_serial(manifest, spec, &cells)?
-    } else {
-        run_cells_parallel(manifest, spec, &cells, jobs)?
+    let plan = SweepPlan::build(spec)?;
+    if plan.shard.count > 1 && spec.run_dir.is_none() {
+        // enforced here, not just in the CLI: a multi-shard run with no
+        // store would silently return a partial sweep that aggregates
+        // into a full-looking (and wrong) figure panel
+        anyhow::bail!(
+            "sharded sweep ({}) needs a run directory: the shard's cells \
+             must be persisted for `cpt merge` to combine them",
+            plan.shard
+        );
+    }
+    let mut store = match &spec.run_dir {
+        Some(dir) => {
+            // fingerprint the compiled model so resume/merge can detect a
+            // regenerated artifacts/ tree the spec hash cannot see; honor
+            // a caller-supplied cache to avoid re-reading the HLO files
+            let fp = match &spec.model_fingerprint {
+                Some(fp) => fp.clone(),
+                None => {
+                    store::model_fingerprint(manifest.model(&spec.model)?)?
+                }
+            };
+            Some(RunStore::open(dir, &plan, &fp, spec.resume)?)
+        }
+        None => None,
     };
+    let owned = plan.owned();
+    let mut slots: Vec<Option<RunOutcome>> = vec![None; owned.len()];
+    let mut todo: Vec<usize> = Vec::new();
+    let mut resumed = 0usize;
+    for (pos, pc) in owned.iter().enumerate() {
+        // one read per artifact: validation failures drop the entry and
+        // fall through to recomputation
+        match store.as_mut().and_then(|st| st.take_valid_outcome(pc.index)) {
+            Some(out) => {
+                slots[pos] = Some(out);
+                resumed += 1;
+            }
+            None => todo.push(pos),
+        }
+    }
+    if spec.verbose && resumed > 0 {
+        if let Some(st) = &store {
+            eprintln!(
+                "[sweep] resumed {resumed}/{} cells from {}",
+                owned.len(),
+                st.dir().display()
+            );
+        }
+    }
+    let jobs = spec.jobs.max(1).min(todo.len().max(1));
+    if !todo.is_empty() {
+        if jobs <= 1 {
+            run_todo_serial(
+                manifest,
+                spec,
+                &plan,
+                &owned,
+                &todo,
+                &mut slots,
+                store.as_mut(),
+            )?;
+        } else {
+            run_todo_parallel(
+                manifest,
+                spec,
+                &plan,
+                &owned,
+                &todo,
+                &mut slots,
+                store.as_mut(),
+                jobs,
+            )?;
+        }
+    }
     let timing = SweepTiming {
         wall_seconds: t0.elapsed().as_secs_f64(),
         jobs,
-        cells: cells.len(),
+        cells: owned.len(),
+        resumed,
     };
-    Ok((outs, timing))
-}
-
-fn sweep_params(spec: &SweepSpec) -> Result<(usize, usize)> {
-    let rec = recipe(&spec.model)?;
-    Ok((
-        spec.steps.unwrap_or(rec.steps),
-        spec.cycles.unwrap_or(rec.cycles),
-    ))
+    Ok((slots.into_iter().flatten().collect(), timing))
 }
 
 /// Serial executor: builds one PJRT client, loads the model once, and
 /// reuses the compiled executables across every cell (compilation is the
-/// dominant fixed cost on this testbed).
-fn run_cells_serial(
+/// dominant fixed cost on this testbed). `todo` holds positions into
+/// `owned`/`slots` for the cells that still need computing.
+fn run_todo_serial(
     manifest: &Manifest,
     spec: &SweepSpec,
-    cells: &[SweepCell],
-) -> Result<Vec<RunOutcome>> {
-    let (steps, cycles) = sweep_params(spec)?;
+    plan: &SweepPlan,
+    owned: &[PlannedCell],
+    todo: &[usize],
+    slots: &mut [Option<RunOutcome>],
+    mut store: Option<&mut RunStore>,
+) -> Result<()> {
     let rt = Runtime::cpu()?;
     let model = rt.load_model(manifest.model(&spec.model)?)?;
-    let mut outs = Vec::with_capacity(cells.len());
-    for cell in cells {
+    for &pos in todo {
+        let pc = &owned[pos];
         let out = run_one(
             &model,
             &spec.model,
-            &cell.schedule,
-            cell.q_max,
-            cell.trial,
-            steps,
-            cycles,
+            &pc.cell.schedule,
+            pc.cell.q_max,
+            pc.cell.trial,
+            plan.steps,
+            plan.cycles,
             spec.eval_every,
             spec.verbose,
         )?;
@@ -273,35 +402,53 @@ fn run_cells_serial(
             eprintln!(
                 "[sweep] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
                 spec.model,
-                cell.schedule,
-                cell.q_max,
-                cell.trial,
+                pc.cell.schedule,
+                pc.cell.q_max,
+                pc.cell.trial,
                 out.metric,
                 out.gbitops
             );
         }
-        outs.push(out);
+        if let Some(st) = store.as_mut() {
+            st.record(pc.index, &out)?;
+        }
+        slots[pos] = Some(out);
     }
-    Ok(outs)
+    Ok(())
 }
 
-/// Parallel work-queue executor. Workers pull cell indices from a shared
-/// atomic cursor; each worker owns a private PJRT client + compiled
-/// model (compiled once, from the shared pre-validated `ModelSpec`), and
-/// sends `(index, result)` down a channel. The collector writes results
-/// into index-addressed slots, so the returned order — and the values,
-/// since every cell is an independently seeded run — match the serial
-/// executor exactly. First error (lowest cell index) wins; remaining
-/// workers drain out via a stop flag.
-fn run_cells_parallel(
+/// Parallel work-queue executor. Workers pull todo positions from a
+/// shared atomic cursor; each worker owns a private PJRT client +
+/// compiled model (compiled once, from the shared pre-validated
+/// `ModelSpec`), and sends `(todo index, result)` down a channel. The
+/// collector writes results into position-addressed slots — and records
+/// them in the run store, serializing all artifact writes on one thread —
+/// so the returned order and values match the serial executor exactly.
+/// First error (lowest todo index) wins; remaining workers drain out via
+/// a stop flag.
+#[allow(clippy::too_many_arguments)]
+fn run_todo_parallel(
     manifest: &Manifest,
     spec: &SweepSpec,
-    cells: &[SweepCell],
+    plan: &SweepPlan,
+    owned: &[PlannedCell],
+    todo: &[usize],
+    slots: &mut [Option<RunOutcome>],
+    mut store: Option<&mut RunStore>,
     jobs: usize,
-) -> Result<Vec<RunOutcome>> {
-    let (steps, cycles) = sweep_params(spec)?;
+) -> Result<()> {
     let model_spec = manifest.model(&spec.model)?.clone();
     model_spec.validate()?; // fail fast, before spawning any workers
+
+    if spec.verbose {
+        // workers run with per-step logging off (interleaved multi-cell
+        // step logs would be unreadable); say so instead of silently
+        // dropping the output the user asked for
+        eprintln!(
+            "[sweep j{jobs}] note: per-step training logs are disabled in \
+             parallel mode; per-cell summaries only"
+        );
+    }
 
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
@@ -311,10 +458,9 @@ fn run_cells_parallel(
     // non-fatal as long as other workers drain the queue
     const SETUP_ERR: usize = usize::MAX;
 
-    let mut slots: Vec<Option<RunOutcome>> = Vec::new();
-    slots.resize_with(cells.len(), || None);
     let mut first_err: Option<(usize, anyhow::Error)> = None;
     let mut setup_err: Option<anyhow::Error> = None;
+    let mut store_err: Option<anyhow::Error> = None;
 
     std::thread::scope(|scope| {
         for _ in 0..jobs {
@@ -348,26 +494,26 @@ fn run_cells_parallel(
                     if stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    let idx = cursor.fetch_add(1, Ordering::SeqCst);
-                    if idx >= cells.len() {
+                    let ti = cursor.fetch_add(1, Ordering::SeqCst);
+                    if ti >= todo.len() {
                         break;
                     }
-                    let cell = &cells[idx];
+                    let pc = &owned[todo[ti]];
                     let res = run_one(
                         &model,
                         &spec.model,
-                        &cell.schedule,
-                        cell.q_max,
-                        cell.trial,
-                        steps,
-                        cycles,
+                        &pc.cell.schedule,
+                        pc.cell.q_max,
+                        pc.cell.trial,
+                        plan.steps,
+                        plan.cycles,
                         spec.eval_every,
                         false, // workers never write per-step logs
                     );
                     if res.is_err() {
                         stop.store(true, Ordering::SeqCst);
                     }
-                    if tx.send((idx, res)).is_err() {
+                    if tx.send((ti, res)).is_err() {
                         break;
                     }
                 }
@@ -375,9 +521,11 @@ fn run_cells_parallel(
         }
         drop(tx); // collector exits once all workers hang up
 
-        for (idx, res) in rx {
+        for (ti, res) in rx {
             match res {
                 Ok(out) => {
+                    let pos = todo[ti];
+                    let pc = &owned[pos];
                     if spec.verbose {
                         eprintln!(
                             "[sweep j{jobs}] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
@@ -389,47 +537,60 @@ fn run_cells_parallel(
                             out.gbitops
                         );
                     }
-                    slots[idx] = Some(out);
+                    if store_err.is_none() {
+                        if let Some(st) = store.as_mut() {
+                            if let Err(e) = st.record(pc.index, &out) {
+                                // persistence failure is fatal: stop
+                                // claiming new cells, drain, and report
+                                stop.store(true, Ordering::SeqCst);
+                                store_err = Some(e);
+                            }
+                        }
+                    }
+                    slots[pos] = Some(out);
                 }
-                Err(e) if idx == SETUP_ERR => {
+                Err(e) if ti == SETUP_ERR => {
                     if setup_err.is_none() {
                         setup_err = Some(e);
                     }
                 }
                 Err(e) => {
                     let is_first =
-                        first_err.as_ref().map_or(true, |(i, _)| idx < *i);
+                        first_err.as_ref().map_or(true, |(i, _)| ti < *i);
                     if is_first {
-                        first_err = Some((idx, e));
+                        first_err = Some((ti, e));
                     }
                 }
             }
         }
     });
 
+    let done = todo.iter().filter(|&&p| slots[p].is_some()).count();
     // a real cell failure always wins (reported at its true index)
-    if let Some((idx, e)) = first_err {
+    if let Some((ti, e)) = first_err {
         return Err(e.context(format!(
-            "parallel sweep failed at cell {idx} ({}/{} complete)",
-            slots.iter().filter(|s| s.is_some()).count(),
-            cells.len()
+            "parallel sweep failed at cell {} ({done}/{} complete)",
+            owned[todo[ti]].index,
+            todo.len()
         )));
     }
-    let done = slots.iter().filter(|s| s.is_some()).count();
-    if done != cells.len() {
+    if let Some(e) = store_err {
+        return Err(e.context("persisting sweep cell artifact"));
+    }
+    if done != todo.len() {
         // cells went unclaimed — only possible if workers died on setup
         let e = setup_err
             .unwrap_or_else(|| anyhow::anyhow!("worker(s) exited early"));
         return Err(e.context(format!(
             "parallel sweep incomplete: {done}/{} cells ran",
-            cells.len()
+            todo.len()
         )));
     }
     if let Some(e) = setup_err {
         // all cells ran on the surviving workers — degraded but complete
         eprintln!("[sweep] note: a worker failed to initialize ({e:#}); sweep completed on the remaining workers");
     }
-    Ok(slots.into_iter().flatten().collect())
+    Ok(())
 }
 
 /// Aggregate outcomes over trials. Single pass: grouped via a HashMap
@@ -587,6 +748,10 @@ mod tests {
         assert!(spec.schedules.contains(&"STATIC".to_string()));
         assert_eq!(spec.q_maxes, vec![6.0, 8.0]);
         assert!(spec.jobs >= 1);
+        // sharding/persistence are opt-in
+        assert_eq!(spec.shard, None);
+        assert!(spec.run_dir.is_none());
+        assert!(!spec.resume);
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Deterministic sweep planning and sharding.
+//!
+//! A [`SweepPlan`] is the canonical, content-addressed description of the
+//! work in one sweep: the ordered cell list (identical to the historical
+//! serial nesting in [`super::sweep_cells`]), a spec hash over everything
+//! that determines results, and a shard assignment. Two processes that
+//! build a plan from the same spec agree bit-for-bit on cell order, cell
+//! indices, and the hash — that agreement is what makes shard artifacts
+//! mergeable and crash resume safe (see rust/DESIGN-sharding.md).
+//!
+//! Partitioning is round-robin by canonical cell index: shard `i/N` owns
+//! every cell whose index ≡ i-1 (mod N). This is trivially deterministic,
+//! disjoint, covering, and balanced to within one cell, and it spreads
+//! the expensive q_max/schedule combinations across shards instead of
+//! giving one machine all of them.
+
+use std::fmt;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::recipes::recipe;
+use super::{sweep_cells, SweepCell, SweepSpec};
+use crate::util::hash::fnv1a64_hex;
+
+/// One shard of a partitioned sweep, parsed from `I/N` (1-based).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardId {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardId {
+    /// The trivial partition: one shard owning every cell.
+    pub fn single() -> ShardId {
+        ShardId { index: 1, count: 1 }
+    }
+
+    /// Parse `"I/N"` (e.g. `"2/4"`); both 1-based, `1 <= I <= N`.
+    pub fn parse(s: &str) -> Result<ShardId> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("shard '{s}' is not of the form I/N"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard index in '{s}'"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard count in '{s}'"))?;
+        if count == 0 || index == 0 || index > count {
+            bail!("shard '{s}' out of range (need 1 <= I <= N, N >= 1)");
+        }
+        Ok(ShardId { index, count })
+    }
+
+    /// Does this shard own the cell at canonical index `cell_index`?
+    pub fn owns(&self, cell_index: usize) -> bool {
+        cell_index % self.count == self.index - 1
+    }
+}
+
+impl fmt::Display for ShardId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// A cell tagged with its canonical index in the full plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedCell {
+    pub index: usize,
+    pub cell: SweepCell,
+}
+
+/// The deterministic execution plan for one sweep spec.
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    pub model: String,
+    /// Resolved step count (spec override or recipe default).
+    pub steps: usize,
+    /// Resolved cycle count.
+    pub cycles: usize,
+    /// Content hash over everything that determines results (16 hex
+    /// chars). Execution knobs — jobs, verbose, shard, run_dir, resume —
+    /// are deliberately excluded: they change how the sweep runs, never
+    /// what it computes.
+    pub spec_hash: String,
+    /// Full canonical cell list (all shards).
+    pub cells: Vec<SweepCell>,
+    pub shard: ShardId,
+}
+
+impl SweepPlan {
+    /// Build the plan: resolve recipe defaults, enumerate cells in the
+    /// canonical order, and hash the result-determining spec fields.
+    pub fn build(spec: &SweepSpec) -> Result<SweepPlan> {
+        let rec = recipe(&spec.model)?;
+        let steps = spec.steps.unwrap_or(rec.steps);
+        let cycles = spec.cycles.unwrap_or(rec.cycles);
+        let cells = sweep_cells(spec);
+        let shard = spec.shard.unwrap_or_else(ShardId::single);
+
+        // Canonical description string; any change to it is a format
+        // break, so it carries its own version tag.
+        let mut desc = String::new();
+        let _ = write!(
+            desc,
+            "cpt-sweep-v1;model={};steps={steps};cycles={cycles};trials={};eval_every={}",
+            spec.model, spec.trials, spec.eval_every
+        );
+        desc.push_str(";schedules=");
+        desc.push_str(&spec.schedules.join(","));
+        desc.push_str(";q_maxes=");
+        for (i, q) in spec.q_maxes.iter().enumerate() {
+            if i > 0 {
+                desc.push(',');
+            }
+            let _ = write!(desc, "{q}");
+        }
+        let spec_hash = fnv1a64_hex(desc.as_bytes());
+
+        Ok(SweepPlan {
+            model: spec.model.clone(),
+            steps,
+            cycles,
+            spec_hash,
+            cells,
+            shard,
+        })
+    }
+
+    pub fn total_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// The cells this plan's shard owns, in canonical order.
+    pub fn owned(&self) -> Vec<PlannedCell> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.shard.owns(*i))
+            .map(|(index, cell)| PlannedCell { index, cell: cell.clone() })
+            .collect()
+    }
+}
+
+/// Derive a per-spec run directory under `base`:
+/// `<base>/<model>-<spec_hash[..8]>-<model_fingerprint[..8]>`. Because
+/// both hashes are in the name, neither a changed spec nor a regenerated
+/// `artifacts/` tree ever collides with stale artifacts — each lands in
+/// its own fresh directory instead of tripping the store's mismatch
+/// fences — which is what makes blanket resume (e.g. via the CPT_RUN_DIR
+/// env var in benches) safe.
+pub fn run_dir_under(
+    base: &Path,
+    spec: &SweepSpec,
+    model_fingerprint: &str,
+) -> Result<PathBuf> {
+    let plan = SweepPlan::build(spec)?;
+    let fp8 = &model_fingerprint[..model_fingerprint.len().min(8)];
+    Ok(base.join(format!("{}-{}-{}", spec.model, &plan.spec_hash[..8], fp8)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    fn spec() -> SweepSpec {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into(), "STATIC".into()];
+        s.q_maxes = vec![6.0, 8.0];
+        s.trials = 2;
+        s
+    }
+
+    #[test]
+    fn shard_id_parses_and_validates() {
+        assert_eq!(ShardId::parse("1/1").unwrap(), ShardId::single());
+        assert_eq!(
+            ShardId::parse(" 2/4 ").unwrap(),
+            ShardId { index: 2, count: 4 }
+        );
+        assert_eq!(ShardId::parse("3/4").unwrap().to_string(), "3/4");
+        for bad in ["0/2", "3/2", "1/0", "x/2", "1", "1/2/3", ""] {
+            assert!(ShardId::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn plan_resolves_recipe_defaults() {
+        let s = SweepSpec::new("mlp");
+        let p = SweepPlan::build(&s).unwrap();
+        let rec = recipe("mlp").unwrap();
+        assert_eq!(p.steps, rec.steps);
+        assert_eq!(p.cycles, rec.cycles);
+        let mut s2 = SweepSpec::new("mlp");
+        s2.steps = Some(17);
+        assert_eq!(SweepPlan::build(&s2).unwrap().steps, 17);
+    }
+
+    #[test]
+    fn shards_are_disjoint_cover_the_plan_and_are_stable() {
+        propcheck(100, |rng| {
+            let mut s = SweepSpec::new("mlp");
+            s.schedules = (0..1 + rng.below(5) as usize)
+                .map(|i| format!("S{i}"))
+                .collect();
+            s.q_maxes = (0..1 + rng.below(3) as usize)
+                .map(|i| 4.0 + i as f64)
+                .collect();
+            s.trials = 1 + rng.below(4) as usize;
+            let count = 1 + rng.below(7) as usize;
+
+            let total = SweepPlan::build(&s).unwrap().total_cells();
+            let mut seen = vec![0usize; total];
+            for index in 1..=count {
+                s.shard = Some(ShardId { index, count });
+                let p1 = SweepPlan::build(&s).unwrap();
+                let p2 = SweepPlan::build(&s).unwrap();
+                // stable: two builds agree exactly
+                prop_assert!(
+                    p1.spec_hash == p2.spec_hash,
+                    "hash unstable"
+                );
+                prop_assert!(p1.owned() == p2.owned(), "owned unstable");
+                for pc in p1.owned() {
+                    prop_assert!(
+                        pc.index < total,
+                        "index {} out of range",
+                        pc.index
+                    );
+                    seen[pc.index] += 1;
+                    prop_assert!(
+                        p1.cells[pc.index] == pc.cell,
+                        "cell mismatch at {}",
+                        pc.index
+                    );
+                }
+            }
+            // disjoint + covering: each cell owned exactly once
+            prop_assert!(
+                seen.iter().all(|&n| n == 1),
+                "partition not exact: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shard_sizes_balanced_within_one() {
+        let mut s = spec(); // 12 cells
+        let mut sizes = Vec::new();
+        for index in 1..=5 {
+            s.shard = Some(ShardId { index, count: 5 });
+            sizes.push(SweepPlan::build(&s).unwrap().owned().len());
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), 12);
+        let (min, max) =
+            (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn spec_hash_tracks_result_determining_fields_only() {
+        let base = SweepPlan::build(&spec()).unwrap().spec_hash;
+
+        // execution knobs do NOT change the hash
+        let mut s = spec();
+        s.jobs = 7;
+        s.verbose = true;
+        s.shard = Some(ShardId { index: 2, count: 3 });
+        s.run_dir = Some("/tmp/x".into());
+        s.resume = true;
+        s.model_fingerprint = Some("cafe".into());
+        assert_eq!(SweepPlan::build(&s).unwrap().spec_hash, base);
+
+        // every result-determining field DOES change it
+        let mut s = spec();
+        s.model = "cnn_tiny".into();
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.schedules.pop();
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.q_maxes = vec![6.0];
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.trials = 3;
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.steps = Some(9999);
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.cycles = Some(3);
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+        let mut s = spec();
+        s.eval_every = 5;
+        assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+    }
+
+    #[test]
+    fn run_dir_under_embeds_model_spec_hash_and_fingerprint() {
+        let s = spec();
+        let fp = "0123456789abcdef";
+        let d = run_dir_under(Path::new("/runs"), &s, fp).unwrap();
+        let name = d.file_name().unwrap().to_str().unwrap().to_string();
+        assert!(name.starts_with("mlp-"), "{name}");
+        assert!(name.ends_with("-01234567"), "{name}");
+        assert_eq!(name.len(), "mlp-".len() + 8 + 1 + 8);
+        // same spec+model -> same dir
+        assert_eq!(run_dir_under(Path::new("/runs"), &s, fp).unwrap(), d);
+        // different spec -> different dir
+        let mut s2 = spec();
+        s2.trials = 9;
+        assert_ne!(run_dir_under(Path::new("/runs"), &s2, fp).unwrap(), d);
+        // regenerated model -> different dir (fresh start, not a hard
+        // fingerprint-mismatch failure on resume)
+        assert_ne!(
+            run_dir_under(Path::new("/runs"), &s, "fedcba9876543210").unwrap(),
+            d
+        );
+    }
+}

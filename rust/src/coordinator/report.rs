@@ -74,7 +74,7 @@ impl<'a> SweepReport<'a> {
 
     /// Write aggregated rows as CSV (no sweep timing columns).
     pub fn write_csv(&self, rows: &[AggRow], path: impl AsRef<Path>) -> Result<()> {
-        self.csv(rows, None).write_to(path)
+        self.csv(rows, None, true).write_to(path)
     }
 
     /// Write aggregated rows as CSV including sweep wall-clock and job
@@ -86,14 +86,35 @@ impl<'a> SweepReport<'a> {
         timing: SweepTiming,
         path: impl AsRef<Path>,
     ) -> Result<()> {
-        self.csv(rows, Some(timing)).write_to(path)
+        self.csv(rows, Some(timing), true).write_to(path)
     }
 
-    fn csv(&self, rows: &[AggRow], timing: Option<SweepTiming>) -> CsvWriter {
+    /// Write only the run-deterministic aggregate columns — everything
+    /// except wall-clock-derived fields. Two executions of the same spec
+    /// (serial, parallel, or sharded + merged) produce byte-identical
+    /// output, which is what `cpt merge` emits and what the shard/merge
+    /// equivalence test compares.
+    pub fn write_csv_stable(
+        &self,
+        rows: &[AggRow],
+        path: impl AsRef<Path>,
+    ) -> Result<()> {
+        self.csv(rows, None, false).write_to(path)
+    }
+
+    fn csv(
+        &self,
+        rows: &[AggRow],
+        timing: Option<SweepTiming>,
+        exec_cols: bool,
+    ) -> CsvWriter {
         let mut header = vec![
             "model", "schedule", "group", "q_max", "gbitops",
-            "metric_mean", "metric_std", "trials", "exec_seconds_mean",
+            "metric_mean", "metric_std", "trials",
         ];
+        if exec_cols {
+            header.push("exec_seconds_mean");
+        }
         if timing.is_some() {
             header.extend(["sweep_wall_seconds", "sweep_jobs"]);
         }
@@ -108,8 +129,10 @@ impl<'a> SweepReport<'a> {
                 format!("{:.6}", r.metric_mean),
                 format!("{:.6}", r.metric_std),
                 format!("{}", r.trials),
-                format!("{:.4}", r.exec_seconds_mean),
             ];
+            if exec_cols {
+                fields.push(format!("{:.4}", r.exec_seconds_mean));
+            }
             if let Some(t) = timing {
                 fields.push(format!("{:.4}", t.wall_seconds));
                 fields.push(format!("{}", t.jobs));
@@ -190,7 +213,12 @@ mod tests {
     fn csv_with_timing_adds_sweep_columns() {
         let rows = vec![row("CR", 8.0, 1.0, 0.9)];
         let rep = SweepReport::new("t", "acc", true);
-        let timing = SweepTiming { wall_seconds: 12.5, jobs: 4, cells: 22 };
+        let timing = SweepTiming {
+            wall_seconds: 12.5,
+            jobs: 4,
+            cells: 22,
+            resumed: 0,
+        };
         let dir = std::env::temp_dir().join("cpt_report_test_timing");
         let p = dir.join("b.csv");
         rep.write_csv_with_timing(&rows, timing, &p).unwrap();
@@ -198,6 +226,23 @@ mod tests {
         let header = s.lines().next().unwrap();
         assert!(header.ends_with("sweep_wall_seconds,sweep_jobs"), "{header}");
         assert!(s.lines().nth(1).unwrap().ends_with("12.5000,4"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stable_csv_omits_wall_clock_columns() {
+        let rows = vec![row("CR", 8.0, 1.0, 0.9)];
+        let rep = SweepReport::new("t", "acc", true);
+        let dir = std::env::temp_dir().join("cpt_report_test_stable");
+        let p = dir.join("c.csv");
+        rep.write_csv_stable(&rows, &p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let header = s.lines().next().unwrap();
+        assert_eq!(
+            header,
+            "model,schedule,group,q_max,gbitops,metric_mean,metric_std,trials"
+        );
+        assert!(!s.contains("exec_seconds"), "{s}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,947 @@
+//! Persistent run store: one artifact per completed sweep cell, governed
+//! by a `run-manifest.json`.
+//!
+//! Layout of a run directory (one per shard):
+//!
+//! ```text
+//! <run-dir>/
+//!   run-manifest.json            # schema version, spec hash, shard id,
+//!                                # per-cell file + checksum
+//!   00000-CR-q6-t0.json          # RunOutcome artifact, canonical index 0
+//!   00002-RR-q6-t0.json          # ... only the cells this shard owns
+//! ```
+//!
+//! Invariants (see rust/DESIGN-sharding.md):
+//! * every write is atomic (tmp sibling + rename) — a crash never leaves
+//!   a truncated manifest or artifact;
+//! * the manifest's `spec_hash` is the [`SweepPlan`] content hash and
+//!   `model_fingerprint` covers the compiled model (metadata + HLO file
+//!   bytes), so artifacts from incompatible sweeps — or from a
+//!   regenerated `artifacts/` tree — can never be resumed into or
+//!   merged with each other;
+//! * each manifest entry carries an FNV-1a checksum of the artifact
+//!   bytes; on resume, entries whose artifact is missing or corrupt are
+//!   dropped (the cell is simply recomputed);
+//! * artifact JSON round-trips every `RunOutcome` field bit-exactly —
+//!   f32 histories, `-0.0`, infinities, and f64 NaNs with their payload
+//!   bits — so a resumed or merged sweep reports byte-identical
+//!   aggregates to a fresh one. (The one caveat: an f32 NaN's payload
+//!   passes through the platform's f32↔f64 widening casts.)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::{ShardId, SweepPlan};
+use super::RunOutcome;
+use crate::metrics::History;
+use crate::runtime::ModelSpec;
+use crate::util::hash::{fnv1a64_hex, Fnv1a64};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::write_atomic;
+
+pub const MANIFEST_FILE: &str = "run-manifest.json";
+const MANIFEST_KIND: &str = "cpt-sweep-run";
+const CELL_KIND: &str = "cpt-cell";
+const SCHEMA_VERSION: usize = 1;
+/// Training-code version recorded in every manifest and fenced on
+/// resume/merge: spec hash + model fingerprint cannot see a trainer or
+/// schedule code change that alters results with identical artifacts.
+/// Granularity is the crate version — bump it (as every PR here does)
+/// when training semantics change; same-version code edits are the
+/// residual blind spot.
+const CODE_VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Content fingerprint of a compiled model artifact: the machine-
+/// independent spec metadata plus the bytes of every referenced HLO
+/// file. Recorded in the run manifest and checked on resume and merge,
+/// because the sweep-spec hash alone cannot see a regenerated
+/// `artifacts/` tree — without this, cells trained against an old model
+/// could silently mix with cells trained against a new one. File paths
+/// are deliberately excluded (only logical keys + contents), so shards
+/// produced on different machines still fingerprint identically.
+pub fn model_fingerprint(spec: &ModelSpec) -> Result<String> {
+    let mut h = Fnv1a64::new();
+    h.update(
+        format!(
+            "cpt-model-v1;name={};params={};opt={};chunk={};optimizer={};\
+             metric={};qflops={};fpflops={};aggq={};aggfp={};\
+             inputs={:?};param_entries={:?}",
+            spec.name,
+            spec.param_count,
+            spec.opt_state_count,
+            spec.chunk,
+            spec.optimizer,
+            spec.metric,
+            spec.q_gemm_flops_fwd,
+            spec.fp_gemm_flops_fwd,
+            spec.agg_q_gemm_flops_fwd,
+            spec.agg_fp_gemm_flops_fwd,
+            spec.data_inputs,
+            spec.params,
+        )
+        .as_bytes(),
+    );
+    for (key, path) in &spec.files {
+        let bytes = std::fs::read(path).with_context(|| {
+            format!("fingerprint model file {}", path.display())
+        })?;
+        // length-prefix each field so (key, contents) boundaries are
+        // unambiguous in the hash stream
+        h.update(&(key.len() as u64).to_le_bytes());
+        h.update(key.as_bytes());
+        h.update(&(bytes.len() as u64).to_le_bytes());
+        h.update(&bytes);
+    }
+    Ok(h.finish_hex())
+}
+
+/// Manifest record for one completed cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellEntry {
+    pub file: String,
+    pub checksum: String,
+}
+
+/// A run directory opened for one shard of one sweep plan.
+pub struct RunStore {
+    dir: PathBuf,
+    spec_hash: String,
+    model_fingerprint: String,
+    model: String,
+    shard: ShardId,
+    total_cells: usize,
+    cells: BTreeMap<usize, CellEntry>,
+}
+
+impl RunStore {
+    /// Open `dir` for `plan`. A fresh directory is initialized with an
+    /// empty manifest. An existing run is reopened only when `resume` is
+    /// set, and only if its manifest matches the plan (spec hash, model
+    /// fingerprint, shard, cell count) — recorded cells with valid
+    /// artifacts are kept so the executor can skip them.
+    pub fn open(
+        dir: &Path,
+        plan: &SweepPlan,
+        model_fingerprint: &str,
+        resume: bool,
+    ) -> Result<RunStore> {
+        let manifest_path = dir.join(MANIFEST_FILE);
+        if !manifest_path.exists() {
+            let store = RunStore {
+                dir: dir.to_path_buf(),
+                spec_hash: plan.spec_hash.clone(),
+                model_fingerprint: model_fingerprint.to_string(),
+                model: plan.model.clone(),
+                shard: plan.shard,
+                total_cells: plan.total_cells(),
+                cells: BTreeMap::new(),
+            };
+            store.write_manifest()?;
+            return Ok(store);
+        }
+        if !resume {
+            bail!(
+                "run dir {} already contains {MANIFEST_FILE}; pass --resume \
+                 to continue it, or point --run-dir at a fresh directory",
+                dir.display()
+            );
+        }
+        let m = read_manifest(dir)?;
+        if m.spec_hash != plan.spec_hash {
+            bail!(
+                "cannot resume {}: it was created for a different sweep spec \
+                 (manifest spec_hash {}, requested {})",
+                dir.display(),
+                m.spec_hash,
+                plan.spec_hash
+            );
+        }
+        if m.model_fingerprint != model_fingerprint {
+            bail!(
+                "cannot resume {}: the compiled model artifact has changed \
+                 since this run dir was created (fingerprint {} vs {}) — \
+                 its recorded cells were trained against a different model; \
+                 use a fresh run directory",
+                dir.display(),
+                m.model_fingerprint,
+                model_fingerprint
+            );
+        }
+        if m.cpt_version != CODE_VERSION {
+            bail!(
+                "cannot resume {}: it was written by cpt {} but this binary \
+                 is {} — training code may have changed, so its cells \
+                 cannot be mixed with fresh ones; use a fresh run directory",
+                dir.display(),
+                m.cpt_version,
+                CODE_VERSION
+            );
+        }
+        if m.shard != plan.shard {
+            bail!(
+                "cannot resume {}: it belongs to shard {} but this run is \
+                 shard {}",
+                dir.display(),
+                m.shard,
+                plan.shard
+            );
+        }
+        if m.total_cells != plan.total_cells() || m.model != plan.model {
+            // unreachable if the hash matches, but fail loudly rather
+            // than trusting a hand-edited manifest
+            bail!("manifest in {} is inconsistent with the plan", dir.display());
+        }
+        // artifact bytes are validated lazily, one read per cell, when
+        // the executor asks for them (`take_valid_outcome`)
+        Ok(RunStore {
+            dir: dir.to_path_buf(),
+            spec_hash: m.spec_hash,
+            model_fingerprint: m.model_fingerprint,
+            model: m.model,
+            shard: m.shard,
+            total_cells: m.total_cells,
+            cells: m.cells,
+        })
+    }
+
+    /// The training-code version this build stamps into manifests.
+    pub fn code_version() -> &'static str {
+        CODE_VERSION
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Is the cell at this canonical index recorded with a valid artifact?
+    pub fn completed(&self, index: usize) -> bool {
+        self.cells.contains_key(&index)
+    }
+
+    /// Number of recorded cells.
+    pub fn completed_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Load the recorded outcome for a cell (checksum-verified); errors
+    /// if the cell is unrecorded or its artifact fails validation.
+    pub fn load_outcome(&self, index: usize) -> Result<RunOutcome> {
+        let e = self
+            .cells
+            .get(&index)
+            .with_context(|| format!("cell {index} is not recorded"))?;
+        load_artifact(&self.dir.join(&e.file), &e.checksum, &self.spec_hash, index)
+    }
+
+    /// Resume path: load the recorded outcome if its artifact is present
+    /// and intact — one read per artifact. On any validation failure
+    /// (missing file, checksum mismatch, undecodable contents) the entry
+    /// is dropped with a note and `None` is returned, so the caller
+    /// simply recomputes that cell; corruption can never propagate.
+    pub fn take_valid_outcome(&mut self, index: usize) -> Option<RunOutcome> {
+        let e = self.cells.get(&index)?;
+        match load_artifact(
+            &self.dir.join(&e.file),
+            &e.checksum,
+            &self.spec_hash,
+            index,
+        ) {
+            Ok(out) => Some(out),
+            Err(err) => {
+                eprintln!(
+                    "[store] note: cell {index} artifact invalid ({err:#}); \
+                     it will be recomputed"
+                );
+                self.cells.remove(&index);
+                None
+            }
+        }
+    }
+
+    /// Persist one completed cell: atomic artifact write, then atomic
+    /// manifest rewrite. A crash between the two leaves an artifact the
+    /// manifest does not reference — resume recomputes that cell and
+    /// overwrites it, so the store never lies about completion.
+    pub fn record(&mut self, index: usize, out: &RunOutcome) -> Result<()> {
+        let file = format!(
+            "{index:05}-{}-q{}-t{}.json",
+            out.schedule, out.q_max, out.trial
+        );
+        let bytes = outcome_to_json(&self.spec_hash, index, out).to_string_pretty();
+        write_atomic(self.dir.join(&file), bytes.as_bytes())
+            .with_context(|| format!("record cell {index}"))?;
+        let checksum = fnv1a64_hex(bytes.as_bytes());
+        self.cells.insert(index, CellEntry { file, checksum });
+        self.write_manifest()
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let mut cells = BTreeMap::new();
+        for (index, e) in &self.cells {
+            cells.insert(
+                format!("{index:05}"),
+                obj(vec![("checksum", s(&e.checksum)), ("file", s(&e.file))]),
+            );
+        }
+        let doc = obj(vec![
+            ("kind", s(MANIFEST_KIND)),
+            ("version", num(SCHEMA_VERSION as f64)),
+            ("cpt_version", s(CODE_VERSION)),
+            ("spec_hash", s(&self.spec_hash)),
+            ("model_fingerprint", s(&self.model_fingerprint)),
+            ("model", s(&self.model)),
+            ("shard_index", num(self.shard.index as f64)),
+            ("shard_count", num(self.shard.count as f64)),
+            ("total_cells", num(self.total_cells as f64)),
+            ("cells", Json::Obj(cells)),
+        ]);
+        doc.write_atomic(self.dir.join(MANIFEST_FILE))
+            .with_context(|| format!("write manifest in {}", self.dir.display()))
+    }
+}
+
+struct ManifestDoc {
+    cpt_version: String,
+    spec_hash: String,
+    model_fingerprint: String,
+    model: String,
+    shard: ShardId,
+    total_cells: usize,
+    cells: BTreeMap<usize, CellEntry>,
+}
+
+fn read_manifest(dir: &Path) -> Result<ManifestDoc> {
+    let path = dir.join(MANIFEST_FILE);
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&src)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if j.get("kind")?.as_str()? != MANIFEST_KIND {
+        bail!("{}: not a cpt run manifest", path.display());
+    }
+    let version = j.get("version")?.as_usize()?;
+    if version != SCHEMA_VERSION {
+        bail!(
+            "{}: schema version {version} (this build reads version \
+             {SCHEMA_VERSION})",
+            path.display()
+        );
+    }
+    let shard = ShardId {
+        index: j.get("shard_index")?.as_usize()?,
+        count: j.get("shard_count")?.as_usize()?,
+    };
+    let total_cells = j.get("total_cells")?.as_usize()?;
+    let mut cells = BTreeMap::new();
+    for (key, entry) in j.get("cells")?.as_obj()? {
+        let index: usize = key
+            .parse()
+            .with_context(|| format!("bad cell index '{key}' in manifest"))?;
+        if index >= total_cells {
+            bail!("cell index {index} out of range in {}", path.display());
+        }
+        cells.insert(
+            index,
+            CellEntry {
+                file: entry.get("file")?.as_str()?.to_string(),
+                checksum: entry.get("checksum")?.as_str()?.to_string(),
+            },
+        );
+    }
+    Ok(ManifestDoc {
+        cpt_version: j.get("cpt_version")?.as_str()?.to_string(),
+        spec_hash: j.get("spec_hash")?.as_str()?.to_string(),
+        model_fingerprint: j.get("model_fingerprint")?.as_str()?.to_string(),
+        model: j.get("model")?.as_str()?.to_string(),
+        shard,
+        total_cells,
+        cells,
+    })
+}
+
+/// Merge N shard run directories into the full outcome list, in canonical
+/// cell order. Validates that all manifests share one spec hash / model /
+/// cell count, that no cell appears twice, that no cell is missing, and
+/// that every artifact passes its checksum — so the result is exactly
+/// what a single-process run of the same spec would have returned.
+/// Returns `(model, outcomes)`.
+pub fn merge_run_dirs(dirs: &[PathBuf]) -> Result<(String, Vec<RunOutcome>)> {
+    if dirs.is_empty() {
+        bail!("merge needs at least one run directory");
+    }
+    struct Head {
+        cpt_version: String,
+        spec_hash: String,
+        model_fingerprint: String,
+        model: String,
+        total_cells: usize,
+    }
+    let mut head: Option<Head> = None;
+    let mut located: BTreeMap<usize, (PathBuf, CellEntry)> = BTreeMap::new();
+    for dir in dirs {
+        let m = read_manifest(dir)
+            .with_context(|| format!("load shard {}", dir.display()))?;
+        match &head {
+            None => {
+                head = Some(Head {
+                    cpt_version: m.cpt_version.clone(),
+                    spec_hash: m.spec_hash.clone(),
+                    model_fingerprint: m.model_fingerprint.clone(),
+                    model: m.model.clone(),
+                    total_cells: m.total_cells,
+                })
+            }
+            Some(h) => {
+                if h.cpt_version != m.cpt_version {
+                    bail!(
+                        "cannot merge {}: its cells were computed by cpt {} \
+                         but other shards used {} — training code may differ \
+                         between builds",
+                        dir.display(),
+                        m.cpt_version,
+                        h.cpt_version
+                    );
+                }
+                if h.spec_hash != m.spec_hash {
+                    bail!(
+                        "cannot merge {}: spec hash {} does not match {} — \
+                         the shards come from different sweep specs",
+                        dir.display(),
+                        m.spec_hash,
+                        h.spec_hash
+                    );
+                }
+                if h.model_fingerprint != m.model_fingerprint {
+                    bail!(
+                        "cannot merge {}: its cells were trained against a \
+                         different compiled model (fingerprint {} vs {})",
+                        dir.display(),
+                        m.model_fingerprint,
+                        h.model_fingerprint
+                    );
+                }
+                if h.model != m.model || h.total_cells != m.total_cells {
+                    bail!(
+                        "cannot merge {}: manifest disagrees on model/cell \
+                         count despite matching spec hash",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        for (index, e) in m.cells {
+            if let Some((prev, _)) = located.get(&index) {
+                bail!(
+                    "duplicate cell {index}: recorded in both {} and {}",
+                    prev.display(),
+                    dir.display()
+                );
+            }
+            located.insert(index, (dir.clone(), e));
+        }
+    }
+    let h = head.unwrap();
+    let total_cells = h.total_cells;
+    let missing: Vec<usize> =
+        (0..total_cells).filter(|i| !located.contains_key(i)).collect();
+    if !missing.is_empty() {
+        bail!(
+            "merge incomplete: {} of {total_cells} cells missing (first: \
+             {:?}) — did every shard finish?",
+            missing.len(),
+            &missing[..missing.len().min(8)]
+        );
+    }
+    let mut outs = Vec::with_capacity(total_cells);
+    for (index, (dir, e)) in located {
+        outs.push(load_artifact(
+            &dir.join(&e.file),
+            &e.checksum,
+            &h.spec_hash,
+            index,
+        )?);
+    }
+    Ok((h.model, outs))
+}
+
+fn load_artifact(
+    path: &Path,
+    want_checksum: &str,
+    want_spec_hash: &str,
+    want_index: usize,
+) -> Result<RunOutcome> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    if fnv1a64_hex(&bytes) != want_checksum {
+        bail!(
+            "{}: checksum mismatch (truncated or corrupt artifact)",
+            path.display()
+        );
+    }
+    let j = Json::parse(std::str::from_utf8(&bytes)?)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if j.get("kind")?.as_str()? != CELL_KIND {
+        bail!("{}: not a cpt cell artifact", path.display());
+    }
+    if j.get("version")?.as_usize()? != SCHEMA_VERSION {
+        bail!("{}: unsupported cell schema version", path.display());
+    }
+    if j.get("spec_hash")?.as_str()? != want_spec_hash {
+        bail!("{}: artifact spec hash disagrees with manifest", path.display());
+    }
+    if j.get("cell_index")?.as_usize()? != want_index {
+        bail!("{}: artifact cell index disagrees with manifest", path.display());
+    }
+    outcome_from_json(&j)
+        .with_context(|| format!("decode {}", path.display()))
+}
+
+// ---- outcome (de)serialization -----------------------------------------
+//
+// f64 values go through the shortest-roundtrip Display path in
+// util::json, which is bit-exact; f32 values are widened to f64 (exact)
+// and narrowed back on read (exact, because the value is f32-representable).
+// Non-finite values would not survive the JSON number grammar, so they
+// are encoded as strings: "inf" / "-inf", and NaN with its full bit
+// pattern ("nan:0x7ff8000000000000") so even a nonstandard NaN payload
+// (e.g. the negative qNaN x86 produces for 0/0) survives the f64 level
+// of the round trip bit-exactly. (An f32 NaN still rides through the
+// f32→f64→f32 widening casts, whose payload handling is the platform's.)
+
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str(format!("nan:{:#018x}", x.to_bits()))
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn jf32(x: f32) -> Json {
+    jnum(x as f64)
+}
+
+fn as_num(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN), // legacy spelling, canonical quiet NaN
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => match other.strip_prefix("nan:") {
+                Some(hex) => {
+                    let bits = u64::from_str_radix(
+                        hex.trim_start_matches("0x"),
+                        16,
+                    )
+                    .with_context(|| format!("bad NaN encoding '{other}'"))?;
+                    let x = f64::from_bits(bits);
+                    if !x.is_nan() {
+                        bail!("NaN encoding '{other}' is not a NaN");
+                    }
+                    Ok(x)
+                }
+                None => bail!("not a number: {s:?}"),
+            },
+        },
+        _ => bail!("not a number: {j:?}"),
+    }
+}
+
+fn as_f32(j: &Json) -> Result<f32> {
+    Ok(as_num(j)? as f32)
+}
+
+fn outcome_to_json(spec_hash: &str, index: usize, out: &RunOutcome) -> Json {
+    let h = &out.history;
+    let pair_f32 = |v: &[(usize, f32)]| {
+        Json::Arr(
+            v.iter()
+                .map(|&(t, x)| Json::Arr(vec![num(t as f64), jf32(x)]))
+                .collect(),
+        )
+    };
+    let history = obj(vec![
+        ("losses", pair_f32(&h.losses)),
+        ("metrics", pair_f32(&h.metrics)),
+        (
+            "evals",
+            Json::Arr(
+                h.evals
+                    .iter()
+                    .map(|&(t, l, m)| {
+                        Json::Arr(vec![num(t as f64), jf32(l), jf32(m)])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "precisions",
+            Json::Arr(
+                h.precisions
+                    .iter()
+                    .map(|&(t, q)| {
+                        Json::Arr(vec![num(t as f64), num(q as f64)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("gbitops", jnum(h.gbitops)),
+        ("exec_seconds", jnum(h.exec_seconds)),
+        ("total_seconds", jnum(h.total_seconds)),
+    ]);
+    obj(vec![
+        ("kind", s(CELL_KIND)),
+        ("version", num(SCHEMA_VERSION as f64)),
+        ("spec_hash", s(spec_hash)),
+        ("cell_index", num(index as f64)),
+        ("model", s(&out.model)),
+        ("schedule", s(&out.schedule)),
+        ("group", s(&out.group)),
+        ("q_max", jnum(out.q_max)),
+        ("trial", num(out.trial as f64)),
+        ("gbitops", jnum(out.gbitops)),
+        ("metric", jnum(out.metric)),
+        ("eval_loss", jnum(out.eval_loss)),
+        ("steps", num(out.steps as f64)),
+        ("exec_seconds", jnum(out.exec_seconds)),
+        ("history", history),
+    ])
+}
+
+fn outcome_from_json(j: &Json) -> Result<RunOutcome> {
+    // tuples are length-checked before indexing: a structurally mangled
+    // artifact must surface as Err (-> dropped and recomputed), never a
+    // panic that aborts the whole resume/merge
+    fn tuple(p: &Json, len: usize) -> Result<&[Json]> {
+        let p = p.as_arr()?;
+        if p.len() != len {
+            bail!("history entry has {} fields, expected {len}", p.len());
+        }
+        Ok(p)
+    }
+    let pair_f32 = |v: &Json| -> Result<Vec<(usize, f32)>> {
+        v.as_arr()?
+            .iter()
+            .map(|p| {
+                let p = tuple(p, 2)?;
+                Ok((p[0].as_usize()?, as_f32(&p[1])?))
+            })
+            .collect()
+    };
+    let hj = j.get("history")?;
+    let history = History {
+        losses: pair_f32(hj.get("losses")?)?,
+        metrics: pair_f32(hj.get("metrics")?)?,
+        evals: hj
+            .get("evals")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = tuple(p, 3)?;
+                Ok((p[0].as_usize()?, as_f32(&p[1])?, as_f32(&p[2])?))
+            })
+            .collect::<Result<_>>()?,
+        precisions: hj
+            .get("precisions")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = tuple(p, 2)?;
+                Ok((p[0].as_usize()?, p[1].as_usize()? as u32))
+            })
+            .collect::<Result<_>>()?,
+        gbitops: as_num(hj.get("gbitops")?)?,
+        exec_seconds: as_num(hj.get("exec_seconds")?)?,
+        total_seconds: as_num(hj.get("total_seconds")?)?,
+    };
+    Ok(RunOutcome {
+        model: j.get("model")?.as_str()?.to_string(),
+        schedule: j.get("schedule")?.as_str()?.to_string(),
+        group: j.get("group")?.as_str()?.to_string(),
+        q_max: as_num(j.get("q_max")?)?,
+        trial: j.get("trial")?.as_usize()?,
+        gbitops: as_num(j.get("gbitops")?)?,
+        metric: as_num(j.get("metric")?)?,
+        eval_loss: as_num(j.get("eval_loss")?)?,
+        steps: j.get("steps")?.as_usize()?,
+        exec_seconds: as_num(j.get("exec_seconds")?)?,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{SweepCell, SweepSpec};
+    use crate::schedule::group_of;
+
+    fn spec() -> SweepSpec {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into()];
+        s.q_maxes = vec![8.0];
+        s.trials = 2;
+        s.steps = Some(8);
+        s
+    }
+
+    fn fab(cell: &SweepCell, index: usize) -> RunOutcome {
+        RunOutcome {
+            model: "mlp".into(),
+            schedule: cell.schedule.clone(),
+            group: group_of(&cell.schedule).label().into(),
+            q_max: cell.q_max,
+            trial: cell.trial,
+            gbitops: 1.5 + index as f64 * 0.1,
+            metric: 0.5 + index as f64 * 0.0625,
+            eval_loss: 0.125,
+            steps: 8,
+            exec_seconds: 0.25,
+            history: History {
+                losses: vec![(0, 1.25), (1, 0.5 + index as f32 * 0.125)],
+                metrics: vec![(0, 0.1)],
+                evals: vec![(1, 0.75, 0.875)],
+                precisions: vec![(0, 3), (1, 8)],
+                gbitops: 1.5 + index as f64 * 0.1,
+                exec_seconds: 0.25,
+                total_seconds: 0.5,
+            },
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpt_store_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn assert_outcome_eq(a: &RunOutcome, b: &RunOutcome) {
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.group, b.group);
+        assert_eq!(a.q_max.to_bits(), b.q_max.to_bits());
+        assert_eq!(a.trial, b.trial);
+        assert_eq!(a.gbitops.to_bits(), b.gbitops.to_bits());
+        assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits());
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.exec_seconds.to_bits(), b.exec_seconds.to_bits());
+        assert_eq!(a.history.losses, b.history.losses);
+        assert_eq!(a.history.metrics, b.history.metrics);
+        assert_eq!(a.history.evals, b.history.evals);
+        assert_eq!(a.history.precisions, b.history.precisions);
+        assert_eq!(a.history.gbitops.to_bits(), b.history.gbitops.to_bits());
+        // metric may be NaN — compare bit patterns, not values
+        assert_eq!(a.metric.to_bits(), b.metric.to_bits());
+    }
+
+    #[test]
+    fn outcome_roundtrip_is_bit_exact_including_awkward_floats() {
+        let dir = tmp("roundtrip");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        let mut st = RunStore::open(&dir, &plan, "fp-test", false).unwrap();
+        let mut out = fab(&plan.cells[0], 0);
+        // a NaN with sign bit + payload set, like x86's 0/0 result —
+        // the bit pattern itself must survive
+        out.metric = f64::from_bits(0xfff8_0000_0000_1234);
+        out.eval_loss = f64::NEG_INFINITY;
+        out.history.losses = vec![
+            (0, std::f32::consts::PI),
+            (1, -0.0f32),
+            (2, f32::MIN_POSITIVE),
+        ];
+        st.record(0, &out).unwrap();
+        let back = st.load_outcome(0).unwrap();
+        assert_outcome_eq(&out, &back);
+        assert!(back.metric.is_nan());
+        assert_eq!(
+            back.history.losses[1].1.to_bits(),
+            (-0.0f32).to_bits(),
+            "sign of -0.0 must survive"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn outcome_decode_rejects_short_tuples_without_panicking() {
+        let plan = SweepPlan::build(&spec()).unwrap();
+        let mut doc = outcome_to_json("h", 0, &fab(&plan.cells[0], 0));
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(h)) = m.get_mut("history") {
+                h.insert("losses".into(), Json::parse("[[0]]").unwrap());
+            }
+        }
+        let err = outcome_from_json(&doc).unwrap_err();
+        assert!(err.to_string().contains("expected 2"), "{err:#}");
+    }
+
+    #[test]
+    fn refuses_existing_dir_without_resume() {
+        let dir = tmp("noresume");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        drop(RunStore::open(&dir, &plan, "fp-test", false).unwrap());
+        let err = RunStore::open(&dir, &plan, "fp-test", false).unwrap_err();
+        assert!(err.to_string().contains("--resume"), "{err:#}");
+        assert!(RunStore::open(&dir, &plan, "fp-test", true).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_spec_hash() {
+        let dir = tmp("hash_mismatch");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        drop(RunStore::open(&dir, &plan, "fp-test", false).unwrap());
+        let mut other = spec();
+        other.trials = 5;
+        let plan2 = SweepPlan::build(&other).unwrap();
+        let err = RunStore::open(&dir, &plan2, "fp-test", true).unwrap_err();
+        assert!(err.to_string().contains("different sweep spec"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_manifest_from_different_code_version() {
+        let dir = tmp("codever");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        drop(RunStore::open(&dir, &plan, "fp-test", false).unwrap());
+        let mp = dir.join(MANIFEST_FILE);
+        let edited = std::fs::read_to_string(&mp)
+            .unwrap()
+            .replace(CODE_VERSION, "0.0.0-other-build");
+        std::fs::write(&mp, edited).unwrap();
+        let err = RunStore::open(&dir, &plan, "fp-test", true).unwrap_err();
+        assert!(err.to_string().contains("this binary"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_changed_model_fingerprint() {
+        let dir = tmp("fp_mismatch");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        drop(RunStore::open(&dir, &plan, "fp-test", false).unwrap());
+        let err =
+            RunStore::open(&dir, &plan, "fp-regenerated", true).unwrap_err();
+        assert!(
+            err.to_string().contains("model artifact has changed"),
+            "{err:#}"
+        );
+        // unchanged fingerprint still resumes
+        assert!(RunStore::open(&dir, &plan, "fp-test", true).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_drops_missing_and_corrupt_artifacts() {
+        let dir = tmp("corrupt");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        let mut st = RunStore::open(&dir, &plan, "fp-test", false).unwrap();
+        for i in 0..3 {
+            st.record(i, &fab(&plan.cells[i], i)).unwrap();
+        }
+        // corrupt cell 1's artifact, delete cell 2's
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        for n in &names {
+            if n.starts_with("00001") {
+                let p = dir.join(n);
+                let mut b = std::fs::read(&p).unwrap();
+                b.push(b'x');
+                std::fs::write(&p, &b).unwrap();
+            }
+            if n.starts_with("00002") {
+                std::fs::remove_file(dir.join(n)).unwrap();
+            }
+        }
+        let mut st = RunStore::open(&dir, &plan, "fp-test", true).unwrap();
+        assert!(st.take_valid_outcome(0).is_some());
+        assert!(
+            st.take_valid_outcome(1).is_none(),
+            "corrupt artifact must not count"
+        );
+        assert!(
+            st.take_valid_outcome(2).is_none(),
+            "missing artifact must not count"
+        );
+        // invalid entries were dropped; the good one is still recorded
+        assert_eq!(st.completed_count(), 1);
+        assert!(st.completed(0));
+        assert!(!st.completed(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_two_shards_restores_canonical_order() {
+        let base = tmp("merge_ok");
+        let mut dirs = Vec::new();
+        for index in 1..=2 {
+            let mut sp = spec();
+            sp.shard = Some(ShardId { index, count: 2 });
+            let plan = SweepPlan::build(&sp).unwrap();
+            let dir = base.join(format!("shard{index}"));
+            let mut st = RunStore::open(&dir, &plan, "fp-test", false).unwrap();
+            for pc in plan.owned() {
+                st.record(pc.index, &fab(&pc.cell, pc.index)).unwrap();
+            }
+            dirs.push(dir);
+        }
+        let (model, outs) = merge_run_dirs(&dirs).unwrap();
+        assert_eq!(model, "mlp");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        assert_eq!(outs.len(), plan.total_cells());
+        for (i, out) in outs.iter().enumerate() {
+            assert_outcome_eq(out, &fab(&plan.cells[i], i));
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_spec_hashes() {
+        let base = tmp("merge_hash");
+        let mut sp1 = spec();
+        sp1.shard = Some(ShardId { index: 1, count: 2 });
+        let plan1 = SweepPlan::build(&sp1).unwrap();
+        let d1 = base.join("a");
+        let mut st = RunStore::open(&d1, &plan1, "fp-test", false).unwrap();
+        for pc in plan1.owned() {
+            st.record(pc.index, &fab(&pc.cell, pc.index)).unwrap();
+        }
+        let mut sp2 = spec();
+        sp2.steps = Some(99); // different spec -> different hash
+        sp2.shard = Some(ShardId { index: 2, count: 2 });
+        let plan2 = SweepPlan::build(&sp2).unwrap();
+        let d2 = base.join("b");
+        let mut st2 = RunStore::open(&d2, &plan2, "fp-test", false).unwrap();
+        for pc in plan2.owned() {
+            st2.record(pc.index, &fab(&pc.cell, pc.index)).unwrap();
+        }
+        let err = merge_run_dirs(&[d1, d2]).unwrap_err();
+        assert!(err.to_string().contains("spec hash"), "{err:#}");
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn merge_rejects_duplicates_and_missing_cells() {
+        let base = tmp("merge_dup");
+        let mut sp = spec();
+        sp.shard = Some(ShardId { index: 1, count: 2 });
+        let plan = SweepPlan::build(&sp).unwrap();
+        let d1 = base.join("a");
+        let mut st = RunStore::open(&d1, &plan, "fp-test", false).unwrap();
+        for pc in plan.owned() {
+            st.record(pc.index, &fab(&pc.cell, pc.index)).unwrap();
+        }
+        // same dir twice -> duplicate cells
+        let err = merge_run_dirs(&[d1.clone(), d1.clone()]).unwrap_err();
+        assert!(err.to_string().contains("duplicate cell"), "{err:#}");
+        // only shard 1 of 2 -> missing cells
+        let err = merge_run_dirs(&[d1]).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err:#}");
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

@@ -125,8 +125,26 @@ impl SbmGraph {
     /// the neighborhood is smaller). Truncates the aggregation sum —
     /// paper footnote 4's stability argument.
     pub fn sampled_adjacency(&self, rng: &mut Pcg32, s: usize) -> Vec<f32> {
+        let mut a = Vec::new();
+        self.sampled_adjacency_into(rng, s, &mut a);
+        a
+    }
+
+    /// Like [`Self::sampled_adjacency`], but fills a caller-owned scratch
+    /// buffer (cleared and resized to n×n) instead of allocating. SAGE
+    /// rebuilds this operator every epoch; reusing one per-run buffer
+    /// removes an n×n allocation + free from every epoch boundary. The
+    /// fill order — and therefore the PRNG draw sequence — is identical
+    /// to the allocating variant.
+    pub fn sampled_adjacency_into(
+        &self,
+        rng: &mut Pcg32,
+        s: usize,
+        a: &mut Vec<f32>,
+    ) {
         let n = self.nodes;
-        let mut a = vec![0f32; n * n];
+        a.clear();
+        a.resize(n * n, 0.0);
         let w = 1.0 / (s as f32 + 1.0);
         for i in 0..n {
             a[i * n + i] += w;
@@ -140,7 +158,6 @@ impl SbmGraph {
                 a[i * n + j] += w;
             }
         }
-        a
     }
 }
 
@@ -179,7 +196,15 @@ impl GraphDataset {
             Some(s) => {
                 let epoch = step / self.steps_per_epoch;
                 if self.cached_epoch != Some(epoch) {
-                    self.cached_adj = self.graph.sampled_adjacency(&mut self.rng, s);
+                    // `cached_adj` doubles as the per-run scratch buffer:
+                    // the epoch resample writes into it in place, so the
+                    // n×n operator is allocated once per run, not once
+                    // per epoch (ROADMAP arena-scratch item)
+                    self.graph.sampled_adjacency_into(
+                        &mut self.rng,
+                        s,
+                        &mut self.cached_adj,
+                    );
                     self.cached_epoch = Some(epoch);
                 }
                 self.cached_adj.clone()
@@ -301,6 +326,24 @@ mod tests {
         }
         let n_train: f32 = g.train_mask.iter().sum();
         assert_eq!(n_train, 60.0);
+    }
+
+    #[test]
+    fn sampled_adjacency_into_matches_allocating_variant() {
+        let g = SbmGraph::new(7, 64, 4, 8, 0.1, 0.01, 0.5);
+        let mut rng_a = Pcg32::seeded(3);
+        let mut rng_b = Pcg32::seeded(3);
+        let fresh = g.sampled_adjacency(&mut rng_a, 4);
+        // scratch starts dirty and wrongly sized: must still match
+        let mut scratch = vec![9.9f32; 7];
+        g.sampled_adjacency_into(&mut rng_b, 4, &mut scratch);
+        assert_eq!(fresh, scratch);
+        // second fill reuses the buffer and draws the next epoch's
+        // operator exactly as the allocating variant would
+        let next_alloc = g.sampled_adjacency(&mut rng_a, 4);
+        g.sampled_adjacency_into(&mut rng_b, 4, &mut scratch);
+        assert_eq!(next_alloc, scratch);
+        assert_ne!(fresh, scratch);
     }
 
     #[test]

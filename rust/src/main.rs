@@ -4,15 +4,20 @@
 //!   info                         list models in the artifact manifest
 //!   schedules [--csv PATH]       dump S(t)/q_t series for the suite (Fig 2)
 //!   train     --model M [...]    one training run with a chosen schedule
-//!   sweep     --model M [...]    schedule suite sweep (one figure panel)
+//!   sweep     --model M [...]    schedule suite sweep (one figure panel);
+//!                                shardable + resumable via --shard/--run-dir
+//!   merge     DIR...             validate + combine shard run dirs into
+//!                                the single-process aggregate CSV
 //!   range-test --model M [...]   precision range test (discovers q_min)
 //!   preset    --file F.toml      run a sweep described by a preset file
 //!
 //! Run `cpt <subcommand> --help` for flags.
 
+use std::path::{Path, PathBuf};
+
 use anyhow::{bail, Context, Result};
 
-use cpt::coordinator::{self, recipes};
+use cpt::coordinator::{self, merge_run_dirs, recipes, RunOutcome, ShardId};
 use cpt::prelude::*;
 use cpt::quant::range_test;
 use cpt::schedule::relative_cost;
@@ -32,6 +37,7 @@ fn run() -> Result<()> {
         "schedules" => cmd_schedules(&cli),
         "train" => cmd_train(&cli),
         "sweep" => cmd_sweep(&cli),
+        "merge" => cmd_merge(&cli),
         "range-test" => cmd_range_test(&cli),
         "preset" => cmd_preset(&cli),
         "" | "help" => {
@@ -56,15 +62,33 @@ USAGE: cpt <subcommand> [flags]
                                 one training run
   sweep --model M [--schedules CR,RR,...] [--qmaxes 6,8] [--trials N]
         [--steps N] [--cycles N] [--jobs N] [--csv PATH] [--verbose]
+        [--shard I/N] [--run-dir DIR] [--resume]
                                 full schedule sweep (one figure panel);
                                 --jobs N > 1 fans cells over N workers
-                                (results identical to serial)
+                                (results identical to serial);
+                                --shard I/N runs shard I of an N-way
+                                partition into --run-dir (one artifact
+                                per cell + run-manifest.json);
+                                --resume reopens a run dir and skips
+                                cells with valid artifacts
+  merge [--csv PATH] [--title T] DIR [DIR ...]
+                                validate N shard run dirs (matching spec
+                                hashes, no missing/duplicate cells) and
+                                emit the aggregate CSV a single-process
+                                run would have produced
   range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
                                 discover q_min (paper §3.1)
-  preset --file configs/X.toml  run a sweep preset
+  preset --file configs/X.toml [--shard I/N] [--run-dir D] [--resume]
+         [--jobs N] [--verbose]
+                                run a sweep preset ([sweep] may set
+                                shard/run_dir/resume/jobs; these CLI
+                                flags override it, so one preset file
+                                drives every shard of a campaign)
 
 ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
-     CPT_JOBS (default sweep worker count, default: 1)"
+     CPT_JOBS (default sweep worker count, default: 1),
+     CPT_RUN_DIR (bench resume base dir — artifacts land under
+     <dir>/<model>-<spec_hash>-<model_fingerprint>)"
     );
 }
 
@@ -164,10 +188,101 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Apply the shared sharding/persistence flags to a sweep spec.
+fn apply_shard_flags(cli: &Cli, spec: &mut SweepSpec) -> Result<()> {
+    if let Some(sh) = cli.flag("shard") {
+        spec.shard = Some(ShardId::parse(sh)?);
+    }
+    if let Some(dir) = cli.flag("run-dir") {
+        spec.run_dir = Some(PathBuf::from(dir));
+    }
+    // tri-state: absent keeps the preset's value; `--resume` /
+    // `--resume=false` explicitly override it in either direction
+    if cli.flag("resume").is_some() {
+        spec.resume = cli.bool("resume");
+    }
+    if spec.shard.map_or(false, |s| s.count > 1) && spec.run_dir.is_none() {
+        bail!(
+            "--shard needs --run-dir: shard results must be persisted so \
+             `cpt merge` can combine them"
+        );
+    }
+    if spec.resume && spec.run_dir.is_none() {
+        bail!(
+            "--resume needs --run-dir: there is no run directory to resume \
+             from, so the sweep would silently recompute everything"
+        );
+    }
+    Ok(())
+}
+
+/// Shared post-run reporting for `sweep` and `preset`: table, timing
+/// line, and either the aggregate CSV (whole sweep) or a merge hint
+/// (one shard of many — a partial aggregate would be misleading, so an
+/// explicitly requested --csv is called out as ignored).
+fn report_sweep(
+    title: &str,
+    higher_is_better: bool,
+    spec: &SweepSpec,
+    outs: &[RunOutcome],
+    timing: SweepTiming,
+    csv: &Path,
+    csv_explicit: bool,
+) -> Result<()> {
+    let rows = aggregate(outs);
+    let sharded = spec.shard.map_or(false, |s| s.count > 1);
+    // a shard's table only aggregates its round-robin subset of trials —
+    // label it so nobody reads half-trial means as the panel result
+    let shown_title = if sharded {
+        format!(
+            "{title} [shard {} — PARTIAL: subset of trials per row; run \
+             `cpt merge` for panel results]",
+            spec.shard.unwrap()
+        )
+    } else {
+        title.to_string()
+    };
+    let rep = SweepReport::new(&shown_title, "metric", higher_is_better);
+    rep.print(&rows);
+    let resumed = if timing.resumed > 0 {
+        format!(" ({} resumed from artifacts)", timing.resumed)
+    } else {
+        String::new()
+    };
+    println!(
+        "\nsweep wall-clock: {:.2}s for {} cells on {} worker(s){resumed}",
+        timing.wall_seconds, timing.cells, timing.jobs
+    );
+    match (spec.shard, &spec.run_dir) {
+        (Some(shard), Some(dir)) if shard.count > 1 => {
+            if csv_explicit {
+                eprintln!(
+                    "note: --csv {} ignored — one shard's aggregate would \
+                     be partial; `cpt merge` writes the combined CSV",
+                    csv.display()
+                );
+            }
+            println!(
+                "shard {shard} complete: {} cell artifact(s) in {}",
+                timing.cells,
+                dir.display()
+            );
+            println!(
+                "combine all shards with: cpt merge --csv OUT <run dirs>"
+            );
+        }
+        _ => {
+            rep.write_csv_with_timing(&rows, timing, csv)?;
+            println!("wrote {}", csv.display());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "model", "schedules", "qmaxes", "trials", "steps", "cycles", "jobs",
-        "csv", "verbose",
+        "csv", "verbose", "shard", "run-dir", "resume",
     ])?;
     let model = cli.require("model")?;
     let rec = recipes::recipe(model)?;
@@ -185,22 +300,50 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     spec.cycles = cli.flag("cycles").map(|s| s.parse()).transpose()?;
     spec.jobs = cli.usize_or("jobs", spec.jobs)?;
     spec.verbose = cli.bool("verbose");
+    apply_shard_flags(cli, &mut spec)?;
 
     let manifest = Manifest::load(artifacts_dir())?;
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
-    let rows = aggregate(&outs);
-    let rep = SweepReport::new(model, "metric", rec.higher_is_better);
-    rep.print(&rows);
-    println!(
-        "\nsweep wall-clock: {:.2}s for {} cells on {} worker(s)",
-        timing.wall_seconds, timing.cells, timing.jobs
-    );
-    let csv = cli.str_or(
+    let csv = PathBuf::from(cli.str_or(
         "csv",
         &results_dir().join(format!("sweep_{model}.csv")).to_string_lossy(),
+    ));
+    report_sweep(
+        model,
+        rec.higher_is_better,
+        &spec,
+        &outs,
+        timing,
+        &csv,
+        cli.flag("csv").is_some(),
+    )
+}
+
+fn cmd_merge(cli: &Cli) -> Result<()> {
+    cli.check_known(&["csv", "title"])?;
+    if cli.positional.is_empty() {
+        bail!("usage: cpt merge [--csv OUT] [--title T] RUN_DIR [RUN_DIR ...]");
+    }
+    let dirs: Vec<PathBuf> =
+        cli.positional.iter().map(PathBuf::from).collect();
+    let (model, outs) = merge_run_dirs(&dirs)?;
+    let rec = recipes::recipe(&model)?;
+    let rows = aggregate(&outs);
+    let title = cli.str_or("title", &format!("merged sweep ({model})"));
+    let rep = SweepReport::new(&title, "metric", rec.higher_is_better);
+    rep.print(&rows);
+    let csv = cli.str_or(
+        "csv",
+        &results_dir()
+            .join(format!("merged_{model}.csv"))
+            .to_string_lossy(),
     );
-    rep.write_csv_with_timing(&rows, timing, &csv)?;
-    println!("wrote {csv}");
+    rep.write_csv_stable(&rows, &csv)?;
+    println!(
+        "\nmerged {} cells from {} run dir(s) -> {csv}",
+        outs.len(),
+        dirs.len()
+    );
     Ok(())
 }
 
@@ -246,7 +389,7 @@ fn cmd_range_test(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_preset(cli: &Cli) -> Result<()> {
-    cli.check_known(&["file"])?;
+    cli.check_known(&["file", "shard", "run-dir", "resume", "jobs", "verbose"])?;
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
     let s = doc
@@ -282,22 +425,29 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
     if let Some(v) = s.get("jobs") {
         spec.jobs = v.as_usize()?;
     }
+    // sharding/persistence preset fields; the CLI flags override them,
+    // so one preset file can drive every shard/machine of a campaign
+    if let Some(v) = s.get("shard") {
+        spec.shard = Some(ShardId::parse(v.as_str()?)?);
+    }
+    if let Some(v) = s.get("run_dir") {
+        spec.run_dir = Some(PathBuf::from(v.as_str()?));
+    }
+    if let Some(v) = s.get("resume") {
+        spec.resume = v.as_bool()?;
+    }
+    spec.jobs = cli.usize_or("jobs", spec.jobs)?;
+    if cli.bool("verbose") {
+        spec.verbose = true;
+    }
+    apply_shard_flags(cli, &mut spec)?;
     let manifest = Manifest::load(artifacts_dir())?;
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
-    let rows = aggregate(&outs);
     let title = doc
         .get("", "title")
         .and_then(|v| v.as_str().ok())
         .unwrap_or("preset")
         .to_string();
-    let rep = SweepReport::new(&title, "metric", rec.higher_is_better);
-    rep.print(&rows);
-    println!(
-        "\nsweep wall-clock: {:.2}s for {} cells on {} worker(s)",
-        timing.wall_seconds, timing.cells, timing.jobs
-    );
     let csv = results_dir().join(format!("{title}.csv"));
-    rep.write_csv_with_timing(&rows, timing, &csv)?;
-    println!("wrote {}", csv.display());
-    Ok(())
+    report_sweep(&title, rec.higher_is_better, &spec, &outs, timing, &csv, false)
 }

@@ -2,9 +2,12 @@
 //!
 //! Simple length-prefixed binary format (magic, version, step, named f32
 //! sections). No serde offline; the format is versioned and self-checking
-//! (per-section element counts + a whole-file checksum).
+//! (per-section element counts + a whole-file checksum). Saves are atomic
+//! (tmp sibling + rename via `util::write_atomic`), so a crash mid-save
+//! can never leave a truncated file that `load` rejects — the previous
+//! complete checkpoint survives.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -36,30 +39,34 @@ impl Checkpoint {
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("create {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        // serialize into memory, then write atomically: the target path
+        // only ever holds a complete, checksummed checkpoint
+        let payload: usize = self
+            .sections
+            .iter()
+            .map(|(n, d)| 12 + n.len() + d.len() * 4)
+            .sum();
+        let mut buf = Vec::with_capacity(8 + 8 + 4 + payload + 8);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
         let mut checksum = 0u64;
         for (name, data) in &self.sections {
             let nb = name.as_bytes();
-            f.write_all(&(nb.len() as u32).to_le_bytes())?;
-            f.write_all(nb)?;
-            f.write_all(&(data.len() as u64).to_le_bytes())?;
+            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
             for &x in data {
                 let b = x.to_le_bytes();
                 checksum = checksum
                     .wrapping_mul(31)
                     .wrapping_add(u32::from_le_bytes(b) as u64);
-                f.write_all(&b)?;
+                buf.extend_from_slice(&b);
             }
         }
-        f.write_all(&checksum.to_le_bytes())?;
-        Ok(())
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        crate::util::write_atomic(path, &buf)
+            .with_context(|| format!("save checkpoint {}", path.display()))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
@@ -142,6 +149,30 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_overwrites_cleanly() {
+        let dir = std::env::temp_dir().join("cpt_ckpt_test_atomic");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("d.ckpt");
+        let mut c = Checkpoint::new(1);
+        c.add("params", vec![1.0; 32]);
+        c.save(&path).unwrap();
+        // overwriting an existing checkpoint goes through the same
+        // tmp+rename path
+        let mut c2 = Checkpoint::new(2);
+        c2.add("params", vec![2.0; 8]);
+        c2.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c2);
+        // no .tmp residue after successful saves
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files left: {leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

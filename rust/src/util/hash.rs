@@ -1,0 +1,83 @@
+//! FNV-1a 64-bit hashing — the content-address primitive for sweep
+//! plans and run artifacts.
+//!
+//! Not cryptographic: the hashes defend against accidental mixing of
+//! incompatible shards and against torn/corrupt artifact files, not
+//! against an adversary. FNV-1a is deterministic across platforms and
+//! has no dependencies, which is what the offline vendor set allows.
+
+/// Incremental FNV-1a 64 hasher, for content that arrives in chunks
+/// (e.g. a model fingerprint over metadata + several HLO files).
+pub struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Fnv1a64 {
+        Fnv1a64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// Finish as a fixed-width lowercase hex string (16 chars).
+    pub fn finish_hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// FNV-1a over a byte slice (64-bit offset basis / prime).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// FNV-1a as a fixed-width lowercase hex string (16 chars).
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_35c8_43ba_3b48);
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        let h = fnv1a64_hex(b"");
+        assert_eq!(h.len(), 16);
+        assert_eq!(h, "cbf29ce484222325");
+        // leading zeros preserved
+        assert!(fnv1a64_hex(b"anything").chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn sensitive_to_single_byte() {
+        assert_ne!(fnv1a64(b"cell-0001"), fnv1a64(b"cell-0002"));
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let mut h = Fnv1a64::new();
+        h.update(b"foo");
+        h.update(b"");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a64(b"foobar"));
+        assert_eq!(h.finish_hex(), fnv1a64_hex(b"foobar"));
+    }
+}

@@ -97,6 +97,16 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
+    /// Pretty-print to `path` atomically (tmp sibling + rename) — the
+    /// write path for run manifests and cell artifacts, where a crash
+    /// mid-save must never leave a truncated file.
+    pub fn write_atomic(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
+        crate::util::write_atomic(path, self.to_string_pretty().as_bytes())
+    }
+
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
@@ -114,7 +124,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // -0.0 must keep its sign bit (the integer shortcut would
+                // print "0" and break bit-exact f64 round-trips)
+                if x.fract() == 0.0
+                    && x.abs() < 1e15
+                    && !(*x == 0.0 && x.is_sign_negative())
+                {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -418,6 +433,29 @@ mod tests {
         assert_eq!(v, Json::Str("A\t\"π".into()));
         let back = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(v, back);
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_with_sign() {
+        let v = Json::Num(-0.0);
+        let txt = v.to_string_compact();
+        assert_eq!(txt, "-0");
+        let back = Json::parse(&txt).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // positive zero still takes the integer shortcut
+        assert_eq!(Json::Num(0.0).to_string_compact(), "0");
+    }
+
+    #[test]
+    fn write_atomic_emits_parseable_file() {
+        let dir = std::env::temp_dir().join("cpt_json_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = dir.join("doc.json");
+        let v = Json::parse(r#"{"a": [1, 2], "b": "x"}"#).unwrap();
+        v.write_atomic(&p).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(v, back);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

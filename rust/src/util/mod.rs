@@ -1,10 +1,95 @@
-//! Hand-rolled substrates: PRNG, JSON, property testing.
+//! Hand-rolled substrates: PRNG, JSON, hashing, property testing, and
+//! filesystem helpers.
 //!
 //! The offline vendor set contains only the `xla` crate and its build
 //! chain, so everything usually pulled from crates.io (rand, serde,
 //! proptest, csv) is implemented here, scoped to exactly what the
 //! experiment harness needs.
 
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod propcheck;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Write `bytes` to `path` atomically and durably: write a `.tmp`
+/// sibling, fsync it, then rename it over the target (and best-effort
+/// fsync the parent directory so the rename itself is durable). On POSIX
+/// the rename is atomic, so neither a process crash nor a power loss can
+/// leave a truncated `path` — readers either see the old complete file
+/// or the new one. A stale `.tmp` may survive a crash; it is simply
+/// overwritten by the next save. Parent directories are created as
+/// needed.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create dir {}", dir.display()))?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("write_atomic: no file name in {}", path.display()))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    // data must hit disk before the rename commits the new name — else a
+    // power loss could leave the final path pointing at unwritten blocks
+    f.sync_all()
+        .with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("rename {} -> {}", tmp.display(), path.display())
+    })?;
+    // make the rename durable too; non-fatal if the platform disallows
+    // opening directories (the file contents are already safe)
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_creates_parents_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("cpt_write_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested").join("out.json");
+        write_atomic(&path, b"hello").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"hello");
+        let siblings: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(siblings, vec!["out.json"], "no .tmp residue: {siblings:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_overwrites_existing() {
+        let dir = std::env::temp_dir().join("cpt_write_atomic_test2");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("out.bin");
+        write_atomic(&path, b"first version, longer").unwrap();
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -341,6 +341,123 @@ fn parallel_sweep_outcomes_bit_identical_to_serial() {
     }
 }
 
+fn assert_outcomes_identical(a: &[cpt::coordinator::RunOutcome], b: &[cpt::coordinator::RunOutcome]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.schedule, y.schedule);
+        assert_eq!(x.q_max, y.q_max);
+        assert_eq!(x.trial, y.trial);
+        assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "{} t{}", x.schedule, x.trial);
+        assert_eq!(x.eval_loss.to_bits(), y.eval_loss.to_bits());
+        assert_eq!(x.gbitops.to_bits(), y.gbitops.to_bits());
+        assert_eq!(x.group, y.group);
+        assert_eq!(x.steps, y.steps);
+        assert_eq!(x.history.losses, y.history.losses);
+        assert_eq!(x.history.metrics, y.history.metrics);
+        assert_eq!(x.history.precisions, y.history.precisions);
+        assert_eq!(x.history.evals, y.history.evals);
+    }
+}
+
+#[test]
+fn sharded_sweep_plus_merge_is_bit_identical_to_serial() {
+    // The headline acceptance path: shard 1/2 + shard 2/2 into run dirs,
+    // merge, and compare against the unsharded serial run — outcome by
+    // outcome (bitwise, including history) and as CSV bytes.
+    let f = fixture();
+    let tmp = std::env::temp_dir().join("cpt_it_shard_merge");
+    std::fs::remove_dir_all(&tmp).ok();
+    let base_spec = || {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into(), "STATIC".into()];
+        s.q_maxes = vec![8.0];
+        s.trials = 2;
+        s.steps = Some(12);
+        s.eval_every = 6;
+        s
+    };
+    let serial = run_sweep(&f.manifest, &base_spec()).unwrap();
+    assert_eq!(serial.len(), 6);
+
+    let mut dirs = Vec::new();
+    for i in 1..=2usize {
+        let mut s = base_spec();
+        s.shard = Some(ShardId::parse(&format!("{i}/2")).unwrap());
+        let dir = tmp.join(format!("shard{i}"));
+        s.run_dir = Some(dir.clone());
+        let (outs, timing) = run_sweep_timed(&f.manifest, &s).unwrap();
+        assert_eq!(outs.len(), 3, "round-robin halves of 6 cells");
+        assert_eq!(timing.cells, 3);
+        assert_eq!(timing.resumed, 0);
+        dirs.push(dir);
+    }
+    let (model, merged) = merge_run_dirs(&dirs).unwrap();
+    assert_eq!(model, "mlp");
+    assert_outcomes_identical(&serial, &merged);
+
+    // CSV byte-identity on the deterministic aggregate columns
+    let rep = SweepReport::new("t", "metric", true);
+    let pa = tmp.join("serial.csv");
+    let pb = tmp.join("merged.csv");
+    rep.write_csv_stable(&aggregate(&serial), &pa).unwrap();
+    rep.write_csv_stable(&aggregate(&merged), &pb).unwrap();
+    let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    assert_eq!(ba, bb, "merged CSV must be byte-identical to serial");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn resume_skips_completed_cells_and_recomputes_damaged_ones() {
+    let f = fixture();
+    let tmp = std::env::temp_dir().join("cpt_it_resume");
+    std::fs::remove_dir_all(&tmp).ok();
+    let spec = || {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into()];
+        s.q_maxes = vec![8.0];
+        s.trials = 1;
+        s.steps = Some(10);
+        s.run_dir = Some(tmp.clone());
+        s.resume = true; // fresh dir on first run, reopen afterwards
+        s
+    };
+    let (first, t1) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t1.resumed, 0);
+    assert_eq!(first.len(), 2);
+
+    // full resume: every cell loads from its artifact, none retrain
+    let (second, t2) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t2.resumed, 2, "all cells must come from the store");
+    assert_outcomes_identical(&first, &second);
+
+    // damage one artifact (simulated crash mid-write of cell 0): only
+    // that cell is recomputed, and results still match
+    let victim = std::fs::read_dir(&tmp)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| {
+            p.file_name()
+                .unwrap()
+                .to_string_lossy()
+                .starts_with("00000")
+        })
+        .expect("cell 0 artifact");
+    std::fs::write(&victim, b"truncated garbage").unwrap();
+    let (third, t3) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t3.resumed, 1, "only the intact cell may be skipped");
+    assert_outcomes_identical(&first, &third);
+
+    // a spec change must refuse to reuse the directory
+    let mut other = spec();
+    other.trials = 2;
+    let err = run_sweep_timed(&f.manifest, &other).unwrap_err();
+    assert!(
+        err.to_string().contains("different sweep spec"),
+        "{err:#}"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
 #[test]
 fn trainer_remainder_path_matches_all_single_steps() {
     // total_steps % chunk != 0 makes Trainer::run fall back to k=1 calls

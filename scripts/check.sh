@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only, so the
-# bench target is compiled-and-exercised without paying full bench cost.
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus a
+# 2-shard sweep + merge end-to-end pass, so the bench target and the
+# sharded orchestration path are compiled-and-exercised without paying
+# full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
-#   scripts/check.sh --smoke    # ... + perf_hotpath smoke run
+#   scripts/check.sh --smoke    # ... + perf_hotpath + shard/merge smoke
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -22,8 +24,26 @@ if ! command -v cargo >/dev/null 2>&1; then
   exit 0
 fi
 
+# Formatting needs no dependency resolution — run it first so even
+# vendor-less environments (stock CI runners) enforce it.
 echo "== cargo fmt --check"
 cargo fmt --check
+
+# The xla PJRT bindings come from an offline vendor set, never crates.io.
+# On runners known to lack that vendor configuration (stock CI), setting
+# CPT_ALLOW_MISSING_VENDOR=1 downgrades the remaining gates to a clean
+# fmt-only pass. Anywhere else a resolution failure is a real breakage
+# (vendor config regressed, Cargo.toml broken) and must fail loudly —
+# a silent skip here would green-light compile-breaking commits.
+if ! cargo metadata --format-version 1 --offline >/dev/null 2>&1; then
+  if [ "${CPT_ALLOW_MISSING_VENDOR:-0}" = 1 ]; then
+    echo "check.sh: offline dependency resolution unavailable — fmt-only pass (CPT_ALLOW_MISSING_VENDOR=1)" >&2
+    exit 0
+  fi
+  echo "check.sh: cannot resolve dependencies offline (xla vendor set missing or broken)" >&2
+  echo "check.sh: fix the vendor config, or export CPT_ALLOW_MISSING_VENDOR=1 on vendor-less runners" >&2
+  exit 1
+fi
 
 echo "== cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
@@ -35,8 +55,32 @@ if [ "$SMOKE" = 1 ]; then
   if [ -f artifacts/manifest.json ]; then
     echo "== perf_hotpath --smoke (1 rep, mlp only)"
     cargo bench --bench perf_hotpath -- --smoke
+
+    echo "== 2-shard sweep + merge smoke (mlp, 4 cells)"
+    # serial run vs (shard 1/2 + shard 2/2 + merge): the deterministic
+    # aggregate columns (everything except the wall-clock ones) must be
+    # byte-identical. Also exercises resume: re-running shard 1 must
+    # skip all its cells.
+    SMOKE_DIR="$(mktemp -d)"
+    trap 'rm -rf "$SMOKE_DIR"' EXIT
+    CPT="cargo run --release --quiet --bin cpt --"
+    SWEEP_ARGS="--model mlp --schedules CR,RR --qmaxes 8 --trials 2 --steps 8"
+    $CPT sweep $SWEEP_ARGS --csv "$SMOKE_DIR/serial.csv"
+    $CPT sweep $SWEEP_ARGS --shard 1/2 --run-dir "$SMOKE_DIR/s1"
+    $CPT sweep $SWEEP_ARGS --shard 2/2 --run-dir "$SMOKE_DIR/s2"
+    RESUME_OUT="$($CPT sweep $SWEEP_ARGS --shard 1/2 --run-dir "$SMOKE_DIR/s1" --resume)"
+    case "$RESUME_OUT" in
+      *"2 resumed from artifacts"*) ;;
+      *) echo "check.sh: shard resume did not skip completed cells" >&2; exit 1 ;;
+    esac
+    $CPT merge --csv "$SMOKE_DIR/merged.csv" "$SMOKE_DIR/s1" "$SMOKE_DIR/s2"
+    if ! diff <(cut -d, -f1-8 "$SMOKE_DIR/serial.csv") "$SMOKE_DIR/merged.csv"; then
+      echo "check.sh: sharded merge CSV differs from serial sweep" >&2
+      exit 1
+    fi
+    echo "shard/merge smoke: serial and merged aggregates are identical"
   else
-    echo "== perf_hotpath --smoke: artifacts/manifest.json missing — building only"
+    echo "== bench/sweep smoke: artifacts/manifest.json missing — building only"
     cargo build --benches
   fi
 fi
