@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         spec.steps = Some(scale.steps(256, 320));
         spec.verbose = true;
         spec.apply_env_run_dir(&manifest)?;
+        spec.log_run_dir();
         let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!(

@@ -18,6 +18,7 @@ fn main() -> anyhow::Result<()> {
         spec.trials = scale.trials();
         spec.steps = Some(scale.steps(240, 480));
         spec.apply_env_run_dir(&manifest)?;
+        spec.log_run_dir();
         let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
         let rows = aggregate(&outs);
         let title = format!("Fig 6 ({model}): accuracy vs GBitOps");

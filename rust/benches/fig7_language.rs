@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
     spec.steps = Some(scale.steps(160, 400));
     spec.cycles = Some(2);
     spec.apply_env_run_dir(&manifest)?;
+    spec.log_run_dir();
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(
@@ -36,6 +37,7 @@ fn main() -> anyhow::Result<()> {
     spec.steps = Some(scale.steps(120, 240));
     spec.cycles = Some(2);
     spec.apply_env_run_dir(&manifest)?;
+    spec.log_run_dir();
     let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
     let rows = aggregate(&outs);
     let rep = SweepReport::new(

@@ -1,12 +1,17 @@
 //! TOML-subset parser for experiment preset files (configs/*.toml).
 //!
-//! Supported grammar (sufficient for flat experiment presets):
+//! Supported grammar (sufficient for flat experiment presets and
+//! campaign manifests):
 //!   [section]
+//!   [[table.array]]
 //!   key = "string" | 123 | 1.5 | true | false | [v, v, ...]
 //!   # comments
 //!
-//! Values land in a `BTreeMap<section, BTreeMap<key, Value>>`; the root
-//! (pre-section) keys go under section "".
+//! Plain `[section]` values land in a `BTreeMap<section, Section>`;
+//! the root (pre-section) keys go under section "". Each `[[name]]`
+//! header appends a fresh table to `tables[name]` (in file order) and
+//! routes subsequent keys into it — the shape `cpt campaign` uses for
+//! its `[[campaign.sweep]]` member list.
 
 use std::collections::BTreeMap;
 
@@ -59,23 +64,42 @@ pub type Section = BTreeMap<String, Value>;
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct TomlDoc {
     pub sections: BTreeMap<String, Section>,
+    /// `[[name]]` table arrays, in file order per name.
+    pub tables: BTreeMap<String, Vec<Section>>,
+}
+
+/// Where the keys currently being parsed should land.
+enum Target {
+    Section(String),
+    /// Last entry of `tables[name]`.
+    Table(String),
 }
 
 impl TomlDoc {
     pub fn parse(src: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
-        let mut current = String::new();
+        let mut current = Target::Section(String::new());
         for (lineno, raw) in src.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[") {
+                let name = name.strip_suffix("]]").with_context(|| {
+                    format!("line {}: bad table-array header", lineno + 1)
+                })?;
+                let name = name.trim().to_string();
+                doc.tables.entry(name.clone()).or_default().push(Section::new());
+                current = Target::Table(name);
                 continue;
             }
             if let Some(name) = line.strip_prefix('[') {
                 let name = name
                     .strip_suffix(']')
                     .with_context(|| format!("line {}: bad section", lineno + 1))?;
-                current = name.trim().to_string();
-                doc.sections.entry(current.clone()).or_default();
+                let name = name.trim().to_string();
+                doc.sections.entry(name.clone()).or_default();
+                current = Target::Section(name);
                 continue;
             }
             let (k, v) = line
@@ -83,10 +107,16 @@ impl TomlDoc {
                 .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
             let value = parse_value(v.trim())
                 .with_context(|| format!("line {}: bad value", lineno + 1))?;
-            doc.sections
-                .entry(current.clone())
-                .or_default()
-                .insert(k.trim().to_string(), value);
+            let slot = match &current {
+                Target::Section(name) => {
+                    doc.sections.entry(name.clone()).or_default()
+                }
+                // both maps were populated when the header was parsed
+                Target::Table(name) => {
+                    doc.tables.get_mut(name).unwrap().last_mut().unwrap()
+                }
+            };
+            slot.insert(k.trim().to_string(), value);
         }
         Ok(doc)
     }
@@ -103,6 +133,11 @@ impl TomlDoc {
 
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// All `[[name]]` tables, in file order (empty if none appeared).
+    pub fn table(&self, name: &str) -> &[Section] {
+        self.tables.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 }
 
@@ -227,6 +262,48 @@ resume = true
         assert!(s["resume"].as_bool().unwrap());
         // shard must be written as a string — a bare 1/4 is not a value
         assert!(TomlDoc::parse("[sweep]\nshard = 1/4").is_err());
+    }
+
+    #[test]
+    fn parses_table_arrays_in_file_order() {
+        let doc = TomlDoc::parse(
+            r#"
+[campaign]
+name = "fig367"
+
+[[campaign.sweep]]
+name = "cifar"
+model = "cnn_tiny"
+q_maxes = [6, 8]
+
+[[campaign.sweep]]
+name = "ogbn"
+model = "gcn_qagg"   # second member
+trials = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("campaign", "name").unwrap().as_str().unwrap(),
+            "fig367"
+        );
+        let members = doc.table("campaign.sweep");
+        assert_eq!(members.len(), 2);
+        assert_eq!(members[0]["name"].as_str().unwrap(), "cifar");
+        assert_eq!(members[0]["q_maxes"].as_list().unwrap().len(), 2);
+        assert_eq!(members[1]["model"].as_str().unwrap(), "gcn_qagg");
+        assert_eq!(members[1]["trials"].as_usize().unwrap(), 2);
+        // a [section] after a table entry redirects keys back to it
+        let doc2 = TomlDoc::parse("[[t]]\na = 1\n[s]\nb = 2").unwrap();
+        assert_eq!(doc2.table("t")[0]["a"].as_usize().unwrap(), 1);
+        assert_eq!(doc2.get("s", "b").unwrap().as_usize().unwrap(), 2);
+        assert!(doc2.table("missing").is_empty());
+    }
+
+    #[test]
+    fn table_array_header_errors() {
+        assert!(TomlDoc::parse("[[unclosed").is_err());
+        assert!(TomlDoc::parse("[[half]").is_err());
     }
 
     #[test]

@@ -1,0 +1,1298 @@
+//! Campaign orchestration: several sweeps as one content-addressed tree.
+//!
+//! A figure campaign (every panel of Fig 3/6/7) is more than one sweep:
+//! a [`CampaignSpec`] — parsed from a TOML file with a `[campaign]`
+//! header and one `[[campaign.sweep]]` table per member — compiles into
+//! a [`CampaignPlan`], an ordered list of named member sweeps plus a
+//! campaign-level FNV hash derived from the member spec hashes. `cpt
+//! campaign` executes the plan by fanning each member over the existing
+//! shard/resume machinery: one [`super::store::RunStore`] directory per
+//! member, nested under a campaign root governed by a
+//! `campaign-manifest.json`.
+//!
+//! Layout of a campaign root (one per shard, exactly like sweep dirs):
+//!
+//! ```text
+//! <campaign-root>/
+//!   campaign-manifest.json     # campaign hash, shard id, member table
+//!   <member-name>/             # a normal sweep run dir (run-manifest.json
+//!   <member-name>/             #   + cell artifacts) for that member
+//! ```
+//!
+//! The same fences as the sweep store apply one level up: a root can
+//! only be resumed by the same campaign (hash), shard, and cpt version
+//! that created it, and [`merge_campaign_roots`] refuses roots or member
+//! directories whose hashes disagree. Member order is canonical (sorted
+//! by name) no matter how the TOML file orders its tables, so two
+//! processes always agree on the campaign hash and on execution order.
+//!
+//! [`status`] answers `cpt status DIR` for both sweep run dirs and
+//! campaign roots, straight from the manifests; [`gc`] answers `cpt gc`
+//! by compacting every member's artifacts (see
+//! [`super::store::compact_run_dir`]).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::{ShardId, SweepPlan};
+use super::store::{
+    self, compact_run_dir, merge_run_dirs, GcStats, ManifestSummary, RunStore,
+};
+use super::{run_sweep_timed, RunOutcome, SweepSpec, SweepTiming};
+use crate::config::toml::{Section, TomlDoc};
+use crate::runtime::Manifest;
+use crate::util::hash::Fnv1a64;
+use crate::util::json::{num, obj, s, Json};
+
+pub const CAMPAIGN_MANIFEST_FILE: &str = "campaign-manifest.json";
+const CAMPAIGN_KIND: &str = "cpt-campaign";
+const CAMPAIGN_SCHEMA_VERSION: usize = 1;
+
+/// One named member sweep of a campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignMember {
+    pub name: String,
+    pub spec: SweepSpec,
+}
+
+/// A campaign as described by its TOML file (member order as authored;
+/// [`CampaignPlan::build`] canonicalizes it).
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// Default campaign root from `[campaign] run_dir` (the CLI flag
+    /// overrides it).
+    pub run_dir: Option<PathBuf>,
+    pub members: Vec<CampaignMember>,
+}
+
+impl CampaignSpec {
+    /// Parse a campaign file: `[campaign]` (name, optional run_dir) plus
+    /// one `[[campaign.sweep]]` table per member. Member names default
+    /// to the member's model and must be unique — they become directory
+    /// names under the campaign root and key the merged report.
+    pub fn from_toml(doc: &TomlDoc) -> Result<CampaignSpec> {
+        // reject unknown structure first, symmetrically with the
+        // unknown-key checks below — a misspelled [[campaign.sweep]]
+        // header would otherwise silently drop a whole member
+        for name in doc.sections.keys() {
+            if !name.is_empty() && name != "campaign" {
+                bail!(
+                    "unknown section [{name}] in campaign file (known: \
+                     [campaign], [[campaign.sweep]])"
+                );
+            }
+        }
+        if let Some(root) = doc.section("") {
+            if let Some(k) = root.keys().next() {
+                bail!(
+                    "unexpected top-level key '{k}' in campaign file (all \
+                     keys live under [campaign] or [[campaign.sweep]])"
+                );
+            }
+        }
+        for t in doc.tables.keys() {
+            if t != "campaign.sweep" {
+                bail!(
+                    "unknown table [[{t}]] in campaign file (did you mean \
+                     [[campaign.sweep]]?)"
+                );
+            }
+        }
+        let sec = doc
+            .section("campaign")
+            .context("campaign file needs a [campaign] section")?;
+        for k in sec.keys() {
+            if !["name", "run_dir"].contains(&k.as_str()) {
+                bail!("unknown [campaign] key '{k}' (known: name, run_dir)");
+            }
+        }
+        let name = sec
+            .get("name")
+            .context("[campaign] needs name")?
+            .as_str()?
+            .to_string();
+        let run_dir = sec
+            .get("run_dir")
+            .map(|v| Ok::<_, anyhow::Error>(PathBuf::from(v.as_str()?)))
+            .transpose()?;
+        let tables = doc.table("campaign.sweep");
+        if tables.is_empty() {
+            bail!(
+                "campaign '{name}' has no [[campaign.sweep]] members — \
+                 each member is one sweep (one figure panel)"
+            );
+        }
+        let mut members = Vec::new();
+        for (i, t) in tables.iter().enumerate() {
+            let spec =
+                sweep_spec_from_section(t, SweepSectionKind::CampaignMember)
+                    .with_context(|| format!("[[campaign.sweep]] #{}", i + 1))?;
+            let member_name = match t.get("name") {
+                Some(v) => v.as_str()?.to_string(),
+                None => spec.model.clone(),
+            };
+            members.push(CampaignMember { name: member_name, spec });
+        }
+        Ok(CampaignSpec { name, run_dir, members })
+    }
+}
+
+/// Which kind of TOML section [`sweep_spec_from_section`] is reading —
+/// each accepts exactly the keys that are meaningful there, so a key
+/// that would be silently inert is rejected instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepSectionKind {
+    /// `[sweep]` in a preset file: execution knobs
+    /// (shard/run_dir/resume/jobs/verbose) allowed; `name` is not (the
+    /// preset's root `title` labels the run).
+    Preset,
+    /// `[[campaign.sweep]]` member: `name` allowed; execution knobs are
+    /// campaign-level flags, never member keys.
+    CampaignMember,
+}
+
+/// Build a `SweepSpec` from a TOML section — the shared reader for
+/// `[sweep]` preset sections and `[[campaign.sweep]]` member tables.
+/// Unknown (or contextually inert) keys are rejected: they are silent
+/// result changes otherwise.
+pub fn sweep_spec_from_section(
+    sec: &Section,
+    kind: SweepSectionKind,
+) -> Result<SweepSpec> {
+    const RESULT_KEYS: &[&str] = &[
+        "model", "schedules", "q_maxes", "trials", "steps", "cycles",
+        "eval_every",
+    ];
+    const EXEC_KEYS: &[&str] = &["shard", "run_dir", "resume", "jobs", "verbose"];
+    let allow_exec_keys = kind == SweepSectionKind::Preset;
+    for k in sec.keys() {
+        let known = RESULT_KEYS.contains(&k.as_str())
+            || (allow_exec_keys && EXEC_KEYS.contains(&k.as_str()))
+            || (kind == SweepSectionKind::CampaignMember && k == "name");
+        if !known {
+            bail!(
+                "unknown sweep key '{k}' (known: {}{})",
+                RESULT_KEYS.join(", "),
+                match kind {
+                    SweepSectionKind::Preset =>
+                        format!("; exec: {}", EXEC_KEYS.join(", ")),
+                    SweepSectionKind::CampaignMember => "; name".to_string(),
+                }
+            );
+        }
+    }
+    let model = sec.get("model").context("sweep needs model")?.as_str()?;
+    let mut spec = SweepSpec::new(model);
+    if let Some(v) = sec.get("schedules") {
+        spec.schedules = v
+            .as_list()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = sec.get("q_maxes") {
+        spec.q_maxes =
+            v.as_list()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?;
+    }
+    if let Some(v) = sec.get("trials") {
+        spec.trials = v.as_usize()?;
+    }
+    if let Some(v) = sec.get("steps") {
+        spec.steps = Some(v.as_usize()?);
+    }
+    if let Some(v) = sec.get("cycles") {
+        spec.cycles = Some(v.as_usize()?);
+    }
+    if let Some(v) = sec.get("eval_every") {
+        spec.eval_every = v.as_usize()?;
+    }
+    if allow_exec_keys {
+        if let Some(v) = sec.get("shard") {
+            spec.shard = Some(ShardId::parse(v.as_str()?)?);
+        }
+        if let Some(v) = sec.get("run_dir") {
+            spec.run_dir = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = sec.get("resume") {
+            spec.resume = v.as_bool()?;
+        }
+        if let Some(v) = sec.get("jobs") {
+            spec.jobs = v.as_usize()?;
+        }
+        if let Some(v) = sec.get("verbose") {
+            spec.verbose = v.as_bool()?;
+        }
+    }
+    Ok(spec)
+}
+
+/// Campaign and member names both become filesystem path components
+/// (the default CSV dir, member run dirs) and CSV keys, so they share a
+/// path-safe alphabet.
+fn validate_path_component(what: &str, name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 64 {
+        bail!("{what} '{name}' must be 1..=64 characters");
+    }
+    if name.starts_with('.') {
+        bail!("{what} '{name}' may not start with '.'");
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+    {
+        bail!(
+            "{what} '{name}' may only contain [A-Za-z0-9._-] (it becomes \
+             a directory name)"
+        );
+    }
+    Ok(())
+}
+
+fn validate_member_name(name: &str) -> Result<()> {
+    validate_path_component("campaign member name", name)?;
+    if name == CAMPAIGN_MANIFEST_FILE || name == store::MANIFEST_FILE {
+        bail!("campaign member name '{name}' collides with a manifest file");
+    }
+    if name == "campaign" {
+        // the member CSV would be <csv-dir>/campaign.csv — the file the
+        // campaign-level report itself writes
+        bail!(
+            "campaign member name 'campaign' is reserved (it would \
+             collide with the campaign.csv report)"
+        );
+    }
+    Ok(())
+}
+
+/// One member of a compiled campaign plan.
+#[derive(Clone, Debug)]
+pub struct MemberPlan {
+    pub name: String,
+    pub spec: SweepSpec,
+    /// The member's own sweep plan (unsharded; execution applies the
+    /// campaign shard). Carries the member spec hash and cell count.
+    pub plan: SweepPlan,
+}
+
+/// The deterministic execution plan for a campaign: members in canonical
+/// (name-sorted) order plus the campaign content hash.
+#[derive(Clone, Debug)]
+pub struct CampaignPlan {
+    pub name: String,
+    /// FNV-1a 64 over the canonical member list — each member's name and
+    /// sweep spec hash. Execution knobs never reach it (the member spec
+    /// hashes already exclude them), so it changes iff a
+    /// result-determining field of some member changes, a member is
+    /// added/removed, or a member is renamed (names key the report).
+    pub campaign_hash: String,
+    pub members: Vec<MemberPlan>,
+}
+
+impl CampaignPlan {
+    pub fn build(spec: &CampaignSpec) -> Result<CampaignPlan> {
+        // the campaign name lands in the default CSV path, so it gets
+        // the same path-safe alphabet as member names
+        validate_path_component("campaign name", &spec.name)?;
+        if spec.members.is_empty() {
+            bail!("campaign '{}' has no member sweeps", spec.name);
+        }
+        let mut members = Vec::with_capacity(spec.members.len());
+        for m in &spec.members {
+            validate_member_name(&m.name)
+                .with_context(|| format!("campaign '{}'", spec.name))?;
+            let plan = SweepPlan::build(&m.spec)
+                .with_context(|| format!("campaign member '{}'", m.name))?;
+            members.push(MemberPlan {
+                name: m.name.clone(),
+                spec: m.spec.clone(),
+                plan,
+            });
+        }
+        // canonical order: sorted by member name, independent of the
+        // order the TOML file lists its tables
+        members.sort_by(|a, b| a.name.cmp(&b.name));
+        for w in members.windows(2) {
+            if w[0].name == w[1].name {
+                bail!(
+                    "duplicate campaign member name '{}' (names key the \
+                     report and the run-dir layout, so they must be unique)",
+                    w[0].name
+                );
+            }
+        }
+        let mut h = Fnv1a64::new();
+        h.update(b"cpt-campaign-v1");
+        for m in &members {
+            h.update(b";sweep=");
+            h.update(m.name.as_bytes());
+            h.update(b":");
+            h.update(m.plan.spec_hash.as_bytes());
+        }
+        Ok(CampaignPlan {
+            name: spec.name.clone(),
+            campaign_hash: h.finish_hex(),
+            members,
+        })
+    }
+
+    /// Cells across all members (all shards).
+    pub fn total_cells(&self) -> usize {
+        self.members.iter().map(|m| m.plan.total_cells()).sum()
+    }
+}
+
+/// Manifest record for one campaign member.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemberEntry {
+    /// Directory name under the campaign root (== member name).
+    pub dir: String,
+    pub model: String,
+    pub spec_hash: String,
+    pub total_cells: usize,
+}
+
+/// Parsed, validated view of a `campaign-manifest.json`.
+#[derive(Clone, Debug)]
+pub struct CampaignManifest {
+    pub cpt_version: String,
+    pub name: String,
+    pub campaign_hash: String,
+    pub shard: ShardId,
+    /// Member name -> entry; BTreeMap order is the canonical order.
+    pub members: BTreeMap<String, MemberEntry>,
+}
+
+impl CampaignManifest {
+    /// A member's run dir must hold exactly the sweep this campaign
+    /// manifest recorded — shared fence for every operation that walks
+    /// the tree (status, gc); merge applies it per root as well.
+    fn check_member_dir(
+        &self,
+        name: &str,
+        e: &MemberEntry,
+        ms: &ManifestSummary,
+        mdir: &Path,
+    ) -> Result<()> {
+        if ms.spec_hash != e.spec_hash
+            || ms.shard != self.shard
+            || ms.total_cells != e.total_cells
+            || ms.cpt_version != self.cpt_version
+        {
+            bail!(
+                "campaign member '{name}' run dir {} disagrees with the \
+                 campaign manifest (spec hash, shard, cell count, or cpt \
+                 version)",
+                mdir.display()
+            );
+        }
+        Ok(())
+    }
+}
+
+fn write_campaign_manifest(root: &Path, cm: &CampaignManifest) -> Result<()> {
+    let mut members = BTreeMap::new();
+    for (name, e) in &cm.members {
+        members.insert(
+            name.clone(),
+            obj(vec![
+                ("dir", s(&e.dir)),
+                ("model", s(&e.model)),
+                ("spec_hash", s(&e.spec_hash)),
+                ("total_cells", num(e.total_cells as f64)),
+            ]),
+        );
+    }
+    let doc = obj(vec![
+        ("kind", s(CAMPAIGN_KIND)),
+        ("version", num(CAMPAIGN_SCHEMA_VERSION as f64)),
+        ("cpt_version", s(&cm.cpt_version)),
+        ("name", s(&cm.name)),
+        ("campaign_hash", s(&cm.campaign_hash)),
+        ("shard_index", num(cm.shard.index as f64)),
+        ("shard_count", num(cm.shard.count as f64)),
+        ("members", Json::Obj(members)),
+    ]);
+    doc.write_atomic(root.join(CAMPAIGN_MANIFEST_FILE)).with_context(|| {
+        format!("write campaign manifest in {}", root.display())
+    })
+}
+
+/// Load and validate the `campaign-manifest.json` governing `root`.
+pub fn read_campaign_manifest(root: &Path) -> Result<CampaignManifest> {
+    let path = root.join(CAMPAIGN_MANIFEST_FILE);
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&src)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if j.get("kind")?.as_str()? != CAMPAIGN_KIND {
+        bail!("{}: not a cpt campaign manifest", path.display());
+    }
+    let version = j.get("version")?.as_usize()?;
+    if version != CAMPAIGN_SCHEMA_VERSION {
+        bail!(
+            "{}: campaign schema version {version} (this build reads \
+             version {CAMPAIGN_SCHEMA_VERSION})",
+            path.display()
+        );
+    }
+    let shard = ShardId {
+        index: j.get("shard_index")?.as_usize()?,
+        count: j.get("shard_count")?.as_usize()?,
+    };
+    if shard.count == 0 || shard.index == 0 || shard.index > shard.count {
+        bail!(
+            "shard {}/{} out of range in {}",
+            shard.index,
+            shard.count,
+            path.display()
+        );
+    }
+    let mut members = BTreeMap::new();
+    for (name, e) in j.get("members")?.as_obj()? {
+        validate_member_name(name)
+            .with_context(|| format!("in {}", path.display()))?;
+        let dir = e.get("dir")?.as_str()?.to_string();
+        if dir != *name {
+            // the writer always nests a member under its own name;
+            // anything else is a hand-edited manifest, and following it
+            // would let status/gc/merge touch paths outside the root
+            bail!(
+                "{}: member '{name}' points at dir '{dir}' (must equal \
+                 the member name)",
+                path.display()
+            );
+        }
+        members.insert(
+            name.clone(),
+            MemberEntry {
+                dir,
+                model: e.get("model")?.as_str()?.to_string(),
+                spec_hash: e.get("spec_hash")?.as_str()?.to_string(),
+                total_cells: e.get("total_cells")?.as_usize()?,
+            },
+        );
+    }
+    if members.is_empty() {
+        bail!("{}: campaign manifest lists no members", path.display());
+    }
+    let name = j.get("name")?.as_str()?.to_string();
+    // the name feeds the default CSV path (results/campaign_<name>), so
+    // a hand-edited manifest gets the same path-safety fence as the
+    // plan-side validation in CampaignPlan::build
+    validate_path_component("campaign name", &name)
+        .with_context(|| format!("in {}", path.display()))?;
+    Ok(CampaignManifest {
+        cpt_version: j.get("cpt_version")?.as_str()?.to_string(),
+        name,
+        campaign_hash: j.get("campaign_hash")?.as_str()?.to_string(),
+        shard,
+        members,
+    })
+}
+
+fn manifest_from_plan(plan: &CampaignPlan, shard: ShardId) -> CampaignManifest {
+    CampaignManifest {
+        cpt_version: RunStore::code_version().to_string(),
+        name: plan.name.clone(),
+        campaign_hash: plan.campaign_hash.clone(),
+        shard,
+        members: plan
+            .members
+            .iter()
+            .map(|m| {
+                (
+                    m.name.clone(),
+                    MemberEntry {
+                        dir: m.name.clone(),
+                        model: m.spec.model.clone(),
+                        spec_hash: m.plan.spec_hash.clone(),
+                        total_cells: m.plan.total_cells(),
+                    },
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Initialize or reopen a campaign root for `plan` + `shard`, applying
+/// the same fences as `RunStore::open` one level up. Public so tests can
+/// fabricate campaign trees without training anything.
+pub fn open_campaign_root(
+    root: &Path,
+    plan: &CampaignPlan,
+    shard: ShardId,
+    resume: bool,
+) -> Result<CampaignManifest> {
+    if !root.join(CAMPAIGN_MANIFEST_FILE).exists() {
+        if root.join(store::MANIFEST_FILE).exists() {
+            // never stack a campaign manifest on top of a sweep run dir:
+            // status/gc/merge dispatch on which manifest is present, so a
+            // mixed-kind tree would hide the sweep's recorded progress
+            bail!(
+                "{} is already a sweep run dir (it contains {}); point \
+                 --run-dir at a fresh directory",
+                root.display(),
+                store::MANIFEST_FILE
+            );
+        }
+        let cm = manifest_from_plan(plan, shard);
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("create {}", root.display()))?;
+        write_campaign_manifest(root, &cm)?;
+        return Ok(cm);
+    }
+    if !resume {
+        bail!(
+            "campaign root {} already contains {CAMPAIGN_MANIFEST_FILE}; \
+             pass --resume to continue it, or use a fresh directory",
+            root.display()
+        );
+    }
+    let cm = read_campaign_manifest(root)?;
+    if cm.campaign_hash != plan.campaign_hash {
+        bail!(
+            "cannot resume {}: it was created for a different campaign \
+             (manifest hash {}, requested {})",
+            root.display(),
+            cm.campaign_hash,
+            plan.campaign_hash
+        );
+    }
+    if cm.cpt_version != RunStore::code_version() {
+        bail!(
+            "cannot resume {}: it was written by cpt {} but this binary is \
+             {} — training code may have changed; use a fresh root",
+            root.display(),
+            cm.cpt_version,
+            RunStore::code_version()
+        );
+    }
+    if cm.shard != shard {
+        bail!(
+            "cannot resume {}: it belongs to shard {} but this run is \
+             shard {}",
+            root.display(),
+            cm.shard,
+            shard
+        );
+    }
+    let mut cm = cm;
+    let want = manifest_from_plan(plan, shard);
+    if cm.members != want.members {
+        // unreachable if the hash matches, but fail loudly rather than
+        // trusting a hand-edited manifest
+        bail!(
+            "campaign manifest in {} is inconsistent with the plan",
+            root.display()
+        );
+    }
+    if cm.name != plan.name {
+        // the name is a label (it keys the default CSV dir), deliberately
+        // outside the campaign hash — a rename is legitimate, so relabel
+        // the root instead of refusing a content-identical resume
+        eprintln!(
+            "[campaign] note: relabeling root {} from '{}' to '{}' \
+             (member set is unchanged)",
+            root.display(),
+            cm.name,
+            plan.name
+        );
+        cm.name = plan.name.clone();
+        write_campaign_manifest(root, &cm)?;
+    }
+    Ok(cm)
+}
+
+/// Execution knobs for one `cpt campaign` invocation.
+#[derive(Clone, Debug)]
+pub struct CampaignRunOpts {
+    pub root: PathBuf,
+    pub shard: ShardId,
+    pub jobs: usize,
+    pub resume: bool,
+    pub verbose: bool,
+}
+
+/// Results of one member sweep execution (this shard's share).
+#[derive(Clone, Debug)]
+pub struct MemberOutcome {
+    pub name: String,
+    pub model: String,
+    pub outcomes: Vec<RunOutcome>,
+    pub timing: SweepTiming,
+}
+
+/// Execute a campaign plan's owned shard: members in canonical order,
+/// each through `run_sweep_timed` with its run dir nested under the
+/// campaign root. Every completed cell is persisted before the campaign
+/// moves on, so a kill at any point loses at most the in-flight cell;
+/// re-running with `resume` picks up exactly where it stopped.
+pub fn run_campaign(
+    manifest: &Manifest,
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+) -> Result<Vec<MemberOutcome>> {
+    open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
+    // members often share a model (panels across q_max settings); hash
+    // each compiled model once, not once per member
+    let mut fingerprints: HashMap<String, String> = HashMap::new();
+    let mut results = Vec::with_capacity(plan.members.len());
+    for m in &plan.members {
+        let fp = match fingerprints.get(&m.spec.model) {
+            Some(fp) => fp.clone(),
+            None => {
+                let fp =
+                    store::model_fingerprint(manifest.model(&m.spec.model)?)?;
+                fingerprints.insert(m.spec.model.clone(), fp.clone());
+                fp
+            }
+        };
+        let mut spec = m.spec.clone();
+        spec.shard = Some(opts.shard);
+        spec.run_dir = Some(opts.root.join(&m.name));
+        // the campaign-root fence already vetted the whole tree, so
+        // member dirs reopen unconditionally (fresh dirs are unaffected)
+        spec.resume = true;
+        spec.jobs = opts.jobs;
+        spec.verbose = opts.verbose;
+        spec.model_fingerprint = Some(fp);
+        if opts.verbose {
+            eprintln!(
+                "[campaign {}] sweep '{}' ({}, shard {})",
+                plan.name, m.name, m.spec.model, opts.shard
+            );
+        }
+        let (outcomes, timing) = run_sweep_timed(manifest, &spec)
+            .with_context(|| format!("campaign member '{}'", m.name))?;
+        results.push(MemberOutcome {
+            name: m.name.clone(),
+            model: m.spec.model.clone(),
+            outcomes,
+            timing,
+        });
+    }
+    Ok(results)
+}
+
+/// One member's merged, canonical-order outcomes.
+#[derive(Clone, Debug)]
+pub struct MergedMember {
+    pub name: String,
+    pub model: String,
+    pub outcomes: Vec<RunOutcome>,
+}
+
+/// A fully merged campaign (every member complete across the roots).
+#[derive(Clone, Debug)]
+pub struct MergedCampaign {
+    pub name: String,
+    pub campaign_hash: String,
+    pub members: Vec<MergedMember>,
+}
+
+/// Merge N campaign shard roots into complete per-member outcome lists.
+/// Refuses roots whose campaign hashes or cpt versions disagree, member
+/// directories whose sweep spec hash is not the one the campaign
+/// manifest recorded, and (via [`merge_run_dirs`]) any member whose
+/// cells are missing, duplicated, or corrupt — so the result is exactly
+/// what one process running every member serially would have produced.
+pub fn merge_campaign_roots(roots: &[PathBuf]) -> Result<MergedCampaign> {
+    if roots.is_empty() {
+        bail!("campaign merge needs at least one campaign root");
+    }
+    let mut head: Option<CampaignManifest> = None;
+    for root in roots {
+        let cm = read_campaign_manifest(root)
+            .with_context(|| format!("load campaign root {}", root.display()))?;
+        match &head {
+            None => head = Some(cm),
+            Some(h) => {
+                if h.campaign_hash != cm.campaign_hash {
+                    bail!(
+                        "cannot merge {}: campaign hash {} does not match \
+                         {} — the roots come from different campaigns",
+                        root.display(),
+                        cm.campaign_hash,
+                        h.campaign_hash
+                    );
+                }
+                if h.cpt_version != cm.cpt_version {
+                    bail!(
+                        "cannot merge {}: its members were computed by cpt \
+                         {} but other roots used {}",
+                        root.display(),
+                        cm.cpt_version,
+                        h.cpt_version
+                    );
+                }
+                if h.members != cm.members {
+                    bail!(
+                        "cannot merge {}: campaign manifest disagrees on \
+                         members despite matching hash",
+                        root.display()
+                    );
+                }
+                if h.name != cm.name {
+                    // same content, different labels — refusing beats
+                    // silently picking one name for the merged report
+                    bail!(
+                        "cannot merge {}: it is labeled campaign '{}' but \
+                         other roots say '{}' (same member set) — rerun \
+                         the renamed root with --resume to relabel it",
+                        root.display(),
+                        cm.name,
+                        h.name
+                    );
+                }
+            }
+        }
+    }
+    let h = head.unwrap();
+    let mut members = Vec::with_capacity(h.members.len());
+    for (name, e) in &h.members {
+        let dirs: Vec<PathBuf> = roots
+            .iter()
+            .map(|r| r.join(&e.dir))
+            .filter(|d| d.join(store::MANIFEST_FILE).exists())
+            .collect();
+        if dirs.is_empty() {
+            bail!(
+                "campaign member '{name}' has no run directory in any \
+                 root — did its shards ever run?"
+            );
+        }
+        for d in &dirs {
+            let ms = store::read_manifest(d)
+                .with_context(|| format!("campaign member '{name}'"))?;
+            if ms.spec_hash != e.spec_hash {
+                bail!(
+                    "cannot merge member '{name}': {} holds spec hash {} \
+                     but the campaign manifest records {} — the directory \
+                     belongs to a different sweep",
+                    d.display(),
+                    ms.spec_hash,
+                    e.spec_hash
+                );
+            }
+            if ms.cpt_version != h.cpt_version {
+                bail!(
+                    "cannot merge member '{name}': {} was written by cpt \
+                     {} but the campaign root records {} — training code \
+                     may differ between builds",
+                    d.display(),
+                    ms.cpt_version,
+                    h.cpt_version
+                );
+            }
+        }
+        let (model, outcomes) = merge_run_dirs(&dirs)
+            .with_context(|| format!("campaign member '{name}'"))?;
+        if model != e.model {
+            bail!(
+                "campaign member '{name}': merged model '{model}' does not \
+                 match the manifest's '{}'",
+                e.model
+            );
+        }
+        members.push(MergedMember { name: name.clone(), model, outcomes });
+    }
+    Ok(MergedCampaign {
+        name: h.name,
+        campaign_hash: h.campaign_hash,
+        members,
+    })
+}
+
+/// Progress of one campaign member, derived from its run manifest (or
+/// from the campaign manifest alone if the member dir does not exist
+/// yet).
+#[derive(Clone, Debug)]
+pub struct MemberStatus {
+    pub name: String,
+    pub model: String,
+    pub planned: usize,
+    pub done: usize,
+    pub exec_seconds: f64,
+}
+
+impl MemberStatus {
+    pub fn remaining(&self) -> usize {
+        self.planned - self.done
+    }
+}
+
+/// Progress of a whole campaign root.
+#[derive(Clone, Debug)]
+pub struct CampaignStatus {
+    pub name: String,
+    pub campaign_hash: String,
+    pub shard: ShardId,
+    pub members: Vec<MemberStatus>,
+}
+
+impl CampaignStatus {
+    pub fn planned(&self) -> usize {
+        self.members.iter().map(|m| m.planned).sum()
+    }
+
+    pub fn done(&self) -> usize {
+        self.members.iter().map(|m| m.done).sum()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.planned() - self.done()
+    }
+
+    pub fn exec_seconds(&self) -> f64 {
+        self.members.iter().map(|m| m.exec_seconds).sum()
+    }
+}
+
+/// What `cpt status DIR` found at `DIR`.
+#[derive(Clone, Debug)]
+pub enum Status {
+    /// A single sweep run dir (its validated manifest view).
+    Sweep(ManifestSummary),
+    Campaign(CampaignStatus),
+}
+
+/// Report progress for either a sweep run dir or a campaign root,
+/// straight from the manifests (no artifact is opened). Refuses trees
+/// whose manifests are inconsistent — status must never present a
+/// mismatched tree as healthy progress.
+pub fn status(dir: &Path) -> Result<Status> {
+    if dir.join(CAMPAIGN_MANIFEST_FILE).exists() {
+        let cm = read_campaign_manifest(dir)?;
+        let mut members = Vec::with_capacity(cm.members.len());
+        for (name, e) in &cm.members {
+            let mdir = dir.join(&e.dir);
+            let st = if mdir.join(store::MANIFEST_FILE).exists() {
+                let ms = store::read_manifest(&mdir)
+                    .with_context(|| format!("campaign member '{name}'"))?;
+                cm.check_member_dir(name, e, &ms, &mdir)?;
+                MemberStatus {
+                    name: name.clone(),
+                    model: e.model.clone(),
+                    planned: ms.planned(),
+                    done: ms.done(),
+                    exec_seconds: ms.exec_seconds(),
+                }
+            } else {
+                // not started: everything the shard owns is still to do
+                MemberStatus {
+                    name: name.clone(),
+                    model: e.model.clone(),
+                    planned: cm.shard.owned_count(e.total_cells),
+                    done: 0,
+                    exec_seconds: 0.0,
+                }
+            };
+            members.push(st);
+        }
+        return Ok(Status::Campaign(CampaignStatus {
+            name: cm.name,
+            campaign_hash: cm.campaign_hash,
+            shard: cm.shard,
+            members,
+        }));
+    }
+    if dir.join(store::MANIFEST_FILE).exists() {
+        return Ok(Status::Sweep(store::read_manifest(dir)?));
+    }
+    bail!(
+        "{} contains neither {} nor {} — not a run dir or campaign root",
+        dir.display(),
+        store::MANIFEST_FILE,
+        CAMPAIGN_MANIFEST_FILE
+    );
+}
+
+/// `cpt gc`: compact a sweep run dir, or every started member of a
+/// campaign root. Returns per-directory stats labeled by member name
+/// ("" for a plain sweep dir).
+pub fn gc(dir: &Path) -> Result<Vec<(String, GcStats)>> {
+    if dir.join(CAMPAIGN_MANIFEST_FILE).exists() {
+        let cm = read_campaign_manifest(dir)?;
+        let mut out = Vec::new();
+        for (name, e) in &cm.members {
+            let mdir = dir.join(&e.dir);
+            if !mdir.join(store::MANIFEST_FILE).exists() {
+                continue; // member not started yet — nothing to compact
+            }
+            // same fence as status: never rewrite a member dir the rest
+            // of the tooling would refuse as mismatched
+            let ms = store::read_manifest(&mdir)
+                .with_context(|| format!("campaign member '{name}'"))?;
+            cm.check_member_dir(name, e, &ms, &mdir)?;
+            let stats = compact_run_dir(&mdir)
+                .with_context(|| format!("campaign member '{name}'"))?;
+            out.push((name.clone(), stats));
+        }
+        return Ok(out);
+    }
+    if dir.join(store::MANIFEST_FILE).exists() {
+        return Ok(vec![(String::new(), compact_run_dir(dir)?)]);
+    }
+    bail!(
+        "{} contains neither {} nor {} — not a run dir or campaign root",
+        dir.display(),
+        store::MANIFEST_FILE,
+        CAMPAIGN_MANIFEST_FILE
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    fn member_spec(trials: usize) -> SweepSpec {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into()];
+        s.q_maxes = vec![8.0];
+        s.trials = trials;
+        s.steps = Some(8);
+        s
+    }
+
+    fn campaign(names: &[&str]) -> CampaignSpec {
+        CampaignSpec {
+            name: "c".into(),
+            run_dir: None,
+            members: names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| CampaignMember {
+                    name: n.to_string(),
+                    spec: member_spec(1 + i),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn from_toml_reads_campaign_and_members() {
+        let doc = TomlDoc::parse(
+            r#"
+[campaign]
+name = "fig367"
+run_dir = "runs/fig367"
+
+[[campaign.sweep]]
+name = "cifar"
+model = "cnn_tiny"
+q_maxes = [6, 8]
+trials = 2
+
+[[campaign.sweep]]
+model = "mlp"          # name defaults to the model
+steps = 16
+eval_every = 4
+"#,
+        )
+        .unwrap();
+        let c = CampaignSpec::from_toml(&doc).unwrap();
+        assert_eq!(c.name, "fig367");
+        assert_eq!(c.run_dir.as_deref(), Some(Path::new("runs/fig367")));
+        assert_eq!(c.members.len(), 2);
+        assert_eq!(c.members[0].name, "cifar");
+        assert_eq!(c.members[0].spec.q_maxes, vec![6.0, 8.0]);
+        assert_eq!(c.members[1].name, "mlp");
+        assert_eq!(c.members[1].spec.steps, Some(16));
+        assert_eq!(c.members[1].spec.eval_every, 4);
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_campaigns() {
+        // no members
+        let doc = TomlDoc::parse("[campaign]\nname = \"x\"").unwrap();
+        assert!(CampaignSpec::from_toml(&doc)
+            .unwrap_err()
+            .to_string()
+            .contains("no [[campaign.sweep]]"));
+        // members may not set execution knobs
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"x\"\n[[campaign.sweep]]\nmodel = \"mlp\"\nshard = \"1/2\"",
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_toml(&doc)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown sweep key 'shard'"));
+        // unknown [campaign] keys are typos, not silently dropped config
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"x\"\nrundir = \"y\"\n[[campaign.sweep]]\nmodel = \"mlp\"",
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_toml(&doc).is_err());
+        // a misspelled table header must not silently drop a member
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"x\"\n[[campaign.sweep]]\nmodel = \"mlp\"\n[[campaign.sweeps]]\nmodel = \"mlp\"",
+        )
+        .unwrap();
+        let err = CampaignSpec::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("campaign.sweeps"), "{err:#}");
+        // stray top-level keys and sections are rejected too
+        let doc = TomlDoc::parse(
+            "title = \"x\"\n[campaign]\nname = \"x\"\n[[campaign.sweep]]\nmodel = \"mlp\"",
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_toml(&doc).is_err());
+        // a [sweep] preset section may not smuggle a 'name' key (inert
+        // there), while members accept it — asymmetric by design
+        let sec = TomlDoc::parse("[sweep]\nmodel = \"mlp\"\nname = \"x\"")
+            .unwrap();
+        let sec = sec.section("sweep").unwrap().clone();
+        assert!(
+            sweep_spec_from_section(&sec, SweepSectionKind::Preset).is_err()
+        );
+        assert!(sweep_spec_from_section(&sec, SweepSectionKind::CampaignMember)
+            .is_ok());
+    }
+
+    #[test]
+    fn plan_rejects_bad_member_names() {
+        for bad in
+            ["", "a/b", "..", ".hidden", "run-manifest.json", "campaign"]
+        {
+            let c = campaign(&[bad]);
+            assert!(
+                CampaignPlan::build(&c).is_err(),
+                "accepted member name '{bad}'"
+            );
+        }
+        let c = campaign(&["a", "a"]);
+        let err = CampaignPlan::build(&c).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err:#}");
+        // the campaign name lands in the default CSV path — same alphabet
+        let mut c = campaign(&["a"]);
+        c.name = "fig/3..7".into();
+        let err = CampaignPlan::build(&c).unwrap_err();
+        assert!(err.to_string().contains("campaign name"), "{err:#}");
+    }
+
+    #[test]
+    fn member_order_is_canonical_regardless_of_listing_order() {
+        propcheck(50, |rng| {
+            let n = 2 + rng.below(4) as usize;
+            let names: Vec<String> =
+                (0..n).map(|i| format!("m{i}")).collect();
+            // a random permutation of the members (Fisher-Yates)
+            let mut shuffled: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.below(i as u32 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let in_order = CampaignSpec {
+                name: "c".into(),
+                run_dir: None,
+                members: (0..n)
+                    .map(|i| CampaignMember {
+                        name: names[i].clone(),
+                        spec: member_spec(1 + i),
+                    })
+                    .collect(),
+            };
+            let permuted = CampaignSpec {
+                name: "c".into(),
+                run_dir: None,
+                members: shuffled
+                    .iter()
+                    .map(|&i| CampaignMember {
+                        name: names[i].clone(),
+                        spec: member_spec(1 + i),
+                    })
+                    .collect(),
+            };
+            let a = CampaignPlan::build(&in_order).unwrap();
+            let b = CampaignPlan::build(&permuted).unwrap();
+            let order_a: Vec<&str> =
+                a.members.iter().map(|m| m.name.as_str()).collect();
+            let order_b: Vec<&str> =
+                b.members.iter().map(|m| m.name.as_str()).collect();
+            prop_assert!(order_a == order_b, "{order_a:?} != {order_b:?}");
+            prop_assert!(
+                a.campaign_hash == b.campaign_hash,
+                "hash depends on listing order"
+            );
+            // and the hash is stable across rebuilds
+            prop_assert!(
+                CampaignPlan::build(&in_order).unwrap().campaign_hash
+                    == a.campaign_hash,
+                "hash unstable"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn campaign_hash_tracks_result_determining_member_fields_only() {
+        propcheck(100, |rng| {
+            let base = campaign(&["a", "b"]);
+            let base_hash = CampaignPlan::build(&base).unwrap().campaign_hash;
+            let which = rng.below(2) as usize;
+            let mut c = campaign(&["a", "b"]);
+            let spec = &mut c.members[which].spec;
+            // an execution knob never moves the hash...
+            match rng.below(5) {
+                0 => spec.jobs = 2 + rng.below(6) as usize,
+                1 => spec.verbose = true,
+                2 => {
+                    spec.shard = Some(ShardId {
+                        index: 1,
+                        count: 2 + rng.below(3) as usize,
+                    })
+                }
+                3 => spec.run_dir = Some("/tmp/x".into()),
+                _ => spec.resume = true,
+            }
+            let hash = CampaignPlan::build(&c).unwrap().campaign_hash;
+            prop_assert!(
+                hash == base_hash,
+                "execution knob changed the campaign hash"
+            );
+            // ...and a result-determining change always does
+            let mut c = campaign(&["a", "b"]);
+            match rng.below(7) {
+                0 => c.members[which].spec.trials += 1,
+                1 => c.members[which].spec.steps = Some(9999),
+                2 => c.members[which].spec.cycles = Some(3),
+                3 => c.members[which].spec.q_maxes.push(4.0),
+                4 => c.members[which].spec.schedules.push("ETH".into()),
+                5 => c.members[which].spec.eval_every = 5,
+                // renames change the report keying, so they count too
+                _ => c.members[which].name.push('x'),
+            }
+            let hash = CampaignPlan::build(&c).unwrap().campaign_hash;
+            prop_assert!(
+                hash != base_hash,
+                "result-determining change kept the campaign hash"
+            );
+            // membership changes count as well
+            let bigger = campaign(&["a", "b", "c"]);
+            prop_assert!(
+                CampaignPlan::build(&bigger).unwrap().campaign_hash
+                    != base_hash,
+                "adding a member kept the campaign hash"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn campaign_root_fences_resume() {
+        let root = std::env::temp_dir().join("cpt_campaign_root_fences");
+        std::fs::remove_dir_all(&root).ok();
+        let plan = CampaignPlan::build(&campaign(&["a", "b"])).unwrap();
+        let shard = ShardId::single();
+        open_campaign_root(&root, &plan, shard, false).unwrap();
+        // reopening needs resume
+        let err =
+            open_campaign_root(&root, &plan, shard, false).unwrap_err();
+        assert!(err.to_string().contains("--resume"), "{err:#}");
+        // same plan resumes
+        open_campaign_root(&root, &plan, shard, true).unwrap();
+        // a different campaign refuses
+        let other = CampaignPlan::build(&campaign(&["a", "zz"])).unwrap();
+        let err = open_campaign_root(&root, &other, shard, true).unwrap_err();
+        assert!(err.to_string().contains("different campaign"), "{err:#}");
+        // a different shard refuses
+        let err = open_campaign_root(
+            &root,
+            &plan,
+            ShardId { index: 1, count: 2 },
+            true,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err:#}");
+        // a different code version refuses
+        let mp = root.join(CAMPAIGN_MANIFEST_FILE);
+        let edited = std::fs::read_to_string(&mp)
+            .unwrap()
+            .replace(RunStore::code_version(), "0.0.0-other-build");
+        std::fs::write(&mp, edited).unwrap();
+        let err = open_campaign_root(&root, &plan, shard, true).unwrap_err();
+        assert!(err.to_string().contains("this binary"), "{err:#}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn campaign_rename_relabels_root_instead_of_refusing() {
+        let root = std::env::temp_dir().join("cpt_campaign_rename");
+        std::fs::remove_dir_all(&root).ok();
+        let plan = CampaignPlan::build(&campaign(&["a", "b"])).unwrap();
+        open_campaign_root(&root, &plan, ShardId::single(), false).unwrap();
+        // same members, new label: resume succeeds and relabels
+        let mut renamed_spec = campaign(&["a", "b"]);
+        renamed_spec.name = "c-v2".into();
+        let renamed = CampaignPlan::build(&renamed_spec).unwrap();
+        assert_eq!(renamed.campaign_hash, plan.campaign_hash);
+        let cm =
+            open_campaign_root(&root, &renamed, ShardId::single(), true)
+                .unwrap();
+        assert_eq!(cm.name, "c-v2");
+        assert_eq!(read_campaign_manifest(&root).unwrap().name, "c-v2");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn manifest_kinds_never_stack_in_one_directory() {
+        let dir = std::env::temp_dir().join("cpt_campaign_kind_clash");
+        std::fs::remove_dir_all(&dir).ok();
+        // a sweep run dir refuses to become a campaign root...
+        let mut s = member_spec(1);
+        s.shard = Some(ShardId::single());
+        let splan = SweepPlan::build(&s).unwrap();
+        drop(RunStore::open(&dir, &splan, "fp-test", false).unwrap());
+        let plan = CampaignPlan::build(&campaign(&["a"])).unwrap();
+        let err = open_campaign_root(&dir, &plan, ShardId::single(), false)
+            .unwrap_err();
+        assert!(err.to_string().contains("sweep run dir"), "{err:#}");
+        // ...and a campaign root refuses to host a sweep store directly
+        let root = std::env::temp_dir().join("cpt_campaign_kind_clash2");
+        std::fs::remove_dir_all(&root).ok();
+        open_campaign_root(&root, &plan, ShardId::single(), false).unwrap();
+        let err =
+            RunStore::open(&root, &splan, "fp-test", false).unwrap_err();
+        assert!(err.to_string().contains("campaign root"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn campaign_manifest_rejects_redirected_member_dirs() {
+        // status/gc/merge follow MemberEntry.dir; a manifest pointing a
+        // member outside the root must be refused at read time
+        let root = std::env::temp_dir().join("cpt_campaign_dir_redirect");
+        std::fs::remove_dir_all(&root).ok();
+        let plan = CampaignPlan::build(&campaign(&["a", "b"])).unwrap();
+        open_campaign_root(&root, &plan, ShardId::single(), false).unwrap();
+        let mp = root.join(CAMPAIGN_MANIFEST_FILE);
+        let src = std::fs::read_to_string(&mp).unwrap();
+        let edited = src.replace("\"dir\": \"a\"", "\"dir\": \"../evil\"");
+        std::fs::write(&mp, &edited).unwrap();
+        let err = read_campaign_manifest(&root).unwrap_err();
+        assert!(err.to_string().contains("must equal"), "{err:#}");
+        // a path-unsafe campaign *name* is refused the same way (it
+        // feeds the default CSV directory)
+        let edited = src.replace("\"name\": \"c\"", "\"name\": \"../evil\"");
+        std::fs::write(&mp, edited).unwrap();
+        let err = read_campaign_manifest(&root).unwrap_err();
+        assert!(err.to_string().contains("campaign name"), "{err:#}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn status_errors_on_unrecognized_dirs() {
+        let dir = std::env::temp_dir().join("cpt_campaign_status_none");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(status(&dir).is_err());
+        assert!(gc(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,18 +20,24 @@
 //! [`store::RunStore`] and cells with valid artifacts are skipped on
 //! re-run, which makes crash/preempt resume free; `cpt merge` (backed by
 //! [`store::merge_run_dirs`]) validates and recombines shard directories
-//! into the single-process result. See rust/DESIGN-sharding.md and
-//! rust/DESIGN-perf.md.
+//! into the single-process result. One level above sweeps,
+//! [`campaign`] orchestrates several named sweeps as one
+//! content-addressed tree (`cpt campaign` / `cpt status` / `cpt gc`).
+//! See rust/DESIGN-sharding.md and rust/DESIGN-perf.md.
 
+pub mod campaign;
 pub mod plan;
 pub mod recipes;
 pub mod report;
 pub mod store;
 
+pub use campaign::{
+    merge_campaign_roots, run_campaign, CampaignPlan, CampaignSpec,
+};
 pub use plan::{PlannedCell, ShardId, SweepPlan};
 pub use recipes::{dataset_for, recipe, report_metric, Recipe};
 pub use report::SweepReport;
-pub use store::{merge_run_dirs, RunStore};
+pub use store::{compact_run_dir, merge_run_dirs, read_manifest, RunStore};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -128,6 +134,44 @@ impl SweepSpec {
         }
         Ok(())
     }
+
+    /// Announce an active run directory on stderr — bench targets call
+    /// this after [`SweepSpec::apply_env_run_dir`] so a user who set
+    /// CPT_RUN_DIR sees where artifacts land and how to inspect them.
+    pub fn log_run_dir(&self) {
+        if let Some(dir) = &self.run_dir {
+            eprintln!(
+                "[sweep] persisting cell artifacts under {0} — inspect \
+                 progress with `cpt status {0}`",
+                dir.display()
+            );
+        }
+    }
+}
+
+/// Crash-injection point for the resume tests: with CPT_HALT_AFTER_CELLS=N
+/// set, the serial executor aborts the process' sweep after recording N
+/// freshly computed cells (a deterministic stand-in for `kill` in
+/// scripts/check.sh's campaign gate — every durability property it
+/// exercises is the same, because artifacts/manifests are already on disk
+/// when the abort fires). Counted process-wide so a campaign halts after
+/// N cells across members, not per member.
+fn crash_injection_point() -> Result<()> {
+    static FRESH_CELLS: AtomicUsize = AtomicUsize::new(0);
+    if let Ok(v) = std::env::var("CPT_HALT_AFTER_CELLS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                let done = FRESH_CELLS.fetch_add(1, Ordering::SeqCst) + 1;
+                if done >= n {
+                    anyhow::bail!(
+                        "halted after {done} freshly computed cell(s) \
+                         (CPT_HALT_AFTER_CELLS={n} crash injection)"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// One cell of a sweep: a single training run to execute.
@@ -413,6 +457,7 @@ fn run_todo_serial(
             st.record(pc.index, &out)?;
         }
         slots[pos] = Some(out);
+        crash_injection_point()?;
     }
     Ok(())
 }

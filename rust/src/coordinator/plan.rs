@@ -60,6 +60,14 @@ impl ShardId {
     pub fn owns(&self, cell_index: usize) -> bool {
         cell_index % self.count == self.index - 1
     }
+
+    /// How many of the `total_cells` canonical indices this shard owns
+    /// (closed form of counting `owns(i)` over `0..total_cells`). This
+    /// is the "planned" figure `cpt status` reports for a shard dir.
+    pub fn owned_count(&self, total_cells: usize) -> usize {
+        total_cells / self.count
+            + usize::from(self.index - 1 < total_cells % self.count)
+    }
 }
 
 impl fmt::Display for ShardId {
@@ -246,6 +254,23 @@ mod tests {
             prop_assert!(
                 seen.iter().all(|&n| n == 1),
                 "partition not exact: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn owned_count_matches_enumeration() {
+        propcheck(200, |rng| {
+            let total = rng.below(50) as usize;
+            let count = 1 + rng.below(8) as usize;
+            let index = 1 + rng.below(count as u32) as usize;
+            let sh = ShardId { index, count };
+            let brute = (0..total).filter(|&i| sh.owns(i)).count();
+            prop_assert!(
+                sh.owned_count(total) == brute,
+                "{sh} over {total}: {} != {brute}",
+                sh.owned_count(total)
             );
             Ok(())
         });

@@ -41,6 +41,24 @@ pub enum LrKind {
     Plateau,
 }
 
+/// Every model with a recipe (and a dataset) — the single source the
+/// tests, `cpt` error messages, and campaign validation iterate.
+pub fn model_names() -> &'static [&'static str] {
+    &[
+        "mlp",
+        "cnn_tiny",
+        "cnn_deep",
+        "detector",
+        "gcn_qagg",
+        "gcn_fpagg",
+        "sage_qagg",
+        "sage_fpagg",
+        "lstm_lm",
+        "transformer_lm",
+        "transformer_cls",
+    ]
+}
+
 /// Recipe lookup. q_min values follow the paper's range-test results for
 /// the corresponding domain (CIFAR 3, ImageNet 4, VOC 5, OGBN 3, LM 5).
 pub fn recipe(model: &str) -> Result<Recipe> {
@@ -117,7 +135,10 @@ pub fn recipe(model: &str) -> Result<Recipe> {
             lr_kind: LrKind::Linear,
             higher_is_better: true,
         },
-        other => bail!("no recipe for model '{other}'"),
+        other => bail!(
+            "no recipe for model '{other}' (known: {})",
+            model_names().join(", ")
+        ),
     })
 }
 
@@ -155,7 +176,10 @@ pub fn dataset_for(model: &str, seed: u64) -> Result<Box<dyn Dataset>> {
         "lstm_lm" => Box::new(LmDataset::new(seed, 64, 32, 16)),
         "transformer_lm" => Box::new(LmDataset::new(seed, 64, 32, 16)),
         "transformer_cls" => Box::new(EntailmentDataset::new(seed, 32, 16)),
-        other => bail!("no dataset for model '{other}'"),
+        other => bail!(
+            "no dataset for model '{other}' (known: {})",
+            model_names().join(", ")
+        ),
     })
 }
 
@@ -174,15 +198,13 @@ mod tests {
 
     #[test]
     fn all_models_have_recipe_and_dataset() {
-        for m in [
-            "mlp", "cnn_tiny", "cnn_deep", "detector", "gcn_qagg",
-            "gcn_fpagg", "sage_qagg", "sage_fpagg", "lstm_lm",
-            "transformer_lm", "transformer_cls",
-        ] {
+        assert_eq!(model_names().len(), 11);
+        for &m in model_names() {
             recipe(m).unwrap_or_else(|e| panic!("{m}: {e}"));
             dataset_for(m, 1).unwrap_or_else(|e| panic!("{m}: {e}"));
         }
-        assert!(recipe("nope").is_err());
+        let err = recipe("nope").unwrap_err();
+        assert!(err.to_string().contains("known: mlp"), "{err:#}");
     }
 
     #[test]

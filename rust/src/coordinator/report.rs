@@ -7,6 +7,28 @@ use anyhow::Result;
 use super::{AggRow, RunOutcome, SweepTiming};
 use crate::metrics::CsvWriter;
 
+/// The run-deterministic aggregate columns shared by the stable sweep
+/// CSV and the campaign CSV (which prefixes a `sweep` key column).
+const STABLE_COLUMNS: [&str; 8] = [
+    "model", "schedule", "group", "q_max", "gbitops", "metric_mean",
+    "metric_std", "trials",
+];
+
+/// Values for [`STABLE_COLUMNS`] — one formatting path, so sweep and
+/// campaign CSVs can never drift apart.
+fn stable_fields(r: &AggRow) -> Vec<String> {
+    vec![
+        r.model.clone(),
+        r.schedule.clone(),
+        r.group.clone(),
+        format!("{}", r.q_max),
+        format!("{:.6}", r.gbitops),
+        format!("{:.6}", r.metric_mean),
+        format!("{:.6}", r.metric_std),
+        format!("{}", r.trials),
+    ]
+}
+
 /// Pretty-printer + CSV emitter for a sweep.
 pub struct SweepReport<'a> {
     pub title: &'a str,
@@ -108,10 +130,7 @@ impl<'a> SweepReport<'a> {
         timing: Option<SweepTiming>,
         exec_cols: bool,
     ) -> CsvWriter {
-        let mut header = vec![
-            "model", "schedule", "group", "q_max", "gbitops",
-            "metric_mean", "metric_std", "trials",
-        ];
+        let mut header = STABLE_COLUMNS.to_vec();
         if exec_cols {
             header.push("exec_seconds_mean");
         }
@@ -120,16 +139,7 @@ impl<'a> SweepReport<'a> {
         }
         let mut w = CsvWriter::new(&header);
         for r in rows {
-            let mut fields = vec![
-                r.model.clone(),
-                r.schedule.clone(),
-                r.group.clone(),
-                format!("{}", r.q_max),
-                format!("{:.6}", r.gbitops),
-                format!("{:.6}", r.metric_mean),
-                format!("{:.6}", r.metric_std),
-                format!("{}", r.trials),
-            ];
+            let mut fields = stable_fields(r);
             if exec_cols {
                 fields.push(format!("{:.4}", r.exec_seconds_mean));
             }
@@ -140,6 +150,28 @@ impl<'a> SweepReport<'a> {
             w.row(&fields);
         }
         w
+    }
+
+    /// Write a campaign-level CSV: every member sweep's stable aggregate
+    /// rows keyed by a leading `sweep` column, in campaign member order.
+    /// Formatting is identical to [`Self::write_csv_stable`], so any
+    /// member's slice of the campaign CSV is byte-identical (minus the
+    /// key column) to the CSV an independent run of that sweep writes.
+    pub fn write_campaign_csv(
+        members: &[(String, Vec<AggRow>)],
+        path: impl AsRef<Path>,
+    ) -> Result<()> {
+        let mut header = vec!["sweep"];
+        header.extend(STABLE_COLUMNS);
+        let mut w = CsvWriter::new(&header);
+        for (name, rows) in members {
+            for r in rows {
+                let mut fields = vec![name.clone()];
+                fields.extend(stable_fields(r));
+                w.row(&fields);
+            }
+        }
+        w.write_to(path)
     }
 
     /// Write per-run loss curves (for the e2e example / Fig 5 style
@@ -243,6 +275,41 @@ mod tests {
             "model,schedule,group,q_max,gbitops,metric_mean,metric_std,trials"
         );
         assert!(!s.contains("exec_seconds"), "{s}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_csv_keys_rows_by_sweep_and_matches_stable_format() {
+        let dir = std::env::temp_dir().join("cpt_report_test_campaign");
+        std::fs::remove_dir_all(&dir).ok();
+        let a_rows = vec![row("CR", 8.0, 1.0, 0.9), row("STATIC", 8.0, 2.0, 0.88)];
+        let b_rows = vec![row("RR", 6.0, 2.0, 0.8)];
+        let members = vec![
+            ("a".to_string(), a_rows.clone()),
+            ("b".to_string(), b_rows),
+        ];
+        let p = dir.join("campaign.csv");
+        SweepReport::write_campaign_csv(&members, &p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let mut lines = s.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "sweep,model,schedule,group,q_max,gbitops,metric_mean,metric_std,trials"
+        );
+        // stripping the sweep key must reproduce the member's stable CSV
+        let ps = dir.join("a.csv");
+        SweepReport::new("a", "acc", true)
+            .write_csv_stable(&a_rows, &ps)
+            .unwrap();
+        let stable = std::fs::read_to_string(&ps).unwrap();
+        let mut stable_lines = stable.lines().skip(1);
+        for _ in 0..2 {
+            let c = lines.next().unwrap();
+            let (key, rest) = c.split_once(',').unwrap();
+            assert_eq!(key, "a");
+            assert_eq!(rest, stable_lines.next().unwrap());
+        }
+        assert!(lines.next().unwrap().starts_with("b,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

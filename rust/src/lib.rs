@@ -43,9 +43,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::Cli;
     pub use crate::coordinator::{
-        aggregate, dataset_for, merge_run_dirs, recipe, run_one, run_sweep,
-        run_sweep_timed, sweep_cells, RunOutcome, RunStore, ShardId,
-        SweepCell, SweepPlan, SweepReport, SweepSpec, SweepTiming,
+        aggregate, dataset_for, merge_campaign_roots, merge_run_dirs, recipe,
+        run_campaign, run_one, run_sweep, run_sweep_timed, sweep_cells,
+        CampaignPlan, CampaignSpec, RunOutcome, RunStore, ShardId, SweepCell,
+        SweepPlan, SweepReport, SweepSpec, SweepTiming,
     };
     pub use crate::data::Dataset;
     pub use crate::metrics::History;

@@ -6,18 +6,25 @@
 //!   train     --model M [...]    one training run with a chosen schedule
 //!   sweep     --model M [...]    schedule suite sweep (one figure panel);
 //!                                shardable + resumable via --shard/--run-dir
-//!   merge     DIR...             validate + combine shard run dirs into
-//!                                the single-process aggregate CSV
+//!   campaign  --file F.toml      run several named sweeps as one
+//!                                content-addressed tree (a figure campaign)
+//!   merge     DIR...             validate + combine shard run dirs — or
+//!                                campaign roots — into the aggregate CSVs
+//!   status    DIR                report done/remaining cells and per-cell
+//!                                wall-clock for a run dir or campaign root
+//!   gc        DIR                compact artifacts (strip per-step
+//!                                histories; aggregates are unchanged)
 //!   range-test --model M [...]   precision range test (discovers q_min)
 //!   preset    --file F.toml      run a sweep described by a preset file
 //!
-//! Run `cpt <subcommand> --help` for flags.
+//! Run `cpt help` for flags.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use cpt::coordinator::{self, merge_run_dirs, recipes, RunOutcome, ShardId};
+use cpt::coordinator::campaign::{self, CampaignRunOpts, Status};
+use cpt::coordinator::{self, merge_run_dirs, recipes, AggRow, RunOutcome, ShardId};
 use cpt::prelude::*;
 use cpt::quant::range_test;
 use cpt::schedule::relative_cost;
@@ -37,7 +44,10 @@ fn run() -> Result<()> {
         "schedules" => cmd_schedules(&cli),
         "train" => cmd_train(&cli),
         "sweep" => cmd_sweep(&cli),
+        "campaign" => cmd_campaign(&cli),
         "merge" => cmd_merge(&cli),
+        "status" => cmd_status(&cli),
+        "gc" => cmd_gc(&cli),
         "range-test" => cmd_range_test(&cli),
         "preset" => cmd_preset(&cli),
         "" | "help" => {
@@ -71,11 +81,34 @@ USAGE: cpt <subcommand> [flags]
                                 per cell + run-manifest.json);
                                 --resume reopens a run dir and skips
                                 cells with valid artifacts
+  campaign --file configs/X.toml [--run-dir ROOT] [--shard I/N]
+           [--jobs N] [--resume] [--csv-dir DIR] [--verbose]
+                                run a multi-sweep figure campaign: the
+                                TOML's [[campaign.sweep]] members execute
+                                in canonical (name-sorted) order, one
+                                nested run dir per member under ROOT,
+                                governed by campaign-manifest.json;
+                                --shard I/N shards every member the same
+                                way (one root per shard; combine with
+                                `cpt merge ROOT1 ROOT2 ...`); --resume
+                                reopens a root and skips recorded cells
   merge [--csv PATH] [--title T] DIR [DIR ...]
+        [--csv-dir DIR] ROOT [ROOT ...]
                                 validate N shard run dirs (matching spec
                                 hashes, no missing/duplicate cells) and
                                 emit the aggregate CSV a single-process
-                                run would have produced
+                                run would have produced; given campaign
+                                roots instead, cross-merge every member
+                                and write per-sweep CSVs + campaign.csv
+                                (keyed by sweep name) under --csv-dir
+  status DIR [--cells]          report progress straight from the
+                                manifests: done/remaining cells and
+                                recorded per-cell wall-clock, for one
+                                sweep run dir or a whole campaign root
+  gc DIR                        compact recorded cell artifacts (strip
+                                per-step histories, keep every scalar);
+                                merged/aggregate CSVs are byte-identical
+                                before and after
   range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
                                 discover q_min (paper §3.1)
   preset --file configs/X.toml [--shard I/N] [--run-dir D] [--resume]
@@ -319,13 +352,261 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     )
 }
 
+/// Aggregate + print every campaign member and write the campaign's CSV
+/// tree — one stable CSV per member (byte-identical to an independent
+/// run of that sweep) plus `campaign.csv` keyed by sweep name — under
+/// `--csv-dir`, defaulting to `<results>/campaign_<name>`. Shared by
+/// `cpt campaign` (unsharded) and `cpt merge` on campaign roots.
+fn report_campaign(
+    cli: &Cli,
+    name: &str,
+    members: &[(String, String, Vec<RunOutcome>)],
+) -> Result<()> {
+    let csv_dir = cli
+        .flag("csv-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| results_dir().join(format!("campaign_{name}")));
+    let mut keyed: Vec<(String, Vec<AggRow>)> = Vec::new();
+    for (member, model, outs) in members {
+        let rec = recipes::recipe(model)?;
+        let rows = aggregate(outs);
+        let rep = SweepReport::new(
+            &format!("campaign {name} · {member} ({model})"),
+            "metric",
+            rec.higher_is_better,
+        );
+        rep.print(&rows);
+        rep.write_csv_stable(&rows, csv_dir.join(format!("{member}.csv")))?;
+        keyed.push((member.clone(), rows));
+    }
+    SweepReport::write_campaign_csv(&keyed, csv_dir.join("campaign.csv"))?;
+    println!(
+        "\nwrote {} member CSV(s) + campaign.csv under {}",
+        members.len(),
+        csv_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_campaign(cli: &Cli) -> Result<()> {
+    cli.check_known(&[
+        "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
+    ])?;
+    let path = cli.require("file")?;
+    let doc = TomlDoc::load(path)?;
+    let cspec = CampaignSpec::from_toml(&doc)?;
+    let plan = CampaignPlan::build(&cspec)?;
+    let root = cli
+        .flag("run-dir")
+        .map(PathBuf::from)
+        .or_else(|| cspec.run_dir.clone())
+        .context(
+            "a campaign needs its root directory: pass --run-dir or set \
+             run_dir in [campaign]",
+        )?;
+    let shard = match cli.flag("shard") {
+        Some(s) => ShardId::parse(s)?,
+        None => ShardId::single(),
+    };
+    let opts = CampaignRunOpts {
+        root: root.clone(),
+        shard,
+        jobs: cli.usize_or("jobs", cpt::default_jobs())?,
+        resume: cli.bool("resume"),
+        verbose: cli.bool("verbose"),
+    };
+    let manifest = Manifest::load(artifacts_dir())?;
+    let results = run_campaign(&manifest, &plan, &opts)?;
+
+    let (mut cells, mut resumed, mut wall) = (0usize, 0usize, 0.0f64);
+    for r in &results {
+        cells += r.timing.cells;
+        resumed += r.timing.resumed;
+        wall += r.timing.wall_seconds;
+        println!(
+            "sweep '{}' ({}): {} cell(s), {} resumed, {:.2}s",
+            r.name, r.model, r.timing.cells, r.timing.resumed,
+            r.timing.wall_seconds
+        );
+    }
+    println!(
+        "campaign '{}' shard {shard}: {cells} cells ({resumed} resumed) in \
+         {wall:.2}s -> {}",
+        plan.name,
+        root.display()
+    );
+    if shard.count > 1 {
+        if cli.flag("csv-dir").is_some() {
+            // one shard's aggregates would be partial and misleading
+            eprintln!(
+                "note: --csv-dir ignored — one shard's aggregate would be \
+                 partial; `cpt merge` writes the campaign CSVs"
+            );
+        }
+        println!(
+            "shard {shard} complete: combine all roots with: cpt merge \
+             --csv-dir OUT <campaign roots>"
+        );
+        return Ok(());
+    }
+    let members: Vec<(String, String, Vec<RunOutcome>)> = results
+        .into_iter()
+        .map(|r| (r.name, r.model, r.outcomes))
+        .collect();
+    report_campaign(cli, &plan.name, &members)
+}
+
+fn cmd_status(cli: &Cli) -> Result<()> {
+    cli.check_known(&["cells"])?;
+    if cli.positional.len() != 1 {
+        // the flag must follow the directory: a bare `--cells` would
+        // otherwise swallow the next token as its value
+        bail!("usage: cpt status RUN_DIR_OR_CAMPAIGN_ROOT [--cells]");
+    }
+    let dir = Path::new(&cli.positional[0]);
+    match campaign::status(dir)? {
+        Status::Sweep(m) => {
+            println!(
+                "sweep run dir {} (cpt {})",
+                dir.display(),
+                m.cpt_version
+            );
+            println!(
+                "  model {}  shard {}  spec {}  fingerprint {}",
+                m.model, m.shard, m.spec_hash, m.model_fingerprint
+            );
+            println!(
+                "  cells: done {}/{} ({} remaining), exec {:.2}s recorded",
+                m.done(),
+                m.planned(),
+                m.remaining(),
+                m.exec_seconds()
+            );
+            if cli.bool("cells") {
+                for (index, e) in &m.cells {
+                    println!("  {index:05}  {:<32} {:>8.2}s", e.file, e.seconds);
+                }
+            }
+        }
+        Status::Campaign(c) => {
+            if cli.bool("cells") {
+                eprintln!(
+                    "note: --cells applies to a single sweep run dir; a \
+                     campaign root reports per-member totals"
+                );
+            }
+            println!(
+                "campaign '{}' root {} (hash {}, shard {})",
+                c.name,
+                dir.display(),
+                c.campaign_hash,
+                c.shard
+            );
+            for m in &c.members {
+                println!(
+                    "  {:<16} {:<16} done {}/{} ({} remaining), exec {:.2}s",
+                    m.name,
+                    m.model,
+                    m.done,
+                    m.planned,
+                    m.remaining(),
+                    m.exec_seconds
+                );
+            }
+            println!(
+                "  total: done {}/{} ({} remaining), exec {:.2}s recorded",
+                c.done(),
+                c.planned(),
+                c.remaining(),
+                c.exec_seconds()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gc(cli: &Cli) -> Result<()> {
+    cli.check_known(&[])?;
+    if cli.positional.len() != 1 {
+        bail!("usage: cpt gc RUN_DIR_OR_CAMPAIGN_ROOT");
+    }
+    let dir = Path::new(&cli.positional[0]);
+    let all = campaign::gc(dir)?;
+    let (mut cells, mut compacted, mut before, mut after) =
+        (0usize, 0usize, 0u64, 0u64);
+    for (label, st) in &all {
+        cells += st.cells;
+        compacted += st.compacted;
+        before += st.bytes_before;
+        after += st.bytes_after;
+        let name = if label.is_empty() { "run dir" } else { label.as_str() };
+        println!(
+            "{name}: compacted {}/{} cell artifact(s), {} -> {} bytes{}",
+            st.compacted,
+            st.cells,
+            st.bytes_before,
+            st.bytes_after,
+            if st.skipped > 0 {
+                format!(" ({} skipped as damaged)", st.skipped)
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!(
+        "gc {}: {compacted}/{cells} artifact(s) compacted, {before} -> \
+         {after} bytes",
+        dir.display()
+    );
+    Ok(())
+}
+
 fn cmd_merge(cli: &Cli) -> Result<()> {
-    cli.check_known(&["csv", "title"])?;
+    cli.check_known(&["csv", "title", "csv-dir"])?;
     if cli.positional.is_empty() {
-        bail!("usage: cpt merge [--csv OUT] [--title T] RUN_DIR [RUN_DIR ...]");
+        bail!(
+            "usage: cpt merge [--csv OUT] [--title T] RUN_DIR [RUN_DIR ...]\n\
+             \x20      cpt merge [--csv-dir OUT] CAMPAIGN_ROOT [ROOT ...]"
+        );
     }
     let dirs: Vec<PathBuf> =
         cli.positional.iter().map(PathBuf::from).collect();
+    let roots = dirs
+        .iter()
+        .filter(|d| d.join(campaign::CAMPAIGN_MANIFEST_FILE).exists())
+        .count();
+    if roots > 0 {
+        if roots != dirs.len() {
+            bail!(
+                "cannot mix campaign roots and sweep run dirs in one merge \
+                 ({roots} of {} are campaign roots)",
+                dirs.len()
+            );
+        }
+        if cli.flag("csv").is_some() || cli.flag("title").is_some() {
+            bail!(
+                "--csv/--title apply to sweep merges; campaign merges \
+                 write per-sweep CSVs + campaign.csv under --csv-dir"
+            );
+        }
+        let merged = merge_campaign_roots(&dirs)?;
+        let members: Vec<(String, String, Vec<RunOutcome>)> = merged
+            .members
+            .into_iter()
+            .map(|m| (m.name, m.model, m.outcomes))
+            .collect();
+        report_campaign(cli, &merged.name, &members)?;
+        println!(
+            "merged campaign '{}' ({} sweeps) from {} root(s)",
+            merged.name,
+            members.len(),
+            dirs.len()
+        );
+        return Ok(());
+    }
+    if cli.flag("csv-dir").is_some() {
+        bail!("--csv-dir applies to campaign merges; use --csv for sweeps");
+    }
     let (model, outs) = merge_run_dirs(&dirs)?;
     let rec = recipes::recipe(&model)?;
     let rows = aggregate(&outs);
@@ -395,47 +676,15 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
     let s = doc
         .section("sweep")
         .context("preset needs a [sweep] section")?;
-    let model = s
-        .get("model")
-        .context("[sweep] needs model")?
-        .as_str()?
-        .to_string();
-    let rec = recipes::recipe(&model)?;
-    let mut spec = SweepSpec::new(&model);
-    if let Some(v) = s.get("schedules") {
-        spec.schedules = v
-            .as_list()?
-            .iter()
-            .map(|x| Ok(x.as_str()?.to_string()))
-            .collect::<Result<_>>()?;
-    }
-    if let Some(v) = s.get("q_maxes") {
-        spec.q_maxes =
-            v.as_list()?.iter().map(|x| x.as_f64()).collect::<Result<_>>()?;
-    }
-    if let Some(v) = s.get("trials") {
-        spec.trials = v.as_usize()?;
-    }
-    if let Some(v) = s.get("steps") {
-        spec.steps = Some(v.as_usize()?);
-    }
-    if let Some(v) = s.get("cycles") {
-        spec.cycles = Some(v.as_usize()?);
-    }
-    if let Some(v) = s.get("jobs") {
-        spec.jobs = v.as_usize()?;
-    }
-    // sharding/persistence preset fields; the CLI flags override them,
-    // so one preset file can drive every shard/machine of a campaign
-    if let Some(v) = s.get("shard") {
-        spec.shard = Some(ShardId::parse(v.as_str()?)?);
-    }
-    if let Some(v) = s.get("run_dir") {
-        spec.run_dir = Some(PathBuf::from(v.as_str()?));
-    }
-    if let Some(v) = s.get("resume") {
-        spec.resume = v.as_bool()?;
-    }
+    // shared reader with [[campaign.sweep]] members; presets may also set
+    // the execution knobs (shard/run_dir/resume/jobs/verbose), which the
+    // CLI flags override — so one preset file can drive every
+    // shard/machine of a multi-host run
+    let mut spec = campaign::sweep_spec_from_section(
+        s,
+        campaign::SweepSectionKind::Preset,
+    )?;
+    let rec = recipes::recipe(&spec.model)?;
     spec.jobs = cli.usize_or("jobs", spec.jobs)?;
     if cli.bool("verbose") {
         spec.verbose = true;

@@ -1,0 +1,470 @@
+//! Campaign planning, persistence, status, gc, and merge — exercised
+//! entirely through fabricated outcomes, so this file runs without the
+//! PJRT runtime or AOT artifacts (the CI `test-unit` tier).
+
+mod common;
+
+use std::path::Path;
+
+use common::{fab_outcome, tmp_dir};
+use cpt::coordinator::campaign::{self, CampaignMember, Status};
+use cpt::coordinator::store::MANIFEST_FILE;
+use cpt::prelude::*;
+use cpt::util::propcheck::propcheck;
+
+fn member(name: &str, schedules: &[&str], steps: usize) -> CampaignMember {
+    let mut s = SweepSpec::new("mlp");
+    s.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    s.q_maxes = vec![8.0];
+    s.trials = 1;
+    s.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: s }
+}
+
+fn two_member_campaign() -> CampaignSpec {
+    CampaignSpec {
+        name: "fab".into(),
+        run_dir: None,
+        members: vec![
+            member("a", &["CR", "RR"], 8),
+            member("b", &["CR", "STATIC"], 10),
+        ],
+    }
+}
+
+/// Fabricate a complete campaign shard root: campaign manifest plus one
+/// run dir per member holding fabricated outcomes for every owned cell.
+fn build_root(root: &Path, cspec: &CampaignSpec, shard: ShardId) -> CampaignPlan {
+    let plan = CampaignPlan::build(cspec).unwrap();
+    campaign::open_campaign_root(root, &plan, shard, false).unwrap();
+    for m in &plan.members {
+        let mut s = m.spec.clone();
+        s.shard = Some(shard);
+        let mplan = SweepPlan::build(&s).unwrap();
+        let mut st =
+            RunStore::open(&root.join(&m.name), &mplan, "fp-test", false)
+                .unwrap();
+        for pc in mplan.owned() {
+            st.record(pc.index, &fab_outcome("mlp", &pc.cell, pc.index))
+                .unwrap();
+        }
+    }
+    plan
+}
+
+/// The full fabricated outcome list a member sweep would produce.
+fn fab_member_outcomes(m: &CampaignMember) -> Vec<RunOutcome> {
+    let plan = SweepPlan::build(&m.spec).unwrap();
+    plan.cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| fab_outcome("mlp", c, i))
+        .collect()
+}
+
+fn edit_file(path: &Path, from: &str, to: &str) {
+    let src = std::fs::read_to_string(path).unwrap();
+    assert!(src.contains(from), "'{from}' not found in {}", path.display());
+    std::fs::write(path, src.replace(from, to)).unwrap();
+}
+
+#[test]
+fn fabricated_shards_merge_to_independent_sweep_results() {
+    let tmp = tmp_dir("campaign_fab_merge");
+    let cspec = two_member_campaign();
+    let mut roots = Vec::new();
+    for i in 1..=2usize {
+        let root = tmp.join(format!("root{i}"));
+        build_root(&root, &cspec, ShardId { index: i, count: 2 });
+        roots.push(root);
+    }
+    let merged = merge_campaign_roots(&roots).unwrap();
+    assert_eq!(merged.name, "fab");
+    assert_eq!(merged.members.len(), 2);
+    for cm in &cspec.members {
+        let mm = merged.members.iter().find(|m| m.name == cm.name).unwrap();
+        let want = fab_member_outcomes(cm);
+        common::assert_outcomes_identical(&want, &mm.outcomes);
+
+        // stable CSV byte-identity vs the independently fabricated sweep
+        let rep = SweepReport::new(&cm.name, "metric", true);
+        let pa = tmp.join(format!("{}_independent.csv", cm.name));
+        let pb = tmp.join(format!("{}_campaign.csv", cm.name));
+        rep.write_csv_stable(&aggregate(&want), &pa).unwrap();
+        rep.write_csv_stable(&aggregate(&mm.outcomes), &pb).unwrap();
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "member '{}' CSV differs",
+            cm.name
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn merge_refuses_roots_from_different_campaigns() {
+    let tmp = tmp_dir("campaign_fab_hash");
+    let r1 = tmp.join("r1");
+    build_root(&r1, &two_member_campaign(), ShardId { index: 1, count: 2 });
+    let mut other = two_member_campaign();
+    other.members[0].spec.trials = 3; // a result-determining change
+    let r2 = tmp.join("r2");
+    build_root(&r2, &other, ShardId { index: 2, count: 2 });
+    let err = merge_campaign_roots(&[r1, r2]).unwrap_err();
+    assert!(err.to_string().contains("campaign hash"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn merge_refuses_member_dir_holding_a_different_sweep() {
+    // Campaign manifests record each member's spec hash; a member dir
+    // swapped for a self-consistent but different sweep must be refused.
+    let tmp = tmp_dir("campaign_fab_member_swap");
+    let root = tmp.join("root");
+    build_root(&root, &two_member_campaign(), ShardId::single());
+    // rebuild member 'a' from a different spec in place
+    std::fs::remove_dir_all(root.join("a")).unwrap();
+    let foreign = member("a", &["CR", "RR"], 99).spec;
+    let fplan = SweepPlan::build(&foreign).unwrap();
+    let mut st =
+        RunStore::open(&root.join("a"), &fplan, "fp-test", false).unwrap();
+    for pc in fplan.owned() {
+        st.record(pc.index, &fab_outcome("mlp", &pc.cell, pc.index)).unwrap();
+    }
+    let err = merge_campaign_roots(&[root.clone()]).unwrap_err();
+    assert!(err.to_string().contains("holds spec hash"), "{err:#}");
+    // status refuses the same inconsistency
+    let err = campaign::status(&root).unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// Reopen one member store (resume) and report which of its first two
+/// cells still load.
+fn member_cell_validity(root: &Path, m: &CampaignMember) -> (bool, bool) {
+    let mut s = m.spec.clone();
+    s.shard = Some(ShardId::single());
+    let plan = SweepPlan::build(&s).unwrap();
+    let mut st =
+        RunStore::open(&root.join(&m.name), &plan, "fp-test", true).unwrap();
+    (
+        st.take_valid_outcome(0).is_some(),
+        st.take_valid_outcome(1).is_some(),
+    )
+}
+
+#[test]
+fn truncated_artifact_in_campaign_tree_recomputes_and_refuses_merge() {
+    let tmp = tmp_dir("campaign_corrupt_truncate");
+    let root = tmp.join("root");
+    let cspec = two_member_campaign();
+    build_root(&root, &cspec, ShardId::single());
+    // truncate member a's cell 0 artifact (torn write without the
+    // atomic-rename protection)
+    let manifest = cpt::coordinator::read_manifest(&root.join("a")).unwrap();
+    let victim = root.join("a").join(&manifest.cells[&0].file);
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+
+    // resume: the damaged cell is dropped for recompute, the intact one loads
+    let (c0, c1) = member_cell_validity(&root, &cspec.members[0]);
+    assert!(!c0, "truncated artifact must not load");
+    assert!(c1, "intact artifact must load");
+    // merge: refuses (a merge cannot recompute)
+    let err = merge_campaign_roots(&[root.clone()]).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err:#}");
+    // status is manifest-only, so it still reports (recorded) progress
+    match campaign::status(&root).unwrap() {
+        Status::Campaign(c) => assert_eq!(c.done(), 4),
+        _ => panic!("expected campaign status"),
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn flipped_checksum_byte_in_campaign_tree_recomputes_and_refuses_merge() {
+    let tmp = tmp_dir("campaign_corrupt_checksum");
+    let root = tmp.join("root");
+    let cspec = two_member_campaign();
+    build_root(&root, &cspec, ShardId::single());
+    // flip one hex digit of cell 0's recorded checksum in member a's
+    // run manifest
+    let mp = root.join("a").join(MANIFEST_FILE);
+    let manifest = cpt::coordinator::read_manifest(&root.join("a")).unwrap();
+    let sum = &manifest.cells[&0].checksum;
+    let flipped: String = {
+        let mut chars: Vec<char> = sum.chars().collect();
+        chars[0] = if chars[0] == '0' { '1' } else { '0' };
+        chars.into_iter().collect()
+    };
+    edit_file(&mp, sum, &flipped);
+
+    let (c0, c1) = member_cell_validity(&root, &cspec.members[0]);
+    assert!(!c0, "cell with flipped checksum must not load");
+    assert!(c1);
+    let err = merge_campaign_roots(&[root.clone()]).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn wrong_schema_version_in_campaign_tree_refuses_everything() {
+    let tmp = tmp_dir("campaign_corrupt_schema");
+    let root = tmp.join("root");
+    let cspec = two_member_campaign();
+    build_root(&root, &cspec, ShardId::single());
+    edit_file(
+        &root.join("a").join(MANIFEST_FILE),
+        "\"version\": 1",
+        "\"version\": 2",
+    );
+    // an unknown schema is never guessed at: resume, merge, and status
+    // all refuse
+    let mut s = cspec.members[0].spec.clone();
+    s.shard = Some(ShardId::single());
+    let plan = SweepPlan::build(&s).unwrap();
+    let err = RunStore::open(&root.join("a"), &plan, "fp-test", true)
+        .unwrap_err();
+    assert!(err.to_string().contains("schema version"), "{err:#}");
+    let err = merge_campaign_roots(&[root.clone()]).unwrap_err();
+    assert!(err.to_string().contains("schema version"), "{err:#}");
+    let err = campaign::status(&root).unwrap_err();
+    assert!(err.to_string().contains("schema version"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn wrong_code_version_in_campaign_tree_refuses_resume_merge_status() {
+    let tmp = tmp_dir("campaign_corrupt_codever");
+    let root = tmp.join("root");
+    let cspec = two_member_campaign();
+    build_root(&root, &cspec, ShardId::single());
+    edit_file(
+        &root.join("a").join(MANIFEST_FILE),
+        RunStore::code_version(),
+        "0.0.0-other-build",
+    );
+    let mut s = cspec.members[0].spec.clone();
+    s.shard = Some(ShardId::single());
+    let plan = SweepPlan::build(&s).unwrap();
+    let err = RunStore::open(&root.join("a"), &plan, "fp-test", true)
+        .unwrap_err();
+    assert!(err.to_string().contains("this binary"), "{err:#}");
+    let err = merge_campaign_roots(&[root.clone()]).unwrap_err();
+    assert!(err.to_string().contains("written by cpt"), "{err:#}");
+    let err = campaign::status(&root).unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn gc_preserves_merged_campaign_csvs_byte_identically() {
+    let tmp = tmp_dir("campaign_gc");
+    let cspec = two_member_campaign();
+    let mut roots = Vec::new();
+    for i in 1..=2usize {
+        let root = tmp.join(format!("root{i}"));
+        build_root(&root, &cspec, ShardId { index: i, count: 2 });
+        roots.push(root);
+    }
+    let write_csvs = |dir: &Path| {
+        let merged = merge_campaign_roots(&roots).unwrap();
+        let mut keyed = Vec::new();
+        for m in &merged.members {
+            let rows = aggregate(&m.outcomes);
+            SweepReport::new(&m.name, "metric", true)
+                .write_csv_stable(&rows, dir.join(format!("{}.csv", m.name)))
+                .unwrap();
+            keyed.push((m.name.clone(), rows));
+        }
+        SweepReport::write_campaign_csv(&keyed, dir.join("campaign.csv"))
+            .unwrap();
+    };
+    let before = tmp.join("before");
+    write_csvs(&before);
+
+    let status_before = match campaign::status(&roots[0]).unwrap() {
+        Status::Campaign(c) => (c.planned(), c.done()),
+        _ => panic!("expected campaign status"),
+    };
+    for root in &roots {
+        let stats = campaign::gc(root).unwrap();
+        assert_eq!(stats.len(), 2, "both members compacted");
+        for (label, st) in &stats {
+            assert!(st.compacted > 0, "{label}: nothing compacted");
+            assert_eq!(st.skipped, 0);
+            assert!(
+                st.bytes_after < st.bytes_before,
+                "{label}: {st:?} did not shrink"
+            );
+        }
+    }
+    // a second gc is a no-op
+    for (_, st) in campaign::gc(&roots[0]).unwrap() {
+        assert_eq!(st.compacted, 0);
+    }
+    // status is unchanged by compaction
+    let status_after = match campaign::status(&roots[0]).unwrap() {
+        Status::Campaign(c) => (c.planned(), c.done()),
+        _ => panic!("expected campaign status"),
+    };
+    assert_eq!(status_before, status_after);
+
+    let after = tmp.join("after");
+    write_csvs(&after);
+    for name in ["a.csv", "b.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(before.join(name)).unwrap(),
+            std::fs::read(after.join(name)).unwrap(),
+            "{name} changed across gc"
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn sweep_dir_status_reports_from_manifest() {
+    let tmp = tmp_dir("sweep_status");
+    let mut s = member("x", &["CR", "RR"], 8).spec;
+    s.shard = Some(ShardId { index: 1, count: 2 });
+    let plan = SweepPlan::build(&s).unwrap();
+    let mut st = RunStore::open(&tmp, &plan, "fp-test", false).unwrap();
+    let owned = plan.owned();
+    st.record(owned[0].index, &fab_outcome("mlp", &owned[0].cell, owned[0].index))
+        .unwrap();
+    match campaign::status(&tmp).unwrap() {
+        Status::Sweep(m) => {
+            assert_eq!(m.model, "mlp");
+            assert_eq!((m.done(), m.remaining(), m.planned()), (1, 0, 1));
+            assert!((m.exec_seconds() - 0.25).abs() < 1e-12);
+        }
+        _ => panic!("expected sweep status"),
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn status_counts_always_satisfy_done_plus_remaining_equals_planned() {
+    // The cpt status invariant, over random campaign shapes, shards, and
+    // partial completion states: done + remaining == planned, per member
+    // and in total, with done equal to the cells actually recorded.
+    propcheck(25, |rng| {
+        let root = tmp_dir("campaign_status_prop");
+        let count = 1 + rng.below(3) as usize;
+        let index = 1 + rng.below(count as u32) as usize;
+        let shard = ShardId { index, count };
+        let n_members = 1 + rng.below(3) as usize;
+        let members: Vec<CampaignMember> = (0..n_members)
+            .map(|i| {
+                let mut m = member("m", &[], 8);
+                m.name = format!("m{i}");
+                m.spec.schedules = (0..1 + rng.below(3))
+                    .map(|k| format!("S{k}"))
+                    .collect();
+                m.spec.trials = 1 + rng.below(3) as usize;
+                m
+            })
+            .collect();
+        let cspec =
+            CampaignSpec { name: "p".into(), run_dir: None, members };
+        let plan = CampaignPlan::build(&cspec).unwrap();
+        campaign::open_campaign_root(&root, &plan, shard, false).unwrap();
+        let mut recorded = 0usize;
+        for m in &plan.members {
+            if rng.below(4) == 0 {
+                continue; // member not started at all
+            }
+            let mut s = m.spec.clone();
+            s.shard = Some(shard);
+            let mplan = SweepPlan::build(&s).unwrap();
+            let mut st =
+                RunStore::open(&root.join(&m.name), &mplan, "fp-test", false)
+                    .unwrap();
+            for pc in mplan.owned() {
+                if rng.below(2) == 0 {
+                    st.record(
+                        pc.index,
+                        &fab_outcome("mlp", &pc.cell, pc.index),
+                    )
+                    .unwrap();
+                    recorded += 1;
+                }
+            }
+        }
+        let c = match campaign::status(&root).unwrap() {
+            Status::Campaign(c) => c,
+            _ => return Err("expected campaign status".into()),
+        };
+        for m in &c.members {
+            cpt::prop_assert!(
+                m.done + m.remaining() == m.planned,
+                "member {}: {} + {} != {}",
+                m.name,
+                m.done,
+                m.remaining(),
+                m.planned
+            );
+        }
+        cpt::prop_assert!(
+            c.done() + c.remaining() == c.planned(),
+            "total: {} + {} != {}",
+            c.done(),
+            c.remaining(),
+            c.planned()
+        );
+        cpt::prop_assert!(
+            c.done() == recorded,
+            "done {} != recorded {recorded}",
+            c.done()
+        );
+        std::fs::remove_dir_all(&root).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn campaign_csvs_from_toml_round_trip() {
+    // End-to-end through the TOML layer (no training): parse a campaign
+    // file, fabricate its tree, merge, and check the campaign CSV keys.
+    let tmp = tmp_dir("campaign_toml_fab");
+    let doc = cpt::config::toml::TomlDoc::parse(
+        r#"
+[campaign]
+name = "panels"
+
+[[campaign.sweep]]
+name = "left"
+model = "mlp"
+schedules = ["CR"]
+q_maxes = [8]
+steps = 8
+
+[[campaign.sweep]]
+name = "right"
+model = "mlp"
+schedules = ["RR"]
+q_maxes = [8]
+steps = 8
+"#,
+    )
+    .unwrap();
+    let cspec = CampaignSpec::from_toml(&doc).unwrap();
+    let root = tmp.join("root");
+    build_root(&root, &cspec, ShardId::single());
+    let merged = merge_campaign_roots(&[root]).unwrap();
+    let keyed: Vec<(String, Vec<cpt::coordinator::AggRow>)> = merged
+        .members
+        .iter()
+        .map(|m| (m.name.clone(), aggregate(&m.outcomes)))
+        .collect();
+    let p = tmp.join("campaign.csv");
+    SweepReport::write_campaign_csv(&keyed, &p).unwrap();
+    let csv = std::fs::read_to_string(&p).unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 3, "header + one row per member: {csv}");
+    assert!(lines[0].starts_with("sweep,model,"));
+    assert!(lines[1].starts_with("left,mlp,CR,"));
+    assert!(lines[2].starts_with("right,mlp,RR,"));
+    std::fs::remove_dir_all(&tmp).ok();
+}

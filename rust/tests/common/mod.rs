@@ -1,0 +1,109 @@
+//! Shared fixtures for the integration test crates.
+//!
+//! Two tiers live here:
+//! * the PJRT fixture ([`fixture`]) for tests that really train — it
+//!   needs `make artifacts` to have run;
+//! * fabricated-outcome builders ([`fab_outcome`], [`tiny_mlp_spec`],
+//!   [`tmp_dir`]) for store/campaign tests that exercise planning,
+//!   persistence, and merging without touching the runtime — these run
+//!   on any machine (the CI `test-unit` tier).
+//!
+//! Each test crate compiles this module independently, so not every
+//! helper is used everywhere.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use cpt::metrics::History;
+use cpt::prelude::*;
+use cpt::schedule::group_of;
+
+/// Per-test PJRT fixture (PJRT handles are not Sync, so no shared state).
+pub struct Fixture {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+}
+
+pub fn fixture() -> Fixture {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load(cpt::artifacts_dir()).expect(
+        "artifacts/manifest.json missing — run `make artifacts` first",
+    );
+    Fixture { rt, manifest }
+}
+
+/// A fresh temp directory for one test (removed up-front so a crashed
+/// previous run cannot leak state in).
+pub fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cpt_it_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// The tiny MLP sweep every coordinator test runs: small enough to train
+/// in well under a second per cell, rich enough (3 schedules × 2 trials)
+/// to exercise sharding and aggregation.
+pub fn tiny_mlp_spec() -> SweepSpec {
+    let mut s = SweepSpec::new("mlp");
+    s.schedules = vec!["CR".into(), "RR".into(), "STATIC".into()];
+    s.q_maxes = vec![8.0];
+    s.trials = 2;
+    s.steps = Some(12);
+    s.eval_every = 6;
+    s
+}
+
+/// Fabricate a deterministic `RunOutcome` for a planned cell — the
+/// store/campaign tests persist and merge these without training. Values
+/// are index-dependent so misplaced cells cannot pass by coincidence,
+/// and histories are non-empty so compaction has something to strip.
+pub fn fab_outcome(model: &str, cell: &SweepCell, index: usize) -> RunOutcome {
+    RunOutcome {
+        model: model.to_string(),
+        schedule: cell.schedule.clone(),
+        group: group_of(&cell.schedule).label().into(),
+        q_max: cell.q_max,
+        trial: cell.trial,
+        gbitops: 1.5 + index as f64 * 0.1,
+        metric: 0.5 + index as f64 * 0.0625,
+        eval_loss: 0.125,
+        steps: 8,
+        exec_seconds: 0.25,
+        history: History {
+            losses: vec![(0, 1.25), (1, 0.5 + index as f32 * 0.125)],
+            metrics: vec![(0, 0.1)],
+            evals: vec![(1, 0.75, 0.875)],
+            precisions: vec![(0, 3), (1, 8)],
+            gbitops: 1.5 + index as f64 * 0.1,
+            exec_seconds: 0.25,
+            total_seconds: 0.5,
+        },
+    }
+}
+
+/// Strict outcome equality: every reported number bitwise, including the
+/// full training history.
+pub fn assert_outcomes_identical(a: &[RunOutcome], b: &[RunOutcome]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.model, y.model);
+        assert_eq!(x.schedule, y.schedule);
+        assert_eq!(x.q_max.to_bits(), y.q_max.to_bits());
+        assert_eq!(x.trial, y.trial);
+        assert_eq!(
+            x.metric.to_bits(),
+            y.metric.to_bits(),
+            "{} t{}",
+            x.schedule,
+            x.trial
+        );
+        assert_eq!(x.eval_loss.to_bits(), y.eval_loss.to_bits());
+        assert_eq!(x.gbitops.to_bits(), y.gbitops.to_bits());
+        assert_eq!(x.group, y.group);
+        assert_eq!(x.steps, y.steps);
+        assert_eq!(x.history.losses, y.history.losses);
+        assert_eq!(x.history.metrics, y.history.metrics);
+        assert_eq!(x.history.precisions, y.history.precisions);
+        assert_eq!(x.history.evals, y.history.evals);
+    }
+}

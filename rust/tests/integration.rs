@@ -1,39 +1,22 @@
 //! Integration tests: artifacts -> PJRT -> training loop, end to end.
 //!
 //! These need `make artifacts` to have run (the Makefile test target
-//! guarantees it). All tests share one PJRT client/compiled model set via
-//! a lazily-initialized fixture to keep wall-clock reasonable on 1 core.
+//! guarantees it). Coordinator-level tests live in their own files:
+//! tests/sweep_merge.rs (execution equivalence), tests/store_resume.rs
+//! (crash/preempt resume), tests/campaign.rs (campaign planning/merge,
+//! no PJRT needed). Shared fixtures are in tests/common/mod.rs.
 
+mod common;
+
+use common::fixture;
+use cpt::coordinator::recipes;
 use cpt::prelude::*;
 use cpt::schedule::Schedule;
-
-fn artifacts() -> std::path::PathBuf {
-    // tests run from the crate root
-    cpt::artifacts_dir()
-}
-
-/// Per-test fixture (PJRT handles are not Sync, so no shared state).
-struct Fixture {
-    rt: Runtime,
-    manifest: Manifest,
-}
-
-fn fixture() -> Fixture {
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    let manifest = Manifest::load(artifacts()).expect(
-        "artifacts/manifest.json missing — run `make artifacts` first",
-    );
-    Fixture { rt, manifest }
-}
 
 #[test]
 fn manifest_lists_all_models() {
     let f = fixture();
-    for m in [
-        "mlp", "cnn_tiny", "cnn_deep", "detector", "gcn_qagg", "gcn_fpagg",
-        "sage_qagg", "sage_fpagg", "lstm_lm", "transformer_lm",
-        "transformer_cls",
-    ] {
+    for &m in recipes::model_names() {
         let spec = f.manifest.model(m).unwrap();
         spec.validate().unwrap();
         assert!(spec.param_count > 0);
@@ -301,161 +284,6 @@ fn bitops_scale_with_schedule() {
         rr.gbitops,
         st.gbitops
     );
-}
-
-#[test]
-fn parallel_sweep_outcomes_bit_identical_to_serial() {
-    // The work-queue executor must produce the same RunOutcomes (metrics,
-    // GBitOps, full history) in the same order as serial execution —
-    // every cell is an independently seeded run, so only wall-clock may
-    // differ.
-    let f = fixture();
-    let mut spec = SweepSpec::new("mlp");
-    spec.schedules = vec!["CR".into(), "RR".into(), "STATIC".into()];
-    spec.q_maxes = vec![8.0];
-    spec.trials = 2;
-    spec.steps = Some(16);
-    spec.eval_every = 8;
-
-    spec.jobs = 1;
-    let serial = run_sweep(&f.manifest, &spec).unwrap();
-    spec.jobs = 3;
-    let parallel = run_sweep(&f.manifest, &spec).unwrap();
-
-    assert_eq!(serial.len(), 6);
-    assert_eq!(serial.len(), parallel.len());
-    for (a, b) in serial.iter().zip(&parallel) {
-        assert_eq!(a.schedule, b.schedule);
-        assert_eq!(a.q_max, b.q_max);
-        assert_eq!(a.trial, b.trial);
-        assert_eq!(a.metric, b.metric, "{} t{}", a.schedule, a.trial);
-        assert_eq!(a.eval_loss, b.eval_loss);
-        assert_eq!(a.gbitops, b.gbitops);
-        assert_eq!(a.history.losses, b.history.losses);
-        assert_eq!(a.history.metrics, b.history.metrics);
-        assert_eq!(a.history.precisions, b.history.precisions);
-        assert_eq!(
-            a.history.evals, b.history.evals,
-            "{} t{}", a.schedule, a.trial
-        );
-    }
-}
-
-fn assert_outcomes_identical(a: &[cpt::coordinator::RunOutcome], b: &[cpt::coordinator::RunOutcome]) {
-    assert_eq!(a.len(), b.len());
-    for (x, y) in a.iter().zip(b) {
-        assert_eq!(x.schedule, y.schedule);
-        assert_eq!(x.q_max, y.q_max);
-        assert_eq!(x.trial, y.trial);
-        assert_eq!(x.metric.to_bits(), y.metric.to_bits(), "{} t{}", x.schedule, x.trial);
-        assert_eq!(x.eval_loss.to_bits(), y.eval_loss.to_bits());
-        assert_eq!(x.gbitops.to_bits(), y.gbitops.to_bits());
-        assert_eq!(x.group, y.group);
-        assert_eq!(x.steps, y.steps);
-        assert_eq!(x.history.losses, y.history.losses);
-        assert_eq!(x.history.metrics, y.history.metrics);
-        assert_eq!(x.history.precisions, y.history.precisions);
-        assert_eq!(x.history.evals, y.history.evals);
-    }
-}
-
-#[test]
-fn sharded_sweep_plus_merge_is_bit_identical_to_serial() {
-    // The headline acceptance path: shard 1/2 + shard 2/2 into run dirs,
-    // merge, and compare against the unsharded serial run — outcome by
-    // outcome (bitwise, including history) and as CSV bytes.
-    let f = fixture();
-    let tmp = std::env::temp_dir().join("cpt_it_shard_merge");
-    std::fs::remove_dir_all(&tmp).ok();
-    let base_spec = || {
-        let mut s = SweepSpec::new("mlp");
-        s.schedules = vec!["CR".into(), "RR".into(), "STATIC".into()];
-        s.q_maxes = vec![8.0];
-        s.trials = 2;
-        s.steps = Some(12);
-        s.eval_every = 6;
-        s
-    };
-    let serial = run_sweep(&f.manifest, &base_spec()).unwrap();
-    assert_eq!(serial.len(), 6);
-
-    let mut dirs = Vec::new();
-    for i in 1..=2usize {
-        let mut s = base_spec();
-        s.shard = Some(ShardId::parse(&format!("{i}/2")).unwrap());
-        let dir = tmp.join(format!("shard{i}"));
-        s.run_dir = Some(dir.clone());
-        let (outs, timing) = run_sweep_timed(&f.manifest, &s).unwrap();
-        assert_eq!(outs.len(), 3, "round-robin halves of 6 cells");
-        assert_eq!(timing.cells, 3);
-        assert_eq!(timing.resumed, 0);
-        dirs.push(dir);
-    }
-    let (model, merged) = merge_run_dirs(&dirs).unwrap();
-    assert_eq!(model, "mlp");
-    assert_outcomes_identical(&serial, &merged);
-
-    // CSV byte-identity on the deterministic aggregate columns
-    let rep = SweepReport::new("t", "metric", true);
-    let pa = tmp.join("serial.csv");
-    let pb = tmp.join("merged.csv");
-    rep.write_csv_stable(&aggregate(&serial), &pa).unwrap();
-    rep.write_csv_stable(&aggregate(&merged), &pb).unwrap();
-    let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
-    assert_eq!(ba, bb, "merged CSV must be byte-identical to serial");
-    std::fs::remove_dir_all(&tmp).ok();
-}
-
-#[test]
-fn resume_skips_completed_cells_and_recomputes_damaged_ones() {
-    let f = fixture();
-    let tmp = std::env::temp_dir().join("cpt_it_resume");
-    std::fs::remove_dir_all(&tmp).ok();
-    let spec = || {
-        let mut s = SweepSpec::new("mlp");
-        s.schedules = vec!["CR".into(), "RR".into()];
-        s.q_maxes = vec![8.0];
-        s.trials = 1;
-        s.steps = Some(10);
-        s.run_dir = Some(tmp.clone());
-        s.resume = true; // fresh dir on first run, reopen afterwards
-        s
-    };
-    let (first, t1) = run_sweep_timed(&f.manifest, &spec()).unwrap();
-    assert_eq!(t1.resumed, 0);
-    assert_eq!(first.len(), 2);
-
-    // full resume: every cell loads from its artifact, none retrain
-    let (second, t2) = run_sweep_timed(&f.manifest, &spec()).unwrap();
-    assert_eq!(t2.resumed, 2, "all cells must come from the store");
-    assert_outcomes_identical(&first, &second);
-
-    // damage one artifact (simulated crash mid-write of cell 0): only
-    // that cell is recomputed, and results still match
-    let victim = std::fs::read_dir(&tmp)
-        .unwrap()
-        .map(|e| e.unwrap().path())
-        .find(|p| {
-            p.file_name()
-                .unwrap()
-                .to_string_lossy()
-                .starts_with("00000")
-        })
-        .expect("cell 0 artifact");
-    std::fs::write(&victim, b"truncated garbage").unwrap();
-    let (third, t3) = run_sweep_timed(&f.manifest, &spec()).unwrap();
-    assert_eq!(t3.resumed, 1, "only the intact cell may be skipped");
-    assert_outcomes_identical(&first, &third);
-
-    // a spec change must refuse to reuse the directory
-    let mut other = spec();
-    other.trials = 2;
-    let err = run_sweep_timed(&f.manifest, &other).unwrap_err();
-    assert!(
-        err.to_string().contains("different sweep spec"),
-        "{err:#}"
-    );
-    std::fs::remove_dir_all(&tmp).ok();
 }
 
 #[test]

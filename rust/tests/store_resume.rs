@@ -1,0 +1,143 @@
+//! Crash/preempt resume on the PJRT runtime, for single sweeps and for
+//! campaign roots. Needs `make artifacts` to have run.
+
+mod common;
+
+use common::{assert_outcomes_identical, fixture, tmp_dir};
+use cpt::coordinator::campaign::{CampaignMember, CampaignRunOpts};
+use cpt::prelude::*;
+
+#[test]
+fn resume_skips_completed_cells_and_recomputes_damaged_ones() {
+    let f = fixture();
+    let tmp = tmp_dir("resume");
+    let spec = || {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into()];
+        s.q_maxes = vec![8.0];
+        s.trials = 1;
+        s.steps = Some(10);
+        s.run_dir = Some(tmp.clone());
+        s.resume = true; // fresh dir on first run, reopen afterwards
+        s
+    };
+    let (first, t1) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t1.resumed, 0);
+    assert_eq!(first.len(), 2);
+
+    // full resume: every cell loads from its artifact, none retrain
+    let (second, t2) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t2.resumed, 2, "all cells must come from the store");
+    assert_outcomes_identical(&first, &second);
+
+    // damage one artifact (simulated crash mid-write of cell 0): only
+    // that cell is recomputed, and results still match
+    let victim = std::fs::read_dir(&tmp)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| {
+            p.file_name()
+                .unwrap()
+                .to_string_lossy()
+                .starts_with("00000")
+        })
+        .expect("cell 0 artifact");
+    std::fs::write(&victim, b"truncated garbage").unwrap();
+    let (third, t3) = run_sweep_timed(&f.manifest, &spec()).unwrap();
+    assert_eq!(t3.resumed, 1, "only the intact cell may be skipped");
+    assert_outcomes_identical(&first, &third);
+
+    // a spec change must refuse to reuse the directory
+    let mut other = spec();
+    other.trials = 2;
+    let err = run_sweep_timed(&f.manifest, &other).unwrap_err();
+    assert!(
+        err.to_string().contains("different sweep spec"),
+        "{err:#}"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn campaign_resume_skips_recorded_cells_and_refuses_changed_plans() {
+    // Campaign-level resume-after-kill: rerunning a completed (or
+    // partially completed) root recomputes only what is missing, and a
+    // changed member spec refuses the whole tree.
+    let f = fixture();
+    let root = tmp_dir("campaign_resume");
+    let cspec = |steps_b: usize| CampaignSpec {
+        name: "resume".into(),
+        run_dir: None,
+        members: vec![
+            CampaignMember {
+                name: "a".into(),
+                spec: {
+                    let mut s = SweepSpec::new("mlp");
+                    s.schedules = vec!["CR".into()];
+                    s.q_maxes = vec![8.0];
+                    s.steps = Some(8);
+                    s
+                },
+            },
+            CampaignMember {
+                name: "b".into(),
+                spec: {
+                    let mut s = SweepSpec::new("mlp");
+                    s.schedules = vec!["RR".into(), "STATIC".into()];
+                    s.q_maxes = vec![8.0];
+                    s.steps = Some(steps_b);
+                    s
+                },
+            },
+        ],
+    };
+    let plan = CampaignPlan::build(&cspec(10)).unwrap();
+    let opts = |resume: bool| CampaignRunOpts {
+        root: root.clone(),
+        shard: ShardId::single(),
+        jobs: 1,
+        resume,
+        verbose: false,
+    };
+    let first = run_campaign(&f.manifest, &plan, &opts(false)).unwrap();
+    assert_eq!(first.iter().map(|r| r.timing.cells).sum::<usize>(), 3);
+    assert!(first.iter().all(|r| r.timing.resumed == 0));
+
+    // a second run without --resume refuses the existing root
+    let err = run_campaign(&f.manifest, &plan, &opts(false)).unwrap_err();
+    assert!(err.to_string().contains("--resume"), "{err:#}");
+
+    // full resume: every member's cells come from the store, bit-equal
+    let second = run_campaign(&f.manifest, &plan, &opts(true)).unwrap();
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(b.timing.resumed, b.timing.cells, "{} retrained", b.name);
+        assert_outcomes_identical(&a.outcomes, &b.outcomes);
+    }
+
+    // kill-shaped damage: delete one of member b's artifacts; resume
+    // recomputes exactly that cell and reproduces identical results
+    let victim = std::fs::read_dir(root.join("b"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| {
+            p.file_name()
+                .unwrap()
+                .to_string_lossy()
+                .starts_with("00001")
+        })
+        .expect("member b cell 1 artifact");
+    std::fs::remove_file(&victim).unwrap();
+    let third = run_campaign(&f.manifest, &plan, &opts(true)).unwrap();
+    let b3 = third.iter().find(|r| r.name == "b").unwrap();
+    assert_eq!(b3.timing.resumed, 1, "only the intact cell may be skipped");
+    for (a, b) in first.iter().zip(&third) {
+        assert_outcomes_identical(&a.outcomes, &b.outcomes);
+    }
+
+    // a result-determining change to any member refuses the root
+    let changed = CampaignPlan::build(&cspec(11)).unwrap();
+    let err = run_campaign(&f.manifest, &changed, &opts(true)).unwrap_err();
+    assert!(err.to_string().contains("different campaign"), "{err:#}");
+    std::fs::remove_dir_all(&root).ok();
+}

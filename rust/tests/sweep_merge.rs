@@ -1,0 +1,141 @@
+//! Sweep execution equivalence, end to end on the PJRT runtime: parallel
+//! vs serial, sharded + merged vs serial, and campaigns vs independent
+//! member sweeps. Needs `make artifacts` to have run.
+
+mod common;
+
+use common::{assert_outcomes_identical, fixture, tiny_mlp_spec, tmp_dir};
+use cpt::coordinator::campaign::{CampaignMember, CampaignRunOpts};
+use cpt::prelude::*;
+
+#[test]
+fn parallel_sweep_outcomes_bit_identical_to_serial() {
+    // The work-queue executor must produce the same RunOutcomes (metrics,
+    // GBitOps, full history) in the same order as serial execution —
+    // every cell is an independently seeded run, so only wall-clock may
+    // differ.
+    let f = fixture();
+    let mut spec = tiny_mlp_spec();
+    spec.steps = Some(16);
+    spec.eval_every = 8;
+
+    spec.jobs = 1;
+    let serial = run_sweep(&f.manifest, &spec).unwrap();
+    spec.jobs = 3;
+    let parallel = run_sweep(&f.manifest, &spec).unwrap();
+
+    assert_eq!(serial.len(), 6);
+    assert_outcomes_identical(&serial, &parallel);
+}
+
+#[test]
+fn sharded_sweep_plus_merge_is_bit_identical_to_serial() {
+    // The headline acceptance path: shard 1/2 + shard 2/2 into run dirs,
+    // merge, and compare against the unsharded serial run — outcome by
+    // outcome (bitwise, including history) and as CSV bytes.
+    let f = fixture();
+    let tmp = tmp_dir("shard_merge");
+    let serial = run_sweep(&f.manifest, &tiny_mlp_spec()).unwrap();
+    assert_eq!(serial.len(), 6);
+
+    let mut dirs = Vec::new();
+    for i in 1..=2usize {
+        let mut s = tiny_mlp_spec();
+        s.shard = Some(ShardId::parse(&format!("{i}/2")).unwrap());
+        let dir = tmp.join(format!("shard{i}"));
+        s.run_dir = Some(dir.clone());
+        let (outs, timing) = run_sweep_timed(&f.manifest, &s).unwrap();
+        assert_eq!(outs.len(), 3, "round-robin halves of 6 cells");
+        assert_eq!(timing.cells, 3);
+        assert_eq!(timing.resumed, 0);
+        dirs.push(dir);
+    }
+    let (model, merged) = merge_run_dirs(&dirs).unwrap();
+    assert_eq!(model, "mlp");
+    assert_outcomes_identical(&serial, &merged);
+
+    // CSV byte-identity on the deterministic aggregate columns
+    let rep = SweepReport::new("t", "metric", true);
+    let pa = tmp.join("serial.csv");
+    let pb = tmp.join("merged.csv");
+    rep.write_csv_stable(&aggregate(&serial), &pa).unwrap();
+    rep.write_csv_stable(&aggregate(&merged), &pb).unwrap();
+    let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    assert_eq!(ba, bb, "merged CSV must be byte-identical to serial");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn campaign_shards_merge_byte_identical_to_independent_sweeps() {
+    // A 2-sweep campaign run as 2 shards, cross-merged, must reproduce
+    // each member sweep bit-for-bit — outcomes and stable CSV bytes —
+    // exactly as if the sweeps had been run independently and serially.
+    let f = fixture();
+    let tmp = tmp_dir("campaign_e2e");
+    let spec_a = {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "RR".into()];
+        s.q_maxes = vec![8.0];
+        s.steps = Some(8);
+        s
+    };
+    let spec_b = {
+        let mut s = SweepSpec::new("mlp");
+        s.schedules = vec!["CR".into(), "STATIC".into()];
+        s.q_maxes = vec![8.0];
+        s.steps = Some(10);
+        s
+    };
+    let cspec = CampaignSpec {
+        name: "e2e".into(),
+        run_dir: None,
+        members: vec![
+            CampaignMember { name: "a".into(), spec: spec_a.clone() },
+            CampaignMember { name: "b".into(), spec: spec_b.clone() },
+        ],
+    };
+    let plan = CampaignPlan::build(&cspec).unwrap();
+
+    let mut roots = Vec::new();
+    for i in 1..=2usize {
+        let root = tmp.join(format!("root{i}"));
+        let opts = CampaignRunOpts {
+            root: root.clone(),
+            shard: ShardId::parse(&format!("{i}/2")).unwrap(),
+            jobs: 1,
+            resume: false,
+            verbose: false,
+        };
+        let results = run_campaign(&f.manifest, &plan, &opts).unwrap();
+        assert_eq!(results.len(), 2);
+        // each member has 2 cells; every shard owns 1 of each
+        assert!(results.iter().all(|r| r.timing.cells == 1));
+        roots.push(root);
+    }
+
+    let merged = merge_campaign_roots(&roots).unwrap();
+    assert_eq!(merged.name, "e2e");
+    assert_eq!(merged.members.len(), 2);
+    for (name, spec) in [("a", &spec_a), ("b", &spec_b)] {
+        let serial = run_sweep(&f.manifest, spec).unwrap();
+        let mm = merged
+            .members
+            .iter()
+            .find(|m| m.name == name)
+            .unwrap_or_else(|| panic!("member '{name}' missing from merge"));
+        assert_eq!(mm.model, "mlp");
+        assert_outcomes_identical(&serial, &mm.outcomes);
+
+        let rep = SweepReport::new(name, "metric", true);
+        let pa = tmp.join(format!("{name}_independent.csv"));
+        let pb = tmp.join(format!("{name}_campaign.csv"));
+        rep.write_csv_stable(&aggregate(&serial), &pa).unwrap();
+        rep.write_csv_stable(&aggregate(&mm.outcomes), &pb).unwrap();
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "campaign member '{name}' CSV must match the independent sweep"
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -1,21 +1,29 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus a
-# 2-shard sweep + merge end-to-end pass, so the bench target and the
-# sharded orchestration path are compiled-and-exercised without paying
-# full bench cost.
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus two
+# end-to-end orchestration passes — a 2-shard sweep + merge, and a
+# 2-sweep campaign that is killed mid-run, resumed, cross-merged, and
+# gc'd — so the bench target and the whole coordinator surface are
+# compiled-and-exercised without paying full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
-#   scripts/check.sh --smoke    # ... + perf_hotpath + shard/merge smoke
+#   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
+#                               # integration file (tests/campaign.rs);
+#                               # needs no AOT artifacts — the CI
+#                               # test-unit job runs this tier
+#   scripts/check.sh --smoke    # ... + perf_hotpath + shard/merge and
+#                               # campaign smokes
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
 SMOKE=0
+UNIT=0
 for a in "$@"; do
   case "$a" in
     --smoke) SMOKE=1 ;;
-    *) echo "check.sh: unknown arg '$a' (known: --smoke)" >&2; exit 2 ;;
+    --unit) UNIT=1 ;;
+    *) echo "check.sh: unknown arg '$a' (known: --smoke, --unit)" >&2; exit 2 ;;
   esac
 done
 
@@ -43,6 +51,20 @@ if ! cargo metadata --format-version 1 --offline >/dev/null 2>&1; then
   echo "check.sh: cannot resolve dependencies offline (xla vendor set missing or broken)" >&2
   echo "check.sh: fix the vendor config, or export CPT_ALLOW_MISSING_VENDOR=1 on vendor-less runners" >&2
   exit 1
+fi
+
+if [ "$UNIT" = 1 ]; then
+  # The unit tier: everything that runs without the PJRT runtime or AOT
+  # artifacts — the crate's #[cfg(test)] suites (store, plan, campaign,
+  # schedules, json, ...) plus tests/campaign.rs, which drives planning,
+  # persistence, corruption handling, status, gc, and merging end to end
+  # on fabricated outcomes.
+  echo "== cargo test -q --lib (unit tier)"
+  cargo test -q --lib
+  echo "== cargo test -q --test campaign (fabricated-outcome integration)"
+  cargo test -q --test campaign
+  echo "check.sh: OK (unit tier)"
+  exit 0
 fi
 
 echo "== cargo clippy -D warnings"
@@ -79,6 +101,79 @@ if [ "$SMOKE" = 1 ]; then
       exit 1
     fi
     echo "shard/merge smoke: serial and merged aggregates are identical"
+
+    echo "== campaign smoke (2 sweeps x 2 shards, kill + resume + merge + gc)"
+    CAMP_TOML="$SMOKE_DIR/campaign.toml"
+    cat > "$CAMP_TOML" <<'EOF'
+[campaign]
+name = "smoke"
+
+[[campaign.sweep]]
+name = "a"
+model = "mlp"
+schedules = ["CR", "RR"]
+q_maxes = [8]
+trials = 1
+steps = 8
+
+[[campaign.sweep]]
+name = "b"
+model = "mlp"
+schedules = ["CR", "STATIC"]
+q_maxes = [8]
+trials = 1
+steps = 10
+EOF
+    R1="$SMOKE_DIR/camp1"
+    R2="$SMOKE_DIR/camp2"
+    # Shard 1/2, killed after its first freshly computed cell.
+    # CPT_HALT_AFTER_CELLS is the deterministic stand-in for `kill`:
+    # the abort fires after the artifact + manifests are durable, which
+    # is exactly the state an external kill leaves behind.
+    if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2; then
+      echo "check.sh: campaign crash injection did not fire" >&2; exit 1
+    fi
+    if ! $CPT status "$R1" | grep -q "total: done 1/2"; then
+      echo "check.sh: status after kill should report done 1/2" >&2
+      $CPT status "$R1" >&2 || true
+      exit 1
+    fi
+    # resume completes the shard, reusing the recorded cell
+    RESUME_OUT="$($CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2 --resume)"
+    case "$RESUME_OUT" in
+      *"(1 resumed)"*) ;;
+      *) echo "check.sh: campaign resume did not reuse the recorded cell" >&2; exit 1 ;;
+    esac
+    if ! $CPT status "$R1" | grep -q "total: done 2/2"; then
+      echo "check.sh: status after resume should report done 2/2" >&2; exit 1
+    fi
+    # shard 2/2 runs uninterrupted
+    $CPT campaign --file "$CAMP_TOML" --run-dir "$R2" --shard 2/2
+    if ! $CPT status "$R2" | grep -q "total: done 2/2"; then
+      echo "check.sh: shard 2/2 status should report done 2/2" >&2; exit 1
+    fi
+    # cross-merge the roots, then compare every member CSV against an
+    # independent serial run of the same sweep — byte-identical
+    $CPT merge --csv-dir "$SMOKE_DIR/campout" "$R1" "$R2"
+    $CPT sweep --model mlp --schedules CR,RR --qmaxes 8 --trials 1 --steps 8 --csv "$SMOKE_DIR/ind_a.csv"
+    $CPT sweep --model mlp --schedules CR,STATIC --qmaxes 8 --trials 1 --steps 10 --csv "$SMOKE_DIR/ind_b.csv"
+    for m in a b; do
+      if ! diff <(cut -d, -f1-8 "$SMOKE_DIR/ind_$m.csv") "$SMOKE_DIR/campout/$m.csv"; then
+        echo "check.sh: campaign member '$m' CSV differs from its independent sweep" >&2
+        exit 1
+      fi
+    done
+    # gc both roots; the re-merged CSVs must not change by a byte
+    $CPT gc "$R1" >/dev/null
+    $CPT gc "$R2" >/dev/null
+    $CPT merge --csv-dir "$SMOKE_DIR/campout_gc" "$R1" "$R2"
+    for f in a.csv b.csv campaign.csv; do
+      if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/campout_gc/$f"; then
+        echo "check.sh: $f changed across gc" >&2
+        exit 1
+      fi
+    done
+    echo "campaign smoke: killed+resumed shards merge identically to independent sweeps (and survive gc)"
   else
     echo "== bench/sweep smoke: artifacts/manifest.json missing — building only"
     cargo build --benches
