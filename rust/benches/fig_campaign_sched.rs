@@ -1,0 +1,202 @@
+//! §Perf: campaign scheduling — sequential members vs the global worker
+//! pool with per-worker compiled-executable caching.
+//!
+//! Two comparisons, each on real PJRT training (needs `make artifacts`):
+//!   * a 2-member campaign sharing one model (the Fig 3/6/7 shape: two
+//!     panels over the same network), run sequentially and then through
+//!     the global scheduler with 2 workers — wall clock plus the compile
+//!     count the executable cache saves (the acceptance bar: strictly
+//!     fewer than members × workers compiles);
+//!   * a single-member campaign both ways with one worker — the
+//!     no-regression comparison for plain sweeps (recorded in the JSON
+//!     and warned about loudly on a large gap; not a hard gate, because
+//!     wall-clock asserts flake on loaded machines).
+//!
+//! Emits BENCH_campaign_sched.json (override with CPT_BENCH_JSON /
+//! --json). The bench is already smoke-sized (tiny mlp sweeps), so it
+//! has no separate --smoke mode.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Result;
+use cpt::coordinator::campaign::{
+    CampaignMember, CampaignRunOpts, CampaignRunResult, SchedulerKind,
+};
+use cpt::prelude::*;
+use cpt::util::json::{num, obj, s, Json};
+
+fn member(name: &str, schedules: &[&str], steps: usize) -> CampaignMember {
+    let mut sp = SweepSpec::new("mlp");
+    sp.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    sp.q_maxes = vec![8.0];
+    sp.trials = 1;
+    sp.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: sp, jobs: None }
+}
+
+fn run(
+    manifest: &Manifest,
+    plan: &CampaignPlan,
+    root: &Path,
+    jobs: usize,
+    scheduler: SchedulerKind,
+) -> Result<(CampaignRunResult, f64)> {
+    let opts = CampaignRunOpts {
+        root: root.to_path_buf(),
+        shard: ShardId::single(),
+        jobs,
+        resume: false,
+        verbose: false,
+        scheduler,
+    };
+    let t0 = Instant::now();
+    let result = run_campaign(manifest, plan, &opts)?;
+    Ok((result, t0.elapsed().as_secs_f64()))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var("CPT_BENCH_JSON").ok())
+        .unwrap_or_else(|| "BENCH_campaign_sched.json".to_string());
+
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+    let tmp = std::env::temp_dir().join("cpt_bench_campaign_sched");
+    std::fs::remove_dir_all(&tmp).ok();
+
+    println!("=== §Perf: campaign scheduling (sequential vs global pool) ===\n");
+
+    // --- shared-model campaign: 2 members, 1 model, 2 workers ---------
+    let members = 2usize;
+    let workers = 2usize;
+    let cspec = CampaignSpec {
+        name: "bench-shared".into(),
+        run_dir: None,
+        members: vec![
+            member("a", &["CR", "RR", "STATIC"], 16),
+            member("b", &["CR", "ETH", "STATIC"], 16),
+        ],
+    };
+    let plan = CampaignPlan::build(&cspec)?;
+    let (_, seq_wall) = run(
+        &manifest,
+        &plan,
+        &tmp.join("shared_seq"),
+        workers,
+        SchedulerKind::Sequential,
+    )?;
+    let (glob, glob_wall) = run(
+        &manifest,
+        &plan,
+        &tmp.join("shared_glob"),
+        workers,
+        SchedulerKind::Global,
+    )?;
+    let sched = glob.scheduler.clone().expect("global scheduler stats");
+    let compiles = sched.total_compiles();
+    let budget = members * workers;
+    println!(
+        "shared-model campaign ({members} members x {workers} workers):"
+    );
+    println!("  sequential: {seq_wall:.2}s");
+    println!(
+        "  global:     {glob_wall:.2}s, {compiles} compile(s) \
+         (cache budget without sharing: {budget})"
+    );
+    let cache_ok = compiles < budget;
+    println!(
+        "  executable cache: {} (compiles {} < members x workers {})",
+        if cache_ok { "OK" } else { "FAILED" },
+        compiles,
+        budget
+    );
+
+    // --- single-member campaign, 1 worker: no-regression guard --------
+    let single = CampaignSpec {
+        name: "bench-single".into(),
+        run_dir: None,
+        members: vec![member("only", &["CR", "RR", "STATIC"], 16)],
+    };
+    let splan = CampaignPlan::build(&single)?;
+    let (_, single_seq) = run(
+        &manifest,
+        &splan,
+        &tmp.join("single_seq"),
+        1,
+        SchedulerKind::Sequential,
+    )?;
+    let (_, single_glob) = run(
+        &manifest,
+        &splan,
+        &tmp.join("single_glob"),
+        1,
+        SchedulerKind::Global,
+    )?;
+    println!(
+        "\nsingle-member campaign (1 worker): sequential {single_seq:.2}s, \
+         global {single_glob:.2}s"
+    );
+    if single_glob > 1.5 * single_seq + 1.0 {
+        eprintln!(
+            "WARNING: global scheduler is much slower than sequential on a \
+             single-member campaign ({single_glob:.2}s vs {single_seq:.2}s) \
+             — queue/collector overhead may have regressed"
+        );
+    }
+
+    let worker_rows: Vec<Json> = sched
+        .workers
+        .iter()
+        .map(|w| {
+            obj(vec![
+                ("worker", num(w.worker as f64)),
+                ("compiles", num(w.compiles as f64)),
+                ("compile_seconds", num(w.compile_seconds)),
+                ("cells", num(w.cells as f64)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", s("fig_campaign_sched")),
+        ("version", num(1.0)),
+        (
+            "shared_model",
+            obj(vec![
+                ("members", num(members as f64)),
+                ("workers", num(workers as f64)),
+                ("sequential_wall_s", num(seq_wall)),
+                ("global_wall_s", num(glob_wall)),
+                ("global_compiles", num(compiles as f64)),
+                ("compile_budget", num(budget as f64)),
+                ("cache_effective", Json::Bool(cache_ok)),
+                ("workers_detail", Json::Arr(worker_rows)),
+            ]),
+        ),
+        (
+            "single_member",
+            obj(vec![
+                ("sequential_wall_s", num(single_seq)),
+                ("global_wall_s", num(single_glob)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&json_path, doc.to_string_pretty())?;
+    println!("\nwrote {json_path}");
+    std::fs::remove_dir_all(&tmp).ok();
+
+    let out: PathBuf = json_path.into();
+    anyhow::ensure!(
+        cache_ok,
+        "global scheduler recompiled a shared model: {} compiles on a \
+         {}-member x {}-worker shared-model campaign (see {})",
+        compiles,
+        members,
+        workers,
+        out.display()
+    );
+    Ok(())
+}

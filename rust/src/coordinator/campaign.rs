@@ -5,10 +5,15 @@
 //! header and one `[[campaign.sweep]]` table per member — compiles into
 //! a [`CampaignPlan`], an ordered list of named member sweeps plus a
 //! campaign-level FNV hash derived from the member spec hashes. `cpt
-//! campaign` executes the plan by fanning each member over the existing
-//! shard/resume machinery: one [`super::store::RunStore`] directory per
-//! member, nested under a campaign root governed by a
-//! `campaign-manifest.json`.
+//! campaign` executes the plan through the global scheduler by default
+//! ([`run_campaign_global`]): the plan flattens to the canonical
+//! `(member, cell)` item list and one shared worker pool claims cells
+//! across member boundaries via [`super::exec`], each worker caching
+//! compiled executables by model fingerprint (`--scheduler sequential`
+//! keeps the member-after-member baseline). Either way there is one
+//! [`super::store::RunStore`] directory per member, nested under a
+//! campaign root governed by a `campaign-manifest.json`, and results
+//! are byte-identical between the schedulers.
 //!
 //! Layout of a campaign root (one per shard, exactly like sweep dirs):
 //!
@@ -33,16 +38,18 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::plan::{ShardId, SweepPlan};
+use super::exec::{self, ExecItem, ExecMember, WorkerStats};
+use super::plan::{PlannedCell, ShardId, SweepPlan};
 use super::store::{
     self, compact_run_dir, merge_run_dirs, GcStats, ManifestSummary, RunStore,
 };
 use super::{run_sweep_timed, RunOutcome, SweepSpec, SweepTiming};
 use crate::config::toml::{Section, TomlDoc};
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, ModelSpec};
 use crate::util::hash::Fnv1a64;
 use crate::util::json::{num, obj, s, Json};
 
@@ -55,6 +62,12 @@ const CAMPAIGN_SCHEMA_VERSION: usize = 1;
 pub struct CampaignMember {
     pub name: String,
     pub spec: SweepSpec,
+    /// Per-member concurrency cap (`jobs = N` in the member table): the
+    /// global scheduler never runs more than N of this member's cells at
+    /// once (e.g. `jobs = 1` for a memory-hungry model), and the
+    /// sequential path caps the member's own pool the same way. An
+    /// execution knob — never part of any hash. None = no member cap.
+    pub jobs: Option<usize>,
 }
 
 /// A campaign as described by its TOML file (member order as authored;
@@ -134,7 +147,24 @@ impl CampaignSpec {
                 Some(v) => v.as_str()?.to_string(),
                 None => spec.model.clone(),
             };
-            members.push(CampaignMember { name: member_name, spec });
+            // member-level concurrency cap, read here (not into the
+            // spec) because it bounds the member within the shared pool
+            let jobs = match t.get("jobs") {
+                Some(v) => {
+                    let j = v.as_usize().with_context(|| {
+                        format!("[[campaign.sweep]] '{member_name}' jobs")
+                    })?;
+                    if j == 0 {
+                        bail!(
+                            "[[campaign.sweep]] '{member_name}': jobs must \
+                             be >= 1"
+                        );
+                    }
+                    Some(j)
+                }
+                None => None,
+            };
+            members.push(CampaignMember { name: member_name, spec, jobs });
         }
         Ok(CampaignSpec { name, run_dir, members })
     }
@@ -149,8 +179,9 @@ pub enum SweepSectionKind {
     /// (shard/run_dir/resume/jobs/verbose) allowed; `name` is not (the
     /// preset's root `title` labels the run).
     Preset,
-    /// `[[campaign.sweep]]` member: `name` allowed; execution knobs are
-    /// campaign-level flags, never member keys.
+    /// `[[campaign.sweep]]` member: `name` and `jobs` (the member's
+    /// in-flight cap within the global pool) allowed; the remaining
+    /// execution knobs are campaign-level flags, never member keys.
     CampaignMember,
 }
 
@@ -171,7 +202,8 @@ pub fn sweep_spec_from_section(
     for k in sec.keys() {
         let known = RESULT_KEYS.contains(&k.as_str())
             || (allow_exec_keys && EXEC_KEYS.contains(&k.as_str()))
-            || (kind == SweepSectionKind::CampaignMember && k == "name");
+            || (kind == SweepSectionKind::CampaignMember
+                && (k == "name" || k == "jobs"));
         if !known {
             bail!(
                 "unknown sweep key '{k}' (known: {}{})",
@@ -179,7 +211,8 @@ pub fn sweep_spec_from_section(
                 match kind {
                     SweepSectionKind::Preset =>
                         format!("; exec: {}", EXEC_KEYS.join(", ")),
-                    SweepSectionKind::CampaignMember => "; name".to_string(),
+                    SweepSectionKind::CampaignMember =>
+                        "; name, jobs".to_string(),
                 }
             );
         }
@@ -275,6 +308,8 @@ pub struct MemberPlan {
     /// The member's own sweep plan (unsharded; execution applies the
     /// campaign shard). Carries the member spec hash and cell count.
     pub plan: SweepPlan,
+    /// Per-member in-flight cap (see [`CampaignMember::jobs`]).
+    pub jobs: Option<usize>,
 }
 
 /// The deterministic execution plan for a campaign: members in canonical
@@ -309,6 +344,7 @@ impl CampaignPlan {
                 name: m.name.clone(),
                 spec: m.spec.clone(),
                 plan,
+                jobs: m.jobs,
             });
         }
         // canonical order: sorted by member name, independent of the
@@ -342,6 +378,28 @@ impl CampaignPlan {
     pub fn total_cells(&self) -> usize {
         self.members.iter().map(|m| m.plan.total_cells()).sum()
     }
+
+    /// Flatten the plan into the canonical `(member, cell)` work-item
+    /// list for `shard`: members in canonical (name-sorted) order, each
+    /// member's owned cells by canonical index. This is the order the
+    /// global scheduler enqueues — deterministic for any two processes
+    /// that agree on the campaign (propcheck-tested), with the member
+    /// index doubling as the store/slot route, so an item can never be
+    /// recorded across a member boundary.
+    pub fn flatten_owned(&self, shard: ShardId) -> Vec<(usize, PlannedCell)> {
+        let mut items = Vec::new();
+        for (mi, m) in self.members.iter().enumerate() {
+            for (i, cell) in m.plan.cells.iter().enumerate() {
+                if shard.owns(i) {
+                    items.push((
+                        mi,
+                        PlannedCell { index: i, cell: cell.clone() },
+                    ));
+                }
+            }
+        }
+        items
+    }
 }
 
 /// Manifest record for one campaign member.
@@ -354,6 +412,26 @@ pub struct MemberEntry {
     pub total_cells: usize,
 }
 
+/// Per-worker compile accounting for the last completed global-scheduler
+/// run of a campaign root, recorded into the manifest and surfaced by
+/// `cpt status`. Purely informational — never part of any fence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerStats {
+    /// Workers the pool actually spawned.
+    pub jobs: usize,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl SchedulerStats {
+    pub fn total_compiles(&self) -> usize {
+        self.workers.iter().map(|w| w.compiles).sum()
+    }
+
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.workers.iter().map(|w| w.compile_seconds).sum()
+    }
+}
+
 /// Parsed, validated view of a `campaign-manifest.json`.
 #[derive(Clone, Debug)]
 pub struct CampaignManifest {
@@ -363,6 +441,9 @@ pub struct CampaignManifest {
     pub shard: ShardId,
     /// Member name -> entry; BTreeMap order is the canonical order.
     pub members: BTreeMap<String, MemberEntry>,
+    /// Worker-pool accounting from the last completed global-scheduler
+    /// run (absent until one completes, and on sequential-only roots).
+    pub scheduler: Option<SchedulerStats>,
 }
 
 impl CampaignManifest {
@@ -405,7 +486,7 @@ fn write_campaign_manifest(root: &Path, cm: &CampaignManifest) -> Result<()> {
             ]),
         );
     }
-    let doc = obj(vec![
+    let mut fields = vec![
         ("kind", s(CAMPAIGN_KIND)),
         ("version", num(CAMPAIGN_SCHEMA_VERSION as f64)),
         ("cpt_version", s(&cm.cpt_version)),
@@ -414,7 +495,27 @@ fn write_campaign_manifest(root: &Path, cm: &CampaignManifest) -> Result<()> {
         ("shard_index", num(cm.shard.index as f64)),
         ("shard_count", num(cm.shard.count as f64)),
         ("members", Json::Obj(members)),
-    ]);
+    ];
+    if let Some(sc) = &cm.scheduler {
+        let workers = Json::Arr(
+            sc.workers
+                .iter()
+                .map(|w| {
+                    obj(vec![
+                        ("worker", num(w.worker as f64)),
+                        ("compiles", num(w.compiles as f64)),
+                        ("compile_seconds", num(w.compile_seconds)),
+                        ("cells", num(w.cells as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        fields.push((
+            "scheduler",
+            obj(vec![("jobs", num(sc.jobs as f64)), ("workers", workers)]),
+        ));
+    }
+    let doc = obj(fields);
     doc.write_atomic(root.join(CAMPAIGN_MANIFEST_FILE)).with_context(|| {
         format!("write campaign manifest in {}", root.display())
     })
@@ -484,12 +585,28 @@ pub fn read_campaign_manifest(root: &Path) -> Result<CampaignManifest> {
     // plan-side validation in CampaignPlan::build
     validate_path_component("campaign name", &name)
         .with_context(|| format!("in {}", path.display()))?;
+    let scheduler = match j.opt("scheduler") {
+        Some(sj) => {
+            let mut workers = Vec::new();
+            for w in sj.get("workers")?.as_arr()? {
+                workers.push(WorkerStats {
+                    worker: w.get("worker")?.as_usize()?,
+                    compiles: w.get("compiles")?.as_usize()?,
+                    compile_seconds: w.get("compile_seconds")?.as_f64()?,
+                    cells: w.get("cells")?.as_usize()?,
+                });
+            }
+            Some(SchedulerStats { jobs: sj.get("jobs")?.as_usize()?, workers })
+        }
+        None => None,
+    };
     Ok(CampaignManifest {
         cpt_version: j.get("cpt_version")?.as_str()?.to_string(),
         name,
         campaign_hash: j.get("campaign_hash")?.as_str()?.to_string(),
         shard,
         members,
+        scheduler,
     })
 }
 
@@ -499,6 +616,7 @@ fn manifest_from_plan(plan: &CampaignPlan, shard: ShardId) -> CampaignManifest {
         name: plan.name.clone(),
         campaign_hash: plan.campaign_hash.clone(),
         shard,
+        scheduler: None,
         members: plan
             .members
             .iter()
@@ -606,6 +724,29 @@ pub fn open_campaign_root(
     Ok(cm)
 }
 
+/// Which campaign execution path to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Members run one after another, each on its own worker pool (the
+    /// pre-global-scheduler behavior; kept as the equivalence baseline).
+    Sequential,
+    /// One shared worker pool claims cells across member boundaries,
+    /// with a per-worker compiled-executable cache (the default).
+    Global,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s {
+            "sequential" | "seq" => Ok(SchedulerKind::Sequential),
+            "global" => Ok(SchedulerKind::Global),
+            other => bail!(
+                "unknown scheduler '{other}' (known: global, sequential)"
+            ),
+        }
+    }
+}
+
 /// Execution knobs for one `cpt campaign` invocation.
 #[derive(Clone, Debug)]
 pub struct CampaignRunOpts {
@@ -614,6 +755,7 @@ pub struct CampaignRunOpts {
     pub jobs: usize,
     pub resume: bool,
     pub verbose: bool,
+    pub scheduler: SchedulerKind,
 }
 
 /// Results of one member sweep execution (this shard's share).
@@ -622,41 +764,112 @@ pub struct MemberOutcome {
     pub name: String,
     pub model: String,
     pub outcomes: Vec<RunOutcome>,
+    /// Under the global scheduler members overlap, so `wall_seconds` and
+    /// `jobs` are campaign-wide figures repeated per member; `cells` and
+    /// `resumed` remain member-accurate.
     pub timing: SweepTiming,
 }
 
-/// Execute a campaign plan's owned shard: members in canonical order,
-/// each through `run_sweep_timed` with its run dir nested under the
-/// campaign root. Every completed cell is persisted before the campaign
-/// moves on, so a kill at any point loses at most the in-flight cell;
-/// re-running with `resume` picks up exactly where it stopped.
+/// Results of one `run_campaign` invocation (this shard's share).
+#[derive(Clone, Debug)]
+pub struct CampaignRunResult {
+    /// Members in canonical order.
+    pub members: Vec<MemberOutcome>,
+    pub wall_seconds: f64,
+    /// Worker-pool accounting: None on the sequential path; on a fully
+    /// resumed global run (no fresh cells), the stats of the run that
+    /// did the work, straight from the manifest.
+    pub scheduler: Option<SchedulerStats>,
+}
+
+impl CampaignRunResult {
+    pub fn total_cells(&self) -> usize {
+        self.members.iter().map(|m| m.timing.cells).sum()
+    }
+
+    pub fn total_resumed(&self) -> usize {
+        self.members.iter().map(|m| m.timing.resumed).sum()
+    }
+}
+
+/// A member's effective in-flight cap inside a pool of `jobs` workers.
+fn member_cap(member_jobs: Option<usize>, jobs: usize) -> usize {
+    member_jobs.unwrap_or(jobs).min(jobs).max(1)
+}
+
+/// Execute a campaign plan's owned shard. Both schedulers persist every
+/// completed cell before moving on, so a kill at any point loses at most
+/// the in-flight cells; re-running with `resume` picks up exactly where
+/// it stopped. Results are byte-identical between the two schedulers —
+/// every cell is an independently seeded run routed to its member's
+/// store and canonical slot — only wall clock and compile counts differ.
 pub fn run_campaign(
     manifest: &Manifest,
     plan: &CampaignPlan,
     opts: &CampaignRunOpts,
-) -> Result<Vec<MemberOutcome>> {
-    open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
-    // members often share a model (panels across q_max settings); hash
-    // each compiled model once, not once per member
+) -> Result<CampaignRunResult> {
+    match opts.scheduler {
+        SchedulerKind::Sequential => {
+            run_campaign_sequential(manifest, plan, opts)
+        }
+        SchedulerKind::Global => {
+            // shared pre-validated specs + fingerprints, one per model
+            // (members often share a model across figure panels)
+            let mut specs: HashMap<String, ModelSpec> = HashMap::new();
+            let mut fingerprints: HashMap<String, String> = HashMap::new();
+            for m in &plan.members {
+                if !specs.contains_key(&m.spec.model) {
+                    let ms = manifest.model(&m.spec.model)?.clone();
+                    ms.validate()?; // fail fast, before spawning workers
+                    fingerprints.insert(
+                        m.spec.model.clone(),
+                        store::model_fingerprint(&ms)?,
+                    );
+                    specs.insert(m.spec.model.clone(), ms);
+                }
+            }
+            let cache_cap = exec::exec_cache_cap();
+            run_campaign_global(plan, opts, &fingerprints, None, |_| {
+                exec::PjrtCellRunner::new(&specs, cache_cap)
+            })
+        }
+    }
+}
+
+
+/// Sequential path: members in canonical order, each through
+/// `run_sweep_timed` with its run dir nested under the campaign root.
+fn run_campaign_sequential(
+    manifest: &Manifest,
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+) -> Result<CampaignRunResult> {
+    let t0 = Instant::now();
+    // Resolve every member's model up front — fail fast like the global
+    // path, before the campaign root is created or any member trains
+    // (a missing model would otherwise strand a root that only --resume
+    // can reopen). Members often share a model (panels across q_max
+    // settings); hash each compiled model once, not once per member.
     let mut fingerprints: HashMap<String, String> = HashMap::new();
+    for m in &plan.members {
+        if !fingerprints.contains_key(&m.spec.model) {
+            let ms = manifest.model(&m.spec.model)?;
+            ms.validate()?;
+            let fp = store::model_fingerprint(ms)?;
+            fingerprints.insert(m.spec.model.clone(), fp);
+        }
+    }
+    open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
     let mut results = Vec::with_capacity(plan.members.len());
     for m in &plan.members {
-        let fp = match fingerprints.get(&m.spec.model) {
-            Some(fp) => fp.clone(),
-            None => {
-                let fp =
-                    store::model_fingerprint(manifest.model(&m.spec.model)?)?;
-                fingerprints.insert(m.spec.model.clone(), fp.clone());
-                fp
-            }
-        };
+        let fp = fingerprints[&m.spec.model].clone();
         let mut spec = m.spec.clone();
         spec.shard = Some(opts.shard);
         spec.run_dir = Some(opts.root.join(&m.name));
         // the campaign-root fence already vetted the whole tree, so
         // member dirs reopen unconditionally (fresh dirs are unaffected)
         spec.resume = true;
-        spec.jobs = opts.jobs;
+        spec.jobs = member_cap(m.jobs, opts.jobs);
         spec.verbose = opts.verbose;
         spec.model_fingerprint = Some(fp);
         if opts.verbose {
@@ -674,7 +887,174 @@ pub fn run_campaign(
             timing,
         });
     }
-    Ok(results)
+    Ok(CampaignRunResult {
+        members: results,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        scheduler: None,
+    })
+}
+
+/// Global-scheduler path with an injected worker factory — `run_campaign`
+/// wires the PJRT-backed [`exec::PjrtCellRunner`]; the fabricated-outcome
+/// tests inject a runner that needs no PJRT. `fingerprints` maps each
+/// member model to its compiled-model fingerprint (the store fence and
+/// the executable-cache key). `halt_after_cells` overrides the
+/// CPT_HALT_AFTER_CELLS env knob so tests can kill deterministically
+/// without mutating process env.
+pub fn run_campaign_global<R, F>(
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+    fingerprints: &HashMap<String, String>,
+    halt_after_cells: Option<usize>,
+    make_worker: F,
+) -> Result<CampaignRunResult>
+where
+    R: exec::CellRunner,
+    F: Fn(usize) -> Result<R> + Sync,
+{
+    let t0 = Instant::now();
+    open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
+    let jobs = opts.jobs.max(1);
+
+    // Per member: open its nested store, resume cells with valid
+    // artifacts into canonical-order slots, and describe the member to
+    // the executor (model, fingerprint, resolved steps/cycles, cap).
+    let mut stores: Vec<Option<RunStore>> = Vec::new();
+    let mut slots: Vec<Vec<Option<RunOutcome>>> = Vec::new();
+    let mut members_meta: Vec<ExecMember> = Vec::new();
+    let mut resumed: Vec<usize> = Vec::new();
+    for m in &plan.members {
+        let fp = fingerprints.get(&m.spec.model).with_context(|| {
+            format!("no fingerprint for model '{}'", m.spec.model)
+        })?;
+        let mut spec = m.spec.clone();
+        spec.shard = Some(opts.shard);
+        let mplan = SweepPlan::build(&spec)
+            .with_context(|| format!("campaign member '{}'", m.name))?;
+        // the campaign-root fence already vetted the whole tree, so
+        // member dirs reopen unconditionally (fresh dirs are unaffected)
+        let mut store =
+            RunStore::open(&opts.root.join(&m.name), &mplan, fp, true)
+                .with_context(|| format!("campaign member '{}'", m.name))?;
+        let owned = mplan.owned();
+        let mut mslots: Vec<Option<RunOutcome>> = vec![None; owned.len()];
+        let mut res = 0usize;
+        for (pos, pc) in owned.iter().enumerate() {
+            if let Some(out) = store.take_valid_outcome(pc.index) {
+                mslots[pos] = Some(out);
+                res += 1;
+            }
+        }
+        if opts.verbose && res > 0 {
+            eprintln!(
+                "[campaign {}] '{}': resumed {res}/{} cells from {}",
+                plan.name,
+                m.name,
+                owned.len(),
+                store.dir().display()
+            );
+        }
+        members_meta.push(ExecMember {
+            name: m.name.clone(),
+            model: m.spec.model.clone(),
+            fingerprint: fp.clone(),
+            steps: mplan.steps,
+            cycles: mplan.cycles,
+            eval_every: m.spec.eval_every,
+            cap: member_cap(m.jobs, jobs),
+        });
+        stores.push(Some(store));
+        slots.push(mslots);
+        resumed.push(res);
+    }
+
+    // Flatten to the canonical (member, cell) item list and drop the
+    // cells already filled from artifacts. `flatten_owned` and the
+    // per-member `owned()` lists enumerate identically, so slot
+    // positions line up by construction.
+    let mut items: Vec<ExecItem> = Vec::new();
+    let mut slot_cursor = vec![0usize; plan.members.len()];
+    for (mi, pc) in plan.flatten_owned(opts.shard) {
+        let pos = slot_cursor[mi];
+        slot_cursor[mi] += 1;
+        if slots[mi][pos].is_some() {
+            continue; // resumed from its artifact
+        }
+        items.push(ExecItem {
+            member: mi,
+            cell_index: pc.index,
+            slot: pos,
+            cell: pc.cell,
+        });
+    }
+
+    if opts.verbose {
+        eprintln!(
+            "[campaign {}] global scheduler: {} cell(s) across {} member(s) \
+             on {} worker(s)",
+            plan.name,
+            items.len(),
+            plan.members.len(),
+            jobs.min(items.len().max(1))
+        );
+    }
+    let req = exec::ExecRequest {
+        label: format!("campaign {}", plan.name),
+        members: &members_meta,
+        items: &items,
+        jobs,
+        verbose: opts.verbose,
+        halt_after_cells,
+    };
+    let mut store_refs: Vec<Option<&mut RunStore>> =
+        stores.iter_mut().map(|s| s.as_mut()).collect();
+    let stats = exec::run_items(&req, &mut store_refs, &mut slots, make_worker)
+        .with_context(|| format!("campaign '{}'", plan.name))?;
+
+    // Record per-worker compile accounting into the campaign manifest so
+    // `cpt status` can surface it after the fact. A fully resumed run
+    // spawned no workers — keep the stats of the run that did the work
+    // instead of overwriting them with an empty record.
+    let jobs_run = stats.jobs;
+    let sched = if items.is_empty() {
+        read_campaign_manifest(&opts.root)?.scheduler
+    } else {
+        let s = SchedulerStats { jobs: stats.jobs, workers: stats.workers };
+        record_scheduler_stats(&opts.root, &s)?;
+        Some(s)
+    };
+
+    let wall = t0.elapsed().as_secs_f64();
+    let mut members_out = Vec::with_capacity(plan.members.len());
+    for ((m, mslots), res) in
+        plan.members.iter().zip(slots).zip(resumed)
+    {
+        let cells = mslots.len();
+        members_out.push(MemberOutcome {
+            name: m.name.clone(),
+            model: m.spec.model.clone(),
+            outcomes: mslots.into_iter().flatten().collect(),
+            timing: SweepTiming {
+                wall_seconds: wall,
+                jobs: jobs_run,
+                cells,
+                resumed: res,
+            },
+        });
+    }
+    Ok(CampaignRunResult {
+        members: members_out,
+        wall_seconds: wall,
+        scheduler: sched,
+    })
+}
+
+/// Rewrite the campaign manifest with the latest pool accounting (all
+/// fence fields unchanged).
+fn record_scheduler_stats(root: &Path, stats: &SchedulerStats) -> Result<()> {
+    let mut cm = read_campaign_manifest(root)?;
+    cm.scheduler = Some(stats.clone());
+    write_campaign_manifest(root, &cm)
 }
 
 /// One member's merged, canonical-order outcomes.
@@ -831,6 +1211,8 @@ pub struct CampaignStatus {
     pub campaign_hash: String,
     pub shard: ShardId,
     pub members: Vec<MemberStatus>,
+    /// Pool accounting from the last completed global-scheduler run.
+    pub scheduler: Option<SchedulerStats>,
 }
 
 impl CampaignStatus {
@@ -897,6 +1279,7 @@ pub fn status(dir: &Path) -> Result<Status> {
             campaign_hash: cm.campaign_hash,
             shard: cm.shard,
             members,
+            scheduler: cm.scheduler,
         }));
     }
     if dir.join(store::MANIFEST_FILE).exists() {
@@ -969,6 +1352,7 @@ mod tests {
                 .map(|(i, n)| CampaignMember {
                     name: n.to_string(),
                     spec: member_spec(1 + i),
+                    jobs: None,
                 })
                 .collect(),
         }
@@ -987,6 +1371,7 @@ name = "cifar"
 model = "cnn_tiny"
 q_maxes = [6, 8]
 trials = 2
+jobs = 1
 
 [[campaign.sweep]]
 model = "mlp"          # name defaults to the model
@@ -1001,9 +1386,17 @@ eval_every = 4
         assert_eq!(c.members.len(), 2);
         assert_eq!(c.members[0].name, "cifar");
         assert_eq!(c.members[0].spec.q_maxes, vec![6.0, 8.0]);
+        assert_eq!(c.members[0].jobs, Some(1));
         assert_eq!(c.members[1].name, "mlp");
         assert_eq!(c.members[1].spec.steps, Some(16));
         assert_eq!(c.members[1].spec.eval_every, 4);
+        assert_eq!(c.members[1].jobs, None);
+        // jobs = 0 is rejected (it would deadlock the member)
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"x\"\n[[campaign.sweep]]\nmodel = \"mlp\"\njobs = 0",
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_toml(&doc).is_err());
     }
 
     #[test]
@@ -1094,6 +1487,7 @@ eval_every = 4
                     .map(|i| CampaignMember {
                         name: names[i].clone(),
                         spec: member_spec(1 + i),
+                        jobs: None,
                     })
                     .collect(),
             };
@@ -1105,6 +1499,7 @@ eval_every = 4
                     .map(|&i| CampaignMember {
                         name: names[i].clone(),
                         spec: member_spec(1 + i),
+                        jobs: None,
                     })
                     .collect(),
             };
@@ -1136,19 +1531,20 @@ eval_every = 4
             let base_hash = CampaignPlan::build(&base).unwrap().campaign_hash;
             let which = rng.below(2) as usize;
             let mut c = campaign(&["a", "b"]);
-            let spec = &mut c.members[which].spec;
             // an execution knob never moves the hash...
-            match rng.below(5) {
-                0 => spec.jobs = 2 + rng.below(6) as usize,
-                1 => spec.verbose = true,
+            match rng.below(6) {
+                0 => c.members[which].spec.jobs = 2 + rng.below(6) as usize,
+                1 => c.members[which].spec.verbose = true,
                 2 => {
-                    spec.shard = Some(ShardId {
+                    c.members[which].spec.shard = Some(ShardId {
                         index: 1,
                         count: 2 + rng.below(3) as usize,
                     })
                 }
-                3 => spec.run_dir = Some("/tmp/x".into()),
-                _ => spec.resume = true,
+                3 => c.members[which].spec.run_dir = Some("/tmp/x".into()),
+                4 => c.members[which].spec.resume = true,
+                // the member-level in-flight cap is an execution knob too
+                _ => c.members[which].jobs = Some(1 + rng.below(4) as usize),
             }
             let hash = CampaignPlan::build(&c).unwrap().campaign_hash;
             prop_assert!(
@@ -1179,6 +1575,67 @@ eval_every = 4
                     != base_hash,
                 "adding a member kept the campaign hash"
             );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flattened_items_are_canonical_and_respect_member_boundaries() {
+        // The global scheduler's work-item list must be identical for
+        // any two processes that agree on the campaign — independent of
+        // TOML listing order — and each item must point at exactly one
+        // member's own cells (the store route).
+        propcheck(50, |rng| {
+            let n = 2 + rng.below(3) as usize;
+            let names: Vec<String> = (0..n).map(|i| format!("m{i}")).collect();
+            let mut shuffled: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.below(i as u32 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let build = |order: &[usize]| CampaignSpec {
+                name: "c".into(),
+                run_dir: None,
+                members: order
+                    .iter()
+                    .map(|&i| CampaignMember {
+                        name: names[i].clone(),
+                        spec: member_spec(1 + i),
+                        jobs: None,
+                    })
+                    .collect(),
+            };
+            let in_order: Vec<usize> = (0..n).collect();
+            let a = CampaignPlan::build(&build(&in_order)).unwrap();
+            let b = CampaignPlan::build(&build(&shuffled)).unwrap();
+            let count = 1 + rng.below(3) as usize;
+            let index = 1 + rng.below(count as u32) as usize;
+            let shard = ShardId { index, count };
+            let fa = a.flatten_owned(shard);
+            let fb = b.flatten_owned(shard);
+            prop_assert!(fa == fb, "flattened order depends on TOML order");
+            // concatenation of per-member owned lists, member by member
+            let mut expect = Vec::new();
+            for (mi, m) in a.members.iter().enumerate() {
+                let mut s = m.spec.clone();
+                s.shard = Some(shard);
+                for pc in SweepPlan::build(&s).unwrap().owned() {
+                    expect.push((mi, pc));
+                }
+            }
+            prop_assert!(
+                fa == expect,
+                "flatten disagrees with per-member owned() lists"
+            );
+            // member routing: indices in range, cells belong to their
+            // member's own plan
+            for (mi, pc) in &fa {
+                prop_assert!(*mi < a.members.len(), "member {mi} oob");
+                prop_assert!(
+                    a.members[*mi].plan.cells[pc.index] == pc.cell,
+                    "item cell is not its member's cell"
+                );
+            }
             Ok(())
         });
     }

@@ -1,0 +1,978 @@
+//! Shared work-queue executor: one worker pool over heterogeneous cells.
+//!
+//! The serial sweep path, the parallel sweep path, and the campaign
+//! global scheduler all execute through [`run_items`]. Work is a flat
+//! list of [`ExecItem`]s — `(member, cell)` pairs in canonical order —
+//! and a pool of `jobs` workers claims items across member boundaries,
+//! so a small member no longer leaves the pool idle while a large one
+//! drains. A plain sweep is simply the single-member special case.
+//!
+//! Key properties (see rust/DESIGN-perf.md §6):
+//!
+//! * **Determinism** — every cell is an independently seeded run, and
+//!   results land in position-addressed slots per member, so outcomes
+//!   (and the CSVs aggregated from them) are byte-identical to
+//!   sequential execution regardless of claim order, worker count, or
+//!   cache state. Scheduling only moves wall clock.
+//! * **Executable cache** — each worker owns one PJRT client plus a
+//!   small LRU cache of compiled entry-point sets keyed by model
+//!   fingerprint ([`PjrtCellRunner`]). Switching between members that
+//!   share a model costs zero recompiles; per-worker compile counts and
+//!   seconds are reported in [`ExecStats`] (and recorded into the
+//!   campaign manifest). Claiming prefers items whose model the worker
+//!   already holds compiled, so workers stay sticky to models when the
+//!   queue allows it.
+//! * **Per-member caps** — a member may bound its own in-flight cells
+//!   ([`ExecMember::cap`], e.g. `jobs = 1` for memory reasons); the pool
+//!   never runs more than `cap` of that member's cells concurrently.
+//! * **Setup-failure semantics** — a worker that fails to compile one
+//!   member's model stays alive for members it can compile: the claimed
+//!   item is requeued for other workers and the model is skipped by this
+//!   worker from then on. The run fails only if cells end up unclaimed
+//!   (no surviving worker could compile their model), generalizing the
+//!   per-sweep rule the old parallel executor applied.
+//! * **Collector-per-store** — all `RunStore` writes happen on the one
+//!   collector thread, routed by the item's member index, so artifact
+//!   and manifest I/O stays serialized per store without locks and can
+//!   never cross member boundaries.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::store::RunStore;
+use super::{run_one, RunOutcome, SweepCell};
+use crate::runtime::{LoadedModel, ModelSpec, Runtime};
+
+/// Per-worker compiled-executable cache capacity (distinct model
+/// fingerprints held at once), overridable via CPT_EXEC_CACHE. Campaigns
+/// rarely mix more than a handful of models, so a small cache already
+/// means zero recompiles when members share a model.
+pub fn exec_cache_cap() -> usize {
+    std::env::var("CPT_EXEC_CACHE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+}
+
+/// One member of an execution request — a sweep (or the single member of
+/// a plain sweep run) whose cells share a model and training shape.
+#[derive(Clone, Debug)]
+pub struct ExecMember {
+    /// Display label ("" for a plain sweep).
+    pub name: String,
+    /// Model name (keys the recipe and the shared `ModelSpec` table).
+    pub model: String,
+    /// Compiled-model cache key. Members that share a model share a
+    /// fingerprint, which is exactly when a worker's cached executables
+    /// can be reused across them.
+    pub fingerprint: String,
+    pub steps: usize,
+    pub cycles: usize,
+    pub eval_every: usize,
+    /// Max cells of this member in flight at once (>= 1).
+    pub cap: usize,
+}
+
+/// One unit of work: a cell of one member.
+#[derive(Clone, Debug)]
+pub struct ExecItem {
+    /// Index into [`ExecRequest::members`] — also the store/slot route.
+    pub member: usize,
+    /// The cell's canonical index within its member's plan.
+    pub cell_index: usize,
+    /// Destination position in the member's slot vector.
+    pub slot: usize,
+    pub cell: SweepCell,
+}
+
+/// How a cell failed — the distinction drives pool survival.
+pub enum CellError {
+    /// The worker could not build what it needs to run cells of this
+    /// model (client/compile failure). Non-fatal: the item is requeued
+    /// for other workers and this worker skips the model from now on.
+    Setup(anyhow::Error),
+    /// The cell itself failed. Fatal for the whole run (all-or-nothing,
+    /// like the serial path).
+    Run(anyhow::Error),
+}
+
+/// One worker's execution backend. Implementations own whatever state a
+/// worker needs (PJRT client, compiled models); a runner is created on
+/// its worker thread and never crosses threads.
+pub trait CellRunner {
+    /// Run one cell. `cell_index` is the cell's canonical index within
+    /// its member's plan (production ignores it; fabricated test runners
+    /// use it to synthesize index-dependent outcomes).
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        per_step_logs: bool,
+    ) -> std::result::Result<RunOutcome, CellError>;
+
+    /// (compile count, compile seconds) accumulated so far.
+    fn compile_stats(&self) -> (usize, f64);
+
+    /// Does this worker currently hold a compiled model for this
+    /// fingerprint? Used as a claim-order preference only — results
+    /// never depend on it.
+    fn has_cached(&self, _fingerprint: &str) -> bool {
+        false
+    }
+}
+
+/// Per-worker accounting, reported by [`run_items`] and recorded into
+/// campaign manifests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Model compilations this worker performed (cache misses).
+    pub compiles: usize,
+    pub compile_seconds: f64,
+    /// Cells this worker completed.
+    pub cells: usize,
+}
+
+/// Pool-level accounting for one [`run_items`] call.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Workers actually spawned (jobs clamped to the item count).
+    pub jobs: usize,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl ExecStats {
+    pub fn total_compiles(&self) -> usize {
+        self.workers.iter().map(|w| w.compiles).sum()
+    }
+
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.workers.iter().map(|w| w.compile_seconds).sum()
+    }
+}
+
+/// One execution request: members, their flattened items, and knobs.
+pub struct ExecRequest<'a> {
+    /// Log prefix, e.g. `sweep mlp` or `campaign fig367`.
+    pub label: String,
+    pub members: &'a [ExecMember],
+    pub items: &'a [ExecItem],
+    pub jobs: usize,
+    pub verbose: bool,
+    /// Deterministic kill for tests: abort after this many freshly
+    /// recorded cells, without touching process env. `None` defers to
+    /// the process-wide CPT_HALT_AFTER_CELLS counter (the check.sh
+    /// crash-injection knob).
+    pub halt_after_cells: Option<usize>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ItemState {
+    Pending,
+    InFlight,
+    Done,
+}
+
+struct QueueState {
+    state: Vec<ItemState>,
+    /// In-flight cells per member (bounded by the member's cap).
+    inflight: Vec<usize>,
+    stop: bool,
+}
+
+/// Unwinding guard for a claimed item: if a panic tears through
+/// `run_cell`, the claim is released (marked Done), the pool is stopped,
+/// and waiters are woken — otherwise the stuck `InFlight` item would
+/// park the remaining workers forever and the run would hang instead of
+/// propagating the panic through `thread::scope`.
+struct ClaimGuard<'a> {
+    queue: &'a Mutex<QueueState>,
+    available: &'a Condvar,
+    item: usize,
+    member: usize,
+    armed: bool,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut q) = self.queue.lock() {
+            q.state[self.item] = ItemState::Done;
+            q.inflight[self.member] -= 1;
+            q.stop = true;
+        }
+        self.available.notify_all();
+    }
+}
+
+enum Msg {
+    Done { item: usize, out: Box<RunOutcome> },
+    RunErr { item: usize, err: anyhow::Error },
+    SetupErr { model: String, err: anyhow::Error },
+    WorkerExit { stats: WorkerStats },
+}
+
+/// Execute `req.items` over a pool of `req.jobs` workers, routing each
+/// completed cell into `slots[member][slot]` and (when present) the
+/// member's `RunStore` — all store writes happen on this thread, in
+/// completion order, so persistence is serialized per store. Returns
+/// per-worker compile/cell accounting.
+///
+/// Errors, in precedence order: a failed cell (lowest item index wins,
+/// all-or-nothing), a store write failure, a crash-injection halt, and
+/// finally unclaimed cells (every worker that tried their model failed
+/// to compile it — reported with the first such compile error).
+pub fn run_items<R, F>(
+    req: &ExecRequest<'_>,
+    stores: &mut [Option<&mut RunStore>],
+    slots: &mut [Vec<Option<RunOutcome>>],
+    make_worker: F,
+) -> Result<ExecStats>
+where
+    R: CellRunner,
+    F: Fn(usize) -> Result<R> + Sync,
+{
+    assert_eq!(req.members.len(), stores.len());
+    assert_eq!(req.members.len(), slots.len());
+    let jobs = req.jobs.max(1).min(req.items.len().max(1));
+    if req.items.is_empty() {
+        return Ok(ExecStats { jobs, workers: Vec::new() });
+    }
+    let per_step_logs = req.verbose && jobs == 1;
+    if req.verbose && jobs > 1 {
+        // workers run with per-step logging off (interleaved multi-cell
+        // step logs would be unreadable); say so instead of silently
+        // dropping the output the user asked for
+        eprintln!(
+            "[{} j{jobs}] note: per-step training logs are disabled when \
+             more than one worker runs; per-cell summaries only",
+            req.label
+        );
+    }
+
+    let queue = Mutex::new(QueueState {
+        state: vec![ItemState::Pending; req.items.len()],
+        inflight: vec![0; req.members.len()],
+        stop: false,
+    });
+    let available = Condvar::new();
+    let (tx, rx) = mpsc::channel::<Msg>();
+
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    let mut setup_errs: Vec<(String, anyhow::Error)> = Vec::new();
+    let mut store_err: Option<anyhow::Error> = None;
+    let mut halt_err: Option<anyhow::Error> = None;
+    let mut worker_stats: Vec<WorkerStats> = Vec::new();
+    let mut fresh = 0usize;
+
+    std::thread::scope(|scope| {
+        for w in 0..jobs {
+            let tx = tx.clone();
+            let queue = &queue;
+            let available = &available;
+            let make_worker = &make_worker;
+            scope.spawn(move || {
+                // Per-worker backend (PJRT client + executable cache in
+                // production); built on this thread, never shared.
+                let mut runner = match make_worker(w) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // don't stop the pool: the queue drains on the
+                        // workers that did initialize; the run only
+                        // fails if cells end up unclaimed
+                        let _ = tx.send(Msg::SetupErr {
+                            model: String::new(),
+                            err: e.context(format!("worker {w} setup")),
+                        });
+                        return;
+                    }
+                };
+                let mut failed: HashSet<&str> = HashSet::new();
+                let mut cells = 0usize;
+                loop {
+                    // Claim the next runnable item under the queue lock:
+                    // first Pending item whose member has cap headroom
+                    // and whose model this worker can compile —
+                    // preferring one the worker already holds compiled
+                    // (claim order never affects results, only compiles).
+                    let claimed: Option<usize> = {
+                        let mut q = queue.lock().unwrap();
+                        loop {
+                            if q.stop {
+                                break None;
+                            }
+                            let mut cached: Option<usize> = None;
+                            let mut cold: Option<usize> = None;
+                            let mut maybe_later = false;
+                            for (i, st) in q.state.iter().enumerate() {
+                                if *st == ItemState::Done {
+                                    continue;
+                                }
+                                let it = &req.items[i];
+                                let m = &req.members[it.member];
+                                if failed.contains(m.fingerprint.as_str()) {
+                                    continue;
+                                }
+                                if *st == ItemState::InFlight {
+                                    // another worker's setup failure may
+                                    // hand this back — park, don't exit
+                                    maybe_later = true;
+                                    continue;
+                                }
+                                if q.inflight[it.member] >= m.cap.max(1) {
+                                    maybe_later = true;
+                                    continue;
+                                }
+                                if runner.has_cached(&m.fingerprint) {
+                                    cached = Some(i);
+                                    break;
+                                }
+                                if cold.is_none() {
+                                    cold = Some(i);
+                                }
+                            }
+                            match cached.or(cold) {
+                                Some(i) => {
+                                    q.state[i] = ItemState::InFlight;
+                                    q.inflight[req.items[i].member] += 1;
+                                    break Some(i);
+                                }
+                                // claimable-for-me items exist but are at
+                                // cap or in flight: wait for a transition
+                                None if maybe_later => {
+                                    q = available.wait(q).unwrap();
+                                }
+                                // nothing left this worker could ever
+                                // run (done, or its models failed here)
+                                None => break None,
+                            }
+                        }
+                    };
+                    let Some(i) = claimed else { break };
+                    let it = &req.items[i];
+                    let m = &req.members[it.member];
+                    let mut guard = ClaimGuard {
+                        queue,
+                        available,
+                        item: i,
+                        member: it.member,
+                        armed: true,
+                    };
+                    let res = runner.run_cell(
+                        m,
+                        &it.cell,
+                        it.cell_index,
+                        per_step_logs,
+                    );
+                    guard.armed = false; // no panic: arms settle the claim
+                    match res {
+                        Ok(out) => {
+                            {
+                                let mut q = queue.lock().unwrap();
+                                q.state[i] = ItemState::Done;
+                                q.inflight[it.member] -= 1;
+                            }
+                            available.notify_all();
+                            cells += 1;
+                            if tx
+                                .send(Msg::Done { item: i, out: Box::new(out) })
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Err(CellError::Setup(err)) => {
+                            // this worker cannot run this member's model:
+                            // hand the item back and skip the model
+                            failed.insert(m.fingerprint.as_str());
+                            {
+                                let mut q = queue.lock().unwrap();
+                                q.state[i] = ItemState::Pending;
+                                q.inflight[it.member] -= 1;
+                            }
+                            available.notify_all();
+                            let _ = tx.send(Msg::SetupErr {
+                                model: m.model.clone(),
+                                err,
+                            });
+                        }
+                        Err(CellError::Run(err)) => {
+                            {
+                                let mut q = queue.lock().unwrap();
+                                q.state[i] = ItemState::Done;
+                                q.inflight[it.member] -= 1;
+                                q.stop = true;
+                            }
+                            available.notify_all();
+                            let _ = tx.send(Msg::RunErr { item: i, err });
+                        }
+                    }
+                }
+                let (compiles, compile_seconds) = runner.compile_stats();
+                let _ = tx.send(Msg::WorkerExit {
+                    stats: WorkerStats {
+                        worker: w,
+                        compiles,
+                        compile_seconds,
+                        cells,
+                    },
+                });
+            });
+        }
+        drop(tx); // the collector exits once every worker hangs up
+
+        // Collector: the only thread that touches slots and stores.
+        for msg in rx {
+            match msg {
+                Msg::Done { item, out } => {
+                    let it = &req.items[item];
+                    let m = &req.members[it.member];
+                    if req.verbose {
+                        let who = if m.name.is_empty() {
+                            m.model.clone()
+                        } else {
+                            format!("{}:{}", m.name, m.model)
+                        };
+                        eprintln!(
+                            "[{} j{jobs}] {who} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
+                            req.label,
+                            out.schedule,
+                            out.q_max,
+                            out.trial,
+                            out.metric,
+                            out.gbitops
+                        );
+                    }
+                    if store_err.is_none() && halt_err.is_none() {
+                        if let Some(st) = stores[it.member].as_mut() {
+                            if let Err(e) = st.record(it.cell_index, &out) {
+                                // persistence failure is fatal: stop
+                                // claiming new cells, drain, and report
+                                queue.lock().unwrap().stop = true;
+                                available.notify_all();
+                                store_err = Some(e);
+                            }
+                        }
+                        if store_err.is_none() {
+                            fresh += 1;
+                            let halted = match req.halt_after_cells {
+                                Some(n) => {
+                                    if n > 0 && fresh >= n {
+                                        Some(anyhow!(
+                                            "halted after {fresh} freshly \
+                                             computed cell(s) \
+                                             (halt_after_cells={n} crash \
+                                             injection)"
+                                        ))
+                                    } else {
+                                        None
+                                    }
+                                }
+                                None => super::crash_injection_point().err(),
+                            };
+                            if let Some(e) = halted {
+                                queue.lock().unwrap().stop = true;
+                                available.notify_all();
+                                halt_err = Some(e);
+                            }
+                        }
+                    }
+                    slots[it.member][it.slot] = Some(*out);
+                }
+                Msg::RunErr { item, err } => {
+                    let is_first =
+                        first_err.as_ref().map_or(true, |(i, _)| item < *i);
+                    if is_first {
+                        first_err = Some((item, err));
+                    }
+                }
+                Msg::SetupErr { model, err } => {
+                    setup_errs.push((model, err));
+                }
+                Msg::WorkerExit { stats } => worker_stats.push(stats),
+            }
+        }
+    });
+
+    worker_stats.sort_by_key(|s| s.worker);
+    let done = req
+        .items
+        .iter()
+        .filter(|it| slots[it.member][it.slot].is_some())
+        .count();
+    // a real cell failure always wins (reported at its true identity)
+    if let Some((i, e)) = first_err {
+        let it = &req.items[i];
+        let m = &req.members[it.member];
+        let who = if m.name.is_empty() {
+            m.model.clone()
+        } else {
+            m.name.clone()
+        };
+        return Err(e.context(format!(
+            "{}: cell {} of '{who}' failed ({done}/{} complete)",
+            req.label,
+            it.cell_index,
+            req.items.len()
+        )));
+    }
+    if let Some(e) = store_err {
+        return Err(e.context("persisting cell artifact"));
+    }
+    if let Some(e) = halt_err {
+        return Err(e);
+    }
+    if done != req.items.len() {
+        // cells went unclaimed — every worker that tried their model
+        // failed to compile it (or died on setup). Prefer a compile
+        // error that names a model over a bare worker-init failure: the
+        // init error may be an unrelated worker, while a named compile
+        // failure is what actually left cells unclaimed.
+        let e = match setup_errs.iter().position(|(m, _)| !m.is_empty()) {
+            Some(i) => {
+                let (model, e) = setup_errs.swap_remove(i);
+                e.context(format!("compiling model '{model}'"))
+            }
+            None => setup_errs
+                .into_iter()
+                .next()
+                .map(|(_, e)| e)
+                .unwrap_or_else(|| anyhow!("worker(s) exited early")),
+        };
+        return Err(e.context(format!(
+            "{}: {} of {} cells unclaimed (no worker could run them)",
+            req.label,
+            req.items.len() - done,
+            req.items.len()
+        )));
+    }
+    if !setup_errs.is_empty() {
+        // all cells ran on the surviving workers — degraded but complete
+        let (model, e) = &setup_errs[0];
+        let what = if model.is_empty() {
+            "a worker failed to initialize".to_string()
+        } else {
+            format!("a worker could not compile model '{model}'")
+        };
+        eprintln!(
+            "[{}] note: {what} ({e:#}); all cells completed on the \
+             remaining workers",
+            req.label
+        );
+    }
+    Ok(ExecStats { jobs, workers: worker_stats })
+}
+
+/// Production [`CellRunner`]: one PJRT client plus an LRU cache of
+/// compiled entry-point sets keyed by model fingerprint. Compilation is
+/// the dominant fixed cost per worker (DESIGN-perf §1), so the cache is
+/// what makes cross-member scheduling cheap: claiming a cell of a member
+/// whose model is already cached costs zero recompiles.
+pub struct PjrtCellRunner<'a> {
+    rt: Runtime,
+    /// Pre-validated specs shared by every worker, keyed by model name.
+    specs: &'a HashMap<String, ModelSpec>,
+    /// LRU order: most recently used last.
+    cache: Vec<(String, LoadedModel)>,
+    cache_cap: usize,
+    compiles: usize,
+    compile_seconds: f64,
+}
+
+impl<'a> PjrtCellRunner<'a> {
+    pub fn new(
+        specs: &'a HashMap<String, ModelSpec>,
+        cache_cap: usize,
+    ) -> Result<Self> {
+        Ok(PjrtCellRunner {
+            rt: Runtime::cpu()?,
+            specs,
+            cache: Vec::new(),
+            cache_cap: cache_cap.max(1),
+            compiles: 0,
+            compile_seconds: 0.0,
+        })
+    }
+
+    /// Cache lookup, compiling (and evicting least-recently-used) on miss.
+    fn model_for(&mut self, member: &ExecMember) -> Result<&LoadedModel> {
+        if let Some(pos) = self
+            .cache
+            .iter()
+            .position(|(fp, _)| fp == &member.fingerprint)
+        {
+            let entry = self.cache.remove(pos);
+            self.cache.push(entry);
+        } else {
+            let spec = self.specs.get(&member.model).with_context(|| {
+                format!("no shared spec for model '{}'", member.model)
+            })?;
+            let t0 = Instant::now();
+            let model = self.rt.load_model(spec)?;
+            self.compiles += 1;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            if self.cache.len() >= self.cache_cap {
+                self.cache.remove(0);
+            }
+            self.cache.push((member.fingerprint.clone(), model));
+        }
+        Ok(&self.cache.last().unwrap().1)
+    }
+}
+
+impl CellRunner for PjrtCellRunner<'_> {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        _cell_index: usize,
+        per_step_logs: bool,
+    ) -> std::result::Result<RunOutcome, CellError> {
+        let model = match self.model_for(member) {
+            Ok(m) => m,
+            Err(e) => return Err(CellError::Setup(e)),
+        };
+        run_one(
+            model,
+            &member.model,
+            &cell.schedule,
+            cell.q_max,
+            cell.trial,
+            member.steps,
+            member.cycles,
+            member.eval_every,
+            per_step_logs,
+        )
+        .map_err(CellError::Run)
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.compiles, self.compile_seconds)
+    }
+
+    fn has_cached(&self, fingerprint: &str) -> bool {
+        self.cache.iter().any(|(fp, _)| fp == fingerprint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::group_of;
+    use std::sync::Arc;
+
+    fn member(name: &str, fp: &str, cap: usize) -> ExecMember {
+        ExecMember {
+            name: name.into(),
+            model: format!("model-{fp}"),
+            fingerprint: fp.into(),
+            steps: 8,
+            cycles: 8,
+            eval_every: 0,
+            cap,
+        }
+    }
+
+    fn items_for(members: &[ExecMember], cells_each: usize) -> Vec<ExecItem> {
+        let mut items = Vec::new();
+        for (mi, _) in members.iter().enumerate() {
+            for c in 0..cells_each {
+                items.push(ExecItem {
+                    member: mi,
+                    cell_index: c,
+                    slot: c,
+                    cell: SweepCell {
+                        schedule: "CR".into(),
+                        q_max: 8.0,
+                        trial: c,
+                    },
+                });
+            }
+        }
+        items
+    }
+
+    fn fab(member: &ExecMember, cell: &SweepCell, index: usize) -> RunOutcome {
+        RunOutcome {
+            model: member.model.clone(),
+            schedule: cell.schedule.clone(),
+            group: group_of(&cell.schedule).label().into(),
+            q_max: cell.q_max,
+            trial: cell.trial,
+            gbitops: 1.0 + index as f64,
+            metric: 0.5 + index as f64 * 0.125,
+            eval_loss: 0.25,
+            steps: member.steps,
+            exec_seconds: 0.01,
+            history: crate::metrics::History::default(),
+        }
+    }
+
+    /// Fabricated runner: optional per-fingerprint compile failures,
+    /// optional per-fingerprint concurrency gauge, simulated compile
+    /// cache.
+    struct FabRunner {
+        fail: HashSet<String>,
+        compiled: Vec<String>,
+        compiles: usize,
+        fail_cell: Option<(usize, usize)>, // (member, cell_index) to fail
+        gauge: Option<Arc<Gauge>>,
+        sleep_ms: u64,
+    }
+
+    /// Concurrency high-water mark per fingerprint (members and
+    /// fingerprints are 1:1 in these tests).
+    struct Gauge {
+        inner: Mutex<std::collections::HashMap<String, (usize, usize)>>,
+    }
+
+    impl Gauge {
+        fn new() -> Gauge {
+            Gauge { inner: Mutex::new(std::collections::HashMap::new()) }
+        }
+
+        fn enter(&self, fp: &str) {
+            let mut g = self.inner.lock().unwrap();
+            let e = g.entry(fp.to_string()).or_insert((0, 0));
+            e.0 += 1;
+            e.1 = e.1.max(e.0);
+        }
+
+        fn exit(&self, fp: &str) {
+            let mut g = self.inner.lock().unwrap();
+            g.get_mut(fp).unwrap().0 -= 1;
+        }
+
+        fn high_water(&self, fp: &str) -> usize {
+            self.inner.lock().unwrap().get(fp).map_or(0, |e| e.1)
+        }
+    }
+
+    impl FabRunner {
+        fn plain() -> FabRunner {
+            FabRunner {
+                fail: HashSet::new(),
+                compiled: Vec::new(),
+                compiles: 0,
+                fail_cell: None,
+                gauge: None,
+                sleep_ms: 0,
+            }
+        }
+    }
+
+    impl CellRunner for FabRunner {
+        fn run_cell(
+            &mut self,
+            member: &ExecMember,
+            cell: &SweepCell,
+            cell_index: usize,
+            _per_step_logs: bool,
+        ) -> std::result::Result<RunOutcome, CellError> {
+            if self.fail.contains(&member.fingerprint) {
+                return Err(CellError::Setup(anyhow!(
+                    "injected compile failure for {}",
+                    member.fingerprint
+                )));
+            }
+            if !self.compiled.contains(&member.fingerprint) {
+                self.compiled.push(member.fingerprint.clone());
+                self.compiles += 1;
+            }
+            if let Some(g) = &self.gauge {
+                g.enter(&member.fingerprint);
+            }
+            if self.sleep_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    self.sleep_ms,
+                ));
+            }
+            if let Some(g) = &self.gauge {
+                g.exit(&member.fingerprint);
+            }
+            if self.fail_cell == Some((0, cell_index)) {
+                return Err(CellError::Run(anyhow!("injected cell failure")));
+            }
+            Ok(fab(member, cell, cell_index))
+        }
+
+        fn compile_stats(&self) -> (usize, f64) {
+            (self.compiles, 0.0)
+        }
+
+        fn has_cached(&self, fingerprint: &str) -> bool {
+            self.compiled.iter().any(|f| f == fingerprint)
+        }
+    }
+
+    fn run(
+        members: &[ExecMember],
+        items: &[ExecItem],
+        jobs: usize,
+        halt: Option<usize>,
+        make: impl Fn(usize) -> Result<FabRunner> + Sync,
+    ) -> (Result<ExecStats>, Vec<Vec<Option<RunOutcome>>>) {
+        let req = ExecRequest {
+            label: "test".into(),
+            members,
+            items,
+            jobs,
+            verbose: false,
+            halt_after_cells: halt,
+        };
+        let mut stores: Vec<Option<&mut RunStore>> =
+            members.iter().map(|_| None).collect();
+        let cells = items
+            .iter()
+            .fold(vec![0usize; members.len()], |mut acc, it| {
+                acc[it.member] = acc[it.member].max(it.slot + 1);
+                acc
+            });
+        let mut slots: Vec<Vec<Option<RunOutcome>>> =
+            cells.into_iter().map(|n| vec![None; n]).collect();
+        let res = run_items(&req, &mut stores, &mut slots, make);
+        (res, slots)
+    }
+
+    #[test]
+    fn pool_completes_all_items_across_members() {
+        let members = [member("a", "fpA", 4), member("b", "fpB", 4)];
+        let items = items_for(&members, 3);
+        let (res, slots) =
+            run(&members, &items, 3, None, |_| Ok(FabRunner::plain()));
+        let stats = res.unwrap();
+        assert!(stats.jobs <= 3);
+        assert!(slots.iter().all(|s| s.iter().all(|o| o.is_some())));
+        // every worker compiled each fingerprint it touched at most once
+        for w in &stats.workers {
+            assert!(w.compiles <= 2, "{w:?}");
+        }
+        assert_eq!(
+            stats.workers.iter().map(|w| w.cells).sum::<usize>(),
+            items.len()
+        );
+        // outcomes landed in the right member/slot (index-dependent fab)
+        for (mi, m) in members.iter().enumerate() {
+            for (ci, out) in slots[mi].iter().enumerate() {
+                let out = out.as_ref().unwrap();
+                assert_eq!(out.model, m.model);
+                assert_eq!(out.metric, 0.5 + ci as f64 * 0.125);
+            }
+        }
+    }
+
+    #[test]
+    fn compile_failure_keeps_worker_alive_for_other_members() {
+        // worker 0 cannot compile fpA; worker 1 can compile everything —
+        // the pool still completes, and worker 0 contributed fpB cells
+        let members = [member("a", "fpA", 4), member("b", "fpB", 4)];
+        let items = items_for(&members, 4);
+        let (res, slots) = run(&members, &items, 2, None, |w| {
+            let mut r = FabRunner::plain();
+            if w == 0 {
+                r.fail.insert("fpA".into());
+            }
+            r.sleep_ms = 1; // overlap so worker 0 gets claims
+            Ok(r)
+        });
+        let stats = res.unwrap();
+        assert!(slots.iter().all(|s| s.iter().all(|o| o.is_some())));
+        let w0 = stats.workers.iter().find(|w| w.worker == 0).unwrap();
+        // worker 0 never compiled fpA (its one attempt failed, uncounted)
+        assert!(w0.compiles <= 1, "{w0:?}");
+    }
+
+    #[test]
+    fn unclaimed_cells_fail_with_the_compile_error() {
+        // no worker can compile fpA: member a's cells are unclaimed and
+        // the run fails with the compile error; member b still completed
+        let members = [member("a", "fpA", 4), member("b", "fpB", 4)];
+        let items = items_for(&members, 2);
+        let (res, slots) = run(&members, &items, 2, None, |_| {
+            let mut r = FabRunner::plain();
+            r.fail.insert("fpA".into());
+            Ok(r)
+        });
+        let err = res.unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unclaimed"), "{msg}");
+        assert!(msg.contains("injected compile failure"), "{msg}");
+        assert!(slots[1].iter().all(|o| o.is_some()), "member b must run");
+        assert!(slots[0].iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn worker_setup_failure_is_nonfatal_when_pool_survives() {
+        let members = [member("a", "fpA", 4)];
+        let items = items_for(&members, 3);
+        let (res, slots) = run(&members, &items, 2, None, |w| {
+            if w == 0 {
+                anyhow::bail!("injected worker init failure");
+            }
+            Ok(FabRunner::plain())
+        });
+        res.unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+    }
+
+    #[test]
+    fn cell_failure_aborts_the_whole_run() {
+        let members = [member("a", "fpA", 4)];
+        let items = items_for(&members, 4);
+        let (res, _) = run(&members, &items, 2, None, |_| {
+            let mut r = FabRunner::plain();
+            r.fail_cell = Some((0, 1));
+            Ok(r)
+        });
+        let err = res.unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected cell failure"), "{msg}");
+        assert!(msg.contains("cell 1"), "{msg}");
+    }
+
+    #[test]
+    fn injected_halt_stops_after_n_fresh_cells() {
+        let members = [member("a", "fpA", 4)];
+        let items = items_for(&members, 5);
+        let (res, slots) =
+            run(&members, &items, 1, Some(2), |_| Ok(FabRunner::plain()));
+        let err = res.unwrap_err();
+        assert!(format!("{err:#}").contains("halted after 2"), "{err:#}");
+        // at least the halted-on cells completed (the worker may have
+        // computed more before observing the stop flag — the *recorded*
+        // count is what the halt bounds exactly, asserted in
+        // tests/global_sched.rs against a real store)
+        let done = slots[0].iter().filter(|o| o.is_some()).count();
+        assert!((2..=5).contains(&done), "{done}");
+    }
+
+    #[test]
+    fn per_member_cap_bounds_inflight_cells() {
+        // member a has cap 1: even with 4 workers, its cells never
+        // overlap; member b (cap 4) soaks up the rest of the pool
+        let members = [member("a", "fpA", 1), member("b", "fpB", 4)];
+        let items = items_for(&members, 6);
+        let gauge = Arc::new(Gauge::new());
+        let (res, slots) = run(&members, &items, 4, None, |_| {
+            let mut r = FabRunner::plain();
+            r.gauge = Some(gauge.clone());
+            r.sleep_ms = 2;
+            Ok(r)
+        });
+        res.unwrap();
+        assert!(slots.iter().all(|s| s.iter().all(|o| o.is_some())));
+        assert!(
+            gauge.high_water("fpA") <= 1,
+            "cap-1 member overlapped: {}",
+            gauge.high_water("fpA")
+        );
+        assert!(gauge.high_water("fpB") <= 4);
+    }
+}

@@ -11,21 +11,26 @@
 //! Execution model: plan → execute → merge. [`plan::SweepPlan`] flattens
 //! the spec into an ordered, content-hashed cell list (schedule × q_max ×
 //! trial) and assigns this process its shard (`--shard I/N`, round-robin
-//! by canonical index). The executor runs the owned cells — serially on
-//! one `Runtime` when `jobs == 1`, or over a work-queue thread pool (PJRT
-//! handles are not Sync, so each worker builds its own client) — with
+//! by canonical index). Execution goes through the shared work-queue
+//! executor in [`exec`]: cells become [`exec::ExecItem`]s and a pool of
+//! `jobs` workers (each owning a PJRT client plus an LRU cache of
+//! compiled executables — PJRT handles are not Sync) claims them, with
 //! results funneled into index-ordered slots, so output is byte-identical
-//! to serial mode (every cell is a fully seeded, independent run). When a
-//! run directory is given, each completed cell is persisted through
-//! [`store::RunStore`] and cells with valid artifacts are skipped on
-//! re-run, which makes crash/preempt resume free; `cpt merge` (backed by
-//! [`store::merge_run_dirs`]) validates and recombines shard directories
-//! into the single-process result. One level above sweeps,
-//! [`campaign`] orchestrates several named sweeps as one
-//! content-addressed tree (`cpt campaign` / `cpt status` / `cpt gc`).
-//! See rust/DESIGN-sharding.md and rust/DESIGN-perf.md.
+//! regardless of worker count (every cell is a fully seeded, independent
+//! run; `jobs == 1` is just a one-worker pool). When a run directory is
+//! given, each completed cell is persisted through [`store::RunStore`]
+//! (all store writes on the collector thread) and cells with valid
+//! artifacts are skipped on re-run, which makes crash/preempt resume
+//! free; `cpt merge` (backed by [`store::merge_run_dirs`]) validates and
+//! recombines shard directories into the single-process result. One
+//! level above sweeps, [`campaign`] orchestrates several named sweeps as
+//! one content-addressed tree (`cpt campaign` / `cpt status` / `cpt
+//! gc`); its global scheduler feeds every member's cells to one shared
+//! pool through the same executor. See rust/DESIGN-sharding.md and
+//! rust/DESIGN-perf.md.
 
 pub mod campaign;
+pub mod exec;
 pub mod plan;
 pub mod recipes;
 pub mod report;
@@ -33,6 +38,7 @@ pub mod store;
 
 pub use campaign::{
     merge_campaign_roots, run_campaign, CampaignPlan, CampaignSpec,
+    SchedulerKind,
 };
 pub use plan::{PlannedCell, ShardId, SweepPlan};
 pub use recipes::{dataset_for, recipe, report_metric, Recipe};
@@ -41,15 +47,14 @@ pub use store::{compact_run_dir, merge_run_dirs, read_manifest, RunStore};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::mean_std;
 use crate::metrics::History;
-use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::runtime::{LoadedModel, Manifest};
 use crate::schedule::{group_of, suite, Schedule};
 use crate::trainer::{TrainConfig, Trainer};
 
@@ -150,12 +155,14 @@ impl SweepSpec {
 }
 
 /// Crash-injection point for the resume tests: with CPT_HALT_AFTER_CELLS=N
-/// set, the serial executor aborts the process' sweep after recording N
-/// freshly computed cells (a deterministic stand-in for `kill` in
-/// scripts/check.sh's campaign gate — every durability property it
+/// set, the executor's collector aborts the run after recording N freshly
+/// computed cells (a deterministic stand-in for `kill` in
+/// scripts/check.sh's campaign gates — every durability property it
 /// exercises is the same, because artifacts/manifests are already on disk
-/// when the abort fires). Counted process-wide so a campaign halts after
-/// N cells across members, not per member.
+/// when the abort fires). Counted process-wide so a sequential campaign
+/// halts after N cells across members, not per member. (In-process tests
+/// use `exec::ExecRequest::halt_after_cells` instead, which counts
+/// per-run and never touches env.)
 fn crash_injection_point() -> Result<()> {
     static FRESH_CELLS: AtomicUsize = AtomicUsize::new(0);
     if let Ok(v) = std::env::var("CPT_HALT_AFTER_CELLS") {
@@ -341,18 +348,22 @@ pub fn run_sweep_timed(
             plan.shard
         );
     }
+    // Fingerprint the compiled model when a store needs it (resume/merge
+    // must detect a regenerated artifacts/ tree the spec hash cannot
+    // see), honoring a caller-supplied cache to avoid re-reading the HLO
+    // files. The executor reuses the same fingerprint as its executable-
+    // cache key; a store-less sweep falls back to a name-derived key
+    // (within one process, model name <-> spec is fixed by the manifest).
+    let fingerprint = match (&spec.model_fingerprint, &spec.run_dir) {
+        (Some(fp), _) => fp.clone(),
+        (None, Some(_)) => {
+            store::model_fingerprint(manifest.model(&spec.model)?)?
+        }
+        (None, None) => format!("model:{}", spec.model),
+    };
     let mut store = match &spec.run_dir {
         Some(dir) => {
-            // fingerprint the compiled model so resume/merge can detect a
-            // regenerated artifacts/ tree the spec hash cannot see; honor
-            // a caller-supplied cache to avoid re-reading the HLO files
-            let fp = match &spec.model_fingerprint {
-                Some(fp) => fp.clone(),
-                None => {
-                    store::model_fingerprint(manifest.model(&spec.model)?)?
-                }
-            };
-            Some(RunStore::open(dir, &plan, &fp, spec.resume)?)
+            Some(RunStore::open(dir, &plan, &fingerprint, spec.resume)?)
         }
         None => None,
     };
@@ -382,28 +393,45 @@ pub fn run_sweep_timed(
     }
     let jobs = spec.jobs.max(1).min(todo.len().max(1));
     if !todo.is_empty() {
-        if jobs <= 1 {
-            run_todo_serial(
-                manifest,
-                spec,
-                &plan,
-                &owned,
-                &todo,
-                &mut slots,
-                store.as_mut(),
-            )?;
-        } else {
-            run_todo_parallel(
-                manifest,
-                spec,
-                &plan,
-                &owned,
-                &todo,
-                &mut slots,
-                store.as_mut(),
-                jobs,
-            )?;
-        }
+        let model_spec = manifest.model(&spec.model)?.clone();
+        model_spec.validate()?; // fail fast, before spawning any workers
+        let member = exec::ExecMember {
+            name: String::new(),
+            model: spec.model.clone(),
+            fingerprint: fingerprint.clone(),
+            steps: plan.steps,
+            cycles: plan.cycles,
+            eval_every: spec.eval_every,
+            cap: jobs,
+        };
+        let items: Vec<exec::ExecItem> = todo
+            .iter()
+            .map(|&pos| exec::ExecItem {
+                member: 0,
+                cell_index: owned[pos].index,
+                slot: pos,
+                cell: owned[pos].cell.clone(),
+            })
+            .collect();
+        let mut specs = HashMap::new();
+        specs.insert(spec.model.clone(), model_spec);
+        let members = [member];
+        let req = exec::ExecRequest {
+            label: format!("sweep {}", spec.model),
+            members: &members,
+            items: &items,
+            jobs,
+            verbose: spec.verbose,
+            halt_after_cells: None,
+        };
+        let mut stores = [store.as_mut()];
+        let mut slot_groups = [std::mem::take(&mut slots)];
+        let cache_cap = exec::exec_cache_cap();
+        let res = exec::run_items(&req, &mut stores, &mut slot_groups, |_| {
+            exec::PjrtCellRunner::new(&specs, cache_cap)
+        });
+        slots = std::mem::take(&mut slot_groups[0]);
+        res?;
     }
     let timing = SweepTiming {
         wall_seconds: t0.elapsed().as_secs_f64(),
@@ -412,230 +440,6 @@ pub fn run_sweep_timed(
         resumed,
     };
     Ok((slots.into_iter().flatten().collect(), timing))
-}
-
-/// Serial executor: builds one PJRT client, loads the model once, and
-/// reuses the compiled executables across every cell (compilation is the
-/// dominant fixed cost on this testbed). `todo` holds positions into
-/// `owned`/`slots` for the cells that still need computing.
-fn run_todo_serial(
-    manifest: &Manifest,
-    spec: &SweepSpec,
-    plan: &SweepPlan,
-    owned: &[PlannedCell],
-    todo: &[usize],
-    slots: &mut [Option<RunOutcome>],
-    mut store: Option<&mut RunStore>,
-) -> Result<()> {
-    let rt = Runtime::cpu()?;
-    let model = rt.load_model(manifest.model(&spec.model)?)?;
-    for &pos in todo {
-        let pc = &owned[pos];
-        let out = run_one(
-            &model,
-            &spec.model,
-            &pc.cell.schedule,
-            pc.cell.q_max,
-            pc.cell.trial,
-            plan.steps,
-            plan.cycles,
-            spec.eval_every,
-            spec.verbose,
-        )?;
-        if spec.verbose {
-            eprintln!(
-                "[sweep] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
-                spec.model,
-                pc.cell.schedule,
-                pc.cell.q_max,
-                pc.cell.trial,
-                out.metric,
-                out.gbitops
-            );
-        }
-        if let Some(st) = store.as_mut() {
-            st.record(pc.index, &out)?;
-        }
-        slots[pos] = Some(out);
-        crash_injection_point()?;
-    }
-    Ok(())
-}
-
-/// Parallel work-queue executor. Workers pull todo positions from a
-/// shared atomic cursor; each worker owns a private PJRT client +
-/// compiled model (compiled once, from the shared pre-validated
-/// `ModelSpec`), and sends `(todo index, result)` down a channel. The
-/// collector writes results into position-addressed slots — and records
-/// them in the run store, serializing all artifact writes on one thread —
-/// so the returned order and values match the serial executor exactly.
-/// First error (lowest todo index) wins; remaining workers drain out via
-/// a stop flag.
-#[allow(clippy::too_many_arguments)]
-fn run_todo_parallel(
-    manifest: &Manifest,
-    spec: &SweepSpec,
-    plan: &SweepPlan,
-    owned: &[PlannedCell],
-    todo: &[usize],
-    slots: &mut [Option<RunOutcome>],
-    mut store: Option<&mut RunStore>,
-    jobs: usize,
-) -> Result<()> {
-    let model_spec = manifest.model(&spec.model)?.clone();
-    model_spec.validate()?; // fail fast, before spawning any workers
-
-    if spec.verbose {
-        // workers run with per-step logging off (interleaved multi-cell
-        // step logs would be unreadable); say so instead of silently
-        // dropping the output the user asked for
-        eprintln!(
-            "[sweep j{jobs}] note: per-step training logs are disabled in \
-             parallel mode; per-cell summaries only"
-        );
-    }
-
-    let cursor = AtomicUsize::new(0);
-    let stop = AtomicBool::new(false);
-    let (tx, rx) = mpsc::channel::<(usize, Result<RunOutcome>)>();
-
-    // sentinel index for worker-setup failures — never a real cell, and
-    // non-fatal as long as other workers drain the queue
-    const SETUP_ERR: usize = usize::MAX;
-
-    let mut first_err: Option<(usize, anyhow::Error)> = None;
-    let mut setup_err: Option<anyhow::Error> = None;
-    let mut store_err: Option<anyhow::Error> = None;
-
-    std::thread::scope(|scope| {
-        for _ in 0..jobs {
-            let tx = tx.clone();
-            let cursor = &cursor;
-            let stop = &stop;
-            let model_spec = &model_spec;
-            scope.spawn(move || {
-                // Per-worker PJRT client + compiled entry points (PJRT
-                // handles are not Sync; compilation happens once per
-                // worker, amortized over all cells it claims).
-                let loaded: Result<(Runtime, LoadedModel)> = (|| {
-                    let rt = Runtime::cpu()?;
-                    let model = rt.load_model(model_spec)?;
-                    Ok((rt, model))
-                })();
-                let (_rt, model) = match loaded {
-                    Ok(x) => x,
-                    Err(e) => {
-                        // don't set the stop flag: the queue drains on
-                        // the workers that did initialize; the sweep
-                        // only fails if cells end up unclaimed
-                        let _ = tx.send((
-                            SETUP_ERR,
-                            Err(e.context("parallel sweep worker setup")),
-                        ));
-                        return;
-                    }
-                };
-                loop {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let ti = cursor.fetch_add(1, Ordering::SeqCst);
-                    if ti >= todo.len() {
-                        break;
-                    }
-                    let pc = &owned[todo[ti]];
-                    let res = run_one(
-                        &model,
-                        &spec.model,
-                        &pc.cell.schedule,
-                        pc.cell.q_max,
-                        pc.cell.trial,
-                        plan.steps,
-                        plan.cycles,
-                        spec.eval_every,
-                        false, // workers never write per-step logs
-                    );
-                    if res.is_err() {
-                        stop.store(true, Ordering::SeqCst);
-                    }
-                    if tx.send((ti, res)).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx); // collector exits once all workers hang up
-
-        for (ti, res) in rx {
-            match res {
-                Ok(out) => {
-                    let pos = todo[ti];
-                    let pc = &owned[pos];
-                    if spec.verbose {
-                        eprintln!(
-                            "[sweep j{jobs}] {} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
-                            spec.model,
-                            out.schedule,
-                            out.q_max,
-                            out.trial,
-                            out.metric,
-                            out.gbitops
-                        );
-                    }
-                    if store_err.is_none() {
-                        if let Some(st) = store.as_mut() {
-                            if let Err(e) = st.record(pc.index, &out) {
-                                // persistence failure is fatal: stop
-                                // claiming new cells, drain, and report
-                                stop.store(true, Ordering::SeqCst);
-                                store_err = Some(e);
-                            }
-                        }
-                    }
-                    slots[pos] = Some(out);
-                }
-                Err(e) if ti == SETUP_ERR => {
-                    if setup_err.is_none() {
-                        setup_err = Some(e);
-                    }
-                }
-                Err(e) => {
-                    let is_first =
-                        first_err.as_ref().map_or(true, |(i, _)| ti < *i);
-                    if is_first {
-                        first_err = Some((ti, e));
-                    }
-                }
-            }
-        }
-    });
-
-    let done = todo.iter().filter(|&&p| slots[p].is_some()).count();
-    // a real cell failure always wins (reported at its true index)
-    if let Some((ti, e)) = first_err {
-        return Err(e.context(format!(
-            "parallel sweep failed at cell {} ({done}/{} complete)",
-            owned[todo[ti]].index,
-            todo.len()
-        )));
-    }
-    if let Some(e) = store_err {
-        return Err(e.context("persisting sweep cell artifact"));
-    }
-    if done != todo.len() {
-        // cells went unclaimed — only possible if workers died on setup
-        let e = setup_err
-            .unwrap_or_else(|| anyhow::anyhow!("worker(s) exited early"));
-        return Err(e.context(format!(
-            "parallel sweep incomplete: {done}/{} cells ran",
-            todo.len()
-        )));
-    }
-    if let Some(e) = setup_err {
-        // all cells ran on the surviving workers — degraded but complete
-        eprintln!("[sweep] note: a worker failed to initialize ({e:#}); sweep completed on the remaining workers");
-    }
-    Ok(())
 }
 
 /// Aggregate outcomes over trials. Single pass: grouped via a HashMap

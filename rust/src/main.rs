@@ -23,7 +23,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use cpt::coordinator::campaign::{self, CampaignRunOpts, Status};
+use cpt::coordinator::campaign::{
+    self, CampaignRunOpts, SchedulerKind, Status,
+};
 use cpt::coordinator::{self, merge_run_dirs, recipes, AggRow, RunOutcome, ShardId};
 use cpt::prelude::*;
 use cpt::quant::range_test;
@@ -82,12 +84,18 @@ USAGE: cpt <subcommand> [flags]
                                 --resume reopens a run dir and skips
                                 cells with valid artifacts
   campaign --file configs/X.toml [--run-dir ROOT] [--shard I/N]
-           [--jobs N] [--resume] [--csv-dir DIR] [--verbose]
+           [--jobs N] [--scheduler global|sequential] [--resume]
+           [--csv-dir DIR] [--verbose]
                                 run a multi-sweep figure campaign: the
                                 TOML's [[campaign.sweep]] members execute
                                 in canonical (name-sorted) order, one
                                 nested run dir per member under ROOT,
                                 governed by campaign-manifest.json;
+                                the default global scheduler fans every
+                                member's cells over one shared --jobs N
+                                pool (per-worker compiled-model cache;
+                                members may cap themselves with jobs = N;
+                                results byte-identical to sequential);
                                 --shard I/N shards every member the same
                                 way (one root per shard; combine with
                                 `cpt merge ROOT1 ROOT2 ...`); --resume
@@ -120,6 +128,7 @@ USAGE: cpt <subcommand> [flags]
 
 ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
      CPT_JOBS (default sweep worker count, default: 1),
+     CPT_EXEC_CACHE (compiled models kept per worker, default: 4),
      CPT_RUN_DIR (bench resume base dir — artifacts land under
      <dir>/<model>-<spec_hash>-<model_fingerprint>)"
     );
@@ -391,6 +400,7 @@ fn report_campaign(
 fn cmd_campaign(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
+        "scheduler",
     ])?;
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
@@ -408,31 +418,41 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         Some(s) => ShardId::parse(s)?,
         None => ShardId::single(),
     };
+    let scheduler = match cli.flag("scheduler") {
+        Some(s) => SchedulerKind::parse(s)?,
+        None => SchedulerKind::Global,
+    };
     let opts = CampaignRunOpts {
         root: root.clone(),
         shard,
         jobs: cli.usize_or("jobs", cpt::default_jobs())?,
         resume: cli.bool("resume"),
         verbose: cli.bool("verbose"),
+        scheduler,
     };
     let manifest = Manifest::load(artifacts_dir())?;
-    let results = run_campaign(&manifest, &plan, &opts)?;
+    let result = run_campaign(&manifest, &plan, &opts)?;
 
-    let (mut cells, mut resumed, mut wall) = (0usize, 0usize, 0.0f64);
-    for r in &results {
-        cells += r.timing.cells;
-        resumed += r.timing.resumed;
-        wall += r.timing.wall_seconds;
+    for r in &result.members {
         println!(
-            "sweep '{}' ({}): {} cell(s), {} resumed, {:.2}s",
-            r.name, r.model, r.timing.cells, r.timing.resumed,
-            r.timing.wall_seconds
+            "sweep '{}' ({}): {} cell(s), {} resumed",
+            r.name, r.model, r.timing.cells, r.timing.resumed
+        );
+    }
+    if let Some(sc) = &result.scheduler {
+        println!(
+            "global scheduler: {} worker(s), {} compile(s) ({:.2}s compiling)",
+            sc.jobs,
+            sc.total_compiles(),
+            sc.total_compile_seconds()
         );
     }
     println!(
-        "campaign '{}' shard {shard}: {cells} cells ({resumed} resumed) in \
-         {wall:.2}s -> {}",
+        "campaign '{}' shard {shard}: {} cells ({} resumed) in {:.2}s -> {}",
         plan.name,
+        result.total_cells(),
+        result.total_resumed(),
+        result.wall_seconds,
         root.display()
     );
     if shard.count > 1 {
@@ -449,7 +469,8 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         );
         return Ok(());
     }
-    let members: Vec<(String, String, Vec<RunOutcome>)> = results
+    let members: Vec<(String, String, Vec<RunOutcome>)> = result
+        .members
         .into_iter()
         .map(|r| (r.name, r.model, r.outcomes))
         .collect();
@@ -520,6 +541,21 @@ fn cmd_status(cli: &Cli) -> Result<()> {
                 c.remaining(),
                 c.exec_seconds()
             );
+            if let Some(sc) = &c.scheduler {
+                println!(
+                    "  scheduler: {} worker(s), {} compile(s) ({:.2}s \
+                     compiling) in the last global run",
+                    sc.jobs,
+                    sc.total_compiles(),
+                    sc.total_compile_seconds()
+                );
+                for w in &sc.workers {
+                    println!(
+                        "    worker {}: {} cell(s), {} compile(s) ({:.2}s)",
+                        w.worker, w.cells, w.compiles, w.compile_seconds
+                    );
+                }
+            }
         }
     }
     Ok(())

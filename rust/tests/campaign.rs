@@ -18,7 +18,7 @@ fn member(name: &str, schedules: &[&str], steps: usize) -> CampaignMember {
     s.q_maxes = vec![8.0];
     s.trials = 1;
     s.steps = Some(steps);
-    CampaignMember { name: name.into(), spec: s }
+    CampaignMember { name: name.into(), spec: s, jobs: None }
 }
 
 fn two_member_campaign() -> CampaignSpec {

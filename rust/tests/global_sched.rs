@@ -1,0 +1,564 @@
+//! Global campaign scheduler, exercised entirely through fabricated
+//! outcomes (no PJRT / AOT artifacts — the CI `test-unit` tier): the
+//! shared worker pool over all members must persist, resume, and report
+//! byte-for-byte what sequential execution produces, respect per-member
+//! concurrency caps, and survive per-worker compile failures.
+
+mod common;
+
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::anyhow;
+use common::{fab_outcome, tmp_dir};
+use cpt::coordinator::campaign::{
+    self, read_campaign_manifest, run_campaign_global, CampaignMember,
+    CampaignRunOpts, SchedulerKind, Status,
+};
+use cpt::coordinator::exec::{CellError, CellRunner, ExecMember};
+use cpt::coordinator::read_manifest;
+use cpt::prelude::*;
+use cpt::util::propcheck::propcheck;
+
+/// Fabricated worker backend: deterministic outcomes (shared with the
+/// other fabricated tests via `common::fab_outcome`), a simulated
+/// compile cache, optional injected compile failures, and an optional
+/// per-member concurrency gauge.
+struct FabRunner {
+    /// Fingerprints this worker "fails to compile".
+    fail: HashSet<String>,
+    compiled: Vec<String>,
+    compiles: usize,
+    sleep_ms: u64,
+    gauge: Option<Arc<Gauge>>,
+}
+
+impl FabRunner {
+    fn plain() -> FabRunner {
+        FabRunner {
+            fail: HashSet::new(),
+            compiled: Vec::new(),
+            compiles: 0,
+            sleep_ms: 0,
+            gauge: None,
+        }
+    }
+}
+
+/// Concurrency high-water mark per member name.
+struct Gauge {
+    inner: Mutex<HashMap<String, (usize, usize)>>,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { inner: Mutex::new(HashMap::new()) }
+    }
+
+    fn enter(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.max(e.0);
+    }
+
+    fn exit(&self, name: &str) {
+        self.inner.lock().unwrap().get_mut(name).unwrap().0 -= 1;
+    }
+
+    fn high_water(&self, name: &str) -> usize {
+        self.inner.lock().unwrap().get(name).map_or(0, |e| e.1)
+    }
+}
+
+impl CellRunner for FabRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        if self.fail.contains(&member.fingerprint) {
+            return Err(CellError::Setup(anyhow!(
+                "injected compile failure for '{}'",
+                member.model
+            )));
+        }
+        if !self.compiled.contains(&member.fingerprint) {
+            self.compiled.push(member.fingerprint.clone());
+            self.compiles += 1;
+        }
+        if let Some(g) = &self.gauge {
+            g.enter(&member.name);
+        }
+        if self.sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.sleep_ms,
+            ));
+        }
+        if let Some(g) = &self.gauge {
+            g.exit(&member.name);
+        }
+        Ok(fab_outcome(&member.model, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.compiles, 0.0)
+    }
+
+    fn has_cached(&self, fingerprint: &str) -> bool {
+        self.compiled.iter().any(|f| f == fingerprint)
+    }
+}
+
+fn member(
+    name: &str,
+    model: &str,
+    schedules: &[&str],
+    steps: usize,
+) -> CampaignMember {
+    let mut s = SweepSpec::new(model);
+    s.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    s.q_maxes = vec![8.0];
+    s.trials = 1;
+    s.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: s, jobs: None }
+}
+
+/// Two members sharing one model — the executable-cache headline case.
+fn shared_model_campaign() -> CampaignSpec {
+    CampaignSpec {
+        name: "gsched".into(),
+        run_dir: None,
+        members: vec![
+            member("a", "mlp", &["CR", "RR"], 8),
+            member("b", "mlp", &["CR", "STATIC"], 10),
+        ],
+    }
+}
+
+fn fingerprints_for(cspec: &CampaignSpec) -> HashMap<String, String> {
+    cspec
+        .members
+        .iter()
+        .map(|m| (m.spec.model.clone(), format!("fp-{}", m.spec.model)))
+        .collect()
+}
+
+fn opts(root: &Path, jobs: usize, resume: bool) -> CampaignRunOpts {
+    CampaignRunOpts {
+        root: root.to_path_buf(),
+        shard: ShardId::single(),
+        jobs,
+        resume,
+        verbose: false,
+        scheduler: SchedulerKind::Global,
+    }
+}
+
+/// The full fabricated outcome list a sequential run of the member
+/// produces (fabrication is deterministic, so this is the sequential
+/// ground truth).
+fn fab_member_outcomes(m: &CampaignMember) -> Vec<RunOutcome> {
+    let plan = SweepPlan::build(&m.spec).unwrap();
+    plan.cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| fab_outcome(&m.spec.model, c, i))
+        .collect()
+}
+
+/// Write the campaign's per-member stable CSVs + campaign.csv for a list
+/// of (name, outcomes) into `dir`.
+fn write_csvs(dir: &Path, members: &[(String, Vec<RunOutcome>)]) {
+    let mut keyed = Vec::new();
+    for (name, outs) in members {
+        let rows = aggregate(outs);
+        SweepReport::new(name, "metric", true)
+            .write_csv_stable(&rows, dir.join(format!("{name}.csv")))
+            .unwrap();
+        keyed.push((name.clone(), rows));
+    }
+    SweepReport::write_campaign_csv(&keyed, dir.join("campaign.csv")).unwrap();
+}
+
+#[test]
+fn global_scheduler_is_byte_identical_to_sequential_execution() {
+    let tmp = tmp_dir("gsched_equiv");
+    let cspec = shared_model_campaign();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints_for(&cspec);
+
+    // sequential-equivalent execution: the same store/manifest path with
+    // a one-worker pool (fabrication is deterministic, so this equals a
+    // member-by-member sequential run)
+    let seq_root = tmp.join("seq");
+    let seq = run_campaign_global(&plan, &opts(&seq_root, 1, false), &fps, None, |_| {
+        Ok(FabRunner::plain())
+    })
+    .unwrap();
+    // global scheduler: one pool over both members
+    let glob_root = tmp.join("glob");
+    let glob =
+        run_campaign_global(&plan, &opts(&glob_root, 3, false), &fps, None, |_| {
+            let mut r = FabRunner::plain();
+            r.sleep_ms = 1; // force overlap so claims interleave
+            Ok(r)
+        })
+        .unwrap();
+
+    // outcome-level: both match the fabricated sequential ground truth
+    for result in [&seq, &glob] {
+        assert_eq!(result.members.len(), 2);
+        for (m, cm) in result.members.iter().zip(&cspec.members) {
+            assert_eq!(m.name, cm.name);
+            common::assert_outcomes_identical(
+                &fab_member_outcomes(cm),
+                &m.outcomes,
+            );
+        }
+    }
+
+    // CSV-level: per-member CSVs and campaign.csv byte-identical
+    let dir_seq = tmp.join("csv_seq");
+    let dir_glob = tmp.join("csv_glob");
+    let keyed = |r: &cpt::coordinator::campaign::CampaignRunResult| {
+        r.members
+            .iter()
+            .map(|m| (m.name.clone(), m.outcomes.clone()))
+            .collect::<Vec<_>>()
+    };
+    write_csvs(&dir_seq, &keyed(&seq));
+    write_csvs(&dir_glob, &keyed(&glob));
+    for f in ["a.csv", "b.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(dir_seq.join(f)).unwrap(),
+            std::fs::read(dir_glob.join(f)).unwrap(),
+            "{f} differs between sequential and global execution"
+        );
+    }
+
+    // the shared model was compiled at most once per worker, and the
+    // stats were recorded into the campaign manifest for `cpt status`
+    let sc = glob.scheduler.as_ref().expect("global scheduler stats");
+    assert!(sc.jobs <= 3);
+    for w in &sc.workers {
+        assert!(w.compiles <= 1, "worker recompiled a cached model: {w:?}");
+    }
+    let cm = read_campaign_manifest(&glob_root).unwrap();
+    let recorded = cm.scheduler.expect("scheduler stats in manifest");
+    assert_eq!(&recorded, sc);
+    match campaign::status(&glob_root).unwrap() {
+        Status::Campaign(c) => {
+            assert_eq!(c.done(), 4);
+            assert!(c.scheduler.is_some());
+        }
+        _ => panic!("expected campaign status"),
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn global_scheduler_kill_and_resume_is_byte_identical() {
+    let tmp = tmp_dir("gsched_kill");
+    let cspec = shared_model_campaign();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints_for(&cspec);
+    let root = tmp.join("root");
+
+    // kill after 2 freshly recorded cells (injected, not via env — other
+    // tests in this process must not see a global halt counter)
+    let err = run_campaign_global(
+        &plan,
+        &opts(&root, 2, false),
+        &fps,
+        Some(2),
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("halted after"), "{err:#}");
+
+    // exactly the recorded cells are durable; status sees them
+    match campaign::status(&root).unwrap() {
+        Status::Campaign(c) => assert_eq!(c.done(), 2),
+        _ => panic!("expected campaign status"),
+    }
+
+    // resume completes the remainder, reusing both recorded cells
+    let resumed = run_campaign_global(
+        &plan,
+        &opts(&root, 2, true),
+        &fps,
+        None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    assert_eq!(resumed.total_resumed(), 2);
+    assert_eq!(resumed.total_cells(), 4);
+    for (m, cm) in resumed.members.iter().zip(&cspec.members) {
+        common::assert_outcomes_identical(
+            &fab_member_outcomes(cm),
+            &m.outcomes,
+        );
+    }
+
+    // a no-op resume (everything already recorded) must not overwrite
+    // the manifest's scheduler stats with an empty record
+    let recorded = read_campaign_manifest(&root)
+        .unwrap()
+        .scheduler
+        .expect("stats after completing run");
+    let noop = run_campaign_global(
+        &plan,
+        &opts(&root, 2, true),
+        &fps,
+        None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    assert_eq!(noop.total_resumed(), 4);
+    assert_eq!(noop.scheduler.as_ref(), Some(&recorded));
+    assert_eq!(
+        read_campaign_manifest(&root).unwrap().scheduler,
+        Some(recorded),
+        "no-op resume must preserve the recorded pool accounting"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn compile_failure_keeps_worker_alive_for_other_members() {
+    // two models: worker 0 cannot compile cnn_tiny, worker 1 can compile
+    // everything — the campaign still completes
+    let tmp = tmp_dir("gsched_compile_fail");
+    let cspec = CampaignSpec {
+        name: "gs-fail".into(),
+        run_dir: None,
+        members: vec![
+            member("a", "mlp", &["CR", "RR"], 8),
+            member("b", "cnn_tiny", &["CR", "STATIC"], 8),
+        ],
+    };
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints_for(&cspec);
+    let root = tmp.join("root");
+    let result =
+        run_campaign_global(&plan, &opts(&root, 2, false), &fps, None, |w| {
+            let mut r = FabRunner::plain();
+            if w == 0 {
+                r.fail.insert("fp-cnn_tiny".into());
+            }
+            r.sleep_ms = 1;
+            Ok(r)
+        })
+        .unwrap();
+    for (m, cm) in result.members.iter().zip(&cspec.members) {
+        common::assert_outcomes_identical(
+            &fab_member_outcomes(cm),
+            &m.outcomes,
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn unclaimed_member_fails_the_campaign_then_resume_completes_it() {
+    // no worker can compile cnn_tiny: the campaign fails with the
+    // compile error, but the compilable member's cells are durable —
+    // a later resume (with working workers) picks them up
+    let tmp = tmp_dir("gsched_unclaimed");
+    let cspec = CampaignSpec {
+        name: "gs-unclaimed".into(),
+        run_dir: None,
+        members: vec![
+            member("a", "mlp", &["CR", "RR"], 8),
+            member("b", "cnn_tiny", &["CR", "STATIC"], 8),
+        ],
+    };
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints_for(&cspec);
+    let root = tmp.join("root");
+    let err =
+        run_campaign_global(&plan, &opts(&root, 2, false), &fps, None, |_| {
+            let mut r = FabRunner::plain();
+            r.fail.insert("fp-cnn_tiny".into());
+            Ok(r)
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unclaimed"), "{msg}");
+    assert!(msg.contains("injected compile failure"), "{msg}");
+
+    // member a completed and was recorded despite the overall failure
+    let ma = read_manifest(&root.join("a")).unwrap();
+    assert_eq!(ma.done(), 2, "compilable member must have been recorded");
+
+    let resumed =
+        run_campaign_global(&plan, &opts(&root, 2, true), &fps, None, |_| {
+            Ok(FabRunner::plain())
+        })
+        .unwrap();
+    assert_eq!(resumed.total_resumed(), 2);
+    for (m, cm) in resumed.members.iter().zip(&cspec.members) {
+        common::assert_outcomes_identical(
+            &fab_member_outcomes(cm),
+            &m.outcomes,
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn per_member_jobs_cap_is_never_exceeded() {
+    // Over random campaign shapes, pool sizes, and member caps: the
+    // number of a member's cells in flight at once never exceeds
+    // min(member jobs, pool jobs).
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    propcheck(8, |rng| {
+        let case = CASE.fetch_add(1, Ordering::SeqCst);
+        let root = tmp_dir(&format!("gsched_cap_{case}"));
+        let n_members = 1 + rng.below(3) as usize;
+        let jobs = 2 + rng.below(3) as usize;
+        let mut members = Vec::new();
+        for i in 0..n_members {
+            let scheds: Vec<String> = (0..2 + rng.below(3))
+                .map(|k| format!("M{i}S{k}"))
+                .collect();
+            let sched_refs: Vec<&str> =
+                scheds.iter().map(|s| s.as_str()).collect();
+            let mut m = member(&format!("m{i}"), "mlp", &sched_refs, 8);
+            if rng.below(2) == 0 {
+                m.jobs = Some(1 + rng.below(2) as usize);
+            }
+            members.push(m);
+        }
+        let cspec = CampaignSpec {
+            name: "gs-cap".into(),
+            run_dir: None,
+            members,
+        };
+        let plan = CampaignPlan::build(&cspec).unwrap();
+        let fps = fingerprints_for(&cspec);
+        let gauge = Arc::new(Gauge::new());
+        let result = run_campaign_global(
+            &plan,
+            &opts(&root, jobs, false),
+            &fps,
+            None,
+            |_| {
+                let mut r = FabRunner::plain();
+                r.gauge = Some(gauge.clone());
+                r.sleep_ms = 1;
+                Ok(r)
+            },
+        )
+        .unwrap();
+        for cm in &cspec.members {
+            let cap = cm.jobs.unwrap_or(jobs).min(jobs);
+            let seen = gauge.high_water(&cm.name);
+            cpt::prop_assert!(
+                seen <= cap,
+                "member '{}' ran {seen} cells at once (cap {cap})",
+                cm.name
+            );
+        }
+        cpt::prop_assert!(
+            result.total_cells()
+                == result
+                    .members
+                    .iter()
+                    .map(|m| m.outcomes.len())
+                    .sum::<usize>(),
+            "incomplete member outcomes"
+        );
+        std::fs::remove_dir_all(&root).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn store_routing_never_crosses_member_boundaries() {
+    // Over random shapes and shards: each member's run dir records
+    // exactly its own owned cells, and every artifact decodes to the
+    // member's own fabricated outcome (cross-routing cannot pass because
+    // fabricated values depend on the member's schedules and indices).
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    propcheck(10, |rng| {
+        let case = CASE.fetch_add(1, Ordering::SeqCst);
+        let root = tmp_dir(&format!("gsched_route_{case}"));
+        let n_members = 1 + rng.below(3) as usize;
+        let count = 1 + rng.below(3) as usize;
+        let index = 1 + rng.below(count as u32) as usize;
+        let shard = ShardId { index, count };
+        let mut members = Vec::new();
+        for i in 0..n_members {
+            let scheds: Vec<String> = (0..1 + rng.below(4))
+                .map(|k| format!("R{i}S{k}"))
+                .collect();
+            let sched_refs: Vec<&str> =
+                scheds.iter().map(|s| s.as_str()).collect();
+            let mut m =
+                member(&format!("m{i}"), "mlp", &sched_refs, 8 + i);
+            m.spec.trials = 1 + rng.below(2) as usize;
+            members.push(m);
+        }
+        let cspec = CampaignSpec {
+            name: "gs-route".into(),
+            run_dir: None,
+            members,
+        };
+        let plan = CampaignPlan::build(&cspec).unwrap();
+        let fps = fingerprints_for(&cspec);
+        let mut o = opts(&root, 3, false);
+        o.shard = shard;
+        run_campaign_global(&plan, &o, &fps, None, |_| Ok(FabRunner::plain()))
+            .unwrap();
+        for m in &plan.members {
+            let mut s = m.spec.clone();
+            s.shard = Some(shard);
+            let mplan = SweepPlan::build(&s).unwrap();
+            let ms = read_manifest(&root.join(&m.name)).unwrap();
+            let want: Vec<usize> =
+                mplan.owned().iter().map(|pc| pc.index).collect();
+            let got: Vec<usize> = ms.cells.keys().copied().collect();
+            cpt::prop_assert!(
+                got == want,
+                "member '{}' recorded cells {got:?}, owns {want:?}",
+                m.name
+            );
+            // artifacts decode to this member's own fabricated outcomes
+            let mut st = RunStore::open(
+                &root.join(&m.name),
+                &mplan,
+                fps.get(&m.spec.model).unwrap(),
+                true,
+            )
+            .unwrap();
+            for pc in mplan.owned() {
+                let out = st.take_valid_outcome(pc.index);
+                let out = match out {
+                    Some(o) => o,
+                    None => return Err(format!(
+                        "member '{}' cell {} artifact invalid",
+                        m.name, pc.index
+                    )),
+                };
+                let want = fab_outcome(&m.spec.model, &pc.cell, pc.index);
+                cpt::prop_assert!(
+                    out.metric.to_bits() == want.metric.to_bits()
+                        && out.schedule == want.schedule
+                        && out.trial == want.trial,
+                    "member '{}' cell {} holds a foreign outcome",
+                    m.name,
+                    pc.index
+                );
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+        Ok(())
+    });
+}

@@ -4,7 +4,9 @@
 mod common;
 
 use common::{assert_outcomes_identical, fixture, tmp_dir};
-use cpt::coordinator::campaign::{CampaignMember, CampaignRunOpts};
+use cpt::coordinator::campaign::{
+    CampaignMember, CampaignRunOpts, SchedulerKind,
+};
 use cpt::prelude::*;
 
 #[test]
@@ -78,6 +80,7 @@ fn campaign_resume_skips_recorded_cells_and_refuses_changed_plans() {
                     s.steps = Some(8);
                     s
                 },
+                jobs: None,
             },
             CampaignMember {
                 name: "b".into(),
@@ -88,28 +91,40 @@ fn campaign_resume_skips_recorded_cells_and_refuses_changed_plans() {
                     s.steps = Some(steps_b);
                     s
                 },
+                jobs: None,
             },
         ],
     };
     let plan = CampaignPlan::build(&cspec(10)).unwrap();
-    let opts = |resume: bool| CampaignRunOpts {
+    let opts = |resume: bool, scheduler: SchedulerKind| CampaignRunOpts {
         root: root.clone(),
         shard: ShardId::single(),
         jobs: 1,
         resume,
         verbose: false,
+        scheduler,
     };
-    let first = run_campaign(&f.manifest, &plan, &opts(false)).unwrap();
-    assert_eq!(first.iter().map(|r| r.timing.cells).sum::<usize>(), 3);
-    assert!(first.iter().all(|r| r.timing.resumed == 0));
+    let first =
+        run_campaign(&f.manifest, &plan, &opts(false, SchedulerKind::Global))
+            .unwrap();
+    assert_eq!(first.total_cells(), 3);
+    assert_eq!(first.total_resumed(), 0);
 
     // a second run without --resume refuses the existing root
-    let err = run_campaign(&f.manifest, &plan, &opts(false)).unwrap_err();
+    let err =
+        run_campaign(&f.manifest, &plan, &opts(false, SchedulerKind::Global))
+            .unwrap_err();
     assert!(err.to_string().contains("--resume"), "{err:#}");
 
-    // full resume: every member's cells come from the store, bit-equal
-    let second = run_campaign(&f.manifest, &plan, &opts(true)).unwrap();
-    for (a, b) in first.iter().zip(&second) {
+    // full resume — on the *sequential* path: a global-scheduler root
+    // resumes interchangeably, and every cell comes from the store
+    let second = run_campaign(
+        &f.manifest,
+        &plan,
+        &opts(true, SchedulerKind::Sequential),
+    )
+    .unwrap();
+    for (a, b) in first.members.iter().zip(&second.members) {
         assert_eq!(a.name, b.name);
         assert_eq!(b.timing.resumed, b.timing.cells, "{} retrained", b.name);
         assert_outcomes_identical(&a.outcomes, &b.outcomes);
@@ -128,16 +143,20 @@ fn campaign_resume_skips_recorded_cells_and_refuses_changed_plans() {
         })
         .expect("member b cell 1 artifact");
     std::fs::remove_file(&victim).unwrap();
-    let third = run_campaign(&f.manifest, &plan, &opts(true)).unwrap();
-    let b3 = third.iter().find(|r| r.name == "b").unwrap();
+    let third =
+        run_campaign(&f.manifest, &plan, &opts(true, SchedulerKind::Global))
+            .unwrap();
+    let b3 = third.members.iter().find(|r| r.name == "b").unwrap();
     assert_eq!(b3.timing.resumed, 1, "only the intact cell may be skipped");
-    for (a, b) in first.iter().zip(&third) {
+    for (a, b) in first.members.iter().zip(&third.members) {
         assert_outcomes_identical(&a.outcomes, &b.outcomes);
     }
 
     // a result-determining change to any member refuses the root
     let changed = CampaignPlan::build(&cspec(11)).unwrap();
-    let err = run_campaign(&f.manifest, &changed, &opts(true)).unwrap_err();
+    let err =
+        run_campaign(&f.manifest, &changed, &opts(true, SchedulerKind::Global))
+            .unwrap_err();
     assert!(err.to_string().contains("different campaign"), "{err:#}");
     std::fs::remove_dir_all(&root).ok();
 }

@@ -5,7 +5,9 @@
 mod common;
 
 use common::{assert_outcomes_identical, fixture, tiny_mlp_spec, tmp_dir};
-use cpt::coordinator::campaign::{CampaignMember, CampaignRunOpts};
+use cpt::coordinator::campaign::{
+    CampaignMember, CampaignRunOpts, SchedulerKind,
+};
 use cpt::prelude::*;
 
 #[test]
@@ -90,8 +92,8 @@ fn campaign_shards_merge_byte_identical_to_independent_sweeps() {
         name: "e2e".into(),
         run_dir: None,
         members: vec![
-            CampaignMember { name: "a".into(), spec: spec_a.clone() },
-            CampaignMember { name: "b".into(), spec: spec_b.clone() },
+            CampaignMember { name: "a".into(), spec: spec_a.clone(), jobs: None },
+            CampaignMember { name: "b".into(), spec: spec_b.clone(), jobs: None },
         ],
     };
     let plan = CampaignPlan::build(&cspec).unwrap();
@@ -99,17 +101,36 @@ fn campaign_shards_merge_byte_identical_to_independent_sweeps() {
     let mut roots = Vec::new();
     for i in 1..=2usize {
         let root = tmp.join(format!("root{i}"));
+        // alternate schedulers across the shards: the merge below proves
+        // the global pool and the sequential path are interchangeable
         let opts = CampaignRunOpts {
             root: root.clone(),
             shard: ShardId::parse(&format!("{i}/2")).unwrap(),
-            jobs: 1,
+            jobs: if i == 1 { 2 } else { 1 },
             resume: false,
             verbose: false,
+            scheduler: if i == 1 {
+                SchedulerKind::Global
+            } else {
+                SchedulerKind::Sequential
+            },
         };
-        let results = run_campaign(&f.manifest, &plan, &opts).unwrap();
-        assert_eq!(results.len(), 2);
+        let result = run_campaign(&f.manifest, &plan, &opts).unwrap();
+        assert_eq!(result.members.len(), 2);
         // each member has 2 cells; every shard owns 1 of each
-        assert!(results.iter().all(|r| r.timing.cells == 1));
+        assert!(result.members.iter().all(|r| r.timing.cells == 1));
+        if i == 1 {
+            // 2 members share one model: with 2 workers the pool must
+            // compile strictly fewer than members x workers times
+            let sc = result.scheduler.as_ref().expect("global stats");
+            assert!(
+                sc.total_compiles() < 2 * 2,
+                "shared-model campaign compiled {} times",
+                sc.total_compiles()
+            );
+        } else {
+            assert!(result.scheduler.is_none());
+        }
         roots.push(root);
     }
 

@@ -1,18 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus two
-# end-to-end orchestration passes — a 2-shard sweep + merge, and a
-# 2-sweep campaign that is killed mid-run, resumed, cross-merged, and
-# gc'd — so the bench target and the whole coordinator surface are
-# compiled-and-exercised without paying full bench cost.
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus three
+# end-to-end orchestration passes — a 2-shard sweep + merge, a 2-sweep
+# campaign on the sequential scheduler that is killed mid-run, resumed,
+# cross-merged, and gc'd, and the same campaign through the global
+# scheduler (--jobs 2, one worker pool over both sweeps) whose merged
+# CSVs must be byte-identical to the sequential pass — so the bench
+# targets and the whole coordinator surface are compiled-and-exercised
+# without paying full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
-#                               # integration file (tests/campaign.rs);
-#                               # needs no AOT artifacts — the CI
-#                               # test-unit job runs this tier
-#   scripts/check.sh --smoke    # ... + perf_hotpath + shard/merge and
-#                               # campaign smokes
+#                               # integration files (tests/campaign.rs,
+#                               # tests/global_sched.rs); needs no AOT
+#                               # artifacts — the CI test-unit job runs
+#                               # this tier
+#   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
+#                               # + shard/merge and campaign smokes
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -63,6 +67,8 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --lib
   echo "== cargo test -q --test campaign (fabricated-outcome integration)"
   cargo test -q --test campaign
+  echo "== cargo test -q --test global_sched (fabricated global scheduler)"
+  cargo test -q --test global_sched
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -102,7 +108,7 @@ if [ "$SMOKE" = 1 ]; then
     fi
     echo "shard/merge smoke: serial and merged aggregates are identical"
 
-    echo "== campaign smoke (2 sweeps x 2 shards, kill + resume + merge + gc)"
+    echo "== campaign smoke (sequential scheduler: 2 sweeps x 2 shards, kill + resume + merge + gc)"
     CAMP_TOML="$SMOKE_DIR/campaign.toml"
     cat > "$CAMP_TOML" <<'EOF'
 [campaign]
@@ -130,7 +136,7 @@ EOF
     # CPT_HALT_AFTER_CELLS is the deterministic stand-in for `kill`:
     # the abort fires after the artifact + manifests are durable, which
     # is exactly the state an external kill leaves behind.
-    if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2; then
+    if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2 --scheduler sequential; then
       echo "check.sh: campaign crash injection did not fire" >&2; exit 1
     fi
     if ! $CPT status "$R1" | grep -q "total: done 1/2"; then
@@ -139,7 +145,7 @@ EOF
       exit 1
     fi
     # resume completes the shard, reusing the recorded cell
-    RESUME_OUT="$($CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2 --resume)"
+    RESUME_OUT="$($CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2 --scheduler sequential --resume)"
     case "$RESUME_OUT" in
       *"(1 resumed)"*) ;;
       *) echo "check.sh: campaign resume did not reuse the recorded cell" >&2; exit 1 ;;
@@ -148,7 +154,7 @@ EOF
       echo "check.sh: status after resume should report done 2/2" >&2; exit 1
     fi
     # shard 2/2 runs uninterrupted
-    $CPT campaign --file "$CAMP_TOML" --run-dir "$R2" --shard 2/2
+    $CPT campaign --file "$CAMP_TOML" --run-dir "$R2" --shard 2/2 --scheduler sequential
     if ! $CPT status "$R2" | grep -q "total: done 2/2"; then
       echo "check.sh: shard 2/2 status should report done 2/2" >&2; exit 1
     fi
@@ -174,6 +180,46 @@ EOF
       fi
     done
     echo "campaign smoke: killed+resumed shards merge identically to independent sweeps (and survive gc)"
+
+    echo "== global-scheduler campaign smoke (--jobs 2, one pool over both sweeps, kill + resume + merge)"
+    # The same campaign through the global scheduler: one shared worker
+    # pool claims cells across both members with a per-worker compiled-
+    # executable cache. Killed after the first fresh cell, resumed, and
+    # cross-merged — every CSV must be byte-identical to the sequential
+    # scheduler's output above.
+    G1="$SMOKE_DIR/gcamp1"
+    G2="$SMOKE_DIR/gcamp2"
+    if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$G1" --shard 1/2 --jobs 2 --scheduler global; then
+      echo "check.sh: global campaign crash injection did not fire" >&2; exit 1
+    fi
+    if ! $CPT status "$G1" | grep -q "total: done 1/2"; then
+      echo "check.sh: global status after kill should report done 1/2" >&2
+      $CPT status "$G1" >&2 || true
+      exit 1
+    fi
+    RESUME_OUT="$($CPT campaign --file "$CAMP_TOML" --run-dir "$G1" --shard 1/2 --jobs 2 --scheduler global --resume)"
+    case "$RESUME_OUT" in
+      *"(1 resumed)"*) ;;
+      *) echo "check.sh: global campaign resume did not reuse the recorded cell" >&2; exit 1 ;;
+    esac
+    # the manifest records the pool's compile accounting for status
+    if ! $CPT status "$G1" | grep -q "scheduler:"; then
+      echo "check.sh: status should surface global-scheduler compile stats" >&2
+      $CPT status "$G1" >&2 || true
+      exit 1
+    fi
+    $CPT campaign --file "$CAMP_TOML" --run-dir "$G2" --shard 2/2 --jobs 2 --scheduler global
+    $CPT merge --csv-dir "$SMOKE_DIR/campout_global" "$G1" "$G2"
+    for f in a.csv b.csv campaign.csv; do
+      if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/campout_global/$f"; then
+        echo "check.sh: $f differs between sequential and global schedulers" >&2
+        exit 1
+      fi
+    done
+    echo "global-scheduler smoke: killed+resumed global-pool shards merge byte-identically to the sequential scheduler"
+
+    echo "== fig_campaign_sched bench (executable-cache compile accounting)"
+    cargo bench --bench fig_campaign_sched
   else
     echo "== bench/sweep smoke: artifacts/manifest.json missing — building only"
     cargo build --benches
