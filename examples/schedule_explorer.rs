@@ -3,18 +3,31 @@
 //! schedule. Pure L3 — no artifacts needed.
 //!
 //!   cargo run --release --example schedule_explorer
+//!
+//! Policy-trace replay mode: instead of a precomputed schedule, drive an
+//! adaptive precision policy (rust/src/policy/) against a synthetic loss
+//! curve — decay, a long plateau, then slow progress — and plot the
+//! realized q_t trace it emits, with its realized mean q and relative
+//! cost:
+//!
+//!   cargo run --release --example schedule_explorer -- --policy loss_plateau
+//!   cargo run --release --example schedule_explorer -- \
+//!       --policy cost_governor:target=0.6
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use cpt::prelude::*;
-use cpt::schedule::relative_cost;
+use cpt::schedule::{
+    mean_relative_q_of_trace, relative_cost, relative_cost_of_trace,
+};
 
-fn plot(s: &Schedule, total: usize, q_min: u32, q_max: u32) {
+/// ASCII-plot any q(t) trajectory over `total` steps.
+fn plot_fn(q_of: impl Fn(usize) -> u32, total: usize, q_min: u32, q_max: u32) {
     let width = 72usize;
     let levels = (q_max - q_min + 1) as usize;
     let mut rows = vec![vec![' '; width]; levels];
     for col in 0..width {
         let t = col * (total - 1) / (width - 1);
-        let q = s.q_at(t).clamp(q_min, q_max);
+        let q = q_of(t).clamp(q_min, q_max);
         let row = (q_max - q) as usize;
         rows[row][col] = '#';
     }
@@ -24,7 +37,76 @@ fn plot(s: &Schedule, total: usize, q_min: u32, q_max: u32) {
     println!("       +{}", "-".repeat(width));
 }
 
+fn plot(s: &Schedule, total: usize, q_min: u32, q_max: u32) {
+    plot_fn(|t| s.q_at(t), total, q_min, q_max);
+}
+
+/// The synthetic loss curve the replay feeds back: fast early progress,
+/// a long mid-run plateau (where plateau policies switch), then slow
+/// late improvement.
+fn synthetic_loss(t: usize) -> f32 {
+    let t = t as f32;
+    let floor = 2.0 / (1.0 + 0.02 * 300.0);
+    if t < 300.0 {
+        2.0 / (1.0 + 0.02 * t)
+    } else if t < 550.0 {
+        floor
+    } else {
+        floor - 0.0003 * (t - 550.0)
+    }
+}
+
+/// Replay an adaptive policy against the synthetic loss curve and plot
+/// the realized trace.
+fn replay_policy(spec_str: &str) -> Result<()> {
+    let total = 800usize;
+    let (q_min, q_max) = (3.0, 8.0);
+    let spec = PolicySpec::parse(spec_str)?;
+    let mut pol = spec.build_adaptive(q_min, q_max, total)?;
+    let chunk = 8usize;
+    let mut qs: Vec<u32> = Vec::with_capacity(total);
+    let mut step = 0usize;
+    while step < total {
+        let k = chunk.min(total - step);
+        for q in pol.q_chunk(step, k) {
+            qs.push(q as u32);
+        }
+        let losses: Vec<f32> =
+            (0..k).map(|i| synthetic_loss(step + i)).collect();
+        pol.observe(ChunkFeedback::from_losses(step, &losses));
+        step += k;
+    }
+    println!(
+        "policy replay: {} over T={total}, q in [3, 8], chunk={chunk}",
+        spec.canonical()
+    );
+    println!(
+        "synthetic loss: decay until t=300, plateau until t=550, then slow \
+         progress\n"
+    );
+    plot_fn(|t| qs[t.min(qs.len() - 1)], total, 3, 8);
+    println!(
+        "\nrealized: mean q/qmax {:.3}, relative cost {:.3} (vs static \
+         q_max)",
+        mean_relative_q_of_trace(&qs, q_max),
+        relative_cost_of_trace(&qs, q_max)
+    );
+    println!(
+        "(the same trace figures land in sweep CSVs as the mean_q / \
+         realized_cost columns)"
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = args.iter().position(|a| a == "--policy") {
+        let spec = args
+            .get(i + 1)
+            .context("--policy needs a value, e.g. loss_plateau")?;
+        return replay_policy(spec);
+    }
+
     let total = 800;
     let (q_min, q_max) = (3.0, 8.0);
 
@@ -69,5 +151,11 @@ fn main() -> Result<()> {
     println!("\ndeficit schedule (critical-period experiments, §5):");
     let d = Schedule::deficit(3.0, 8.0, 200, 500);
     plot(&d, total, 3, 8);
+
+    println!(
+        "\ntip: replay an adaptive policy's realized trace with \
+         `-- --policy loss_plateau` or `-- --policy \
+         cost_governor:target=0.6`"
+    );
     Ok(())
 }

@@ -1,0 +1,218 @@
+//! §Policies: adaptive precision policies vs the best static CPT
+//! schedules — the experiment the paper could not run, because its
+//! schedules are fixed up front.
+//!
+//! On real PJRT training (needs `make artifacts`), one model (mlp):
+//!   * a static reference sweep over a spread of suite schedules
+//!     (Group I / II / III members + the STATIC baseline);
+//!   * a `loss_plateau` policy sweep (MuPPET-style switching);
+//!   * two `cost_governor` sweeps with targets bracketing the suite's
+//!     cost range.
+//!
+//! Reported per row: metric, GBitOps, realized mean q/q_max, realized
+//! relative cost. Two structural gates (training quality itself is not
+//! gated — it flakes):
+//!   * every adaptive row's realized cost must be < 1 (an adaptive run
+//!     that costs more than static-q_max means the feedback loop is
+//!     broken);
+//!   * each governor's realized cost must land within tolerance of its
+//!     target (the budget-steering contract, end-to-end through real
+//!     training).
+//!
+//! Emits BENCH_policy.json (override with CPT_BENCH_JSON / --json).
+
+use anyhow::Result;
+use cpt::coordinator::campaign::set_policy;
+use cpt::prelude::*;
+use cpt::util::json::{num, obj, s, Json};
+
+struct Row {
+    label: String,
+    q_max: f64,
+    metric: f64,
+    gbitops: f64,
+    mean_q: f64,
+    realized_cost: f64,
+}
+
+fn rows_of(outs: &[RunOutcome]) -> Vec<Row> {
+    aggregate(outs)
+        .into_iter()
+        .map(|r| Row {
+            label: r.schedule,
+            q_max: r.q_max,
+            metric: r.metric_mean,
+            gbitops: r.gbitops,
+            mean_q: r.mean_q,
+            realized_cost: r.realized_cost,
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var("CPT_BENCH_JSON").ok())
+        .unwrap_or_else(|| "BENCH_policy.json".to_string());
+    let scale = cpt::bench_scale();
+    let steps = scale.steps(48, 128);
+    let trials = scale.trials();
+
+    let manifest = Manifest::load(cpt::artifacts_dir())?;
+    println!("=== §Policies: adaptive precision vs static schedules (mlp) ===\n");
+
+    // --- static reference: one schedule per savings group + baseline ---
+    let mut static_spec = SweepSpec::new("mlp");
+    static_spec.schedules =
+        vec!["RR".into(), "CR".into(), "ETH".into(), "STATIC".into()];
+    static_spec.q_maxes = vec![8.0];
+    static_spec.trials = trials;
+    static_spec.steps = Some(steps);
+    static_spec.apply_env_run_dir(&manifest)?;
+    static_spec.log_run_dir();
+    let static_outs = run_sweep(&manifest, &static_spec)?;
+    let static_rows = rows_of(&static_outs);
+
+    // --- adaptive sweeps ----------------------------------------------
+    let policies = [
+        "loss_plateau:patience=2,ema=0.5".to_string(),
+        "cost_governor:target=0.55".to_string(),
+        "cost_governor:target=0.75".to_string(),
+    ];
+    let mut adaptive_rows: Vec<(String, Vec<Row>)> = Vec::new();
+    for p in &policies {
+        let mut spec = SweepSpec::new("mlp");
+        set_policy(&mut spec, PolicySpec::parse(p)?, false)?;
+        spec.q_maxes = vec![8.0];
+        spec.trials = trials;
+        spec.steps = Some(steps);
+        spec.apply_env_run_dir(&manifest)?;
+        spec.log_run_dir();
+        let outs = run_sweep(&manifest, &spec)?;
+        adaptive_rows.push((p.clone(), rows_of(&outs)));
+    }
+
+    // --- report --------------------------------------------------------
+    println!(
+        "{:<28} {:>8} {:>10} {:>8} {:>10}",
+        "schedule/policy", "metric", "GBitOps", "mean_q", "rel.cost"
+    );
+    let print_rows = |rows: &[Row]| {
+        for r in rows {
+            println!(
+                "{:<28} {:>8.4} {:>10.4} {:>8.4} {:>10.4}",
+                format!("{} (q{})", r.label, r.q_max),
+                r.metric,
+                r.gbitops,
+                r.mean_q,
+                r.realized_cost
+            );
+        }
+    };
+    print_rows(&static_rows);
+    for (p, rows) in &adaptive_rows {
+        println!("-- {p}");
+        print_rows(rows);
+    }
+    let best_static = static_rows
+        .iter()
+        .filter(|r| r.label != "STATIC" && !r.metric.is_nan())
+        .max_by(|a, b| a.metric.total_cmp(&b.metric))
+        .unwrap_or(&static_rows[0]);
+    println!(
+        "\nbest static schedule: {} metric {:.4} at relative cost {:.4}",
+        best_static.label, best_static.metric, best_static.realized_cost
+    );
+
+    // --- gates ---------------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    for (p, rows) in &adaptive_rows {
+        for r in rows {
+            if r.realized_cost.is_nan() || r.realized_cost >= 1.0 {
+                failures.push(format!(
+                    "{p}: realized cost {:.4} >= 1 (adaptive run costs \
+                     more than static q_max)",
+                    r.realized_cost
+                ));
+            }
+        }
+        if let Some(target) = p
+            .strip_prefix("cost_governor:target=")
+            .and_then(|t| t.parse::<f64>().ok())
+        {
+            // one-step granularity on short runs plus float slack
+            let tol = 1.0 / steps as f64 + 0.03;
+            for r in rows {
+                if (r.realized_cost - target).abs() > tol {
+                    failures.push(format!(
+                        "{p}: realized cost {:.4} missed target {target} \
+                         (tol {tol:.4})",
+                        r.realized_cost
+                    ));
+                }
+            }
+        }
+    }
+
+    let row_json = |r: &Row| {
+        obj(vec![
+            ("label", s(&r.label)),
+            ("q_max", num(r.q_max)),
+            ("metric", num(r.metric)),
+            ("gbitops", num(r.gbitops)),
+            ("mean_q", num(r.mean_q)),
+            ("realized_cost", num(r.realized_cost)),
+        ])
+    };
+    let doc = obj(vec![
+        ("bench", s("fig_policy")),
+        ("version", num(1.0)),
+        ("model", s("mlp")),
+        ("steps", num(steps as f64)),
+        ("trials", num(trials as f64)),
+        (
+            "static_rows",
+            Json::Arr(static_rows.iter().map(row_json).collect()),
+        ),
+        (
+            "adaptive",
+            Json::Arr(
+                adaptive_rows
+                    .iter()
+                    .map(|(p, rows)| {
+                        obj(vec![
+                            ("policy", s(p)),
+                            (
+                                "rows",
+                                Json::Arr(
+                                    rows.iter().map(row_json).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "best_static",
+            obj(vec![
+                ("label", s(&best_static.label)),
+                ("metric", num(best_static.metric)),
+                ("realized_cost", num(best_static.realized_cost)),
+            ]),
+        ),
+        ("gates_passed", Json::Bool(failures.is_empty())),
+    ]);
+    std::fs::write(&json_path, doc.to_string_pretty())?;
+    println!("\nwrote {json_path}");
+
+    anyhow::ensure!(
+        failures.is_empty(),
+        "policy gates failed:\n  {}",
+        failures.join("\n  ")
+    );
+    Ok(())
+}

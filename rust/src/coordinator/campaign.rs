@@ -49,6 +49,7 @@ use super::store::{
 };
 use super::{run_sweep_timed, RunOutcome, SweepSpec, SweepTiming};
 use crate::config::toml::{Section, TomlDoc};
+use crate::policy::PolicySpec;
 use crate::runtime::{Manifest, ModelSpec};
 use crate::util::hash::Fnv1a64;
 use crate::util::json::{num, obj, s, Json};
@@ -195,7 +196,7 @@ pub fn sweep_spec_from_section(
 ) -> Result<SweepSpec> {
     const RESULT_KEYS: &[&str] = &[
         "model", "schedules", "q_maxes", "trials", "steps", "cycles",
-        "eval_every",
+        "eval_every", "policy",
     ];
     const EXEC_KEYS: &[&str] = &["shard", "run_dir", "resume", "jobs", "verbose"];
     let allow_exec_keys = kind == SweepSectionKind::Preset;
@@ -242,6 +243,13 @@ pub fn sweep_spec_from_section(
     if let Some(v) = sec.get("eval_every") {
         spec.eval_every = v.as_usize()?;
     }
+    if let Some(v) = sec.get("policy") {
+        // the compact syntax ("loss_plateau:patience=3"); preset files
+        // may use a [sweep.policy] table instead (cmd_preset applies it)
+        let pol = PolicySpec::parse(v.as_str()?)
+            .context("sweep 'policy' key")?;
+        set_policy(&mut spec, pol, sec.get("schedules").is_some())?;
+    }
     if allow_exec_keys {
         if let Some(v) = sec.get("shard") {
             spec.shard = Some(ShardId::parse(v.as_str()?)?);
@@ -260,6 +268,41 @@ pub fn sweep_spec_from_section(
         }
     }
     Ok(spec)
+}
+
+/// Install a precision policy on a sweep spec — the single place the
+/// policy/schedule-axis interaction is decided, shared by the TOML
+/// readers and every `--policy` flag. An adaptive policy drives `q_t`
+/// itself, so the schedule axis collapses to the policy's label (one
+/// cell per q_max × trial); an explicitly authored schedules list is
+/// rejected rather than silently turned into duplicate cells. Installing
+/// `static` over an already-adaptive spec is rejected too (the original
+/// schedule list is gone).
+pub fn set_policy(
+    spec: &mut SweepSpec,
+    policy: PolicySpec,
+    schedules_explicit: bool,
+) -> Result<()> {
+    if policy.is_adaptive() {
+        if schedules_explicit {
+            bail!(
+                "policy '{}' drives q_t itself; drop the schedules list \
+                 (every listed schedule would run the identical adaptive \
+                 cell)",
+                policy.canonical()
+            );
+        }
+        spec.schedules = vec![policy.label().to_string()];
+    } else if spec.policy.is_adaptive() {
+        bail!(
+            "cannot override adaptive policy '{}' with 'static': the \
+             sweep's schedule axis was already collapsed to the policy \
+             label",
+            spec.policy.canonical()
+        );
+    }
+    spec.policy = policy;
+    Ok(())
 }
 
 /// Campaign and member names both become filesystem path components
@@ -958,6 +1001,7 @@ where
             name: m.name.clone(),
             model: m.spec.model.clone(),
             fingerprint: fp.clone(),
+            policy: m.spec.policy.clone(),
             steps: mplan.steps,
             cycles: mplan.cycles,
             eval_every: m.spec.eval_every,
@@ -1196,6 +1240,12 @@ pub struct MemberStatus {
     pub planned: usize,
     pub done: usize,
     pub exec_seconds: f64,
+    /// Mean realized q/q_max over recorded cells with a trace summary
+    /// (None for pre-policy manifests or unstarted members — reporting
+    /// falls back silently).
+    pub mean_q: Option<f64>,
+    /// Mean realized relative cost over recorded cells with a summary.
+    pub realized_cost: Option<f64>,
 }
 
 impl MemberStatus {
@@ -1261,6 +1311,8 @@ pub fn status(dir: &Path) -> Result<Status> {
                     planned: ms.planned(),
                     done: ms.done(),
                     exec_seconds: ms.exec_seconds(),
+                    mean_q: ms.mean_q(),
+                    realized_cost: ms.realized_cost(),
                 }
             } else {
                 // not started: everything the shard owns is still to do
@@ -1270,6 +1322,8 @@ pub fn status(dir: &Path) -> Result<Status> {
                     planned: cm.shard.owned_count(e.total_cells),
                     done: 0,
                     exec_seconds: 0.0,
+                    mean_q: None,
+                    realized_cost: None,
                 }
             };
             members.push(st);
@@ -1448,6 +1502,38 @@ eval_every = 4
     }
 
     #[test]
+    fn member_policy_key_collapses_the_schedule_axis() {
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"p\"\n[[campaign.sweep]]\nmodel = \"mlp\"\n\
+             policy = \"loss_plateau:patience=3\"\ntrials = 2",
+        )
+        .unwrap();
+        let c = CampaignSpec::from_toml(&doc).unwrap();
+        assert!(c.members[0].spec.policy.is_adaptive());
+        assert_eq!(
+            c.members[0].spec.schedules,
+            vec!["LOSS_PLATEAU".to_string()],
+            "adaptive member must collapse to one schedule-axis entry"
+        );
+        // an explicit schedules list alongside an adaptive policy is
+        // rejected — every entry would run the identical cell
+        let doc = TomlDoc::parse(
+            "[campaign]\nname = \"p\"\n[[campaign.sweep]]\nmodel = \"mlp\"\n\
+             policy = \"cost_governor\"\nschedules = [\"CR\"]",
+        )
+        .unwrap();
+        let err = CampaignSpec::from_toml(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("drives q_t"), "{err:#}");
+        // set_policy refuses to downgrade an adaptive spec to static
+        let mut spec = SweepSpec::new("mlp");
+        set_policy(&mut spec, PolicySpec::parse("cost_governor").unwrap(), false)
+            .unwrap();
+        let err = set_policy(&mut spec, PolicySpec::StaticSuite, false)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cannot override"), "{err:#}");
+    }
+
+    #[test]
     fn plan_rejects_bad_member_names() {
         for bad in
             ["", "a/b", "..", ".hidden", "run-manifest.json", "campaign"]
@@ -1553,13 +1639,18 @@ eval_every = 4
             );
             // ...and a result-determining change always does
             let mut c = campaign(&["a", "b"]);
-            match rng.below(7) {
+            match rng.below(8) {
                 0 => c.members[which].spec.trials += 1,
                 1 => c.members[which].spec.steps = Some(9999),
                 2 => c.members[which].spec.cycles = Some(3),
                 3 => c.members[which].spec.q_maxes.push(4.0),
                 4 => c.members[which].spec.schedules.push("ETH".into()),
                 5 => c.members[which].spec.eval_every = 5,
+                // the precision policy determines the realized trace
+                6 => {
+                    c.members[which].spec.policy =
+                        PolicySpec::parse("loss_plateau").unwrap()
+                }
                 // renames change the report keying, so they count too
                 _ => c.members[which].name.push('x'),
             }

@@ -43,7 +43,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::store::RunStore;
-use super::{run_one, RunOutcome, SweepCell};
+use super::{run_one_with_policy, RunOutcome, SweepCell};
+use crate::policy::PolicySpec;
 use crate::runtime::{LoadedModel, ModelSpec, Runtime};
 
 /// Per-worker compiled-executable cache capacity (distinct model
@@ -70,6 +71,11 @@ pub struct ExecMember {
     /// fingerprint, which is exactly when a worker's cached executables
     /// can be reused across them.
     pub fingerprint: String,
+    /// Precision policy for every cell of this member (result-
+    /// determining; carried here so workers can run adaptive cells —
+    /// the compiled executable is policy-independent, q_t is a runtime
+    /// input, so the cache key stays the model fingerprint alone).
+    pub policy: PolicySpec,
     pub steps: usize,
     pub cycles: usize,
     pub eval_every: usize,
@@ -639,9 +645,10 @@ impl CellRunner for PjrtCellRunner<'_> {
             Ok(m) => m,
             Err(e) => return Err(CellError::Setup(e)),
         };
-        run_one(
+        run_one_with_policy(
             model,
             &member.model,
+            &member.policy,
             &cell.schedule,
             cell.q_max,
             cell.trial,
@@ -673,6 +680,7 @@ mod tests {
             name: name.into(),
             model: format!("model-{fp}"),
             fingerprint: fp.into(),
+            policy: PolicySpec::StaticSuite,
             steps: 8,
             cycles: 8,
             eval_every: 0,
@@ -710,6 +718,8 @@ mod tests {
             metric: 0.5 + index as f64 * 0.125,
             eval_loss: 0.25,
             steps: member.steps,
+            mean_q: 0.75,
+            realized_cost: 0.5,
             exec_seconds: 0.01,
             history: crate::metrics::History::default(),
         }

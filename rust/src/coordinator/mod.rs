@@ -4,9 +4,11 @@
 //!
 //! This is the L3 entry point every bench target drives: one
 //! `SweepSpec` describes a panel of a paper figure (model × schedule
-//! suite × q_max × trials), `run_sweep` executes it on the PJRT runtime,
-//! and `SweepReport` prints rows of (schedule, group, GBitOps, metric ±
-//! std) plus writes CSV under results/.
+//! suite × q_max × trials — or, with an adaptive `PolicySpec`, a
+//! feedback-driven precision policy per q_max × trial), `run_sweep`
+//! executes it on the PJRT runtime, and `SweepReport` prints rows of
+//! (schedule, group, GBitOps, metric ± std, realized mean-q/cost) plus
+//! writes CSV under results/.
 //!
 //! Execution model: plan → execute → merge. [`plan::SweepPlan`] flattens
 //! the spec into an ordered, content-hashed cell list (schedule × q_max ×
@@ -54,6 +56,7 @@ use anyhow::Result;
 
 use crate::data::mean_std;
 use crate::metrics::History;
+use crate::policy::{PolicySpec, PrecisionPolicy, StaticPolicy};
 use crate::runtime::{LoadedModel, Manifest};
 use crate::schedule::{group_of, suite, Schedule};
 use crate::trainer::{TrainConfig, Trainer};
@@ -70,6 +73,13 @@ pub struct SweepSpec {
     pub steps: Option<usize>,
     /// Override the recipe's cycle count.
     pub cycles: Option<usize>,
+    /// Precision policy for every cell of the sweep. `StaticSuite` (the
+    /// default) replays each cell's named schedule — the legacy path;
+    /// adaptive policies choose q_t from training feedback, in which case
+    /// the schedule axis collapses to the policy's label (see
+    /// `campaign::sweep_spec_from_section` / `cpt sweep --policy`).
+    /// Result-determining: part of the spec hash when adaptive.
+    pub policy: PolicySpec,
     pub eval_every: usize,
     pub verbose: bool,
     /// Worker threads for the sweep executor (1 = serial on the caller's
@@ -104,6 +114,7 @@ impl SweepSpec {
             trials: 1,
             steps: None,
             cycles: None,
+            policy: PolicySpec::StaticSuite,
             eval_every: 0,
             verbose: false,
             jobs: crate::default_jobs(),
@@ -233,6 +244,12 @@ pub struct RunOutcome {
     pub metric: f64,
     pub eval_loss: f64,
     pub steps: usize,
+    /// Realized mean q_t / q_max of the executed trace (exact — adaptive
+    /// policies make it data-dependent, so it is recorded per run).
+    pub mean_q: f64,
+    /// Realized relative training cost vs static q_max (the
+    /// `schedule::cost` trace formula).
+    pub realized_cost: f64,
     pub exec_seconds: f64,
     pub history: History,
 }
@@ -248,6 +265,11 @@ pub struct AggRow {
     pub metric_mean: f64,
     pub metric_std: f64,
     pub trials: usize,
+    /// Mean realized q_t / q_max over trials (trace-exact, so adaptive
+    /// trials may differ — this is their mean).
+    pub mean_q: f64,
+    /// Mean realized relative cost over trials.
+    pub realized_cost: f64,
     /// Mean per-cell executable wall-clock (seconds) over trials.
     pub exec_seconds_mean: f64,
 }
@@ -267,7 +289,8 @@ pub fn make_schedule(
     }
 }
 
-/// Run one training run for (model, schedule, q_max, trial).
+/// Run one training run for (model, schedule, q_max, trial) on the
+/// legacy schedule path (`PolicySpec::StaticSuite`).
 #[allow(clippy::too_many_arguments)]
 pub fn run_one(
     model: &LoadedModel,
@@ -280,11 +303,52 @@ pub fn run_one(
     eval_every: usize,
     verbose: bool,
 ) -> Result<RunOutcome> {
+    run_one_with_policy(
+        model,
+        spec_name,
+        &PolicySpec::StaticSuite,
+        sched_name,
+        q_max,
+        trial,
+        steps,
+        cycles,
+        eval_every,
+        verbose,
+    )
+}
+
+/// Run one training run under a precision policy. With `StaticSuite`,
+/// `sched_name` selects the suite schedule exactly as before (the
+/// schedule is wrapped in a `StaticPolicy`, bit-identical emission);
+/// with an adaptive policy the schedule axis is inert — `sched_name` is
+/// only the cell's display label (conventionally the policy label) and
+/// q_t comes from the feedback loop.
+#[allow(clippy::too_many_arguments)]
+pub fn run_one_with_policy(
+    model: &LoadedModel,
+    spec_name: &str,
+    policy_spec: &PolicySpec,
+    sched_name: &str,
+    q_max: f64,
+    trial: usize,
+    steps: usize,
+    cycles: usize,
+    eval_every: usize,
+    verbose: bool,
+) -> Result<RunOutcome> {
     let rec = recipe(spec_name)?;
-    let schedule = make_schedule(sched_name, rec.q_min, q_max, steps, cycles)?;
+    let policy: Box<dyn PrecisionPolicy> = if policy_spec.is_adaptive() {
+        policy_spec.build_adaptive(rec.q_min, q_max, steps)?
+    } else {
+        Box::new(StaticPolicy::new(make_schedule(
+            sched_name, rec.q_min, q_max, steps, cycles,
+        )?))
+    };
     let mut data = dataset_for(spec_name, 1000 + trial as u64)?;
     let cfg = TrainConfig {
         total_steps: steps,
+        // q_bwd is pinned to q_max (paper §3.1) for schedules and
+        // policies alike; the NONE baseline runs unquantized throughout
         q_bwd: if sched_name == "NONE" { 32.0 } else { q_max as f32 },
         eval_every,
         seed: 7 * (trial as i32 + 1),
@@ -292,7 +356,8 @@ pub fn run_one(
         verbose,
     };
     let lr = rec.lr_schedule(steps);
-    let mut trainer = Trainer::new(model, data.as_mut(), schedule, lr, cfg);
+    let mut trainer =
+        Trainer::with_policy(model, data.as_mut(), policy, lr, cfg);
     let hist = trainer.run()?;
     let raw_metric = hist.final_eval_metric().unwrap_or(f32::NAN);
     Ok(RunOutcome {
@@ -305,6 +370,8 @@ pub fn run_one(
         metric: report_metric(spec_name, raw_metric) as f64,
         eval_loss: hist.final_eval_loss().unwrap_or(f32::NAN) as f64,
         steps,
+        mean_q: hist.mean_q,
+        realized_cost: hist.realized_cost,
         exec_seconds: hist.exec_seconds,
         history: hist,
     })
@@ -399,6 +466,7 @@ pub fn run_sweep_timed(
             name: String::new(),
             model: spec.model.clone(),
             fingerprint: fingerprint.clone(),
+            policy: spec.policy.clone(),
             steps: plan.steps,
             cycles: plan.cycles,
             eval_every: spec.eval_every,
@@ -453,6 +521,8 @@ pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
         q_max: f64,
         metrics: Vec<f64>,
         gbitops_sum: f64,
+        mean_q_sum: f64,
+        realized_cost_sum: f64,
         exec_seconds_sum: f64,
     }
     let mut index: HashMap<(&str, &str, u64), usize> = HashMap::new();
@@ -469,6 +539,8 @@ pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
                     q_max: o.q_max,
                     metrics: Vec::new(),
                     gbitops_sum: 0.0,
+                    mean_q_sum: 0.0,
+                    realized_cost_sum: 0.0,
                     exec_seconds_sum: 0.0,
                 });
                 index.insert(key, accs.len() - 1);
@@ -478,6 +550,8 @@ pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
         let a = &mut accs[i];
         a.metrics.push(o.metric);
         a.gbitops_sum += o.gbitops;
+        a.mean_q_sum += o.mean_q;
+        a.realized_cost_sum += o.realized_cost;
         a.exec_seconds_sum += o.exec_seconds;
     }
     accs.into_iter()
@@ -493,6 +567,8 @@ pub fn aggregate(outs: &[RunOutcome]) -> Vec<AggRow> {
                 metric_mean: m,
                 metric_std: s,
                 trials: n,
+                mean_q: a.mean_q_sum / n as f64,
+                realized_cost: a.realized_cost_sum / n as f64,
                 exec_seconds_mean: a.exec_seconds_sum / n as f64,
             }
         })
@@ -514,6 +590,8 @@ mod tests {
             metric,
             eval_loss: 0.0,
             steps: 10,
+            mean_q: 0.5 + trial as f64 * 0.25,
+            realized_cost: 0.4 + trial as f64 * 0.2,
             exec_seconds: 0.5 + trial as f64,
             history: crate::metrics::History::default(),
         }
@@ -536,6 +614,8 @@ mod tests {
         assert!((cr8.metric_mean - 0.85).abs() < 1e-12);
         assert_eq!(cr8.trials, 2);
         assert!((cr8.gbitops - 1.5).abs() < 1e-12);
+        assert!((cr8.mean_q - 0.625).abs() < 1e-12);
+        assert!((cr8.realized_cost - 0.5).abs() < 1e-12);
         assert!((cr8.exec_seconds_mean - 1.0).abs() < 1e-12);
     }
 

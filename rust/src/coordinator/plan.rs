@@ -128,6 +128,16 @@ impl SweepPlan {
             }
             let _ = write!(desc, "{q}");
         }
+        // The precision policy is result-determining, so every parameter
+        // reaches the hash — via its canonical encoding, so two spellings
+        // of the same policy ("loss_plateau" vs its fully-keyed form)
+        // hash identically. The default (StaticSuite) is omitted: a sweep
+        // that never mentions policies must keep its pre-policy hash
+        // (same results, and append-only format evolution).
+        if spec.policy.is_adaptive() {
+            desc.push_str(";policy=");
+            desc.push_str(&spec.policy.canonical());
+        }
         let spec_hash = fnv1a64_hex(desc.as_bytes());
 
         Ok(SweepPlan {
@@ -326,6 +336,56 @@ mod tests {
         let mut s = spec();
         s.eval_every = 5;
         assert_ne!(SweepPlan::build(&s).unwrap().spec_hash, base);
+    }
+
+    #[test]
+    fn spec_hash_moves_iff_a_policy_field_changes() {
+        use crate::policy::PolicySpec;
+        let hash = |p: PolicySpec| {
+            let mut s = spec();
+            s.policy = p;
+            SweepPlan::build(&s).unwrap().spec_hash
+        };
+        let base = SweepPlan::build(&spec()).unwrap().spec_hash;
+        // the explicit default spells the same sweep: hash unchanged —
+        // a pre-policy run dir is exactly resumable by a static-policy
+        // spec (and vice versa)
+        assert_eq!(hash(PolicySpec::StaticSuite), base);
+        // an adaptive policy always moves the hash off the static one
+        let plateau = PolicySpec::parse("loss_plateau").unwrap();
+        let plateau_hash = hash(plateau.clone());
+        assert_ne!(plateau_hash, base);
+        assert_ne!(hash(PolicySpec::parse("cost_governor").unwrap()), base);
+        // two spellings of one policy agree; the fully-keyed canonical
+        // form is the same spec as the bare default
+        let respelled = PolicySpec::parse(&plateau.canonical()).unwrap();
+        assert_eq!(hash(respelled), plateau_hash);
+        // ...and every parameter is result-determining
+        propcheck(60, |rng| {
+            let mut p = PolicySpec::parse("loss_plateau").unwrap();
+            if let PolicySpec::LossPlateau {
+                ema, patience, min_delta, q_step, cooldown,
+            } = &mut p
+            {
+                match rng.below(5) {
+                    0 => *ema = 0.25,
+                    1 => *patience += 1 + rng.below(3) as usize,
+                    2 => *min_delta += 0.005,
+                    3 => *q_step += 1.0,
+                    _ => *cooldown += 1,
+                }
+            }
+            prop_assert!(
+                hash(p.clone()) != plateau_hash,
+                "changed policy field kept the hash ({p:?})"
+            );
+            // and hashing is stable for equal specs
+            prop_assert!(hash(p.clone()) == hash(p), "hash unstable");
+            Ok(())
+        });
+        let g = |t: f64| hash(PolicySpec::CostGovernor { target: t });
+        assert_ne!(g(0.6), g(0.7));
+        assert_eq!(g(0.6), g(0.6));
     }
 
     #[test]

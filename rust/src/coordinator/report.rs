@@ -9,9 +9,13 @@ use crate::metrics::CsvWriter;
 
 /// The run-deterministic aggregate columns shared by the stable sweep
 /// CSV and the campaign CSV (which prefixes a `sweep` key column).
-const STABLE_COLUMNS: [&str; 8] = [
+/// `mean_q` / `realized_cost` are the *realized* trace figures recorded
+/// per run — for schedule-driven cells they reproduce the analytic
+/// schedule numbers; for adaptive policies they are data-dependent and
+/// exist nowhere else.
+const STABLE_COLUMNS: [&str; 10] = [
     "model", "schedule", "group", "q_max", "gbitops", "metric_mean",
-    "metric_std", "trials",
+    "metric_std", "trials", "mean_q", "realized_cost",
 ];
 
 /// Values for [`STABLE_COLUMNS`] — one formatting path, so sweep and
@@ -26,6 +30,8 @@ fn stable_fields(r: &AggRow) -> Vec<String> {
         format!("{:.6}", r.metric_mean),
         format!("{:.6}", r.metric_std),
         format!("{}", r.trials),
+        format!("{:.6}", r.mean_q),
+        format!("{:.6}", r.realized_cost),
     ]
 }
 
@@ -223,6 +229,8 @@ mod tests {
             metric_mean: m,
             metric_std: 0.0,
             trials: 1,
+            mean_q: 0.75,
+            realized_cost: 0.5,
             exec_seconds_mean: 0.25,
         }
     }
@@ -272,9 +280,15 @@ mod tests {
         let header = s.lines().next().unwrap();
         assert_eq!(
             header,
-            "model,schedule,group,q_max,gbitops,metric_mean,metric_std,trials"
+            "model,schedule,group,q_max,gbitops,metric_mean,metric_std,\
+             trials,mean_q,realized_cost"
         );
         assert!(!s.contains("exec_seconds"), "{s}");
+        // the realized columns carry the row's trace figures
+        assert!(
+            s.lines().nth(1).unwrap().ends_with("0.750000,0.500000"),
+            "{s}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -294,7 +308,8 @@ mod tests {
         let mut lines = s.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "sweep,model,schedule,group,q_max,gbitops,metric_mean,metric_std,trials"
+            "sweep,model,schedule,group,q_max,gbitops,metric_mean,\
+             metric_std,trials,mean_q,realized_cost"
         );
         // stripping the sweep key must reproduce the member's stable CSV
         let ps = dir.join("a.csv");
@@ -327,6 +342,8 @@ mod tests {
             metric: 0.9,
             eval_loss: 0.1,
             steps: 10,
+            mean_q: 0.75,
+            realized_cost: 0.5,
             exec_seconds: 0.0,
             history: History::default(),
         };

@@ -112,6 +112,12 @@ pub struct CellEntry {
     /// (recorded so `cpt status` reports per-cell cost straight from the
     /// manifest, without opening any artifact).
     pub seconds: f64,
+    /// Compact trace summary: realized mean q_t/q_max of the cell's run.
+    /// `None` on manifests written before the policy subsystem — every
+    /// reader falls back silently.
+    pub mean_q: Option<f64>,
+    /// Compact trace summary: realized relative cost vs static q_max.
+    pub realized_cost: Option<f64>,
 }
 
 /// Parsed, validated view of one `run-manifest.json` — the shared input
@@ -148,6 +154,31 @@ impl ManifestSummary {
     /// Total executable seconds across recorded cells.
     pub fn exec_seconds(&self) -> f64 {
         self.cells.values().map(|e| e.seconds).sum()
+    }
+
+    /// Mean realized q_t/q_max over the recorded cells that carry a
+    /// trace summary; `None` when none do (pre-policy manifests), so
+    /// `cpt status` can fall back silently.
+    pub fn mean_q(&self) -> Option<f64> {
+        mean_of(self.cells.values().filter_map(|e| e.mean_q))
+    }
+
+    /// Mean realized relative cost over cells with a trace summary.
+    pub fn realized_cost(&self) -> Option<f64> {
+        mean_of(self.cells.values().filter_map(|e| e.realized_cost))
+    }
+}
+
+fn mean_of(vals: impl Iterator<Item = f64>) -> Option<f64> {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for v in vals {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(sum / n as f64)
     }
 }
 
@@ -324,7 +355,13 @@ impl RunStore {
         let checksum = fnv1a64_hex(bytes.as_bytes());
         self.m.cells.insert(
             index,
-            CellEntry { file, checksum, seconds: out.exec_seconds },
+            CellEntry {
+                file,
+                checksum,
+                seconds: out.exec_seconds,
+                mean_q: Some(out.mean_q),
+                realized_cost: Some(out.realized_cost),
+            },
         );
         self.write_manifest()
     }
@@ -341,14 +378,19 @@ impl RunStore {
 fn write_manifest_file(dir: &Path, m: &ManifestSummary) -> Result<()> {
     let mut cells = BTreeMap::new();
     for (index, e) in &m.cells {
-        cells.insert(
-            format!("{index:05}"),
-            obj(vec![
-                ("checksum", s(&e.checksum)),
-                ("file", s(&e.file)),
-                ("seconds", num(e.seconds)),
-            ]),
-        );
+        let mut fields =
+            vec![("checksum", s(&e.checksum)), ("file", s(&e.file))];
+        // trace summary keys are written only when known, so a manifest
+        // that predates them (gc/status of an old tree) round-trips
+        // byte-compatibly instead of growing fabricated zeros
+        if let Some(mq) = e.mean_q {
+            fields.push(("mean_q", num(mq)));
+        }
+        if let Some(rc) = e.realized_cost {
+            fields.push(("realized_cost", num(rc)));
+        }
+        fields.push(("seconds", num(e.seconds)));
+        cells.insert(format!("{index:05}"), obj(fields));
     }
     let doc = obj(vec![
         ("kind", s(MANIFEST_KIND)),
@@ -420,6 +462,16 @@ pub fn read_manifest(dir: &Path) -> Result<ManifestSummary> {
                     .map(|v| v.as_f64())
                     .transpose()?
                     .unwrap_or(0.0),
+                // trace summaries are absent on pre-policy manifests —
+                // readers (status, gc) fall back silently
+                mean_q: entry
+                    .opt("mean_q")
+                    .map(|v| v.as_f64())
+                    .transpose()?,
+                realized_cost: entry
+                    .opt("realized_cost")
+                    .map(|v| v.as_f64())
+                    .transpose()?,
             },
         );
     }
@@ -757,6 +809,8 @@ fn outcome_to_json(spec_hash: &str, index: usize, out: &RunOutcome) -> Json {
             ),
         ),
         ("gbitops", jnum(h.gbitops)),
+        ("mean_q", jnum(h.mean_q)),
+        ("realized_cost", jnum(h.realized_cost)),
         ("exec_seconds", jnum(h.exec_seconds)),
         ("total_seconds", jnum(h.total_seconds)),
     ]);
@@ -774,6 +828,8 @@ fn outcome_to_json(spec_hash: &str, index: usize, out: &RunOutcome) -> Json {
         ("metric", jnum(out.metric)),
         ("eval_loss", jnum(out.eval_loss)),
         ("steps", num(out.steps as f64)),
+        ("mean_q", jnum(out.mean_q)),
+        ("realized_cost", jnum(out.realized_cost)),
         ("exec_seconds", jnum(out.exec_seconds)),
         ("history", history),
     ])
@@ -822,6 +878,8 @@ fn outcome_from_json(j: &Json) -> Result<RunOutcome> {
             })
             .collect::<Result<_>>()?,
         gbitops: as_num(hj.get("gbitops")?)?,
+        mean_q: as_num(hj.get("mean_q")?)?,
+        realized_cost: as_num(hj.get("realized_cost")?)?,
         exec_seconds: as_num(hj.get("exec_seconds")?)?,
         total_seconds: as_num(hj.get("total_seconds")?)?,
     };
@@ -835,6 +893,8 @@ fn outcome_from_json(j: &Json) -> Result<RunOutcome> {
         metric: as_num(j.get("metric")?)?,
         eval_loss: as_num(j.get("eval_loss")?)?,
         steps: j.get("steps")?.as_usize()?,
+        mean_q: as_num(j.get("mean_q")?)?,
+        realized_cost: as_num(j.get("realized_cost")?)?,
         exec_seconds: as_num(j.get("exec_seconds")?)?,
         history,
     })
@@ -866,6 +926,8 @@ mod tests {
             metric: 0.5 + index as f64 * 0.0625,
             eval_loss: 0.125,
             steps: 8,
+            mean_q: 0.6875 + index as f64 * 0.0625,
+            realized_cost: 0.5 + index as f64 * 0.03125,
             exec_seconds: 0.25,
             history: History {
                 losses: vec![(0, 1.25), (1, 0.5 + index as f32 * 0.125)],
@@ -873,6 +935,8 @@ mod tests {
                 evals: vec![(1, 0.75, 0.875)],
                 precisions: vec![(0, 3), (1, 8)],
                 gbitops: 1.5 + index as f64 * 0.1,
+                mean_q: 0.6875 + index as f64 * 0.0625,
+                realized_cost: 0.5 + index as f64 * 0.03125,
                 exec_seconds: 0.25,
                 total_seconds: 0.5,
             },
@@ -894,6 +958,8 @@ mod tests {
         assert_eq!(a.gbitops.to_bits(), b.gbitops.to_bits());
         assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits());
         assert_eq!(a.steps, b.steps);
+        assert_eq!(a.mean_q.to_bits(), b.mean_q.to_bits());
+        assert_eq!(a.realized_cost.to_bits(), b.realized_cost.to_bits());
         assert_eq!(a.exec_seconds.to_bits(), b.exec_seconds.to_bits());
         assert_eq!(a.history.losses, b.history.losses);
         assert_eq!(a.history.metrics, b.history.metrics);
@@ -1055,6 +1121,50 @@ mod tests {
         let m1 = read_manifest(&dir).unwrap();
         assert_eq!((m1.done(), m1.remaining()), (1, 1));
         assert!((m1.exec_seconds() - 0.25).abs() < 1e-12);
+        // the compact trace summary rides in the manifest (status needs
+        // no artifact reads)
+        let e = m1.cells.values().next().unwrap();
+        assert_eq!(e.mean_q, Some(0.6875));
+        assert_eq!(e.realized_cost, Some(0.5));
+        assert_eq!(m1.mean_q(), Some(0.6875));
+        assert_eq!(m1.realized_cost(), Some(0.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifests_without_trace_summaries_fall_back_silently() {
+        // a pre-policy manifest has no mean_q/realized_cost keys: reading
+        // yields None, aggregates yield None, and a rewrite (gc) does not
+        // invent them
+        let dir = tmp("no_trace");
+        let plan = SweepPlan::build(&spec()).unwrap();
+        let mut st = RunStore::open(&dir, &plan, "fp-test", false).unwrap();
+        st.record(0, &fab(&plan.cells[0], 0)).unwrap();
+        let mp = dir.join(MANIFEST_FILE);
+        let src = std::fs::read_to_string(&mp).unwrap();
+        let mut doc = Json::parse(&src).unwrap();
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Obj(cells)) = top.get_mut("cells") {
+                for cell in cells.values_mut() {
+                    if let Json::Obj(e) = cell {
+                        e.remove("mean_q");
+                        e.remove("realized_cost");
+                    }
+                }
+            }
+        }
+        std::fs::write(&mp, doc.to_string_pretty()).unwrap();
+        let m = read_manifest(&dir).unwrap();
+        let e = m.cells.values().next().unwrap();
+        assert_eq!((e.mean_q, e.realized_cost), (None, None));
+        assert_eq!(m.mean_q(), None);
+        assert_eq!(m.realized_cost(), None);
+        write_manifest_file(&dir, &m).unwrap();
+        let back = std::fs::read_to_string(&mp).unwrap();
+        assert!(
+            !back.contains("mean_q") && !back.contains("realized_cost"),
+            "rewrite must not fabricate trace summaries"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1099,6 +1209,14 @@ mod tests {
             assert_eq!(out.metric.to_bits(), want.metric.to_bits());
             assert_eq!(out.gbitops.to_bits(), want.gbitops.to_bits());
             assert_eq!(out.exec_seconds.to_bits(), want.exec_seconds.to_bits());
+            // the per-cell trace summary survives gc even though the
+            // precision history it came from is stripped
+            assert_eq!(out.mean_q.to_bits(), want.mean_q.to_bits());
+            assert_eq!(
+                out.realized_cost.to_bits(),
+                want.realized_cost.to_bits()
+            );
+            assert_eq!(out.history.mean_q.to_bits(), want.history.mean_q.to_bits());
             assert_eq!(
                 out.history.gbitops.to_bits(),
                 want.history.gbitops.to_bits(),

@@ -9,9 +9,11 @@
 //!   quantize→matmul with runtime bit-widths;
 //! * **L2** JAX models (python/compile/models): quantized-training
 //!   fwd/bwd, AOT-lowered to HLO text;
-//! * **L3** this crate: the precision-schedule suite, PJRT runtime,
-//!   trainer, synthetic datasets, BitOps accounting and the experiment
-//!   coordinator. Python never runs at training time.
+//! * **L3** this crate: the precision-schedule suite, adaptive precision
+//!   policies (feedback-driven q_t — see [`policy`] and
+//!   rust/DESIGN-policy.md), PJRT runtime, trainer, synthetic datasets,
+//!   BitOps accounting (including exact realized-trace cost figures) and
+//!   the experiment coordinator. Python never runs at training time.
 //!
 //! Quick start:
 //! ```no_run
@@ -33,6 +35,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod policy;
 pub mod quant;
 pub mod runtime;
 pub mod schedule;
@@ -44,12 +47,16 @@ pub mod prelude {
     pub use crate::config::Cli;
     pub use crate::coordinator::{
         aggregate, dataset_for, merge_campaign_roots, merge_run_dirs, recipe,
-        run_campaign, run_one, run_sweep, run_sweep_timed, sweep_cells,
-        CampaignPlan, CampaignSpec, RunOutcome, RunStore, ShardId, SweepCell,
-        SweepPlan, SweepReport, SweepSpec, SweepTiming,
+        run_campaign, run_one, run_one_with_policy, run_sweep,
+        run_sweep_timed, sweep_cells, CampaignPlan, CampaignSpec, RunOutcome,
+        RunStore, ShardId, SweepCell, SweepPlan, SweepReport, SweepSpec,
+        SweepTiming,
     };
     pub use crate::data::Dataset;
     pub use crate::metrics::History;
+    pub use crate::policy::{
+        ChunkFeedback, PolicySpec, PrecisionPolicy, StaticPolicy,
+    };
     pub use crate::quant::BitOpsAccountant;
     pub use crate::runtime::{
         HostTensor, LiteralArena, LoadedModel, Manifest, Runtime,

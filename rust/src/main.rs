@@ -4,8 +4,11 @@
 //!   info                         list models in the artifact manifest
 //!   schedules [--csv PATH]       dump S(t)/q_t series for the suite (Fig 2)
 //!   train     --model M [...]    one training run with a chosen schedule
+//!                                or an adaptive --policy
 //!   sweep     --model M [...]    schedule suite sweep (one figure panel);
-//!                                shardable + resumable via --shard/--run-dir
+//!                                shardable + resumable via --shard/--run-dir;
+//!                                --policy swaps the schedule suite for a
+//!                                feedback-driven precision policy
 //!   campaign  --file F.toml      run several named sweeps as one
 //!                                content-addressed tree (a figure campaign)
 //!   merge     DIR...             validate + combine shard run dirs — or
@@ -24,7 +27,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use cpt::coordinator::campaign::{
-    self, CampaignRunOpts, SchedulerKind, Status,
+    self, set_policy, CampaignRunOpts, SchedulerKind, Status,
 };
 use cpt::coordinator::{self, merge_run_dirs, recipes, AggRow, RunOutcome, ShardId};
 use cpt::prelude::*;
@@ -69,13 +72,21 @@ USAGE: cpt <subcommand> [flags]
   info                          list models in artifacts/manifest.json
   schedules [--total N] [--cycles N] [--qmin Q] [--qmax Q] [--csv PATH]
                                 dump the schedule suite's q_t series (Fig 2)
-  train --model M [--schedule CR] [--steps N] [--qmax 8] [--qmin Q]
-        [--cycles N] [--trial T] [--eval-every N] [--verbose]
-                                one training run
-  sweep --model M [--schedules CR,RR,...] [--qmaxes 6,8] [--trials N]
-        [--steps N] [--cycles N] [--jobs N] [--csv PATH] [--verbose]
-        [--shard I/N] [--run-dir DIR] [--resume]
+  train --model M [--schedule CR | --policy P] [--steps N] [--qmax 8]
+        [--qmin Q] [--cycles N] [--trial T] [--eval-every N] [--verbose]
+                                one training run; --policy P runs an
+                                adaptive precision policy instead of a
+                                schedule (P = loss_plateau | cost_governor
+                                | static, with optional key=val args,
+                                e.g. loss_plateau:patience=3,ema=0.25)
+  sweep --model M [--schedules CR,RR,... | --policy P] [--qmaxes 6,8]
+        [--trials N] [--steps N] [--cycles N] [--jobs N] [--csv PATH]
+        [--verbose] [--shard I/N] [--run-dir DIR] [--resume]
                                 full schedule sweep (one figure panel);
+                                with --policy P the schedule axis
+                                collapses to the policy (adaptive cells:
+                                one per q_max x trial); stable CSVs carry
+                                realized mean_q + realized_cost columns;
                                 --jobs N > 1 fans cells over N workers
                                 (results identical to serial);
                                 --shard I/N runs shard I of an N-way
@@ -85,7 +96,7 @@ USAGE: cpt <subcommand> [flags]
                                 cells with valid artifacts
   campaign --file configs/X.toml [--run-dir ROOT] [--shard I/N]
            [--jobs N] [--scheduler global|sequential] [--resume]
-           [--csv-dir DIR] [--verbose]
+           [--csv-dir DIR] [--verbose] [--policy P]
                                 run a multi-sweep figure campaign: the
                                 TOML's [[campaign.sweep]] members execute
                                 in canonical (name-sorted) order, one
@@ -99,7 +110,10 @@ USAGE: cpt <subcommand> [flags]
                                 --shard I/N shards every member the same
                                 way (one root per shard; combine with
                                 `cpt merge ROOT1 ROOT2 ...`); --resume
-                                reopens a root and skips recorded cells
+                                reopens a root and skips recorded cells;
+                                members may carry their own policy key
+                                (policy = \"loss_plateau:...\") and
+                                --policy P overrides every member
   merge [--csv PATH] [--title T] DIR [DIR ...]
         [--csv-dir DIR] ROOT [ROOT ...]
                                 validate N shard run dirs (matching spec
@@ -110,9 +124,11 @@ USAGE: cpt <subcommand> [flags]
                                 and write per-sweep CSVs + campaign.csv
                                 (keyed by sweep name) under --csv-dir
   status DIR [--cells]          report progress straight from the
-                                manifests: done/remaining cells and
-                                recorded per-cell wall-clock, for one
-                                sweep run dir or a whole campaign root
+                                manifests: done/remaining cells,
+                                recorded per-cell wall-clock, and (on
+                                policy-era manifests) realized mean
+                                q/qmax + relative cost, for one sweep
+                                run dir or a whole campaign root
   gc DIR                        compact recorded cell artifacts (strip
                                 per-step histories, keep every scalar);
                                 merged/aggregate CSVs are byte-identical
@@ -120,9 +136,10 @@ USAGE: cpt <subcommand> [flags]
   range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
                                 discover q_min (paper §3.1)
   preset --file configs/X.toml [--shard I/N] [--run-dir D] [--resume]
-         [--jobs N] [--verbose]
+         [--jobs N] [--verbose] [--policy P]
                                 run a sweep preset ([sweep] may set
-                                shard/run_dir/resume/jobs; these CLI
+                                shard/run_dir/resume/jobs, a policy key,
+                                or a [sweep.policy] table; these CLI
                                 flags override it, so one preset file
                                 drives every shard of a campaign)
 
@@ -198,11 +215,25 @@ fn cmd_schedules(cli: &Cli) -> Result<()> {
 
 fn cmd_train(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "model", "schedule", "steps", "qmax", "qmin", "cycles", "trial",
-        "eval-every", "verbose", "curve-csv",
+        "model", "schedule", "policy", "steps", "qmax", "qmin", "cycles",
+        "trial", "eval-every", "verbose", "curve-csv",
     ])?;
     let model_name = cli.require("model")?;
-    let sched_name = cli.str_or("schedule", "CR");
+    let policy = match cli.flag("policy") {
+        Some(p) => PolicySpec::parse(p)?,
+        None => PolicySpec::StaticSuite,
+    };
+    let sched_name = if policy.is_adaptive() {
+        if cli.flag("schedule").is_some() {
+            bail!(
+                "--schedule conflicts with an adaptive --policy: the \
+                 policy chooses q_t from training feedback"
+            );
+        }
+        policy.label().to_string()
+    } else {
+        cli.str_or("schedule", "CR")
+    };
     let rec = recipes::recipe(model_name)?;
     let steps = cli.usize_or("steps", rec.steps)?;
     let q_max = cli.f64_or("qmax", 8.0)?;
@@ -214,13 +245,17 @@ fn cmd_train(cli: &Cli) -> Result<()> {
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(artifacts_dir())?;
     let model = rt.load_model(manifest.model(model_name)?)?;
-    let out = coordinator::run_one(
-        &model, model_name, &sched_name, q_max, trial, steps, cycles,
-        eval_every, cli.bool("verbose"),
+    let out = coordinator::run_one_with_policy(
+        &model, model_name, &policy, &sched_name, q_max, trial, steps,
+        cycles, eval_every, cli.bool("verbose"),
     )?;
     println!(
         "{model_name} {sched_name} q_max={q_max}: metric={:.4} eval_loss={:.4} ({:.3} GBitOps, {:.1}s exec)",
         out.metric, out.eval_loss, out.gbitops, out.exec_seconds
+    );
+    println!(
+        "realized trace: mean q/qmax {:.4}, relative cost {:.4} vs static q_max",
+        out.mean_q, out.realized_cost
     );
     if let Some(path) = cli.flag("curve-csv") {
         let rep = SweepReport::new("train", "metric", rec.higher_is_better);
@@ -323,14 +358,24 @@ fn report_sweep(
 
 fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
-        "model", "schedules", "qmaxes", "trials", "steps", "cycles", "jobs",
-        "csv", "verbose", "shard", "run-dir", "resume",
+        "model", "schedules", "policy", "qmaxes", "trials", "steps",
+        "cycles", "jobs", "csv", "verbose", "shard", "run-dir", "resume",
     ])?;
     let model = cli.require("model")?;
     let rec = recipes::recipe(model)?;
     let mut spec = SweepSpec::new(model);
     if cli.flag("schedules").is_some() {
         spec.schedules = cli.list_or("schedules", &[]);
+    }
+    if let Some(p) = cli.flag("policy") {
+        // adaptive policies collapse the schedule axis to the policy's
+        // label (one cell per q_max x trial); an explicit --schedules
+        // list alongside one is rejected inside set_policy
+        set_policy(
+            &mut spec,
+            PolicySpec::parse(p)?,
+            cli.flag("schedules").is_some(),
+        )?;
     }
     spec.q_maxes = cli
         .list_or("qmaxes", &["6", "8"])
@@ -400,11 +445,24 @@ fn report_campaign(
 fn cmd_campaign(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
-        "scheduler",
+        "scheduler", "policy",
     ])?;
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
-    let cspec = CampaignSpec::from_toml(&doc)?;
+    let mut cspec = CampaignSpec::from_toml(&doc)?;
+    if let Some(p) = cli.flag("policy") {
+        // --policy overrides every member's policy (result-determining:
+        // the campaign hash moves, so it lands in a different root). An
+        // adaptive override replaces each member's schedule axis inside
+        // set_policy; a `static` override of an adaptive member is
+        // refused there — the member's schedule list is gone, so the
+        // override would silently run the STATIC baseline instead.
+        let pol = PolicySpec::parse(p)?;
+        for m in &mut cspec.members {
+            set_policy(&mut m.spec, pol.clone(), false)
+                .with_context(|| format!("campaign member '{}'", m.name))?;
+        }
+    }
     let plan = CampaignPlan::build(&cspec)?;
     let root = cli
         .flag("run-dir")
@@ -503,9 +561,26 @@ fn cmd_status(cli: &Cli) -> Result<()> {
                 m.remaining(),
                 m.exec_seconds()
             );
+            // trace summaries exist only on policy-era manifests; old
+            // trees simply print nothing here
+            if let (Some(mq), Some(rc)) = (m.mean_q(), m.realized_cost()) {
+                println!(
+                    "  realized: mean q/qmax {mq:.4}, relative cost {rc:.4} \
+                     (over recorded cells)"
+                );
+            }
             if cli.bool("cells") {
                 for (index, e) in &m.cells {
-                    println!("  {index:05}  {:<32} {:>8.2}s", e.file, e.seconds);
+                    let trace = match (e.mean_q, e.realized_cost) {
+                        (Some(mq), Some(rc)) => {
+                            format!("  meanq={mq:.3} cost={rc:.3}")
+                        }
+                        _ => String::new(),
+                    };
+                    println!(
+                        "  {index:05}  {:<32} {:>8.2}s{trace}",
+                        e.file, e.seconds
+                    );
                 }
             }
         }
@@ -524,8 +599,14 @@ fn cmd_status(cli: &Cli) -> Result<()> {
                 c.shard
             );
             for m in &c.members {
+                let trace = match (m.mean_q, m.realized_cost) {
+                    (Some(mq), Some(rc)) => {
+                        format!(", meanq {mq:.3}, cost {rc:.3}")
+                    }
+                    _ => String::new(),
+                };
                 println!(
-                    "  {:<16} {:<16} done {}/{} ({} remaining), exec {:.2}s",
+                    "  {:<16} {:<16} done {}/{} ({} remaining), exec {:.2}s{trace}",
                     m.name,
                     m.model,
                     m.done,
@@ -706,9 +787,28 @@ fn cmd_range_test(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_preset(cli: &Cli) -> Result<()> {
-    cli.check_known(&["file", "shard", "run-dir", "resume", "jobs", "verbose"])?;
+    cli.check_known(&[
+        "file", "shard", "run-dir", "resume", "jobs", "verbose", "policy",
+    ])?;
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
+    // reject misspelled sections up front: a typo'd [sweep.policy] (or
+    // [sweep]) header would otherwise be silently ignored — a silent
+    // result change, the same rule the key-level readers apply
+    for name in doc.sections.keys() {
+        if !["", "sweep", "sweep.policy"].contains(&name.as_str()) {
+            bail!(
+                "unknown section [{name}] in preset file (known: [sweep], \
+                 [sweep.policy])"
+            );
+        }
+    }
+    if let Some(t) = doc.tables.keys().next() {
+        bail!(
+            "unexpected table [[{t}]] in a preset file (campaign files \
+             with [[campaign.sweep]] members run via `cpt campaign`)"
+        );
+    }
     let s = doc
         .section("sweep")
         .context("preset needs a [sweep] section")?;
@@ -720,6 +820,30 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
         s,
         campaign::SweepSectionKind::Preset,
     )?;
+    let schedules_explicit = s.get("schedules").is_some();
+    // a [sweep.policy] table is the long-form alternative to the compact
+    // `policy` key inside [sweep]; exactly one of the two may appear
+    if let Some(psec) = doc.section("sweep.policy") {
+        if s.get("policy").is_some() {
+            bail!(
+                "preset sets both a [sweep] policy key and a \
+                 [sweep.policy] table — keep one"
+            );
+        }
+        set_policy(
+            &mut spec,
+            PolicySpec::from_section(psec)?,
+            schedules_explicit,
+        )?;
+    }
+    // The CLI flag overrides whatever the file chose: an adaptive
+    // override replaces the schedule axis inside set_policy; a `static`
+    // override of an adaptive preset is refused there (the preset's
+    // original schedule list is gone, so silently running the STATIC
+    // baseline would be a result change).
+    if let Some(p) = cli.flag("policy") {
+        set_policy(&mut spec, PolicySpec::parse(p)?, false)?;
+    }
     let rec = recipes::recipe(&spec.model)?;
     spec.jobs = cli.usize_or("jobs", spec.jobs)?;
     if cli.bool("verbose") {

@@ -18,6 +18,13 @@ pub struct History {
     pub precisions: Vec<(usize, u32)>,
     /// cumulative effective GBitOps at the end of the run.
     pub gbitops: f64,
+    /// realized mean q_t / q_max over the run (exact, from every executed
+    /// step — not subject to `log_every`). 1.0 for a static-q_max run.
+    pub mean_q: f64,
+    /// realized relative training cost vs static q_max (the
+    /// `schedule::cost` formula applied to the executed trace). Adaptive
+    /// policies make this data-dependent, so it is recorded, not derived.
+    pub realized_cost: f64,
     /// wall-clock seconds spent in executable calls.
     pub exec_seconds: f64,
     /// wall-clock seconds for the full run.

@@ -1,0 +1,180 @@
+//! Budget-steered precision: hit a target realized relative cost.
+//!
+//! The paper reports every schedule's *relative cost* against the static
+//! q_max baseline under its BitOps formula (see `schedule::cost`):
+//!
+//!   cost(t) ∝ q_t² + 2·q_max·q_t        (fwd + 2 bwd GEMMs, q_bwd = q_max)
+//!
+//! The governor turns that accounting into a control loop: given a target
+//! relative cost ρ, the total budget is ρ·T·3·q_max². Before each step it
+//! divides the *remaining* budget by the remaining steps and solves the
+//! per-step cost equation for q —
+//!
+//!   q² + 2·q_max·q = allowance   ⇒   q = √(q_max² + allowance) − q_max
+//!
+//! — clamps to [q_min, q_max], rounds to integer bits, and charges the
+//! rounded step's exact cost back against the budget. Rounding surpluses
+//! and clamp losses therefore feed back immediately: the realized trace
+//! dithers between adjacent bit-widths and lands on the target to within
+//! one step's cost (propcheck-tested). The trace is exact *realized*
+//! accounting — the policy charges the integer precisions the trainer
+//! actually runs, not a schedule-mean estimate.
+//!
+//! Deterministic and feedback-free: the emitted trace is a pure function
+//! of (q_min, q_max, target, total_steps), so it needs no loss signal —
+//! it is the "budget axis" counterpart to [`super::LossPlateauPolicy`]'s
+//! loss axis.
+
+use super::{ChunkFeedback, PrecisionPolicy};
+
+pub struct CostGovernorPolicy {
+    q_min: f64,
+    q_max: f64,
+    total_steps: usize,
+    /// ρ·T·3·q_max² — the run's total cost allowance.
+    budget: f64,
+    /// Exact cost of the integer trace emitted so far.
+    spent: f64,
+    emitted: usize,
+}
+
+impl CostGovernorPolicy {
+    pub fn new(
+        q_min: f64,
+        q_max: f64,
+        target: f64,
+        total_steps: usize,
+    ) -> CostGovernorPolicy {
+        CostGovernorPolicy {
+            q_min,
+            q_max,
+            total_steps,
+            budget: target * total_steps as f64 * 3.0 * q_max * q_max,
+            spent: 0.0,
+            emitted: 0,
+        }
+    }
+
+    /// Step cost under the paper's formula (q_bwd pinned to q_max).
+    fn step_cost(&self, q: f64) -> f64 {
+        q * q + 2.0 * self.q_max * q
+    }
+}
+
+impl PrecisionPolicy for CostGovernorPolicy {
+    fn q_chunk(&mut self, _start: usize, len: usize) -> Vec<f32> {
+        let mut qs = Vec::with_capacity(len);
+        for _ in 0..len {
+            let remaining_steps =
+                self.total_steps.saturating_sub(self.emitted).max(1);
+            let allowance =
+                ((self.budget - self.spent) / remaining_steps as f64).max(0.0);
+            let q_star =
+                (self.q_max * self.q_max + allowance).sqrt() - self.q_max;
+            let q = q_star.clamp(self.q_min, self.q_max).round().max(1.0);
+            self.spent += self.step_cost(q);
+            self.emitted += 1;
+            qs.push(q as f32);
+        }
+        qs
+    }
+
+    /// The governor steers on its own emitted trace (which *is* the
+    /// realized trace — the trainer runs exactly these precisions), so
+    /// loss feedback is deliberately unused.
+    fn observe(&mut self, _fb: ChunkFeedback) {}
+
+    fn label(&self) -> &'static str {
+        "COST_GOV"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::schedule::cost::relative_cost_of_trace;
+    use crate::util::propcheck::propcheck;
+
+    /// Drive a governor to completion under a random chunking and return
+    /// the integer trace.
+    fn trace(
+        q_min: f64,
+        q_max: f64,
+        target: f64,
+        total: usize,
+        rng: &mut crate::util::prng::Pcg32,
+    ) -> Vec<u32> {
+        let mut p = CostGovernorPolicy::new(q_min, q_max, target, total);
+        let mut qs = Vec::with_capacity(total);
+        let mut step = 0usize;
+        while step < total {
+            let k = (1 + rng.below(9) as usize).min(total - step);
+            for q in p.q_chunk(step, k) {
+                qs.push(q as u32);
+            }
+            step += k;
+        }
+        qs
+    }
+
+    #[test]
+    fn realized_cost_lands_on_the_target() {
+        propcheck(150, |rng| {
+            let q_min = 2.0 + rng.below(3) as f64;
+            let q_max = q_min + 2.0 + rng.below(5) as f64;
+            let total = 64 + rng.below(400) as usize;
+            // targets inside the achievable band for [q_min, q_max]
+            let lo = (q_min * q_min + 2.0 * q_max * q_min)
+                / (3.0 * q_max * q_max);
+            let target = lo + (1.0 - lo) * (0.1 + 0.8 * rng.next_f32() as f64);
+            let qs = trace(q_min, q_max, target, total, rng);
+            prop_assert!(qs.len() == total, "trace length");
+            for &q in &qs {
+                prop_assert!(
+                    q as f64 >= q_min - 0.5 && q as f64 <= q_max + 0.5,
+                    "q={q} outside [{q_min}, {q_max}]"
+                );
+            }
+            let realized = relative_cost_of_trace(&qs, q_max);
+            // within one step's worth of relative cost (the rounding
+            // granularity), plus a little float slack
+            let tol = 1.0 / total as f64 + 0.02;
+            prop_assert!(
+                (realized - target).abs() <= tol,
+                "realized {realized:.4} vs target {target:.4} (tol {tol:.4})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unreachable_targets_clamp_to_the_bounds() {
+        let mut rng = crate::util::prng::Pcg32::new(7, 7);
+        // a target cheaper than static q_min: every step clamps to q_min
+        let qs = trace(3.0, 8.0, 0.05, 128, &mut rng);
+        assert!(qs.iter().all(|&q| q == 3), "{qs:?}");
+        // a target of 1.0 (static q_max cost): every step runs at q_max
+        let qs = trace(3.0, 8.0, 1.0, 128, &mut rng);
+        assert!(qs.iter().all(|&q| q == 8), "{qs:?}");
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_chunking_independent() {
+        let mut a = CostGovernorPolicy::new(3.0, 8.0, 0.6, 100);
+        let one: Vec<f32> = (0..100).flat_map(|t| a.q_chunk(t, 1)).collect();
+        let mut b = CostGovernorPolicy::new(3.0, 8.0, 0.6, 100);
+        let mut chunked = Vec::new();
+        let mut step = 0;
+        for k in [7usize, 13, 20, 20, 20, 20] {
+            let k = k.min(100 - step);
+            chunked.extend(b.q_chunk(step, k));
+            step += k;
+        }
+        assert_eq!(one, chunked, "emission must not depend on chunk splits");
+        // dithering between adjacent widths, not a constant
+        let distinct: std::collections::BTreeSet<u32> =
+            one.iter().map(|&q| q as u32).collect();
+        assert!(distinct.len() >= 2, "expected dithering, got {distinct:?}");
+    }
+}

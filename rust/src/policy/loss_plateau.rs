@@ -1,0 +1,201 @@
+//! Plateau-triggered precision switching (MuPPET-style).
+//!
+//! MuPPET trains in fp8→fp16→fp32 stages and switches up when its
+//! gradient-diversity statistic stalls; the analogue on this testbed's
+//! signal set is the EMA of the per-chunk training loss. The policy holds
+//! the lowest usable precision and *raises* it by `q_step` bits whenever
+//! the EMA stops improving for `patience` consecutive chunks — cheap
+//! early training, precision spent only when the optimizer demonstrably
+//! needs it. Hysteresis comes from two knobs: `min_delta` (an improvement
+//! must beat the best EMA by a relative margin to count) and `cooldown`
+//! (chunks ignored right after a switch, while the loss re-equilibrates
+//! at the new precision).
+//!
+//! Deterministic: state is a pure fold over the observed feedback
+//! sequence.
+
+use super::{ChunkFeedback, PrecisionPolicy};
+
+pub struct LossPlateauPolicy {
+    /// Current precision in bits (continuous; emitted rounded).
+    q: f64,
+    q_max: f64,
+    /// EMA smoothing factor in (0, 1].
+    alpha: f64,
+    patience: usize,
+    min_delta: f64,
+    q_step: f64,
+    cooldown: usize,
+    /// EMA of chunk mean loss (None before the first observation).
+    ema_loss: Option<f64>,
+    /// Best EMA seen since the last switch.
+    best: f64,
+    /// Consecutive chunks without a qualifying improvement.
+    stale: usize,
+    cooldown_left: usize,
+}
+
+impl LossPlateauPolicy {
+    pub fn new(
+        q_min: f64,
+        q_max: f64,
+        ema: f64,
+        patience: usize,
+        min_delta: f64,
+        q_step: f64,
+        cooldown: usize,
+    ) -> LossPlateauPolicy {
+        LossPlateauPolicy {
+            q: q_min,
+            q_max,
+            alpha: ema,
+            patience,
+            min_delta,
+            q_step,
+            cooldown,
+            ema_loss: None,
+            best: f64::INFINITY,
+            stale: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    /// Current precision in integer bits.
+    pub fn current_q(&self) -> u32 {
+        self.q.round().max(1.0) as u32
+    }
+}
+
+impl PrecisionPolicy for LossPlateauPolicy {
+    fn q_chunk(&mut self, _start: usize, len: usize) -> Vec<f32> {
+        vec![self.current_q() as f32; len]
+    }
+
+    fn observe(&mut self, fb: ChunkFeedback) {
+        // a diverged chunk (NaN/inf loss) counts as "no improvement"
+        // without poisoning the EMA state
+        let loss = if fb.mean_loss.is_finite() {
+            fb.mean_loss as f64
+        } else {
+            f64::INFINITY
+        };
+        let ema = match (self.ema_loss, loss.is_finite()) {
+            (Some(e), true) => self.alpha * loss + (1.0 - self.alpha) * e,
+            (Some(e), false) => e,
+            (None, true) => loss,
+            (None, false) => return, // nothing observable yet
+        };
+        self.ema_loss = Some(ema);
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return;
+        }
+        // relative-margin improvement test; losses on this testbed are
+        // positive (CE / MSE-style), which the margin arithmetic assumes
+        let improved = loss.is_finite() && ema < self.best * (1.0 - self.min_delta);
+        if improved {
+            self.best = ema;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+            if self.stale >= self.patience && self.q < self.q_max {
+                self.q = (self.q + self.q_step).min(self.q_max);
+                self.stale = 0;
+                self.cooldown_left = self.cooldown;
+                // reset the baseline: the new precision gets a fresh
+                // chance to show progress before the next switch
+                self.best = ema;
+            }
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "LOSS_PLATEAU"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(step: usize, mean_loss: f32) -> ChunkFeedback {
+        ChunkFeedback {
+            step,
+            len: 4,
+            last_loss: mean_loss,
+            mean_loss,
+            loss_volatility: 0.0,
+        }
+    }
+
+    #[test]
+    fn starts_at_q_min_and_emits_constant_chunks() {
+        let mut p = LossPlateauPolicy::new(3.0, 8.0, 1.0, 2, 0.0, 1.0, 0);
+        assert_eq!(p.q_chunk(0, 4), vec![3.0f32; 4]);
+        assert_eq!(p.current_q(), 3);
+    }
+
+    #[test]
+    fn improvement_holds_precision_plateau_raises_it() {
+        // alpha 1 (no smoothing), patience 2, no margin, no cooldown
+        let mut p = LossPlateauPolicy::new(3.0, 8.0, 1.0, 2, 0.0, 1.0, 0);
+        for (t, l) in [2.0f32, 1.5, 1.2].iter().enumerate() {
+            p.observe(fb(t, *l));
+        }
+        assert_eq!(p.current_q(), 3, "improving loss must hold q");
+        p.observe(fb(3, 1.2)); // stale 1
+        assert_eq!(p.current_q(), 3);
+        p.observe(fb(4, 1.2)); // stale 2 >= patience -> raise
+        assert_eq!(p.current_q(), 4);
+        // baseline reset: a new improvement streak holds q at 4
+        p.observe(fb(5, 1.1));
+        p.observe(fb(6, 1.0));
+        assert_eq!(p.current_q(), 4);
+    }
+
+    #[test]
+    fn min_delta_is_a_hysteresis_band() {
+        // 1% margin: a 0.5% improvement per chunk counts as stale
+        let mut p = LossPlateauPolicy::new(3.0, 8.0, 1.0, 2, 0.01, 1.0, 0);
+        let mut loss = 1.0f32;
+        p.observe(fb(0, loss));
+        for t in 1..4 {
+            loss *= 0.995;
+            p.observe(fb(t, loss));
+        }
+        assert_eq!(p.current_q(), 4, "sub-margin progress is a plateau");
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_switches() {
+        let mut p = LossPlateauPolicy::new(3.0, 8.0, 1.0, 1, 0.0, 1.0, 2);
+        p.observe(fb(0, 1.0));
+        p.observe(fb(1, 1.0)); // stale 1 >= patience -> q=4, cooldown=2
+        assert_eq!(p.current_q(), 4);
+        p.observe(fb(2, 1.0)); // cooldown
+        p.observe(fb(3, 1.0)); // cooldown
+        assert_eq!(p.current_q(), 4);
+        p.observe(fb(4, 1.0)); // stale again -> q=5
+        assert_eq!(p.current_q(), 5);
+    }
+
+    #[test]
+    fn clamps_at_q_max_and_survives_nan() {
+        let mut p = LossPlateauPolicy::new(7.0, 8.0, 1.0, 1, 0.0, 4.0, 0);
+        p.observe(fb(0, 1.0));
+        p.observe(fb(1, 1.0)); // raise by 4, clamped to 8
+        assert_eq!(p.current_q(), 8);
+        p.observe(fb(2, f32::NAN)); // must not panic or move q above max
+        p.observe(fb(3, 1.0));
+        assert_eq!(p.current_q(), 8);
+    }
+
+    #[test]
+    fn nan_chunks_count_as_stale_not_as_progress() {
+        let mut p = LossPlateauPolicy::new(3.0, 8.0, 1.0, 2, 0.0, 1.0, 0);
+        p.observe(fb(0, 1.0));
+        p.observe(fb(1, f32::NAN));
+        p.observe(fb(2, f32::INFINITY));
+        assert_eq!(p.current_q(), 4, "diverged chunks are a plateau signal");
+    }
+}

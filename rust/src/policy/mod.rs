@@ -1,0 +1,226 @@
+//! Adaptive precision policies — feedback-driven `q_t` selection.
+//!
+//! The paper fixes its CPT schedules up front; this subsystem makes the
+//! precision trajectory a *decision process*: a [`PrecisionPolicy`]
+//! observes per-chunk training signals (loss, loss EMA/delta, a
+//! gradient-noise proxy, the step budget) and emits the next chunk's
+//! precision. The trainer's loop becomes
+//!
+//! ```text
+//!   q = policy.q_chunk(step, k)      # before the chunk executes
+//!   ... run k steps at q ...
+//!   policy.observe(feedback)         # losses of the executed chunk
+//! ```
+//!
+//! Three deterministic implementations ship:
+//! * [`StaticPolicy`] replays a precomputed [`Schedule`] and ignores all
+//!   feedback — the legacy path is one policy among many, and its chunked
+//!   emission is propcheck-tested pointwise identical to
+//!   [`Schedule::q_vec`], so wrapping a schedule in a policy changes no
+//!   result bit;
+//! * [`LossPlateauPolicy`] raises precision on loss-EMA plateaus
+//!   (MuPPET-style switching with patience + hysteresis);
+//! * [`CostGovernorPolicy`] steers `q_t` to land the run on a target
+//!   realized relative cost (the `schedule::cost` formula).
+//!
+//! **Determinism contract.** A policy must be a pure function of its
+//! [`PolicySpec`] parameters and the feedback sequence it has observed —
+//! no clocks, no RNG, no global state. Training itself is deterministic
+//! per cell (fixed seeds), so the realized trace of an adaptive run is
+//! reproducible, which is what lets adaptive cells shard, resume, and
+//! merge byte-identically: a cell is recomputed either never (artifact
+//! reuse) or from step zero, never from the middle of a trace. The
+//! result-determining identity of a policy is [`PolicySpec::canonical`],
+//! which the sweep-spec hash consumes (see rust/DESIGN-policy.md).
+
+pub mod cost_governor;
+pub mod loss_plateau;
+pub mod spec;
+
+pub use cost_governor::CostGovernorPolicy;
+pub use loss_plateau::LossPlateauPolicy;
+pub use spec::PolicySpec;
+
+use anyhow::{bail, Result};
+
+use crate::schedule::Schedule;
+
+/// Training signals of one executed chunk, fed to the policy before the
+/// next chunk's precision is requested.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkFeedback {
+    /// First optimizer step of the executed chunk.
+    pub step: usize,
+    /// Steps in the chunk.
+    pub len: usize,
+    /// Training loss at the chunk's last step.
+    pub last_loss: f32,
+    /// Mean training loss over the chunk.
+    pub mean_loss: f32,
+    /// Gradient-noise proxy: mean |loss[i+1] − loss[i]| within the chunk
+    /// (0 for single-step chunks). High volatility at low precision is
+    /// the classic symptom of quantization noise drowning the gradient
+    /// signal.
+    pub loss_volatility: f32,
+}
+
+impl ChunkFeedback {
+    /// Fold an executed chunk's per-step training losses into the
+    /// feedback signals. The single definition of the mean/volatility
+    /// fold — the trainer, the policy-trace replay, and the fabricated
+    /// test simulators all build feedback through here, so they can
+    /// never drift apart. `losses` must be non-empty.
+    pub fn from_losses(step: usize, losses: &[f32]) -> ChunkFeedback {
+        let k = losses.len();
+        let mean_loss = losses.iter().sum::<f32>() / k as f32;
+        let loss_volatility = if k > 1 {
+            losses.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f32>()
+                / (k - 1) as f32
+        } else {
+            0.0
+        };
+        ChunkFeedback {
+            step,
+            len: k,
+            last_loss: losses[k - 1],
+            mean_loss,
+            loss_volatility,
+        }
+    }
+}
+
+/// A precision decision process: called once per chunk, fed back once per
+/// chunk. See the module docs for the determinism contract.
+pub trait PrecisionPolicy {
+    /// Integer-valued precisions (as f32, the trainer's wire format) for
+    /// the upcoming chunk `[start, start + len)`.
+    fn q_chunk(&mut self, start: usize, len: usize) -> Vec<f32>;
+
+    /// Observe the executed chunk's training signals.
+    fn observe(&mut self, fb: ChunkFeedback);
+
+    /// Short display label (the CSV `schedule` column for adaptive runs).
+    fn label(&self) -> &'static str;
+}
+
+/// The legacy path as a policy: replay a precomputed schedule, ignore all
+/// feedback.
+pub struct StaticPolicy {
+    schedule: Schedule,
+}
+
+impl StaticPolicy {
+    pub fn new(schedule: Schedule) -> StaticPolicy {
+        StaticPolicy { schedule }
+    }
+}
+
+impl PrecisionPolicy for StaticPolicy {
+    fn q_chunk(&mut self, start: usize, len: usize) -> Vec<f32> {
+        self.schedule.q_vec(start, len)
+    }
+
+    fn observe(&mut self, _fb: ChunkFeedback) {}
+
+    fn label(&self) -> &'static str {
+        "STATIC"
+    }
+}
+
+impl PolicySpec {
+    /// Instantiate an adaptive policy over `[q_min, q_max]` for a run of
+    /// `total_steps`. `StaticSuite` has no adaptive instantiation — the
+    /// caller wraps its schedule in [`StaticPolicy`] instead (it needs
+    /// the cell's schedule, which this spec deliberately knows nothing
+    /// about).
+    pub fn build_adaptive(
+        &self,
+        q_min: f64,
+        q_max: f64,
+        total_steps: usize,
+    ) -> Result<Box<dyn PrecisionPolicy>> {
+        self.validate()?;
+        if q_min > q_max {
+            bail!("policy bounds: q_min {q_min} > q_max {q_max}");
+        }
+        if total_steps == 0 {
+            bail!("policy needs total_steps >= 1");
+        }
+        Ok(match *self {
+            PolicySpec::StaticSuite => bail!(
+                "'static' is not an adaptive policy — it replays the \
+                 cell's named schedule"
+            ),
+            PolicySpec::LossPlateau {
+                ema, patience, min_delta, q_step, cooldown,
+            } => Box::new(LossPlateauPolicy::new(
+                q_min, q_max, ema, patience, min_delta, q_step, cooldown,
+            )),
+            PolicySpec::CostGovernor { target } => Box::new(
+                CostGovernorPolicy::new(q_min, q_max, target, total_steps),
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::schedule::suite;
+    use crate::util::propcheck::propcheck;
+
+    /// The StaticSuite equivalence bar: chunked policy emission, with
+    /// arbitrary chunk splits and arbitrary interleaved feedback, equals
+    /// Schedule::q_vec pointwise — the legacy schedule path reproduced
+    /// bit-identically through the policy machinery.
+    #[test]
+    fn static_policy_matches_schedule_pointwise_under_any_chunking() {
+        propcheck(200, |rng| {
+            let names = suite::suite_names();
+            let name = names[rng.below(names.len() as u32) as usize];
+            let total = 16 + rng.below(400) as usize;
+            let n = 2 * (1 + rng.below(4) as usize);
+            let q_min = 2.0 + rng.below(4) as f64;
+            let q_max = q_min + 1.0 + rng.below(6) as f64;
+            let sched = suite::by_name(name, q_min, q_max, total, n)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = sched.q_vec(0, total);
+            let mut policy = StaticPolicy::new(sched);
+            let mut got = Vec::with_capacity(total);
+            let mut step = 0usize;
+            while step < total {
+                let k = (1 + rng.below(9) as usize).min(total - step);
+                let qs = policy.q_chunk(step, k);
+                prop_assert!(qs.len() == k, "chunk length {} != {k}", qs.len());
+                got.extend_from_slice(&qs);
+                // feedback is ignored by construction — feed noise to
+                // prove it cannot perturb the emission
+                policy.observe(ChunkFeedback {
+                    step,
+                    len: k,
+                    last_loss: rng.next_f32(),
+                    mean_loss: rng.next_f32(),
+                    loss_volatility: rng.next_f32(),
+                });
+                step += k;
+            }
+            prop_assert!(got == want, "chunked emission differs from q_vec");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn build_adaptive_rejects_static_and_bad_bounds() {
+        let err = PolicySpec::StaticSuite
+            .build_adaptive(3.0, 8.0, 100)
+            .unwrap_err();
+        assert!(err.to_string().contains("not an adaptive"), "{err:#}");
+        let p = PolicySpec::parse("loss_plateau").unwrap();
+        assert!(p.build_adaptive(8.0, 3.0, 100).is_err());
+        assert!(p.build_adaptive(3.0, 8.0, 0).is_err());
+        assert!(p.build_adaptive(3.0, 8.0, 100).is_ok());
+        let g = PolicySpec::parse("cost_governor").unwrap();
+        assert_eq!(g.build_adaptive(3.0, 8.0, 100).unwrap().label(), "COST_GOV");
+    }
+}

@@ -1,0 +1,347 @@
+//! Canonical, hashable description of a precision policy.
+//!
+//! A [`PolicySpec`] is to a policy what a schedule name is to a schedule:
+//! the result-determining identity that flows into the sweep-spec hash,
+//! the TOML files, and the CLI. Every field of every variant changes the
+//! realized `q_t` trace, so every field is inside [`PolicySpec::canonical`]
+//! — the string [`crate::coordinator::SweepPlan`] hashes. The default
+//! (`StaticSuite`) is deliberately *absent* from the hash stream so a
+//! sweep that never mentions policies hashes exactly as it did before the
+//! policy subsystem existed.
+//!
+//! Three surface syntaxes, one canonical form:
+//! * CLI / compact TOML key: `loss_plateau:ema=0.5,patience=2` (the part
+//!   after `:` is optional — omitted keys take their defaults);
+//! * `[sweep.policy]` preset table: `kind = "loss_plateau"` plus one key
+//!   per parameter;
+//! * [`PolicySpec::canonical`]: the compact syntax with *every* parameter
+//!   spelled out in sorted key order — parsing it reproduces the spec
+//!   exactly (round-trip tested).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::Section;
+
+/// How the trainer chooses the next chunk's precision.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum PolicySpec {
+    /// Legacy path: the cell's named schedule drives `q_t` (the paper's
+    /// precomputed CPT suite). The default everywhere.
+    #[default]
+    StaticSuite,
+    /// MuPPET-style switching: hold a low precision and raise it by
+    /// `q_step` bits whenever the EMA of the chunk training loss stops
+    /// improving for `patience` consecutive chunks (with a post-switch
+    /// `cooldown` as hysteresis).
+    LossPlateau {
+        /// EMA smoothing factor in (0, 1]; 1 = no smoothing.
+        ema: f64,
+        /// Chunks without relative improvement tolerated before a switch.
+        patience: usize,
+        /// Relative EMA improvement that counts as progress (hysteresis
+        /// band), in [0, 1).
+        min_delta: f64,
+        /// Bits added per switch (> 0).
+        q_step: f64,
+        /// Chunks ignored after a switch before plateau tracking resumes.
+        cooldown: usize,
+    },
+    /// Budget steering: tracks the realized accumulated bit-ops of the
+    /// trace it has emitted (the `schedule::cost` formula) and picks each
+    /// step's `q_t` so the run lands on `target` × the static-`q_max`
+    /// cost.
+    CostGovernor {
+        /// Target realized relative cost vs static `q_max`, in (0, 1].
+        target: f64,
+    },
+}
+
+impl PolicySpec {
+    /// Default parameter set for a policy kind.
+    pub fn default_for(kind: &str) -> Result<PolicySpec> {
+        Ok(match kind {
+            "static" => PolicySpec::StaticSuite,
+            "loss_plateau" => PolicySpec::LossPlateau {
+                ema: 0.5,
+                patience: 2,
+                min_delta: 0.01,
+                q_step: 1.0,
+                cooldown: 1,
+            },
+            "cost_governor" => PolicySpec::CostGovernor { target: 0.7 },
+            other => bail!(
+                "unknown policy '{other}' (known: static, loss_plateau, \
+                 cost_governor)"
+            ),
+        })
+    }
+
+    /// Parse the compact syntax: `kind` or `kind:key=val,key=val`.
+    pub fn parse(s: &str) -> Result<PolicySpec> {
+        let (kind, args) = match s.split_once(':') {
+            Some((k, a)) => (k.trim(), Some(a)),
+            None => (s.trim(), None),
+        };
+        let mut spec = PolicySpec::default_for(kind)?;
+        if let Some(args) = args {
+            for part in args.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (k, v) = part.split_once('=').with_context(|| {
+                    format!("policy parameter '{part}' is not key=value")
+                })?;
+                let v: f64 = v.trim().parse().with_context(|| {
+                    format!("policy parameter '{k}' has non-numeric value")
+                })?;
+                spec.set(k.trim(), v)?;
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a `[sweep.policy]` table: `kind = "..."` plus one key per
+    /// parameter. Unknown keys are rejected (a typo would otherwise be a
+    /// silent result change).
+    pub fn from_section(sec: &Section) -> Result<PolicySpec> {
+        let kind = sec
+            .get("kind")
+            .context("policy table needs kind")?
+            .as_str()?;
+        let mut spec = PolicySpec::default_for(kind)?;
+        for (k, v) in sec {
+            if k == "kind" {
+                continue;
+            }
+            spec.set(k, v.as_f64().with_context(|| format!("policy key '{k}'"))?)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Set one parameter by name; rejects keys the variant does not have.
+    fn set(&mut self, key: &str, v: f64) -> Result<()> {
+        let as_count = |what: &str| -> Result<usize> {
+            if v < 0.0 || v.fract() != 0.0 {
+                bail!("policy parameter '{what}' must be a whole number >= 0");
+            }
+            Ok(v as usize)
+        };
+        match self {
+            PolicySpec::StaticSuite => {
+                bail!("policy 'static' takes no parameters (got '{key}')")
+            }
+            PolicySpec::LossPlateau {
+                ema, patience, min_delta, q_step, cooldown,
+            } => match key {
+                "ema" => *ema = v,
+                "patience" => *patience = as_count("patience")?,
+                "min_delta" => *min_delta = v,
+                "q_step" => *q_step = v,
+                "cooldown" => *cooldown = as_count("cooldown")?,
+                other => bail!(
+                    "unknown loss_plateau parameter '{other}' (known: ema, \
+                     patience, min_delta, q_step, cooldown)"
+                ),
+            },
+            PolicySpec::CostGovernor { target } => match key {
+                "target" => *target = v,
+                other => bail!(
+                    "unknown cost_governor parameter '{other}' (known: \
+                     target)"
+                ),
+            },
+        }
+        Ok(())
+    }
+
+    /// Range checks — every parameter that could make a policy diverge or
+    /// deadlock is fenced here, once, for all three input syntaxes.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            PolicySpec::StaticSuite => {}
+            PolicySpec::LossPlateau {
+                ema, patience, min_delta, q_step, ..
+            } => {
+                if ema.is_nan() || ema <= 0.0 || ema > 1.0 {
+                    bail!("loss_plateau ema must be in (0, 1], got {ema}");
+                }
+                if patience == 0 {
+                    bail!("loss_plateau patience must be >= 1");
+                }
+                if !(0.0..1.0).contains(&min_delta) {
+                    bail!(
+                        "loss_plateau min_delta must be in [0, 1), got \
+                         {min_delta}"
+                    );
+                }
+                if q_step.is_nan() || q_step <= 0.0 {
+                    bail!("loss_plateau q_step must be > 0, got {q_step}");
+                }
+            }
+            PolicySpec::CostGovernor { target } => {
+                if target.is_nan() || target <= 0.0 || target > 1.0 {
+                    bail!(
+                        "cost_governor target must be in (0, 1], got {target}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical encoding: compact syntax with every parameter in
+    /// sorted key order. This is what the sweep-spec hash consumes, so
+    /// two specs are hash-equal iff they are value-equal.
+    pub fn canonical(&self) -> String {
+        match *self {
+            PolicySpec::StaticSuite => "static".to_string(),
+            PolicySpec::LossPlateau {
+                ema, patience, min_delta, q_step, cooldown,
+            } => format!(
+                "loss_plateau:cooldown={cooldown},ema={ema},min_delta=\
+                 {min_delta},patience={patience},q_step={q_step}"
+            ),
+            PolicySpec::CostGovernor { target } => {
+                format!("cost_governor:target={target}")
+            }
+        }
+    }
+
+    /// Display label; adaptive sweeps use it as their single schedule-axis
+    /// entry (the CSV `schedule` column).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicySpec::StaticSuite => "STATIC",
+            PolicySpec::LossPlateau { .. } => "LOSS_PLATEAU",
+            PolicySpec::CostGovernor { .. } => "COST_GOV",
+        }
+    }
+
+    /// Does this policy choose `q_t` from feedback (true) or replay the
+    /// cell's named schedule (false)?
+    pub fn is_adaptive(&self) -> bool {
+        !matches!(self, PolicySpec::StaticSuite)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml::TomlDoc;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        assert_eq!(PolicySpec::parse("static").unwrap(), PolicySpec::StaticSuite);
+        let p = PolicySpec::parse("loss_plateau").unwrap();
+        assert_eq!(p, PolicySpec::default_for("loss_plateau").unwrap());
+        let p = PolicySpec::parse("loss_plateau:patience=4,ema=0.25").unwrap();
+        match p {
+            PolicySpec::LossPlateau { ema, patience, .. } => {
+                assert_eq!(patience, 4);
+                assert!((ema - 0.25).abs() < 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+        let p = PolicySpec::parse("cost_governor:target=0.55").unwrap();
+        assert_eq!(p, PolicySpec::CostGovernor { target: 0.55 });
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        for bad in [
+            "bogus",
+            "static:x=1",
+            "loss_plateau:nope=1",
+            "loss_plateau:patience=1.5",
+            "loss_plateau:patience",
+            "loss_plateau:ema=zero",
+            "loss_plateau:ema=0",
+            "loss_plateau:ema=1.5",
+            "loss_plateau:patience=0",
+            "loss_plateau:min_delta=1",
+            "loss_plateau:q_step=0",
+            "cost_governor:target=0",
+            "cost_governor:target=1.2",
+            "cost_governor:nope=1",
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn canonical_round_trips() {
+        propcheck(200, |rng| {
+            let spec = match rng.below(3) {
+                0 => PolicySpec::StaticSuite,
+                1 => PolicySpec::LossPlateau {
+                    ema: 0.05 + 0.95 * rng.next_f32() as f64,
+                    patience: 1 + rng.below(6) as usize,
+                    min_delta: 0.25 * rng.next_f32() as f64,
+                    q_step: 0.5 + rng.below(4) as f64 * 0.5,
+                    cooldown: rng.below(4) as usize,
+                },
+                _ => PolicySpec::CostGovernor {
+                    target: 0.05 + 0.95 * rng.next_f32() as f64,
+                },
+            };
+            let back = PolicySpec::parse(&spec.canonical())
+                .map_err(|e| format!("{e:#}"))?;
+            prop_assert!(
+                back == spec,
+                "canonical round-trip changed the spec: {spec:?} -> {back:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_section_reads_policy_tables() {
+        let doc = TomlDoc::parse(
+            "[sweep.policy]\nkind = \"loss_plateau\"\npatience = 3\n\
+             min_delta = 0.02",
+        )
+        .unwrap();
+        let p = PolicySpec::from_section(doc.section("sweep.policy").unwrap())
+            .unwrap();
+        match p {
+            PolicySpec::LossPlateau { patience, min_delta, ema, .. } => {
+                assert_eq!(patience, 3);
+                assert!((min_delta - 0.02).abs() < 1e-12);
+                assert!((ema - 0.5).abs() < 1e-12, "default kept");
+            }
+            other => panic!("{other:?}"),
+        }
+        // unknown keys and missing kind are rejected
+        let doc = TomlDoc::parse("[sweep.policy]\nkind = \"loss_plateau\"\nnope = 1")
+            .unwrap();
+        assert!(
+            PolicySpec::from_section(doc.section("sweep.policy").unwrap())
+                .is_err()
+        );
+        let doc = TomlDoc::parse("[sweep.policy]\npatience = 3").unwrap();
+        assert!(
+            PolicySpec::from_section(doc.section("sweep.policy").unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn labels_and_adaptivity() {
+        assert!(!PolicySpec::StaticSuite.is_adaptive());
+        assert!(PolicySpec::parse("loss_plateau").unwrap().is_adaptive());
+        assert!(PolicySpec::parse("cost_governor").unwrap().is_adaptive());
+        assert_eq!(
+            PolicySpec::parse("loss_plateau").unwrap().label(),
+            "LOSS_PLATEAU"
+        );
+        assert_eq!(
+            PolicySpec::parse("cost_governor").unwrap().label(),
+            "COST_GOV"
+        );
+    }
+}

@@ -23,6 +23,14 @@ pub struct BitOpsAccountant {
     fp_flops_fwd: f64,
     q_bwd: f64,
     total: f64,
+    /// Quantized-GEMM share of `total` — the part a precision trace
+    /// controls; the realized-cost ratio is taken against this alone,
+    /// matching `schedule::cost::relative_cost` (FP GEMMs cost the same
+    /// under every schedule and would only dilute the ratio).
+    q_total: f64,
+    /// Σ q_t over recorded steps (for the realized mean q/q_max).
+    q_sum: f64,
+    steps: usize,
 }
 
 /// Fold a model's aggregation GEMMs into effective FLOP counts at the
@@ -50,12 +58,20 @@ impl BitOpsAccountant {
     /// `agg_density` rescales GNN aggregation GEMMs (1.0 for non-GNNs).
     pub fn new(spec: &ModelSpec, q_bwd: f64, agg_density: f64) -> Self {
         let (q_flops_fwd, fp_flops_fwd) = effective_flops(spec, agg_density);
-        BitOpsAccountant { q_flops_fwd, fp_flops_fwd, q_bwd, total: 0.0 }
+        Self::from_flops(q_flops_fwd, fp_flops_fwd, q_bwd)
     }
 
     /// Construct from raw FLOP counts (tests / analytic comparisons).
     pub fn from_flops(q_flops_fwd: f64, fp_flops_fwd: f64, q_bwd: f64) -> Self {
-        BitOpsAccountant { q_flops_fwd, fp_flops_fwd, q_bwd, total: 0.0 }
+        BitOpsAccountant {
+            q_flops_fwd,
+            fp_flops_fwd,
+            q_bwd,
+            total: 0.0,
+            q_total: 0.0,
+            q_sum: 0.0,
+            steps: 0,
+        }
     }
 
     /// Account one training step at forward precision `q_t`.
@@ -67,6 +83,9 @@ impl BitOpsAccountant {
         // FP GEMMs: fwd + 2 bwd at full precision
         let fp_cost = self.fp_flops_fwd * 3.0;
         self.total += q_cost + fp_cost;
+        self.q_total += q_cost;
+        self.q_sum += q_t;
+        self.steps += 1;
     }
 
     /// Account a whole chunk of steps.
@@ -78,6 +97,30 @@ impl BitOpsAccountant {
 
     pub fn total(&self) -> BitOpsTotal {
         BitOpsTotal { gbitops: self.total / 1e9 }
+    }
+
+    /// Exact realized relative cost of the recorded trace vs a static run
+    /// at `q_bwd` (= q_max) — quantized GEMMs only, so the figure equals
+    /// [`crate::schedule::cost::relative_cost_of_trace`] on the same
+    /// trace (the FLOP factor cancels). 1.0 when nothing quantized was
+    /// recorded (FP-only model or an empty run).
+    pub fn realized_relative_cost(&self) -> f64 {
+        let rb = self.q_bwd / 32.0;
+        let static_step = self.q_flops_fwd * 3.0 * rb * rb;
+        let denom = self.steps as f64 * static_step;
+        if denom <= 0.0 {
+            return 1.0;
+        }
+        self.q_total / denom
+    }
+
+    /// Realized mean `q_t / q_bwd` over the recorded trace (1.0 for an
+    /// empty run).
+    pub fn realized_mean_q(&self) -> f64 {
+        if self.steps == 0 || self.q_bwd <= 0.0 {
+            return 1.0;
+        }
+        self.q_sum / (self.steps as f64 * self.q_bwd)
     }
 
     /// Cost of one step at precision q (without recording).
@@ -114,6 +157,39 @@ mod tests {
     fn fp_gemms_are_precision_independent() {
         let acc = BitOpsAccountant::from_flops(0.0, 1e6, 8.0);
         assert_eq!(acc.step_cost(3.0), acc.step_cost(8.0));
+    }
+
+    #[test]
+    fn realized_accounting_matches_trace_cost() {
+        // the accountant's realized figures must agree exactly with the
+        // model-independent trace formulas in schedule::cost — and they
+        // must ignore the FP-GEMM share, which no schedule controls
+        let total_iters = 1500;
+        let sched = suite::by_name("RTH", 3.0, 8.0, total_iters, 8).unwrap();
+        let qs: Vec<u32> = (0..total_iters).map(|t| sched.q_at(t)).collect();
+        let mut acc = BitOpsAccountant::from_flops(2e6, 5e5, 8.0);
+        acc.record_steps(&sched.q_vec(0, total_iters));
+        let want_cost =
+            crate::schedule::cost::relative_cost_of_trace(&qs, 8.0);
+        let want_mq =
+            crate::schedule::cost::mean_relative_q_of_trace(&qs, 8.0);
+        assert!(
+            (acc.realized_relative_cost() - want_cost).abs() < 1e-9,
+            "{} vs {want_cost}",
+            acc.realized_relative_cost()
+        );
+        assert!(
+            (acc.realized_mean_q() - want_mq).abs() < 1e-9,
+            "{} vs {want_mq}",
+            acc.realized_mean_q()
+        );
+        // degenerate: nothing recorded, or nothing quantized
+        let empty = BitOpsAccountant::from_flops(1e6, 0.0, 8.0);
+        assert_eq!(empty.realized_relative_cost(), 1.0);
+        assert_eq!(empty.realized_mean_q(), 1.0);
+        let mut fp_only = BitOpsAccountant::from_flops(0.0, 1e6, 8.0);
+        fp_only.record_step(4.0);
+        assert_eq!(fp_only.realized_relative_cost(), 1.0);
     }
 
     #[test]

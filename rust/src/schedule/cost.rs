@@ -25,6 +25,36 @@ pub fn relative_cost(schedule: &Schedule, q_max: f64, total_iters: usize) -> f64
     num / den
 }
 
+/// Exact relative cost of a *realized* precision trace — the integer
+/// `q_t` series a run actually executed — against the static `q_max`
+/// baseline. [`relative_cost`] predicts this from a schedule; adaptive
+/// policies make the trace data-dependent, so the realized figure is
+/// computed from the trace itself (the trainer accumulates it via
+/// [`crate::quant::BitOpsAccountant::realized_relative_cost`], which
+/// agrees with this function exactly — the model's FLOP factor cancels).
+pub fn relative_cost_of_trace(qs: &[u32], q_max: f64) -> f64 {
+    if qs.is_empty() || q_max <= 0.0 {
+        return 1.0;
+    }
+    let mut num = 0.0;
+    for &q in qs {
+        let q = q as f64;
+        num += q * q + 2.0 * q_max * q;
+    }
+    num / (qs.len() as f64 * 3.0 * q_max * q_max)
+}
+
+/// Realized mean `q_t / q_max` of a trace — the headline compute-savings
+/// figure for a data-dependent run (the trace counterpart of
+/// [`Schedule::mean_relative_precision`]).
+pub fn mean_relative_q_of_trace(qs: &[u32], q_max: f64) -> f64 {
+    if qs.is_empty() || q_max <= 0.0 {
+        return 1.0;
+    }
+    let s: f64 = qs.iter().map(|&q| q as f64).sum();
+    s / (qs.len() as f64 * q_max)
+}
+
 /// Forward-pass-only relative cost (used for inference-cost style
 /// comparisons and ablation reporting).
 pub fn relative_cost_fwd_only(
@@ -77,6 +107,37 @@ mod tests {
         };
         let (l, m, s) = (avg(Group::Large), avg(Group::Medium), avg(Group::Small));
         assert!(l < m && m < s, "cost groups broken: {l:.3} {m:.3} {s:.3}");
+    }
+
+    #[test]
+    fn trace_cost_agrees_with_schedule_prediction() {
+        // materializing a schedule into its integer trace and costing the
+        // trace must reproduce the analytic figure exactly (same formula,
+        // same rounding)
+        let total = 2000;
+        for name in suite_names() {
+            let s = by_name(name, 3.0, 8.0, total, 8).unwrap();
+            let qs: Vec<u32> = (0..total).map(|t| s.q_at(t)).collect();
+            let from_trace = relative_cost_of_trace(&qs, 8.0);
+            let from_schedule = relative_cost(&s, 8.0, total);
+            assert!(
+                (from_trace - from_schedule).abs() < 1e-12,
+                "{name}: {from_trace} vs {from_schedule}"
+            );
+            let mq = mean_relative_q_of_trace(&qs, 8.0);
+            let want = s.mean_relative_precision(total);
+            assert!((mq - want).abs() < 1e-12, "{name}: {mq} vs {want}");
+        }
+    }
+
+    #[test]
+    fn trace_cost_degenerate_inputs() {
+        assert_eq!(relative_cost_of_trace(&[], 8.0), 1.0);
+        assert_eq!(mean_relative_q_of_trace(&[], 8.0), 1.0);
+        assert_eq!(relative_cost_of_trace(&[8; 10], 0.0), 1.0);
+        // a static-q_max trace costs exactly 1
+        assert!((relative_cost_of_trace(&[8; 64], 8.0) - 1.0).abs() < 1e-12);
+        assert!((mean_relative_q_of_trace(&[8; 64], 8.0) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -30,7 +30,10 @@ pub mod profiles;
 pub mod suite;
 
 pub use compose::Composed;
-pub use cost::{relative_cost, relative_cost_fwd_only};
+pub use cost::{
+    mean_relative_q_of_trace, relative_cost, relative_cost_fwd_only,
+    relative_cost_of_trace,
+};
 pub use profiles::Profile;
 pub use suite::{group_of, suite_names, Group};
 

@@ -2,18 +2,27 @@
 //! precision `Schedule` — the L3 hot path.
 //!
 //! Per chunk of K optimizer steps:
-//!   1. evaluate the CPT schedule -> q_fwd[K] (integer-rounded bit-widths),
+//!   1. ask the precision policy for q_fwd[K] (integer-rounded
+//!      bit-widths) — a [`crate::policy::StaticPolicy`] replays the CPT
+//!      schedule exactly as the pre-policy trainer did; adaptive policies
+//!      choose from the feedback of step 6,
 //!   2. evaluate the LR schedule  -> lr[K],
 //!   3. assemble K minibatches into arena scratch (stacked) + shared
 //!      inputs (converted to literals once per run when the dataset marks
 //!      them static),
 //!   4. one PJRT call on the train-chunk executable (state uploaded from
 //!      cached host vectors — no clone_literal roundtrips),
-//!   5. account BitOps, record history, run periodic eval (eval-batch
-//!      literals also cached across evals for static datasets).
+//!   5. account BitOps (exact realized trace: mean q and relative cost
+//!      land in the History), record history, run periodic eval
+//!      (eval-batch literals also cached across evals for static
+//!      datasets),
+//!   6. feed the chunk's loss signals back to the policy
+//!      ([`crate::policy::ChunkFeedback`]) — the input to the next
+//!      chunk's precision decision.
 //!
 //! Python is never involved; the schedule decisions (the paper's
-//! contribution) all happen here. Caching invariants are documented in
+//! contribution) and the policy feedback loop (rust/DESIGN-policy.md)
+//! all happen here. Caching invariants are documented in
 //! rust/DESIGN-perf.md.
 
 pub mod checkpoint;
@@ -28,6 +37,7 @@ use xla::Literal;
 
 use crate::data::Dataset;
 use crate::metrics::History;
+use crate::policy::{ChunkFeedback, PrecisionPolicy, StaticPolicy};
 use crate::quant::BitOpsAccountant;
 use crate::runtime::{HostTensor, LiteralArena, LoadedModel, TrainState};
 use crate::schedule::Schedule;
@@ -66,7 +76,9 @@ impl Default for TrainConfig {
 pub struct Trainer<'m, 'd> {
     pub model: &'m LoadedModel,
     pub data: &'d mut dyn Dataset,
-    pub schedule: Schedule,
+    /// Precision decision process: [`StaticPolicy`] for schedule-driven
+    /// runs (the paper's path), adaptive policies otherwise.
+    pub policy: Box<dyn PrecisionPolicy>,
     pub lr: LrSchedule,
     pub cfg: TrainConfig,
     /// Reusable scratch for stacked-minibatch assembly (one slot per
@@ -85,6 +97,10 @@ pub struct Trainer<'m, 'd> {
 }
 
 impl<'m, 'd> Trainer<'m, 'd> {
+    /// Schedule-driven trainer — the legacy constructor; the schedule is
+    /// wrapped in a [`StaticPolicy`], whose chunked emission is
+    /// propcheck-identical to `Schedule::q_vec`, so this path reproduces
+    /// the pre-policy trainer bit for bit.
     pub fn new(
         model: &'m LoadedModel,
         data: &'d mut dyn Dataset,
@@ -92,10 +108,28 @@ impl<'m, 'd> Trainer<'m, 'd> {
         lr: LrSchedule,
         cfg: TrainConfig,
     ) -> Self {
+        Self::with_policy(
+            model,
+            data,
+            Box::new(StaticPolicy::new(schedule)),
+            lr,
+            cfg,
+        )
+    }
+
+    /// Policy-driven trainer: precision is chosen per chunk from training
+    /// feedback.
+    pub fn with_policy(
+        model: &'m LoadedModel,
+        data: &'d mut dyn Dataset,
+        policy: Box<dyn PrecisionPolicy>,
+        lr: LrSchedule,
+        cfg: TrainConfig,
+    ) -> Self {
         Trainer {
             model,
             data,
-            schedule,
+            policy,
             lr,
             cfg,
             arena: LiteralArena::new(),
@@ -143,7 +177,8 @@ impl<'m, 'd> Trainer<'m, 'd> {
                 }
             }
 
-            let q_fwd = self.schedule.q_vec(step, k);
+            let q_fwd = self.policy.q_chunk(step, k);
+            debug_assert_eq!(q_fwd.len(), k);
             let lr_v: Vec<f32> =
                 (step..step + k).map(|t| self.lr.at(t)).collect();
             let seeds: Vec<i32> =
@@ -178,6 +213,10 @@ impl<'m, 'd> Trainer<'m, 'd> {
             }
             // plateau-style LR schedules need feedback
             self.lr.observe_loss(step + k, res.losses[k - 1]);
+            // ... and so do adaptive precision policies: the executed
+            // chunk's loss signals drive the next chunk's q_t
+            self.policy
+                .observe(ChunkFeedback::from_losses(step, &res.losses));
 
             step += k;
 
@@ -203,6 +242,8 @@ impl<'m, 'd> Trainer<'m, 'd> {
         }
 
         hist.gbitops = acc.total().gbitops;
+        hist.mean_q = acc.realized_mean_q();
+        hist.realized_cost = acc.realized_relative_cost();
         hist.exec_seconds = exec_s;
         hist.total_seconds = t_start.elapsed().as_secs_f64();
         Ok(hist)

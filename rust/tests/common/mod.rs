@@ -16,7 +16,9 @@ use std::path::PathBuf;
 
 use cpt::metrics::History;
 use cpt::prelude::*;
-use cpt::schedule::group_of;
+use cpt::schedule::{
+    group_of, mean_relative_q_of_trace, relative_cost_of_trace,
+};
 
 /// Per-test PJRT fixture (PJRT handles are not Sync, so no shared state).
 pub struct Fixture {
@@ -68,6 +70,8 @@ pub fn fab_outcome(model: &str, cell: &SweepCell, index: usize) -> RunOutcome {
         metric: 0.5 + index as f64 * 0.0625,
         eval_loss: 0.125,
         steps: 8,
+        mean_q: 0.6875 + index as f64 * 0.015625,
+        realized_cost: 0.5 + index as f64 * 0.03125,
         exec_seconds: 0.25,
         history: History {
             losses: vec![(0, 1.25), (1, 0.5 + index as f32 * 0.125)],
@@ -75,10 +79,169 @@ pub fn fab_outcome(model: &str, cell: &SweepCell, index: usize) -> RunOutcome {
             evals: vec![(1, 0.75, 0.875)],
             precisions: vec![(0, 3), (1, 8)],
             gbitops: 1.5 + index as f64 * 0.1,
+            mean_q: 0.6875 + index as f64 * 0.015625,
+            realized_cost: 0.5 + index as f64 * 0.03125,
             exec_seconds: 0.25,
             total_seconds: 0.5,
         },
     }
+}
+
+/// Chunk size the policy simulators use (mirrors a model's trainer chunk
+/// without needing a compiled model).
+pub const SIM_CHUNK: usize = 4;
+
+/// The synthetic per-step training loss the policy simulators feed back:
+/// decays for the first half of the run, then plateaus — so plateau
+/// policies demonstrably switch — with a small cell-identity offset so a
+/// misrouted artifact cannot reproduce another cell's trace by accident.
+pub fn sim_loss(cell: &SweepCell, index: usize, t: usize, steps: usize) -> f32 {
+    let knee = (steps / 2).max(1);
+    let tt = t.min(knee) as f32;
+    2.0 / (1.0 + 0.5 * tt)
+        + 0.001 * ((index * 13 + cell.trial * 7) % 5) as f32
+}
+
+/// Build a deterministic `RunOutcome` from a realized precision trace +
+/// loss curve. All trace-derived figures (mean_q, realized_cost, the
+/// precisions history) come from the trace itself, so two execution
+/// paths agree iff their traces agree.
+pub fn outcome_from_trace(
+    model: &str,
+    cell: &SweepCell,
+    index: usize,
+    qs: &[u32],
+    losses: &[(usize, f32)],
+) -> RunOutcome {
+    let mean_q = mean_relative_q_of_trace(qs, cell.q_max);
+    let realized_cost = relative_cost_of_trace(qs, cell.q_max);
+    let gbitops = realized_cost * qs.len() as f64 * 0.01;
+    let metric = 0.25 + 0.5 * mean_q + 0.001 * index as f64;
+    RunOutcome {
+        model: model.to_string(),
+        schedule: cell.schedule.clone(),
+        group: group_of(&cell.schedule).label().into(),
+        q_max: cell.q_max,
+        trial: cell.trial,
+        gbitops,
+        metric,
+        eval_loss: losses.last().map(|&(_, l)| l).unwrap_or(0.5) as f64,
+        steps: qs.len(),
+        mean_q,
+        realized_cost,
+        exec_seconds: 0.125,
+        history: History {
+            losses: losses.to_vec(),
+            metrics: Vec::new(),
+            evals: vec![(qs.len(), 0.5, 0.75)],
+            precisions: qs.iter().enumerate().map(|(t, &q)| (t, q)).collect(),
+            gbitops,
+            mean_q,
+            realized_cost,
+            exec_seconds: 0.125,
+            total_seconds: 0.25,
+        },
+    }
+}
+
+/// Fabricate an *adaptive* cell outcome without PJRT: drive the real
+/// policy implementation through the real chunked feedback loop against
+/// the synthetic loss curve, then derive the outcome from the emitted
+/// trace. Pure function of (policy, cell, index, steps) — exactly the
+/// determinism contract production relies on — so any two schedulers,
+/// shards, or resume passes must reproduce it bit-for-bit.
+pub fn sim_policy_outcome(
+    model: &str,
+    policy: &PolicySpec,
+    q_min: f64,
+    cell: &SweepCell,
+    index: usize,
+    steps: usize,
+) -> RunOutcome {
+    let mut pol = policy
+        .build_adaptive(q_min, cell.q_max, steps)
+        .expect("adaptive policy");
+    let mut qs: Vec<u32> = Vec::with_capacity(steps);
+    let mut losses: Vec<(usize, f32)> = Vec::with_capacity(steps);
+    let mut step = 0usize;
+    while step < steps {
+        let k = SIM_CHUNK.min(steps - step);
+        let qv = pol.q_chunk(step, k);
+        assert_eq!(qv.len(), k);
+        let chunk_losses: Vec<f32> = (0..k)
+            .map(|i| sim_loss(cell, index, step + i, steps))
+            .collect();
+        for (i, &q) in qv.iter().enumerate() {
+            qs.push(q as u32);
+            losses.push((step + i, chunk_losses[i]));
+        }
+        // the shared fold guarantees the sim feeds back exactly what the
+        // production trainer would for the same losses
+        pol.observe(ChunkFeedback::from_losses(step, &chunk_losses));
+        step += k;
+    }
+    outcome_from_trace(model, cell, index, &qs, &losses)
+}
+
+/// Fabricate a *schedule-driven* cell outcome the same way, emitting the
+/// trace through a chunked StaticPolicy — the policy-machinery rendition
+/// of the legacy path (sim_legacy_outcome is the schedule-direct one).
+pub fn sim_static_outcome(
+    model: &str,
+    q_min: f64,
+    cell: &SweepCell,
+    index: usize,
+    steps: usize,
+    cycles: usize,
+) -> RunOutcome {
+    let sched = cpt::coordinator::make_schedule(
+        &cell.schedule,
+        q_min,
+        cell.q_max,
+        steps,
+        cycles,
+    )
+    .expect("suite schedule");
+    let mut pol = StaticPolicy::new(sched);
+    let mut qs: Vec<u32> = Vec::with_capacity(steps);
+    let mut losses: Vec<(usize, f32)> = Vec::with_capacity(steps);
+    let mut step = 0usize;
+    while step < steps {
+        let k = SIM_CHUNK.min(steps - step);
+        for (i, q) in pol.q_chunk(step, k).into_iter().enumerate() {
+            qs.push(q as u32);
+            losses.push((step + i, sim_loss(cell, index, step + i, steps)));
+        }
+        step += k;
+    }
+    outcome_from_trace(model, cell, index, &qs, &losses)
+}
+
+/// The pre-policy rendition of a schedule-driven cell: materialize the
+/// schedule directly (`Schedule::q_vec`, no policy machinery). The
+/// StaticSuite equivalence test diffs its CSV bytes against
+/// [`sim_static_outcome`]'s.
+pub fn sim_legacy_outcome(
+    model: &str,
+    q_min: f64,
+    cell: &SweepCell,
+    index: usize,
+    steps: usize,
+    cycles: usize,
+) -> RunOutcome {
+    let sched = cpt::coordinator::make_schedule(
+        &cell.schedule,
+        q_min,
+        cell.q_max,
+        steps,
+        cycles,
+    )
+    .expect("suite schedule");
+    let qs: Vec<u32> = sched.q_vec(0, steps).iter().map(|&q| q as u32).collect();
+    let losses: Vec<(usize, f32)> = (0..steps)
+        .map(|t| (t, sim_loss(cell, index, t, steps)))
+        .collect();
+    outcome_from_trace(model, cell, index, &qs, &losses)
 }
 
 /// Strict outcome equality: every reported number bitwise, including the
@@ -99,6 +262,8 @@ pub fn assert_outcomes_identical(a: &[RunOutcome], b: &[RunOutcome]) {
         );
         assert_eq!(x.eval_loss.to_bits(), y.eval_loss.to_bits());
         assert_eq!(x.gbitops.to_bits(), y.gbitops.to_bits());
+        assert_eq!(x.mean_q.to_bits(), y.mean_q.to_bits());
+        assert_eq!(x.realized_cost.to_bits(), y.realized_cost.to_bits());
         assert_eq!(x.group, y.group);
         assert_eq!(x.steps, y.steps);
         assert_eq!(x.history.losses, y.history.losses);

@@ -1,0 +1,523 @@
+//! Adaptive precision policies through the whole orchestration stack,
+//! exercised entirely with fabricated outcomes (no PJRT / AOT artifacts —
+//! the CI `test-unit` tier). The fabricated runner drives the *real*
+//! policy implementations through the real chunked feedback loop
+//! (`common::sim_policy_outcome`), so what these tests pin down is the
+//! property production depends on: adaptive cells are deterministic,
+//! which makes them shard, kill/resume, and merge byte-identically
+//! across the sequential and global schedulers — and their realized
+//! mean-q / relative-cost figures survive the store, `cpt status`, gc,
+//! and the stable CSVs unchanged.
+
+mod common;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use common::{
+    fab_outcome, sim_legacy_outcome, sim_policy_outcome, sim_static_outcome,
+    tmp_dir,
+};
+use cpt::coordinator::campaign::{
+    self, run_campaign_global, CampaignMember, CampaignRunOpts,
+    SchedulerKind, Status,
+};
+use cpt::coordinator::exec::{CellError, CellRunner, ExecMember};
+use cpt::coordinator::read_manifest;
+use cpt::prelude::*;
+use cpt::util::json::Json;
+
+/// Fabricated worker backend that honors the member's policy: adaptive
+/// members run the real policy against the synthetic loss curve, static
+/// members replay their schedule through a chunked StaticPolicy.
+struct PolicyFabRunner;
+
+fn sim_member_outcome(
+    member: &ExecMember,
+    cell: &SweepCell,
+    index: usize,
+) -> RunOutcome {
+    let q_min = recipe(&member.model).unwrap().q_min;
+    if member.policy.is_adaptive() {
+        sim_policy_outcome(
+            &member.model,
+            &member.policy,
+            q_min,
+            cell,
+            index,
+            member.steps,
+        )
+    } else {
+        sim_static_outcome(
+            &member.model,
+            q_min,
+            cell,
+            index,
+            member.steps,
+            member.cycles,
+        )
+    }
+}
+
+impl CellRunner for PolicyFabRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        Ok(sim_member_outcome(member, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (0, 0.0)
+    }
+}
+
+fn adaptive_member(
+    name: &str,
+    policy: &str,
+    trials: usize,
+    steps: usize,
+) -> CampaignMember {
+    let mut s = SweepSpec::new("mlp");
+    campaign::set_policy(&mut s, PolicySpec::parse(policy).unwrap(), false)
+        .unwrap();
+    s.q_maxes = vec![8.0];
+    s.trials = trials;
+    s.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: s, jobs: None }
+}
+
+fn static_member(name: &str, schedules: &[&str], steps: usize) -> CampaignMember {
+    let mut s = SweepSpec::new("mlp");
+    s.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    s.q_maxes = vec![8.0];
+    s.trials = 1;
+    s.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: s, jobs: None }
+}
+
+/// A mixed campaign: plateau-policy member, governor member, and a
+/// schedule-suite member, all over one model.
+fn mixed_campaign() -> CampaignSpec {
+    CampaignSpec {
+        name: "policy-mix".into(),
+        run_dir: None,
+        members: vec![
+            adaptive_member("plat", "loss_plateau:patience=1,ema=1", 2, 24),
+            adaptive_member("gov", "cost_governor:target=0.6", 2, 24),
+            static_member("sched", &["CR", "RR"], 16),
+        ],
+    }
+}
+
+fn fingerprints() -> HashMap<String, String> {
+    HashMap::from([("mlp".to_string(), "fp-mlp".to_string())])
+}
+
+fn opts(root: &Path, jobs: usize, resume: bool) -> CampaignRunOpts {
+    CampaignRunOpts {
+        root: root.to_path_buf(),
+        shard: ShardId::single(),
+        jobs,
+        resume,
+        verbose: false,
+        scheduler: SchedulerKind::Global,
+    }
+}
+
+/// Ground truth for one member: the simulator applied to its canonical
+/// cell list (what a serial, unsharded run computes).
+fn ground_truth(m: &CampaignMember) -> Vec<RunOutcome> {
+    let plan = SweepPlan::build(&m.spec).unwrap();
+    let exec_member = ExecMember {
+        name: m.name.clone(),
+        model: m.spec.model.clone(),
+        fingerprint: "fp-mlp".into(),
+        policy: m.spec.policy.clone(),
+        steps: plan.steps,
+        cycles: plan.cycles,
+        eval_every: m.spec.eval_every,
+        cap: 1,
+    };
+    plan.cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| sim_member_outcome(&exec_member, c, i))
+        .collect()
+}
+
+fn write_csvs(dir: &Path, members: &[(String, Vec<RunOutcome>)]) {
+    let mut keyed = Vec::new();
+    for (name, outs) in members {
+        let rows = aggregate(outs);
+        SweepReport::new(name, "metric", true)
+            .write_csv_stable(&rows, dir.join(format!("{name}.csv")))
+            .unwrap();
+        keyed.push((name.clone(), rows));
+    }
+    SweepReport::write_campaign_csv(&keyed, dir.join("campaign.csv")).unwrap();
+}
+
+fn keyed(
+    r: &cpt::coordinator::campaign::CampaignRunResult,
+) -> Vec<(String, Vec<RunOutcome>)> {
+    r.members
+        .iter()
+        .map(|m| (m.name.clone(), m.outcomes.clone()))
+        .collect()
+}
+
+#[test]
+fn adaptive_cells_are_byte_identical_across_schedulers() {
+    let tmp = tmp_dir("policy_equiv");
+    let cspec = mixed_campaign();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints();
+
+    // one-worker pool == sequential execution of the same store path
+    let seq_root = tmp.join("seq");
+    let seq =
+        run_campaign_global(&plan, &opts(&seq_root, 1, false), &fps, None, |_| {
+            Ok(PolicyFabRunner)
+        })
+        .unwrap();
+    // global scheduler, overlapping workers
+    let glob_root = tmp.join("glob");
+    let glob =
+        run_campaign_global(&plan, &opts(&glob_root, 3, false), &fps, None, |_| {
+            Ok(PolicyFabRunner)
+        })
+        .unwrap();
+
+    // members arrive in canonical (name-sorted) order: gov, plat, sched
+    let by_name: HashMap<&str, &CampaignMember> =
+        cspec.members.iter().map(|m| (m.name.as_str(), m)).collect();
+    for result in [&seq, &glob] {
+        assert_eq!(result.members.len(), 3);
+        for m in &result.members {
+            common::assert_outcomes_identical(
+                &ground_truth(by_name[m.name.as_str()]),
+                &m.outcomes,
+            );
+        }
+    }
+
+    let dir_seq = tmp.join("csv_seq");
+    let dir_glob = tmp.join("csv_glob");
+    write_csvs(&dir_seq, &keyed(&seq));
+    write_csvs(&dir_glob, &keyed(&glob));
+    for f in ["plat.csv", "gov.csv", "sched.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(dir_seq.join(f)).unwrap(),
+            std::fs::read(dir_glob.join(f)).unwrap(),
+            "{f} differs between schedulers"
+        );
+    }
+
+    // the adaptive members' realized figures are meaningful: the plateau
+    // member moved precision (mean_q strictly between q_min/q_max and
+    // 1.0), and the governor landed on its cost target
+    let plat = seq.members.iter().find(|m| m.name == "plat").unwrap();
+    for o in &plat.outcomes {
+        assert!(
+            o.mean_q > 3.0 / 8.0 && o.mean_q < 1.0,
+            "plateau member never switched: mean_q {}",
+            o.mean_q
+        );
+    }
+    let gov = seq.members.iter().find(|m| m.name == "gov").unwrap();
+    for o in &gov.outcomes {
+        assert!(
+            (o.realized_cost - 0.6).abs() < 0.08,
+            "governor missed its target: realized {}",
+            o.realized_cost
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn adaptive_campaign_kill_resume_completes_identically() {
+    let tmp = tmp_dir("policy_kill");
+    let cspec = mixed_campaign();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints();
+    let root = tmp.join("root");
+
+    let err = run_campaign_global(
+        &plan,
+        &opts(&root, 2, false),
+        &fps,
+        Some(2),
+        |_| Ok(PolicyFabRunner),
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("halted after"), "{err:#}");
+    match campaign::status(&root).unwrap() {
+        Status::Campaign(c) => assert_eq!(c.done(), 2),
+        _ => panic!("expected campaign status"),
+    }
+
+    let resumed = run_campaign_global(
+        &plan,
+        &opts(&root, 2, true),
+        &fps,
+        None,
+        |_| Ok(PolicyFabRunner),
+    )
+    .unwrap();
+    assert_eq!(resumed.total_resumed(), 2);
+    let by_name: HashMap<&str, &CampaignMember> =
+        cspec.members.iter().map(|m| (m.name.as_str(), m)).collect();
+    for m in &resumed.members {
+        common::assert_outcomes_identical(
+            &ground_truth(by_name[m.name.as_str()]),
+            &m.outcomes,
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn adaptive_shards_merge_identically_and_survive_gc() {
+    let tmp = tmp_dir("policy_shard");
+    let cspec = mixed_campaign();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints();
+
+    // unsharded reference CSVs
+    let ref_root = tmp.join("ref");
+    let reference =
+        run_campaign_global(&plan, &opts(&ref_root, 2, false), &fps, None, |_| {
+            Ok(PolicyFabRunner)
+        })
+        .unwrap();
+    let ref_csv = tmp.join("csv_ref");
+    write_csvs(&ref_csv, &keyed(&reference));
+
+    // 2 shards, then cross-merge the roots
+    let mut roots = Vec::new();
+    for index in 1..=2usize {
+        let root = tmp.join(format!("shard{index}"));
+        let mut o = opts(&root, 2, false);
+        o.shard = ShardId { index, count: 2 };
+        run_campaign_global(&plan, &o, &fps, None, |_| Ok(PolicyFabRunner))
+            .unwrap();
+        roots.push(root);
+    }
+    let merged = merge_campaign_roots(&roots).unwrap();
+    let merged_members: Vec<(String, Vec<RunOutcome>)> = merged
+        .members
+        .iter()
+        .map(|m| (m.name.clone(), m.outcomes.clone()))
+        .collect();
+    let merged_csv = tmp.join("csv_merged");
+    write_csvs(&merged_csv, &merged_members);
+    for f in ["plat.csv", "gov.csv", "sched.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(ref_csv.join(f)).unwrap(),
+            std::fs::read(merged_csv.join(f)).unwrap(),
+            "{f}: sharded merge differs from the unsharded run"
+        );
+    }
+
+    // gc both roots: per-step histories (including the precision trace)
+    // are stripped, but the realized columns come from the kept scalars,
+    // so the re-merged CSVs must not change by a byte
+    for root in &roots {
+        let stats = campaign::gc(root).unwrap();
+        assert!(stats.iter().any(|(_, s)| s.compacted > 0));
+    }
+    let remerged = merge_campaign_roots(&roots).unwrap();
+    let remerged_members: Vec<(String, Vec<RunOutcome>)> = remerged
+        .members
+        .iter()
+        .map(|m| (m.name.clone(), m.outcomes.clone()))
+        .collect();
+    let gc_csv = tmp.join("csv_gc");
+    write_csvs(&gc_csv, &remerged_members);
+    for f in ["plat.csv", "gov.csv", "sched.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(merged_csv.join(f)).unwrap(),
+            std::fs::read(gc_csv.join(f)).unwrap(),
+            "{f} changed across gc"
+        );
+    }
+    // and the precision histories really are gone
+    let one = remerged
+        .members
+        .iter()
+        .flat_map(|m| &m.outcomes)
+        .next()
+        .unwrap();
+    assert!(one.history.precisions.is_empty(), "gc kept the trace");
+    assert!(one.mean_q > 0.0, "trace summary must survive gc");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn static_policy_csv_is_byte_identical_to_the_legacy_schedule_path() {
+    // the pre-policy rendition (Schedule::q_vec directly) vs the policy
+    // machinery (chunked StaticPolicy emission) over a full sweep: same
+    // outcomes, same CSV bytes
+    let tmp = tmp_dir("policy_static_equiv");
+    let mut spec = SweepSpec::new("mlp");
+    spec.schedules =
+        vec!["CR".into(), "RR".into(), "ETH".into(), "STATIC".into()];
+    spec.q_maxes = vec![6.0, 8.0];
+    spec.trials = 2;
+    spec.steps = Some(24);
+    let plan = SweepPlan::build(&spec).unwrap();
+    let q_min = recipe("mlp").unwrap().q_min;
+    let legacy: Vec<RunOutcome> = plan
+        .cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            sim_legacy_outcome("mlp", q_min, c, i, plan.steps, plan.cycles)
+        })
+        .collect();
+    let via_policy: Vec<RunOutcome> = plan
+        .cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            sim_static_outcome("mlp", q_min, c, i, plan.steps, plan.cycles)
+        })
+        .collect();
+    common::assert_outcomes_identical(&legacy, &via_policy);
+    let rep = SweepReport::new("equiv", "metric", true);
+    let pa = tmp.join("legacy.csv");
+    let pb = tmp.join("policy.csv");
+    rep.write_csv_stable(&aggregate(&legacy), &pa).unwrap();
+    rep.write_csv_stable(&aggregate(&via_policy), &pb).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "StaticSuite-through-policy CSV differs from the legacy path"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn status_surfaces_realized_trace_and_falls_back_on_old_manifests() {
+    let tmp = tmp_dir("policy_status");
+    let mut spec = SweepSpec::new("mlp");
+    campaign::set_policy(
+        &mut spec,
+        PolicySpec::parse("cost_governor:target=0.6").unwrap(),
+        false,
+    )
+    .unwrap();
+    spec.q_maxes = vec![8.0];
+    spec.trials = 2;
+    spec.steps = Some(24);
+    spec.shard = Some(ShardId::single());
+    let plan = SweepPlan::build(&spec).unwrap();
+    let dir = tmp.join("run");
+    let mut st = RunStore::open(&dir, &plan, "fp-mlp", false).unwrap();
+    let q_min = recipe("mlp").unwrap().q_min;
+    for pc in plan.owned() {
+        let out = sim_policy_outcome(
+            "mlp", &spec.policy, q_min, &pc.cell, pc.index, plan.steps,
+        );
+        st.record(pc.index, &out).unwrap();
+    }
+    // status reads the realized figures straight from the manifest
+    match campaign::status(&dir).unwrap() {
+        Status::Sweep(m) => {
+            let mq = m.mean_q().expect("mean_q on a policy-era manifest");
+            let rc = m.realized_cost().expect("realized_cost");
+            assert!(mq > 0.0 && mq <= 1.0, "{mq}");
+            assert!((rc - 0.6).abs() < 0.08, "{rc}");
+        }
+        _ => panic!("expected sweep status"),
+    }
+    // strip the summary keys (a pre-policy manifest): status must fall
+    // back silently, not error
+    let mp = dir.join("run-manifest.json");
+    let mut doc = Json::parse(&std::fs::read_to_string(&mp).unwrap()).unwrap();
+    if let Json::Obj(top) = &mut doc {
+        if let Some(Json::Obj(cells)) = top.get_mut("cells") {
+            for cell in cells.values_mut() {
+                if let Json::Obj(e) = cell {
+                    e.remove("mean_q");
+                    e.remove("realized_cost");
+                }
+            }
+        }
+    }
+    std::fs::write(&mp, doc.to_string_pretty()).unwrap();
+    match campaign::status(&dir).unwrap() {
+        Status::Sweep(m) => {
+            assert_eq!(m.mean_q(), None);
+            assert_eq!(m.realized_cost(), None);
+            assert_eq!(m.done(), 2, "progress reporting is unaffected");
+        }
+        _ => panic!("expected sweep status"),
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn adaptive_artifacts_round_trip_the_realized_figures_bit_exactly() {
+    let tmp = tmp_dir("policy_roundtrip");
+    let mut spec = SweepSpec::new("mlp");
+    campaign::set_policy(
+        &mut spec,
+        PolicySpec::parse("loss_plateau:patience=1,ema=1").unwrap(),
+        false,
+    )
+    .unwrap();
+    spec.q_maxes = vec![8.0];
+    spec.trials = 1;
+    spec.steps = Some(24);
+    let plan = SweepPlan::build(&spec).unwrap();
+    let dir = tmp.join("run");
+    let mut st = RunStore::open(&dir, &plan, "fp-mlp", false).unwrap();
+    let q_min = recipe("mlp").unwrap().q_min;
+    let out = sim_policy_outcome(
+        "mlp", &spec.policy, q_min, &plan.cells[0], 0, plan.steps,
+    );
+    st.record(0, &out).unwrap();
+    let back = st.load_outcome(0).unwrap();
+    common::assert_outcomes_identical(
+        std::slice::from_ref(&out),
+        std::slice::from_ref(&back),
+    );
+    // the manifest entry's compact summary matches the artifact exactly
+    let m = read_manifest(&dir).unwrap();
+    let e = m.cells.get(&0).unwrap();
+    assert_eq!(e.mean_q.unwrap().to_bits(), out.mean_q.to_bits());
+    assert_eq!(
+        e.realized_cost.unwrap().to_bits(),
+        out.realized_cost.to_bits()
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn fab_outcome_still_round_trips() {
+    // guard the shared fixture: the store round-trips the extended
+    // outcome (other fabricated tiers lean on this helper)
+    let tmp = tmp_dir("policy_fab");
+    let mut spec = SweepSpec::new("mlp");
+    spec.schedules = vec!["CR".into()];
+    spec.q_maxes = vec![8.0];
+    spec.trials = 1;
+    spec.steps = Some(8);
+    let plan = SweepPlan::build(&spec).unwrap();
+    let dir = tmp.join("run");
+    let mut st = RunStore::open(&dir, &plan, "fp", false).unwrap();
+    let out = fab_outcome("mlp", &plan.cells[0], 0);
+    st.record(0, &out).unwrap();
+    let back = st.load_outcome(0).unwrap();
+    common::assert_outcomes_identical(
+        std::slice::from_ref(&out),
+        std::slice::from_ref(&back),
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}

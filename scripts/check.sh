@@ -1,22 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus three
-# end-to-end orchestration passes — a 2-shard sweep + merge, a 2-sweep
-# campaign on the sequential scheduler that is killed mid-run, resumed,
-# cross-merged, and gc'd, and the same campaign through the global
-# scheduler (--jobs 2, one worker pool over both sweeps) whose merged
-# CSVs must be byte-identical to the sequential pass — so the bench
-# targets and the whole coordinator surface are compiled-and-exercised
-# without paying full bench cost.
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus four
+# end-to-end orchestration passes — a 2-shard sweep + merge, a 2-shard
+# *adaptive-policy* sweep killed mid-run / resumed / merged, a 3-sweep
+# campaign (one member adaptive) on the sequential scheduler that is
+# killed mid-run, resumed, cross-merged, and gc'd, and the same campaign
+# through the global scheduler (--jobs 2, one worker pool over all
+# sweeps) whose merged CSVs must be byte-identical to the sequential
+# pass — so the bench targets and the whole coordinator surface are
+# compiled-and-exercised without paying full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
 #                               # integration files (tests/campaign.rs,
-#                               # tests/global_sched.rs); needs no AOT
-#                               # artifacts — the CI test-unit job runs
-#                               # this tier
+#                               # tests/global_sched.rs, tests/policy.rs);
+#                               # needs no AOT artifacts — the CI
+#                               # test-unit job runs this tier
 #   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
-#                               # + shard/merge and campaign smokes
+#                               # + fig_policy + shard/merge, policy, and
+#                               # campaign smokes
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -69,6 +71,8 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --test campaign
   echo "== cargo test -q --test global_sched (fabricated global scheduler)"
   cargo test -q --test global_sched
+  echo "== cargo test -q --test policy (fabricated adaptive policies)"
+  cargo test -q --test policy
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -102,13 +106,49 @@ if [ "$SMOKE" = 1 ]; then
       *) echo "check.sh: shard resume did not skip completed cells" >&2; exit 1 ;;
     esac
     $CPT merge --csv "$SMOKE_DIR/merged.csv" "$SMOKE_DIR/s1" "$SMOKE_DIR/s2"
-    if ! diff <(cut -d, -f1-8 "$SMOKE_DIR/serial.csv") "$SMOKE_DIR/merged.csv"; then
+    if ! diff <(cut -d, -f1-10 "$SMOKE_DIR/serial.csv") "$SMOKE_DIR/merged.csv"; then
       echo "check.sh: sharded merge CSV differs from serial sweep" >&2
       exit 1
     fi
     echo "shard/merge smoke: serial and merged aggregates are identical"
 
-    echo "== campaign smoke (sequential scheduler: 2 sweeps x 2 shards, kill + resume + merge + gc)"
+    echo "== adaptive-policy sweep smoke (loss_plateau, 2 shards, kill + resume + merge)"
+    # An adaptive policy makes the realized q_t trace data-dependent; the
+    # gate pins the property everything downstream relies on: the trace
+    # is deterministic, so a killed, resumed, sharded run merges
+    # byte-identically to a serial one (realized mean_q/realized_cost
+    # columns included).
+    POL_ARGS="--model mlp --policy loss_plateau --qmaxes 8 --trials 4 --steps 8"
+    $CPT sweep $POL_ARGS --csv "$SMOKE_DIR/pol_serial.csv"
+    if CPT_HALT_AFTER_CELLS=1 $CPT sweep $POL_ARGS --shard 1/2 --run-dir "$SMOKE_DIR/p1"; then
+      echo "check.sh: policy sweep crash injection did not fire" >&2; exit 1
+    fi
+    POL_RESUME="$($CPT sweep $POL_ARGS --shard 1/2 --run-dir "$SMOKE_DIR/p1" --resume)"
+    case "$POL_RESUME" in
+      *"1 resumed from artifacts"*) ;;
+      *) echo "check.sh: policy shard resume did not reuse the recorded cell" >&2; exit 1 ;;
+    esac
+    $CPT sweep $POL_ARGS --shard 2/2 --run-dir "$SMOKE_DIR/p2"
+    $CPT merge --csv "$SMOKE_DIR/pol_merged.csv" "$SMOKE_DIR/p1" "$SMOKE_DIR/p2"
+    if ! diff <(cut -d, -f1-10 "$SMOKE_DIR/pol_serial.csv") "$SMOKE_DIR/pol_merged.csv"; then
+      echo "check.sh: adaptive-policy sharded merge differs from the serial sweep" >&2
+      exit 1
+    fi
+    # the realized columns are present and the status report surfaces
+    # the per-cell trace summary
+    if ! head -1 "$SMOKE_DIR/pol_serial.csv" | grep -q "mean_q,realized_cost"; then
+      echo "check.sh: stable CSV is missing the realized trace columns" >&2
+      exit 1
+    fi
+    if ! $CPT status "$SMOKE_DIR/p1" | grep -q "realized: mean q/qmax"; then
+      echo "check.sh: status does not report the realized trace summary" >&2
+      exit 1
+    fi
+    echo "policy smoke: adaptive shards kill/resume/merge byte-identically to serial"
+
+    echo "== campaign smoke (sequential scheduler: 3 sweeps x 2 shards, kill + resume + merge + gc)"
+    # member "c" is adaptive: the campaign path carries [sweep.policy]-
+    # style member policies through shard/resume/merge on both schedulers
     CAMP_TOML="$SMOKE_DIR/campaign.toml"
     cat > "$CAMP_TOML" <<'EOF'
 [campaign]
@@ -129,6 +169,14 @@ schedules = ["CR", "STATIC"]
 q_maxes = [8]
 trials = 1
 steps = 10
+
+[[campaign.sweep]]
+name = "c"
+model = "mlp"
+policy = "loss_plateau"
+q_maxes = [8]
+trials = 2
+steps = 8
 EOF
     R1="$SMOKE_DIR/camp1"
     R2="$SMOKE_DIR/camp2"
@@ -139,8 +187,8 @@ EOF
     if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$R1" --shard 1/2 --scheduler sequential; then
       echo "check.sh: campaign crash injection did not fire" >&2; exit 1
     fi
-    if ! $CPT status "$R1" | grep -q "total: done 1/2"; then
-      echo "check.sh: status after kill should report done 1/2" >&2
+    if ! $CPT status "$R1" | grep -q "total: done 1/3"; then
+      echo "check.sh: status after kill should report done 1/3" >&2
       $CPT status "$R1" >&2 || true
       exit 1
     fi
@@ -150,21 +198,23 @@ EOF
       *"(1 resumed)"*) ;;
       *) echo "check.sh: campaign resume did not reuse the recorded cell" >&2; exit 1 ;;
     esac
-    if ! $CPT status "$R1" | grep -q "total: done 2/2"; then
-      echo "check.sh: status after resume should report done 2/2" >&2; exit 1
+    if ! $CPT status "$R1" | grep -q "total: done 3/3"; then
+      echo "check.sh: status after resume should report done 3/3" >&2; exit 1
     fi
     # shard 2/2 runs uninterrupted
     $CPT campaign --file "$CAMP_TOML" --run-dir "$R2" --shard 2/2 --scheduler sequential
-    if ! $CPT status "$R2" | grep -q "total: done 2/2"; then
-      echo "check.sh: shard 2/2 status should report done 2/2" >&2; exit 1
+    if ! $CPT status "$R2" | grep -q "total: done 3/3"; then
+      echo "check.sh: shard 2/2 status should report done 3/3" >&2; exit 1
     fi
     # cross-merge the roots, then compare every member CSV against an
-    # independent serial run of the same sweep — byte-identical
+    # independent serial run of the same sweep — byte-identical (the
+    # adaptive member against an independent --policy sweep)
     $CPT merge --csv-dir "$SMOKE_DIR/campout" "$R1" "$R2"
     $CPT sweep --model mlp --schedules CR,RR --qmaxes 8 --trials 1 --steps 8 --csv "$SMOKE_DIR/ind_a.csv"
     $CPT sweep --model mlp --schedules CR,STATIC --qmaxes 8 --trials 1 --steps 10 --csv "$SMOKE_DIR/ind_b.csv"
-    for m in a b; do
-      if ! diff <(cut -d, -f1-8 "$SMOKE_DIR/ind_$m.csv") "$SMOKE_DIR/campout/$m.csv"; then
+    $CPT sweep --model mlp --policy loss_plateau --qmaxes 8 --trials 2 --steps 8 --csv "$SMOKE_DIR/ind_c.csv"
+    for m in a b c; do
+      if ! diff <(cut -d, -f1-10 "$SMOKE_DIR/ind_$m.csv") "$SMOKE_DIR/campout/$m.csv"; then
         echo "check.sh: campaign member '$m' CSV differs from its independent sweep" >&2
         exit 1
       fi
@@ -173,7 +223,7 @@ EOF
     $CPT gc "$R1" >/dev/null
     $CPT gc "$R2" >/dev/null
     $CPT merge --csv-dir "$SMOKE_DIR/campout_gc" "$R1" "$R2"
-    for f in a.csv b.csv campaign.csv; do
+    for f in a.csv b.csv c.csv campaign.csv; do
       if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/campout_gc/$f"; then
         echo "check.sh: $f changed across gc" >&2
         exit 1
@@ -192,8 +242,8 @@ EOF
     if CPT_HALT_AFTER_CELLS=1 $CPT campaign --file "$CAMP_TOML" --run-dir "$G1" --shard 1/2 --jobs 2 --scheduler global; then
       echo "check.sh: global campaign crash injection did not fire" >&2; exit 1
     fi
-    if ! $CPT status "$G1" | grep -q "total: done 1/2"; then
-      echo "check.sh: global status after kill should report done 1/2" >&2
+    if ! $CPT status "$G1" | grep -q "total: done 1/3"; then
+      echo "check.sh: global status after kill should report done 1/3" >&2
       $CPT status "$G1" >&2 || true
       exit 1
     fi
@@ -210,7 +260,7 @@ EOF
     fi
     $CPT campaign --file "$CAMP_TOML" --run-dir "$G2" --shard 2/2 --jobs 2 --scheduler global
     $CPT merge --csv-dir "$SMOKE_DIR/campout_global" "$G1" "$G2"
-    for f in a.csv b.csv campaign.csv; do
+    for f in a.csv b.csv c.csv campaign.csv; do
       if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/campout_global/$f"; then
         echo "check.sh: $f differs between sequential and global schedulers" >&2
         exit 1
@@ -220,6 +270,9 @@ EOF
 
     echo "== fig_campaign_sched bench (executable-cache compile accounting)"
     cargo bench --bench fig_campaign_sched
+
+    echo "== fig_policy bench (adaptive policies vs static schedules)"
+    cargo bench --bench fig_policy
   else
     echo "== bench/sweep smoke: artifacts/manifest.json missing — building only"
     cargo build --benches
