@@ -549,6 +549,7 @@ fn write_campaign_manifest(root: &Path, cm: &CampaignManifest) -> Result<()> {
                         ("compiles", num(w.compiles as f64)),
                         ("compile_seconds", num(w.compile_seconds)),
                         ("cells", num(w.cells as f64)),
+                        ("retries", num(w.retries as f64)),
                     ])
                 })
                 .collect(),
@@ -637,6 +638,11 @@ pub fn read_campaign_manifest(root: &Path) -> Result<CampaignManifest> {
                     compiles: w.get("compiles")?.as_usize()?,
                     compile_seconds: w.get("compile_seconds")?.as_f64()?,
                     cells: w.get("cells")?.as_usize()?,
+                    // absent in manifests written before 0.7.0
+                    retries: match w.opt("retries") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
                 });
             }
             Some(SchedulerStats { jobs: sj.get("jobs")?.as_usize()?, workers })
@@ -836,7 +842,7 @@ impl CampaignRunResult {
 }
 
 /// A member's effective in-flight cap inside a pool of `jobs` workers.
-fn member_cap(member_jobs: Option<usize>, jobs: usize) -> usize {
+pub(crate) fn member_cap(member_jobs: Option<usize>, jobs: usize) -> usize {
     member_jobs.unwrap_or(jobs).min(jobs).max(1)
 }
 
@@ -871,7 +877,7 @@ pub fn run_campaign(
                     specs.insert(m.spec.model.clone(), ms);
                 }
             }
-            let cache_cap = exec::exec_cache_cap();
+            let cache_cap = exec::exec_cache_cap()?;
             run_campaign_global(plan, opts, &fingerprints, None, |_| {
                 exec::PjrtCellRunner::new(&specs, cache_cap)
             })
@@ -1049,9 +1055,12 @@ where
         jobs,
         verbose: opts.verbose,
         halt_after_cells,
+        source: None,
     };
-    let mut store_refs: Vec<Option<&mut RunStore>> =
-        stores.iter_mut().map(|s| s.as_mut()).collect();
+    let mut store_refs: Vec<Option<&mut dyn exec::CellSink>> = stores
+        .iter_mut()
+        .map(|s| s.as_mut().map(|st| st as &mut dyn exec::CellSink))
+        .collect();
     let stats = exec::run_items(&req, &mut store_refs, &mut slots, make_worker)
         .with_context(|| format!("campaign '{}'", plan.name))?;
 
@@ -1095,7 +1104,7 @@ where
 
 /// Rewrite the campaign manifest with the latest pool accounting (all
 /// fence fields unchanged).
-fn record_scheduler_stats(root: &Path, stats: &SchedulerStats) -> Result<()> {
+pub(crate) fn record_scheduler_stats(root: &Path, stats: &SchedulerStats) -> Result<()> {
     let mut cm = read_campaign_manifest(root)?;
     cm.scheduler = Some(stats.clone());
     write_campaign_manifest(root, &cm)

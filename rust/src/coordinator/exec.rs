@@ -38,9 +38,9 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::store::RunStore;
 use super::{run_one_with_policy, RunOutcome, SweepCell};
@@ -50,13 +50,26 @@ use crate::runtime::{LoadedModel, ModelSpec, Runtime};
 /// Per-worker compiled-executable cache capacity (distinct model
 /// fingerprints held at once), overridable via CPT_EXEC_CACHE. Campaigns
 /// rarely mix more than a handful of models, so a small cache already
-/// means zero recompiles when members share a model.
-pub fn exec_cache_cap() -> usize {
-    std::env::var("CPT_EXEC_CACHE")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(4)
+/// means zero recompiles when members share a model. An unparsable or
+/// zero CPT_EXEC_CACHE fails loudly rather than silently falling back.
+pub fn exec_cache_cap() -> Result<usize> {
+    match super::env_parse::<usize>("CPT_EXEC_CACHE")? {
+        Some(0) => bail!("CPT_EXEC_CACHE must be >= 1"),
+        Some(n) => Ok(n),
+        None => Ok(4),
+    }
+}
+
+/// Transient setup failures (PJRT client init, model compile) are
+/// retried this many times per (worker, model) with exponential backoff
+/// before the worker permanently skips the model and the item is handed
+/// back to the pool.
+const SETUP_ATTEMPTS: usize = 3;
+const SETUP_BACKOFF_MS: u64 = 50;
+
+/// Backoff before retry `attempt` (1-based): 50ms, 200ms, ...
+fn setup_backoff(attempt: usize) -> Duration {
+    Duration::from_millis(SETUP_BACKOFF_MS * 4u64.pow(attempt.min(4) as u32 - 1))
 }
 
 /// One member of an execution request — a sweep (or the single member of
@@ -142,6 +155,9 @@ pub struct WorkerStats {
     pub compile_seconds: f64,
     /// Cells this worker completed.
     pub cells: usize,
+    /// Setup attempts this worker retried after a transient failure
+    /// (each is one backoff-and-try-again beyond a first attempt).
+    pub retries: usize,
 }
 
 /// Pool-level accounting for one [`run_items`] call.
@@ -150,6 +166,10 @@ pub struct ExecStats {
     /// Workers actually spawned (jobs clamped to the item count).
     pub jobs: usize,
     pub workers: Vec<WorkerStats>,
+    /// Completed cells whose sink declined to persist them (claim mode:
+    /// the cell was committed by another claimer first / the lease was
+    /// lost). Always 0 outside claim mode.
+    pub refused: usize,
 }
 
 impl ExecStats {
@@ -160,6 +180,62 @@ impl ExecStats {
     pub fn total_compile_seconds(&self) -> f64 {
         self.workers.iter().map(|w| w.compile_seconds).sum()
     }
+
+    pub fn total_retries(&self) -> usize {
+        self.workers.iter().map(|w| w.retries).sum()
+    }
+}
+
+/// Where a completed cell lands. `RunStore` is the plain implementation
+/// (always persists); the claim-mode recorder (`coordinator::lease`) may
+/// *refuse* a cell — commit it nowhere — when its lease was lost and the
+/// cell already belongs to another claimer. Refusal is not an error: the
+/// outcome still fills its slot, it just isn't persisted here.
+pub trait CellSink {
+    fn record_cell(&mut self, index: usize, out: &RunOutcome) -> Result<Recorded>;
+}
+
+/// Outcome of a [`CellSink::record_cell`] call.
+pub enum Recorded {
+    /// Persisted by this sink.
+    Stored,
+    /// Declined, with the reason (already committed elsewhere / lease
+    /// lost). The run continues; the cell is complete globally.
+    Refused(String),
+}
+
+impl CellSink for RunStore {
+    fn record_cell(&mut self, index: usize, out: &RunOutcome) -> Result<Recorded> {
+        self.record(index, out)?;
+        Ok(Recorded::Stored)
+    }
+}
+
+/// A dynamic work feed for [`run_items`]: when the queue has nothing a
+/// worker can claim, one worker at a time asks the source for more. This
+/// is how claim mode keeps one long-lived pool (compiled executables and
+/// all) while leases are acquired incrementally — instead of tearing the
+/// pool down between claim rounds.
+pub trait ItemSource: Sync {
+    /// Produce more items, ask the pool to wait (work exists but is
+    /// currently owned elsewhere), or declare the feed exhausted
+    /// (nothing will ever be produced again). An error is fatal to the
+    /// run. `Refill::Items` slots/members must stay within the bounds
+    /// the request was built with.
+    fn refill(&self) -> Result<Refill>;
+
+    /// A worker permanently gave up compiling `fingerprint` (after
+    /// bounded retries). Sources can stop feeding cells that need it —
+    /// and, in claim mode, release their leases so other claimers take
+    /// over.
+    fn model_failed(&self, _fingerprint: &str) {}
+}
+
+/// One answer from [`ItemSource::refill`].
+pub enum Refill {
+    Items(Vec<ExecItem>),
+    Wait(Duration),
+    Exhausted,
 }
 
 /// One execution request: members, their flattened items, and knobs.
@@ -167,6 +243,8 @@ pub struct ExecRequest<'a> {
     /// Log prefix, e.g. `sweep mlp` or `campaign fig367`.
     pub label: String,
     pub members: &'a [ExecMember],
+    /// Items enqueued up-front. With a `source`, this is just the seed —
+    /// the queue grows as the source produces more.
     pub items: &'a [ExecItem],
     pub jobs: usize,
     pub verbose: bool,
@@ -175,6 +253,8 @@ pub struct ExecRequest<'a> {
     /// the process-wide CPT_HALT_AFTER_CELLS counter (the check.sh
     /// crash-injection knob).
     pub halt_after_cells: Option<usize>,
+    /// Dynamic work feed (claim mode); `None` for the static paths.
+    pub source: Option<&'a dyn ItemSource>,
 }
 
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -185,10 +265,17 @@ enum ItemState {
 }
 
 struct QueueState {
+    /// The work list. Static runs fix it up-front; with an
+    /// [`ItemSource`] it grows as the source produces items.
+    items: Vec<ExecItem>,
     state: Vec<ItemState>,
     /// In-flight cells per member (bounded by the member's cap).
     inflight: Vec<usize>,
     stop: bool,
+    /// One worker at a time consults the source; the rest park.
+    refilling: bool,
+    /// The source declared itself exhausted — no more items, ever.
+    source_done: bool,
 }
 
 /// Unwinding guard for a claimed item: if a panic tears through
@@ -222,22 +309,26 @@ enum Msg {
     Done { item: usize, out: Box<RunOutcome> },
     RunErr { item: usize, err: anyhow::Error },
     SetupErr { model: String, err: anyhow::Error },
+    SourceErr { err: anyhow::Error },
     WorkerExit { stats: WorkerStats },
 }
 
-/// Execute `req.items` over a pool of `req.jobs` workers, routing each
-/// completed cell into `slots[member][slot]` and (when present) the
-/// member's `RunStore` — all store writes happen on this thread, in
-/// completion order, so persistence is serialized per store. Returns
-/// per-worker compile/cell accounting.
+/// Execute `req.items` (plus whatever `req.source` feeds in) over a pool
+/// of `req.jobs` workers, routing each completed cell into
+/// `slots[member][slot]` and (when present) the member's [`CellSink`] —
+/// all sink writes happen on this thread, in completion order, so
+/// persistence is serialized per sink. Returns per-worker compile/cell
+/// accounting.
 ///
 /// Errors, in precedence order: a failed cell (lowest item index wins,
-/// all-or-nothing), a store write failure, a crash-injection halt, and
-/// finally unclaimed cells (every worker that tried their model failed
-/// to compile it — reported with the first such compile error).
+/// all-or-nothing), a sink write failure, a source failure, a
+/// crash-injection halt, and finally unclaimed cells (every worker that
+/// tried their model failed to compile it — reported with the first such
+/// compile error; sourced runs skip this check because their source
+/// decides completion).
 pub fn run_items<R, F>(
     req: &ExecRequest<'_>,
-    stores: &mut [Option<&mut RunStore>],
+    sinks: &mut [Option<&mut dyn CellSink>],
     slots: &mut [Vec<Option<RunOutcome>>],
     make_worker: F,
 ) -> Result<ExecStats>
@@ -245,11 +336,16 @@ where
     R: CellRunner,
     F: Fn(usize) -> Result<R> + Sync,
 {
-    assert_eq!(req.members.len(), stores.len());
+    assert_eq!(req.members.len(), sinks.len());
     assert_eq!(req.members.len(), slots.len());
-    let jobs = req.jobs.max(1).min(req.items.len().max(1));
-    if req.items.is_empty() {
-        return Ok(ExecStats { jobs, workers: Vec::new() });
+    let jobs = if req.source.is_some() {
+        // the queue can outgrow the seed, so don't clamp to it
+        req.jobs.max(1)
+    } else {
+        req.jobs.max(1).min(req.items.len().max(1))
+    };
+    if req.items.is_empty() && req.source.is_none() {
+        return Ok(ExecStats { jobs, workers: Vec::new(), refused: 0 });
     }
     let per_step_logs = req.verbose && jobs == 1;
     if req.verbose && jobs > 1 {
@@ -264,9 +360,12 @@ where
     }
 
     let queue = Mutex::new(QueueState {
+        items: req.items.to_vec(),
         state: vec![ItemState::Pending; req.items.len()],
         inflight: vec![0; req.members.len()],
         stop: false,
+        refilling: false,
+        source_done: req.source.is_none(),
     });
     let available = Condvar::new();
     let (tx, rx) = mpsc::channel::<Msg>();
@@ -274,9 +373,11 @@ where
     let mut first_err: Option<(usize, anyhow::Error)> = None;
     let mut setup_errs: Vec<(String, anyhow::Error)> = Vec::new();
     let mut store_err: Option<anyhow::Error> = None;
+    let mut source_err: Option<anyhow::Error> = None;
     let mut halt_err: Option<anyhow::Error> = None;
     let mut worker_stats: Vec<WorkerStats> = Vec::new();
     let mut fresh = 0usize;
+    let mut refused = 0usize;
 
     std::thread::scope(|scope| {
         for w in 0..jobs {
@@ -284,23 +385,41 @@ where
             let queue = &queue;
             let available = &available;
             let make_worker = &make_worker;
+            let label = &req.label;
             scope.spawn(move || {
+                let mut retries = 0usize;
                 // Per-worker backend (PJRT client + executable cache in
                 // production); built on this thread, never shared.
-                let mut runner = match make_worker(w) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        // don't stop the pool: the queue drains on the
-                        // workers that did initialize; the run only
-                        // fails if cells end up unclaimed
-                        let _ = tx.send(Msg::SetupErr {
-                            model: String::new(),
-                            err: e.context(format!("worker {w} setup")),
-                        });
-                        return;
+                // Transient init failures get bounded retries with
+                // backoff before the worker gives up.
+                let mut init_attempt = 1usize;
+                let mut runner = loop {
+                    match make_worker(w) {
+                        Ok(r) => break r,
+                        Err(e) if init_attempt < SETUP_ATTEMPTS => {
+                            eprintln!(
+                                "[{label}] note: worker {w} setup failed \
+                                 (attempt {init_attempt}/{SETUP_ATTEMPTS}): \
+                                 {e:#}; retrying",
+                            );
+                            std::thread::sleep(setup_backoff(init_attempt));
+                            init_attempt += 1;
+                            retries += 1;
+                        }
+                        Err(e) => {
+                            // don't stop the pool: the queue drains on
+                            // the workers that did initialize; the run
+                            // only fails if cells end up unclaimed
+                            let _ = tx.send(Msg::SetupErr {
+                                model: String::new(),
+                                err: e.context(format!("worker {w} setup")),
+                            });
+                            return;
+                        }
                     }
                 };
                 let mut failed: HashSet<&str> = HashSet::new();
+                let mut attempts: HashMap<&str, usize> = HashMap::new();
                 let mut cells = 0usize;
                 loop {
                     // Claim the next runnable item under the queue lock:
@@ -308,7 +427,9 @@ where
                     // and whose model this worker can compile —
                     // preferring one the worker already holds compiled
                     // (claim order never affects results, only compiles).
-                    let claimed: Option<usize> = {
+                    // When nothing is claimable and a source exists, one
+                    // worker at a time consults it for more items.
+                    let claimed: Option<(usize, ExecItem)> = {
                         let mut q = queue.lock().unwrap();
                         loop {
                             if q.stop {
@@ -321,7 +442,7 @@ where
                                 if *st == ItemState::Done {
                                     continue;
                                 }
-                                let it = &req.items[i];
+                                let it = &q.items[i];
                                 let m = &req.members[it.member];
                                 if failed.contains(m.fingerprint.as_str()) {
                                     continue;
@@ -347,13 +468,79 @@ where
                             match cached.or(cold) {
                                 Some(i) => {
                                     q.state[i] = ItemState::InFlight;
-                                    q.inflight[req.items[i].member] += 1;
-                                    break Some(i);
+                                    let it = q.items[i].clone();
+                                    q.inflight[it.member] += 1;
+                                    break Some((i, it));
                                 }
                                 // claimable-for-me items exist but are at
                                 // cap or in flight: wait for a transition
                                 None if maybe_later => {
                                     q = available.wait(q).unwrap();
+                                }
+                                None if !q.source_done => {
+                                    if q.refilling {
+                                        // someone else is asking; park
+                                        // until they publish the answer
+                                        q = available.wait(q).unwrap();
+                                        continue;
+                                    }
+                                    q.refilling = true;
+                                    drop(q);
+                                    let r = req.source.unwrap().refill();
+                                    q = queue.lock().unwrap();
+                                    match r {
+                                        Ok(Refill::Items(new)) => {
+                                            q.refilling = false;
+                                            for it in new {
+                                                q.items.push(it);
+                                                q.state
+                                                    .push(ItemState::Pending);
+                                            }
+                                            available.notify_all();
+                                        }
+                                        Ok(Refill::Wait(d)) => {
+                                            // sleep off-lock in slices so
+                                            // a stop can cut the wait
+                                            // short; `refilling` stays set
+                                            // to keep the poll single-file
+                                            drop(q);
+                                            let deadline = Instant::now() + d;
+                                            loop {
+                                                let left = deadline
+                                                    .saturating_duration_since(
+                                                        Instant::now(),
+                                                    );
+                                                if left.is_zero() {
+                                                    break;
+                                                }
+                                                std::thread::sleep(left.min(
+                                                    Duration::from_millis(100),
+                                                ));
+                                                if queue
+                                                    .lock()
+                                                    .unwrap()
+                                                    .stop
+                                                {
+                                                    break;
+                                                }
+                                            }
+                                            q = queue.lock().unwrap();
+                                            q.refilling = false;
+                                            available.notify_all();
+                                        }
+                                        Ok(Refill::Exhausted) => {
+                                            q.refilling = false;
+                                            q.source_done = true;
+                                            available.notify_all();
+                                        }
+                                        Err(err) => {
+                                            q.refilling = false;
+                                            q.stop = true;
+                                            available.notify_all();
+                                            let _ = tx
+                                                .send(Msg::SourceErr { err });
+                                        }
+                                    }
                                 }
                                 // nothing left this worker could ever
                                 // run (done, or its models failed here)
@@ -361,8 +548,7 @@ where
                             }
                         }
                     };
-                    let Some(i) = claimed else { break };
-                    let it = &req.items[i];
+                    let Some((i, it)) = claimed else { break };
                     let m = &req.members[it.member];
                     let mut guard = ClaimGuard {
                         queue,
@@ -395,19 +581,41 @@ where
                             }
                         }
                         Err(CellError::Setup(err)) => {
-                            // this worker cannot run this member's model:
-                            // hand the item back and skip the model
-                            failed.insert(m.fingerprint.as_str());
+                            // hand the item back first so another worker
+                            // can take it while this one backs off
                             {
                                 let mut q = queue.lock().unwrap();
                                 q.state[i] = ItemState::Pending;
                                 q.inflight[it.member] -= 1;
                             }
                             available.notify_all();
-                            let _ = tx.send(Msg::SetupErr {
-                                model: m.model.clone(),
-                                err,
-                            });
+                            let n = attempts
+                                .entry(m.fingerprint.as_str())
+                                .or_insert(0);
+                            *n += 1;
+                            if *n < SETUP_ATTEMPTS {
+                                // transient? back off and try again
+                                retries += 1;
+                                eprintln!(
+                                    "[{label}] note: worker {w} setup for \
+                                     model '{}' failed (attempt \
+                                     {n}/{SETUP_ATTEMPTS}): {err:#}; \
+                                     retrying",
+                                    m.model
+                                );
+                                std::thread::sleep(setup_backoff(*n));
+                            } else {
+                                // out of attempts: this worker skips the
+                                // model from now on
+                                failed.insert(m.fingerprint.as_str());
+                                if let Some(src) = req.source {
+                                    src.model_failed(&m.fingerprint);
+                                }
+                                let _ = tx.send(Msg::SetupErr {
+                                    model: m.model.clone(),
+                                    err,
+                                });
+                            }
                         }
                         Err(CellError::Run(err)) => {
                             {
@@ -428,17 +636,18 @@ where
                         compiles,
                         compile_seconds,
                         cells,
+                        retries,
                     },
                 });
             });
         }
         drop(tx); // the collector exits once every worker hangs up
 
-        // Collector: the only thread that touches slots and stores.
+        // Collector: the only thread that touches slots and sinks.
         for msg in rx {
             match msg {
                 Msg::Done { item, out } => {
-                    let it = &req.items[item];
+                    let it = queue.lock().unwrap().items[item].clone();
                     let m = &req.members[it.member];
                     if req.verbose {
                         let who = if m.name.is_empty() {
@@ -457,16 +666,34 @@ where
                         );
                     }
                     if store_err.is_none() && halt_err.is_none() {
-                        if let Some(st) = stores[it.member].as_mut() {
-                            if let Err(e) = st.record(it.cell_index, &out) {
-                                // persistence failure is fatal: stop
-                                // claiming new cells, drain, and report
-                                queue.lock().unwrap().stop = true;
-                                available.notify_all();
-                                store_err = Some(e);
+                        let mut stored = true;
+                        if let Some(st) = sinks[it.member].as_mut() {
+                            match st.record_cell(it.cell_index, &out) {
+                                Ok(Recorded::Stored) => {}
+                                Ok(Recorded::Refused(reason)) => {
+                                    // the cell is complete globally, just
+                                    // not ours to persist (claim mode)
+                                    stored = false;
+                                    refused += 1;
+                                    if req.verbose {
+                                        eprintln!(
+                                            "[{}] note: cell {} not \
+                                             recorded here: {reason}",
+                                            req.label, it.cell_index
+                                        );
+                                    }
+                                }
+                                Err(e) => {
+                                    // persistence failure is fatal: stop
+                                    // claiming new cells, drain, report
+                                    stored = false;
+                                    queue.lock().unwrap().stop = true;
+                                    available.notify_all();
+                                    store_err = Some(e);
+                                }
                             }
                         }
-                        if store_err.is_none() {
+                        if store_err.is_none() && stored {
                             fresh += 1;
                             let halted = match req.halt_after_cells {
                                 Some(n) => {
@@ -502,20 +729,26 @@ where
                 Msg::SetupErr { model, err } => {
                     setup_errs.push((model, err));
                 }
+                Msg::SourceErr { err } => {
+                    if source_err.is_none() {
+                        source_err = Some(err);
+                    }
+                }
                 Msg::WorkerExit { stats } => worker_stats.push(stats),
             }
         }
     });
 
     worker_stats.sort_by_key(|s| s.worker);
-    let done = req
+    let q = queue.into_inner().unwrap();
+    let done = q
         .items
         .iter()
         .filter(|it| slots[it.member][it.slot].is_some())
         .count();
     // a real cell failure always wins (reported at its true identity)
     if let Some((i, e)) = first_err {
-        let it = &req.items[i];
+        let it = &q.items[i];
         let m = &req.members[it.member];
         let who = if m.name.is_empty() {
             m.model.clone()
@@ -526,21 +759,26 @@ where
             "{}: cell {} of '{who}' failed ({done}/{} complete)",
             req.label,
             it.cell_index,
-            req.items.len()
+            q.items.len()
         )));
     }
     if let Some(e) = store_err {
         return Err(e.context("persisting cell artifact"));
     }
+    if let Some(e) = source_err {
+        return Err(e.context(format!("{}: item source failed", req.label)));
+    }
     if let Some(e) = halt_err {
         return Err(e);
     }
-    if done != req.items.len() {
+    if req.source.is_none() && done != q.items.len() {
         // cells went unclaimed — every worker that tried their model
         // failed to compile it (or died on setup). Prefer a compile
         // error that names a model over a bare worker-init failure: the
         // init error may be an unrelated worker, while a named compile
-        // failure is what actually left cells unclaimed.
+        // failure is what actually left cells unclaimed. (Sourced runs
+        // skip this: their source decides global completion, and an
+        // enqueued item another claimer finished is not a failure.)
         let e = match setup_errs.iter().position(|(m, _)| !m.is_empty()) {
             Some(i) => {
                 let (model, e) = setup_errs.swap_remove(i);
@@ -555,8 +793,8 @@ where
         return Err(e.context(format!(
             "{}: {} of {} cells unclaimed (no worker could run them)",
             req.label,
-            req.items.len() - done,
-            req.items.len()
+            q.items.len() - done,
+            q.items.len()
         )));
     }
     if !setup_errs.is_empty() {
@@ -573,7 +811,7 @@ where
             req.label
         );
     }
-    Ok(ExecStats { jobs, workers: worker_stats })
+    Ok(ExecStats { jobs, workers: worker_stats, refused })
 }
 
 /// Production [`CellRunner`]: one PJRT client plus an LRU cache of
@@ -730,6 +968,10 @@ mod tests {
     /// cache.
     struct FabRunner {
         fail: HashSet<String>,
+        /// Per-fingerprint countdown of *transient* setup failures: the
+        /// first N attempts fail, then the model compiles fine (shared
+        /// across workers so the count is per pool, like a flaky device).
+        transient: Option<Arc<Mutex<HashMap<String, usize>>>>,
         compiled: Vec<String>,
         compiles: usize,
         fail_cell: Option<(usize, usize)>, // (member, cell_index) to fail
@@ -769,6 +1011,7 @@ mod tests {
         fn plain() -> FabRunner {
             FabRunner {
                 fail: HashSet::new(),
+                transient: None,
                 compiled: Vec::new(),
                 compiles: 0,
                 fail_cell: None,
@@ -791,6 +1034,18 @@ mod tests {
                     "injected compile failure for {}",
                     member.fingerprint
                 )));
+            }
+            if let Some(t) = &self.transient {
+                let mut t = t.lock().unwrap();
+                if let Some(n) = t.get_mut(&member.fingerprint) {
+                    if *n > 0 {
+                        *n -= 1;
+                        return Err(CellError::Setup(anyhow!(
+                            "injected transient setup failure for {}",
+                            member.fingerprint
+                        )));
+                    }
+                }
             }
             if !self.compiled.contains(&member.fingerprint) {
                 self.compiled.push(member.fingerprint.clone());
@@ -836,8 +1091,9 @@ mod tests {
             jobs,
             verbose: false,
             halt_after_cells: halt,
+            source: None,
         };
-        let mut stores: Vec<Option<&mut RunStore>> =
+        let mut stores: Vec<Option<&mut dyn CellSink>> =
             members.iter().map(|_| None).collect();
         let cells = items
             .iter()
@@ -961,6 +1217,132 @@ mod tests {
         // tests/global_sched.rs against a real store)
         let done = slots[0].iter().filter(|o| o.is_some()).count();
         assert!((2..=5).contains(&done), "{done}");
+    }
+
+    #[test]
+    fn transient_setup_failure_is_retried_and_counted() {
+        // the first two compile attempts for fpA fail, the third works:
+        // a single worker must ride through on retries alone (no second
+        // worker exists to take the item), completing everything
+        let members = [member("a", "fpA", 4)];
+        let items = items_for(&members, 3);
+        let transient = Arc::new(Mutex::new(HashMap::from([(
+            "fpA".to_string(),
+            2usize,
+        )])));
+        let (res, slots) = run(&members, &items, 1, None, |_| {
+            let mut r = FabRunner::plain();
+            r.transient = Some(transient.clone());
+            Ok(r)
+        });
+        let stats = res.unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+        assert_eq!(stats.total_retries(), 2, "{:?}", stats.workers);
+        // the failure healed within the attempt budget: no scary
+        // "unclaimed"/setup note path was taken (run returned Ok above)
+        assert_eq!(
+            stats.workers.iter().map(|w| w.cells).sum::<usize>(),
+            items.len()
+        );
+    }
+
+    #[test]
+    fn exhausted_transient_budget_still_skips_the_model() {
+        // permanent failure: retries burn out, the model is skipped, and
+        // with no other worker the cells end up unclaimed
+        let members = [member("a", "fpA", 4)];
+        let items = items_for(&members, 2);
+        let (res, _) = run(&members, &items, 1, None, |_| {
+            let mut r = FabRunner::plain();
+            r.fail.insert("fpA".into());
+            Ok(r)
+        });
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("unclaimed"), "{msg}");
+    }
+
+    /// Scripted ItemSource: hands out `batches` in order, then reports
+    /// Wait once (exercising the poll path), then Exhausted.
+    struct FabSource {
+        batches: Mutex<Vec<Vec<ExecItem>>>,
+        waits: Mutex<usize>,
+    }
+
+    impl ItemSource for FabSource {
+        fn refill(&self) -> Result<Refill> {
+            if let Some(batch) = self.batches.lock().unwrap().pop() {
+                return Ok(Refill::Items(batch));
+            }
+            let mut w = self.waits.lock().unwrap();
+            if *w > 0 {
+                *w -= 1;
+                return Ok(Refill::Wait(Duration::from_millis(5)));
+            }
+            Ok(Refill::Exhausted)
+        }
+    }
+
+    #[test]
+    fn item_source_feeds_the_pool_incrementally() {
+        let members = [member("a", "fpA", 4)];
+        let all = items_for(&members, 6);
+        // seed two, source the other four in two batches
+        let seed = &all[..2];
+        let batches = vec![all[4..].to_vec(), all[2..4].to_vec()];
+        let source = FabSource {
+            batches: Mutex::new(batches),
+            waits: Mutex::new(2),
+        };
+        let req = ExecRequest {
+            label: "test".into(),
+            members: &members,
+            items: seed,
+            jobs: 3,
+            verbose: false,
+            halt_after_cells: None,
+            source: Some(&source),
+        };
+        let mut sinks: Vec<Option<&mut dyn CellSink>> = vec![None];
+        let mut slots: Vec<Vec<Option<RunOutcome>>> = vec![vec![None; 6]];
+        let stats =
+            run_items(&req, &mut sinks, &mut slots, |_| Ok(FabRunner::plain()))
+                .unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+        assert_eq!(
+            stats.workers.iter().map(|w| w.cells).sum::<usize>(),
+            6
+        );
+        // every handed-out batch was drained and the waits were consumed
+        assert!(source.batches.lock().unwrap().is_empty());
+        assert_eq!(*source.waits.lock().unwrap(), 0);
+    }
+
+    #[test]
+    fn item_source_error_is_fatal() {
+        struct BadSource;
+        impl ItemSource for BadSource {
+            fn refill(&self) -> Result<Refill> {
+                anyhow::bail!("injected source failure")
+            }
+        }
+        let members = [member("a", "fpA", 4)];
+        let req = ExecRequest {
+            label: "test".into(),
+            members: &members,
+            items: &[],
+            jobs: 2,
+            verbose: false,
+            halt_after_cells: None,
+            source: Some(&BadSource),
+        };
+        let mut sinks: Vec<Option<&mut dyn CellSink>> = vec![None];
+        let mut slots: Vec<Vec<Option<RunOutcome>>> = vec![vec![]];
+        let err =
+            run_items(&req, &mut sinks, &mut slots, |_| Ok(FabRunner::plain()))
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected source failure"), "{msg}");
+        assert!(msg.contains("item source failed"), "{msg}");
     }
 
     #[test]

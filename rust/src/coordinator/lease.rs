@@ -1,0 +1,1471 @@
+//! Lease-based dynamic cell claiming: N cooperating `cpt` processes
+//! ("claimers") divide one sweep or campaign dynamically through the
+//! shared run directory, so the work finishes at the speed of the
+//! surviving nodes — no static `--shard` split, no babysitting dead or
+//! stalled workers.
+//!
+//! Layout added under each member run dir (and, for campaigns, a
+//! process-liveness dir under the root):
+//!
+//! ```text
+//! <member-dir>/
+//!   claim/
+//!     cells/00003.json           # commit entry: cell 3 is done (who,
+//!                                #   artifact file, checksum, seconds)
+//!     leases/00003.g1.json       # lease, generation 1 (claimer, deadline)
+//!     leases/00003.g2.json       # generation 2: g1 expired and was stolen
+//!   00003-CR-q6-t0.alice.json    # claimer-suffixed cell artifact
+//! <root>/claim/workers/alice.json  # per-claimer liveness heartbeat
+//! ```
+//!
+//! Protocol invariants:
+//!
+//! * **A lease file is the lock.** `{index:05}.g{generation}.json` is
+//!   created with [`publish_exclusive`] (hard-link create-exclusive), so
+//!   exactly one claimer can hold any generation. The *current* lease is
+//!   the highest generation on file; lease files are never deleted, so
+//!   there is no remove/recreate race window.
+//! * **Heartbeats extend, steals supersede.** A live claimer rewrites its
+//!   current-generation lease (atomic rename) with a fresh deadline every
+//!   lease/4 seconds. Once the deadline passes, any claimer may publish
+//!   generation+1 — the steal. The previous holder is *fenced*, not
+//!   killed: if it wakes up it discovers the higher generation and
+//!   refuses to commit.
+//! * **The commit entry is the single commit point.** A finished cell is
+//!   recorded by hard-linking `claim/cells/{index:05}.json` — again
+//!   create-exclusive, so a cell can never be committed twice. The
+//!   artifact is written first, under a claimer-suffixed name so two
+//!   racing writers can never tear each other's bytes; the loser deletes
+//!   its own artifact. A claimer checks its lease is still current
+//!   *before* writing anything, and the entry link is atomic, so a cell
+//!   stolen mid-run ends with exactly one entry and one referenced
+//!   artifact.
+//! * **Finalize rebuilds the ordinary manifest.** When every cell has a
+//!   commit entry, each finishing claimer rewrites `run-manifest.json`
+//!   (shard 1/1) from the entries — identical inputs, identical bytes,
+//!   so the last-writer race is benign — and loads all outcomes
+//!   checksum-verified. Every claimer that finishes reports the complete
+//!   result, and downstream `cpt status` / `cpt gc` / `cpt merge` / CSV
+//!   reports see a perfectly normal run directory.
+//!
+//! Fault injection for tests and `scripts/check.sh`: CPT_HALT_AFTER_CELLS
+//! kills a claimer after N fresh cells (the shared crash knob), and
+//! CPT_STALL_AFTER_CELLS/CPT_STALL_SECS hangs one — heartbeats stop, its
+//! leases expire, a peer steals them, and its late commits are refused.
+//! The [`Clock`] trait makes lease expiry unit-testable without sleeping.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Context, Result};
+
+use super::campaign::{
+    self, CampaignPlan, CampaignRunOpts, CampaignRunResult, MemberOutcome,
+    SchedulerKind, SchedulerStats,
+};
+use super::exec::{
+    self, CellRunner, CellSink, ExecItem, ExecMember, ExecRequest, ExecStats,
+    ItemSource, Recorded, Refill,
+};
+use super::plan::{ClaimerId, ShardId, SweepPlan};
+use super::store::{self, CellEntry, ManifestSummary, RunStore};
+use super::{RunOutcome, SweepCell, SweepSpec, SweepTiming};
+use crate::runtime::{Manifest, ModelSpec};
+use crate::util::hash::fnv1a64_hex;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::{publish_exclusive, write_atomic};
+
+/// Coordination subdirectory under a member run dir (and the campaign
+/// root, for the workers dir). The name is reserved by
+/// [`ClaimerId::parse`] so it can never collide with a member name.
+pub const CLAIM_DIR: &str = "claim";
+const CELLS_DIR: &str = "cells";
+const LEASES_DIR: &str = "leases";
+const WORKERS_DIR: &str = "workers";
+const LEASE_KIND: &str = "cpt-lease";
+const CELL_ENTRY_KIND: &str = "cpt-claim-cell";
+const WORKER_KIND: &str = "cpt-claim-worker";
+
+// ---- clock --------------------------------------------------------------
+
+/// Wall-clock source for lease deadlines. Injectable so expiry and
+/// stealing are unit-testable without real sleeps; production uses
+/// [`SystemClock`]. Deadlines are absolute UNIX seconds, comparable
+/// across machines that share a filesystem (NFS-style fleets), with the
+/// usual caveat that lease durations must dominate clock skew.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+}
+
+/// UNIX-epoch seconds from the system clock.
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> f64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+}
+
+/// Manually advanced clock for tests (stores f64 bits atomically so the
+/// heartbeat thread and the test body can share it).
+pub struct TestClock(AtomicU64);
+
+impl TestClock {
+    pub fn new(t: f64) -> TestClock {
+        TestClock(AtomicU64::new(t.to_bits()))
+    }
+
+    pub fn set(&self, t: f64) {
+        self.0.store(t.to_bits(), Ordering::SeqCst);
+    }
+
+    pub fn advance(&self, dt: f64) {
+        let mut cur = self.0.load(Ordering::SeqCst);
+        loop {
+            let next = (f64::from_bits(cur) + dt).to_bits();
+            match self.0.compare_exchange(
+                cur,
+                next,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Clock for TestClock {
+    fn now(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::SeqCst))
+    }
+}
+
+// ---- configuration ------------------------------------------------------
+
+/// Default poll interval for a given lease duration: a quarter of the
+/// lease (so three heartbeats can be missed before expiry), clamped to
+/// something humane.
+fn default_poll(lease_secs: f64) -> f64 {
+    (lease_secs / 4.0).clamp(0.1, 15.0)
+}
+
+/// Knobs for one claim session.
+#[derive(Clone)]
+pub struct ClaimConfig {
+    /// This process's name on the claim board (lease records, liveness
+    /// file, artifact suffix).
+    pub claimer: ClaimerId,
+    /// Lease duration: a claimer that misses heartbeats for this long is
+    /// presumed dead and its cells become stealable.
+    pub lease_secs: f64,
+    /// How long to wait between claim-board polls when every uncommitted
+    /// cell is actively leased elsewhere.
+    pub poll_secs: f64,
+    /// Deterministic hung-worker injection: after this many freshly
+    /// committed cells, stop heartbeating and sleep `stall_secs` — a
+    /// stand-in for a wedged process that holds leases but makes no
+    /// progress (CPT_STALL_AFTER_CELLS).
+    pub stall_after_cells: Option<usize>,
+    pub stall_secs: f64,
+    /// Run the background heartbeat thread (tests that drive the clock by
+    /// hand turn it off so a lease can expire on cue).
+    pub auto_heartbeat: bool,
+    pub clock: Arc<dyn Clock>,
+}
+
+impl ClaimConfig {
+    pub fn new(claimer: ClaimerId) -> ClaimConfig {
+        ClaimConfig {
+            claimer,
+            lease_secs: 60.0,
+            poll_secs: default_poll(60.0),
+            stall_after_cells: None,
+            stall_secs: 5.0,
+            auto_heartbeat: true,
+            clock: Arc::new(SystemClock),
+        }
+    }
+
+    /// Build a config from the environment knobs, strictly: an unparsable
+    /// or out-of-range value aborts the run instead of silently falling
+    /// back (same contract as CPT_HALT_AFTER_CELLS).
+    pub fn from_env(claimer: ClaimerId) -> Result<ClaimConfig> {
+        let mut cfg = ClaimConfig::new(claimer);
+        if let Some(v) = super::env_parse::<f64>("CPT_LEASE_SECS")? {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("CPT_LEASE_SECS must be a positive number of seconds");
+            }
+            cfg.lease_secs = v;
+            cfg.poll_secs = default_poll(v);
+        }
+        if let Some(v) = super::env_parse::<f64>("CPT_CLAIM_POLL_SECS")? {
+            if !v.is_finite() || v <= 0.0 {
+                bail!(
+                    "CPT_CLAIM_POLL_SECS must be a positive number of seconds"
+                );
+            }
+            cfg.poll_secs = v;
+        }
+        if let Some(n) = super::env_parse::<usize>("CPT_STALL_AFTER_CELLS")? {
+            if n == 0 {
+                bail!(
+                    "CPT_STALL_AFTER_CELLS must be >= 1 (unset it to disable \
+                     stall injection)"
+                );
+            }
+            cfg.stall_after_cells = Some(n);
+        }
+        if let Some(v) = super::env_parse::<f64>("CPT_STALL_SECS")? {
+            if !v.is_finite() || v < 0.0 {
+                bail!("CPT_STALL_SECS must be a non-negative number of seconds");
+            }
+            cfg.stall_secs = v;
+        }
+        Ok(cfg)
+    }
+}
+
+// ---- on-disk records ----------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct LeaseRecord {
+    claimer: String,
+    generation: usize,
+    /// Absolute clock seconds; past it the lease is steal-eligible.
+    deadline: f64,
+}
+
+fn lease_file_name(index: usize, generation: usize) -> String {
+    format!("{index:05}.g{generation}.json")
+}
+
+/// Parse `NNNNN.g<gen>.json`; `None` for anything else (in particular the
+/// `*.tmp` staging files of in-flight atomic writes).
+fn parse_lease_name(name: &str) -> Option<(usize, usize)> {
+    let stem = name.strip_suffix(".json")?;
+    let (index, generation) = stem.split_once(".g")?;
+    Some((index.parse().ok()?, generation.parse().ok()?))
+}
+
+fn encode_lease(claimer: &str, generation: usize, deadline: f64) -> String {
+    obj(vec![
+        ("kind", s(LEASE_KIND)),
+        ("claimer", s(claimer)),
+        ("generation", num(generation as f64)),
+        ("deadline", num(deadline)),
+    ])
+    .to_string_pretty()
+}
+
+fn read_lease(path: &Path) -> Result<LeaseRecord> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&src)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if j.get("kind")?.as_str()? != LEASE_KIND {
+        bail!("{}: not a cpt lease record", path.display());
+    }
+    Ok(LeaseRecord {
+        claimer: j.get("claimer")?.as_str()?.to_string(),
+        generation: j.get("generation")?.as_usize()?,
+        deadline: j.get("deadline")?.as_f64()?,
+    })
+}
+
+/// The highest-generation lease on file for `index`, if any. Generations
+/// start at 1 and lease files are never deleted, so the maximum is the
+/// authoritative current lease.
+fn current_lease(leases_dir: &Path, index: usize) -> Result<Option<LeaseRecord>> {
+    let rd = match std::fs::read_dir(leases_dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("read dir {}", leases_dir.display())))
+        }
+    };
+    let mut best_gen = 0usize;
+    let mut best_path: Option<PathBuf> = None;
+    for e in rd {
+        let e = e
+            .with_context(|| format!("read dir {}", leases_dir.display()))?;
+        let name = e.file_name();
+        let Some((idx, generation)) =
+            parse_lease_name(&name.to_string_lossy())
+        else {
+            continue;
+        };
+        if idx != index || generation <= best_gen {
+            continue;
+        }
+        best_gen = generation;
+        best_path = Some(e.path());
+    }
+    let Some(path) = best_path else { return Ok(None) };
+    let rec = read_lease(&path)?;
+    if rec.generation != best_gen {
+        bail!(
+            "{}: lease generation disagrees with its file name",
+            path.display()
+        );
+    }
+    Ok(Some(rec))
+}
+
+fn cell_entry_file(index: usize) -> String {
+    format!("{index:05}.json")
+}
+
+fn encode_cell_entry(index: usize, claimer: &str, e: &CellEntry) -> String {
+    let mut fields = vec![
+        ("kind", s(CELL_ENTRY_KIND)),
+        ("index", num(index as f64)),
+        ("claimer", s(claimer)),
+        ("file", s(&e.file)),
+        ("checksum", s(&e.checksum)),
+        ("seconds", num(e.seconds)),
+    ];
+    // optional keys mirror the manifest schema, so entries seeded from a
+    // pre-policy manifest round-trip without fabricating zeros
+    if let Some(mq) = e.mean_q {
+        fields.push(("mean_q", num(mq)));
+    }
+    if let Some(rc) = e.realized_cost {
+        fields.push(("realized_cost", num(rc)));
+    }
+    obj(fields).to_string_pretty()
+}
+
+/// The manifest-shaped entry of one commit-entry file. The `claimer` key
+/// is on-disk provenance only; nothing in the protocol depends on it.
+fn read_cell_entry(path: &Path, want_index: usize) -> Result<CellEntry> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&src)
+        .with_context(|| format!("parse {}", path.display()))?;
+    if j.get("kind")?.as_str()? != CELL_ENTRY_KIND {
+        bail!("{}: not a cpt claim commit entry", path.display());
+    }
+    if j.get("index")?.as_usize()? != want_index {
+        bail!("{}: entry index disagrees with its file name", path.display());
+    }
+    j.get("claimer")?.as_str()?; // provenance must at least be well-formed
+    Ok(CellEntry {
+        file: j.get("file")?.as_str()?.to_string(),
+        checksum: j.get("checksum")?.as_str()?.to_string(),
+        seconds: j.get("seconds")?.as_f64()?,
+        mean_q: j.opt("mean_q").map(|v| v.as_f64()).transpose()?,
+        realized_cost: j.opt("realized_cost").map(|v| v.as_f64()).transpose()?,
+    })
+}
+
+/// All commit entries of one member, by cell index.
+fn read_committed(cells_dir: &Path) -> Result<BTreeMap<usize, CellEntry>> {
+    let mut out = BTreeMap::new();
+    let rd = match std::fs::read_dir(cells_dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("read dir {}", cells_dir.display())))
+        }
+    };
+    for e in rd {
+        let e =
+            e.with_context(|| format!("read dir {}", cells_dir.display()))?;
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        let Some(stem) = name.strip_suffix(".json") else { continue };
+        let Ok(index) = stem.parse::<usize>() else { continue };
+        out.insert(index, read_cell_entry(&e.path(), index)?);
+    }
+    Ok(out)
+}
+
+fn encode_worker(
+    claimer: &str,
+    lease_secs: f64,
+    started: f64,
+    last_seen: f64,
+) -> String {
+    obj(vec![
+        ("kind", s(WORKER_KIND)),
+        ("claimer", s(claimer)),
+        ("lease_secs", num(lease_secs)),
+        ("started", num(started)),
+        ("last_seen", num(last_seen)),
+    ])
+    .to_string_pretty()
+}
+
+// ---- claim session state ------------------------------------------------
+
+/// One member of a claim session: the executor-facing description plus
+/// everything the claim board needs (run dir, spec hash, full canonical
+/// cell list — claim mode is always whole-plan, shard 1/1).
+pub struct ClaimMember {
+    pub exec: ExecMember,
+    pub dir: PathBuf,
+    pub spec_hash: String,
+    pub cells: Vec<SweepCell>,
+}
+
+impl ClaimMember {
+    fn cells_dir(&self) -> PathBuf {
+        self.dir.join(CLAIM_DIR).join(CELLS_DIR)
+    }
+
+    fn leases_dir(&self) -> PathBuf {
+        self.dir.join(CLAIM_DIR).join(LEASES_DIR)
+    }
+}
+
+fn member_label(m: &ClaimMember) -> &str {
+    if m.exec.name.is_empty() {
+        &m.exec.model
+    } else {
+        &m.exec.name
+    }
+}
+
+/// Mutable session bookkeeping, behind one mutex (touched briefly by the
+/// refill path, the collector's record path, and `model_failed`).
+struct ClaimInner {
+    /// Per member: cell indices with a commit entry on disk (refreshed
+    /// from the board every refill).
+    committed: Vec<HashSet<usize>>,
+    /// Items handed to the executor and not yet settled by the sink.
+    enqueued: HashSet<(usize, usize)>,
+    /// `(member, cell)` -> lease generation this process holds.
+    held: HashMap<(usize, usize), usize>,
+    /// Model fingerprint -> workers of this pool that permanently gave
+    /// up compiling it.
+    failures: HashMap<String, usize>,
+    stolen: usize,
+    committed_here: usize,
+}
+
+struct ClaimState {
+    cfg: ClaimConfig,
+    label: String,
+    verbose: bool,
+    jobs: usize,
+    members: Vec<ClaimMember>,
+    workers_dir: PathBuf,
+    started: f64,
+    inner: Mutex<ClaimInner>,
+    /// Stall injection in progress: heartbeats and refills go dark so the
+    /// leases can expire and a peer can steal them.
+    suspended: AtomicBool,
+    /// Freshly committed cells (drives the stall-injection trigger).
+    fresh: AtomicUsize,
+}
+
+impl ClaimState {
+    fn worker_file(&self) -> PathBuf {
+        self.workers_dir.join(format!("{}.json", self.cfg.claimer))
+    }
+
+    fn touch_worker(&self) -> Result<()> {
+        let now = self.cfg.clock.now();
+        write_atomic(
+            self.worker_file(),
+            encode_worker(
+                self.cfg.claimer.as_str(),
+                self.cfg.lease_secs,
+                self.started,
+                now,
+            )
+            .as_bytes(),
+        )
+        .context("write claimer liveness file")
+    }
+
+    /// Extend every held lease to `now + lease_secs` and refresh the
+    /// liveness file. Called from the heartbeat thread and at the top of
+    /// every refill (so a slow poll loop cannot let its own leases
+    /// lapse). Rewriting a lease we have meanwhile lost is harmless: the
+    /// thief holds a higher generation, which stays current.
+    fn extend_held(&self) -> Result<()> {
+        if self.suspended.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let held: Vec<((usize, usize), usize)> = {
+            let inner = self.inner.lock().unwrap();
+            inner.held.iter().map(|(&k, &g)| (k, g)).collect()
+        };
+        let deadline = self.cfg.clock.now() + self.cfg.lease_secs;
+        for ((mi, ci), generation) in held {
+            let path = self.members[mi]
+                .leases_dir()
+                .join(lease_file_name(ci, generation));
+            write_atomic(
+                &path,
+                encode_lease(self.cfg.claimer.as_str(), generation, deadline)
+                    .as_bytes(),
+            )
+            .with_context(|| format!("heartbeat lease for cell {ci}"))?;
+        }
+        self.touch_worker()
+    }
+}
+
+/// Background heartbeat: beat every lease/4 seconds, sleeping in short
+/// slices so the stop flag is observed promptly when the run ends.
+fn heartbeat_loop(state: &ClaimState, stop: &AtomicBool) {
+    let period = Duration::from_secs_f64((state.cfg.lease_secs / 4.0).max(0.05));
+    let slice = period.min(Duration::from_millis(25));
+    let mut next = Instant::now() + period;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(slice);
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if Instant::now() < next {
+            continue;
+        }
+        next = Instant::now() + period;
+        if let Err(e) = state.extend_held() {
+            eprintln!("[{}] note: heartbeat failed: {e:#}", state.label);
+        }
+    }
+}
+
+// ---- the item source (claiming) -----------------------------------------
+
+struct ClaimSource<'a> {
+    state: &'a ClaimState,
+}
+
+impl ItemSource for ClaimSource<'_> {
+    fn refill(&self) -> Result<Refill> {
+        let st = self.state;
+        if st.suspended.load(Ordering::SeqCst) {
+            // stall injection: make no progress and extend nothing
+            return Ok(Refill::Wait(Duration::from_secs_f64(st.cfg.poll_secs)));
+        }
+        st.extend_held()?;
+        let now = st.cfg.clock.now();
+        let me = st.cfg.claimer.as_str();
+        // claim at most a small multiple of the pool size per round, so
+        // one claimer does not hoard leases it will sit on for minutes
+        let budget = (st.jobs * 2).max(2);
+        let mut items: Vec<ExecItem> = Vec::new();
+        let mut uncommitted = 0usize;
+        let mut claimable_later = 0usize;
+        let mut inner = st.inner.lock().unwrap();
+        let inner = &mut *inner;
+        for (mi, member) in st.members.iter().enumerate() {
+            // refresh this member's committed set from the board (peers
+            // commit concurrently), releasing our bookkeeping for cells
+            // that are now settled
+            for &ci in read_committed(&member.cells_dir())?.keys() {
+                if inner.committed[mi].insert(ci) {
+                    inner.held.remove(&(mi, ci));
+                    inner.enqueued.remove(&(mi, ci));
+                }
+            }
+            let dead = inner
+                .failures
+                .get(member.exec.fingerprint.as_str())
+                .is_some_and(|&n| n >= st.jobs);
+            for ci in 0..member.cells.len() {
+                if inner.committed[mi].contains(&ci) {
+                    continue;
+                }
+                uncommitted += 1;
+                if dead {
+                    // no worker in this process can run it; progress only
+                    // counts if a peer holds a live lease on it
+                    if current_lease(&member.leases_dir(), ci)?
+                        .is_some_and(|l| l.deadline > now && l.claimer != me)
+                    {
+                        claimable_later += 1;
+                    }
+                    continue;
+                }
+                claimable_later += 1;
+                if inner.enqueued.contains(&(mi, ci))
+                    || items.len() >= budget
+                {
+                    continue;
+                }
+                let lease = current_lease(&member.leases_dir(), ci)?;
+                let next_gen = match &lease {
+                    Some(l) if l.deadline > now => continue, // live elsewhere
+                    Some(l) => l.generation + 1,
+                    None => 1,
+                };
+                let path =
+                    member.leases_dir().join(lease_file_name(ci, next_gen));
+                let bytes =
+                    encode_lease(me, next_gen, now + st.cfg.lease_secs);
+                if !publish_exclusive(&path, bytes.as_bytes())? {
+                    continue; // a peer won this generation first
+                }
+                if let Some(l) = &lease {
+                    inner.stolen += 1;
+                    eprintln!(
+                        "[{}] claimer '{me}' stole cell {ci} of '{}' from \
+                         '{}' (lease generation {} expired)",
+                        st.label,
+                        member_label(member),
+                        l.claimer,
+                        l.generation
+                    );
+                }
+                inner.held.insert((mi, ci), next_gen);
+                inner.enqueued.insert((mi, ci));
+                items.push(ExecItem {
+                    member: mi,
+                    cell_index: ci,
+                    slot: ci,
+                    cell: member.cells[ci].clone(),
+                });
+            }
+        }
+        if uncommitted == 0 {
+            return Ok(Refill::Exhausted);
+        }
+        if !items.is_empty() {
+            if st.verbose {
+                eprintln!(
+                    "[{}] claimer '{me}' claimed {} cell(s) \
+                     ({uncommitted} uncommitted overall)",
+                    st.label,
+                    items.len()
+                );
+            }
+            return Ok(Refill::Items(items));
+        }
+        if claimable_later == 0 {
+            bail!(
+                "{uncommitted} cell(s) remain uncommitted but every one \
+                 needs a model no worker in this process can compile, and \
+                 no other claimer holds a live lease on them"
+            );
+        }
+        Ok(Refill::Wait(Duration::from_secs_f64(st.cfg.poll_secs)))
+    }
+
+    fn model_failed(&self, fingerprint: &str) {
+        let st = self.state;
+        let mine: Vec<((usize, usize), usize)> = {
+            let mut inner = st.inner.lock().unwrap();
+            let n = inner.failures.entry(fingerprint.to_string()).or_insert(0);
+            *n += 1;
+            if *n < st.jobs {
+                return;
+            }
+            let mine: Vec<((usize, usize), usize)> = inner
+                .held
+                .iter()
+                .filter(|(k, _)| {
+                    st.members[k.0].exec.fingerprint == fingerprint
+                })
+                .map(|(&k, &g)| (k, g))
+                .collect();
+            for (k, _) in &mine {
+                inner.held.remove(k);
+            }
+            mine
+        };
+        // every worker gave up on this model: expire the leases we hold
+        // on its cells so peers that *can* compile it take over now,
+        // not a lease period from now
+        let expired = st.cfg.clock.now() - 1.0;
+        for ((mi, ci), generation) in &mine {
+            let path = st.members[*mi]
+                .leases_dir()
+                .join(lease_file_name(*ci, *generation));
+            let bytes =
+                encode_lease(st.cfg.claimer.as_str(), *generation, expired);
+            if let Err(e) = write_atomic(&path, bytes.as_bytes()) {
+                eprintln!(
+                    "[{}] note: failed to release lease for cell {ci}: {e:#}",
+                    st.label
+                );
+            }
+        }
+        eprintln!(
+            "[{}] note: no worker in this process can compile \
+             '{fingerprint}'; released {} lease(s) for other claimers",
+            st.label,
+            mine.len()
+        );
+    }
+}
+
+// ---- the cell sink (fenced commit) --------------------------------------
+
+struct ClaimSink<'a> {
+    state: &'a ClaimState,
+    member: usize,
+}
+
+impl CellSink for ClaimSink<'_> {
+    fn record_cell(&mut self, index: usize, out: &RunOutcome) -> Result<Recorded> {
+        let st = self.state;
+        let member = &st.members[self.member];
+        let key = (self.member, index);
+        let my_gen = {
+            let mut inner = st.inner.lock().unwrap();
+            inner.enqueued.remove(&key);
+            inner.held.get(&key).copied()
+        };
+        let Some(my_gen) = my_gen else {
+            // settled while in flight (a peer committed it and a refill
+            // observed that) — nothing of ours to write
+            return Ok(Recorded::Refused("no lease held for this cell".into()));
+        };
+        // Fencing: commit only under the *current* lease. If a higher
+        // generation exists, we stalled past our deadline and were stolen
+        // from — the cell belongs to the thief, write nothing.
+        let current = current_lease(&member.leases_dir(), index)?;
+        let lost = match &current {
+            Some(l) => {
+                l.generation != my_gen || l.claimer != st.cfg.claimer.as_str()
+            }
+            None => true, // can't happen (leases are never deleted), but fail safe
+        };
+        if lost {
+            st.inner.lock().unwrap().held.remove(&key);
+            let who = current
+                .map(|l| {
+                    format!("'{}' (lease generation {})", l.claimer, l.generation)
+                })
+                .unwrap_or_else(|| "an unknown claimer".into());
+            return Ok(Recorded::Refused(format!("lease lost to {who}")));
+        }
+        // Artifact first, claimer-suffixed so racing writers can never
+        // tear each other's bytes; then the commit entry — the hard link
+        // is the one atomic commit point.
+        let file = format!(
+            "{index:05}-{}-q{}-t{}.{}.json",
+            out.schedule, out.q_max, out.trial, st.cfg.claimer
+        );
+        let bytes = store::encode_cell_artifact(&member.spec_hash, index, out);
+        write_atomic(member.dir.join(&file), bytes.as_bytes())
+            .with_context(|| format!("write artifact for cell {index}"))?;
+        let entry = CellEntry {
+            file: file.clone(),
+            checksum: fnv1a64_hex(bytes.as_bytes()),
+            seconds: out.exec_seconds,
+            mean_q: Some(out.mean_q),
+            realized_cost: Some(out.realized_cost),
+        };
+        let doc = encode_cell_entry(index, st.cfg.claimer.as_str(), &entry);
+        let won = publish_exclusive(
+            member.cells_dir().join(cell_entry_file(index)),
+            doc.as_bytes(),
+        )?;
+        {
+            let mut inner = st.inner.lock().unwrap();
+            inner.committed[self.member].insert(index);
+            inner.held.remove(&key);
+            if won {
+                inner.committed_here += 1;
+            }
+        }
+        if !won {
+            // a peer stole our expired lease, finished, and committed in
+            // the window since the fence check; its entry is the cell —
+            // delete our unreferenced artifact
+            std::fs::remove_file(member.dir.join(&file)).ok();
+            return Ok(Recorded::Refused(
+                "committed by another claimer first".into(),
+            ));
+        }
+        if let Some(n) = st.cfg.stall_after_cells {
+            if st.fresh.fetch_add(1, Ordering::SeqCst) + 1 == n
+                && st.cfg.stall_secs > 0.0
+            {
+                // deterministic hung worker: go dark (no heartbeats, no
+                // claims) long enough for our leases to expire and be
+                // stolen, then wake up and discover the theft
+                st.suspended.store(true, Ordering::SeqCst);
+                eprintln!(
+                    "[{}] claimer '{}' stalling {:.1}s after {n} committed \
+                     cell(s) (CPT_STALL_AFTER_CELLS injection)",
+                    st.label, st.cfg.claimer, st.cfg.stall_secs
+                );
+                std::thread::sleep(Duration::from_secs_f64(st.cfg.stall_secs));
+                st.suspended.store(false, Ordering::SeqCst);
+            }
+        }
+        Ok(Recorded::Stored)
+    }
+}
+
+// ---- seeding, finalizing ------------------------------------------------
+
+/// Import a prior (static-mode) run's recorded cells as commit entries,
+/// so a claim session over a directory that already holds progress keeps
+/// it instead of recomputing — and so the finalizer's rebuilt manifest
+/// can never lose cells the old manifest had. Invalid artifacts are
+/// skipped (recomputed), exactly like the resume path.
+fn seed_from_manifest(member: &ClaimMember, me: &ClaimerId) -> Result<()> {
+    if !member.dir.join(store::MANIFEST_FILE).exists() {
+        return Ok(());
+    }
+    let ms = store::read_manifest(&member.dir)?;
+    if ms.spec_hash != member.spec_hash {
+        // defensive: the wrapper's RunStore::open fence already refused
+        bail!(
+            "run dir {} belongs to a different sweep spec (manifest {}, \
+             requested {})",
+            member.dir.display(),
+            ms.spec_hash,
+            member.spec_hash
+        );
+    }
+    let cells_dir = member.cells_dir();
+    for (&index, e) in &ms.cells {
+        let entry_path = cells_dir.join(cell_entry_file(index));
+        if entry_path.exists() {
+            continue;
+        }
+        // validate before seeding: a corrupt artifact must be recomputed,
+        // not laundered into a commit entry
+        if let Err(err) = store::load_artifact(
+            &member.dir.join(&e.file),
+            &e.checksum,
+            &ms.spec_hash,
+            index,
+        ) {
+            eprintln!(
+                "[lease] note: cell {index} artifact invalid ({err:#}); it \
+                 will be recomputed"
+            );
+            continue;
+        }
+        let doc = encode_cell_entry(index, me.as_str(), e);
+        publish_exclusive(&entry_path, doc.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Rebuild the member's ordinary `run-manifest.json` (shard 1/1) from the
+/// commit entries and load every outcome checksum-verified. All finishing
+/// claimers derive identical manifests from identical entries, so the
+/// last-writer race is benign. When an existing manifest references the
+/// same artifact file as an entry, its checksum wins — `cpt gc` rewrites
+/// artifacts and manifest checksums without touching commit entries, so
+/// the manifest is the fresher truth for compacted cells.
+fn finalize_member(member: &ClaimMember) -> Result<Vec<RunOutcome>> {
+    let committed = read_committed(&member.cells_dir())?;
+    let total = member.cells.len();
+    if committed.len() != total {
+        bail!(
+            "member '{}' has {}/{} cells committed; cannot finalize",
+            member_label(member),
+            committed.len(),
+            total
+        );
+    }
+    let prior: BTreeMap<usize, CellEntry> =
+        if member.dir.join(store::MANIFEST_FILE).exists() {
+            store::read_manifest(&member.dir)
+                .map(|m| m.cells)
+                .unwrap_or_default()
+        } else {
+            BTreeMap::new()
+        };
+    let mut cells: BTreeMap<usize, CellEntry> = BTreeMap::new();
+    let mut outs = Vec::with_capacity(total);
+    for (index, ce) in &committed {
+        if *index >= total {
+            bail!(
+                "member '{}': commit entry for out-of-range cell {index} \
+                 (plan has {total})",
+                member_label(member)
+            );
+        }
+        let entry = match prior.get(index) {
+            Some(pe) if pe.file == ce.file => pe.clone(),
+            _ => ce.clone(),
+        };
+        outs.push(store::load_artifact(
+            &member.dir.join(&entry.file),
+            &entry.checksum,
+            &member.spec_hash,
+            *index,
+        )?);
+        cells.insert(*index, entry);
+    }
+    store::write_manifest_file(
+        &member.dir,
+        &ManifestSummary {
+            cpt_version: RunStore::code_version().to_string(),
+            spec_hash: member.spec_hash.clone(),
+            model_fingerprint: member.exec.fingerprint.clone(),
+            model: member.exec.model.clone(),
+            shard: ShardId::single(),
+            total_cells: total,
+            cells,
+        },
+    )?;
+    Ok(outs)
+}
+
+// ---- the claim session --------------------------------------------------
+
+/// Accounting for one claim session.
+#[derive(Clone, Debug)]
+pub struct ClaimRunStats {
+    pub exec: ExecStats,
+    /// Cells per member already committed (by anyone) when this session
+    /// started.
+    pub resumed_per_member: Vec<usize>,
+    /// Cells this claimer committed.
+    pub committed_here: usize,
+    /// Expired leases this claimer took over.
+    pub stolen: usize,
+}
+
+impl ClaimRunStats {
+    pub fn resumed(&self) -> usize {
+        self.resumed_per_member.iter().sum()
+    }
+}
+
+/// Run one claim session over `members`: claim cells lease-by-lease, run
+/// them on a `jobs`-worker pool, commit results to the shared board, and
+/// — once every cell of every member is committed by someone — finalize
+/// the manifests and return the complete outcomes in canonical order.
+/// Every claimer that returns `Ok` reports the full result, including
+/// cells computed by its peers.
+pub fn run_claim<R, F>(
+    label: &str,
+    members: Vec<ClaimMember>,
+    workers_dir: &Path,
+    jobs: usize,
+    verbose: bool,
+    cfg: &ClaimConfig,
+    halt_after_cells: Option<usize>,
+    make_worker: F,
+) -> Result<(Vec<Vec<RunOutcome>>, ClaimRunStats)>
+where
+    R: CellRunner,
+    F: Fn(usize) -> Result<R> + Sync,
+{
+    let jobs = jobs.max(1);
+    std::fs::create_dir_all(workers_dir)
+        .with_context(|| format!("create {}", workers_dir.display()))?;
+    for m in &members {
+        std::fs::create_dir_all(m.cells_dir())
+            .with_context(|| format!("create {}", m.cells_dir().display()))?;
+        std::fs::create_dir_all(m.leases_dir())
+            .with_context(|| format!("create {}", m.leases_dir().display()))?;
+        seed_from_manifest(m, &cfg.claimer)?;
+    }
+    let mut committed: Vec<HashSet<usize>> = Vec::with_capacity(members.len());
+    let mut resumed_per_member = Vec::with_capacity(members.len());
+    for m in &members {
+        let have: HashSet<usize> =
+            read_committed(&m.cells_dir())?.keys().copied().collect();
+        resumed_per_member.push(have.len());
+        committed.push(have);
+    }
+    if verbose && resumed_per_member.iter().sum::<usize>() > 0 {
+        eprintln!(
+            "[{label}] {} cell(s) already committed on the claim board",
+            resumed_per_member.iter().sum::<usize>()
+        );
+    }
+    let state = ClaimState {
+        cfg: cfg.clone(),
+        label: label.to_string(),
+        verbose,
+        jobs,
+        members,
+        workers_dir: workers_dir.to_path_buf(),
+        started: cfg.clock.now(),
+        inner: Mutex::new(ClaimInner {
+            committed,
+            enqueued: HashSet::new(),
+            held: HashMap::new(),
+            failures: HashMap::new(),
+            stolen: 0,
+            committed_here: 0,
+        }),
+        suspended: AtomicBool::new(false),
+        fresh: AtomicUsize::new(0),
+    };
+    state.touch_worker()?;
+
+    let exec_members: Vec<ExecMember> =
+        state.members.iter().map(|m| m.exec.clone()).collect();
+    let mut slots: Vec<Vec<Option<RunOutcome>>> = state
+        .members
+        .iter()
+        .map(|m| vec![None; m.cells.len()])
+        .collect();
+    let source = ClaimSource { state: &state };
+    let mut sinks: Vec<ClaimSink<'_>> = (0..state.members.len())
+        .map(|mi| ClaimSink { state: &state, member: mi })
+        .collect();
+    let req = ExecRequest {
+        label: label.to_string(),
+        members: &exec_members,
+        items: &[],
+        jobs,
+        verbose,
+        halt_after_cells,
+        source: Some(&source),
+    };
+    let stop = AtomicBool::new(false);
+    let exec_stats = std::thread::scope(|scope| {
+        if cfg.auto_heartbeat {
+            let state_ref = &state;
+            let stop_ref = &stop;
+            scope.spawn(move || heartbeat_loop(state_ref, stop_ref));
+        }
+        let mut sink_refs: Vec<Option<&mut dyn CellSink>> = sinks
+            .iter_mut()
+            .map(|s| Some(s as &mut dyn CellSink))
+            .collect();
+        let r = exec::run_items(&req, &mut sink_refs, &mut slots, make_worker);
+        // the heartbeat must stop whether the run succeeded or failed,
+        // or the scope would never join
+        stop.store(true, Ordering::SeqCst);
+        r
+    })?;
+
+    // The source only reports Exhausted when zero cells are uncommitted,
+    // so reaching here with holes should be impossible — but the manifest
+    // is about to be rebuilt from the entries, so re-verify from disk
+    // rather than finalize a short manifest.
+    let mut missing = 0usize;
+    for m in &state.members {
+        missing +=
+            m.cells.len() - read_committed(&m.cells_dir())?.len().min(m.cells.len());
+    }
+    if missing > 0 {
+        bail!("claim session ended with {missing} cell(s) uncommitted");
+    }
+    let mut outs = Vec::with_capacity(state.members.len());
+    for m in &state.members {
+        outs.push(finalize_member(m)?);
+    }
+    state.touch_worker().ok();
+    let inner = state.inner.into_inner().unwrap();
+    Ok((
+        outs,
+        ClaimRunStats {
+            exec: exec_stats,
+            resumed_per_member,
+            committed_here: inner.committed_here,
+            stolen: inner.stolen,
+        },
+    ))
+}
+
+// ---- production wrappers ------------------------------------------------
+
+/// `cpt sweep --claim`: one member over the spec's full (unsharded) cell
+/// list, coordinated through `--run-dir`. Returns the complete outcomes
+/// in canonical order plus timing and claim accounting.
+pub fn run_claim_sweep(
+    manifest: &Manifest,
+    spec: &SweepSpec,
+    cfg: &ClaimConfig,
+) -> Result<(Vec<RunOutcome>, SweepTiming, ClaimRunStats)> {
+    let t0 = Instant::now();
+    let plan = SweepPlan::build(spec)?;
+    if plan.shard.count > 1 {
+        bail!(
+            "--claim replaces --shard: claimers share one run directory and \
+             divide cells dynamically"
+        );
+    }
+    let Some(dir) = &spec.run_dir else {
+        bail!(
+            "--claim needs --run-dir: claimers coordinate through the shared \
+             run directory"
+        );
+    };
+    let fingerprint = match &spec.model_fingerprint {
+        Some(fp) => fp.clone(),
+        None => store::model_fingerprint(manifest.model(&spec.model)?)?,
+    };
+    let model_spec = manifest.model(&spec.model)?.clone();
+    model_spec.validate()?; // fail fast, before touching the board
+    // Apply the store fences (spec hash, model fingerprint, cpt version)
+    // and initialize a fresh dir's manifest; resume is implied — claim
+    // mode is inherently many processes opening one directory.
+    drop(RunStore::open(dir, &plan, &fingerprint, true)?);
+    let jobs = spec.jobs.max(1);
+    let member = ClaimMember {
+        exec: ExecMember {
+            name: String::new(),
+            model: spec.model.clone(),
+            fingerprint,
+            policy: spec.policy.clone(),
+            steps: plan.steps,
+            cycles: plan.cycles,
+            eval_every: spec.eval_every,
+            cap: jobs,
+        },
+        dir: dir.clone(),
+        spec_hash: plan.spec_hash.clone(),
+        cells: plan.cells.clone(),
+    };
+    let mut specs = HashMap::new();
+    specs.insert(spec.model.clone(), model_spec);
+    let cache_cap = exec::exec_cache_cap()?;
+    let workers_dir = dir.join(CLAIM_DIR).join(WORKERS_DIR);
+    let (mut outs, stats) = run_claim(
+        &format!("sweep {}", spec.model),
+        vec![member],
+        &workers_dir,
+        jobs,
+        spec.verbose,
+        cfg,
+        None,
+        |_| exec::PjrtCellRunner::new(&specs, cache_cap),
+    )?;
+    let outcomes = outs.pop().unwrap();
+    let timing = SweepTiming {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        jobs,
+        cells: outcomes.len(),
+        resumed: stats.resumed(),
+    };
+    Ok((outcomes, timing, stats))
+}
+
+/// `cpt campaign --claim`: every member's full cell list on the shared
+/// claim board, one worker pool claiming across member boundaries.
+pub fn run_claim_campaign(
+    manifest: &Manifest,
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+    cfg: &ClaimConfig,
+) -> Result<(CampaignRunResult, ClaimRunStats)> {
+    let t0 = Instant::now();
+    if opts.shard.count > 1 {
+        bail!(
+            "--claim replaces --shard: claimers share one campaign root and \
+             divide cells dynamically"
+        );
+    }
+    if opts.scheduler == SchedulerKind::Sequential {
+        bail!(
+            "--claim requires the global scheduler (claimed cells cross \
+             member boundaries)"
+        );
+    }
+    let mut specs: HashMap<String, ModelSpec> = HashMap::new();
+    let mut fingerprints: HashMap<String, String> = HashMap::new();
+    for m in &plan.members {
+        if !specs.contains_key(&m.spec.model) {
+            let ms = manifest.model(&m.spec.model)?.clone();
+            ms.validate()?; // fail fast, before touching the board
+            fingerprints
+                .insert(m.spec.model.clone(), store::model_fingerprint(&ms)?);
+            specs.insert(m.spec.model.clone(), ms);
+        }
+    }
+    // resume is implied (see run_claim_sweep); the hash/version fences
+    // still reject a root that belongs to a different campaign
+    campaign::open_campaign_root(&opts.root, plan, ShardId::single(), true)?;
+    let jobs = opts.jobs.max(1);
+    let mut members = Vec::with_capacity(plan.members.len());
+    for m in &plan.members {
+        let fp = &fingerprints[&m.spec.model];
+        let mut spec = m.spec.clone();
+        spec.shard = Some(ShardId::single());
+        let mplan = SweepPlan::build(&spec)
+            .with_context(|| format!("campaign member '{}'", m.name))?;
+        let mdir = opts.root.join(&m.name);
+        drop(
+            RunStore::open(&mdir, &mplan, fp, true)
+                .with_context(|| format!("campaign member '{}'", m.name))?,
+        );
+        members.push(ClaimMember {
+            exec: ExecMember {
+                name: m.name.clone(),
+                model: m.spec.model.clone(),
+                fingerprint: fp.clone(),
+                policy: m.spec.policy.clone(),
+                steps: mplan.steps,
+                cycles: mplan.cycles,
+                eval_every: m.spec.eval_every,
+                cap: campaign::member_cap(m.jobs, jobs),
+            },
+            dir: mdir,
+            spec_hash: mplan.spec_hash.clone(),
+            cells: mplan.cells.clone(),
+        });
+    }
+    let cache_cap = exec::exec_cache_cap()?;
+    let workers_dir = opts.root.join(CLAIM_DIR).join(WORKERS_DIR);
+    let (outs, stats) = run_claim(
+        &format!("campaign {}", plan.name),
+        members,
+        &workers_dir,
+        jobs,
+        opts.verbose,
+        cfg,
+        None,
+        |_| exec::PjrtCellRunner::new(&specs, cache_cap),
+    )?;
+    // every finishing claimer records its own pool's accounting — a
+    // benign last-writer-wins, like the manifest rebuild itself
+    let sched = SchedulerStats {
+        jobs: stats.exec.jobs,
+        workers: stats.exec.workers.clone(),
+    };
+    campaign::record_scheduler_stats(&opts.root, &sched)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut members_out = Vec::with_capacity(plan.members.len());
+    for ((m, mouts), res) in plan
+        .members
+        .iter()
+        .zip(outs)
+        .zip(stats.resumed_per_member.iter().copied())
+    {
+        let cells = mouts.len();
+        members_out.push(MemberOutcome {
+            name: m.name.clone(),
+            model: m.spec.model.clone(),
+            outcomes: mouts,
+            timing: SweepTiming {
+                wall_seconds: wall,
+                jobs: stats.exec.jobs,
+                cells,
+                resumed: res,
+            },
+        });
+    }
+    Ok((
+        CampaignRunResult {
+            members: members_out,
+            wall_seconds: wall,
+            scheduler: Some(sched),
+        },
+        stats,
+    ))
+}
+
+// ---- status views -------------------------------------------------------
+
+/// One uncommitted cell's current lease, as `cpt status` shows it.
+#[derive(Clone, Debug)]
+pub struct LeaseView {
+    pub cell: usize,
+    pub claimer: String,
+    pub generation: usize,
+    /// Seconds until the deadline; negative = expired (steal-eligible).
+    pub remaining: f64,
+}
+
+/// Claim-board summary for one member run dir.
+#[derive(Clone, Debug)]
+pub struct ClaimBoardStatus {
+    /// Cells with a commit entry.
+    pub committed: usize,
+    /// Live leases on uncommitted cells.
+    pub active: Vec<LeaseView>,
+    /// Expired leases on uncommitted cells (their holders look dead).
+    pub expired: Vec<LeaseView>,
+}
+
+/// Read the claim board of a member run dir; `None` when the dir has
+/// never been claimed over. `now` is the caller's clock reading.
+pub fn claim_board_status(
+    member_dir: &Path,
+    now: f64,
+) -> Result<Option<ClaimBoardStatus>> {
+    let claim = member_dir.join(CLAIM_DIR);
+    let cells_dir = claim.join(CELLS_DIR);
+    let leases_dir = claim.join(LEASES_DIR);
+    if !cells_dir.exists() && !leases_dir.exists() {
+        return Ok(None);
+    }
+    let committed = read_committed(&cells_dir)?;
+    // highest generation per cell, one directory pass
+    let mut best: BTreeMap<usize, (usize, PathBuf)> = BTreeMap::new();
+    if let Ok(rd) = std::fs::read_dir(&leases_dir) {
+        for e in rd {
+            let e = e.with_context(|| {
+                format!("read dir {}", leases_dir.display())
+            })?;
+            let name = e.file_name();
+            let Some((index, generation)) =
+                parse_lease_name(&name.to_string_lossy())
+            else {
+                continue;
+            };
+            if generation == 0 {
+                continue; // generations start at 1; never a real lease
+            }
+            let slot = best.entry(index).or_insert((0, PathBuf::new()));
+            if generation > slot.0 {
+                *slot = (generation, e.path());
+            }
+        }
+    }
+    let mut active = Vec::new();
+    let mut expired = Vec::new();
+    for (cell, (_, path)) in best {
+        if committed.contains_key(&cell) {
+            continue;
+        }
+        let l = read_lease(&path)?;
+        let view = LeaseView {
+            cell,
+            claimer: l.claimer,
+            generation: l.generation,
+            remaining: l.deadline - now,
+        };
+        if view.remaining > 0.0 {
+            active.push(view);
+        } else {
+            expired.push(view);
+        }
+    }
+    Ok(Some(ClaimBoardStatus {
+        committed: committed.len(),
+        active,
+        expired,
+    }))
+}
+
+/// One claimer's liveness, as `cpt status` shows it.
+#[derive(Clone, Debug)]
+pub struct WorkerView {
+    pub claimer: String,
+    pub lease_secs: f64,
+    /// Seconds since the claimer last heartbeat its liveness file.
+    pub since_last_seen: f64,
+}
+
+impl WorkerView {
+    /// Heuristic: a claimer silent for more than two lease periods is
+    /// presumed dead (one period is normal between beats under load).
+    pub fn looks_alive(&self) -> bool {
+        self.since_last_seen < 2.0 * self.lease_secs
+    }
+}
+
+/// Every claimer that ever joined this root (campaign root or sweep run
+/// dir), sorted by name. `now` is the caller's clock reading.
+pub fn claim_workers(root: &Path, now: f64) -> Result<Vec<WorkerView>> {
+    let dir = root.join(CLAIM_DIR).join(WORKERS_DIR);
+    let mut out = Vec::new();
+    let rd = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(anyhow::Error::from(e)
+                .context(format!("read dir {}", dir.display())))
+        }
+    };
+    for e in rd {
+        let e = e.with_context(|| format!("read dir {}", dir.display()))?;
+        let name = e.file_name();
+        if !name.to_string_lossy().ends_with(".json") {
+            continue; // *.tmp staging residue
+        }
+        let path = e.path();
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&src)
+            .with_context(|| format!("parse {}", path.display()))?;
+        if j.get("kind")?.as_str()? != WORKER_KIND {
+            bail!("{}: not a cpt claimer liveness record", path.display());
+        }
+        out.push(WorkerView {
+            claimer: j.get("claimer")?.as_str()?.to_string(),
+            lease_secs: j.get("lease_secs")?.as_f64()?,
+            since_last_seen: now - j.get("last_seen")?.as_f64()?,
+        });
+    }
+    out.sort_by(|a, b| a.claimer.cmp(&b.claimer));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_clock_sets_and_advances() {
+        let c = TestClock::new(100.0);
+        assert_eq!(c.now(), 100.0);
+        c.advance(2.5);
+        assert_eq!(c.now(), 102.5);
+        c.set(50.0);
+        assert_eq!(c.now(), 50.0);
+    }
+
+    #[test]
+    fn lease_names_round_trip_and_reject_staging_files() {
+        assert_eq!(lease_file_name(3, 2), "00003.g2.json");
+        assert_eq!(parse_lease_name("00003.g2.json"), Some((3, 2)));
+        assert_eq!(parse_lease_name("00003.g12.json"), Some((3, 12)));
+        // staging residue and foreign files never parse as leases
+        assert_eq!(parse_lease_name("00003.g2.json.123.7.tmp"), None);
+        assert_eq!(parse_lease_name("00003.json"), None);
+        assert_eq!(parse_lease_name("run-manifest.json"), None);
+        assert_eq!(parse_lease_name("00003.gx.json"), None);
+    }
+
+    #[test]
+    fn lease_records_round_trip_through_json() {
+        let doc = encode_lease("alice", 3, 1234.5);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), LEASE_KIND);
+        assert_eq!(j.get("claimer").unwrap().as_str().unwrap(), "alice");
+        assert_eq!(j.get("generation").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("deadline").unwrap().as_f64().unwrap(), 1234.5);
+    }
+
+    #[test]
+    fn commit_entries_round_trip_optional_trace_keys() {
+        let full = CellEntry {
+            file: "00001-CR-q6-t0.alice.json".into(),
+            checksum: "abc".into(),
+            seconds: 1.5,
+            mean_q: Some(0.75),
+            realized_cost: Some(0.5),
+        };
+        let doc = encode_cell_entry(1, "alice", &full);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("mean_q").unwrap().as_f64().unwrap(), 0.75);
+        // seeded from a pre-policy manifest: optional keys stay absent
+        let bare = CellEntry { mean_q: None, realized_cost: None, ..full };
+        let doc = encode_cell_entry(1, "alice", &bare);
+        let j = Json::parse(&doc).unwrap();
+        assert!(j.opt("mean_q").is_none());
+        assert!(j.opt("realized_cost").is_none());
+        assert_eq!(j.get("claimer").unwrap().as_str().unwrap(), "alice");
+    }
+
+    #[test]
+    fn default_poll_tracks_the_lease_with_clamps() {
+        assert_eq!(default_poll(60.0), 15.0);
+        assert_eq!(default_poll(4.0), 1.0);
+        assert_eq!(default_poll(0.1), 0.1); // clamped low
+        assert_eq!(default_poll(600.0), 15.0); // clamped high
+    }
+
+    #[test]
+    fn claim_config_defaults_are_sane() {
+        let cfg = ClaimConfig::new(ClaimerId::parse("alice").unwrap());
+        assert_eq!(cfg.lease_secs, 60.0);
+        assert_eq!(cfg.poll_secs, 15.0);
+        assert!(cfg.stall_after_cells.is_none());
+        assert!(cfg.auto_heartbeat);
+    }
+}

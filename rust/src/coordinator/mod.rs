@@ -33,6 +33,7 @@
 
 pub mod campaign;
 pub mod exec;
+pub mod lease;
 pub mod plan;
 pub mod recipes;
 pub mod report;
@@ -42,7 +43,7 @@ pub use campaign::{
     merge_campaign_roots, run_campaign, CampaignPlan, CampaignSpec,
     SchedulerKind,
 };
-pub use plan::{PlannedCell, ShardId, SweepPlan};
+pub use plan::{ClaimerId, PlannedCell, ShardId, SweepPlan};
 pub use recipes::{dataset_for, recipe, report_metric, Recipe};
 pub use report::SweepReport;
 pub use store::{compact_run_dir, merge_run_dirs, read_manifest, RunStore};
@@ -165,6 +166,27 @@ impl SweepSpec {
     }
 }
 
+/// Strict env-var parsing: `Ok(None)` when unset, the parsed value when
+/// set and valid, and a loud error otherwise. Every numeric knob
+/// (CPT_HALT_AFTER_CELLS, CPT_STALL_AFTER_CELLS, CPT_LEASE_SECS, ...)
+/// goes through here — a typo'd value must abort the run, not silently
+/// disable the behavior the operator asked for.
+pub(crate) fn env_parse<T: std::str::FromStr>(name: &str) -> Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            anyhow::bail!("{name} is set but is not valid UTF-8")
+        }
+        Ok(v) => match v.trim().parse::<T>() {
+            Ok(x) => Ok(Some(x)),
+            Err(e) => anyhow::bail!("{name}='{v}' is invalid: {e}"),
+        },
+    }
+}
+
 /// Crash-injection point for the resume tests: with CPT_HALT_AFTER_CELLS=N
 /// set, the executor's collector aborts the run after recording N freshly
 /// computed cells (a deterministic stand-in for `kill` in
@@ -173,19 +195,18 @@ impl SweepSpec {
 /// when the abort fires). Counted process-wide so a sequential campaign
 /// halts after N cells across members, not per member. (In-process tests
 /// use `exec::ExecRequest::halt_after_cells` instead, which counts
-/// per-run and never touches env.)
+/// per-run and never touches env.) An unparsable value fails the run
+/// loudly instead of silently disabling the injection.
 fn crash_injection_point() -> Result<()> {
     static FRESH_CELLS: AtomicUsize = AtomicUsize::new(0);
-    if let Ok(v) = std::env::var("CPT_HALT_AFTER_CELLS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n > 0 {
-                let done = FRESH_CELLS.fetch_add(1, Ordering::SeqCst) + 1;
-                if done >= n {
-                    anyhow::bail!(
-                        "halted after {done} freshly computed cell(s) \
-                         (CPT_HALT_AFTER_CELLS={n} crash injection)"
-                    );
-                }
+    if let Some(n) = env_parse::<usize>("CPT_HALT_AFTER_CELLS")? {
+        if n > 0 {
+            let done = FRESH_CELLS.fetch_add(1, Ordering::SeqCst) + 1;
+            if done >= n {
+                anyhow::bail!(
+                    "halted after {done} freshly computed cell(s) \
+                     (CPT_HALT_AFTER_CELLS={n} crash injection)"
+                );
             }
         }
     }
@@ -491,10 +512,12 @@ pub fn run_sweep_timed(
             jobs,
             verbose: spec.verbose,
             halt_after_cells: None,
+            source: None,
         };
-        let mut stores = [store.as_mut()];
+        let mut stores: [Option<&mut dyn exec::CellSink>; 1] =
+            [store.as_mut().map(|s| s as &mut dyn exec::CellSink)];
         let mut slot_groups = [std::mem::take(&mut slots)];
-        let cache_cap = exec::exec_cache_cap();
+        let cache_cap = exec::exec_cache_cap()?;
         let res = exec::run_items(&req, &mut stores, &mut slot_groups, |_| {
             exec::PjrtCellRunner::new(&specs, cache_cap)
         });

@@ -76,6 +76,51 @@ impl fmt::Display for ShardId {
     }
 }
 
+/// The identity of one claimer in a `--claim` run (see
+/// `coordinator::lease`). The name is embedded in lease records, the
+/// liveness file name, and claimer-suffixed artifact file names, so it
+/// must be a safe path component.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClaimerId(String);
+
+impl ClaimerId {
+    /// Parse and validate a claimer name: 1–64 chars of
+    /// `[A-Za-z0-9._-]`, not starting with a dot or dash (no hidden
+    /// files, no flag-lookalikes), and not a name the claim layout
+    /// reserves for itself.
+    pub fn parse(name: &str) -> Result<ClaimerId> {
+        if name.is_empty() || name.len() > 64 {
+            bail!("claimer name must be 1-64 characters, got '{name}'");
+        }
+        if name.starts_with('.') || name.starts_with('-') {
+            bail!("claimer name '{name}' may not start with '.' or '-'");
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+        {
+            bail!(
+                "claimer name '{name}' may only contain letters, digits, \
+                 '.', '_', and '-'"
+            );
+        }
+        if name == "claim" || name == "tmp" {
+            bail!("claimer name '{name}' is reserved");
+        }
+        Ok(ClaimerId(name.to_string()))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for ClaimerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
 /// A cell tagged with its canonical index in the full plan.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlannedCell {
@@ -207,6 +252,20 @@ mod tests {
         for bad in ["0/2", "3/2", "1/0", "x/2", "1", "1/2/3", ""] {
             assert!(ShardId::parse(bad).is_err(), "accepted '{bad}'");
         }
+    }
+
+    #[test]
+    fn claimer_id_validates_path_safety() {
+        for ok in ["a", "node-3", "w_1", "host.example", "A9"] {
+            assert_eq!(ClaimerId::parse(ok).unwrap().as_str(), ok);
+        }
+        for bad in
+            ["", ".hidden", "-flag", "a/b", "a b", "claim", "tmp", "é"]
+        {
+            assert!(ClaimerId::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        assert!(ClaimerId::parse(&"x".repeat(65)).is_err());
+        assert!(ClaimerId::parse(&"x".repeat(64)).is_ok());
     }
 
     #[test]

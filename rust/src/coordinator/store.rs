@@ -349,7 +349,7 @@ impl RunStore {
             "{index:05}-{}-q{}-t{}.json",
             out.schedule, out.q_max, out.trial
         );
-        let bytes = outcome_to_json(&self.m.spec_hash, index, out).to_string_pretty();
+        let bytes = encode_cell_artifact(&self.m.spec_hash, index, out);
         write_atomic(self.dir.join(&file), bytes.as_bytes())
             .with_context(|| format!("record cell {index}"))?;
         let checksum = fnv1a64_hex(bytes.as_bytes());
@@ -374,8 +374,10 @@ impl RunStore {
 /// Serialize and atomically write a manifest. Factored out of `RunStore`
 /// so `cpt gc` can rewrite a manifest it loaded from disk while
 /// preserving the original `cpt_version` stamp (compaction changes
-/// artifact bytes, never what computed them).
-fn write_manifest_file(dir: &Path, m: &ManifestSummary) -> Result<()> {
+/// artifact bytes, never what computed them), and so the claim-mode
+/// finalizer (`coordinator::lease`) can materialize a manifest from its
+/// commit entries.
+pub(crate) fn write_manifest_file(dir: &Path, m: &ManifestSummary) -> Result<()> {
     let mut cells = BTreeMap::new();
     for (index, e) in &m.cells {
         let mut fields =
@@ -601,8 +603,39 @@ pub struct GcStats {
     /// Cells skipped because their artifact was missing or corrupt
     /// (left untouched; resume recomputes them).
     pub skipped: usize,
+    /// Orphaned `*.tmp` staging files removed — the residue of writers
+    /// that crashed between staging and publishing (see
+    /// `util::write_atomic`).
+    pub orphaned_tmp: usize,
     pub bytes_before: u64,
     pub bytes_after: u64,
+}
+
+/// Remove every `*.tmp` file under `dir`, recursively. These are
+/// staging files whose writer crashed before the publishing rename or
+/// link; once the writer is gone they can never be referenced, only
+/// leak. Only call this on quiescent trees — a live writer's staging
+/// file looks identical to an orphan. Returns the number removed.
+pub(crate) fn sweep_orphaned_tmp(dir: &Path) -> Result<usize> {
+    let mut removed = 0usize;
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .with_context(|| format!("read dir {}", d.display()))?;
+        for e in entries {
+            let e = e.with_context(|| format!("read dir {}", d.display()))?;
+            let path = e.path();
+            let ty = e.file_type()?;
+            if ty.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "tmp") {
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("remove {}", path.display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
 }
 
 /// `cpt gc`: strip per-step histories (losses/metrics/evals/precisions)
@@ -660,6 +693,7 @@ pub fn compact_run_dir(dir: &Path) -> Result<GcStats> {
     if rewritten {
         write_manifest_file(dir, &m)?;
     }
+    stats.orphaned_tmp = sweep_orphaned_tmp(dir)?;
     Ok(stats)
 }
 
@@ -683,7 +717,7 @@ fn strip_history(mut doc: Json) -> (Json, bool) {
     (doc, changed)
 }
 
-fn load_artifact(
+pub(crate) fn load_artifact(
     path: &Path,
     want_checksum: &str,
     want_spec_hash: &str,
@@ -772,6 +806,17 @@ fn as_num(j: &Json) -> Result<f64> {
 
 fn as_f32(j: &Json) -> Result<f32> {
     Ok(as_num(j)? as f32)
+}
+
+/// Serialize one cell artifact to its canonical on-disk bytes. Shared by
+/// `RunStore::record` and the claim-mode recorder (`coordinator::lease`),
+/// so both paths write bit-identical artifacts for identical outcomes.
+pub(crate) fn encode_cell_artifact(
+    spec_hash: &str,
+    index: usize,
+    out: &RunOutcome,
+) -> String {
+    outcome_to_json(spec_hash, index, out).to_string_pretty()
 }
 
 fn outcome_to_json(spec_hash: &str, index: usize, out: &RunOutcome) -> Json {

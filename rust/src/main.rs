@@ -29,7 +29,10 @@ use anyhow::{bail, Context, Result};
 use cpt::coordinator::campaign::{
     self, set_policy, CampaignRunOpts, SchedulerKind, Status,
 };
-use cpt::coordinator::{self, merge_run_dirs, recipes, AggRow, RunOutcome, ShardId};
+use cpt::coordinator::lease::{self, ClaimConfig, Clock, SystemClock};
+use cpt::coordinator::{
+    self, merge_run_dirs, recipes, AggRow, ClaimerId, RunOutcome, ShardId,
+};
 use cpt::prelude::*;
 use cpt::quant::range_test;
 use cpt::schedule::relative_cost;
@@ -82,6 +85,7 @@ USAGE: cpt <subcommand> [flags]
   sweep --model M [--schedules CR,RR,... | --policy P] [--qmaxes 6,8]
         [--trials N] [--steps N] [--cycles N] [--jobs N] [--csv PATH]
         [--verbose] [--shard I/N] [--run-dir DIR] [--resume]
+        [--claim NAME]
                                 full schedule sweep (one figure panel);
                                 with --policy P the schedule axis
                                 collapses to the policy (adaptive cells:
@@ -93,10 +97,18 @@ USAGE: cpt <subcommand> [flags]
                                 partition into --run-dir (one artifact
                                 per cell + run-manifest.json);
                                 --resume reopens a run dir and skips
-                                cells with valid artifacts
+                                cells with valid artifacts;
+                                --claim NAME replaces --shard with
+                                dynamic cell claiming: N processes
+                                (unique NAMEs, shared --run-dir) divide
+                                the cells via time-limited leases, so
+                                the sweep finishes at the speed of the
+                                surviving claimers — dead or stalled
+                                peers have their expired leases stolen,
+                                and no cell is ever recorded twice
   campaign --file configs/X.toml [--run-dir ROOT] [--shard I/N]
            [--jobs N] [--scheduler global|sequential] [--resume]
-           [--csv-dir DIR] [--verbose] [--policy P]
+           [--csv-dir DIR] [--verbose] [--policy P] [--claim NAME]
                                 run a multi-sweep figure campaign: the
                                 TOML's [[campaign.sweep]] members execute
                                 in canonical (name-sorted) order, one
@@ -113,7 +125,10 @@ USAGE: cpt <subcommand> [flags]
                                 reopens a root and skips recorded cells;
                                 members may carry their own policy key
                                 (policy = \"loss_plateau:...\") and
-                                --policy P overrides every member
+                                --policy P overrides every member;
+                                --claim NAME (global scheduler only)
+                                claims cells dynamically across every
+                                member, like `sweep --claim`
   merge [--csv PATH] [--title T] DIR [DIR ...]
         [--csv-dir DIR] ROOT [ROOT ...]
                                 validate N shard run dirs (matching spec
@@ -147,7 +162,13 @@ ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
      CPT_JOBS (default sweep worker count, default: 1),
      CPT_EXEC_CACHE (compiled models kept per worker, default: 4),
      CPT_RUN_DIR (bench resume base dir — artifacts land under
-     <dir>/<model>-<spec_hash>-<model_fingerprint>)"
+     <dir>/<model>-<spec_hash>-<model_fingerprint>),
+     CPT_LEASE_SECS (--claim lease duration, default: 60),
+     CPT_CLAIM_POLL_SECS (--claim board poll interval, default: lease/4),
+     CPT_HALT_AFTER_CELLS (fault injection: abort after N fresh cells),
+     CPT_STALL_AFTER_CELLS / CPT_STALL_SECS (fault injection: a --claim
+     worker goes dark for STALL_SECS after N committed cells);
+     every knob fails loudly on an unparsable value"
     );
 }
 
@@ -356,10 +377,38 @@ fn report_sweep(
     Ok(())
 }
 
+/// Parse `--claim NAME`. The claimer name keys lease records, the
+/// liveness file, and artifact suffixes, so it must be unique per
+/// process — a bare `--claim` parses as the boolean "true", and two
+/// workers both defaulting to the same name would silently break the
+/// mutual exclusion the leases provide, so that spelling is rejected.
+fn parse_claimer(name: &str) -> Result<ClaimerId> {
+    if name == "true" {
+        bail!(
+            "--claim needs a unique claimer name (e.g. --claim host1-a): \
+             leases, liveness, and artifacts are keyed by it"
+        );
+    }
+    ClaimerId::parse(name)
+}
+
+fn print_claim_stats(cfg: &ClaimConfig, stats: &lease::ClaimRunStats) {
+    println!(
+        "claimer '{}': {} cell(s) committed here, {} lease(s) stolen, {} \
+         record(s) refused, {} already on the board at start",
+        cfg.claimer,
+        stats.committed_here,
+        stats.stolen,
+        stats.exec.refused,
+        stats.resumed()
+    );
+}
+
 fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "model", "schedules", "policy", "qmaxes", "trials", "steps",
         "cycles", "jobs", "csv", "verbose", "shard", "run-dir", "resume",
+        "claim",
     ])?;
     let model = cli.require("model")?;
     let rec = recipes::recipe(model)?;
@@ -390,7 +439,16 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     apply_shard_flags(cli, &mut spec)?;
 
     let manifest = Manifest::load(artifacts_dir())?;
-    let (outs, timing) = run_sweep_timed(&manifest, &spec)?;
+    let (outs, timing) = match cli.flag("claim") {
+        Some(name) => {
+            let cfg = ClaimConfig::from_env(parse_claimer(name)?)?;
+            let (outs, timing, stats) =
+                lease::run_claim_sweep(&manifest, &spec, &cfg)?;
+            print_claim_stats(&cfg, &stats);
+            (outs, timing)
+        }
+        None => run_sweep_timed(&manifest, &spec)?,
+    };
     let csv = PathBuf::from(cli.str_or(
         "csv",
         &results_dir().join(format!("sweep_{model}.csv")).to_string_lossy(),
@@ -445,7 +503,7 @@ fn report_campaign(
 fn cmd_campaign(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
-        "scheduler", "policy",
+        "scheduler", "policy", "claim",
     ])?;
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
@@ -489,7 +547,16 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         scheduler,
     };
     let manifest = Manifest::load(artifacts_dir())?;
-    let result = run_campaign(&manifest, &plan, &opts)?;
+    let result = match cli.flag("claim") {
+        Some(name) => {
+            let cfg = ClaimConfig::from_env(parse_claimer(name)?)?;
+            let (result, stats) =
+                lease::run_claim_campaign(&manifest, &plan, &opts, &cfg)?;
+            print_claim_stats(&cfg, &stats);
+            result
+        }
+        None => run_campaign(&manifest, &plan, &opts)?,
+    };
 
     for r in &result.members {
         println!(
@@ -533,6 +600,53 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
         .map(|r| (r.name, r.model, r.outcomes))
         .collect();
     report_campaign(cli, &plan.name, &members)
+}
+
+/// Print the claim boards of `members` (label, member run dir) and the
+/// claimer liveness files under `root`, when the tree has ever been run
+/// with `--claim`; silent otherwise, so static-shard trees look exactly
+/// as they always did.
+fn report_claim(root: &Path, members: &[(String, PathBuf)]) -> Result<()> {
+    let now = SystemClock.now();
+    let mut any = false;
+    for (label, mdir) in members {
+        let Some(board) = lease::claim_board_status(mdir, now)? else {
+            continue;
+        };
+        any = true;
+        let name =
+            if label.is_empty() { "claim board" } else { label.as_str() };
+        println!(
+            "  {name}: {} committed, {} active lease(s), {} expired lease(s)",
+            board.committed,
+            board.active.len(),
+            board.expired.len()
+        );
+        for l in board.active.iter().chain(board.expired.iter()) {
+            let state = if l.remaining > 0.0 {
+                format!("{:.0}s left", l.remaining)
+            } else {
+                format!("expired {:.0}s ago, steal-eligible", -l.remaining)
+            };
+            println!(
+                "    cell {:05} leased by '{}' (generation {}, {state})",
+                l.cell, l.claimer, l.generation
+            );
+        }
+    }
+    if !any {
+        return Ok(());
+    }
+    for w in &lease::claim_workers(root, now)? {
+        println!(
+            "  claimer '{}': {} (last heartbeat {:.0}s ago, lease {:.0}s)",
+            w.claimer,
+            if w.looks_alive() { "alive" } else { "presumed dead" },
+            w.since_last_seen.max(0.0),
+            w.lease_secs
+        );
+    }
+    Ok(())
 }
 
 fn cmd_status(cli: &Cli) -> Result<()> {
@@ -583,6 +697,7 @@ fn cmd_status(cli: &Cli) -> Result<()> {
                     );
                 }
             }
+            report_claim(dir, &[(String::new(), dir.to_path_buf())])?;
         }
         Status::Campaign(c) => {
             if cli.bool("cells") {
@@ -637,6 +752,12 @@ fn cmd_status(cli: &Cli) -> Result<()> {
                     );
                 }
             }
+            let members: Vec<(String, PathBuf)> = c
+                .members
+                .iter()
+                .map(|m| (m.name.clone(), dir.join(&m.name)))
+                .collect();
+            report_claim(dir, &members)?;
         }
     }
     Ok(())
@@ -649,30 +770,33 @@ fn cmd_gc(cli: &Cli) -> Result<()> {
     }
     let dir = Path::new(&cli.positional[0]);
     let all = campaign::gc(dir)?;
-    let (mut cells, mut compacted, mut before, mut after) =
-        (0usize, 0usize, 0u64, 0u64);
+    let (mut cells, mut compacted, mut orphaned, mut before, mut after) =
+        (0usize, 0usize, 0usize, 0u64, 0u64);
     for (label, st) in &all {
         cells += st.cells;
         compacted += st.compacted;
+        orphaned += st.orphaned_tmp;
         before += st.bytes_before;
         after += st.bytes_after;
         let name = if label.is_empty() { "run dir" } else { label.as_str() };
+        let mut notes = String::new();
+        if st.skipped > 0 {
+            notes.push_str(&format!(" ({} skipped as damaged)", st.skipped));
+        }
+        if st.orphaned_tmp > 0 {
+            notes.push_str(&format!(
+                " ({} orphaned tmp file(s) removed)",
+                st.orphaned_tmp
+            ));
+        }
         println!(
-            "{name}: compacted {}/{} cell artifact(s), {} -> {} bytes{}",
-            st.compacted,
-            st.cells,
-            st.bytes_before,
-            st.bytes_after,
-            if st.skipped > 0 {
-                format!(" ({} skipped as damaged)", st.skipped)
-            } else {
-                String::new()
-            }
+            "{name}: compacted {}/{} cell artifact(s), {} -> {} bytes{notes}",
+            st.compacted, st.cells, st.bytes_before, st.bytes_after,
         );
     }
     println!(
-        "gc {}: {compacted}/{cells} artifact(s) compacted, {before} -> \
-         {after} bytes",
+        "gc {}: {compacted}/{cells} artifact(s) compacted, {orphaned} \
+         orphaned tmp file(s) removed, {before} -> {after} bytes",
         dir.display()
     );
     Ok(())

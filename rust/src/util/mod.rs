@@ -15,18 +15,16 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-/// Write `bytes` to `path` atomically and durably: write a `.tmp`
-/// sibling, fsync it, then rename it over the target (and best-effort
-/// fsync the parent directory so the rename itself is durable). On POSIX
-/// the rename is atomic, so neither a process crash nor a power loss can
-/// leave a truncated `path` — readers either see the old complete file
-/// or the new one. A stale `.tmp` may survive a crash; it is simply
-/// overwritten by the next save. Parent directories are created as
-/// needed.
-pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+/// Stage a unique `.tmp` sibling of `path` holding `bytes`, fsynced.
+/// The name embeds the pid and a process-wide counter so two writers —
+/// threads or *processes* sharing a directory — can never truncate each
+/// other's in-flight staging file (a fixed `.tmp` name would: the second
+/// `File::create` empties the inode the first is still writing).
+fn stage_tmp(path: &Path, bytes: &[u8]) -> Result<std::path::PathBuf> {
     use std::io::Write as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
-    let path = path.as_ref();
+    static SEQ: AtomicU64 = AtomicU64::new(0);
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)
@@ -37,22 +35,27 @@ pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
         .file_name()
         .ok_or_else(|| anyhow!("write_atomic: no file name in {}", path.display()))?;
     let mut tmp_name = file_name.to_os_string();
-    tmp_name.push(".tmp");
+    tmp_name.push(format!(
+        ".{}-{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
     let tmp = path.with_file_name(tmp_name);
     let mut f = std::fs::File::create(&tmp)
         .with_context(|| format!("create {}", tmp.display()))?;
     f.write_all(bytes)
         .with_context(|| format!("write {}", tmp.display()))?;
-    // data must hit disk before the rename commits the new name — else a
-    // power loss could leave the final path pointing at unwritten blocks
+    // data must hit disk before link/rename publishes the new name — else
+    // a power loss could leave the final path pointing at unwritten blocks
     f.sync_all()
         .with_context(|| format!("fsync {}", tmp.display()))?;
-    drop(f);
-    std::fs::rename(&tmp, path).with_context(|| {
-        format!("rename {} -> {}", tmp.display(), path.display())
-    })?;
-    // make the rename durable too; non-fatal if the platform disallows
-    // opening directories (the file contents are already safe)
+    Ok(tmp)
+}
+
+/// Best-effort directory fsync so a just-published name is durable;
+/// non-fatal if the platform disallows opening directories (the file
+/// contents are already safe).
+fn sync_parent(path: &Path) {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             if let Ok(d) = std::fs::File::open(dir) {
@@ -60,7 +63,49 @@ pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
             }
         }
     }
+}
+
+/// Write `bytes` to `path` atomically and durably: write a uniquely
+/// named `.tmp` sibling, fsync it, then rename it over the target (and
+/// best-effort fsync the parent directory so the rename itself is
+/// durable). On POSIX the rename is atomic, so neither a process crash
+/// nor a power loss can leave a truncated `path` — readers either see
+/// the old complete file or the new one. A stale `.tmp` may survive a
+/// crash; `cpt gc` sweeps those orphans. Parent directories are created
+/// as needed.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = stage_tmp(path, bytes)?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("rename {} -> {}", tmp.display(), path.display())
+    })?;
+    sync_parent(path);
     Ok(())
+}
+
+/// Publish `bytes` at `path` if and only if nothing exists there yet.
+/// The staged tmp is hard-linked into place: `link(2)` fails with
+/// `EEXIST` when the name is taken, so among any number of concurrent
+/// callers — across processes — exactly one ever succeeds, and the file
+/// is complete and fsynced from the first instant it is visible. Returns
+/// `true` if this caller published, `false` if the path already existed.
+/// This is the commit primitive of the lease protocol (see
+/// `coordinator::lease` and rust/DESIGN-sharding.md).
+pub fn publish_exclusive(path: impl AsRef<Path>, bytes: &[u8]) -> Result<bool> {
+    let path = path.as_ref();
+    let tmp = stage_tmp(path, bytes)?;
+    let res = std::fs::hard_link(&tmp, path);
+    std::fs::remove_file(&tmp).ok();
+    match res {
+        Ok(()) => {
+            sync_parent(path);
+            Ok(true)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(e).with_context(|| {
+            format!("link {} -> {}", tmp.display(), path.display())
+        }),
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +135,49 @@ mod tests {
         write_atomic(&path, b"first version, longer").unwrap();
         write_atomic(&path, b"second").unwrap();
         assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn publish_exclusive_first_wins_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("cpt_publish_exclusive_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("token.json");
+        assert!(publish_exclusive(&path, b"alpha").unwrap());
+        assert!(!publish_exclusive(&path, b"beta").unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), b"alpha");
+        let siblings: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(siblings, vec!["token.json"], "tmp residue: {siblings:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn publish_exclusive_admits_exactly_one_concurrent_winner() {
+        let dir = std::env::temp_dir().join("cpt_publish_exclusive_race");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("cell.json");
+        let wins: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let path = path.clone();
+                    scope.spawn(move || {
+                        publish_exclusive(&path, format!("writer-{i}").as_bytes())
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .filter(|&won| won)
+                .count()
+        });
+        assert_eq!(wins, 1, "exactly one publisher must win");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("writer-"), "torn content: {body:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,512 @@
+//! Lease-based dynamic cell claiming, exercised entirely through
+//! fabricated outcomes (no PJRT / AOT artifacts — the CI `test-unit`
+//! tier): concurrent claimers must divide a run disjointly and each
+//! report the complete result; dead, stalled, and clock-expired claimers
+//! must be stolen from without a cell ever being recorded twice; and a
+//! claim session over a pre-existing (static-mode) run dir must resume
+//! its valid artifacts and recompute only the broken ones.
+
+mod common;
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{fab_outcome, tmp_dir};
+use cpt::coordinator::exec::{CellError, CellRunner, ExecMember};
+use cpt::coordinator::lease::{
+    self, claim_board_status, claim_workers, ClaimConfig, ClaimMember,
+    TestClock,
+};
+use cpt::coordinator::{read_manifest, ClaimerId};
+use cpt::prelude::*;
+use cpt::util::propcheck::propcheck;
+
+/// Fabricated worker backend (the `tests/global_sched.rs` pattern):
+/// deterministic outcomes via `common::fab_outcome`, optional injected
+/// compile failures, optional per-cell sleep to force interleaving.
+struct FabRunner {
+    fail: HashSet<String>,
+    compiled: Vec<String>,
+    compiles: usize,
+    sleep_ms: u64,
+}
+
+impl FabRunner {
+    fn plain() -> FabRunner {
+        FabRunner {
+            fail: HashSet::new(),
+            compiled: Vec::new(),
+            compiles: 0,
+            sleep_ms: 0,
+        }
+    }
+
+    fn slow(sleep_ms: u64) -> FabRunner {
+        FabRunner { sleep_ms, ..FabRunner::plain() }
+    }
+}
+
+impl CellRunner for FabRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        if self.fail.contains(&member.fingerprint) {
+            return Err(CellError::Setup(anyhow::anyhow!(
+                "injected compile failure for '{}'",
+                member.model
+            )));
+        }
+        if !self.compiled.contains(&member.fingerprint) {
+            self.compiled.push(member.fingerprint.clone());
+            self.compiles += 1;
+        }
+        if self.sleep_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.sleep_ms));
+        }
+        Ok(fab_outcome(&member.model, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.compiles, 0.0)
+    }
+
+    fn has_cached(&self, fingerprint: &str) -> bool {
+        self.compiled.iter().any(|f| f == fingerprint)
+    }
+}
+
+/// A claim member over a small fabricated sweep. Each claimer builds its
+/// own copy (the plan is deterministic, so all copies agree).
+fn claim_member(
+    name: &str,
+    model: &str,
+    schedules: &[&str],
+    trials: usize,
+    dir: &Path,
+    cap: usize,
+) -> ClaimMember {
+    let mut s = SweepSpec::new(model);
+    s.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    s.q_maxes = vec![8.0];
+    s.trials = trials;
+    s.steps = Some(8);
+    let plan = SweepPlan::build(&s).unwrap();
+    ClaimMember {
+        exec: ExecMember {
+            name: name.into(),
+            model: model.into(),
+            fingerprint: format!("fp-{model}"),
+            policy: s.policy.clone(),
+            steps: plan.steps,
+            cycles: plan.cycles,
+            eval_every: s.eval_every,
+            cap,
+        },
+        dir: dir.to_path_buf(),
+        spec_hash: plan.spec_hash.clone(),
+        cells: plan.cells.clone(),
+    }
+}
+
+/// The deterministic ground truth a serial run of the member produces.
+fn fab_truth(m: &ClaimMember) -> Vec<RunOutcome> {
+    m.cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| fab_outcome(&m.exec.model, c, i))
+        .collect()
+}
+
+/// Test config: fast polls so waiting claimers spin in milliseconds, a
+/// long lease so cooperating claimers never steal by accident.
+fn cfg(name: &str) -> ClaimConfig {
+    let mut c = ClaimConfig::new(ClaimerId::parse(name).unwrap());
+    c.lease_secs = 60.0;
+    c.poll_secs = 0.05;
+    c
+}
+
+#[test]
+fn two_claimers_divide_one_sweep_and_both_report_full_results() {
+    let tmp = tmp_dir("lease_divide");
+    let mdir = tmp.join("run");
+    let wdir = tmp.join("run/claim/workers");
+    let make = || claim_member("", "mlp", &["CR", "RR", "STATIC"], 2, &mdir, 2);
+    let (cfg_a, cfg_b) = (cfg("alice"), cfg("bob"));
+
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| {
+            lease::run_claim("t", vec![make()], &wdir, 2, false, &cfg_a, None, |_| {
+                Ok(FabRunner::slow(2))
+            })
+        });
+        let hb = s.spawn(|| {
+            lease::run_claim("t", vec![make()], &wdir, 2, false, &cfg_b, None, |_| {
+                Ok(FabRunner::slow(2))
+            })
+        });
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    let (outs_a, stats_a) = ra.unwrap();
+    let (outs_b, stats_b) = rb.unwrap();
+
+    // both claimers report the COMPLETE canonical result, including the
+    // cells their peer computed
+    let truth = fab_truth(&make());
+    common::assert_outcomes_identical(&truth, &outs_a[0]);
+    common::assert_outcomes_identical(&truth, &outs_b[0]);
+
+    // ownership is disjoint and covering: the commit entries are
+    // create-exclusive, so committed_here counts partition the plan
+    assert_eq!(stats_a.committed_here + stats_b.committed_here, 6);
+    assert_eq!(stats_a.stolen + stats_b.stolen, 0, "nothing expired");
+
+    // the rebuilt manifest is an ordinary, complete run manifest
+    let ms = read_manifest(&mdir).unwrap();
+    assert_eq!(ms.cells.len(), 6);
+    assert_eq!(ms.total_cells, 6);
+
+    // the status surfaces see the board and both liveness files
+    let now = 1.0e12; // far future: everyone long silent, board complete
+    let board = claim_board_status(&mdir, now).unwrap().expect("board");
+    assert_eq!(board.committed, 6);
+    assert!(board.active.is_empty() && board.expired.is_empty());
+    let workers = claim_workers(&mdir, now).unwrap();
+    let names: Vec<&str> =
+        workers.iter().map(|w| w.claimer.as_str()).collect();
+    assert_eq!(names, ["alice", "bob"]);
+    assert!(workers.iter().all(|w| !w.looks_alive()));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn claimers_cover_disjointly_over_random_shapes() {
+    // Over random campaign shapes (member count, schedule count, trials,
+    // pool sizes): two concurrent claimers always produce a disjoint
+    // covering division, and both report every member's full result.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    propcheck(6, |rng| {
+        let case = CASE.fetch_add(1, Ordering::SeqCst);
+        let root = tmp_dir(&format!("lease_prop_{case}"));
+        let n_members = 1 + rng.below(2) as usize;
+        let shapes: Vec<(String, Vec<String>, usize)> = (0..n_members)
+            .map(|i| {
+                let scheds: Vec<String> = (0..1 + rng.below(3))
+                    .map(|k| format!("P{i}S{k}"))
+                    .collect();
+                (format!("m{i}"), scheds, 1 + rng.below(2) as usize)
+            })
+            .collect();
+        let jobs_a = 1 + rng.below(3) as usize;
+        let jobs_b = 1 + rng.below(3) as usize;
+        let members = |cap: usize| -> Vec<ClaimMember> {
+            shapes
+                .iter()
+                .map(|(name, scheds, trials)| {
+                    let refs: Vec<&str> =
+                        scheds.iter().map(|s| s.as_str()).collect();
+                    claim_member(
+                        name,
+                        "mlp",
+                        &refs,
+                        *trials,
+                        &root.join(name),
+                        cap,
+                    )
+                })
+                .collect()
+        };
+        let wdir = root.join("claim/workers");
+        let (cfg_a, cfg_b) = (cfg("alice"), cfg("bob"));
+        let (ra, rb) = std::thread::scope(|s| {
+            let ha = s.spawn(|| {
+                lease::run_claim(
+                    "t",
+                    members(jobs_a),
+                    &wdir,
+                    jobs_a,
+                    false,
+                    &cfg_a,
+                    None,
+                    |_| Ok(FabRunner::slow(1)),
+                )
+            });
+            let hb = s.spawn(|| {
+                lease::run_claim(
+                    "t",
+                    members(jobs_b),
+                    &wdir,
+                    jobs_b,
+                    false,
+                    &cfg_b,
+                    None,
+                    |_| Ok(FabRunner::slow(1)),
+                )
+            });
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        let (outs_a, stats_a) = ra.map_err(|e| format!("claimer a: {e:#}"))?;
+        let (outs_b, stats_b) = rb.map_err(|e| format!("claimer b: {e:#}"))?;
+        let ms = members(1);
+        let total: usize = ms.iter().map(|m| m.cells.len()).sum();
+        cpt::prop_assert!(
+            stats_a.committed_here + stats_b.committed_here == total,
+            "division not disjoint-covering: {} + {} != {total}",
+            stats_a.committed_here,
+            stats_b.committed_here
+        );
+        for (mi, m) in ms.iter().enumerate() {
+            let truth = fab_truth(m);
+            common::assert_outcomes_identical(&truth, &outs_a[mi]);
+            common::assert_outcomes_identical(&truth, &outs_b[mi]);
+            let manifest = read_manifest(&m.dir).unwrap();
+            cpt::prop_assert!(
+                manifest.cells.len() == m.cells.len(),
+                "member '{}' manifest holds {}/{} cells",
+                m.exec.name,
+                manifest.cells.len(),
+                m.cells.len()
+            );
+        }
+        std::fs::remove_dir_all(&root).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn stalled_claimer_is_stolen_from_and_its_late_commits_are_refused() {
+    // Claimer A commits one cell, then goes dark (stall injection: no
+    // heartbeats, no claims) while holding leases with work in flight.
+    // B steals the expired leases and finishes everything. When A wakes,
+    // its in-flight results hit the generation fence and are refused
+    // without writing — no cell is recorded twice, and both claimers
+    // still report the full, identical result.
+    let tmp = tmp_dir("lease_stall");
+    let mdir = tmp.join("run");
+    let wdir = tmp.join("run/claim/workers");
+    let make = || claim_member("", "mlp", &["CR", "RR", "STATIC"], 2, &mdir, 2);
+
+    let mut cfg_a = cfg("staller");
+    cfg_a.lease_secs = 0.4;
+    cfg_a.stall_after_cells = Some(1);
+    cfg_a.stall_secs = 3.0;
+    let mut cfg_b = cfg("thief");
+    cfg_b.lease_secs = 0.4;
+
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| {
+            lease::run_claim("t", vec![make()], &wdir, 2, false, &cfg_a, None, |_| {
+                Ok(FabRunner::slow(30))
+            })
+        });
+        // let A claim its first batch and commit before B exists
+        std::thread::sleep(Duration::from_millis(100));
+        let hb = s.spawn(|| {
+            lease::run_claim("t", vec![make()], &wdir, 2, false, &cfg_b, None, |_| {
+                Ok(FabRunner::slow(1))
+            })
+        });
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    let (outs_a, stats_a) = ra.unwrap();
+    let (outs_b, stats_b) = rb.unwrap();
+
+    let truth = fab_truth(&make());
+    common::assert_outcomes_identical(&truth, &outs_a[0]);
+    common::assert_outcomes_identical(&truth, &outs_b[0]);
+    assert!(stats_b.stolen >= 1, "B never stole: {}", stats_b.stolen);
+    assert!(
+        stats_a.exec.refused >= 1,
+        "A's post-stall commits were not fenced: {}",
+        stats_a.exec.refused
+    );
+    // exactly-once despite the theft: committed_here still partitions
+    assert_eq!(stats_a.committed_here + stats_b.committed_here, 6);
+    assert!(stats_a.committed_here >= 1, "A committed before stalling");
+    let ms = read_manifest(&mdir).unwrap();
+    assert_eq!(ms.cells.len(), 6);
+    // every manifest artifact is present exactly as referenced — a torn
+    // or duplicated write could not have produced validating checksums
+    for e in ms.cells.values() {
+        assert!(mdir.join(&e.file).exists(), "{} missing", e.file);
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn dead_claimer_is_stolen_from_and_the_survivor_completes() {
+    // Claimer A dies (halt injection) right after its first commit,
+    // holding live leases. A fresh claimer B steals them once they
+    // expire and finishes the run without any intervention.
+    let tmp = tmp_dir("lease_dead");
+    let mdir = tmp.join("run");
+    let wdir = tmp.join("run/claim/workers");
+    let make = || claim_member("", "mlp", &["CR", "RR", "STATIC"], 2, &mdir, 2);
+
+    let mut cfg_a = cfg("victim");
+    cfg_a.lease_secs = 0.3;
+    let err = lease::run_claim(
+        "t",
+        vec![make()],
+        &wdir,
+        2,
+        false,
+        &cfg_a,
+        Some(1), // die after one freshly recorded cell
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("halted after"), "{err:#}");
+
+    let mut cfg_b = cfg("survivor");
+    cfg_b.lease_secs = 0.3;
+    let (outs, stats) = lease::run_claim(
+        "t",
+        vec![make()],
+        &wdir,
+        2,
+        false,
+        &cfg_b,
+        None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    common::assert_outcomes_identical(&fab_truth(&make()), &outs[0]);
+    assert_eq!(stats.resumed(), 1, "A's one committed cell survived");
+    assert_eq!(stats.committed_here, 5);
+    assert!(stats.stolen >= 1, "B reclaimed A's abandoned leases");
+    assert_eq!(read_manifest(&mdir).unwrap().cells.len(), 6);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn expired_lease_steal_is_gated_on_the_injected_clock() {
+    // A ghost claimer holds a live lease on the only cell. With the
+    // injected clock standing still, the claimer can only wait; once the
+    // clock advances past the deadline, it steals (generation 2) and
+    // completes. No real lease periods are slept through.
+    let tmp = tmp_dir("lease_clock");
+    let mdir = tmp.join("run");
+    let leases = mdir.join("claim/leases");
+    std::fs::create_dir_all(&leases).unwrap();
+    std::fs::write(
+        leases.join("00000.g1.json"),
+        "{\n  \"claimer\": \"ghost\",\n  \"deadline\": 1050.0,\n  \
+         \"generation\": 1,\n  \"kind\": \"cpt-lease\"\n}\n",
+    )
+    .unwrap();
+    let clock = Arc::new(TestClock::new(1000.0));
+    let mut c = cfg("timekeeper");
+    c.clock = clock.clone();
+    c.auto_heartbeat = false; // frozen clock: beats would be no-ops anyway
+    let wdir = mdir.join("claim/workers");
+    let make = || claim_member("", "mlp", &["CR"], 1, &mdir, 1);
+
+    let (outs, stats) = std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            lease::run_claim("t", vec![make()], &wdir, 1, false, &c, None, |_| {
+                Ok(FabRunner::plain())
+            })
+        });
+        // the ghost's lease is live at t=1000: the claimer can only poll
+        std::thread::sleep(Duration::from_millis(150));
+        clock.advance(100.0); // t=1100 > deadline 1050: steal-eligible
+        h.join().unwrap()
+    })
+    .unwrap();
+    common::assert_outcomes_identical(&fab_truth(&make()), &outs[0]);
+    assert_eq!(stats.stolen, 1, "the expired ghost lease was stolen");
+    assert_eq!(stats.committed_here, 1);
+    // the steal superseded, never deleted: both generations are on file
+    assert!(leases.join("00000.g1.json").exists());
+    assert!(leases.join("00000.g2.json").exists());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn claim_resumes_a_static_manifest_and_recomputes_invalid_artifacts() {
+    let tmp = tmp_dir("lease_seed");
+    let mdir = tmp.join("run");
+    let wdir = tmp.join("run/claim/workers");
+    let make = || claim_member("", "mlp", &["CR", "RR"], 2, &mdir, 2);
+
+    // first claim session completes and leaves an ordinary manifest
+    let (_, stats) = lease::run_claim(
+        "t", vec![make()], &wdir, 2, false, &cfg("seed-a"), None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    assert_eq!(stats.committed_here, 4);
+
+    // strip the claim board: the dir now looks exactly like a static
+    // (non-claim) run dir — manifest + artifacts, no coordination state
+    std::fs::remove_dir_all(mdir.join(lease::CLAIM_DIR)).unwrap();
+    let (outs, stats) = lease::run_claim(
+        "t", vec![make()], &wdir, 2, false, &cfg("seed-b"), None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    common::assert_outcomes_identical(&fab_truth(&make()), &outs[0]);
+    assert_eq!(stats.resumed(), 4, "every manifest cell was seeded");
+    assert_eq!(stats.committed_here, 0);
+
+    // a broken artifact must NOT be laundered into a commit entry: strip
+    // the board again, delete cell 0's artifact, and re-claim
+    std::fs::remove_dir_all(mdir.join(lease::CLAIM_DIR)).unwrap();
+    let lost = read_manifest(&mdir).unwrap().cells[&0].file.clone();
+    std::fs::remove_file(mdir.join(&lost)).unwrap();
+    let (outs, stats) = lease::run_claim(
+        "t", vec![make()], &wdir, 2, false, &cfg("seed-c"), None,
+        |_| Ok(FabRunner::plain()),
+    )
+    .unwrap();
+    common::assert_outcomes_identical(&fab_truth(&make()), &outs[0]);
+    assert_eq!(stats.resumed(), 3);
+    assert_eq!(stats.committed_here, 1, "only the broken cell recomputed");
+    let healed = read_manifest(&mdir).unwrap();
+    assert!(
+        healed.cells[&0].file.ends_with(".seed-c.json"),
+        "cell 0 should reference the recomputing claimer's artifact, got {}",
+        healed.cells[&0].file
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn refill_fails_loudly_when_no_one_can_run_the_remaining_cells() {
+    // Every worker of the only claimer fails to compile the model and no
+    // peer holds a live lease: the run must error out, not spin forever.
+    let tmp = tmp_dir("lease_nocompile");
+    let mdir = tmp.join("run");
+    let wdir = tmp.join("run/claim/workers");
+    let make = || claim_member("", "mlp", &["CR"], 1, &mdir, 1);
+    let err = lease::run_claim(
+        "t",
+        vec![make()],
+        &wdir,
+        1,
+        false,
+        &cfg("lonely"),
+        None,
+        |_| {
+            let mut r = FabRunner::plain();
+            r.fail.insert("fp-mlp".into());
+            Ok(r)
+        },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("no worker in this process can compile")
+            || msg.contains("no other claimer holds a live lease"),
+        "{msg}"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -1,21 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus four
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus five
 # end-to-end orchestration passes — a 2-shard sweep + merge, a 2-shard
 # *adaptive-policy* sweep killed mid-run / resumed / merged, a 3-sweep
 # campaign (one member adaptive) on the sequential scheduler that is
-# killed mid-run, resumed, cross-merged, and gc'd, and the same campaign
+# killed mid-run, resumed, cross-merged, and gc'd, the same campaign
 # through the global scheduler (--jobs 2, one worker pool over all
 # sweeps) whose merged CSVs must be byte-identical to the sequential
-# pass — so the bench targets and the whole coordinator surface are
+# pass, and a lease-claim sweep where one claimer is killed and one
+# stalls mid-run yet the survivors' CSVs match the static-shard
+# baseline — so the bench targets and the whole coordinator surface are
 # compiled-and-exercised without paying full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
 #                               # integration files (tests/campaign.rs,
-#                               # tests/global_sched.rs, tests/policy.rs);
-#                               # needs no AOT artifacts — the CI
-#                               # test-unit job runs this tier
+#                               # tests/global_sched.rs, tests/policy.rs,
+#                               # tests/lease.rs); needs no AOT artifacts
+#                               # — the CI test-unit job runs this tier
 #   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
 #                               # + fig_policy + shard/merge, policy, and
 #                               # campaign smokes
@@ -73,6 +75,8 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --test global_sched
   echo "== cargo test -q --test policy (fabricated adaptive policies)"
   cargo test -q --test policy
+  echo "== cargo test -q --test lease (fabricated lease-based claiming)"
+  cargo test -q --test lease
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -267,6 +271,45 @@ EOF
       fi
     done
     echo "global-scheduler smoke: killed+resumed global-pool shards merge byte-identically to the sequential scheduler"
+
+    echo "== lease-claim sweep smoke (one claimer killed, one stalled; vs the static-shard baseline)"
+    # Dynamic claiming must survive dead and wedged claimers and still
+    # match the static path byte-for-byte on the deterministic CSV
+    # columns. Claimer 'dead-a' is halt-injected after its first fresh
+    # cell (a dead node leaving abandoned leases); 'slow-b' stalls for
+    # 6s while holding leases (a wedged node: no heartbeats, late
+    # commits must be refused); 'live-c' runs alongside, steals the
+    # expired leases, and finishes. Both survivors must exit 0 and each
+    # report the complete sweep.
+    CLAIM_RUN="$SMOKE_DIR/claim"
+    if CPT_HALT_AFTER_CELLS=1 CPT_LEASE_SECS=1 $CPT sweep $SWEEP_ARGS --run-dir "$CLAIM_RUN" --claim dead-a; then
+      echo "check.sh: claim crash injection did not fire" >&2; exit 1
+    fi
+    if ! $CPT status "$CLAIM_RUN" | grep -q "claimer 'dead-a'"; then
+      echo "check.sh: status does not surface the dead claimer's liveness" >&2
+      $CPT status "$CLAIM_RUN" >&2 || true
+      exit 1
+    fi
+    CPT_STALL_AFTER_CELLS=1 CPT_STALL_SECS=6 CPT_LEASE_SECS=1 \
+      $CPT sweep $SWEEP_ARGS --run-dir "$CLAIM_RUN" --claim slow-b --csv "$SMOKE_DIR/claim_b.csv" &
+    CLAIM_B_PID=$!
+    sleep 1
+    CPT_LEASE_SECS=1 $CPT sweep $SWEEP_ARGS --run-dir "$CLAIM_RUN" --claim live-c --csv "$SMOKE_DIR/claim_c.csv"
+    if ! wait "$CLAIM_B_PID"; then
+      echo "check.sh: the stalled claimer should recover and exit cleanly" >&2; exit 1
+    fi
+    for f in claim_b.csv claim_c.csv; do
+      if ! diff <(cut -d, -f1-10 "$SMOKE_DIR/serial.csv") <(cut -d, -f1-10 "$SMOKE_DIR/$f"); then
+        echo "check.sh: $f differs from the static-shard baseline" >&2
+        exit 1
+      fi
+    done
+    if ! $CPT status "$CLAIM_RUN" | grep -q "4 committed"; then
+      echo "check.sh: claim status should report the full board committed" >&2
+      $CPT status "$CLAIM_RUN" >&2 || true
+      exit 1
+    fi
+    echo "claim smoke: dead + stalled claimers survived; outputs byte-identical to the static shards"
 
     echo "== fig_campaign_sched bench (executable-cache compile accounting)"
     cargo bench --bench fig_campaign_sched
