@@ -10,7 +10,11 @@
 //!   * a single-member campaign both ways with one worker — the
 //!     no-regression comparison for plain sweeps (recorded in the JSON
 //!     and warned about loudly on a large gap; not a hard gate, because
-//!     wall-clock asserts flake on loaded machines).
+//!     wall-clock asserts flake on loaded machines);
+//!   * the shared campaign twice more with fresh pools over one
+//!     persistent CPT_AOT_CACHE dir — cold-vs-warm wall clock and
+//!     compile counts (warm must be 0 when the backend can serialize
+//!     executables; otherwise the numbers document the inert fallback).
 //!
 //! Emits BENCH_campaign_sched.json (override with CPT_BENCH_JSON /
 //! --json). The bench is already smoke-sized (tiny mlp sweeps), so it
@@ -148,6 +152,49 @@ fn main() -> Result<()> {
         );
     }
 
+    // --- persistent AOT cache: cold vs warm pool over one dir ---------
+    // Two fresh worker pools (each starting with empty in-memory caches,
+    // the in-process stand-in for two processes) against one CPT_AOT_CACHE
+    // dir. With a serialization-capable backend the warm pool must report
+    // zero compiles; the vendored binding cannot serialize yet, so the
+    // numbers then just document the graceful fallback (cold == warm).
+    let aot_support = cpt::runtime::exec_serialization_support();
+    let aot_dir = tmp.join("aotcache");
+    std::env::set_var("CPT_AOT_CACHE", &aot_dir);
+    let (aot_cold, aot_cold_wall) = run(
+        &manifest,
+        &plan,
+        &tmp.join("aot_cold"),
+        workers,
+        SchedulerKind::Global,
+    )?;
+    let (aot_warm, aot_warm_wall) = run(
+        &manifest,
+        &plan,
+        &tmp.join("aot_warm"),
+        workers,
+        SchedulerKind::Global,
+    )?;
+    std::env::remove_var("CPT_AOT_CACHE");
+    let cold_sched = aot_cold.scheduler.expect("cold global scheduler stats");
+    let warm_sched = aot_warm.scheduler.expect("warm global scheduler stats");
+    let (cold_compiles, warm_compiles) =
+        (cold_sched.total_compiles(), warm_sched.total_compiles());
+    let warm_disk_hits = warm_sched.total_disk_hits();
+    println!(
+        "\npersistent AOT cache (fresh pools over one dir): \
+         cold {aot_cold_wall:.2}s / {cold_compiles} compile(s), \
+         warm {aot_warm_wall:.2}s / {warm_compiles} compile(s) \
+         ({warm_disk_hits} disk hit(s))"
+    );
+    match aot_support {
+        Ok(()) => {}
+        Err(reason) => println!(
+            "  (backend cannot serialize executables — {reason}; \
+             the disk cache is inert and both pools compile)"
+        ),
+    }
+
     let worker_rows: Vec<Json> = sched
         .workers
         .iter()
@@ -162,7 +209,7 @@ fn main() -> Result<()> {
         .collect();
     let doc = obj(vec![
         ("bench", s("fig_campaign_sched")),
-        ("version", num(1.0)),
+        ("version", num(2.0)),
         (
             "shared_model",
             obj(vec![
@@ -183,6 +230,18 @@ fn main() -> Result<()> {
                 ("global_wall_s", num(single_glob)),
             ]),
         ),
+        (
+            "aot",
+            obj(vec![
+                ("supported", Json::Bool(aot_support.is_ok())),
+                ("reason", s(aot_support.err().unwrap_or(""))),
+                ("cold_wall_s", num(aot_cold_wall)),
+                ("warm_wall_s", num(aot_warm_wall)),
+                ("cold_compiles", num(cold_compiles as f64)),
+                ("warm_compiles", num(warm_compiles as f64)),
+                ("warm_disk_hits", num(warm_disk_hits as f64)),
+            ]),
+        ),
     ]);
     std::fs::write(&json_path, doc.to_string_pretty())?;
     println!("\nwrote {json_path}");
@@ -198,5 +257,15 @@ fn main() -> Result<()> {
         workers,
         out.display()
     );
+    // hard gate only when the backend can actually serialize — otherwise
+    // the disk cache is inert by design and warm == cold is correct
+    if aot_support.is_ok() {
+        anyhow::ensure!(
+            warm_compiles == 0,
+            "warm pool over a populated AOT cache still compiled \
+             {warm_compiles} time(s) (see {})",
+            out.display()
+        );
+    }
     Ok(())
 }

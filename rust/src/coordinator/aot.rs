@@ -1,0 +1,818 @@
+//! Persistent content-addressed AOT executable cache.
+//!
+//! The per-worker executable LRU (rust/DESIGN-perf.md §6) dies with its
+//! worker thread, so every new `cpt` process — a resumed shard, a claimer
+//! that stole a lease, a re-run campaign, a second machine on a shared
+//! run dir — pays full cold XLA compiles again. This module is the level
+//! below that LRU: an on-disk store of serialized executables keyed by
+//! model fingerprint + cpt code version + backend platform + payload
+//! codec, shared safely between concurrent workers and processes.
+//!
+//! Layout (manifest-plus-payload, one directory per entry):
+//!
+//! ```text
+//! <cache-dir>/
+//!   aot-cache.json            marker: identifies the dir + schema version
+//!   <entry-id>/               entry-id = FNV-1a 64 of the full cache key
+//!     aot-manifest.json       commit point (util::publish_exclusive)
+//!     <tag>.<checksum>.bin    one payload per compiled entry point
+//!     last-used               recency stamp (mtime feeds LRU eviction)
+//! ```
+//!
+//! Publication order is the crash-safety argument: payload files are
+//! written first via `util::write_atomic` (checksum-bearing names, so
+//! racing publishers of identical content collide harmlessly), and the
+//! manifest is committed last via `util::publish_exclusive` — among any
+//! number of concurrent publishers across processes, exactly one wins,
+//! and an entry is visible only when complete. Losers delete their own
+//! unreferenced payload files.
+//!
+//! `load` validates everything against the caller's key — manifest kind,
+//! schema version, cpt version, platform, codec, fingerprint, per-payload
+//! length and checksum — and any failure is a plain miss, never an error
+//! and never stale bytes. One consequence: because `publish_exclusive`
+//! cannot replace an existing manifest, a damaged entry poisons its key
+//! (every load misses, every republish loses) until `gc` removes it —
+//! `gc` is the heal path, not just the space reclaimer.
+//!
+//! The cache is an execution knob: it never enters any spec or campaign
+//! hash and never fences resume/merge, so results are byte-identical
+//! with the cache enabled, disabled, or corrupted mid-run.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::store::{GcStats, RunStore};
+use crate::util::hash::{fnv1a64_hex, Fnv1a64};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::{publish_exclusive, write_atomic};
+
+/// Bump when the entry layout changes; older entries become misses.
+const AOT_SCHEMA_VERSION: usize = 1;
+const MARKER_FILE: &str = "aot-cache.json";
+const MARKER_KIND: &str = "cpt-aot-cache";
+const ENTRY_MANIFEST: &str = "aot-manifest.json";
+const ENTRY_KIND: &str = "cpt-aot-entry";
+const LAST_USED: &str = "last-used";
+
+/// Payload codec for PJRT executable bytes. Part of the cache key, so a
+/// future serialization format coexists with old entries instead of
+/// misreading them.
+pub const CODEC_PJRT: &str = "pjrt-exe-v1";
+
+/// The full invalidation fence for one cached executable set. Any
+/// component changing — model content, cpt build, backend platform,
+/// payload format — addresses a different entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AotKey {
+    /// `store::model_fingerprint` of the spec (metadata + HLO bytes).
+    pub fingerprint: String,
+    /// The cpt build that produced the bytes (`RunStore::code_version`).
+    pub cpt_version: String,
+    /// PJRT platform name (e.g. "cpu") — executables are target-specific.
+    pub platform: String,
+    /// Payload serialization format, e.g. [`CODEC_PJRT`].
+    pub codec: String,
+}
+
+impl AotKey {
+    /// Key for the current cpt build.
+    pub fn new(fingerprint: &str, platform: &str, codec: &str) -> AotKey {
+        AotKey {
+            fingerprint: fingerprint.to_string(),
+            cpt_version: RunStore::code_version().to_string(),
+            platform: platform.to_string(),
+            codec: codec.to_string(),
+        }
+    }
+
+    /// Content address of this key: the entry directory name. Collisions
+    /// are harmless — `load` re-checks every key component against the
+    /// manifest, so a colliding entry is a miss, not a wrong answer.
+    pub fn entry_id(&self) -> String {
+        let mut h = Fnv1a64::new();
+        for part in [
+            "cpt-aot-v1",
+            self.fingerprint.as_str(),
+            self.cpt_version.as_str(),
+            self.platform.as_str(),
+            self.codec.as_str(),
+        ] {
+            h.update(&(part.len() as u64).to_le_bytes());
+            h.update(part.as_bytes());
+        }
+        h.finish_hex()
+    }
+}
+
+/// One manifest payload reference.
+struct PayloadRef {
+    tag: String,
+    file: String,
+    bytes: usize,
+    checksum: String,
+}
+
+/// Parsed + structurally validated entry manifest.
+struct EntryManifest {
+    cpt_version: String,
+    platform: String,
+    codec: String,
+    model: String,
+    fingerprint: String,
+    payloads: Vec<PayloadRef>,
+}
+
+/// Handle on a cache directory. Cheap to open per worker/process; all
+/// cross-writer coordination happens through the filesystem primitives.
+pub struct AotStore {
+    dir: PathBuf,
+}
+
+impl AotStore {
+    /// Open (creating if needed) a cache directory. The marker file is
+    /// informational provenance — it makes `cpt gc` able to tell a cache
+    /// dir from a run dir — and is published once, tolerantly: a damaged
+    /// marker never blocks the cache.
+    pub fn open(dir: &Path) -> Result<AotStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create aot cache dir {}", dir.display()))?;
+        let marker = obj(vec![
+            ("kind", s(MARKER_KIND)),
+            ("schema_version", num(AOT_SCHEMA_VERSION as f64)),
+            ("created_by_cpt", s(RunStore::code_version())),
+            ("created_by_pid", num(std::process::id() as f64)),
+            ("created_unix", num(unix_now())),
+        ]);
+        publish_exclusive(
+            dir.join(MARKER_FILE),
+            marker.to_string_pretty().as_bytes(),
+        )?;
+        Ok(AotStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up `key`. Returns the validated `(tag, bytes)` payloads, or
+    /// `None` on any miss — absent, damaged, or built by a different
+    /// cpt/platform/codec. Never an error: the caller's fallback is a
+    /// plain compile. A hit refreshes the entry's recency stamp.
+    pub fn load(&self, key: &AotKey) -> Option<Vec<(String, Vec<u8>)>> {
+        let payloads = self.load_checked(key).ok()?;
+        let _ = write_atomic(
+            self.dir.join(key.entry_id()).join(LAST_USED),
+            b"",
+        );
+        Some(payloads)
+    }
+
+    fn load_checked(&self, key: &AotKey) -> Result<Vec<(String, Vec<u8>)>> {
+        let edir = self.dir.join(key.entry_id());
+        let m = read_entry_manifest(&edir)?;
+        ensure!(
+            m.fingerprint == key.fingerprint,
+            "fingerprint mismatch: entry has {}, key wants {}",
+            m.fingerprint,
+            key.fingerprint
+        );
+        ensure!(
+            m.cpt_version == key.cpt_version,
+            "built by cpt {} (this key wants {})",
+            m.cpt_version,
+            key.cpt_version
+        );
+        ensure!(
+            m.platform == key.platform,
+            "built for platform '{}' (this key wants '{}')",
+            m.platform,
+            key.platform
+        );
+        ensure!(
+            m.codec == key.codec,
+            "payload codec '{}' (this key wants '{}')",
+            m.codec,
+            key.codec
+        );
+        read_payloads(&edir, &m)
+    }
+
+    /// Publish the compiled payloads for `key`. Returns `true` if this
+    /// caller committed the entry, `false` if a racing publisher (or an
+    /// earlier run) already did — in which case this caller's staged
+    /// payload files are cleaned up where identifiable.
+    pub fn publish(
+        &self,
+        key: &AotKey,
+        model: &str,
+        payloads: &[(String, Vec<u8>)],
+    ) -> Result<bool> {
+        ensure!(!payloads.is_empty(), "aot publish: empty payload set");
+        let edir = self.dir.join(key.entry_id());
+        let manifest_path = edir.join(ENTRY_MANIFEST);
+        if manifest_path.exists() {
+            return Ok(false);
+        }
+        let mut refs = Vec::with_capacity(payloads.len());
+        let mut written = Vec::with_capacity(payloads.len());
+        for (tag, bytes) in payloads {
+            ensure!(
+                !tag.is_empty()
+                    && tag.bytes().all(|b| {
+                        b.is_ascii_alphanumeric() || b == b'_' || b == b'-'
+                    }),
+                "aot publish: invalid payload tag {tag:?}"
+            );
+            let ck = fnv1a64_hex(bytes);
+            // checksum-bearing name: racing publishers of the same
+            // content write the same file, so the later write_atomic
+            // just replaces identical bytes
+            let file = format!("{tag}.{ck}.bin");
+            write_atomic(edir.join(&file), bytes)?;
+            written.push(file.clone());
+            refs.push(obj(vec![
+                ("tag", s(tag)),
+                ("file", s(&file)),
+                ("bytes", num(bytes.len() as f64)),
+                ("checksum", s(&ck)),
+            ]));
+        }
+        let doc = obj(vec![
+            ("kind", s(ENTRY_KIND)),
+            ("schema_version", num(AOT_SCHEMA_VERSION as f64)),
+            ("cpt_version", s(&key.cpt_version)),
+            ("platform", s(&key.platform)),
+            ("codec", s(&key.codec)),
+            ("model", s(model)),
+            ("model_fingerprint", s(&key.fingerprint)),
+            ("created_by_pid", num(std::process::id() as f64)),
+            ("created_unix", num(unix_now())),
+            ("payloads", Json::Arr(refs)),
+        ]);
+        let won = publish_exclusive(
+            &manifest_path,
+            doc.to_string_pretty().as_bytes(),
+        )?;
+        if won {
+            let _ = write_atomic(edir.join(LAST_USED), b"");
+        } else if let Ok(winner) = read_entry_manifest(&edir) {
+            // a racing publisher committed first — drop our payload
+            // files the winning manifest does not reference
+            let keep: HashSet<&str> =
+                winner.payloads.iter().map(|p| p.file.as_str()).collect();
+            for f in &written {
+                if !keep.contains(f.as_str()) {
+                    std::fs::remove_file(edir.join(f)).ok();
+                }
+            }
+        }
+        Ok(won)
+    }
+
+    /// Inventory for `cpt cache status`: every entry with its size and,
+    /// where an entry cannot serve this build, the reason.
+    pub fn status(&self) -> Result<CacheStatus> {
+        let mut entries = Vec::new();
+        for edir in entry_dirs(&self.dir)? {
+            let id = edir
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let bytes = dir_size(&edir)?;
+            match read_entry_manifest(&edir)
+                .and_then(|m| read_payloads(&edir, &m).map(|_| m))
+            {
+                Ok(m) => {
+                    let problem = if m.cpt_version != RunStore::code_version()
+                    {
+                        Some(format!(
+                            "built by cpt {} (this build is {})",
+                            m.cpt_version,
+                            RunStore::code_version()
+                        ))
+                    } else {
+                        None
+                    };
+                    entries.push(CacheEntryInfo {
+                        id,
+                        model: m.model,
+                        platform: m.platform,
+                        cpt_version: m.cpt_version,
+                        payloads: m.payloads.len(),
+                        bytes,
+                        problem,
+                    });
+                }
+                Err(err) => entries.push(CacheEntryInfo {
+                    id,
+                    model: "?".into(),
+                    platform: "?".into(),
+                    cpt_version: "?".into(),
+                    payloads: 0,
+                    bytes,
+                    problem: Some(format!("damaged: {err:#}")),
+                }),
+            }
+        }
+        entries.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(CacheStatus { total_bytes: dir_size(&self.dir)?, entries })
+    }
+
+    /// `cpt gc` / `cpt cache gc` over a cache dir: sweep orphaned `.tmp`
+    /// staging files, remove damaged entries (healing their poisoned
+    /// keys — see the module docs), then evict least-recently-used valid
+    /// entries until the total payload size fits under `cap` bytes.
+    /// Like every gc here, only call on quiescent trees: a live writer's
+    /// staging file or freshly-used entry is indistinguishable from an
+    /// orphan or a cold one.
+    pub fn gc(&self, cap: Option<u64>) -> Result<GcStats> {
+        let mut stats = GcStats {
+            bytes_before: dir_size(&self.dir)?,
+            ..GcStats::default()
+        };
+        stats.orphaned_tmp = super::store::sweep_orphaned_tmp(&self.dir)?;
+        let mut live: Vec<(PathBuf, SystemTime, u64)> = Vec::new();
+        for edir in entry_dirs(&self.dir)? {
+            match read_entry_manifest(&edir)
+                .and_then(|m| read_payloads(&edir, &m).map(|_| m))
+            {
+                Ok(m) => {
+                    remove_unreferenced(&edir, &m);
+                    stats.cells += 1;
+                    let sz = dir_size(&edir)?;
+                    live.push((edir, recency(&live_stamp(&edir)), sz));
+                }
+                Err(err) => {
+                    eprintln!(
+                        "[gc] note: aot entry {} damaged ({err:#}); removed",
+                        edir.display()
+                    );
+                    std::fs::remove_dir_all(&edir).with_context(|| {
+                        format!("remove {}", edir.display())
+                    })?;
+                    stats.evicted += 1;
+                }
+            }
+        }
+        if let Some(cap) = cap {
+            live.sort_by_key(|(_, used, _)| *used);
+            let mut total: u64 = live.iter().map(|(_, _, sz)| *sz).sum();
+            for (edir, _, sz) in &live {
+                if total <= cap {
+                    break;
+                }
+                std::fs::remove_dir_all(edir).with_context(|| {
+                    format!("remove {}", edir.display())
+                })?;
+                total -= sz;
+                stats.evicted += 1;
+                stats.cells -= 1;
+            }
+        }
+        stats.bytes_after = dir_size(&self.dir)?;
+        Ok(stats)
+    }
+}
+
+/// One row of `cpt cache status`.
+pub struct CacheEntryInfo {
+    pub id: String,
+    pub model: String,
+    pub platform: String,
+    pub cpt_version: String,
+    pub payloads: usize,
+    pub bytes: u64,
+    /// Why this build would not (or could not) load the entry; `None`
+    /// for a servable entry.
+    pub problem: Option<String>,
+}
+
+pub struct CacheStatus {
+    pub entries: Vec<CacheEntryInfo>,
+    pub total_bytes: u64,
+}
+
+/// Whether `dir` is an AOT cache dir (so `cpt gc` can route it here
+/// instead of treating it as a run dir).
+pub fn is_cache_dir(dir: &Path) -> bool {
+    dir.join(MARKER_FILE).is_file()
+}
+
+/// `CPT_AOT_CACHE`: cache directory. Strict-parsed like every env knob —
+/// unset is `None`, an unusable value fails loudly.
+pub fn cache_dir_from_env() -> Result<Option<PathBuf>> {
+    super::env_parse::<PathBuf>("CPT_AOT_CACHE")
+}
+
+/// `CPT_AOT_CACHE_CAP`: byte budget for `gc` eviction. Unset means no
+/// cap; an unparsable value fails loudly.
+pub fn cache_cap_from_env() -> Result<Option<u64>> {
+    super::env_parse::<u64>("CPT_AOT_CACHE_CAP")
+}
+
+/// The store the executors should run with: `None` when `CPT_AOT_CACHE`
+/// is unset, and also — with a one-time note — when the backend cannot
+/// serialize executables at all (the capability probe), so a configured
+/// cache degrades to plain compiles instead of failing.
+pub fn store_for_run() -> Result<Option<AotStore>> {
+    let Some(dir) = cache_dir_from_env()? else {
+        return Ok(None);
+    };
+    if let Err(reason) = crate::runtime::exec_serialization_support() {
+        static NOTE: std::sync::Once = std::sync::Once::new();
+        NOTE.call_once(|| {
+            eprintln!(
+                "[aot] note: CPT_AOT_CACHE is set but this backend cannot \
+                 serialize executables ({reason}); falling back to plain \
+                 compiles"
+            );
+        });
+        return Ok(None);
+    }
+    AotStore::open(&dir).map(Some)
+}
+
+// ---- internals -----------------------------------------------------------
+
+fn unix_now() -> f64 {
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+fn read_entry_manifest(edir: &Path) -> Result<EntryManifest> {
+    let path = edir.join(ENTRY_MANIFEST);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let v = Json::parse(&text)
+        .with_context(|| format!("parse {}", path.display()))?;
+    let kind = v.get("kind")?.as_str()?;
+    ensure!(kind == ENTRY_KIND, "not an aot entry manifest (kind '{kind}')");
+    let schema = v.get("schema_version")?.as_usize()?;
+    ensure!(
+        schema == AOT_SCHEMA_VERSION,
+        "schema version {schema} (this build reads {AOT_SCHEMA_VERSION})"
+    );
+    let mut payloads = Vec::new();
+    for p in v.get("payloads")?.as_arr()? {
+        let file = p.get("file")?.as_str()?.to_string();
+        // manifest data must never escape the entry dir
+        ensure!(
+            !file.is_empty()
+                && !file.contains('/')
+                && !file.contains('\\')
+                && file != "."
+                && file != "..",
+            "unsafe payload file name {file:?}"
+        );
+        payloads.push(PayloadRef {
+            tag: p.get("tag")?.as_str()?.to_string(),
+            file,
+            bytes: p.get("bytes")?.as_usize()?,
+            checksum: p.get("checksum")?.as_str()?.to_string(),
+        });
+    }
+    ensure!(!payloads.is_empty(), "entry manifest lists no payloads");
+    Ok(EntryManifest {
+        cpt_version: v.get("cpt_version")?.as_str()?.to_string(),
+        platform: v.get("platform")?.as_str()?.to_string(),
+        codec: v.get("codec")?.as_str()?.to_string(),
+        model: v.get("model")?.as_str()?.to_string(),
+        fingerprint: v.get("model_fingerprint")?.as_str()?.to_string(),
+        payloads,
+    })
+}
+
+/// Read and verify every payload (length + checksum) — the stale-bytes
+/// fence. Any discrepancy is an error, which callers treat as a miss.
+fn read_payloads(
+    edir: &Path,
+    m: &EntryManifest,
+) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut out = Vec::with_capacity(m.payloads.len());
+    for p in &m.payloads {
+        let path = edir.join(&p.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("payload '{}' unreadable", p.tag))?;
+        ensure!(
+            bytes.len() == p.bytes,
+            "payload '{}' truncated: {} of {} bytes",
+            p.tag,
+            bytes.len(),
+            p.bytes
+        );
+        ensure!(
+            fnv1a64_hex(&bytes) == p.checksum,
+            "payload '{}' fails its checksum",
+            p.tag
+        );
+        out.push((p.tag.clone(), bytes));
+    }
+    Ok(out)
+}
+
+/// Drop files in a valid entry dir that neither the manifest nor the
+/// store itself references — residue of a losing publisher that could
+/// not read the winner's manifest at the time.
+fn remove_unreferenced(edir: &Path, m: &EntryManifest) {
+    let Ok(entries) = std::fs::read_dir(edir) else { return };
+    let keep: HashSet<&str> =
+        m.payloads.iter().map(|p| p.file.as_str()).collect();
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name != ENTRY_MANIFEST
+            && name != LAST_USED
+            && !keep.contains(name)
+        {
+            std::fs::remove_file(e.path()).ok();
+        }
+    }
+}
+
+fn entry_dirs(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("read dir {}", dir.display()))?;
+    for e in entries {
+        let e = e.with_context(|| format!("read dir {}", dir.display()))?;
+        if e.file_type()?.is_dir() {
+            out.push(e.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// The file whose mtime carries an entry's recency: `last-used` when
+/// present (touched on every hit), else the manifest itself.
+fn live_stamp(edir: &Path) -> PathBuf {
+    let stamp = edir.join(LAST_USED);
+    if stamp.is_file() {
+        stamp
+    } else {
+        edir.join(ENTRY_MANIFEST)
+    }
+}
+
+fn recency(path: &Path) -> SystemTime {
+    std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .unwrap_or(SystemTime::UNIX_EPOCH)
+}
+
+fn dir_size(dir: &Path) -> Result<u64> {
+    if !dir.exists() {
+        return Ok(0);
+    }
+    let mut total = 0u64;
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .with_context(|| format!("read dir {}", d.display()))?;
+        for e in entries {
+            let e = e.with_context(|| format!("read dir {}", d.display()))?;
+            if e.file_type()?.is_dir() {
+                stack.push(e.path());
+            } else {
+                total += e.metadata()?.len();
+            }
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpt_aot_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn key(fp: &str) -> AotKey {
+        AotKey::new(fp, "cpu", CODEC_PJRT)
+    }
+
+    fn payloads(seed: u8) -> Vec<(String, Vec<u8>)> {
+        vec![
+            ("init".into(), vec![seed; 64]),
+            ("train_step".into(), (0..96).map(|i| i ^ seed).collect()),
+        ]
+    }
+
+    /// Overwrite one field of an entry's manifest on disk — simulates an
+    /// entry left behind by a different build/platform (the manifest is
+    /// already published, so this is a direct rewrite, as corruption
+    /// would be).
+    fn rewrite_manifest_field(store: &AotStore, k: &AotKey, field: &str, v: Json) {
+        let path = store.dir().join(k.entry_id()).join(ENTRY_MANIFEST);
+        let mut doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            m.insert(field.into(), v);
+        }
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+    }
+
+    fn payload_files(store: &AotStore, k: &AotKey) -> Vec<PathBuf> {
+        let edir = store.dir().join(k.entry_id());
+        let mut out: Vec<_> = std::fs::read_dir(&edir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+            .collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn publish_then_load_round_trips() {
+        let dir = tmp("round_trip");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(7)).unwrap());
+        assert_eq!(store.load(&k).unwrap(), payloads(7));
+        // a different fingerprint is a clean miss
+        assert!(store.load(&key("fp-other")).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn second_publish_loses_and_first_content_stands() {
+        let dir = tmp("second_pub");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(1)).unwrap());
+        assert!(!store.publish(&k, "mlp", &payloads(2)).unwrap());
+        assert_eq!(store.load(&k).unwrap(), payloads(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_payload_is_a_miss_and_gc_heals_the_key() {
+        let dir = tmp("truncated");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(3)).unwrap());
+        let victim = &payload_files(&store, &k)[0];
+        let bytes = std::fs::read(victim).unwrap();
+        std::fs::write(victim, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load(&k).is_none(), "truncated payload served");
+        // the key is poisoned (manifest exists) until gc removes it...
+        assert!(!store.publish(&k, "mlp", &payloads(3)).unwrap());
+        let stats = store.gc(None).unwrap();
+        assert_eq!(stats.evicted, 1);
+        // ...after which a recompile can publish and serve again
+        assert!(store.publish(&k, "mlp", &payloads(3)).unwrap());
+        assert_eq!(store.load(&k).unwrap(), payloads(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_checksum() {
+        let dir = tmp("flipped");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(4)).unwrap());
+        let victim = &payload_files(&store, &k)[0];
+        let mut bytes = std::fs::read(victim).unwrap();
+        bytes[0] ^= 0xff; // same length, different content
+        std::fs::write(victim, &bytes).unwrap();
+        assert!(store.load(&k).is_none(), "corrupt payload served");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_schema_version_is_a_miss() {
+        let dir = tmp("schema");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(5)).unwrap());
+        rewrite_manifest_field(&store, &k, "schema_version", num(999.0));
+        assert!(store.load(&k).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_cpt_version_is_a_miss() {
+        let dir = tmp("cpt_version");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(6)).unwrap());
+        rewrite_manifest_field(&store, &k, "cpt_version", s("0.0.0-other"));
+        assert!(store.load(&k).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_platform_is_a_miss() {
+        let dir = tmp("platform");
+        let store = AotStore::open(&dir).unwrap();
+        let k = key("fp-alpha");
+        assert!(store.publish(&k, "mlp", &payloads(8)).unwrap());
+        rewrite_manifest_field(&store, &k, "platform", s("tpu"));
+        assert!(store.load(&k).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_publishers_admit_exactly_one_winner() {
+        let dir = tmp("race");
+        AotStore::open(&dir).unwrap();
+        let k = key("fp-race");
+        let wins: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8u8)
+                .map(|i| {
+                    let dir = dir.clone();
+                    let k = k.clone();
+                    scope.spawn(move || {
+                        // each thread models its own process: fresh handle
+                        let store = AotStore::open(&dir).unwrap();
+                        store.publish(&k, "mlp", &payloads(i)).unwrap()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .filter(|&won| won)
+                .count()
+        });
+        assert_eq!(wins, 1, "exactly one publisher must win");
+        let store = AotStore::open(&dir).unwrap();
+        let loaded = store.load(&k).expect("entry must be servable");
+        assert_eq!(loaded.len(), 2, "complete payload set");
+        // the winner's set is internally consistent: both payloads come
+        // from the same seed
+        let seed = loaded[0].1[0];
+        assert_eq!(loaded, payloads(seed), "torn entry: mixed publishers");
+        // losers cleaned up: entry holds only manifest + stamp + 2 payloads
+        let edir = dir.join(k.entry_id());
+        let mut names: Vec<_> = std::fs::read_dir(&edir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        assert_eq!(names.len(), 4, "loser residue: {names:?}");
+        assert!(!names.iter().any(|n| n.ends_with(".tmp")), "{names:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_tmp_and_evicts_lru_over_cap() {
+        let dir = tmp("gc");
+        let store = AotStore::open(&dir).unwrap();
+        let (k1, k2, k3) = (key("fp-1"), key("fp-2"), key("fp-3"));
+        for (k, seed) in [(&k1, 1u8), (&k2, 2), (&k3, 3)] {
+            assert!(store.publish(k, "mlp", &payloads(seed)).unwrap());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        // touch k1 so it is the most recently used despite oldest publish
+        assert!(store.load(&k1).is_some());
+        std::fs::write(dir.join("stale.123-0.tmp"), b"orphan").unwrap();
+        // cap below two entries' payloads: evict k2 and k3, keep k1
+        let one_entry = dir_size(&dir.join(k1.entry_id())).unwrap();
+        let stats = store.gc(Some(one_entry + 16)).unwrap();
+        assert_eq!(stats.orphaned_tmp, 1);
+        assert_eq!(stats.evicted, 2);
+        assert_eq!(stats.cells, 1);
+        assert!(stats.bytes_after < stats.bytes_before);
+        assert!(store.load(&k1).is_some(), "most-recent entry evicted");
+        assert!(store.load(&k2).is_none());
+        assert!(store.load(&k3).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn env_cap_strict_parses() {
+        // sole test touching this env var, so no parallel-test races
+        std::env::set_var("CPT_AOT_CACHE_CAP", "not-a-number");
+        assert!(cache_cap_from_env().is_err(), "garbage cap must fail loudly");
+        std::env::set_var("CPT_AOT_CACHE_CAP", "4096");
+        assert_eq!(cache_cap_from_env().unwrap(), Some(4096));
+        std::env::remove_var("CPT_AOT_CACHE_CAP");
+        assert_eq!(cache_cap_from_env().unwrap(), None);
+    }
+
+    #[test]
+    fn gc_on_empty_cache_is_clean() {
+        let dir = tmp("empty");
+        let store = AotStore::open(&dir).unwrap();
+        assert!(is_cache_dir(&dir), "marker must identify the dir");
+        let stats = store.gc(Some(0)).unwrap();
+        assert_eq!(
+            (stats.cells, stats.evicted, stats.orphaned_tmp),
+            (0, 0, 0)
+        );
+        assert!(store.status().unwrap().entries.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

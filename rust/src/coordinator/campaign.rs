@@ -42,6 +42,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::aot;
 use super::exec::{self, ExecItem, ExecMember, WorkerStats};
 use super::plan::{PlannedCell, ShardId, SweepPlan};
 use super::store::{
@@ -473,6 +474,18 @@ impl SchedulerStats {
     pub fn total_compile_seconds(&self) -> f64 {
         self.workers.iter().map(|w| w.compile_seconds).sum()
     }
+
+    pub fn total_hits(&self) -> usize {
+        self.workers.iter().map(|w| w.hits).sum()
+    }
+
+    pub fn total_disk_hits(&self) -> usize {
+        self.workers.iter().map(|w| w.disk_hits).sum()
+    }
+
+    pub fn total_misses(&self) -> usize {
+        self.workers.iter().map(|w| w.misses).sum()
+    }
 }
 
 /// Parsed, validated view of a `campaign-manifest.json`.
@@ -550,6 +563,9 @@ fn write_campaign_manifest(root: &Path, cm: &CampaignManifest) -> Result<()> {
                         ("compile_seconds", num(w.compile_seconds)),
                         ("cells", num(w.cells as f64)),
                         ("retries", num(w.retries as f64)),
+                        ("hits", num(w.hits as f64)),
+                        ("disk_hits", num(w.disk_hits as f64)),
+                        ("misses", num(w.misses as f64)),
                     ])
                 })
                 .collect(),
@@ -640,6 +656,19 @@ pub fn read_campaign_manifest(root: &Path) -> Result<CampaignManifest> {
                     cells: w.get("cells")?.as_usize()?,
                     // absent in manifests written before 0.7.0
                     retries: match w.opt("retries") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    // absent in manifests written before 0.8.0
+                    hits: match w.opt("hits") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    disk_hits: match w.opt("disk_hits") {
+                        Some(v) => v.as_usize()?,
+                        None => 0,
+                    },
+                    misses: match w.opt("misses") {
                         Some(v) => v.as_usize()?,
                         None => 0,
                     },
@@ -878,8 +907,9 @@ pub fn run_campaign(
                 }
             }
             let cache_cap = exec::exec_cache_cap()?;
+            let aot = aot::store_for_run()?;
             run_campaign_global(plan, opts, &fingerprints, None, |_| {
-                exec::PjrtCellRunner::new(&specs, cache_cap)
+                exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref())
             })
         }
     }

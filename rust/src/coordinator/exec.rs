@@ -21,7 +21,10 @@
 //!   seconds are reported in [`ExecStats`] (and recorded into the
 //!   campaign manifest). Claiming prefers items whose model the worker
 //!   already holds compiled, so workers stay sticky to models when the
-//!   queue allows it.
+//!   queue allows it. With `CPT_AOT_CACHE` set (and a backend that can
+//!   serialize executables), the LRU is backed by the persistent AOT
+//!   store (`coordinator::aot`), so new processes warm-start from
+//!   compiles published by earlier ones.
 //! * **Per-member caps** — a member may bound its own in-flight cells
 //!   ([`ExecMember::cap`], e.g. `jobs = 1` for memory reasons); the pool
 //!   never runs more than `cap` of that member's cells concurrently.
@@ -42,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::aot::{self, AotStore};
 use super::store::RunStore;
 use super::{run_one_with_policy, RunOutcome, SweepCell};
 use crate::policy::PolicySpec;
@@ -143,6 +147,25 @@ pub trait CellRunner {
     fn has_cached(&self, _fingerprint: &str) -> bool {
         false
     }
+
+    /// Model-lookup cache accounting so far (in-memory hits, AOT disk
+    /// hits, misses). Purely observational — results never depend on it.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+/// Where a worker's model lookups were served from. `misses` counts
+/// lookups not answered by the in-memory LRU; each miss is then either
+/// an AOT `disk_hits` or a compile, so `misses == disk_hits + compiles`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Lookups served by the worker's in-memory LRU.
+    pub hits: usize,
+    /// LRU misses served by deserializing an AOT cache entry.
+    pub disk_hits: usize,
+    /// Lookups the in-memory LRU could not serve.
+    pub misses: usize,
 }
 
 /// Per-worker accounting, reported by [`run_items`] and recorded into
@@ -158,6 +181,13 @@ pub struct WorkerStats {
     /// Setup attempts this worker retried after a transient failure
     /// (each is one backoff-and-try-again beyond a first attempt).
     pub retries: usize,
+    /// Model lookups served by this worker's in-memory LRU.
+    pub hits: usize,
+    /// LRU misses served by the AOT disk cache instead of a compile.
+    pub disk_hits: usize,
+    /// Model lookups the in-memory LRU could not serve
+    /// (`disk_hits + compiles`).
+    pub misses: usize,
 }
 
 /// Pool-level accounting for one [`run_items`] call.
@@ -630,6 +660,7 @@ where
                     }
                 }
                 let (compiles, compile_seconds) = runner.compile_stats();
+                let cache = runner.cache_stats();
                 let _ = tx.send(Msg::WorkerExit {
                     stats: WorkerStats {
                         worker: w,
@@ -637,6 +668,9 @@ where
                         compile_seconds,
                         cells,
                         retries,
+                        hits: cache.hits,
+                        disk_hits: cache.disk_hits,
+                        misses: cache.misses,
                     },
                 });
             });
@@ -814,38 +848,51 @@ where
     Ok(ExecStats { jobs, workers: worker_stats, refused })
 }
 
-/// Production [`CellRunner`]: one PJRT client plus an LRU cache of
-/// compiled entry-point sets keyed by model fingerprint. Compilation is
-/// the dominant fixed cost per worker (DESIGN-perf §1), so the cache is
-/// what makes cross-member scheduling cheap: claiming a cell of a member
-/// whose model is already cached costs zero recompiles.
+/// Production [`CellRunner`]: one PJRT client plus a two-level cache of
+/// compiled entry-point sets keyed by model fingerprint — an in-memory
+/// LRU, optionally backed by the persistent AOT disk store
+/// (`coordinator::aot`). Compilation is the dominant fixed cost per
+/// worker (DESIGN-perf §1), so the cache is what makes cross-member
+/// scheduling cheap: claiming a cell of a member whose model is already
+/// cached costs zero recompiles, and with a populated AOT store even a
+/// brand-new process warm-starts.
 pub struct PjrtCellRunner<'a> {
     rt: Runtime,
     /// Pre-validated specs shared by every worker, keyed by model name.
     specs: &'a HashMap<String, ModelSpec>,
+    /// Second level below the LRU; `None` runs memory-only.
+    aot: Option<&'a AotStore>,
     /// LRU order: most recently used last.
     cache: Vec<(String, LoadedModel)>,
     cache_cap: usize,
     compiles: usize,
     compile_seconds: f64,
+    cache_stats: CacheStats,
+    aot_noted: bool,
 }
 
 impl<'a> PjrtCellRunner<'a> {
     pub fn new(
         specs: &'a HashMap<String, ModelSpec>,
         cache_cap: usize,
+        aot: Option<&'a AotStore>,
     ) -> Result<Self> {
         Ok(PjrtCellRunner {
             rt: Runtime::cpu()?,
             specs,
+            aot,
             cache: Vec::new(),
             cache_cap: cache_cap.max(1),
             compiles: 0,
             compile_seconds: 0.0,
+            cache_stats: CacheStats::default(),
+            aot_noted: false,
         })
     }
 
-    /// Cache lookup, compiling (and evicting least-recently-used) on miss.
+    /// Two-level cache lookup: in-memory LRU, then the AOT disk store,
+    /// then compile (publishing the result for future processes). The
+    /// in-memory insert evicts least-recently-used at capacity.
     fn model_for(&mut self, member: &ExecMember) -> Result<&LoadedModel> {
         if let Some(pos) = self
             .cache
@@ -854,20 +901,103 @@ impl<'a> PjrtCellRunner<'a> {
         {
             let entry = self.cache.remove(pos);
             self.cache.push(entry);
-        } else {
-            let spec = self.specs.get(&member.model).with_context(|| {
-                format!("no shared spec for model '{}'", member.model)
-            })?;
-            let t0 = Instant::now();
-            let model = self.rt.load_model(spec)?;
-            self.compiles += 1;
-            self.compile_seconds += t0.elapsed().as_secs_f64();
-            if self.cache.len() >= self.cache_cap {
-                self.cache.remove(0);
-            }
-            self.cache.push((member.fingerprint.clone(), model));
+            self.cache_stats.hits += 1;
+            return Ok(&self.cache.last().unwrap().1);
         }
+        self.cache_stats.misses += 1;
+        let spec = self.specs.get(&member.model).with_context(|| {
+            format!("no shared spec for model '{}'", member.model)
+        })?;
+        let model = match self.aot_load(member, spec) {
+            Some(model) => {
+                self.cache_stats.disk_hits += 1;
+                model
+            }
+            None => {
+                let t0 = Instant::now();
+                let model = self.rt.load_model(spec)?;
+                self.compiles += 1;
+                self.compile_seconds += t0.elapsed().as_secs_f64();
+                self.aot_publish(member, &model);
+                model
+            }
+        };
+        if self.cache.len() >= self.cache_cap {
+            self.cache.remove(0);
+        }
+        self.cache.push((member.fingerprint.clone(), model));
         Ok(&self.cache.last().unwrap().1)
+    }
+
+    /// Whether this fingerprint may address the disk store. Store-less
+    /// sweeps fall back to a name-derived pseudo-fingerprint
+    /// (`model:<name>`, see `run_sweep_timed`) that identifies no spec
+    /// content, so it must never key persistent entries.
+    fn aot_addressable(&self, member: &ExecMember) -> bool {
+        self.aot.is_some() && !member.fingerprint.starts_with("model:")
+    }
+
+    /// Disk-level lookup. Any failure — absent or damaged entry, backend
+    /// refusing to deserialize — degrades to a plain compile.
+    fn aot_load(
+        &mut self,
+        member: &ExecMember,
+        spec: &ModelSpec,
+    ) -> Option<LoadedModel> {
+        if !self.aot_addressable(member) {
+            return None;
+        }
+        let key = aot::AotKey::new(
+            &member.fingerprint,
+            &self.rt.platform(),
+            aot::CODEC_PJRT,
+        );
+        let payloads = self.aot?.load(&key)?;
+        match self.rt.load_model_from_bytes(spec, &payloads) {
+            Ok(model) => Some(model),
+            Err(err) => {
+                self.note_once(&format!(
+                    "cached executable for '{}' failed to load ({err:#}); \
+                     recompiling",
+                    member.model
+                ));
+                None
+            }
+        }
+    }
+
+    /// Best-effort publication of a fresh compile so later processes
+    /// warm-start. Never fails the run: a backend that cannot serialize
+    /// (or a full disk) costs one note and nothing else.
+    fn aot_publish(&mut self, member: &ExecMember, model: &LoadedModel) {
+        if !self.aot_addressable(member) {
+            return;
+        }
+        let key = aot::AotKey::new(
+            &member.fingerprint,
+            &self.rt.platform(),
+            aot::CODEC_PJRT,
+        );
+        match self.rt.serialize_model(model) {
+            Ok(payloads) => {
+                if let Err(err) =
+                    self.aot.unwrap().publish(&key, &member.model, &payloads)
+                {
+                    self.note_once(&format!(
+                        "could not publish executable for '{}' ({err:#})",
+                        member.model
+                    ));
+                }
+            }
+            Err(err) => self.note_once(&format!("{err:#}")),
+        }
+    }
+
+    fn note_once(&mut self, msg: &str) {
+        if !self.aot_noted {
+            self.aot_noted = true;
+            eprintln!("[aot] note: {msg}");
+        }
     }
 }
 
@@ -904,6 +1034,10 @@ impl CellRunner for PjrtCellRunner<'_> {
 
     fn has_cached(&self, fingerprint: &str) -> bool {
         self.cache.iter().any(|(fp, _)| fp == fingerprint)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache_stats
     }
 }
 

@@ -62,6 +62,7 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{bail, Context, Result};
 
+use super::aot;
 use super::campaign::{
     self, CampaignPlan, CampaignRunOpts, CampaignRunResult, MemberOutcome,
     SchedulerKind, SchedulerStats,
@@ -1122,6 +1123,7 @@ pub fn run_claim_sweep(
     let mut specs = HashMap::new();
     specs.insert(spec.model.clone(), model_spec);
     let cache_cap = exec::exec_cache_cap()?;
+    let aot = aot::store_for_run()?;
     let workers_dir = dir.join(CLAIM_DIR).join(WORKERS_DIR);
     let (mut outs, stats) = run_claim(
         &format!("sweep {}", spec.model),
@@ -1131,7 +1133,7 @@ pub fn run_claim_sweep(
         spec.verbose,
         cfg,
         None,
-        |_| exec::PjrtCellRunner::new(&specs, cache_cap),
+        |_| exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref()),
     )?;
     let outcomes = outs.pop().unwrap();
     let timing = SweepTiming {
@@ -1208,6 +1210,7 @@ pub fn run_claim_campaign(
         });
     }
     let cache_cap = exec::exec_cache_cap()?;
+    let aot = aot::store_for_run()?;
     let workers_dir = opts.root.join(CLAIM_DIR).join(WORKERS_DIR);
     let (outs, stats) = run_claim(
         &format!("campaign {}", plan.name),
@@ -1217,7 +1220,7 @@ pub fn run_claim_campaign(
         opts.verbose,
         cfg,
         None,
-        |_| exec::PjrtCellRunner::new(&specs, cache_cap),
+        |_| exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref()),
     )?;
     // every finishing claimer records its own pool's accounting — a
     // benign last-writer-wins, like the manifest rebuild itself

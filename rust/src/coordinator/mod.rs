@@ -31,6 +31,7 @@
 //! pool through the same executor. See rust/DESIGN-sharding.md and
 //! rust/DESIGN-perf.md.
 
+pub mod aot;
 pub mod campaign;
 pub mod exec;
 pub mod lease;
@@ -518,8 +519,9 @@ pub fn run_sweep_timed(
             [store.as_mut().map(|s| s as &mut dyn exec::CellSink)];
         let mut slot_groups = [std::mem::take(&mut slots)];
         let cache_cap = exec::exec_cache_cap()?;
+        let aot_store = aot::store_for_run()?;
         let res = exec::run_items(&req, &mut stores, &mut slot_groups, |_| {
-            exec::PjrtCellRunner::new(&specs, cache_cap)
+            exec::PjrtCellRunner::new(&specs, cache_cap, aot_store.as_ref())
         });
         slots = std::mem::take(&mut slot_groups[0]);
         res?;

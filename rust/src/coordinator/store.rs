@@ -593,10 +593,12 @@ pub fn merge_run_dirs(dirs: &[PathBuf]) -> Result<(String, Vec<RunOutcome>)> {
     Ok((h.model, outs))
 }
 
-/// What `compact_run_dir` did to one run directory.
+/// What one gc pass did to a directory — `compact_run_dir` over a run
+/// dir, or `AotStore::gc` over an executable cache dir.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GcStats {
-    /// Cells recorded in the manifest.
+    /// Cells recorded in the manifest (for a cache dir: valid entries
+    /// remaining).
     pub cells: usize,
     /// Cells whose artifact was rewritten (non-empty history stripped).
     pub compacted: usize,
@@ -607,6 +609,10 @@ pub struct GcStats {
     /// that crashed between staging and publishing (see
     /// `util::write_atomic`).
     pub orphaned_tmp: usize,
+    /// AOT cache entries removed — damaged ones (healing their poisoned
+    /// keys) plus least-recently-used ones over the byte budget. Always
+    /// 0 for run dirs (their gc never deletes cells).
+    pub evicted: usize,
     pub bytes_before: u64,
     pub bytes_after: u64,
 }

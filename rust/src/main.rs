@@ -16,7 +16,10 @@
 //!   status    DIR                report done/remaining cells and per-cell
 //!                                wall-clock for a run dir or campaign root
 //!   gc        DIR                compact artifacts (strip per-step
-//!                                histories; aggregates are unchanged)
+//!                                histories; aggregates are unchanged);
+//!                                on an AOT cache dir: sweep + evict
+//!   cache     status|gc          inspect / collect the persistent AOT
+//!                                executable cache (CPT_AOT_CACHE)
 //!   range-test --model M [...]   precision range test (discovers q_min)
 //!   preset    --file F.toml      run a sweep described by a preset file
 //!
@@ -26,6 +29,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use cpt::coordinator::aot;
 use cpt::coordinator::campaign::{
     self, set_policy, CampaignRunOpts, SchedulerKind, Status,
 };
@@ -56,6 +60,7 @@ fn run() -> Result<()> {
         "merge" => cmd_merge(&cli),
         "status" => cmd_status(&cli),
         "gc" => cmd_gc(&cli),
+        "cache" => cmd_cache(&cli),
         "range-test" => cmd_range_test(&cli),
         "preset" => cmd_preset(&cli),
         "" | "help" => {
@@ -147,7 +152,19 @@ USAGE: cpt <subcommand> [flags]
   gc DIR                        compact recorded cell artifacts (strip
                                 per-step histories, keep every scalar);
                                 merged/aggregate CSVs are byte-identical
-                                before and after
+                                before and after; given an AOT cache dir
+                                instead, sweep orphaned .tmp files,
+                                remove damaged entries, and evict
+                                least-recently-used entries over the
+                                CPT_AOT_CACHE_CAP byte budget
+  cache status|gc [--aot-cache DIR] [--cap BYTES]
+                                inspect or collect the persistent AOT
+                                executable cache (dir from --aot-cache,
+                                else CPT_AOT_CACHE); sweeps/campaigns
+                                with the cache configured publish every
+                                compile and warm-start later processes
+                                on a backend that can serialize
+                                executables (reported by `cache status`)
   range-test --model M [--qlo 2] [--qhi 8] [--probe-steps N]
                                 discover q_min (paper §3.1)
   preset --file configs/X.toml [--shard I/N] [--run-dir D] [--resume]
@@ -167,7 +184,10 @@ ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
      CPT_CLAIM_POLL_SECS (--claim board poll interval, default: lease/4),
      CPT_HALT_AFTER_CELLS (fault injection: abort after N fresh cells),
      CPT_STALL_AFTER_CELLS / CPT_STALL_SECS (fault injection: a --claim
-     worker goes dark for STALL_SECS after N committed cells);
+     worker goes dark for STALL_SECS after N committed cells),
+     CPT_AOT_CACHE (persistent AOT executable cache dir; sweep/campaign/
+     preset also accept --aot-cache DIR, which overrides the env),
+     CPT_AOT_CACHE_CAP (gc byte budget for that cache);
      every knob fails loudly on an unparsable value"
     );
 }
@@ -284,6 +304,15 @@ fn cmd_train(cli: &Cli) -> Result<()> {
         println!("wrote loss curve to {path}");
     }
     Ok(())
+}
+
+/// `--aot-cache DIR` overrides `CPT_AOT_CACHE` for this invocation. The
+/// executors read the cache dir from the env at startup, so the flag
+/// just installs it process-wide — called before any worker spawns.
+fn apply_aot_flag(cli: &Cli) {
+    if let Some(dir) = cli.flag("aot-cache") {
+        std::env::set_var("CPT_AOT_CACHE", dir);
+    }
 }
 
 /// Apply the shared sharding/persistence flags to a sweep spec.
@@ -408,8 +437,9 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "model", "schedules", "policy", "qmaxes", "trials", "steps",
         "cycles", "jobs", "csv", "verbose", "shard", "run-dir", "resume",
-        "claim",
+        "claim", "aot-cache",
     ])?;
+    apply_aot_flag(cli);
     let model = cli.require("model")?;
     let rec = recipes::recipe(model)?;
     let mut spec = SweepSpec::new(model);
@@ -503,8 +533,9 @@ fn report_campaign(
 fn cmd_campaign(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
-        "scheduler", "policy", "claim",
+        "scheduler", "policy", "claim", "aot-cache",
     ])?;
+    apply_aot_flag(cli);
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
     let mut cspec = CampaignSpec::from_toml(&doc)?;
@@ -566,10 +597,14 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
     }
     if let Some(sc) = &result.scheduler {
         println!(
-            "global scheduler: {} worker(s), {} compile(s) ({:.2}s compiling)",
+            "global scheduler: {} worker(s), {} compile(s) ({:.2}s \
+             compiling), {} cache hit(s) ({} from disk), {} miss(es)",
             sc.jobs,
             sc.total_compiles(),
-            sc.total_compile_seconds()
+            sc.total_compile_seconds(),
+            sc.total_hits(),
+            sc.total_disk_hits(),
+            sc.total_misses()
         );
     }
     println!(
@@ -740,15 +775,26 @@ fn cmd_status(cli: &Cli) -> Result<()> {
             if let Some(sc) = &c.scheduler {
                 println!(
                     "  scheduler: {} worker(s), {} compile(s) ({:.2}s \
-                     compiling) in the last global run",
+                     compiling), {} cache hit(s) ({} from disk), {} \
+                     miss(es) in the last global run",
                     sc.jobs,
                     sc.total_compiles(),
-                    sc.total_compile_seconds()
+                    sc.total_compile_seconds(),
+                    sc.total_hits(),
+                    sc.total_disk_hits(),
+                    sc.total_misses()
                 );
                 for w in &sc.workers {
                     println!(
-                        "    worker {}: {} cell(s), {} compile(s) ({:.2}s)",
-                        w.worker, w.cells, w.compiles, w.compile_seconds
+                        "    worker {}: {} cell(s), {} compile(s) \
+                         ({:.2}s), {} hit(s), {} disk hit(s), {} miss(es)",
+                        w.worker,
+                        w.cells,
+                        w.compiles,
+                        w.compile_seconds,
+                        w.hits,
+                        w.disk_hits,
+                        w.misses
                     );
                 }
             }
@@ -766,9 +812,12 @@ fn cmd_status(cli: &Cli) -> Result<()> {
 fn cmd_gc(cli: &Cli) -> Result<()> {
     cli.check_known(&[])?;
     if cli.positional.len() != 1 {
-        bail!("usage: cpt gc RUN_DIR_OR_CAMPAIGN_ROOT");
+        bail!("usage: cpt gc RUN_DIR_OR_CAMPAIGN_ROOT_OR_CACHE_DIR");
     }
     let dir = Path::new(&cli.positional[0]);
+    if aot::is_cache_dir(dir) {
+        return gc_cache_dir(dir, aot::cache_cap_from_env()?);
+    }
     let all = campaign::gc(dir)?;
     let (mut cells, mut compacted, mut orphaned, mut before, mut after) =
         (0usize, 0usize, 0usize, 0u64, 0u64);
@@ -800,6 +849,84 @@ fn cmd_gc(cli: &Cli) -> Result<()> {
         dir.display()
     );
     Ok(())
+}
+
+/// Shared by `cpt gc CACHE_DIR` and `cpt cache gc`.
+fn gc_cache_dir(dir: &Path, cap: Option<u64>) -> Result<()> {
+    let st = aot::AotStore::open(dir)?.gc(cap)?;
+    let budget = match cap {
+        Some(b) => format!(" (budget {b} bytes)"),
+        None => " (no byte budget: set CPT_AOT_CACHE_CAP or pass --cap)"
+            .to_string(),
+    };
+    println!(
+        "gc {}: {} entr{} kept, {} evicted, {} orphaned tmp file(s) \
+         removed, {} -> {} bytes{budget}",
+        dir.display(),
+        st.cells,
+        if st.cells == 1 { "y" } else { "ies" },
+        st.evicted,
+        st.orphaned_tmp,
+        st.bytes_before,
+        st.bytes_after,
+    );
+    Ok(())
+}
+
+fn cmd_cache(cli: &Cli) -> Result<()> {
+    cli.check_known(&["aot-cache", "cap"])?;
+    if cli.positional.len() != 1 {
+        bail!("usage: cpt cache status|gc [--aot-cache DIR] [--cap BYTES]");
+    }
+    let dir = match cli.flag("aot-cache") {
+        Some(d) => PathBuf::from(d),
+        None => aot::cache_dir_from_env()?.context(
+            "no cache dir: pass --aot-cache DIR or set CPT_AOT_CACHE",
+        )?,
+    };
+    match cli.positional[0].as_str() {
+        "status" => {
+            let status = aot::AotStore::open(&dir)?.status()?;
+            println!("AOT executable cache at {}", dir.display());
+            match cpt::runtime::exec_serialization_support() {
+                Ok(()) => println!("  serialization support: available"),
+                Err(reason) => println!(
+                    "  serialization support: unavailable — {reason}; \
+                     runs fall back to plain compiles"
+                ),
+            }
+            for e in &status.entries {
+                let note = match &e.problem {
+                    Some(p) => format!("  — {p}"),
+                    None => String::new(),
+                };
+                println!(
+                    "  entry {}  model {}  platform {}  cpt {}  {} \
+                     payload(s)  {} bytes{note}",
+                    e.id, e.model, e.platform, e.cpt_version, e.payloads,
+                    e.bytes
+                );
+            }
+            println!(
+                "  total: {} entr{}, {} bytes",
+                status.entries.len(),
+                if status.entries.len() == 1 { "y" } else { "ies" },
+                status.total_bytes
+            );
+            Ok(())
+        }
+        "gc" => {
+            let cap = match cli.flag("cap") {
+                Some(c) => Some(
+                    c.parse::<u64>()
+                        .with_context(|| format!("bad --cap '{c}'"))?,
+                ),
+                None => aot::cache_cap_from_env()?,
+            };
+            gc_cache_dir(&dir, cap)
+        }
+        other => bail!("unknown cache action '{other}' (known: status, gc)"),
+    }
 }
 
 fn cmd_merge(cli: &Cli) -> Result<()> {
@@ -913,7 +1040,9 @@ fn cmd_range_test(cli: &Cli) -> Result<()> {
 fn cmd_preset(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "shard", "run-dir", "resume", "jobs", "verbose", "policy",
+        "aot-cache",
     ])?;
+    apply_aot_flag(cli);
     let path = cli.require("file")?;
     let doc = TomlDoc::load(path)?;
     // reject misspelled sections up front: a typo'd [sweep.policy] (or

@@ -1,0 +1,322 @@
+//! Persistent AOT executable cache, exercised entirely through
+//! fabricated runners over a REAL `AotStore` (no PJRT — the CI
+//! `test-unit` tier): a second "process" (fresh worker pool, empty
+//! in-memory caches) over a populated cache dir must warm-start with
+//! zero compiles, a corrupted cache must recompile and never change
+//! results, and the hit/disk-hit/miss accounting must land in the
+//! campaign manifest.
+
+mod common;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use common::{fab_outcome, tmp_dir};
+use cpt::coordinator::aot::{AotKey, AotStore};
+use cpt::coordinator::campaign::{
+    read_campaign_manifest, run_campaign_global, CampaignMember,
+    CampaignRunOpts, SchedulerKind,
+};
+use cpt::coordinator::exec::{CacheStats, CellError, CellRunner, ExecMember};
+use cpt::prelude::*;
+
+/// Deterministic stand-in for serialized executable bytes: derived from
+/// the fingerprint, so a cross-wired cache entry cannot pass by
+/// coincidence (the stale-bytes fence below compares against these).
+fn fab_payloads(fingerprint: &str) -> Vec<(String, Vec<u8>)> {
+    vec![
+        ("init".into(), format!("init<{fingerprint}>").into_bytes()),
+        ("train".into(), format!("train<{fingerprint}>").into_bytes()),
+    ]
+}
+
+/// Fabricated worker backend mirroring `PjrtCellRunner`'s two-level
+/// lookup at the bytes level: in-memory list, then the real disk store,
+/// then a "compile" that publishes its payloads for future processes.
+struct FabAotRunner {
+    store: AotStore,
+    mem: Vec<String>,
+    compiles: usize,
+    cache: CacheStats,
+}
+
+impl FabAotRunner {
+    fn new(cache_dir: &Path) -> Result<FabAotRunner> {
+        Ok(FabAotRunner {
+            store: AotStore::open(cache_dir)?,
+            mem: Vec::new(),
+            compiles: 0,
+            cache: CacheStats::default(),
+        })
+    }
+
+    fn key(fingerprint: &str) -> AotKey {
+        AotKey::new(fingerprint, "fab", "fab-exe-v1")
+    }
+}
+
+impl CellRunner for FabAotRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        let fp = &member.fingerprint;
+        if self.mem.contains(fp) {
+            self.cache.hits += 1;
+        } else {
+            self.cache.misses += 1;
+            let key = Self::key(fp);
+            match self.store.load(&key) {
+                Some(payloads) => {
+                    // stale-bytes fence: whatever the store serves must
+                    // be exactly what a compile of this model produces
+                    assert_eq!(
+                        payloads,
+                        fab_payloads(fp),
+                        "cache served foreign bytes for '{fp}'"
+                    );
+                    self.cache.disk_hits += 1;
+                }
+                None => {
+                    self.compiles += 1;
+                    // racing workers may lose the publish — that's fine,
+                    // the entry is whole either way
+                    self.store
+                        .publish(&key, &member.model, &fab_payloads(fp))
+                        .map_err(CellError::Setup)?;
+                }
+            }
+            self.mem.push(fp.clone());
+        }
+        Ok(fab_outcome(&member.model, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.compiles, 0.0)
+    }
+
+    fn has_cached(&self, fingerprint: &str) -> bool {
+        self.mem.iter().any(|f| f == fingerprint)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache
+    }
+}
+
+fn member(
+    name: &str,
+    model: &str,
+    schedules: &[&str],
+    steps: usize,
+) -> CampaignMember {
+    let mut s = SweepSpec::new(model);
+    s.schedules = schedules.iter().map(|x| x.to_string()).collect();
+    s.q_maxes = vec![8.0];
+    s.trials = 1;
+    s.steps = Some(steps);
+    CampaignMember { name: name.into(), spec: s, jobs: None }
+}
+
+/// Two members sharing one model plus one on its own model — both the
+/// shared-executable case and the multi-entry cache case.
+fn campaign_spec() -> CampaignSpec {
+    CampaignSpec {
+        name: "aotwarm".into(),
+        run_dir: None,
+        members: vec![
+            member("a", "mlp", &["CR", "RR"], 8),
+            member("b", "mlp", &["CR", "STATIC"], 10),
+            member("c", "cnn_tiny", &["CR"], 8),
+        ],
+    }
+}
+
+fn fingerprints_for(cspec: &CampaignSpec) -> HashMap<String, String> {
+    cspec
+        .members
+        .iter()
+        .map(|m| (m.spec.model.clone(), format!("fp-{}", m.spec.model)))
+        .collect()
+}
+
+fn opts(root: &Path, jobs: usize) -> CampaignRunOpts {
+    CampaignRunOpts {
+        root: root.to_path_buf(),
+        shard: ShardId::single(),
+        jobs,
+        resume: false,
+        verbose: false,
+        scheduler: SchedulerKind::Global,
+    }
+}
+
+fn fab_member_outcomes(m: &CampaignMember) -> Vec<RunOutcome> {
+    let plan = SweepPlan::build(&m.spec).unwrap();
+    plan.cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| fab_outcome(&m.spec.model, c, i))
+        .collect()
+}
+
+fn write_csvs(dir: &Path, members: &[(String, Vec<RunOutcome>)]) {
+    let mut keyed = Vec::new();
+    for (name, outs) in members {
+        let rows = aggregate(outs);
+        SweepReport::new(name, "metric", true)
+            .write_csv_stable(&rows, dir.join(format!("{name}.csv")))
+            .unwrap();
+        keyed.push((name.clone(), rows));
+    }
+    SweepReport::write_campaign_csv(&keyed, dir.join("campaign.csv")).unwrap();
+}
+
+/// Run the fabricated campaign as one "process" against `cache`.
+fn run_process(
+    root: &Path,
+    cache: &Path,
+    jobs: usize,
+) -> cpt::coordinator::campaign::CampaignRunResult {
+    let cspec = campaign_spec();
+    let plan = CampaignPlan::build(&cspec).unwrap();
+    let fps = fingerprints_for(&cspec);
+    run_campaign_global(&plan, &opts(root, jobs), &fps, None, |_| {
+        FabAotRunner::new(cache)
+    })
+    .unwrap()
+}
+
+fn assert_ground_truth(result: &cpt::coordinator::campaign::CampaignRunResult) {
+    let cspec = campaign_spec();
+    assert_eq!(result.members.len(), cspec.members.len());
+    for (m, cm) in result.members.iter().zip(&cspec.members) {
+        assert_eq!(m.name, cm.name);
+        common::assert_outcomes_identical(&fab_member_outcomes(cm), &m.outcomes);
+    }
+}
+
+fn keyed(
+    r: &cpt::coordinator::campaign::CampaignRunResult,
+) -> Vec<(String, Vec<RunOutcome>)> {
+    r.members
+        .iter()
+        .map(|m| (m.name.clone(), m.outcomes.clone()))
+        .collect()
+}
+
+/// Append garbage to every payload file under the cache dir.
+fn corrupt_all_payloads(cache: &Path) -> usize {
+    let mut hit = 0;
+    let mut stack = vec![cache.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for e in std::fs::read_dir(&d).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "bin") {
+                let mut bytes = std::fs::read(&p).unwrap();
+                bytes.extend_from_slice(b"CORRUPT");
+                std::fs::write(&p, &bytes).unwrap();
+                hit += 1;
+            }
+        }
+    }
+    hit
+}
+
+#[test]
+fn second_process_warm_starts_with_zero_compiles() {
+    let tmp = tmp_dir("aot_warm");
+    let cache = tmp.join("cache");
+
+    // cold process: every model compiles once (per worker at most), and
+    // the compiles are published
+    let cold = run_process(&tmp.join("cold"), &cache, 2);
+    assert_ground_truth(&cold);
+    let sc_cold = cold.scheduler.as_ref().expect("scheduler stats");
+    assert!(sc_cold.total_compiles() >= 2, "two models must compile");
+
+    // warm process: fresh root, fresh workers with empty in-memory
+    // caches — every first-touch of a model is a disk hit, zero compiles
+    let warm = run_process(&tmp.join("warm"), &cache, 2);
+    assert_ground_truth(&warm);
+    let sc_warm = warm.scheduler.as_ref().expect("scheduler stats");
+    assert_eq!(sc_warm.total_compiles(), 0, "warm start must not compile");
+    assert!(sc_warm.total_disk_hits() >= 2, "disk must serve both models");
+
+    // accounting invariant and manifest round-trip of the new fields
+    for sc in [sc_cold, sc_warm] {
+        for w in &sc.workers {
+            assert_eq!(
+                w.misses,
+                w.disk_hits + w.compiles,
+                "each LRU miss is a disk hit or a compile: {w:?}"
+            );
+        }
+    }
+    let recorded = read_campaign_manifest(&tmp.join("warm"))
+        .unwrap()
+        .scheduler
+        .expect("scheduler stats in manifest");
+    assert_eq!(&recorded, sc_warm);
+
+    // results are byte-identical between cold and warm execution
+    let (d_cold, d_warm) = (tmp.join("csv_cold"), tmp.join("csv_warm"));
+    write_csvs(&d_cold, &keyed(&cold));
+    write_csvs(&d_warm, &keyed(&warm));
+    for f in ["a.csv", "b.csv", "c.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(d_cold.join(f)).unwrap(),
+            std::fs::read(d_warm.join(f)).unwrap(),
+            "{f} differs between cold and warm runs"
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn corrupted_cache_recompiles_and_results_are_identical() {
+    let tmp = tmp_dir("aot_corrupt");
+    let cache = tmp.join("cache");
+
+    let cold = run_process(&tmp.join("cold"), &cache, 2);
+    assert_ground_truth(&cold);
+    assert!(corrupt_all_payloads(&cache) >= 2, "cache must hold payloads");
+
+    // a process over the damaged cache falls back to compiling — no
+    // crash, no stale bytes (the runner's fence would panic), and
+    // byte-identical results
+    let after = run_process(&tmp.join("after"), &cache, 2);
+    assert_ground_truth(&after);
+    let sc = after.scheduler.as_ref().expect("scheduler stats");
+    assert_eq!(sc.total_disk_hits(), 0, "damaged entries must not serve");
+    assert!(sc.total_compiles() >= 2, "fallback must recompile");
+
+    let (d_cold, d_after) = (tmp.join("csv_cold"), tmp.join("csv_after"));
+    write_csvs(&d_cold, &keyed(&cold));
+    write_csvs(&d_after, &keyed(&after));
+    for f in ["a.csv", "b.csv", "c.csv", "campaign.csv"] {
+        assert_eq!(
+            std::fs::read(d_cold.join(f)).unwrap(),
+            std::fs::read(d_after.join(f)).unwrap(),
+            "{f} differs after cache corruption"
+        );
+    }
+
+    // damaged entries poison their keys (publish_exclusive cannot
+    // replace a manifest) — gc heals, and the next process repopulates
+    // and warm-starts again
+    let store = AotStore::open(&cache).unwrap();
+    let gc = store.gc(None).unwrap();
+    assert!(gc.evicted >= 2, "gc must remove the damaged entries: {gc:?}");
+    let repop = run_process(&tmp.join("repop"), &cache, 2);
+    assert!(repop.scheduler.unwrap().total_compiles() >= 2);
+    let rewarm = run_process(&tmp.join("rewarm"), &cache, 2);
+    assert_ground_truth(&rewarm);
+    assert_eq!(rewarm.scheduler.unwrap().total_compiles(), 0);
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -16,8 +16,9 @@
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
 #                               # integration files (tests/campaign.rs,
 #                               # tests/global_sched.rs, tests/policy.rs,
-#                               # tests/lease.rs); needs no AOT artifacts
-#                               # — the CI test-unit job runs this tier
+#                               # tests/lease.rs, tests/aot.rs); needs no
+#                               # HLO artifacts — the CI test-unit job
+#                               # runs this tier
 #   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
 #                               # + fig_policy + shard/merge, policy, and
 #                               # campaign smokes
@@ -77,6 +78,8 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --test policy
   echo "== cargo test -q --test lease (fabricated lease-based claiming)"
   cargo test -q --test lease
+  echo "== cargo test -q --test aot (fabricated persistent AOT cache)"
+  cargo test -q --test aot
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -310,6 +313,55 @@ EOF
       exit 1
     fi
     echo "claim smoke: dead + stalled claimers survived; outputs byte-identical to the static shards"
+
+    echo "== AOT warm-start smoke (one persistent cache dir, fresh processes)"
+    # The shared-model campaign twice against one CPT_AOT_CACHE dir. If
+    # the backend can serialize executables, the second process must
+    # report zero compiles (warm start straight from disk). The vendored
+    # binding currently cannot — the runtime says so once per process —
+    # which keeps the cache inert and soft-passes this gate. Either way,
+    # a further run over a deliberately corrupted cache must fall back
+    # to compiling, and every run's CSVs must be byte-identical to the
+    # cache-less ground truth above: the cache is an execution knob,
+    # never a result input.
+    AOT_DIR="$SMOKE_DIR/aotcache"
+    CPT_AOT_CACHE="$AOT_DIR" $CPT campaign --file "$CAMP_TOML" --run-dir "$SMOKE_DIR/aot1" \
+      --jobs 2 --scheduler global --csv-dir "$SMOKE_DIR/aotout1" >/dev/null 2>&1
+    AOT_OUT="$(CPT_AOT_CACHE="$AOT_DIR" $CPT campaign --file "$CAMP_TOML" --run-dir "$SMOKE_DIR/aot2" \
+      --jobs 2 --scheduler global --csv-dir "$SMOKE_DIR/aotout2" 2>&1)"
+    case "$AOT_OUT" in
+      *"cannot serialize executables"*)
+        echo "aot smoke: backend cannot serialize executables — cache inert, soft pass" ;;
+      *" 0 compile(s)"*)
+        echo "aot smoke: second process warm-started with zero compiles" ;;
+      *)
+        echo "check.sh: second process over a warm AOT cache still compiled" >&2
+        echo "$AOT_OUT" >&2
+        exit 1 ;;
+    esac
+    if [ -d "$AOT_DIR" ]; then
+      for f in "$AOT_DIR"/*/*.bin; do
+        [ -e "$f" ] || continue
+        printf 'CORRUPT' >> "$f"
+      done
+    fi
+    CPT_AOT_CACHE="$AOT_DIR" $CPT campaign --file "$CAMP_TOML" --run-dir "$SMOKE_DIR/aot3" \
+      --jobs 2 --scheduler global --csv-dir "$SMOKE_DIR/aotout3" >/dev/null 2>&1
+    for d in aotout1 aotout2 aotout3; do
+      for f in a.csv b.csv c.csv campaign.csv; do
+        if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/$d/$f"; then
+          echo "check.sh: $d/$f differs from the cache-less ground truth" >&2
+          exit 1
+        fi
+      done
+    done
+    # cache maintenance CLI over the same dir (creates it when the
+    # backend never populated it): status, budgeted gc, and the generic
+    # gc entry point routed by the cache marker
+    $CPT cache status --aot-cache "$AOT_DIR" | grep -q "serialization support:"
+    $CPT cache gc --aot-cache "$AOT_DIR" >/dev/null
+    $CPT gc "$AOT_DIR" >/dev/null
+    echo "aot smoke: CSVs byte-identical across cold, warm, and corrupted-cache runs"
 
     echo "== fig_campaign_sched bench (executable-cache compile accounting)"
     cargo bench --bench fig_campaign_sched
