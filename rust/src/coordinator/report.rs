@@ -214,6 +214,27 @@ impl<'a> SweepReport<'a> {
     }
 }
 
+/// Write the canonical campaign CSV tree under `dir`: one stable
+/// per-member CSV (`<member>.csv`) plus the keyed `campaign.csv`. This
+/// is THE path for campaign results — `cpt campaign` reports through it
+/// and `cpt serve` caches its output, so a fetched serve result is
+/// byte-identical to a direct run of the same spec. Returns the
+/// aggregated rows keyed by member, for printing.
+pub fn write_campaign_csv_tree<'m>(
+    dir: &Path,
+    members: impl IntoIterator<Item = (&'m str, &'m [RunOutcome])>,
+) -> Result<Vec<(String, Vec<AggRow>)>> {
+    let mut keyed: Vec<(String, Vec<AggRow>)> = Vec::new();
+    for (name, outs) in members {
+        let rows = super::aggregate(outs);
+        SweepReport::new(name, "metric", true)
+            .write_csv_stable(&rows, dir.join(format!("{name}.csv")))?;
+        keyed.push((name.to_string(), rows));
+    }
+    SweepReport::write_campaign_csv(&keyed, dir.join("campaign.csv"))?;
+    Ok(keyed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

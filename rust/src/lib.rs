@@ -13,7 +13,9 @@
 //!   policies (feedback-driven q_t — see [`policy`] and
 //!   rust/DESIGN-policy.md), PJRT runtime, trainer, synthetic datasets,
 //!   BitOps accounting (including exact realized-trace cost figures) and
-//!   the experiment coordinator. Python never runs at training time.
+//!   the experiment coordinator, plus a long-running campaign service
+//!   with spec-hash result caching (`cpt serve` — see [`server`] and
+//!   rust/DESIGN-serve.md). Python never runs at training time.
 //!
 //! Quick start:
 //! ```no_run
@@ -39,6 +41,7 @@ pub mod policy;
 pub mod quant;
 pub mod runtime;
 pub mod schedule;
+pub mod server;
 pub mod trainer;
 pub mod util;
 

@@ -14,7 +14,17 @@
 //!   merge     DIR...             validate + combine shard run dirs — or
 //!                                campaign roots — into the aggregate CSVs
 //!   status    DIR                report done/remaining cells and per-cell
-//!                                wall-clock for a run dir or campaign root
+//!                                wall-clock for a run dir or campaign
+//!                                root; on a serve root: job tickets and
+//!                                states
+//!   serve     --root DIR [...]   long-running campaign service: accepts
+//!                                specs over localhost TCP, dedupes by
+//!                                spec hash, caches finished CSVs
+//!   submit    --connect A --file F.toml   submit a campaign spec to a
+//!                                running `cpt serve` (ticket = spec hash)
+//!   jobs      --connect A        list a serve daemon's jobs
+//!   result    --connect A --ticket T     fetch a finished job's CSVs
+//!   shutdown  --connect A        stop a serve daemon cleanly
 //!   gc        DIR                compact artifacts (strip per-step
 //!                                histories; aggregates are unchanged);
 //!                                on an AOT cache dir: sweep + evict
@@ -35,11 +45,12 @@ use cpt::coordinator::campaign::{
 };
 use cpt::coordinator::lease::{self, ClaimConfig, Clock, SystemClock};
 use cpt::coordinator::{
-    self, merge_run_dirs, recipes, AggRow, ClaimerId, RunOutcome, ShardId,
+    self, merge_run_dirs, recipes, ClaimerId, RunOutcome, ShardId,
 };
 use cpt::prelude::*;
 use cpt::quant::range_test;
 use cpt::schedule::relative_cost;
+use cpt::server::{self, Client, JobState, ServeConfig, ServeOpts, Server};
 use cpt::{artifacts_dir, config::toml::TomlDoc, results_dir};
 
 fn main() {
@@ -63,6 +74,11 @@ fn run() -> Result<()> {
         "cache" => cmd_cache(&cli),
         "range-test" => cmd_range_test(&cli),
         "preset" => cmd_preset(&cli),
+        "serve" => cmd_serve(&cli),
+        "submit" => cmd_submit(&cli),
+        "jobs" => cmd_jobs(&cli),
+        "result" => cmd_result(&cli),
+        "shutdown" => cmd_shutdown(&cli),
         "" | "help" => {
             print_help();
             Ok(())
@@ -148,7 +164,41 @@ USAGE: cpt <subcommand> [flags]
                                 recorded per-cell wall-clock, and (on
                                 policy-era manifests) realized mean
                                 q/qmax + relative cost, for one sweep
-                                run dir or a whole campaign root
+                                run dir or a whole campaign root; on a
+                                serve root: every job's ticket, state
+                                and done/planned cells from the durable
+                                job records
+  serve --root DIR [--listen 127.0.0.1:0] [--jobs N] [--file F.toml]
+        [--verbose] [--aot-cache DIR]
+                                long-running campaign service: accepts
+                                campaign specs over a line-delimited
+                                JSON protocol on localhost TCP (bound
+                                address published to <root>/serve-addr),
+                                runs each through the global scheduler
+                                into jobs/<ticket>/run, and caches the
+                                finished CSV tree; the ticket is the
+                                spec's campaign hash, so identical
+                                submissions dedupe — in-flight jobs are
+                                attached to, finished ones answer from
+                                the store with zero new compiles/cells;
+                                interrupted jobs resume on restart;
+                                --file reads a [serve] table (root,
+                                listen, jobs), CLI flags win
+  submit --connect HOST:PORT --file configs/X.toml [--wait]
+         [--out DIR] [--poll-ms N]
+                                submit a campaign spec to a running
+                                serve daemon; prints the job ticket and
+                                whether it deduped; --wait polls to
+                                completion; --out fetches the CSVs
+                                (implies --wait)
+  jobs --connect HOST:PORT      list the daemon's jobs (ticket, state,
+                                done/planned cells, campaign name)
+  result --connect HOST:PORT --ticket T [--out DIR]
+                                fetch a finished job's CSV tree (default
+                                out dir: <results>/serve_<ticket>)
+  shutdown --connect HOST:PORT  stop the daemon after the in-flight job;
+                                queued jobs stay durable and resume on
+                                the next `cpt serve` of the same root
   gc DIR                        compact recorded cell artifacts (strip
                                 per-step histories, keep every scalar);
                                 merged/aggregate CSVs are byte-identical
@@ -508,20 +558,21 @@ fn report_campaign(
         .flag("csv-dir")
         .map(PathBuf::from)
         .unwrap_or_else(|| results_dir().join(format!("campaign_{name}")));
-    let mut keyed: Vec<(String, Vec<AggRow>)> = Vec::new();
-    for (member, model, outs) in members {
+    // one writer for the whole CSV tree, shared with `cpt serve`'s
+    // result cache, so served results stay byte-identical to this path
+    let keyed = coordinator::report::write_campaign_csv_tree(
+        &csv_dir,
+        members.iter().map(|(m, _, outs)| (m.as_str(), outs.as_slice())),
+    )?;
+    for ((member, model, _), (_, rows)) in members.iter().zip(&keyed) {
         let rec = recipes::recipe(model)?;
-        let rows = aggregate(outs);
-        let rep = SweepReport::new(
+        SweepReport::new(
             &format!("campaign {name} · {member} ({model})"),
             "metric",
             rec.higher_is_better,
-        );
-        rep.print(&rows);
-        rep.write_csv_stable(&rows, csv_dir.join(format!("{member}.csv")))?;
-        keyed.push((member.clone(), rows));
+        )
+        .print(rows);
     }
-    SweepReport::write_campaign_csv(&keyed, csv_dir.join("campaign.csv"))?;
     println!(
         "\nwrote {} member CSV(s) + campaign.csv under {}",
         members.len(),
@@ -692,6 +743,23 @@ fn cmd_status(cli: &Cli) -> Result<()> {
         bail!("usage: cpt status RUN_DIR_OR_CAMPAIGN_ROOT [--cells]");
     }
     let dir = Path::new(&cli.positional[0]);
+    // a serve root is neither a sweep run dir nor a campaign root: it
+    // reports job tickets and states from its durable job records (live
+    // progress for a running job comes from the nested campaign root)
+    if server::jobs::is_serve_root(dir) {
+        if cli.bool("cells") {
+            eprintln!(
+                "note: --cells applies to a single sweep run dir; a serve \
+                 root reports per-job totals"
+            );
+        }
+        let views = server::jobs::serve_status(dir)?;
+        println!("serve root {} ({} job(s))", dir.display(), views.len());
+        if !views.is_empty() {
+            print_job_views(&views);
+        }
+        return Ok(());
+    }
     match campaign::status(dir)? {
         Status::Sweep(m) => {
             println!(
@@ -1112,4 +1180,138 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
         .to_string();
     let csv = results_dir().join(format!("{title}.csv"));
     report_sweep(&title, rec.higher_is_better, &spec, &outs, timing, &csv, false)
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    cli.check_known(&["root", "listen", "jobs", "file", "verbose", "aot-cache"])?;
+    apply_aot_flag(cli);
+    let cfg = match cli.flag("file") {
+        Some(path) => ServeConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => ServeConfig::default(),
+    };
+    let root = cli
+        .flag("root")
+        .map(PathBuf::from)
+        .or(cfg.root)
+        .context(
+            "cpt serve needs its root directory: pass --root or set root \
+             in [serve] of --file",
+        )?;
+    let listen = cli
+        .flag("listen")
+        .map(str::to_string)
+        .or(cfg.listen)
+        .unwrap_or_else(|| server::DEFAULT_LISTEN.to_string());
+    let jobs = match cli.flag("jobs") {
+        Some(_) => cli.usize_or("jobs", 1)?,
+        None => cfg.jobs.unwrap_or_else(cpt::default_jobs),
+    };
+    let manifest = Manifest::load(artifacts_dir())?;
+    let exec: server::CampaignExec = std::sync::Arc::new(move |plan, opts| {
+        run_campaign(&manifest, plan, opts)
+    });
+    let srv = Server::start(
+        ServeOpts {
+            root: root.clone(),
+            listen,
+            jobs,
+            verbose: cli.bool("verbose"),
+        },
+        exec,
+        std::sync::Arc::new(SystemClock),
+    )?;
+    println!(
+        "cpt serve listening on {} (root {}; address also in {})",
+        srv.addr(),
+        root.display(),
+        root.join(server::jobs::SERVE_ADDR_FILE).display()
+    );
+    srv.wait()
+}
+
+fn cmd_submit(cli: &Cli) -> Result<()> {
+    cli.check_known(&["connect", "file", "wait", "out", "poll-ms"])?;
+    let addr = cli.require("connect")?;
+    let path = cli.require("file")?;
+    let spec_toml = std::fs::read_to_string(path)
+        .with_context(|| format!("read campaign spec {path}"))?;
+    let mut client = Client::connect(addr)?;
+    let (ticket, state, attached) = client.submit(&spec_toml)?;
+    match (attached, state) {
+        (true, JobState::Done) => println!(
+            "ticket {ticket}: cache hit — result served from the store \
+             (zero new cells)"
+        ),
+        (true, _) => println!(
+            "ticket {ticket}: deduped — attached to the existing {state} job"
+        ),
+        (false, _) => println!("ticket {ticket}: queued"),
+    }
+    if cli.bool("wait") || cli.flag("out").is_some() {
+        let poll_ms = cli.usize_or("poll-ms", 500)? as u64;
+        let v = client.wait_done(&ticket, poll_ms)?;
+        println!("job {ticket} done ({} cell(s) planned)", v.planned);
+        if let Some(out) = cli.flag("out") {
+            let out = PathBuf::from(out);
+            let files = client.fetch_result(&ticket, &out)?;
+            println!(
+                "wrote {} CSV file(s) under {}",
+                files.len(),
+                out.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_job_views(jobs: &[server::JobView]) {
+    println!(
+        "{:<18} {:<8} {:>13}  {}",
+        "ticket", "state", "done/planned", "name"
+    );
+    for j in jobs {
+        let done =
+            j.done.map(|d| d.to_string()).unwrap_or_else(|| "?".to_string());
+        println!(
+            "{:<18} {:<8} {:>6}/{:<6}  {}",
+            j.ticket, j.state, done, j.planned, j.name
+        );
+        if let Some(e) = &j.error {
+            println!("    error: {e}");
+        }
+    }
+}
+
+fn cmd_jobs(cli: &Cli) -> Result<()> {
+    cli.check_known(&["connect"])?;
+    let mut client = Client::connect(cli.require("connect")?)?;
+    let jobs = client.jobs()?;
+    if jobs.is_empty() {
+        println!("no jobs submitted");
+        return Ok(());
+    }
+    print_job_views(&jobs);
+    Ok(())
+}
+
+fn cmd_result(cli: &Cli) -> Result<()> {
+    cli.check_known(&["connect", "ticket", "out"])?;
+    let addr = cli.require("connect")?;
+    let ticket = cli.require("ticket")?;
+    let out = cli
+        .flag("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| results_dir().join(format!("serve_{ticket}")));
+    let mut client = Client::connect(addr)?;
+    let files = client.fetch_result(ticket, &out)?;
+    println!("wrote {} CSV file(s) under {}", files.len(), out.display());
+    Ok(())
+}
+
+fn cmd_shutdown(cli: &Cli) -> Result<()> {
+    cli.check_known(&["connect"])?;
+    let mut client = Client::connect(cli.require("connect")?)?;
+    client.shutdown()?;
+    println!("server acknowledged shutdown");
+    Ok(())
 }

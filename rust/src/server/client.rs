@@ -1,0 +1,153 @@
+//! Blocking client for the `cpt serve` protocol. One request in flight
+//! at a time per connection; replies arrive in request order, so a
+//! plain call/response loop is all the state we need.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::jobs::{JobState, JobView};
+use super::proto::{self, Request, Response};
+use crate::util;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let writer = TcpStream::connect(addr)
+            .with_context(|| format!("connect to cpt serve at {addr}"))?;
+        let reader = BufReader::new(
+            writer.try_clone().context("clone connection for reading")?,
+        );
+        Ok(Client { reader, writer })
+    }
+
+    /// One request/response round trip; transport and decode errors
+    /// only. A typed server error comes back as `Response::Error`.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        util::write_frame(
+            &mut self.writer,
+            proto::encode_request(req).as_bytes(),
+        )
+        .context("send request")?;
+        let frame = util::read_frame(&mut self.reader, proto::MAX_FRAME_BYTES)
+            .map_err(|e| anyhow::anyhow!("read reply: {e}"))?;
+        match frame {
+            Some(frame) => proto::decode_response(&frame),
+            None => bail!("server closed the connection without replying"),
+        }
+    }
+
+    /// Like [`Client::call`], but a typed server error becomes an
+    /// `Err` carrying its code and message.
+    pub fn call_ok(&mut self, req: &Request) -> Result<Response> {
+        match self.call(req)? {
+            Response::Error { code, message } => {
+                bail!("server error [{}]: {message}", code.as_str())
+            }
+            resp => Ok(resp),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call_ok(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => bail!("unexpected reply to ping: {other:?}"),
+        }
+    }
+
+    /// Submit a campaign spec. Returns `(ticket, state, attached)`;
+    /// `attached` means the spec deduped onto an existing job.
+    pub fn submit(
+        &mut self,
+        spec_toml: &str,
+    ) -> Result<(String, JobState, bool)> {
+        let req = Request::Submit { spec_toml: spec_toml.to_string() };
+        match self.call_ok(&req)? {
+            Response::Submitted { ticket, state, attached, .. } => {
+                Ok((ticket, state, attached))
+            }
+            other => bail!("unexpected reply to submit: {other:?}"),
+        }
+    }
+
+    pub fn status(&mut self, ticket: &str) -> Result<JobView> {
+        let req = Request::Status { ticket: ticket.to_string() };
+        match self.call_ok(&req)? {
+            Response::Status { job } => Ok(job),
+            other => bail!("unexpected reply to status: {other:?}"),
+        }
+    }
+
+    /// Poll until the job reaches a terminal state; `Failed` becomes an
+    /// `Err` carrying the job's recorded error.
+    pub fn wait_done(
+        &mut self,
+        ticket: &str,
+        poll_ms: u64,
+    ) -> Result<JobView> {
+        loop {
+            let v = self.status(ticket)?;
+            match v.state {
+                JobState::Done => return Ok(v),
+                JobState::Failed => bail!(
+                    "job {ticket} failed: {}",
+                    v.error.as_deref().unwrap_or("(no error recorded)")
+                ),
+                JobState::Queued | JobState::Running => {
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        poll_ms,
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Fetch a finished job's CSVs as `(file name, contents)` pairs.
+    pub fn result_files(
+        &mut self,
+        ticket: &str,
+    ) -> Result<Vec<(String, String)>> {
+        let req = Request::Result { ticket: ticket.to_string() };
+        match self.call_ok(&req)? {
+            Response::ResultFiles { files, .. } => Ok(files),
+            other => bail!("unexpected reply to result: {other:?}"),
+        }
+    }
+
+    /// Fetch a finished job's CSVs into `out_dir`, returning the paths
+    /// written (atomically, so a re-fetch never tears a file).
+    pub fn fetch_result(
+        &mut self,
+        ticket: &str,
+        out_dir: &Path,
+    ) -> Result<Vec<PathBuf>> {
+        let files = self.result_files(ticket)?;
+        let mut written = Vec::with_capacity(files.len());
+        for (name, contents) in &files {
+            let path = out_dir.join(name);
+            util::write_atomic(&path, contents.as_bytes())?;
+            written.push(path);
+        }
+        Ok(written)
+    }
+
+    pub fn jobs(&mut self) -> Result<Vec<JobView>> {
+        match self.call_ok(&Request::Jobs)? {
+            Response::Jobs { jobs } => Ok(jobs),
+            other => bail!("unexpected reply to jobs: {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call_ok(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => bail!("unexpected reply to shutdown: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,530 @@
+//! The `cpt serve` daemon: a TCP accept loop, one connection-handler
+//! thread per client, and a single executor thread that drains the job
+//! queue through the existing campaign machinery (global worker pool,
+//! nested `RunStore` dirs, resume-on-reopen).
+//!
+//! Execution is injected as a [`CampaignExec`] closure so the whole
+//! daemon — protocol, dedupe, job lifecycle, crash recovery — is
+//! testable with fabricated cell runners and no PJRT runtime;
+//! production wires `coordinator::campaign::run_campaign` over the
+//! artifact manifest.
+//!
+//! Dedupe semantics: the job ticket is the campaign content hash, and
+//! the daemon derives it server-side from the submitted spec bytes.
+//! Identical submissions therefore collide on the ticket — a queued or
+//! running job is attached to, and a done job answers straight from its
+//! `csv/` directory with zero new cells and zero new compiles.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::jobs::{self, JobRecord, JobState};
+use super::proto::{self, ErrorCode, Request, Response};
+use crate::config::toml::TomlDoc;
+use crate::coordinator::campaign::{
+    CampaignPlan, CampaignRunOpts, CampaignRunResult, CampaignSpec,
+    SchedulerKind,
+};
+use crate::coordinator::lease::Clock;
+use crate::coordinator::{report, ShardId};
+use crate::util::{self, FrameError};
+
+/// How accepted jobs are executed. Production: a closure over
+/// `run_campaign(&manifest, plan, opts)`. Tests: `run_campaign_global`
+/// with a fabricated `CellRunner` and an execution counter.
+pub type CampaignExec = Arc<
+    dyn Fn(&CampaignPlan, &CampaignRunOpts) -> Result<CampaignRunResult>
+        + Send
+        + Sync,
+>;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// The serve root (marker, job records, nested campaign roots).
+    pub root: PathBuf,
+    /// Bind address, e.g. `127.0.0.1:0` (the bound address — with the
+    /// real port — is written to `<root>/serve-addr`).
+    pub listen: String,
+    /// Worker-pool size for each job's global scheduler.
+    pub jobs: usize,
+    pub verbose: bool,
+}
+
+struct ServeState {
+    jobs: HashMap<String, JobRecord>,
+    /// Tickets awaiting execution, FIFO.
+    queue: VecDeque<String>,
+    /// Built plans for queued jobs (moved out when execution starts).
+    plans: HashMap<String, CampaignPlan>,
+}
+
+struct Inner {
+    root: PathBuf,
+    exec_jobs: usize,
+    verbose: bool,
+    exec: CampaignExec,
+    clock: Arc<dyn Clock>,
+    state: Mutex<ServeState>,
+    wake: Condvar,
+    stop: AtomicBool,
+    addr: String,
+}
+
+/// A running daemon. Dropping it does NOT stop the threads — call
+/// [`Server::wait`] (blocks until a `shutdown` request arrives) or
+/// [`Server::stop`].
+pub struct Server {
+    inner: Arc<Inner>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Initialize the root, recover interrupted jobs, bind, publish the
+    /// bound address, and spawn the accept + executor threads.
+    pub fn start(
+        opts: ServeOpts,
+        exec: CampaignExec,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Server> {
+        jobs::init_serve_root(&opts.root)?;
+        let mut state = ServeState {
+            jobs: HashMap::new(),
+            queue: VecDeque::new(),
+            plans: HashMap::new(),
+        };
+        // Crash recovery: a job found `running` belongs to a dead
+        // daemon. Demote it to `queued`; the nested campaign root
+        // resumes every cell it recorded before the crash.
+        for mut rec in jobs::list_jobs(&opts.root)? {
+            if !rec.state.is_terminal() {
+                match recover_plan(&opts.root, &rec) {
+                    Ok(plan) => {
+                        if rec.state != JobState::Queued {
+                            rec.state = JobState::Queued;
+                            rec.store(&opts.root)?;
+                        }
+                        state.plans.insert(rec.ticket.clone(), plan);
+                        state.queue.push_back(rec.ticket.clone());
+                    }
+                    Err(e) => {
+                        rec.state = JobState::Failed;
+                        rec.error = Some(format!("recovery: {e:#}"));
+                        rec.finished = Some(clock.now());
+                        rec.store(&opts.root)?;
+                    }
+                }
+            }
+            state.jobs.insert(rec.ticket.clone(), rec);
+        }
+        let listener = TcpListener::bind(opts.listen.as_str())
+            .with_context(|| format!("bind {}", opts.listen))?;
+        let addr = listener
+            .local_addr()
+            .context("read bound address")?
+            .to_string();
+        util::write_atomic(
+            opts.root.join(jobs::SERVE_ADDR_FILE),
+            addr.as_bytes(),
+        )?;
+        let inner = Arc::new(Inner {
+            root: opts.root,
+            exec_jobs: opts.jobs,
+            verbose: opts.verbose,
+            exec,
+            clock,
+            state: Mutex::new(state),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            addr,
+        });
+        let executor = {
+            let inner = inner.clone();
+            std::thread::spawn(move || executor_loop(&inner))
+        };
+        let accept = {
+            let inner = inner.clone();
+            std::thread::spawn(move || accept_loop(&inner, listener))
+        };
+        Ok(Server { inner, accept: Some(accept), executor: Some(executor) })
+    }
+
+    /// The bound address (host:port), useful with `--listen *:0`.
+    pub fn addr(&self) -> &str {
+        &self.inner.addr
+    }
+
+    /// Ask the daemon to stop (same path as the `shutdown` verb).
+    pub fn stop(&self) {
+        trigger_stop(&self.inner);
+    }
+
+    /// Block until the daemon stops (a `shutdown` request or
+    /// [`Server::stop`]), then join both threads.
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow!("accept thread panicked"))?;
+        }
+        if let Some(h) = self.executor.take() {
+            h.join().map_err(|_| anyhow!("executor thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse + validate a submitted spec and build its plan. The plan's
+/// `campaign_hash` is the job ticket.
+fn build_plan(spec_toml: &str) -> Result<CampaignPlan> {
+    let doc = TomlDoc::parse(spec_toml).context("parse campaign TOML")?;
+    let spec = CampaignSpec::from_toml(&doc)?;
+    CampaignPlan::build(&spec)
+}
+
+/// Rebuild a recovered job's plan from its persisted spec bytes, and
+/// fence it against the recorded ticket — a content mismatch means the
+/// job dir was tampered with or half-written, so the job fails rather
+/// than executing the wrong spec under a cached ticket.
+fn recover_plan(root: &std::path::Path, rec: &JobRecord) -> Result<CampaignPlan> {
+    let path = jobs::job_dir(root, &rec.ticket).join(jobs::JOB_SPEC_FILE);
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let plan = build_plan(&src)?;
+    if plan.campaign_hash != rec.ticket {
+        bail!(
+            "persisted spec hashes to {}, job record says {}",
+            plan.campaign_hash,
+            rec.ticket
+        );
+    }
+    Ok(plan)
+}
+
+fn trigger_stop(inner: &Arc<Inner>) {
+    inner.stop.store(true, Ordering::SeqCst);
+    inner.wake.notify_all();
+    // the accept loop blocks in accept(2); a throwaway self-connection
+    // unblocks it so it can observe the stop flag
+    let _ = TcpStream::connect(inner.addr.as_str());
+}
+
+fn accept_loop(inner: &Arc<Inner>, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if inner.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let inner = inner.clone();
+                std::thread::spawn(move || handle_conn(&inner, stream));
+            }
+            // transient accept failures (peer reset mid-handshake, fd
+            // pressure) must not kill the daemon
+            Err(_) => continue,
+        }
+    }
+}
+
+fn send(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    util::write_frame(stream, proto::encode_response(resp).as_bytes())
+}
+
+/// One client connection: frames are handled in order; malformed frames
+/// get a typed error reply. Only a compromised *stream* (truncated or
+/// oversized frame — resync is impossible) closes the connection; every
+/// in-frame error leaves it usable for the next request.
+fn handle_conn(inner: &Arc<Inner>, stream: TcpStream) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    loop {
+        let frame = match util::read_frame(&mut reader, proto::MAX_FRAME_BYTES)
+        {
+            Ok(Some(frame)) => frame,
+            Ok(None) => return, // clean EOF on a frame boundary
+            Err(FrameError::Truncated) => {
+                let _ = send(
+                    &mut writer,
+                    &Response::Error {
+                        code: ErrorCode::BadFrame,
+                        message: "stream ended mid-frame (missing \
+                                  terminator)"
+                            .to_string(),
+                    },
+                );
+                return;
+            }
+            Err(FrameError::TooLarge { max }) => {
+                let _ = send(
+                    &mut writer,
+                    &Response::Error {
+                        code: ErrorCode::FrameTooLarge,
+                        message: format!(
+                            "frame exceeds the {max}-byte cap"
+                        ),
+                    },
+                );
+                return;
+            }
+            Err(FrameError::Io(_)) => return,
+        };
+        match proto::decode_request(&frame) {
+            Ok(Request::Shutdown) => {
+                // reply first so the client sees the acknowledgement,
+                // then stop the world
+                let _ = send(&mut writer, &Response::ShuttingDown);
+                trigger_stop(inner);
+                return;
+            }
+            Ok(req) => {
+                let resp = handle_request(inner, &req);
+                if send(&mut writer, &resp).is_err() {
+                    return;
+                }
+            }
+            Err((code, message)) => {
+                if send(&mut writer, &Response::Error { code, message })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn internal(e: anyhow::Error) -> Response {
+    Response::Error { code: ErrorCode::Internal, message: format!("{e:#}") }
+}
+
+fn handle_request(inner: &Arc<Inner>, req: &Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Submit { spec_toml } => submit(inner, spec_toml),
+        Request::Status { ticket } => status(inner, ticket),
+        Request::Result { ticket } => result(inner, ticket),
+        Request::Jobs => jobs_list(inner),
+        // handled by the connection loop; answering here keeps the
+        // match total
+        Request::Shutdown => Response::ShuttingDown,
+    }
+}
+
+fn submit(inner: &Arc<Inner>, spec_toml: &str) -> Response {
+    let plan = match build_plan(spec_toml) {
+        Ok(p) => p,
+        Err(e) => {
+            return Response::Error {
+                code: ErrorCode::BadSpec,
+                message: format!("{e:#}"),
+            }
+        }
+    };
+    let ticket = plan.campaign_hash.clone();
+    let mut st = inner.state.lock().unwrap();
+    if let Some(rec) = st.jobs.get(&ticket) {
+        // the dedupe path: same hash ⇒ same bytes ⇒ the existing job
+        // (in flight or done) IS this submission's result
+        return Response::Submitted {
+            ticket,
+            state: rec.state,
+            attached: true,
+            planned: rec.planned,
+        };
+    }
+    let rec = JobRecord {
+        ticket: ticket.clone(),
+        name: plan.name.clone(),
+        state: JobState::Queued,
+        planned: plan.total_cells(),
+        submitted: inner.clock.now(),
+        finished: None,
+        error: None,
+    };
+    // durable before visible: spec bytes + job record hit disk before
+    // the registry/queue learn the ticket, so a crash between the two
+    // leaves a recoverable job dir, never a queued ghost
+    let spec_path =
+        jobs::job_dir(&inner.root, &ticket).join(jobs::JOB_SPEC_FILE);
+    if let Err(e) = util::write_atomic(&spec_path, spec_toml.as_bytes())
+        .and_then(|()| rec.store(&inner.root))
+    {
+        return internal(e);
+    }
+    let planned = rec.planned;
+    st.jobs.insert(ticket.clone(), rec);
+    st.plans.insert(ticket.clone(), plan);
+    st.queue.push_back(ticket.clone());
+    inner.wake.notify_all();
+    if inner.verbose {
+        eprintln!("[serve] queued job {ticket} ({planned} cells)");
+    }
+    Response::Submitted {
+        ticket,
+        state: JobState::Queued,
+        attached: false,
+        planned,
+    }
+}
+
+fn status(inner: &Arc<Inner>, ticket: &str) -> Response {
+    let st = inner.state.lock().unwrap();
+    match st.jobs.get(ticket) {
+        Some(rec) => {
+            Response::Status { job: jobs::view(&inner.root, rec) }
+        }
+        None => Response::Error {
+            code: ErrorCode::UnknownTicket,
+            message: format!("no job with ticket '{ticket}'"),
+        },
+    }
+}
+
+fn result(inner: &Arc<Inner>, ticket: &str) -> Response {
+    let state = {
+        let st = inner.state.lock().unwrap();
+        match st.jobs.get(ticket) {
+            Some(rec) => (rec.state, rec.error.clone()),
+            None => {
+                return Response::Error {
+                    code: ErrorCode::UnknownTicket,
+                    message: format!("no job with ticket '{ticket}'"),
+                }
+            }
+        }
+    };
+    match state {
+        (JobState::Failed, error) => Response::Error {
+            code: ErrorCode::JobFailed,
+            message: error.unwrap_or_else(|| "job failed".to_string()),
+        },
+        (JobState::Queued, _) | (JobState::Running, _) => Response::Error {
+            code: ErrorCode::NotDone,
+            message: format!("job '{ticket}' has not finished yet"),
+        },
+        (JobState::Done, _) => {
+            match jobs::read_result_files(&inner.root, ticket) {
+                Ok(files) => Response::ResultFiles {
+                    ticket: ticket.to_string(),
+                    files,
+                },
+                Err(e) => internal(e),
+            }
+        }
+    }
+}
+
+fn jobs_list(inner: &Arc<Inner>) -> Response {
+    let st = inner.state.lock().unwrap();
+    let mut recs: Vec<&JobRecord> = st.jobs.values().collect();
+    recs.sort_by(|a, b| {
+        a.submitted
+            .partial_cmp(&b.submitted)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.ticket.cmp(&b.ticket))
+    });
+    Response::Jobs {
+        jobs: recs.iter().map(|r| jobs::view(&inner.root, r)).collect(),
+    }
+}
+
+/// Persist + publish a job state transition.
+fn set_state(
+    inner: &Arc<Inner>,
+    ticket: &str,
+    state: JobState,
+    error: Option<String>,
+) {
+    let mut st = inner.state.lock().unwrap();
+    if let Some(rec) = st.jobs.get_mut(ticket) {
+        rec.state = state;
+        rec.error = error;
+        if state.is_terminal() {
+            rec.finished = Some(inner.clock.now());
+        }
+        if let Err(e) = rec.store(&inner.root) {
+            // the in-memory registry is still correct; the durable copy
+            // will be healed by the next transition or recovery pass
+            eprintln!("[serve] warning: persisting job {ticket}: {e:#}");
+        }
+    }
+}
+
+/// The single executor: drains the queue FIFO, one campaign at a time,
+/// each through the injected exec over a nested campaign root opened
+/// with resume semantics (fresh and recovered jobs share one path).
+fn executor_loop(inner: &Arc<Inner>) {
+    loop {
+        let (ticket, plan) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    match st.plans.remove(&t) {
+                        Some(p) => break (t, p),
+                        // unreachable by construction; skip defensively
+                        None => continue,
+                    }
+                }
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                st = inner.wake.wait(st).unwrap();
+            }
+        };
+        run_job(inner, &ticket, &plan);
+        if inner.stop.load(Ordering::SeqCst) {
+            // drain no further after a shutdown request; queued jobs
+            // stay durable and resume on the next daemon start
+            return;
+        }
+    }
+}
+
+fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
+    set_state(inner, ticket, JobState::Running, None);
+    if inner.verbose {
+        eprintln!("[serve] running job {ticket}");
+    }
+    let dir = jobs::job_dir(&inner.root, ticket);
+    let opts = CampaignRunOpts {
+        root: dir.join(jobs::JOB_RUN_DIR),
+        shard: ShardId::single(),
+        jobs: inner.exec_jobs,
+        resume: true,
+        verbose: inner.verbose,
+        scheduler: SchedulerKind::Global,
+    };
+    let outcome = (inner.exec)(plan, &opts).and_then(|result| {
+        // the same CSV-tree writer `cpt campaign` reports through, so a
+        // fetched result is byte-identical to a direct run of the spec
+        report::write_campaign_csv_tree(
+            &dir.join(jobs::JOB_CSV_DIR),
+            result
+                .members
+                .iter()
+                .map(|m| (m.name.as_str(), m.outcomes.as_slice())),
+        )
+        .map(|_| ())
+    });
+    match outcome {
+        Ok(()) => {
+            set_state(inner, ticket, JobState::Done, None);
+            if inner.verbose {
+                eprintln!("[serve] job {ticket} done");
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            eprintln!("[serve] job {ticket} failed: {msg}");
+            set_state(inner, ticket, JobState::Failed, Some(msg));
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Durable job records under a `cpt serve` root.
+//!
+//! Layout:
+//!
+//! ```text
+//! <root>/serve.json            serve-root marker (kind + schema version)
+//! <root>/serve-addr            the daemon's bound address, written at
+//!                              startup (lets `--listen 127.0.0.1:0`
+//!                              pick a free port and still be found)
+//! <root>/jobs/<ticket>/job.json    atomic job record (state machine)
+//! <root>/jobs/<ticket>/spec.toml   the submitted campaign spec, verbatim
+//! <root>/jobs/<ticket>/run/        nested campaign root (RunStore dirs)
+//! <root>/jobs/<ticket>/csv/        result CSVs once the job is done
+//! ```
+//!
+//! The ticket IS the campaign content hash, so the directory doubles as
+//! a result cache: resubmitting an identical spec lands on the same
+//! ticket and a done job serves `csv/` straight from disk — zero new
+//! cells, zero new compiles.
+//!
+//! `job.json` is rewritten via `util::write_atomic` on every state
+//! transition (queued → running → done|failed), so a crashed daemon
+//! can never leave a torn record. Crash recovery is cheap by
+//! construction: at startup any job found `running` is demoted back to
+//! `queued`, and re-execution opens the nested campaign root with
+//! `--resume` semantics, so cells recorded before the crash are reused,
+//! not recomputed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::campaign::{self, Status, CAMPAIGN_MANIFEST_FILE};
+use crate::coordinator::{store, RunStore};
+use crate::util::json::{self, Json};
+
+pub const SERVE_MARKER_FILE: &str = "serve.json";
+pub const SERVE_ADDR_FILE: &str = "serve-addr";
+pub const SERVE_JOBS_DIR: &str = "jobs";
+pub const JOB_FILE: &str = "job.json";
+pub const JOB_SPEC_FILE: &str = "spec.toml";
+pub const JOB_RUN_DIR: &str = "run";
+pub const JOB_CSV_DIR: &str = "csv";
+
+const SERVE_KIND: &str = "cpt-serve";
+const JOB_KIND: &str = "cpt-serve-job";
+const SERVE_SCHEMA_VERSION: usize = 1;
+
+/// Job lifecycle. `Done` and `Failed` are terminal; everything else is
+/// owned by the daemon's executor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            other => bail!("unknown job state '{other}'"),
+        })
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The durable per-job record behind `jobs/<ticket>/job.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    /// Campaign content hash — the job's identity and cache key.
+    pub ticket: String,
+    /// Campaign name (a label; deliberately outside the hash).
+    pub name: String,
+    pub state: JobState,
+    /// Total planned cells, fixed at submit time.
+    pub planned: usize,
+    /// Submission time (seconds; daemon clock — injectable in tests).
+    pub submitted: f64,
+    /// Completion/failure time, once terminal.
+    pub finished: Option<f64>,
+    /// Failure message, for `Failed` jobs.
+    pub error: Option<String>,
+}
+
+impl JobRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s(JOB_KIND)),
+            ("schema_version", json::num(SERVE_SCHEMA_VERSION as f64)),
+            ("cpt_version", json::s(RunStore::code_version())),
+            ("ticket", json::s(&self.ticket)),
+            ("name", json::s(&self.name)),
+            ("state", json::s(self.state.as_str())),
+            ("planned", json::num(self.planned as f64)),
+            ("submitted", json::num(self.submitted)),
+            (
+                "finished",
+                match self.finished {
+                    Some(t) => json::num(t),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => json::s(e),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobRecord> {
+        let kind = j.get("kind")?.as_str()?;
+        if kind != JOB_KIND {
+            bail!("not a serve job record (kind '{kind}')");
+        }
+        let sv = j.get("schema_version")?.as_usize()?;
+        if sv != SERVE_SCHEMA_VERSION {
+            bail!(
+                "job record schema version {sv}, this binary speaks \
+                 {SERVE_SCHEMA_VERSION}"
+            );
+        }
+        Ok(JobRecord {
+            ticket: j.get("ticket")?.as_str()?.to_string(),
+            name: j.get("name")?.as_str()?.to_string(),
+            state: JobState::parse(j.get("state")?.as_str()?)?,
+            planned: j.get("planned")?.as_usize()?,
+            submitted: j.get("submitted")?.as_f64()?,
+            finished: opt_f64(j, "finished")?,
+            error: opt_str(j, "error")?,
+        })
+    }
+
+    /// Persist the record atomically under its job dir.
+    pub fn store(&self, root: &Path) -> Result<()> {
+        let path = job_dir(root, &self.ticket).join(JOB_FILE);
+        self.to_json()
+            .write_atomic(&path)
+            .with_context(|| format!("write job record {}", path.display()))
+    }
+
+    pub fn load(dir: &Path) -> Result<JobRecord> {
+        let path = dir.join(JOB_FILE);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&src)
+            .with_context(|| format!("parse {}", path.display()))?;
+        JobRecord::from_json(&j)
+            .with_context(|| format!("decode {}", path.display()))
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_f64()?)),
+    }
+}
+
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_str()?.to_string())),
+    }
+}
+
+/// What a client (or `cpt status` on the serve root) sees of one job:
+/// the durable record plus a live done-cell count read from the nested
+/// campaign manifests — the same source `cpt status` reads everywhere.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobView {
+    pub ticket: String,
+    pub name: String,
+    pub state: JobState,
+    pub planned: usize,
+    /// Cells recorded so far (`None` when the run dir has no readable
+    /// manifest yet).
+    pub done: Option<usize>,
+    pub submitted: f64,
+    pub error: Option<String>,
+}
+
+impl JobView {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("ticket", json::s(&self.ticket)),
+            ("name", json::s(&self.name)),
+            ("state", json::s(self.state.as_str())),
+            ("planned", json::num(self.planned as f64)),
+            (
+                "done",
+                match self.done {
+                    Some(d) => json::num(d as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("submitted", json::num(self.submitted)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => json::s(e),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobView> {
+        let done = match j.opt("done") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_usize()?),
+        };
+        Ok(JobView {
+            ticket: j.get("ticket")?.as_str()?.to_string(),
+            name: j.get("name")?.as_str()?.to_string(),
+            state: JobState::parse(j.get("state")?.as_str()?)?,
+            planned: j.get("planned")?.as_usize()?,
+            done,
+            submitted: j.get("submitted")?.as_f64()?,
+            error: opt_str(j, "error")?,
+        })
+    }
+}
+
+/// Tickets come off the wire, so validate before using one as a path
+/// component: campaign hashes are short hex strings, and anything else
+/// (separators, dots, empty) is refused — a hostile ticket can never
+/// escape the jobs dir.
+pub fn validate_ticket(ticket: &str) -> Result<()> {
+    if ticket.is_empty() || ticket.len() > 64 {
+        bail!("bad ticket length");
+    }
+    if !ticket.chars().all(|c| c.is_ascii_alphanumeric()) {
+        bail!("ticket contains non-alphanumeric characters");
+    }
+    Ok(())
+}
+
+pub fn job_dir(root: &Path, ticket: &str) -> PathBuf {
+    root.join(SERVE_JOBS_DIR).join(ticket)
+}
+
+/// Does `dir` carry the serve-root marker?
+pub fn is_serve_root(dir: &Path) -> bool {
+    dir.join(SERVE_MARKER_FILE).is_file()
+}
+
+/// Create the serve root (marker + jobs dir), or validate an existing
+/// one. Refuses to take over a sweep run dir or campaign root — status
+/// and gc dispatch on which marker/manifest is present, so mixing kinds
+/// in one directory would hide recorded progress.
+pub fn init_serve_root(root: &Path) -> Result<()> {
+    let marker = root.join(SERVE_MARKER_FILE);
+    if marker.is_file() {
+        let src = std::fs::read_to_string(&marker)
+            .with_context(|| format!("read {}", marker.display()))?;
+        let j = Json::parse(&src)
+            .with_context(|| format!("parse {}", marker.display()))?;
+        let kind = j.get("kind")?.as_str()?;
+        if kind != SERVE_KIND {
+            bail!(
+                "{} exists but has kind '{kind}' — not a cpt serve root",
+                marker.display()
+            );
+        }
+        let sv = j.get("schema_version")?.as_usize()?;
+        if sv != SERVE_SCHEMA_VERSION {
+            bail!(
+                "serve root {} has schema version {sv}; this binary \
+                 speaks {SERVE_SCHEMA_VERSION}",
+                root.display()
+            );
+        }
+        return Ok(());
+    }
+    if root.join(CAMPAIGN_MANIFEST_FILE).exists()
+        || root.join(store::MANIFEST_FILE).exists()
+    {
+        bail!(
+            "{} is already a campaign root or sweep run dir; point \
+             `cpt serve --root` at a fresh directory",
+            root.display()
+        );
+    }
+    std::fs::create_dir_all(root.join(SERVE_JOBS_DIR))
+        .with_context(|| format!("create {}", root.display()))?;
+    json::obj(vec![
+        ("kind", json::s(SERVE_KIND)),
+        ("schema_version", json::num(SERVE_SCHEMA_VERSION as f64)),
+        ("cpt_version", json::s(RunStore::code_version())),
+    ])
+    .write_atomic(&marker)
+}
+
+/// Load every job record under the root, sorted by submission time then
+/// ticket (a stable, human-sensible order for `jobs` listings).
+pub fn list_jobs(root: &Path) -> Result<Vec<JobRecord>> {
+    let dir = root.join(SERVE_JOBS_DIR);
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(&dir)
+        .with_context(|| format!("read {}", dir.display()))?
+    {
+        let path = entry
+            .with_context(|| format!("read entry in {}", dir.display()))?
+            .path();
+        if !path.join(JOB_FILE).is_file() {
+            // staging residue or a foreign file — not a job
+            continue;
+        }
+        out.push(JobRecord::load(&path)?);
+    }
+    out.sort_by(|a, b| {
+        a.submitted
+            .partial_cmp(&b.submitted)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.ticket.cmp(&b.ticket))
+    });
+    Ok(out)
+}
+
+/// Live (done, planned) cell counts for a job, read from the nested
+/// campaign root's manifests — exactly what `cpt status` reads. `None`
+/// while the run dir has no manifest yet (job still queued) or the
+/// manifest is unreadable.
+pub fn job_progress(root: &Path, ticket: &str) -> Option<(usize, usize)> {
+    let run = job_dir(root, ticket).join(JOB_RUN_DIR);
+    match campaign::status(&run) {
+        Ok(Status::Campaign(c)) => Some((c.done(), c.planned())),
+        _ => None,
+    }
+}
+
+/// Build the client-facing view of one record.
+pub fn view(root: &Path, rec: &JobRecord) -> JobView {
+    let done = match rec.state {
+        JobState::Queued => Some(0),
+        _ => job_progress(root, &rec.ticket).map(|(d, _)| d),
+    };
+    JobView {
+        ticket: rec.ticket.clone(),
+        name: rec.name.clone(),
+        state: rec.state,
+        planned: rec.planned,
+        done,
+        submitted: rec.submitted,
+        error: rec.error.clone(),
+    }
+}
+
+/// The job-level view `cpt status` prints for a serve root.
+pub fn serve_status(root: &Path) -> Result<Vec<JobView>> {
+    Ok(list_jobs(root)?.iter().map(|r| view(root, r)).collect())
+}
+
+/// Read a done job's CSV tree as `(file name, contents)` pairs in name
+/// order.
+pub fn read_result_files(
+    root: &Path,
+    ticket: &str,
+) -> Result<Vec<(String, String)>> {
+    let dir = job_dir(root, ticket).join(JOB_CSV_DIR);
+    let mut files = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .with_context(|| format!("read {}", dir.display()))?
+    {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if !name.ends_with(".csv") {
+            continue;
+        }
+        let data = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        files.push((name.to_string(), data));
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    if files.is_empty() {
+        bail!("no result CSVs under {}", dir.display());
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpt_serve_jobs_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn record(ticket: &str, submitted: f64) -> JobRecord {
+        JobRecord {
+            ticket: ticket.to_string(),
+            name: "camp".to_string(),
+            state: JobState::Queued,
+            planned: 4,
+            submitted,
+            finished: None,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn job_record_round_trips_through_disk() {
+        let root = tmp("roundtrip");
+        init_serve_root(&root).unwrap();
+        let mut rec = record("abc123", 17.5);
+        rec.store(&root).unwrap();
+        assert_eq!(JobRecord::load(&job_dir(&root, "abc123")).unwrap(), rec);
+        rec.state = JobState::Failed;
+        rec.finished = Some(21.25);
+        rec.error = Some("compile exploded".to_string());
+        rec.store(&root).unwrap();
+        assert_eq!(JobRecord::load(&job_dir(&root, "abc123")).unwrap(), rec);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn list_jobs_sorts_by_submission_time() {
+        let root = tmp("list");
+        init_serve_root(&root).unwrap();
+        record("bbb", 2.0).store(&root).unwrap();
+        record("aaa", 3.0).store(&root).unwrap();
+        record("ccc", 1.0).store(&root).unwrap();
+        let tickets: Vec<String> = list_jobs(&root)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.ticket)
+            .collect();
+        assert_eq!(tickets, vec!["ccc", "bbb", "aaa"]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn init_refuses_foreign_roots_and_validates_marker() {
+        let root = tmp("foreign");
+        std::fs::create_dir_all(&root).unwrap();
+        std::fs::write(root.join(store::MANIFEST_FILE), b"{}").unwrap();
+        assert!(init_serve_root(&root).is_err(), "sweep run dir refused");
+        std::fs::remove_dir_all(&root).ok();
+
+        let root = tmp("marker");
+        init_serve_root(&root).unwrap();
+        // idempotent reopen
+        init_serve_root(&root).unwrap();
+        std::fs::write(
+            root.join(SERVE_MARKER_FILE),
+            b"{\"kind\": \"other\", \"schema_version\": 1}",
+        )
+        .unwrap();
+        assert!(init_serve_root(&root).is_err(), "wrong kind refused");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn tickets_are_validated_as_path_components() {
+        assert!(validate_ticket("00ab34cd9900aabb").is_ok());
+        assert!(validate_ticket("").is_err());
+        assert!(validate_ticket("../evil").is_err());
+        assert!(validate_ticket("a/b").is_err());
+        assert!(validate_ticket("a.b").is_err());
+        assert!(validate_ticket(&"x".repeat(65)).is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! `cpt serve`: a long-running campaign service with spec-hash result
+//! caching.
+//!
+//! The daemon accepts campaign specs over a typed, line-delimited-JSON
+//! protocol on a localhost TCP socket. A submission's job ticket is the
+//! spec's campaign content hash, so identical submissions dedupe for
+//! free: a queued or running job is attached to, a finished one answers
+//! straight from its cached CSVs — zero new compiles, zero new cells.
+//!
+//! Layout of the module:
+//! - [`proto`] — wire format: framing constants, request/response
+//!   enums, encode/decode (see `rust/DESIGN-serve.md` for the spec).
+//! - [`jobs`] — durable job records and the serve-root directory
+//!   layout (`serve.json`, `serve-addr`, `jobs/<ticket>/...`).
+//! - [`daemon`] — the server: accept loop, connection handlers, and
+//!   the executor thread that drains the queue through the campaign
+//!   machinery.
+//! - [`client`] — the blocking client behind `cpt submit|jobs|result`.
+
+pub mod client;
+pub mod daemon;
+pub mod jobs;
+pub mod proto;
+
+pub use client::Client;
+pub use daemon::{CampaignExec, ServeOpts, Server};
+pub use jobs::{JobRecord, JobState, JobView};
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::TomlDoc;
+
+/// Default bind address: loopback, OS-assigned port (the real port is
+/// published to `<root>/serve-addr`).
+pub const DEFAULT_LISTEN: &str = "127.0.0.1:0";
+
+/// `[serve]` section of a config file; every field optional so CLI
+/// flags can fill the gaps.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeConfig {
+    pub root: Option<PathBuf>,
+    pub listen: Option<String>,
+    pub jobs: Option<usize>,
+}
+
+impl ServeConfig {
+    /// Read the `[serve]` table. Unknown keys are rejected (a typo
+    /// would otherwise silently fall back to a default).
+    pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        let Some(sec) = doc.section("serve") else {
+            return Ok(cfg);
+        };
+        for (k, v) in sec {
+            match k.as_str() {
+                "root" => cfg.root = Some(PathBuf::from(v.as_str()?)),
+                "listen" => cfg.listen = Some(v.as_str()?.to_string()),
+                "jobs" => {
+                    cfg.jobs = Some(
+                        v.as_usize().context("serve key 'jobs'")?,
+                    )
+                }
+                other => bail!(
+                    "unknown [serve] key '{other}' (known: root, listen, \
+                     jobs)"
+                ),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_reads_the_serve_section() {
+        let doc = TomlDoc::parse(
+            "[serve]\nroot = \"/tmp/sroot\"\nlisten = \"127.0.0.1:7777\"\n\
+             jobs = 3\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.root.as_deref(), Some(std::path::Path::new("/tmp/sroot")));
+        assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:7777"));
+        assert_eq!(cfg.jobs, Some(3));
+        // absent section → all defaults
+        let doc = TomlDoc::parse("[sweep]\nmodel = \"mlp\"\n").unwrap();
+        assert_eq!(
+            ServeConfig::from_toml(&doc).unwrap(),
+            ServeConfig::default()
+        );
+    }
+
+    #[test]
+    fn serve_config_rejects_unknown_keys() {
+        let doc = TomlDoc::parse("[serve]\nroot = \"/x\"\nprot = 1\n").unwrap();
+        let err = ServeConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown [serve] key 'prot'"), "{err}");
+    }
+}

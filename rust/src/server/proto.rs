@@ -1,0 +1,348 @@
+//! The `cpt serve` wire protocol: one compact JSON object per
+//! newline-terminated frame (see `util::read_frame`/`write_frame`), in
+//! both directions, over a localhost TCP connection.
+//!
+//! Every request carries the schema version (`"v": 1`) and a `verb`;
+//! every reply carries the version and either `"ok": true` plus a typed
+//! payload or `"ok": false` plus a typed error (`code` + `message`).
+//! Decoding is total: any malformed frame maps to a specific
+//! [`ErrorCode`] — never a panic — so the daemon can always answer with
+//! a typed error reply and the connection stays usable (or is closed
+//! cleanly when the stream itself is compromised, i.e. truncated or
+//! oversized frames).
+//!
+//! Compact JSON never emits a raw newline (they are escaped inside
+//! strings), so the line framing can never be split by payload content.
+
+use anyhow::{bail, Context, Result};
+
+use super::jobs::{JobState, JobView};
+use crate::util::json::{self, Json};
+
+/// Wire schema version. A request with any other `v` is answered with
+/// `bad_schema_version` and otherwise ignored.
+pub const PROTO_VERSION: usize = 1;
+
+/// Frame size cap in both directions. Campaign specs are a few KiB and
+/// result CSVs a few hundred KiB; 4 MiB leaves generous headroom while
+/// keeping a hostile peer from ballooning daemon memory.
+pub const MAX_FRAME_BYTES: usize = 4 << 20;
+
+/// Typed failure classes. The code is machine-readable (stable strings
+/// on the wire); the accompanying message is for humans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The stream ended mid-frame (peer hung up before the terminator).
+    BadFrame,
+    /// A frame exceeded [`MAX_FRAME_BYTES`].
+    FrameTooLarge,
+    /// The frame is not UTF-8 or not valid JSON.
+    BadJson,
+    /// Missing or unsupported `v` field.
+    BadSchemaVersion,
+    /// Well-formed request with a verb this daemon does not know.
+    UnknownVerb,
+    /// Known verb, but missing or ill-typed fields.
+    BadRequest,
+    /// `submit` carried a spec that does not parse/validate as a
+    /// campaign TOML.
+    BadSpec,
+    /// `status`/`result` named a ticket this daemon has no job for.
+    UnknownTicket,
+    /// `result` on a job that is still queued or running.
+    NotDone,
+    /// `result` on a job that failed; the message carries the job error.
+    JobFailed,
+    /// Daemon-side fault (I/O on the serve root, ...).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::FrameTooLarge => "frame_too_large",
+            ErrorCode::BadJson => "bad_json",
+            ErrorCode::BadSchemaVersion => "bad_schema_version",
+            ErrorCode::UnknownVerb => "unknown_verb",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::BadSpec => "bad_spec",
+            ErrorCode::UnknownTicket => "unknown_ticket",
+            ErrorCode::NotDone => "not_done",
+            ErrorCode::JobFailed => "job_failed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ErrorCode> {
+        Ok(match s {
+            "bad_frame" => ErrorCode::BadFrame,
+            "frame_too_large" => ErrorCode::FrameTooLarge,
+            "bad_json" => ErrorCode::BadJson,
+            "bad_schema_version" => ErrorCode::BadSchemaVersion,
+            "unknown_verb" => ErrorCode::UnknownVerb,
+            "bad_request" => ErrorCode::BadRequest,
+            "bad_spec" => ErrorCode::BadSpec,
+            "unknown_ticket" => ErrorCode::UnknownTicket,
+            "not_done" => ErrorCode::NotDone,
+            "job_failed" => ErrorCode::JobFailed,
+            "internal" => ErrorCode::Internal,
+            other => bail!("unknown error code '{other}'"),
+        })
+    }
+}
+
+/// A client request. `Submit` carries the campaign TOML verbatim — the
+/// daemon parses and hashes it server-side, so the ticket is derived
+/// from content, never trusted from the client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Submit { spec_toml: String },
+    Status { ticket: String },
+    Result { ticket: String },
+    Jobs,
+    Shutdown,
+}
+
+/// A daemon reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    /// The submit outcome: `attached` means an identical spec was
+    /// already known (queued, running, or done) — no new job was
+    /// created and no new cells will run for this submission.
+    Submitted {
+        ticket: String,
+        state: JobState,
+        attached: bool,
+        planned: usize,
+    },
+    Status {
+        job: JobView,
+    },
+    /// The finished job's CSV tree as `(file name, contents)` pairs in
+    /// name order (member CSVs + `campaign.csv`).
+    ResultFiles {
+        ticket: String,
+        files: Vec<(String, String)>,
+    },
+    Jobs {
+        jobs: Vec<JobView>,
+    },
+    ShuttingDown,
+    Error {
+        code: ErrorCode,
+        message: String,
+    },
+}
+
+// ---- encoding -----------------------------------------------------------
+
+pub fn encode_request(req: &Request) -> String {
+    let mut pairs = vec![("v", json::num(PROTO_VERSION as f64))];
+    match req {
+        Request::Ping => pairs.push(("verb", json::s("ping"))),
+        Request::Submit { spec_toml } => {
+            pairs.push(("verb", json::s("submit")));
+            pairs.push(("spec_toml", json::s(spec_toml)));
+        }
+        Request::Status { ticket } => {
+            pairs.push(("verb", json::s("status")));
+            pairs.push(("ticket", json::s(ticket)));
+        }
+        Request::Result { ticket } => {
+            pairs.push(("verb", json::s("result")));
+            pairs.push(("ticket", json::s(ticket)));
+        }
+        Request::Jobs => pairs.push(("verb", json::s("jobs"))),
+        Request::Shutdown => pairs.push(("verb", json::s("shutdown"))),
+    }
+    json::obj(pairs).to_string_compact()
+}
+
+pub fn encode_response(resp: &Response) -> String {
+    let mut pairs = vec![("v", json::num(PROTO_VERSION as f64))];
+    match resp {
+        Response::Pong => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("pong")));
+        }
+        Response::Submitted { ticket, state, attached, planned } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("submitted")));
+            pairs.push(("ticket", json::s(ticket)));
+            pairs.push(("state", json::s(state.as_str())));
+            pairs.push(("attached", Json::Bool(*attached)));
+            pairs.push(("planned", json::num(*planned as f64)));
+        }
+        Response::Status { job } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("status")));
+            pairs.push(("job", job.to_json()));
+        }
+        Response::ResultFiles { ticket, files } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("result")));
+            pairs.push(("ticket", json::s(ticket)));
+            let fs = files
+                .iter()
+                .map(|(name, data)| {
+                    json::obj(vec![
+                        ("name", json::s(name)),
+                        ("data", json::s(data)),
+                    ])
+                })
+                .collect();
+            pairs.push(("files", Json::Arr(fs)));
+        }
+        Response::Jobs { jobs } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("jobs")));
+            pairs.push((
+                "jobs",
+                Json::Arr(jobs.iter().map(|j| j.to_json()).collect()),
+            ));
+        }
+        Response::ShuttingDown => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("shutting_down")));
+        }
+        Response::Error { code, message } => {
+            pairs.push(("ok", Json::Bool(false)));
+            pairs.push((
+                "error",
+                json::obj(vec![
+                    ("code", json::s(code.as_str())),
+                    ("message", json::s(message)),
+                ]),
+            ));
+        }
+    }
+    json::obj(pairs).to_string_compact()
+}
+
+// ---- decoding -----------------------------------------------------------
+
+/// Decode one request frame. Every failure maps to the typed error the
+/// daemon should answer with; this function cannot panic on any input.
+pub fn decode_request(
+    frame: &[u8],
+) -> std::result::Result<Request, (ErrorCode, String)> {
+    let text = std::str::from_utf8(frame)
+        .map_err(|e| (ErrorCode::BadJson, format!("frame is not UTF-8: {e}")))?;
+    let j = Json::parse(text)
+        .map_err(|e| (ErrorCode::BadJson, format!("bad JSON: {e:#}")))?;
+    let v = match j.opt("v") {
+        Some(v) => v.as_usize().map_err(|_| {
+            (
+                ErrorCode::BadSchemaVersion,
+                "schema version 'v' is not a number".to_string(),
+            )
+        })?,
+        None => {
+            return Err((
+                ErrorCode::BadSchemaVersion,
+                "missing schema version field 'v'".to_string(),
+            ))
+        }
+    };
+    if v != PROTO_VERSION {
+        return Err((
+            ErrorCode::BadSchemaVersion,
+            format!("schema version {v} unsupported (this daemon speaks {PROTO_VERSION})"),
+        ));
+    }
+    let verb = match j.opt("verb") {
+        Some(s) => s.as_str().map_err(|_| {
+            (ErrorCode::BadRequest, "'verb' is not a string".to_string())
+        })?,
+        None => {
+            return Err((
+                ErrorCode::BadRequest,
+                "missing field 'verb'".to_string(),
+            ))
+        }
+    };
+    let str_field = |key: &str| -> std::result::Result<String, (ErrorCode, String)> {
+        match j.opt(key) {
+            Some(s) => s.as_str().map(|s| s.to_string()).map_err(|_| {
+                (
+                    ErrorCode::BadRequest,
+                    format!("'{key}' is not a string"),
+                )
+            }),
+            None => Err((
+                ErrorCode::BadRequest,
+                format!("verb '{verb}' requires field '{key}'"),
+            )),
+        }
+    };
+    match verb {
+        "ping" => Ok(Request::Ping),
+        "jobs" => Ok(Request::Jobs),
+        "shutdown" => Ok(Request::Shutdown),
+        "submit" => Ok(Request::Submit { spec_toml: str_field("spec_toml")? }),
+        "status" => Ok(Request::Status { ticket: str_field("ticket")? }),
+        "result" => Ok(Request::Result { ticket: str_field("ticket")? }),
+        other => Err((
+            ErrorCode::UnknownVerb,
+            format!(
+                "unknown verb '{other}' (known: ping, submit, status, \
+                 result, jobs, shutdown)"
+            ),
+        )),
+    }
+}
+
+/// Decode one response frame (the client side; a daemon speaking a
+/// different schema or garbage yields an error, never a panic).
+pub fn decode_response(frame: &[u8]) -> Result<Response> {
+    let text =
+        std::str::from_utf8(frame).context("response frame is not UTF-8")?;
+    let j = Json::parse(text).context("response frame is not JSON")?;
+    let v = j.get("v")?.as_usize()?;
+    if v != PROTO_VERSION {
+        bail!("server speaks schema version {v}, this client speaks {PROTO_VERSION}");
+    }
+    if !j.get("ok")?.as_bool()? {
+        let e = j.get("error")?;
+        return Ok(Response::Error {
+            code: ErrorCode::parse(e.get("code")?.as_str()?)?,
+            message: e.get("message")?.as_str()?.to_string(),
+        });
+    }
+    let reply = j.get("reply")?.as_str()?;
+    match reply {
+        "pong" => Ok(Response::Pong),
+        "shutting_down" => Ok(Response::ShuttingDown),
+        "submitted" => Ok(Response::Submitted {
+            ticket: j.get("ticket")?.as_str()?.to_string(),
+            state: JobState::parse(j.get("state")?.as_str()?)?,
+            attached: j.get("attached")?.as_bool()?,
+            planned: j.get("planned")?.as_usize()?,
+        }),
+        "status" => Ok(Response::Status { job: JobView::from_json(j.get("job")?)? }),
+        "result" => {
+            let mut files = Vec::new();
+            for f in j.get("files")?.as_arr()? {
+                files.push((
+                    f.get("name")?.as_str()?.to_string(),
+                    f.get("data")?.as_str()?.to_string(),
+                ));
+            }
+            Ok(Response::ResultFiles {
+                ticket: j.get("ticket")?.as_str()?.to_string(),
+                files,
+            })
+        }
+        "jobs" => {
+            let mut jobs = Vec::new();
+            for entry in j.get("jobs")?.as_arr()? {
+                jobs.push(JobView::from_json(entry)?);
+            }
+            Ok(Response::Jobs { jobs })
+        }
+        other => bail!("unknown reply kind '{other}'"),
+    }
+}

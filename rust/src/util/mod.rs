@@ -108,6 +108,101 @@ pub fn publish_exclusive(path: impl AsRef<Path>, bytes: &[u8]) -> Result<bool> {
     }
 }
 
+// ---- line-delimited framing ---------------------------------------------
+
+/// Why a [`read_frame`] call yielded no frame. `Truncated` and `TooLarge`
+/// are protocol violations the peer caused — the serve wire layer maps
+/// them to typed error replies instead of wedging or killing the process.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The stream ended mid-frame (bytes arrived, but no terminator).
+    Truncated,
+    /// The frame exceeded the size cap before its terminator arrived.
+    TooLarge { max: usize },
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated => {
+                write!(f, "stream ended mid-frame (missing terminator)")
+            }
+            FrameError::TooLarge { max } => {
+                write!(f, "frame exceeds the {max}-byte cap")
+            }
+            FrameError::Io(e) => write!(f, "frame i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one newline-terminated frame. Frames must not contain a raw
+/// `\n` (JSON compact encoding never emits one — it escapes newlines
+/// inside strings), so embedding one is a caller bug, reported as
+/// `InvalidInput` rather than silently splitting the frame in two.
+pub fn write_frame<W: std::io::Write>(
+    w: &mut W,
+    bytes: &[u8],
+) -> std::io::Result<()> {
+    if bytes.contains(&b'\n') {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "frame payload contains a raw newline",
+        ));
+    }
+    w.write_all(bytes)?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Read one newline-terminated frame of at most `max` bytes (terminator
+/// excluded). `Ok(None)` is a clean end-of-stream on a frame boundary;
+/// `Truncated` means the peer hung up mid-frame; `TooLarge` fires before
+/// the oversized payload is ever buffered whole, so a hostile peer
+/// cannot balloon memory.
+pub fn read_frame<R: std::io::BufRead>(
+    r: &mut R,
+    max: usize,
+) -> std::result::Result<Option<Vec<u8>>, FrameError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        };
+        if chunk.is_empty() {
+            return if buf.is_empty() {
+                Ok(None)
+            } else {
+                Err(FrameError::Truncated)
+            };
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > max {
+                    r.consume(pos + 1);
+                    return Err(FrameError::TooLarge { max });
+                }
+                buf.extend_from_slice(&chunk[..pos]);
+                r.consume(pos + 1);
+                return Ok(Some(buf));
+            }
+            None => {
+                let n = chunk.len();
+                if buf.len() + n > max {
+                    r.consume(n);
+                    return Err(FrameError::TooLarge { max });
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +247,59 @@ mod tests {
             .collect();
         assert_eq!(siblings, vec!["token.json"], "tmp residue: {siblings:?}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, b"{\"v\":1}").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        write_frame(&mut wire, b"second \\n frame").unwrap();
+        let mut r = std::io::BufReader::new(&wire[..]);
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"{\"v\":1}");
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"");
+        assert_eq!(
+            read_frame(&mut r, 64).unwrap().unwrap(),
+            b"second \\n frame"
+        );
+        assert!(read_frame(&mut r, 64).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_frame_is_distinguished_from_clean_eof() {
+        let mut r = std::io::BufReader::new(&b"no terminator"[..]);
+        match read_frame(&mut r, 64) {
+            Err(FrameError::Truncated) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frame_is_refused_without_buffering_it() {
+        // terminator present but past the cap
+        let mut wire: Vec<u8> = vec![b'x'; 100];
+        wire.push(b'\n');
+        wire.extend_from_slice(b"after\n");
+        let mut r = std::io::BufReader::new(&wire[..]);
+        match read_frame(&mut r, 10) {
+            Err(FrameError::TooLarge { max: 10 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // no terminator at all, endless-looking payload
+        let big = vec![b'y'; 4096];
+        let mut r = std::io::BufReader::new(&big[..]);
+        match read_frame(&mut r, 16) {
+            Err(FrameError::TooLarge { max: 16 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_frame_rejects_embedded_newlines() {
+        let mut wire: Vec<u8> = Vec::new();
+        let err = write_frame(&mut wire, b"two\nframes").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(wire.is_empty(), "nothing may hit the wire: {wire:?}");
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! `cpt serve` end to end over fabricated cell runners (no PJRT — the
+//! CI `test-unit` tier): submit → poll → fetch must be byte-identical
+//! to the same spec through the direct campaign path, identical
+//! resubmissions must dedupe to zero new executions, simultaneous
+//! submissions must collapse to one job, and a daemon restarted over a
+//! dead daemon's debris must recover its interrupted jobs.
+
+mod common;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use common::{fab_outcome, tmp_dir};
+use cpt::config::toml::TomlDoc;
+use cpt::coordinator::campaign::{
+    run_campaign_global, CampaignRunOpts, SchedulerKind,
+};
+use cpt::coordinator::exec::{CellError, CellRunner, ExecMember};
+use cpt::coordinator::lease::TestClock;
+use cpt::coordinator::report;
+use cpt::prelude::*;
+use cpt::server::{jobs, Client, JobRecord, JobState, ServeOpts, Server};
+
+/// The spec every test submits: two members sharing one model, 4 cells
+/// total (mirrors the global-scheduler test campaign).
+fn campaign_toml() -> String {
+    "[campaign]\n\
+     name = \"servecamp\"\n\
+     \n\
+     [[campaign.sweep]]\n\
+     name = \"a\"\n\
+     model = \"mlp\"\n\
+     schedules = [\"CR\", \"RR\"]\n\
+     q_maxes = [8.0]\n\
+     trials = 1\n\
+     steps = 8\n\
+     \n\
+     [[campaign.sweep]]\n\
+     name = \"b\"\n\
+     model = \"mlp\"\n\
+     schedules = [\"CR\", \"STATIC\"]\n\
+     q_maxes = [8.0]\n\
+     trials = 1\n\
+     steps = 10\n"
+        .to_string()
+}
+
+fn plan_of(spec_toml: &str) -> CampaignPlan {
+    let doc = TomlDoc::parse(spec_toml).unwrap();
+    CampaignPlan::build(&CampaignSpec::from_toml(&doc).unwrap()).unwrap()
+}
+
+/// Fabricated worker: deterministic outcomes, global executed-cell
+/// counter — the zero-new-cells dedupe assertions hang off it.
+struct CountingRunner {
+    cells: Arc<AtomicUsize>,
+}
+
+impl CellRunner for CountingRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        self.cells.fetch_add(1, Ordering::SeqCst);
+        Ok(fab_outcome(&member.model, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (0, 0.0)
+    }
+
+    fn has_cached(&self, _fingerprint: &str) -> bool {
+        true
+    }
+}
+
+fn fingerprints(plan: &CampaignPlan) -> HashMap<String, String> {
+    plan.members
+        .iter()
+        .map(|m| (m.spec.model.clone(), format!("fp-{}", m.spec.model)))
+        .collect()
+}
+
+/// A start gate for the executor, so a test can hold the job mid-flight
+/// while clients race their submissions.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate { open: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn open(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut g = self.open.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// The production exec shape (`run_campaign` over the artifact
+/// manifest), with fabricated workers: same scheduler, same stores,
+/// same resume semantics — plus execution/cell counters.
+fn counting_exec(
+    execs: Arc<AtomicUsize>,
+    cells: Arc<AtomicUsize>,
+    gate: Option<Arc<Gate>>,
+) -> cpt::server::CampaignExec {
+    Arc::new(move |plan, opts| {
+        if let Some(g) = &gate {
+            g.wait_open();
+        }
+        execs.fetch_add(1, Ordering::SeqCst);
+        let fps = fingerprints(plan);
+        run_campaign_global(plan, opts, &fps, None, |_| {
+            Ok(CountingRunner { cells: cells.clone() })
+        })
+    })
+}
+
+fn serve_opts(root: &Path) -> ServeOpts {
+    ServeOpts {
+        root: root.to_path_buf(),
+        listen: "127.0.0.1:0".to_string(),
+        jobs: 2,
+        verbose: false,
+    }
+}
+
+#[test]
+fn submit_poll_fetch_is_byte_identical_to_direct_campaign_and_caches() {
+    let tmp = tmp_dir("serve_e2e");
+    let spec_toml = campaign_toml();
+    let plan = plan_of(&spec_toml);
+
+    // ground truth: the identical spec through the direct campaign path
+    // (`cpt campaign` reports through the same write_campaign_csv_tree)
+    let direct = run_campaign_global(
+        &plan,
+        &CampaignRunOpts {
+            root: tmp.join("direct"),
+            shard: ShardId::single(),
+            jobs: 2,
+            resume: false,
+            verbose: false,
+            scheduler: SchedulerKind::Global,
+        },
+        &fingerprints(&plan),
+        None,
+        |_| Ok(CountingRunner { cells: Arc::new(AtomicUsize::new(0)) }),
+    )
+    .unwrap();
+    let truth_dir = tmp.join("truth");
+    report::write_campaign_csv_tree(
+        &truth_dir,
+        direct
+            .members
+            .iter()
+            .map(|m| (m.name.as_str(), m.outcomes.as_slice())),
+    )
+    .unwrap();
+
+    let execs = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let serve_root = tmp.join("serve");
+    let srv = Server::start(
+        serve_opts(&serve_root),
+        counting_exec(execs.clone(), cells.clone(), None),
+        Arc::new(TestClock::new(100.0)),
+    )
+    .unwrap();
+    // the bound address is published for `cpt submit --connect`
+    assert_eq!(
+        std::fs::read_to_string(serve_root.join(jobs::SERVE_ADDR_FILE))
+            .unwrap(),
+        srv.addr()
+    );
+
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let (ticket, state, attached) = client.submit(&spec_toml).unwrap();
+    assert_eq!(ticket, plan.campaign_hash, "ticket IS the campaign hash");
+    assert_eq!(state, JobState::Queued);
+    assert!(!attached);
+
+    let v = client.wait_done(&ticket, 5).unwrap();
+    assert_eq!(v.state, JobState::Done);
+    assert_eq!(v.planned, plan.total_cells());
+    assert_eq!(v.done, Some(plan.total_cells()));
+
+    let files = client.result_files(&ticket).unwrap();
+    let names: Vec<&str> = files.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["a.csv", "b.csv", "campaign.csv"]);
+    for (name, data) in &files {
+        let want = std::fs::read_to_string(truth_dir.join(name)).unwrap();
+        assert_eq!(
+            data, &want,
+            "{name} differs between `cpt serve` and the direct campaign"
+        );
+    }
+    assert_eq!(execs.load(Ordering::SeqCst), 1);
+    assert_eq!(cells.load(Ordering::SeqCst), plan.total_cells());
+
+    // resubmitting the identical spec is a pure cache hit: same ticket,
+    // attached to the done job, identical bytes, zero new executions
+    // and zero new cells
+    let (t2, s2, attached2) = client.submit(&spec_toml).unwrap();
+    assert_eq!(t2, ticket);
+    assert_eq!(s2, JobState::Done);
+    assert!(attached2, "identical spec must dedupe onto the done job");
+    assert_eq!(client.result_files(&ticket).unwrap(), files);
+    assert_eq!(execs.load(Ordering::SeqCst), 1, "cache hit re-executed");
+    assert_eq!(
+        cells.load(Ordering::SeqCst),
+        plan.total_cells(),
+        "cache hit ran new cells"
+    );
+
+    // `jobs` over the wire and `cpt status <serve root>` (serve_status)
+    // agree on the one done job
+    let listed = client.jobs().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].ticket, ticket);
+    assert_eq!(listed[0].state, JobState::Done);
+    assert!(jobs::is_serve_root(&serve_root));
+    let views = jobs::serve_status(&serve_root).unwrap();
+    assert_eq!(views.len(), 1);
+    assert_eq!(views[0].ticket, ticket);
+    assert_eq!(views[0].state, JobState::Done);
+    assert_eq!(views[0].done, Some(plan.total_cells()));
+
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn simultaneous_identical_submissions_execute_exactly_once() {
+    let tmp = tmp_dir("serve_race");
+    let spec_toml = campaign_toml();
+    let plan = plan_of(&spec_toml);
+    let execs = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let gate = Arc::new(Gate::new());
+    let srv = Server::start(
+        serve_opts(&tmp.join("serve")),
+        counting_exec(execs.clone(), cells.clone(), Some(gate.clone())),
+        Arc::new(TestClock::new(0.0)),
+    )
+    .unwrap();
+    let addr = srv.addr().to_string();
+
+    // two clients submit the identical spec concurrently while the
+    // gate holds the executor mid-job
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let spec = spec_toml.clone();
+            std::thread::spawn(move || {
+                Client::connect(&addr).unwrap().submit(&spec).unwrap()
+            })
+        })
+        .collect();
+    let subs: Vec<(String, JobState, bool)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert_eq!(subs[0].0, plan.campaign_hash);
+    assert_eq!(subs[1].0, subs[0].0, "both clients share one ticket");
+    let fresh = subs.iter().filter(|(_, _, attached)| !attached).count();
+    assert_eq!(fresh, 1, "exactly one submission created the job: {subs:?}");
+
+    // the job is in flight: result is a typed not_done error
+    let ticket = subs[0].0.clone();
+    let mut a = Client::connect(&addr).unwrap();
+    let err = a.result_files(&ticket).unwrap_err().to_string();
+    assert!(err.contains("not_done"), "{err}");
+
+    gate.open();
+    a.wait_done(&ticket, 5).unwrap();
+    let fa = a.result_files(&ticket).unwrap();
+    let fb = Client::connect(&addr).unwrap().result_files(&ticket).unwrap();
+    assert_eq!(fa, fb, "both clients read byte-identical results");
+    assert_eq!(
+        execs.load(Ordering::SeqCst),
+        1,
+        "two submissions, one execution"
+    );
+    assert_eq!(cells.load(Ordering::SeqCst), plan.total_cells());
+
+    a.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn restart_recovers_interrupted_jobs_and_fences_tampered_specs() {
+    let tmp = tmp_dir("serve_recover");
+    let serve_root = tmp.join("serve");
+    let spec_toml = campaign_toml();
+    let plan = plan_of(&spec_toml);
+    let ticket = plan.campaign_hash.clone();
+
+    // fabricate the debris of a daemon that died mid-job: a `running`
+    // record whose spec is intact, and a sibling whose recorded ticket
+    // does not match its spec bytes (tampered / half-written)
+    jobs::init_serve_root(&serve_root).unwrap();
+    cpt::util::write_atomic(
+        jobs::job_dir(&serve_root, &ticket).join(jobs::JOB_SPEC_FILE),
+        spec_toml.as_bytes(),
+    )
+    .unwrap();
+    JobRecord {
+        ticket: ticket.clone(),
+        name: plan.name.clone(),
+        state: JobState::Running,
+        planned: plan.total_cells(),
+        submitted: 1.0,
+        finished: None,
+        error: None,
+    }
+    .store(&serve_root)
+    .unwrap();
+    let bad_ticket = "00000000deadbeef";
+    cpt::util::write_atomic(
+        jobs::job_dir(&serve_root, bad_ticket).join(jobs::JOB_SPEC_FILE),
+        spec_toml.as_bytes(),
+    )
+    .unwrap();
+    JobRecord {
+        ticket: bad_ticket.to_string(),
+        name: plan.name.clone(),
+        state: JobState::Queued,
+        planned: plan.total_cells(),
+        submitted: 2.0,
+        finished: None,
+        error: None,
+    }
+    .store(&serve_root)
+    .unwrap();
+
+    let execs = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let srv = Server::start(
+        serve_opts(&serve_root),
+        counting_exec(execs.clone(), cells.clone(), None),
+        Arc::new(TestClock::new(50.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+
+    // the interrupted job was requeued and runs to completion
+    let v = client.wait_done(&ticket, 5).unwrap();
+    assert_eq!(v.state, JobState::Done);
+    assert_eq!(execs.load(Ordering::SeqCst), 1);
+    client.result_files(&ticket).unwrap();
+
+    // the tampered job was fenced to `failed` at recovery, not executed
+    let bad = client.status(bad_ticket).unwrap();
+    assert_eq!(bad.state, JobState::Failed);
+    assert!(
+        bad.error.as_deref().unwrap_or("").contains("recovery"),
+        "{:?}",
+        bad.error
+    );
+
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn a_failed_job_reports_its_error_and_leaves_the_daemon_healthy() {
+    let tmp = tmp_dir("serve_fail");
+    let exec: cpt::server::CampaignExec =
+        Arc::new(|_, _| anyhow::bail!("injected executor failure"));
+    let srv = Server::start(
+        serve_opts(&tmp.join("serve")),
+        exec,
+        Arc::new(TestClock::new(0.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let (ticket, _, _) = client.submit(&campaign_toml()).unwrap();
+
+    let v = loop {
+        let v = client.status(&ticket).unwrap();
+        if v.state.is_terminal() {
+            break v;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    };
+    assert_eq!(v.state, JobState::Failed);
+    assert!(
+        v.error.as_deref().unwrap().contains("injected executor failure"),
+        "{:?}",
+        v.error
+    );
+    // `result` maps the failure to its typed code; `wait_done` to an Err
+    let err = client.result_files(&ticket).unwrap_err().to_string();
+    assert!(err.contains("job_failed"), "{err}");
+    let err = client.wait_done(&ticket, 5).unwrap_err().to_string();
+    assert!(err.contains("injected executor failure"), "{err}");
+    // the executor survives a failed job
+    client.ping().unwrap();
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -1,0 +1,335 @@
+//! The `cpt serve` wire protocol, attacked from both sides (the CI
+//! `test-unit` tier — no PJRT): a propcheck round trip over random
+//! request/response frames, the malformed-input matrix against the pure
+//! decoder, and the same matrix against a live daemon socket — every
+//! bad input gets a typed error reply, never a panic or a wedged
+//! connection.
+
+mod common;
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::bail;
+use common::tmp_dir;
+use cpt::coordinator::lease::TestClock;
+use cpt::server::proto::{
+    self, decode_request, decode_response, encode_request, encode_response,
+    ErrorCode, Request, Response, MAX_FRAME_BYTES,
+};
+use cpt::server::{Client, JobState, JobView, ServeOpts, Server};
+use cpt::util::prng::Pcg32;
+use cpt::util::propcheck::propcheck;
+use cpt::util::{read_frame, write_frame};
+
+/// Strings over an alphabet chosen to stress JSON escaping and framing:
+/// quotes, backslashes, braces, newlines (which compact JSON must keep
+/// escaped — a raw one would split the frame), control chars, unicode.
+fn rand_string(rng: &mut Pcg32) -> String {
+    const ALPHABET: [char; 16] = [
+        'a', 'Z', '0', '"', '\\', '\n', '\t', '{', '}', ':', ',', ' ',
+        'λ', '→', '\u{1}', '/',
+    ];
+    let len = rng.below(24) as usize;
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u32) as usize])
+        .collect()
+}
+
+fn rand_state(rng: &mut Pcg32) -> JobState {
+    match rng.below(4) {
+        0 => JobState::Queued,
+        1 => JobState::Running,
+        2 => JobState::Done,
+        _ => JobState::Failed,
+    }
+}
+
+fn rand_view(rng: &mut Pcg32) -> JobView {
+    JobView {
+        ticket: format!("{:016x}", rng.next_u32()),
+        name: rand_string(rng),
+        state: rand_state(rng),
+        planned: rng.below(100) as usize,
+        done: match rng.below(3) {
+            0 => None,
+            _ => Some(rng.below(100) as usize),
+        },
+        // awkward but finite float (bit-exact JSON round trip is part
+        // of the contract under test)
+        submitted: rng.next_u32() as f64 / 7.0,
+        error: match rng.below(3) {
+            0 => Some(rand_string(rng)),
+            _ => None,
+        },
+    }
+}
+
+fn rand_request(rng: &mut Pcg32) -> Request {
+    match rng.below(6) {
+        0 => Request::Ping,
+        1 => Request::Submit { spec_toml: rand_string(rng) },
+        2 => Request::Status { ticket: rand_string(rng) },
+        3 => Request::Result { ticket: rand_string(rng) },
+        4 => Request::Jobs,
+        _ => Request::Shutdown,
+    }
+}
+
+fn rand_response(rng: &mut Pcg32) -> Response {
+    match rng.below(7) {
+        0 => Response::Pong,
+        1 => Response::Submitted {
+            ticket: format!("{:016x}", rng.next_u32()),
+            state: rand_state(rng),
+            attached: rng.below(2) == 0,
+            planned: rng.below(50) as usize,
+        },
+        2 => Response::Status { job: rand_view(rng) },
+        3 => Response::ResultFiles {
+            ticket: format!("{:016x}", rng.next_u32()),
+            files: (0..rng.below(4))
+                .map(|i| (format!("f{i}.csv"), rand_string(rng)))
+                .collect(),
+        },
+        4 => Response::Jobs {
+            jobs: (0..rng.below(4)).map(|_| rand_view(rng)).collect(),
+        },
+        5 => Response::ShuttingDown,
+        _ => Response::Error {
+            code: ErrorCode::BadSpec,
+            message: rand_string(rng),
+        },
+    }
+}
+
+/// encode → frame → unframe → decode must reproduce the value exactly,
+/// for every request and response shape over hostile payload strings.
+#[test]
+fn frames_round_trip_for_random_requests_and_responses() {
+    propcheck(64, |rng| {
+        let req = rand_request(rng);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, encode_request(&req).as_bytes())
+            .map_err(|e| format!("write_frame: {e}"))?;
+        let mut r: &[u8] = &wire;
+        let frame = read_frame(&mut r, MAX_FRAME_BYTES)
+            .map_err(|e| format!("read_frame: {e}"))?
+            .ok_or_else(|| "unexpected EOF".to_string())?;
+        let back = decode_request(&frame)
+            .map_err(|(c, m)| format!("decode [{}]: {m}", c.as_str()))?;
+        cpt::prop_assert!(back == req, "request changed: {req:?} -> {back:?}");
+
+        let resp = rand_response(rng);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, encode_response(&resp).as_bytes())
+            .map_err(|e| format!("write_frame: {e}"))?;
+        let mut r: &[u8] = &wire;
+        let frame = read_frame(&mut r, MAX_FRAME_BYTES)
+            .map_err(|e| format!("read_frame: {e}"))?
+            .ok_or_else(|| "unexpected EOF".to_string())?;
+        let back =
+            decode_response(&frame).map_err(|e| format!("decode: {e:#}"))?;
+        cpt::prop_assert!(
+            back == resp,
+            "response changed: {resp:?} -> {back:?}"
+        );
+        Ok(())
+    });
+}
+
+/// The pure decoder maps every malformed frame to its specific typed
+/// error — decoding is total, the error class is part of the contract.
+#[test]
+fn malformed_request_frames_map_to_typed_errors() {
+    let cases: &[(&[u8], ErrorCode)] = &[
+        (b"\xff\xfe garbage", ErrorCode::BadJson),
+        (b"{not json", ErrorCode::BadJson),
+        (b"[1,2,3]", ErrorCode::BadSchemaVersion),
+        (b"{\"verb\": \"ping\"}", ErrorCode::BadSchemaVersion),
+        (b"{\"v\": 2, \"verb\": \"ping\"}", ErrorCode::BadSchemaVersion),
+        (b"{\"v\": \"one\", \"verb\": \"ping\"}", ErrorCode::BadSchemaVersion),
+        (b"{\"v\": 1.5, \"verb\": \"ping\"}", ErrorCode::BadSchemaVersion),
+        (b"{\"v\": 1}", ErrorCode::BadRequest),
+        (b"{\"v\": 1, \"verb\": 7}", ErrorCode::BadRequest),
+        (b"{\"v\": 1, \"verb\": \"dance\"}", ErrorCode::UnknownVerb),
+        (b"{\"v\": 1, \"verb\": \"submit\"}", ErrorCode::BadRequest),
+        (
+            b"{\"v\": 1, \"verb\": \"submit\", \"spec_toml\": 9}",
+            ErrorCode::BadRequest,
+        ),
+        (b"{\"v\": 1, \"verb\": \"status\"}", ErrorCode::BadRequest),
+        (
+            b"{\"v\": 1, \"verb\": \"result\", \"ticket\": null}",
+            ErrorCode::BadRequest,
+        ),
+    ];
+    for (frame, want) in cases {
+        match decode_request(frame) {
+            Err((code, msg)) => assert_eq!(
+                code,
+                *want,
+                "frame {:?}: got [{}] {msg}",
+                String::from_utf8_lossy(frame),
+                code.as_str()
+            ),
+            Ok(req) => panic!(
+                "frame {:?} decoded to {req:?}",
+                String::from_utf8_lossy(frame)
+            ),
+        }
+    }
+}
+
+/// A daemon whose executor can never run anything — pure protocol
+/// surface. Jobs submitted here would fail if executed; these tests
+/// never submit a valid spec.
+fn proto_server(root: &Path) -> Server {
+    let exec: cpt::server::CampaignExec =
+        Arc::new(|_, _| bail!("no exec in proto tests"));
+    Server::start(
+        ServeOpts {
+            root: root.to_path_buf(),
+            listen: "127.0.0.1:0".to_string(),
+            jobs: 1,
+            verbose: false,
+        },
+        exec,
+        Arc::new(TestClock::new(0.0)),
+    )
+    .unwrap()
+}
+
+/// Send one raw frame, expect one typed error reply with `want`.
+fn expect_error_reply(stream: &mut TcpStream, want: ErrorCode) {
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let frame = read_frame(&mut reader, MAX_FRAME_BYTES)
+        .expect("reply frame")
+        .expect("server closed without replying");
+    match decode_response(&frame).unwrap() {
+        Response::Error { code, message } => {
+            assert_eq!(code, want, "unexpected error class: {message}")
+        }
+        other => panic!("expected {want:?} error, got {other:?}"),
+    }
+}
+
+#[test]
+fn live_daemon_answers_every_malformed_input_with_a_typed_error() {
+    let root = tmp_dir("serve_proto_live");
+    let srv = proto_server(&root);
+    let addr = srv.addr().to_string();
+
+    // in-frame errors: typed reply AND the connection stays usable
+    let in_frame: &[(&[u8], ErrorCode)] = &[
+        (b"{not json", ErrorCode::BadJson),
+        (b"{\"v\": 3, \"verb\": \"ping\"}", ErrorCode::BadSchemaVersion),
+        (b"{\"v\": 1, \"verb\": \"dance\"}", ErrorCode::UnknownVerb),
+        (b"{\"v\": 1, \"verb\": \"status\"}", ErrorCode::BadRequest),
+    ];
+    for (frame, want) in in_frame {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(frame).unwrap();
+        stream.write_all(b"\n").unwrap();
+        expect_error_reply(&mut stream, *want);
+        // same connection must still answer a well-formed request
+        let mut reader =
+            std::io::BufReader::new(stream.try_clone().unwrap());
+        write_frame(&mut stream, encode_request(&Request::Ping).as_bytes())
+            .unwrap();
+        let frame = read_frame(&mut reader, MAX_FRAME_BYTES)
+            .unwrap()
+            .expect("connection wedged after typed error");
+        assert_eq!(decode_response(&frame).unwrap(), Response::Pong);
+    }
+
+    // typed application errors through the real client
+    let mut client = Client::connect(&addr).unwrap();
+    let err = client
+        .submit("this is [ not a campaign\n")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bad_spec"), "{err}");
+    // valid TOML, invalid campaign
+    let err = client.submit("[campaign]\n").unwrap_err().to_string();
+    assert!(err.contains("bad_spec"), "{err}");
+    let err = client.status("aaaabbbbccccdddd").unwrap_err().to_string();
+    assert!(err.contains("unknown_ticket"), "{err}");
+    let err = client
+        .result_files("aaaabbbbccccdddd")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown_ticket"), "{err}");
+    // the connection survived four application errors
+    client.ping().unwrap();
+
+    // an oversized frame compromises the stream: typed reply, then the
+    // daemon closes — and fresh connections still work (exactly max+1
+    // bytes, so the daemon consumes the whole payload before replying
+    // and its close cannot RST the reply away)
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let chunk = vec![b'x'; 1 << 16];
+    let mut left = MAX_FRAME_BYTES + 1;
+    while left > 0 {
+        let n = left.min(chunk.len());
+        stream.write_all(&chunk[..n]).unwrap();
+        left -= n;
+    }
+    expect_error_reply(&mut stream, ErrorCode::FrameTooLarge);
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    assert_eq!(
+        read_frame(&mut reader, MAX_FRAME_BYTES).unwrap(),
+        None,
+        "daemon must close after an oversized frame"
+    );
+
+    // a truncated frame (peer hangs up mid-frame) likewise: typed
+    // reply, then close
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"{\"v\": 1, \"verb\": \"pi").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    expect_error_reply(&mut stream, ErrorCode::BadFrame);
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    assert_eq!(read_frame(&mut reader, MAX_FRAME_BYTES).unwrap(), None);
+
+    // a clean disconnect between frames is not an error at all
+    drop(TcpStream::connect(&addr).unwrap());
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    // clean shutdown: acknowledged, then the daemon exits
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The version field is checked before the verb: a future-versioned
+/// frame with an unknown verb must be answered as a version problem, so
+/// old daemons never misreport what newer clients say.
+#[test]
+fn schema_version_is_checked_before_the_verb() {
+    match decode_request(b"{\"v\": 9, \"verb\": \"brand_new_verb\"}") {
+        Err((code, _)) => assert_eq!(code, ErrorCode::BadSchemaVersion),
+        Ok(r) => panic!("decoded {r:?}"),
+    }
+    // error codes on the wire round trip through their stable strings
+    for code in [
+        ErrorCode::BadFrame,
+        ErrorCode::FrameTooLarge,
+        ErrorCode::BadJson,
+        ErrorCode::BadSchemaVersion,
+        ErrorCode::UnknownVerb,
+        ErrorCode::BadRequest,
+        ErrorCode::BadSpec,
+        ErrorCode::UnknownTicket,
+        ErrorCode::NotDone,
+        ErrorCode::JobFailed,
+        ErrorCode::Internal,
+    ] {
+        assert_eq!(ErrorCode::parse(code.as_str()).unwrap(), code);
+    }
+    assert!(ErrorCode::parse("no_such_code").is_err());
+    assert_eq!(proto::PROTO_VERSION, 1);
+}

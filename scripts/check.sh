@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate for the cpt crate: format, lint, tests, and
-# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus five
+# (with --smoke) a 1-rep perf_hotpath bench run on mlp only plus six
 # end-to-end orchestration passes — a 2-shard sweep + merge, a 2-shard
 # *adaptive-policy* sweep killed mid-run / resumed / merged, a 3-sweep
 # campaign (one member adaptive) on the sequential scheduler that is
@@ -9,16 +9,20 @@
 # sweeps) whose merged CSVs must be byte-identical to the sequential
 # pass, and a lease-claim sweep where one claimer is killed and one
 # stalls mid-run yet the survivors' CSVs match the static-shard
-# baseline — so the bench targets and the whole coordinator surface are
-# compiled-and-exercised without paying full bench cost.
+# baseline, and a `cpt serve` daemon pass whose fetched CSVs must be
+# byte-identical to the direct campaign and whose identical
+# resubmission must be a spec-hash cache hit — so the bench targets and
+# the whole coordinator surface are compiled-and-exercised without
+# paying full bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
 #                               # integration files (tests/campaign.rs,
 #                               # tests/global_sched.rs, tests/policy.rs,
-#                               # tests/lease.rs, tests/aot.rs); needs no
-#                               # HLO artifacts — the CI test-unit job
-#                               # runs this tier
+#                               # tests/lease.rs, tests/aot.rs,
+#                               # tests/serve_proto.rs, tests/serve.rs);
+#                               # needs no HLO artifacts — the CI
+#                               # test-unit job runs this tier
 #   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
 #                               # + fig_policy + shard/merge, policy, and
 #                               # campaign smokes
@@ -80,6 +84,10 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --test lease
   echo "== cargo test -q --test aot (fabricated persistent AOT cache)"
   cargo test -q --test aot
+  echo "== cargo test -q --test serve_proto (serve wire-protocol round-trip + malformed-input matrix)"
+  cargo test -q --test serve_proto
+  echo "== cargo test -q --test serve (fabricated serve daemon: dedupe, recovery, failure)"
+  cargo test -q --test serve
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -362,6 +370,76 @@ EOF
     $CPT cache gc --aot-cache "$AOT_DIR" >/dev/null
     $CPT gc "$AOT_DIR" >/dev/null
     echo "aot smoke: CSVs byte-identical across cold, warm, and corrupted-cache runs"
+
+    echo "== serve smoke (daemon submit/poll/fetch + spec-hash cache hit on resubmit)"
+    # A long-running `cpt serve` daemon over the same campaign spec. The
+    # first submission executes through the global pool; the fetched
+    # CSVs must be byte-identical to the direct-campaign ground truth
+    # in campout/. The second, identical submission must be answered
+    # straight from the store — the client prints the cache-hit line,
+    # i.e. zero new compiles/cells — and fetch the same bytes. `cpt
+    # status` on the serve root and `cpt jobs` over the wire must both
+    # list the finished job, and `cpt shutdown` must stop the daemon
+    # cleanly (exit 0).
+    SERVE_ROOT="$SMOKE_DIR/serve"
+    # run the daemon from the built binary (not `cargo run`) so the
+    # trap's kill reaches the daemon itself, never a cargo wrapper
+    cargo build --release --quiet --bin cpt
+    target/release/cpt serve --root "$SERVE_ROOT" --listen 127.0.0.1:0 --jobs 2 \
+      > "$SMOKE_DIR/serve.log" 2>&1 &
+    SERVE_PID=$!
+    trap 'kill "$SERVE_PID" 2>/dev/null || true; rm -rf "$SMOKE_DIR"' EXIT
+    for _ in $(seq 1 240); do
+      [ -f "$SERVE_ROOT/serve-addr" ] && break
+      if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "check.sh: serve daemon died before binding" >&2
+        cat "$SMOKE_DIR/serve.log" >&2 || true
+        exit 1
+      fi
+      sleep 0.5
+    done
+    if [ ! -f "$SERVE_ROOT/serve-addr" ]; then
+      echo "check.sh: serve daemon never published its address" >&2
+      cat "$SMOKE_DIR/serve.log" >&2 || true
+      exit 1
+    fi
+    ADDR="$(cat "$SERVE_ROOT/serve-addr")"
+    $CPT submit --connect "$ADDR" --file "$CAMP_TOML" --wait \
+      --out "$SMOKE_DIR/servefetch1"
+    SUB2="$($CPT submit --connect "$ADDR" --file "$CAMP_TOML" --wait \
+      --out "$SMOKE_DIR/servefetch2")"
+    case "$SUB2" in
+      *"cache hit"*) ;;
+      *)
+        echo "check.sh: identical resubmission was not served from the cache" >&2
+        echo "$SUB2" >&2
+        exit 1 ;;
+    esac
+    for d in servefetch1 servefetch2; do
+      for f in a.csv b.csv c.csv campaign.csv; do
+        if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/$d/$f"; then
+          echo "check.sh: served $d/$f differs from the direct-campaign ground truth" >&2
+          exit 1
+        fi
+      done
+    done
+    if ! $CPT status "$SERVE_ROOT" | grep -q "done"; then
+      echo "check.sh: cpt status on the serve root should list the finished job" >&2
+      $CPT status "$SERVE_ROOT" >&2 || true
+      exit 1
+    fi
+    if ! $CPT jobs --connect "$ADDR" | grep -q "done"; then
+      echo "check.sh: cpt jobs should list the finished job over the wire" >&2
+      exit 1
+    fi
+    $CPT shutdown --connect "$ADDR"
+    if ! wait "$SERVE_PID"; then
+      echo "check.sh: serve daemon did not exit cleanly after shutdown" >&2
+      cat "$SMOKE_DIR/serve.log" >&2 || true
+      exit 1
+    fi
+    trap 'rm -rf "$SMOKE_DIR"' EXIT
+    echo "serve smoke: resubmission served from the cache; fetched CSVs byte-identical to the direct campaign"
 
     echo "== fig_campaign_sched bench (executable-cache compile accounting)"
     cargo bench --bench fig_campaign_sched
