@@ -14,19 +14,28 @@
 //!   * the shared campaign twice more with fresh pools over one
 //!     persistent CPT_AOT_CACHE dir — cold-vs-warm wall clock and
 //!     compile counts (warm must be 0 when the backend can serialize
-//!     executables; otherwise the numbers document the inert fallback).
+//!     executables; otherwise the numbers document the inert fallback);
+//!   * the serve shape: two distinct shared-model campaigns through one
+//!     persistent worker pool (`run_campaign_pooled`, as the daemon
+//!     wires it) vs each job paying for its own fresh pool — per-job
+//!     wall clock, the cross-job compile count (hard gate: the second
+//!     job compiles nothing), and both jobs concurrently in flight.
 //!
 //! Emits BENCH_campaign_sched.json (override with CPT_BENCH_JSON /
 //! --json). The bench is already smoke-sized (tiny mlp sweeps), so it
 //! has no separate --smoke mode.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 use cpt::coordinator::campaign::{
-    CampaignMember, CampaignRunOpts, CampaignRunResult, SchedulerKind,
+    run_campaign_pooled, CampaignMember, CampaignRunOpts, CampaignRunResult,
+    SchedulerKind,
 };
+use cpt::coordinator::{exec, pool, store};
 use cpt::prelude::*;
 use cpt::util::json::{num, obj, s, Json};
 
@@ -195,6 +204,132 @@ fn main() -> Result<()> {
         ),
     }
 
+    // --- serve: one persistent pool across jobs ----------------------
+    // The daemon shape: two distinct shared-model campaigns through one
+    // long-lived pool. Baseline is the pre-pool daemon — every job gets
+    // a fresh pool, so every job pays the compiles again.
+    let cspec2 = CampaignSpec {
+        name: "bench-shared2".into(),
+        run_dir: None,
+        members: vec![
+            member("c", &["CR", "RR", "STATIC"], 18),
+            member("d", &["CR", "ETH", "STATIC"], 18),
+        ],
+    };
+    let plan2 = CampaignPlan::build(&cspec2)?;
+    let (jobs_a, jobs_a_wall) = run(
+        &manifest,
+        &plan,
+        &tmp.join("serve_seq_a"),
+        workers,
+        SchedulerKind::Global,
+    )?;
+    let (jobs_b, jobs_b_wall) = run(
+        &manifest,
+        &plan2,
+        &tmp.join("serve_seq_b"),
+        workers,
+        SchedulerKind::Global,
+    )?;
+    let seq_jobs_wall = jobs_a_wall + jobs_b_wall;
+    let seq_jobs_compiles = jobs_a
+        .scheduler
+        .expect("job a scheduler stats")
+        .total_compiles()
+        + jobs_b.scheduler.expect("job b scheduler stats").total_compiles();
+
+    let ms = manifest.model("mlp")?.clone();
+    let mut fps = HashMap::new();
+    fps.insert("mlp".to_string(), store::model_fingerprint(&ms)?);
+    let mut specs_map = HashMap::new();
+    specs_map.insert("mlp".to_string(), ms);
+    let specs = Arc::new(exec::SpecRegistry::from_map(specs_map));
+    let cache_cap = exec::exec_cache_cap()?;
+    let factory: Arc<pool::WorkerFactory> = {
+        let specs = specs.clone();
+        Arc::new(move |_| {
+            let r = exec::PjrtCellRunner::new(specs.clone(), cache_cap, None)?;
+            Ok(Box::new(r) as Box<dyn exec::CellRunner>)
+        })
+    };
+    let wpool = Arc::new(pool::WorkerPool::new(workers, "bench", factory));
+    let popts = |root: PathBuf| CampaignRunOpts {
+        root,
+        shard: ShardId::single(),
+        jobs: workers,
+        resume: false,
+        verbose: false,
+        scheduler: SchedulerKind::Global,
+    };
+    let t0 = Instant::now();
+    let pool_a = run_campaign_pooled(
+        &plan,
+        &popts(tmp.join("serve_pool_a")),
+        &fps,
+        None,
+        &wpool,
+    )?;
+    let pool_a_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let pool_b = run_campaign_pooled(
+        &plan2,
+        &popts(tmp.join("serve_pool_b")),
+        &fps,
+        None,
+        &wpool,
+    )?;
+    let pool_b_wall = t0.elapsed().as_secs_f64();
+    let pool_jobs_wall = pool_a_wall + pool_b_wall;
+    let pool_a_compiles = pool_a
+        .scheduler
+        .expect("pooled job a stats")
+        .total_compiles();
+    let cross_job_compiles = pool_b
+        .scheduler
+        .expect("pooled job b stats")
+        .total_compiles();
+
+    // both jobs in flight at once on the now-warm shared pool
+    let t0 = Instant::now();
+    std::thread::scope(|sc| -> Result<()> {
+        let ja = sc.spawn(|| {
+            run_campaign_pooled(
+                &plan,
+                &popts(tmp.join("serve_conc_a")),
+                &fps,
+                None,
+                &wpool,
+            )
+        });
+        let jb = sc.spawn(|| {
+            run_campaign_pooled(
+                &plan2,
+                &popts(tmp.join("serve_conc_b")),
+                &fps,
+                None,
+                &wpool,
+            )
+        });
+        ja.join().expect("pooled job a thread")?;
+        jb.join().expect("pooled job b thread")?;
+        Ok(())
+    })?;
+    let concurrent_wall = t0.elapsed().as_secs_f64();
+    wpool.join();
+    println!(
+        "\nserve pool (2 jobs sharing one model, {workers} workers): \
+         fresh-pool-per-job {seq_jobs_wall:.2}s / {seq_jobs_compiles} \
+         compile(s), persistent pool {pool_jobs_wall:.2}s \
+         ({pool_a_compiles} + {cross_job_compiles} compile(s)), both \
+         jobs concurrent {concurrent_wall:.2}s"
+    );
+    let cross_job_ok = cross_job_compiles == 0;
+    println!(
+        "  cross-job warm start: {} (second job compiled \
+         {cross_job_compiles} time(s))",
+        if cross_job_ok { "OK" } else { "FAILED" }
+    );
+
     let worker_rows: Vec<Json> = sched
         .workers
         .iter()
@@ -209,7 +344,7 @@ fn main() -> Result<()> {
         .collect();
     let doc = obj(vec![
         ("bench", s("fig_campaign_sched")),
-        ("version", num(2.0)),
+        ("version", num(3.0)),
         (
             "shared_model",
             obj(vec![
@@ -228,6 +363,19 @@ fn main() -> Result<()> {
             obj(vec![
                 ("sequential_wall_s", num(single_seq)),
                 ("global_wall_s", num(single_glob)),
+            ]),
+        ),
+        (
+            "serve",
+            obj(vec![
+                ("workers", num(workers as f64)),
+                ("sequential_jobs_wall_s", num(seq_jobs_wall)),
+                ("sequential_jobs_compiles", num(seq_jobs_compiles as f64)),
+                ("pooled_jobs_wall_s", num(pool_jobs_wall)),
+                ("pooled_first_job_compiles", num(pool_a_compiles as f64)),
+                ("cross_job_compiles", num(cross_job_compiles as f64)),
+                ("cross_job_warm", Json::Bool(cross_job_ok)),
+                ("concurrent_jobs_wall_s", num(concurrent_wall)),
             ]),
         ),
         (
@@ -255,6 +403,13 @@ fn main() -> Result<()> {
         compiles,
         members,
         workers,
+        out.display()
+    );
+    anyhow::ensure!(
+        cross_job_ok,
+        "persistent pool recompiled a shared model across jobs: the \
+         second job compiled {} time(s) (see {})",
+        cross_job_compiles,
         out.display()
     );
     // hard gate only when the backend can actually serialize — otherwise

@@ -38,6 +38,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -45,6 +46,7 @@ use anyhow::{bail, Context, Result};
 use super::aot;
 use super::exec::{self, ExecItem, ExecMember, WorkerStats};
 use super::plan::{PlannedCell, ShardId, SweepPlan};
+use super::pool;
 use super::store::{
     self, compact_run_dir, merge_run_dirs, GcStats, ManifestSummary, RunStore,
 };
@@ -906,10 +908,11 @@ pub fn run_campaign(
                     specs.insert(m.spec.model.clone(), ms);
                 }
             }
+            let specs = Arc::new(exec::SpecRegistry::from_map(specs));
             let cache_cap = exec::exec_cache_cap()?;
-            let aot = aot::store_for_run()?;
+            let aot = aot::store_for_run()?.map(Arc::new);
             run_campaign_global(plan, opts, &fingerprints, None, |_| {
-                exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref())
+                exec::PjrtCellRunner::new(specs.clone(), cache_cap, aot.clone())
             })
         }
     }
@@ -994,10 +997,109 @@ where
     let t0 = Instant::now();
     open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
     let jobs = opts.jobs.max(1);
+    let mut prep = prepare_members(plan, opts, fingerprints, jobs)?;
 
-    // Per member: open its nested store, resume cells with valid
-    // artifacts into canonical-order slots, and describe the member to
-    // the executor (model, fingerprint, resolved steps/cycles, cap).
+    if opts.verbose {
+        eprintln!(
+            "[campaign {}] global scheduler: {} cell(s) across {} member(s) \
+             on {} worker(s)",
+            plan.name,
+            prep.items.len(),
+            plan.members.len(),
+            jobs.min(prep.items.len().max(1))
+        );
+    }
+    let had_items = !prep.items.is_empty();
+    let req = exec::ExecRequest {
+        label: format!("campaign {}", plan.name),
+        members: &prep.members_meta,
+        items: &prep.items,
+        jobs,
+        verbose: opts.verbose,
+        halt_after_cells,
+        source: None,
+    };
+    let mut store_refs: Vec<Option<&mut dyn exec::CellSink>> = prep
+        .stores
+        .iter_mut()
+        .map(|s| s.as_mut().map(|st| st as &mut dyn exec::CellSink))
+        .collect();
+    let stats =
+        exec::run_items(&req, &mut store_refs, &mut prep.slots, make_worker)
+            .with_context(|| format!("campaign '{}'", plan.name))?;
+    drop(store_refs);
+
+    finish_campaign(plan, opts, t0, stats, had_items, prep.slots, prep.resumed)
+}
+
+/// Pooled path: attach the campaign as one job on a persistent
+/// [`pool::WorkerPool`] instead of spawning (and tearing down) workers
+/// per call. Member stores, resume, slot routing, and manifest stats all
+/// match `run_campaign_global` — the difference is who owns the workers,
+/// and therefore whose executable caches this job warms or reuses. The
+/// daemon routes every concurrent job through one pool, so a job sharing
+/// a model fingerprint with an earlier one compiles nothing.
+pub fn run_campaign_pooled(
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+    fingerprints: &HashMap<String, String>,
+    halt_after_cells: Option<usize>,
+    pool: &pool::WorkerPool,
+) -> Result<CampaignRunResult> {
+    let t0 = Instant::now();
+    open_campaign_root(&opts.root, plan, opts.shard, opts.resume)?;
+    let mut prep = prepare_members(plan, opts, fingerprints, pool.size())?;
+
+    if opts.verbose {
+        eprintln!(
+            "[campaign {}] pooled scheduler: {} cell(s) across {} member(s) \
+             on a {}-worker shared pool",
+            plan.name,
+            prep.items.len(),
+            plan.members.len(),
+            pool.size()
+        );
+    }
+    let had_items = !prep.items.is_empty();
+    let req = pool::PoolRequest {
+        label: format!("campaign {}", plan.name),
+        members: prep.members_meta,
+        items: prep.items,
+        verbose: opts.verbose,
+        halt_after_cells,
+    };
+    let mut store_refs: Vec<Option<&mut dyn exec::CellSink>> = prep
+        .stores
+        .iter_mut()
+        .map(|s| s.as_mut().map(|st| st as &mut dyn exec::CellSink))
+        .collect();
+    let stats = pool
+        .run_job(&req, &mut store_refs, &mut prep.slots)
+        .with_context(|| format!("campaign '{}'", plan.name))?;
+    drop(store_refs);
+
+    finish_campaign(plan, opts, t0, stats, had_items, prep.slots, prep.resumed)
+}
+
+/// Per-member execution state shared by the global and pooled paths.
+struct PreparedMembers {
+    stores: Vec<Option<RunStore>>,
+    slots: Vec<Vec<Option<RunOutcome>>>,
+    members_meta: Vec<ExecMember>,
+    resumed: Vec<usize>,
+    items: Vec<ExecItem>,
+}
+
+/// Open every member's nested store, resume cells with valid artifacts
+/// into canonical-order slots, describe each member to the executor
+/// (model, fingerprint, resolved steps/cycles, cap against `jobs`
+/// workers), and flatten the remaining cells into the item list.
+fn prepare_members(
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+    fingerprints: &HashMap<String, String>,
+    jobs: usize,
+) -> Result<PreparedMembers> {
     let mut stores: Vec<Option<RunStore>> = Vec::new();
     let mut slots: Vec<Vec<Option<RunOutcome>>> = Vec::new();
     let mut members_meta: Vec<ExecMember> = Vec::new();
@@ -1067,39 +1169,26 @@ where
             cell: pc.cell,
         });
     }
+    Ok(PreparedMembers { stores, slots, members_meta, resumed, items })
+}
 
-    if opts.verbose {
-        eprintln!(
-            "[campaign {}] global scheduler: {} cell(s) across {} member(s) \
-             on {} worker(s)",
-            plan.name,
-            items.len(),
-            plan.members.len(),
-            jobs.min(items.len().max(1))
-        );
-    }
-    let req = exec::ExecRequest {
-        label: format!("campaign {}", plan.name),
-        members: &members_meta,
-        items: &items,
-        jobs,
-        verbose: opts.verbose,
-        halt_after_cells,
-        source: None,
-    };
-    let mut store_refs: Vec<Option<&mut dyn exec::CellSink>> = stores
-        .iter_mut()
-        .map(|s| s.as_mut().map(|st| st as &mut dyn exec::CellSink))
-        .collect();
-    let stats = exec::run_items(&req, &mut store_refs, &mut slots, make_worker)
-        .with_context(|| format!("campaign '{}'", plan.name))?;
-
+/// Shared tail of the global and pooled paths: record scheduler stats
+/// into the campaign manifest and assemble per-member outcomes.
+fn finish_campaign(
+    plan: &CampaignPlan,
+    opts: &CampaignRunOpts,
+    t0: Instant,
+    stats: exec::ExecStats,
+    had_items: bool,
+    slots: Vec<Vec<Option<RunOutcome>>>,
+    resumed: Vec<usize>,
+) -> Result<CampaignRunResult> {
     // Record per-worker compile accounting into the campaign manifest so
     // `cpt status` can surface it after the fact. A fully resumed run
     // spawned no workers — keep the stats of the run that did the work
     // instead of overwriting them with an empty record.
     let jobs_run = stats.jobs;
-    let sched = if items.is_empty() {
+    let sched = if !had_items {
         read_campaign_manifest(&opts.root)?.scheduler
     } else {
         let s = SchedulerStats { jobs: stats.jobs, workers: stats.workers };

@@ -40,7 +40,7 @@
 //!   never cross member boundaries.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -68,11 +68,11 @@ pub fn exec_cache_cap() -> Result<usize> {
 /// retried this many times per (worker, model) with exponential backoff
 /// before the worker permanently skips the model and the item is handed
 /// back to the pool.
-const SETUP_ATTEMPTS: usize = 3;
+pub(crate) const SETUP_ATTEMPTS: usize = 3;
 const SETUP_BACKOFF_MS: u64 = 50;
 
 /// Backoff before retry `attempt` (1-based): 50ms, 200ms, ...
-fn setup_backoff(attempt: usize) -> Duration {
+pub(crate) fn setup_backoff(attempt: usize) -> Duration {
     Duration::from_millis(SETUP_BACKOFF_MS * 4u64.pow(attempt.min(4) as u32 - 1))
 }
 
@@ -848,6 +848,45 @@ where
     Ok(ExecStats { jobs, workers: worker_stats, refused })
 }
 
+/// Shared, append-only registry of pre-validated model specs keyed by
+/// model name. The static paths (sweep, campaign, claim) fill it once
+/// up-front; a long-lived `cpt serve` pool keeps one registry for the
+/// daemon's whole lifetime and registers each job's models at submit
+/// time, so workers spawned before a job existed can still resolve its
+/// specs. Append-only by convention: a model name always maps to the
+/// same spec content within one process (the artifact manifest is
+/// fixed), so re-registration is an idempotent overwrite.
+#[derive(Default)]
+pub struct SpecRegistry {
+    specs: RwLock<HashMap<String, ModelSpec>>,
+}
+
+impl SpecRegistry {
+    pub fn new() -> SpecRegistry {
+        SpecRegistry::default()
+    }
+
+    /// Wrap an already-built spec table (the static one-shot paths).
+    pub fn from_map(specs: HashMap<String, ModelSpec>) -> SpecRegistry {
+        SpecRegistry { specs: RwLock::new(specs) }
+    }
+
+    /// Register (or idempotently re-register) one model spec.
+    pub fn insert(&self, name: &str, spec: ModelSpec) {
+        self.specs.write().unwrap().insert(name.to_string(), spec);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.specs.read().unwrap().contains_key(name)
+    }
+
+    /// Clone out a spec (specs are small metadata; lookups happen only
+    /// on executable-cache misses).
+    pub fn get(&self, name: &str) -> Option<ModelSpec> {
+        self.specs.read().unwrap().get(name).cloned()
+    }
+}
+
 /// Production [`CellRunner`]: one PJRT client plus a two-level cache of
 /// compiled entry-point sets keyed by model fingerprint — an in-memory
 /// LRU, optionally backed by the persistent AOT disk store
@@ -855,13 +894,15 @@ where
 /// worker (DESIGN-perf §1), so the cache is what makes cross-member
 /// scheduling cheap: claiming a cell of a member whose model is already
 /// cached costs zero recompiles, and with a populated AOT store even a
-/// brand-new process warm-starts.
-pub struct PjrtCellRunner<'a> {
+/// brand-new process warm-starts. Ownership is `Arc`-shared (not
+/// borrowed) so a runner can live on a detached `'static` pool thread
+/// that outlives any one run (`coordinator::pool`).
+pub struct PjrtCellRunner {
     rt: Runtime,
     /// Pre-validated specs shared by every worker, keyed by model name.
-    specs: &'a HashMap<String, ModelSpec>,
+    specs: Arc<SpecRegistry>,
     /// Second level below the LRU; `None` runs memory-only.
-    aot: Option<&'a AotStore>,
+    aot: Option<Arc<AotStore>>,
     /// LRU order: most recently used last.
     cache: Vec<(String, LoadedModel)>,
     cache_cap: usize,
@@ -871,11 +912,11 @@ pub struct PjrtCellRunner<'a> {
     aot_noted: bool,
 }
 
-impl<'a> PjrtCellRunner<'a> {
+impl PjrtCellRunner {
     pub fn new(
-        specs: &'a HashMap<String, ModelSpec>,
+        specs: Arc<SpecRegistry>,
         cache_cap: usize,
-        aot: Option<&'a AotStore>,
+        aot: Option<Arc<AotStore>>,
     ) -> Result<Self> {
         Ok(PjrtCellRunner {
             rt: Runtime::cpu()?,
@@ -908,14 +949,14 @@ impl<'a> PjrtCellRunner<'a> {
         let spec = self.specs.get(&member.model).with_context(|| {
             format!("no shared spec for model '{}'", member.model)
         })?;
-        let model = match self.aot_load(member, spec) {
+        let model = match self.aot_load(member, &spec) {
             Some(model) => {
                 self.cache_stats.disk_hits += 1;
                 model
             }
             None => {
                 let t0 = Instant::now();
-                let model = self.rt.load_model(spec)?;
+                let model = self.rt.load_model(&spec)?;
                 self.compiles += 1;
                 self.compile_seconds += t0.elapsed().as_secs_f64();
                 self.aot_publish(member, &model);
@@ -952,7 +993,7 @@ impl<'a> PjrtCellRunner<'a> {
             &self.rt.platform(),
             aot::CODEC_PJRT,
         );
-        let payloads = self.aot?.load(&key)?;
+        let payloads = self.aot.as_ref()?.load(&key)?;
         match self.rt.load_model_from_bytes(spec, &payloads) {
             Ok(model) => Some(model),
             Err(err) => {
@@ -980,8 +1021,11 @@ impl<'a> PjrtCellRunner<'a> {
         );
         match self.rt.serialize_model(model) {
             Ok(payloads) => {
-                if let Err(err) =
-                    self.aot.unwrap().publish(&key, &member.model, &payloads)
+                if let Err(err) = self
+                    .aot
+                    .as_ref()
+                    .unwrap()
+                    .publish(&key, &member.model, &payloads)
                 {
                     self.note_once(&format!(
                         "could not publish executable for '{}' ({err:#})",
@@ -1001,7 +1045,7 @@ impl<'a> PjrtCellRunner<'a> {
     }
 }
 
-impl CellRunner for PjrtCellRunner<'_> {
+impl CellRunner for PjrtCellRunner {
     fn run_cell(
         &mut self,
         member: &ExecMember,

@@ -1122,8 +1122,9 @@ pub fn run_claim_sweep(
     };
     let mut specs = HashMap::new();
     specs.insert(spec.model.clone(), model_spec);
+    let specs = Arc::new(exec::SpecRegistry::from_map(specs));
     let cache_cap = exec::exec_cache_cap()?;
-    let aot = aot::store_for_run()?;
+    let aot = aot::store_for_run()?.map(Arc::new);
     let workers_dir = dir.join(CLAIM_DIR).join(WORKERS_DIR);
     let (mut outs, stats) = run_claim(
         &format!("sweep {}", spec.model),
@@ -1133,7 +1134,7 @@ pub fn run_claim_sweep(
         spec.verbose,
         cfg,
         None,
-        |_| exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref()),
+        |_| exec::PjrtCellRunner::new(specs.clone(), cache_cap, aot.clone()),
     )?;
     let outcomes = outs.pop().unwrap();
     let timing = SweepTiming {
@@ -1209,8 +1210,9 @@ pub fn run_claim_campaign(
             cells: mplan.cells.clone(),
         });
     }
+    let specs = Arc::new(exec::SpecRegistry::from_map(specs));
     let cache_cap = exec::exec_cache_cap()?;
-    let aot = aot::store_for_run()?;
+    let aot = aot::store_for_run()?.map(Arc::new);
     let workers_dir = opts.root.join(CLAIM_DIR).join(WORKERS_DIR);
     let (outs, stats) = run_claim(
         &format!("campaign {}", plan.name),
@@ -1220,7 +1222,7 @@ pub fn run_claim_campaign(
         opts.verbose,
         cfg,
         None,
-        |_| exec::PjrtCellRunner::new(&specs, cache_cap, aot.as_ref()),
+        |_| exec::PjrtCellRunner::new(specs.clone(), cache_cap, aot.clone()),
     )?;
     // every finishing claimer records its own pool's accounting — a
     // benign last-writer-wins, like the manifest rebuild itself

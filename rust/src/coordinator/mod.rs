@@ -36,6 +36,7 @@ pub mod campaign;
 pub mod exec;
 pub mod lease;
 pub mod plan;
+pub mod pool;
 pub mod recipes;
 pub mod report;
 pub mod store;
@@ -52,6 +53,7 @@ pub use store::{compact_run_dir, merge_run_dirs, read_manifest, RunStore};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -505,6 +507,7 @@ pub fn run_sweep_timed(
             .collect();
         let mut specs = HashMap::new();
         specs.insert(spec.model.clone(), model_spec);
+        let specs = Arc::new(exec::SpecRegistry::from_map(specs));
         let members = [member];
         let req = exec::ExecRequest {
             label: format!("sweep {}", spec.model),
@@ -519,9 +522,13 @@ pub fn run_sweep_timed(
             [store.as_mut().map(|s| s as &mut dyn exec::CellSink)];
         let mut slot_groups = [std::mem::take(&mut slots)];
         let cache_cap = exec::exec_cache_cap()?;
-        let aot_store = aot::store_for_run()?;
+        let aot_store = aot::store_for_run()?.map(Arc::new);
         let res = exec::run_items(&req, &mut stores, &mut slot_groups, |_| {
-            exec::PjrtCellRunner::new(&specs, cache_cap, aot_store.as_ref())
+            exec::PjrtCellRunner::new(
+                specs.clone(),
+                cache_cap,
+                aot_store.clone(),
+            )
         });
         slots = std::mem::take(&mut slot_groups[0]);
         res?;

@@ -1,0 +1,1207 @@
+//! Persistent shared worker pool: one long-lived set of workers
+//! multiplexing cells from many concurrent jobs.
+//!
+//! [`super::exec::run_items`] builds its pool per call and tears it down
+//! when the call returns — fine for one-shot sweeps, but a `cpt serve`
+//! daemon that runs jobs back to back through it recompiles every model
+//! for every job. [`WorkerPool`] inverts the ownership: workers (each a
+//! [`CellRunner`] — in production one PJRT client plus its compiled-
+//! executable LRU) outlive any single job, and jobs *attach* to the pool
+//! via [`WorkerPool::run_job`], which blocks as that job's collector
+//! until the job's cells settle. Consequences:
+//!
+//! * **Cross-job warm compiles** — a worker's executable cache persists
+//!   across jobs, so a second job sharing a model fingerprint with an
+//!   earlier one costs zero recompiles (the cross-process warm start the
+//!   AOT store cannot deliver while the vendored backend refuses to
+//!   serialize, delivered cross-job in-process instead).
+//! * **Fair-share claiming** — when several jobs have runnable cells, an
+//!   idle worker claims from the attached job with the fewest in-flight
+//!   cells (ties broken by attach order), so a 4-cell job submitted
+//!   behind a 400-cell one finishes in seconds instead of queueing
+//!   behind it. Within the chosen job claiming stays model-affine
+//!   (prefer a cell whose model the worker already holds compiled), and
+//!   per-member `jobs = N` caps are honored exactly as in `run_items`.
+//! * **Determinism** — scheduling only moves wall clock. Every cell is
+//!   an independently seeded run routed to its job's position-addressed
+//!   slot, and each job's sink writes happen on that job's own collector
+//!   thread (the `run_job` caller), serialized per store — so per-job
+//!   results stay byte-identical to a direct `cpt campaign` run.
+//! * **Graceful drain** — [`WorkerPool::shutdown`] lets in-flight cells
+//!   finish and refuses new claims; a job with unstarted cells gets an
+//!   error downcasting to [`Drained`] so the daemon can demote it to
+//!   `queued` (its recorded cells stay durable and resume later).
+//!
+//! Failure semantics mirror `run_items`: a failed cell stops its own job
+//! (and only it); a worker that cannot compile a model retries with
+//! backoff, then skips that model for good — a job whose remaining cells
+//! no live worker can compile stops with the compile error instead of
+//! hanging.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::exec::{
+    self, CellError, CellRunner, CellSink, ExecItem, ExecMember, ExecStats,
+    Recorded, WorkerStats,
+};
+use super::RunOutcome;
+
+/// Builds one worker's backend on its own pool thread (a runner never
+/// crosses threads). Shared by every worker, so `Send + Sync`.
+pub type WorkerFactory =
+    dyn Fn(usize) -> Result<Box<dyn CellRunner>> + Send + Sync;
+
+/// Sentinel error cause: the pool shut down while this job still had
+/// unstarted cells. Callers downcast (`err.downcast_ref::<Drained>()`)
+/// to tell "drained for resume" from a real failure.
+#[derive(Debug)]
+pub struct Drained;
+
+impl std::fmt::Display for Drained {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("worker pool drained before the job completed")
+    }
+}
+
+impl std::error::Error for Drained {}
+
+/// One job attached to the pool: members, flattened items, and knobs —
+/// the long-lived analogue of `exec::ExecRequest`.
+pub struct PoolRequest {
+    /// Log prefix, e.g. `campaign fig367` or `job 00ab34cd`.
+    pub label: String,
+    pub members: Vec<ExecMember>,
+    pub items: Vec<ExecItem>,
+    pub verbose: bool,
+    /// Deterministic kill for tests: stop this job after this many
+    /// freshly recorded cells. `None` defers to the process-wide
+    /// CPT_HALT_AFTER_CELLS counter.
+    pub halt_after_cells: Option<usize>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ItemState {
+    Pending,
+    InFlight,
+    Done,
+}
+
+enum FinishReason {
+    /// Every item settled.
+    Complete,
+    /// Pool shutdown drained the job with unstarted cells remaining.
+    Drained,
+    /// The job was stopped early (cell failure, unclaimable models,
+    /// crash-injection halt, worker panic) — the message says why.
+    Stopped(String),
+}
+
+enum JobMsg {
+    Done {
+        item: usize,
+        out: Box<RunOutcome>,
+        /// Per-cell deltas of the running worker's compile/cache
+        /// counters — how per-job stats are carved out of shared
+        /// workers.
+        stats: WorkerStats,
+    },
+    RunErr {
+        item: usize,
+        err: anyhow::Error,
+    },
+    SetupErr {
+        model: String,
+        err: anyhow::Error,
+    },
+    Retried {
+        worker: usize,
+    },
+    /// Always the job's final message (sent under the state lock, after
+    /// any Done/RunErr for the same transition).
+    Finished {
+        reason: FinishReason,
+    },
+}
+
+struct JobEntry {
+    members: Vec<ExecMember>,
+    items: Vec<ExecItem>,
+    state: Vec<ItemState>,
+    /// In-flight cells per member (bounded by the member's cap).
+    inflight_member: Vec<usize>,
+    inflight_total: usize,
+    pending: usize,
+    done: usize,
+    /// No further claims for this job (it failed or was halted).
+    stopped: bool,
+    /// Why it stopped (first stop wins).
+    fail: Option<String>,
+    finished_sent: bool,
+    tx: mpsc::Sender<JobMsg>,
+}
+
+struct PoolState {
+    jobs: HashMap<u64, JobEntry>,
+    /// Attach order — the fair-share tiebreak.
+    order: Vec<u64>,
+    next_id: u64,
+    shutdown: bool,
+    /// Workers still running their claim loop (ids removed on exit, even
+    /// by panic, via `WorkerGuard`).
+    alive: HashSet<usize>,
+    /// Per-fingerprint set of workers that permanently failed to compile
+    /// it; once that covers every live worker the fingerprint's cells
+    /// are unclaimable and jobs needing them stop.
+    fp_failed: HashMap<String, HashSet<usize>>,
+    last_init_err: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+}
+
+/// The pool itself. Create once, share behind an `Arc`, attach jobs from
+/// any number of threads via [`WorkerPool::run_job`].
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    size: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// If any live worker could still compile this fingerprint, its cells
+/// remain claimable.
+fn live_can_claim(st: &PoolState, fp: &str) -> bool {
+    if st.alive.is_empty() {
+        return false;
+    }
+    match st.fp_failed.get(fp) {
+        Some(failed) => st.alive.iter().any(|w| !failed.contains(w)),
+        None => true,
+    }
+}
+
+/// Send the job's `Finished` message once nothing is in flight and
+/// nothing more will run — called after every settle, on shutdown, and
+/// whenever the claimable-set shrinks (worker exit, fingerprint failure).
+fn maybe_finish(st: &mut PoolState, jid: u64) {
+    let reason = {
+        let Some(job) = st.jobs.get(&jid) else { return };
+        if job.finished_sent || job.inflight_total > 0 {
+            return;
+        }
+        if job.done == job.items.len() {
+            FinishReason::Complete
+        } else if job.stopped {
+            FinishReason::Stopped(
+                job.fail.clone().unwrap_or_else(|| "job stopped".to_string()),
+            )
+        } else if st.shutdown {
+            FinishReason::Drained
+        } else {
+            let claimable = job.state.iter().enumerate().any(|(i, s)| {
+                *s == ItemState::Pending
+                    && live_can_claim(
+                        st,
+                        &job.members[job.items[i].member].fingerprint,
+                    )
+            });
+            if claimable {
+                return; // workers will get to it
+            }
+            FinishReason::Stopped(format!(
+                "{} of {} cells unclaimed (no live worker could compile \
+                 their model)",
+                job.pending,
+                job.items.len()
+            ))
+        }
+    };
+    let job = st.jobs.get_mut(&jid).unwrap();
+    job.finished_sent = true;
+    let _ = job.tx.send(JobMsg::Finished { reason });
+}
+
+fn maybe_finish_all(st: &mut PoolState) {
+    for jid in st.order.clone() {
+        maybe_finish(st, jid);
+    }
+}
+
+/// Removes an exiting worker from the live set — even when the thread
+/// unwinds — and re-checks every job, since a smaller live set can
+/// strand pending cells.
+struct WorkerGuard<'a> {
+    shared: &'a Shared,
+    worker: usize,
+}
+
+impl Drop for WorkerGuard<'_> {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.shared.state.lock() {
+            st.alive.remove(&self.worker);
+            if !st.shutdown {
+                maybe_finish_all(&mut st);
+            }
+        }
+        self.shared.work.notify_all();
+    }
+}
+
+/// Unwinding guard for one claimed cell: a panic inside `run_cell`
+/// settles the claim and stops the job (reported as a cell failure), so
+/// the job's collector unblocks instead of waiting forever.
+struct CellGuard<'a> {
+    shared: &'a Shared,
+    job: u64,
+    item: usize,
+    member: usize,
+    armed: bool,
+}
+
+impl Drop for CellGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut st) = self.shared.state.lock() {
+            if let Some(job) = st.jobs.get_mut(&self.job) {
+                job.state[self.item] = ItemState::Done;
+                job.inflight_member[self.member] -= 1;
+                job.inflight_total -= 1;
+                job.done += 1;
+                if !job.stopped {
+                    job.stopped = true;
+                    job.fail = Some("a worker panicked mid-cell".to_string());
+                }
+                let _ = job.tx.send(JobMsg::RunErr {
+                    item: self.item,
+                    err: anyhow!("worker panicked while running this cell"),
+                });
+            }
+            maybe_finish(&mut st, self.job);
+        }
+        self.shared.work.notify_all();
+    }
+}
+
+fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
+    let _guard = WorkerGuard { shared, worker: w };
+    // Bounded init retries with backoff, like run_items workers; a
+    // worker that never initializes leaves the live set via the guard.
+    let mut init_attempt = 1usize;
+    let mut runner = loop {
+        match make(w) {
+            Ok(r) => break r,
+            Err(e) if init_attempt < exec::SETUP_ATTEMPTS => {
+                eprintln!(
+                    "[{label}] note: pool worker {w} setup failed (attempt \
+                     {init_attempt}/{}): {e:#}; retrying",
+                    exec::SETUP_ATTEMPTS
+                );
+                std::thread::sleep(exec::setup_backoff(init_attempt));
+                init_attempt += 1;
+            }
+            Err(e) => {
+                eprintln!(
+                    "[{label}] note: pool worker {w} failed to initialize: \
+                     {e:#}"
+                );
+                if let Ok(mut st) = shared.state.lock() {
+                    st.last_init_err = Some(format!("{e:#}"));
+                }
+                return;
+            }
+        }
+    };
+    // Worker-local transient-setup attempt counts per fingerprint.
+    let mut attempts: HashMap<String, usize> = HashMap::new();
+    loop {
+        // Claim under the lock: fair-share across jobs (least in-flight
+        // wins, attach order ties), model-affine within the job.
+        let claimed = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    break None;
+                }
+                let mut best: Option<(u64, usize, usize)> = None;
+                for &jid in &st.order {
+                    let Some(job) = st.jobs.get(&jid) else { continue };
+                    if job.stopped || job.finished_sent {
+                        continue;
+                    }
+                    let mut cand: Option<usize> = None;
+                    for (i, s) in job.state.iter().enumerate() {
+                        if *s != ItemState::Pending {
+                            continue;
+                        }
+                        let it = &job.items[i];
+                        let m = &job.members[it.member];
+                        if st
+                            .fp_failed
+                            .get(&m.fingerprint)
+                            .map_or(false, |f| f.contains(&w))
+                        {
+                            continue;
+                        }
+                        if job.inflight_member[it.member] >= m.cap.max(1) {
+                            continue;
+                        }
+                        if runner.has_cached(&m.fingerprint) {
+                            cand = Some(i);
+                            break;
+                        }
+                        if cand.is_none() {
+                            cand = Some(i);
+                        }
+                    }
+                    if let Some(i) = cand {
+                        let load = job.inflight_total;
+                        if best.map_or(true, |(_, _, bl)| load < bl) {
+                            best = Some((jid, i, load));
+                        }
+                    }
+                }
+                match best {
+                    Some((jid, i, _)) => {
+                        let job = st.jobs.get_mut(&jid).unwrap();
+                        let mi = job.items[i].member;
+                        job.state[i] = ItemState::InFlight;
+                        job.inflight_member[mi] += 1;
+                        job.inflight_total += 1;
+                        job.pending -= 1;
+                        let it = job.items[i].clone();
+                        let m = job.members[mi].clone();
+                        break Some((jid, i, it, m));
+                    }
+                    None => {
+                        st = shared.work.wait(st).unwrap();
+                    }
+                }
+            }
+        };
+        let Some((jid, i, it, m)) = claimed else { break };
+        let (bc, bsec) = runner.compile_stats();
+        let bcache = runner.cache_stats();
+        let mut guard = CellGuard {
+            shared,
+            job: jid,
+            item: i,
+            member: it.member,
+            armed: true,
+        };
+        let res = runner.run_cell(&m, &it.cell, it.cell_index, false);
+        guard.armed = false;
+        match res {
+            Ok(out) => {
+                let (ac, asec) = runner.compile_stats();
+                let acache = runner.cache_stats();
+                let stats = WorkerStats {
+                    worker: w,
+                    compiles: ac - bc,
+                    compile_seconds: asec - bsec,
+                    cells: 1,
+                    retries: 0,
+                    hits: acache.hits - bcache.hits,
+                    disk_hits: acache.disk_hits - bcache.disk_hits,
+                    misses: acache.misses - bcache.misses,
+                };
+                let mut st = shared.state.lock().unwrap();
+                if let Some(job) = st.jobs.get_mut(&jid) {
+                    job.state[i] = ItemState::Done;
+                    job.inflight_member[it.member] -= 1;
+                    job.inflight_total -= 1;
+                    job.done += 1;
+                    let _ = job.tx.send(JobMsg::Done {
+                        item: i,
+                        out: Box::new(out),
+                        stats,
+                    });
+                }
+                maybe_finish(&mut st, jid);
+                drop(st);
+                shared.work.notify_all();
+            }
+            Err(CellError::Setup(err)) => {
+                let n = {
+                    let e = attempts.entry(m.fingerprint.clone()).or_insert(0);
+                    *e += 1;
+                    *e
+                };
+                let give_up = n >= exec::SETUP_ATTEMPTS;
+                let err_msg = format!("{err:#}");
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    if let Some(job) = st.jobs.get_mut(&jid) {
+                        // hand the cell back so another worker (or this
+                        // one after backoff) can take it
+                        job.state[i] = ItemState::Pending;
+                        job.inflight_member[it.member] -= 1;
+                        job.inflight_total -= 1;
+                        job.pending += 1;
+                    }
+                    if give_up {
+                        st.fp_failed
+                            .entry(m.fingerprint.clone())
+                            .or_default()
+                            .insert(w);
+                        if let Some(job) = st.jobs.get_mut(&jid) {
+                            let _ = job.tx.send(JobMsg::SetupErr {
+                                model: m.model.clone(),
+                                err,
+                            });
+                        }
+                        // the claimable set shrank — some job's pending
+                        // cells may now be unclaimable by anyone
+                        maybe_finish_all(&mut st);
+                    } else if let Some(job) = st.jobs.get_mut(&jid) {
+                        let _ = job.tx.send(JobMsg::Retried { worker: w });
+                    }
+                }
+                shared.work.notify_all();
+                if !give_up {
+                    eprintln!(
+                        "[{label}] note: pool worker {w} setup for model \
+                         '{}' failed (attempt {n}/{}): {err_msg}; retrying",
+                        m.model,
+                        exec::SETUP_ATTEMPTS
+                    );
+                    std::thread::sleep(exec::setup_backoff(n));
+                }
+            }
+            Err(CellError::Run(err)) => {
+                let mut st = shared.state.lock().unwrap();
+                if let Some(job) = st.jobs.get_mut(&jid) {
+                    job.state[i] = ItemState::Done;
+                    job.inflight_member[it.member] -= 1;
+                    job.inflight_total -= 1;
+                    job.done += 1;
+                    if !job.stopped {
+                        job.stopped = true;
+                        job.fail = Some("a cell failed".to_string());
+                    }
+                    let _ = job.tx.send(JobMsg::RunErr { item: i, err });
+                }
+                maybe_finish(&mut st, jid);
+                drop(st);
+                shared.work.notify_all();
+            }
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (each building its backend via `make` on its
+    /// own thread) and return the pool ready for [`WorkerPool::run_job`].
+    pub fn new(size: usize, label: &str, make: Arc<WorkerFactory>) -> WorkerPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                jobs: HashMap::new(),
+                order: Vec::new(),
+                next_id: 0,
+                shutdown: false,
+                alive: (0..size).collect(),
+                fp_failed: HashMap::new(),
+                last_init_err: None,
+            }),
+            work: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(size);
+        for w in 0..size {
+            let shared = shared.clone();
+            let make = make.clone();
+            let label = label.to_string();
+            handles.push(std::thread::spawn(move || {
+                worker_main(&shared, w, &*make, &label)
+            }));
+        }
+        WorkerPool { shared, size, handles: Mutex::new(handles) }
+    }
+
+    /// Worker count the pool was built with.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Attach a job and run it to completion: this call is the job's
+    /// collector — the only thread that touches this job's `sinks` and
+    /// `slots` — and blocks until every item settles (or the job stops).
+    /// Per-worker stats in the returned [`ExecStats`] are this job's
+    /// share of the pool's work, not pool lifetime totals.
+    ///
+    /// Error precedence mirrors `run_items`: a failed cell (lowest item
+    /// index), a sink write failure, a crash-injection halt, unclaimable
+    /// cells (with the compile error), and finally [`Drained`] when a
+    /// shutdown interrupted the job.
+    pub fn run_job(
+        &self,
+        req: &PoolRequest,
+        sinks: &mut [Option<&mut dyn CellSink>],
+        slots: &mut [Vec<Option<RunOutcome>>],
+    ) -> Result<ExecStats> {
+        assert_eq!(req.members.len(), sinks.len());
+        assert_eq!(req.members.len(), slots.len());
+        if req.items.is_empty() {
+            return Ok(ExecStats {
+                jobs: self.size,
+                workers: Vec::new(),
+                refused: 0,
+            });
+        }
+        let (tx, rx) = mpsc::channel::<JobMsg>();
+        let jid = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.shutdown {
+                return Err(anyhow::Error::new(Drained).context(format!(
+                    "{}: pool is shutting down",
+                    req.label
+                )));
+            }
+            if st.alive.is_empty() {
+                let why = st
+                    .last_init_err
+                    .clone()
+                    .unwrap_or_else(|| "all pool workers exited".to_string());
+                bail!("{}: no live pool workers ({why})", req.label);
+            }
+            let jid = st.next_id;
+            st.next_id += 1;
+            let n = req.items.len();
+            st.jobs.insert(
+                jid,
+                JobEntry {
+                    members: req.members.clone(),
+                    items: req.items.clone(),
+                    state: vec![ItemState::Pending; n],
+                    inflight_member: vec![0; req.members.len()],
+                    inflight_total: 0,
+                    pending: n,
+                    done: 0,
+                    stopped: false,
+                    fail: None,
+                    finished_sent: false,
+                    tx,
+                },
+            );
+            st.order.push(jid);
+            // every item may already be unclaimable (all workers failed
+            // this model earlier) — fail now rather than hang
+            maybe_finish(&mut st, jid);
+            jid
+        };
+        self.shared.work.notify_all();
+
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut setup_errs: Vec<(String, anyhow::Error)> = Vec::new();
+        let mut store_err: Option<anyhow::Error> = None;
+        let mut halt_err: Option<anyhow::Error> = None;
+        let mut workers: HashMap<usize, WorkerStats> = HashMap::new();
+        let mut fresh = 0usize;
+        let mut refused = 0usize;
+        let blank = |w: usize| WorkerStats {
+            worker: w,
+            compiles: 0,
+            compile_seconds: 0.0,
+            cells: 0,
+            retries: 0,
+            hits: 0,
+            disk_hits: 0,
+            misses: 0,
+        };
+        let reason = loop {
+            let Ok(msg) = rx.recv() else {
+                // unreachable while the job is registered (its entry owns
+                // a sender); treated as a stop for safety
+                break FinishReason::Stopped(
+                    "pool disconnected".to_string(),
+                );
+            };
+            match msg {
+                JobMsg::Done { item, out, stats } => {
+                    let it = &req.items[item];
+                    let m = &req.members[it.member];
+                    let ws =
+                        workers.entry(stats.worker).or_insert_with(|| {
+                            blank(stats.worker)
+                        });
+                    ws.compiles += stats.compiles;
+                    ws.compile_seconds += stats.compile_seconds;
+                    ws.cells += 1;
+                    ws.hits += stats.hits;
+                    ws.disk_hits += stats.disk_hits;
+                    ws.misses += stats.misses;
+                    if req.verbose {
+                        let who = if m.name.is_empty() {
+                            m.model.clone()
+                        } else {
+                            format!("{}:{}", m.name, m.model)
+                        };
+                        eprintln!(
+                            "[{} pool] {who} {} qmax={} trial={} -> \
+                             metric={:.4} ({:.3} GBitOps)",
+                            req.label,
+                            out.schedule,
+                            out.q_max,
+                            out.trial,
+                            out.metric,
+                            out.gbitops
+                        );
+                    }
+                    if store_err.is_none() && halt_err.is_none() {
+                        let mut stored = true;
+                        if let Some(sk) = sinks[it.member].as_mut() {
+                            match sk.record_cell(it.cell_index, &out) {
+                                Ok(Recorded::Stored) => {}
+                                Ok(Recorded::Refused(reason)) => {
+                                    stored = false;
+                                    refused += 1;
+                                    if req.verbose {
+                                        eprintln!(
+                                            "[{}] note: cell {} not \
+                                             recorded here: {reason}",
+                                            req.label, it.cell_index
+                                        );
+                                    }
+                                }
+                                Err(e) => {
+                                    stored = false;
+                                    store_err = Some(e);
+                                    self.stop_job(
+                                        jid,
+                                        "persisting a cell failed",
+                                    );
+                                }
+                            }
+                        }
+                        if store_err.is_none() && stored {
+                            fresh += 1;
+                            let halted = match req.halt_after_cells {
+                                Some(n) => {
+                                    if n > 0 && fresh >= n {
+                                        Some(anyhow!(
+                                            "halted after {fresh} freshly \
+                                             computed cell(s) \
+                                             (halt_after_cells={n} crash \
+                                             injection)"
+                                        ))
+                                    } else {
+                                        None
+                                    }
+                                }
+                                None => super::crash_injection_point().err(),
+                            };
+                            if let Some(e) = halted {
+                                halt_err = Some(e);
+                                self.stop_job(jid, "halted by crash injection");
+                            }
+                        }
+                    }
+                    slots[it.member][it.slot] = Some(*out);
+                }
+                JobMsg::RunErr { item, err } => {
+                    if first_err.as_ref().map_or(true, |(i, _)| item < *i) {
+                        first_err = Some((item, err));
+                    }
+                }
+                JobMsg::SetupErr { model, err } => {
+                    setup_errs.push((model, err));
+                }
+                JobMsg::Retried { worker } => {
+                    workers
+                        .entry(worker)
+                        .or_insert_with(|| blank(worker))
+                        .retries += 1;
+                }
+                JobMsg::Finished { reason } => break reason,
+            }
+        };
+        // Detach: nothing is in flight for this job once Finished
+        // arrives, so removal can't strand a worker.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.remove(&jid);
+            st.order.retain(|&j| j != jid);
+        }
+        self.shared.work.notify_all();
+
+        let mut worker_stats: Vec<WorkerStats> =
+            workers.into_values().collect();
+        worker_stats.sort_by_key(|s| s.worker);
+        let done = req
+            .items
+            .iter()
+            .filter(|it| slots[it.member][it.slot].is_some())
+            .count();
+        if let Some((i, e)) = first_err {
+            let it = &req.items[i];
+            let m = &req.members[it.member];
+            let who = if m.name.is_empty() {
+                m.model.clone()
+            } else {
+                m.name.clone()
+            };
+            return Err(e.context(format!(
+                "{}: cell {} of '{who}' failed ({done}/{} complete)",
+                req.label,
+                it.cell_index,
+                req.items.len()
+            )));
+        }
+        if let Some(e) = store_err {
+            return Err(e.context("persisting cell artifact"));
+        }
+        if let Some(e) = halt_err {
+            return Err(e);
+        }
+        match reason {
+            FinishReason::Complete => {
+                if let Some((model, e)) = setup_errs.first() {
+                    let what = if model.is_empty() {
+                        "a worker failed to initialize".to_string()
+                    } else {
+                        format!("a worker could not compile model '{model}'")
+                    };
+                    eprintln!(
+                        "[{}] note: {what} ({e:#}); all cells completed on \
+                         the remaining workers",
+                        req.label
+                    );
+                }
+                Ok(ExecStats {
+                    jobs: self.size,
+                    workers: worker_stats,
+                    refused,
+                })
+            }
+            FinishReason::Drained => {
+                Err(anyhow::Error::new(Drained).context(format!(
+                    "{}: shutdown drained the pool ({done}/{} cells \
+                     complete; recorded cells stay durable for resume)",
+                    req.label,
+                    req.items.len()
+                )))
+            }
+            FinishReason::Stopped(msg) => {
+                let e = match setup_errs
+                    .iter()
+                    .position(|(m, _)| !m.is_empty())
+                {
+                    Some(i) => {
+                        let (model, e) = setup_errs.swap_remove(i);
+                        e.context(format!("compiling model '{model}'"))
+                    }
+                    None => match setup_errs.into_iter().next() {
+                        Some((_, e)) => e,
+                        None => anyhow!("{msg}"),
+                    },
+                };
+                Err(e.context(format!("{}: {msg}", req.label)))
+            }
+        }
+    }
+
+    /// Stop one job (no further claims); in-flight cells still finish.
+    fn stop_job(&self, jid: u64, why: &str) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(job) = st.jobs.get_mut(&jid) {
+            if !job.stopped {
+                job.stopped = true;
+                job.fail = Some(why.to_string());
+            }
+        }
+        maybe_finish(&mut st, jid);
+        drop(st);
+        self.shared.work.notify_all();
+    }
+
+    /// Graceful drain: refuse new claims (and new jobs), let in-flight
+    /// cells finish, and finish every attached job — completed ones as
+    /// `Complete`, interrupted ones as [`Drained`]. Idempotent.
+    pub fn shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.shutdown = true;
+        maybe_finish_all(&mut st);
+        drop(st);
+        self.shared.work.notify_all();
+    }
+
+    /// Shut down and join every worker thread (test teardown; the daemon
+    /// calls it after its executors exit).
+    pub fn join(&self) {
+        self.shutdown();
+        let handles: Vec<_> = {
+            let mut h = self.handles.lock().unwrap();
+            h.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicySpec;
+    use crate::schedule::group_of;
+    use crate::SweepCell;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn member(name: &str, fp: &str, cap: usize) -> ExecMember {
+        ExecMember {
+            name: name.into(),
+            model: format!("model-{fp}"),
+            fingerprint: fp.into(),
+            policy: PolicySpec::StaticSuite,
+            steps: 8,
+            cycles: 8,
+            eval_every: 0,
+            cap,
+        }
+    }
+
+    fn items_for(members: &[ExecMember], cells_each: usize) -> Vec<ExecItem> {
+        let mut items = Vec::new();
+        for (mi, _) in members.iter().enumerate() {
+            for c in 0..cells_each {
+                items.push(ExecItem {
+                    member: mi,
+                    cell_index: c,
+                    slot: c,
+                    cell: SweepCell {
+                        schedule: "CR".into(),
+                        q_max: 8.0,
+                        trial: c,
+                    },
+                });
+            }
+        }
+        items
+    }
+
+    fn fab(member: &ExecMember, cell: &SweepCell, index: usize) -> RunOutcome {
+        RunOutcome {
+            model: member.model.clone(),
+            schedule: cell.schedule.clone(),
+            group: group_of(&cell.schedule).label().into(),
+            q_max: cell.q_max,
+            trial: cell.trial,
+            gbitops: 1.0 + index as f64,
+            metric: 0.5 + index as f64 * 0.125,
+            eval_loss: 0.25,
+            steps: member.steps,
+            mean_q: 0.75,
+            realized_cost: 0.5,
+            exec_seconds: 0.01,
+            history: crate::metrics::History::default(),
+        }
+    }
+
+    /// Fabricated pool runner: per-runner simulated compile cache (the
+    /// thing that must persist across jobs), a pool-global compile
+    /// counter, optional per-cell sleep and injected failures.
+    struct FabRunner {
+        compiled: Vec<String>,
+        compiles: Arc<AtomicUsize>,
+        sleep_ms: u64,
+        fail_fp: HashSet<String>,
+        /// Fail `run_cell` for (fingerprint, cell_index).
+        fail_cell: Option<(String, usize)>,
+    }
+
+    impl FabRunner {
+        fn plain(compiles: Arc<AtomicUsize>) -> FabRunner {
+            FabRunner {
+                compiled: Vec::new(),
+                compiles,
+                sleep_ms: 0,
+                fail_fp: HashSet::new(),
+                fail_cell: None,
+            }
+        }
+    }
+
+    impl CellRunner for FabRunner {
+        fn run_cell(
+            &mut self,
+            member: &ExecMember,
+            cell: &SweepCell,
+            cell_index: usize,
+            _per_step_logs: bool,
+        ) -> std::result::Result<RunOutcome, CellError> {
+            if self.fail_fp.contains(&member.fingerprint) {
+                return Err(CellError::Setup(anyhow!(
+                    "injected compile failure for {}",
+                    member.fingerprint
+                )));
+            }
+            if !self.compiled.contains(&member.fingerprint) {
+                self.compiled.push(member.fingerprint.clone());
+                self.compiles.fetch_add(1, Ordering::SeqCst);
+            }
+            if self.sleep_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    self.sleep_ms,
+                ));
+            }
+            if self.fail_cell.as_ref().map_or(false, |(fp, c)| {
+                *fp == member.fingerprint && *c == cell_index
+            }) {
+                return Err(CellError::Run(anyhow!("injected cell failure")));
+            }
+            Ok(fab(member, cell, cell_index))
+        }
+
+        fn compile_stats(&self) -> (usize, f64) {
+            (self.compiled.len(), 0.0)
+        }
+
+        fn has_cached(&self, fingerprint: &str) -> bool {
+            self.compiled.iter().any(|f| f == fingerprint)
+        }
+    }
+
+    fn pool_of(
+        size: usize,
+        compiles: &Arc<AtomicUsize>,
+        sleep_ms: u64,
+    ) -> WorkerPool {
+        let compiles = compiles.clone();
+        WorkerPool::new(
+            size,
+            "test-pool",
+            Arc::new(move |_| {
+                let mut r = FabRunner::plain(compiles.clone());
+                r.sleep_ms = sleep_ms;
+                Ok(Box::new(r) as Box<dyn CellRunner>)
+            }),
+        )
+    }
+
+    fn run_one(
+        pool: &WorkerPool,
+        label: &str,
+        members: Vec<ExecMember>,
+        items: Vec<ExecItem>,
+        halt: Option<usize>,
+    ) -> (Result<ExecStats>, Vec<Vec<Option<RunOutcome>>>) {
+        let cells = items
+            .iter()
+            .fold(vec![0usize; members.len()], |mut acc, it| {
+                acc[it.member] = acc[it.member].max(it.slot + 1);
+                acc
+            });
+        let mut slots: Vec<Vec<Option<RunOutcome>>> =
+            cells.into_iter().map(|n| vec![None; n]).collect();
+        let mut sinks: Vec<Option<&mut dyn CellSink>> =
+            members.iter().map(|_| None).collect();
+        let req = PoolRequest {
+            label: label.to_string(),
+            members,
+            items,
+            verbose: false,
+            halt_after_cells: halt,
+        };
+        let res = pool.run_job(&req, &mut sinks, &mut slots);
+        (res, slots)
+    }
+
+    #[test]
+    fn pool_outlives_jobs_and_reuses_compiled_models() {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let pool = pool_of(2, &compiles, 0);
+        let members = vec![member("a", "fpA", 4)];
+        let items = items_for(&members, 6);
+        let (res, slots) =
+            run_one(&pool, "job1", members.clone(), items.clone(), None);
+        let s1 = res.unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+        assert_eq!(
+            s1.workers.iter().map(|w| w.cells).sum::<usize>(),
+            6
+        );
+        let after_job1 = compiles.load(Ordering::SeqCst);
+        assert!(after_job1 <= 2, "one compile per worker at most");
+        // a second job over the same fingerprint costs zero compiles —
+        // the cross-job warm start the pool exists for
+        let (res, slots) = run_one(&pool, "job2", members, items, None);
+        let s2 = res.unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+        assert_eq!(compiles.load(Ordering::SeqCst), after_job1);
+        assert_eq!(s2.total_compiles(), 0, "{:?}", s2.workers);
+        pool.join();
+    }
+
+    #[test]
+    fn concurrent_jobs_share_the_pool_and_fair_share_favors_the_small_job()
+    {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(pool_of(2, &compiles, 25));
+        let order: Arc<Mutex<Vec<&'static str>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        std::thread::scope(|scope| {
+            let p = pool.clone();
+            let o = order.clone();
+            scope.spawn(move || {
+                let members = vec![member("big", "fpA", 4)];
+                let items = items_for(&members, 16);
+                let (res, _) = run_one(&p, "big", members, items, None);
+                res.unwrap();
+                o.lock().unwrap().push("big");
+            });
+            // let the big job occupy the pool first
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            let p = pool.clone();
+            let o = order.clone();
+            scope.spawn(move || {
+                let members = vec![member("small", "fpB", 4)];
+                let items = items_for(&members, 2);
+                let (res, _) = run_one(&p, "small", members, items, None);
+                res.unwrap();
+                o.lock().unwrap().push("small");
+            });
+        });
+        assert_eq!(
+            order.lock().unwrap().as_slice(),
+            ["small", "big"],
+            "the 2-cell job must finish while the 16-cell job runs"
+        );
+        pool.join();
+    }
+
+    #[test]
+    fn per_job_stats_split_shared_worker_accounting() {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let pool = pool_of(1, &compiles, 0);
+        let members = vec![member("a", "fpA", 4)];
+        let (res, _) = run_one(
+            &pool,
+            "first",
+            members.clone(),
+            items_for(&members, 3),
+            None,
+        );
+        let s1 = res.unwrap();
+        assert_eq!(s1.total_compiles(), 1, "{:?}", s1.workers);
+        // the second job reuses the cache: its own stats show 0 compiles
+        // even though the worker's lifetime count is 1
+        let (res, _) =
+            run_one(&pool, "second", members.clone(), items_for(&members, 3), None);
+        assert_eq!(res.unwrap().total_compiles(), 0);
+        pool.join();
+    }
+
+    #[test]
+    fn a_failed_cell_stops_only_its_own_job() {
+        // one shared pool whose workers fail cell 1 of fpA; the fpB job
+        // on the same pool must be untouched
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let c = compiles.clone();
+        let pool = Arc::new(WorkerPool::new(
+            2,
+            "mixed",
+            Arc::new(move |_| {
+                let mut r = FabRunner::plain(c.clone());
+                r.sleep_ms = 5;
+                r.fail_cell = Some(("fpA".to_string(), 1));
+                Ok(Box::new(r) as Box<dyn CellRunner>)
+            }),
+        ));
+        std::thread::scope(|scope| {
+            let p = pool.clone();
+            scope.spawn(move || {
+                let members = vec![member("bad", "fpA", 1)];
+                let items = items_for(&members, 4);
+                let (res, _) = run_one(&p, "bad", members, items, None);
+                let msg = format!("{:#}", res.unwrap_err());
+                assert!(msg.contains("injected cell failure"), "{msg}");
+                assert!(msg.contains("cell 1 of 'bad'"), "{msg}");
+            });
+            let p = pool.clone();
+            scope.spawn(move || {
+                let members = vec![member("good", "fpB", 4)];
+                let items = items_for(&members, 4);
+                let (res, slots) = run_one(&p, "good", members, items, None);
+                res.unwrap();
+                assert!(slots[0].iter().all(|o| o.is_some()));
+            });
+        });
+        pool.join();
+    }
+
+    #[test]
+    fn unclaimable_models_stop_the_job_with_the_compile_error() {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let c = compiles.clone();
+        let pool = WorkerPool::new(
+            1,
+            "nofp",
+            Arc::new(move |_| {
+                let mut r = FabRunner::plain(c.clone());
+                r.fail_fp.insert("fpA".into());
+                Ok(Box::new(r) as Box<dyn CellRunner>)
+            }),
+        );
+        let members = vec![member("a", "fpA", 4)];
+        let items = items_for(&members, 2);
+        let (res, _) = run_one(&pool, "nofp", members, items, None);
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("unclaimed"), "{msg}");
+        assert!(msg.contains("injected compile failure"), "{msg}");
+        pool.join();
+    }
+
+    #[test]
+    fn shutdown_drains_with_a_downcastable_sentinel() {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(pool_of(1, &compiles, 20));
+        let err = std::thread::scope(|scope| {
+            let p = pool.clone();
+            let h = scope.spawn(move || {
+                let members = vec![member("a", "fpA", 4)];
+                let items = items_for(&members, 20);
+                let (res, slots) = run_one(&p, "drainme", members, items, None);
+                let done =
+                    slots[0].iter().filter(|o| o.is_some()).count();
+                (res.unwrap_err(), done)
+            });
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            pool.shutdown();
+            h.join().unwrap()
+        });
+        let (err, done) = err;
+        assert!(
+            err.downcast_ref::<Drained>().is_some(),
+            "expected Drained sentinel, got: {err:#}"
+        );
+        assert!(done < 20, "shutdown must interrupt the job");
+        // new jobs are refused once draining
+        let members = vec![member("b", "fpB", 4)];
+        let items = items_for(&members, 1);
+        let (res, _) = run_one(&pool, "late", members, items, None);
+        assert!(res.unwrap_err().downcast_ref::<Drained>().is_some());
+        pool.join();
+    }
+
+    #[test]
+    fn halt_after_cells_stops_one_job_and_spares_the_pool() {
+        let compiles = Arc::new(AtomicUsize::new(0));
+        let pool = pool_of(1, &compiles, 0);
+        let members = vec![member("a", "fpA", 4)];
+        let (res, _) =
+            run_one(&pool, "halted", members.clone(), items_for(&members, 5), Some(2));
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("halted after 2"), "{msg}");
+        // the pool survives the halted job: a fresh job completes
+        let (res, slots) =
+            run_one(&pool, "after", members.clone(), items_for(&members, 3), None);
+        res.unwrap();
+        assert!(slots[0].iter().all(|o| o.is_some()));
+        pool.join();
+    }
+}

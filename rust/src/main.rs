@@ -45,7 +45,7 @@ use cpt::coordinator::campaign::{
 };
 use cpt::coordinator::lease::{self, ClaimConfig, Clock, SystemClock};
 use cpt::coordinator::{
-    self, merge_run_dirs, recipes, ClaimerId, RunOutcome, ShardId,
+    self, exec, merge_run_dirs, pool, recipes, ClaimerId, RunOutcome, ShardId,
 };
 use cpt::prelude::*;
 use cpt::quant::range_test;
@@ -168,22 +168,32 @@ USAGE: cpt <subcommand> [flags]
                                 serve root: every job's ticket, state
                                 and done/planned cells from the durable
                                 job records
-  serve --root DIR [--listen 127.0.0.1:0] [--jobs N] [--file F.toml]
+  serve --root DIR [--listen 127.0.0.1:0] [--jobs N]
+        [--concurrent-jobs N] [--allow-remote] [--file F.toml]
         [--verbose] [--aot-cache DIR]
                                 long-running campaign service: accepts
                                 campaign specs over a line-delimited
                                 JSON protocol on localhost TCP (bound
                                 address published to <root>/serve-addr),
-                                runs each through the global scheduler
-                                into jobs/<ticket>/run, and caches the
-                                finished CSV tree; the ticket is the
-                                spec's campaign hash, so identical
+                                runs each through a persistent shared
+                                worker pool into jobs/<ticket>/run, and
+                                caches the finished CSV tree; the ticket
+                                is the spec's campaign hash, so identical
                                 submissions dedupe — in-flight jobs are
                                 attached to, finished ones answer from
                                 the store with zero new compiles/cells;
+                                --concurrent-jobs admits N jobs to the
+                                pool at once (fair-share across jobs, so
+                                a small job behind a large one still
+                                finishes fast) and jobs sharing a model
+                                fingerprint reuse each other's compiled
+                                executables; non-loopback --listen is
+                                refused without --allow-remote (the
+                                protocol has no authentication);
                                 interrupted jobs resume on restart;
                                 --file reads a [serve] table (root,
-                                listen, jobs), CLI flags win
+                                listen, jobs, concurrent_jobs), CLI
+                                flags win
   submit --connect HOST:PORT --file configs/X.toml [--wait]
          [--out DIR] [--poll-ms N]
                                 submit a campaign spec to a running
@@ -191,22 +201,33 @@ USAGE: cpt <subcommand> [flags]
                                 whether it deduped; --wait polls to
                                 completion; --out fetches the CSVs
                                 (implies --wait)
-  jobs --connect HOST:PORT      list the daemon's jobs (ticket, state,
-                                done/planned cells, campaign name)
+  jobs --connect HOST:PORT      list the daemon's jobs: ticket, state,
+                                live done/planned cells, per-job pool
+                                stats (compiles/cache hits/disk hits),
+                                campaign name
   result --connect HOST:PORT --ticket T [--out DIR]
                                 fetch a finished job's CSV tree (default
                                 out dir: <results>/serve_<ticket>)
-  shutdown --connect HOST:PORT  stop the daemon after the in-flight job;
-                                queued jobs stay durable and resume on
-                                the next `cpt serve` of the same root
-  gc DIR                        compact recorded cell artifacts (strip
+  shutdown --connect HOST:PORT  stop the daemon gracefully: the worker
+                                pool drains (in-flight cells finish and
+                                stay durable), drained and queued jobs
+                                resume on the next `cpt serve` of the
+                                same root
+  gc DIR [--max-age S] [--max-bytes N] | gc --connect HOST:PORT [...]
+                                compact recorded cell artifacts (strip
                                 per-step histories, keep every scalar);
                                 merged/aggregate CSVs are byte-identical
                                 before and after; given an AOT cache dir
                                 instead, sweep orphaned .tmp files,
                                 remove damaged entries, and evict
                                 least-recently-used entries over the
-                                CPT_AOT_CACHE_CAP byte budget
+                                CPT_AOT_CACHE_CAP byte budget; given a
+                                serve root (or --connect to a live
+                                daemon), prune finished job dirs older
+                                than --max-age seconds and/or evict
+                                least-recently-finished jobs until under
+                                --max-bytes — queued/running jobs are
+                                never touched
   cache status|gc [--aot-cache DIR] [--cap BYTES]
                                 inspect or collect the persistent AOT
                                 executable cache (dir from --aot-cache,
@@ -878,11 +899,61 @@ fn cmd_status(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_gc(cli: &Cli) -> Result<()> {
-    cli.check_known(&[])?;
+    cli.check_known(&["max-age", "max-bytes", "connect"])?;
+    let max_age = match cli.flag("max-age") {
+        Some(_) => Some(cli.f64_or("max-age", 0.0)?),
+        None => None,
+    };
+    let max_bytes = match cli.flag("max-bytes") {
+        Some(v) => Some(v.parse::<u64>().with_context(|| {
+            format!("--max-bytes expects an integer byte count, got '{v}'")
+        })?),
+        None => None,
+    };
+    // through a live daemon: the server prunes under its own state lock,
+    // so queued/running jobs are never touched
+    if let Some(addr) = cli.flag("connect") {
+        if !cli.positional.is_empty() {
+            bail!("cpt gc --connect takes no directory argument");
+        }
+        let (removed, freed) = Client::connect(addr)?.gc(max_age, max_bytes)?;
+        println!("serve gc: removed {removed} job dir(s), freed {freed} bytes");
+        return Ok(());
+    }
     if cli.positional.len() != 1 {
-        bail!("usage: cpt gc RUN_DIR_OR_CAMPAIGN_ROOT_OR_CACHE_DIR");
+        bail!("usage: cpt gc RUN_DIR_OR_CAMPAIGN_ROOT_OR_CACHE_OR_SERVE_ROOT");
     }
     let dir = Path::new(&cli.positional[0]);
+    if server::jobs::is_serve_root(dir) {
+        if max_age.is_none() && max_bytes.is_none() {
+            bail!(
+                "cpt gc on a serve root needs a policy: pass --max-age \
+                 SECONDS and/or --max-bytes N"
+            );
+        }
+        let out = server::jobs::gc_serve_root(
+            dir,
+            max_age,
+            max_bytes,
+            SystemClock.now(),
+        )?;
+        println!(
+            "serve gc {}: removed {} finished job dir(s), freed {} bytes",
+            dir.display(),
+            out.removed.len(),
+            out.bytes_freed
+        );
+        for t in &out.removed {
+            println!("    pruned {t}");
+        }
+        return Ok(());
+    }
+    if max_age.is_some() || max_bytes.is_some() {
+        bail!(
+            "--max-age/--max-bytes apply to serve roots; {} is not one",
+            dir.display()
+        );
+    }
     if aot::is_cache_dir(dir) {
         return gc_cache_dir(dir, aot::cache_cap_from_env()?);
     }
@@ -1183,7 +1254,16 @@ fn cmd_preset(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    cli.check_known(&["root", "listen", "jobs", "file", "verbose", "aot-cache"])?;
+    cli.check_known(&[
+        "root",
+        "listen",
+        "jobs",
+        "concurrent-jobs",
+        "allow-remote",
+        "file",
+        "verbose",
+        "aot-cache",
+    ])?;
     apply_aot_flag(cli);
     let cfg = match cli.flag("file") {
         Some(path) => ServeConfig::from_toml(&TomlDoc::load(path)?)?,
@@ -1206,27 +1286,80 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         Some(_) => cli.usize_or("jobs", 1)?,
         None => cfg.jobs.unwrap_or_else(cpt::default_jobs),
     };
+    let concurrent = match cli.flag("concurrent-jobs") {
+        Some(_) => cli.usize_or("concurrent-jobs", 1)?,
+        None => cfg.concurrent_jobs.unwrap_or(1),
+    };
     let manifest = Manifest::load(artifacts_dir())?;
-    let exec: server::CampaignExec = std::sync::Arc::new(move |plan, opts| {
-        run_campaign(&manifest, plan, opts)
-    });
+    // One persistent worker pool for the daemon's whole lifetime: every
+    // job's cells are multiplexed over the same workers, so a second job
+    // sharing a model fingerprint reuses compiled executables instead of
+    // recompiling (the cross-job warm start `cpt jobs` reports as hits).
+    let specs = std::sync::Arc::new(exec::SpecRegistry::new());
+    let cache_cap = exec::exec_cache_cap()?;
+    let aot = aot::store_for_run()?.map(std::sync::Arc::new);
+    let factory: std::sync::Arc<pool::WorkerFactory> = {
+        let specs = specs.clone();
+        std::sync::Arc::new(move |_worker| {
+            let runner =
+                exec::PjrtCellRunner::new(specs.clone(), cache_cap, aot.clone())?;
+            Ok(Box::new(runner) as Box<dyn exec::CellRunner>)
+        })
+    };
+    let pool =
+        std::sync::Arc::new(pool::WorkerPool::new(jobs, "serve", factory));
+    let exec: server::CampaignExec = {
+        let specs = specs.clone();
+        let pool = pool.clone();
+        std::sync::Arc::new(move |plan, opts| {
+            let mut fingerprints = std::collections::HashMap::new();
+            for m in &plan.members {
+                if !fingerprints.contains_key(&m.spec.model) {
+                    let ms = manifest.model(&m.spec.model)?.clone();
+                    ms.validate()?;
+                    fingerprints.insert(
+                        m.spec.model.clone(),
+                        coordinator::store::model_fingerprint(&ms)?,
+                    );
+                    // idempotent: re-registering a model a later job
+                    // shares is a no-op for already-warm workers
+                    specs.insert(&m.spec.model, ms);
+                }
+            }
+            campaign::run_campaign_pooled(plan, opts, &fingerprints, None, &pool)
+        })
+    };
+    let drain: server::DrainHook = {
+        let pool = pool.clone();
+        std::sync::Arc::new(move || pool.shutdown())
+    };
     let srv = Server::start(
         ServeOpts {
             root: root.clone(),
             listen,
             jobs,
+            concurrent,
+            allow_remote: cli.bool("allow-remote"),
             verbose: cli.bool("verbose"),
         },
         exec,
+        Some(drain),
         std::sync::Arc::new(SystemClock),
     )?;
     println!(
-        "cpt serve listening on {} (root {}; address also in {})",
+        "cpt serve listening on {} (root {}; {} worker(s), {} concurrent \
+         job(s); address also in {})",
         srv.addr(),
         root.display(),
+        pool.size(),
+        concurrent.max(1),
         root.join(server::jobs::SERVE_ADDR_FILE).display()
     );
-    srv.wait()
+    let res = srv.wait();
+    // the daemon has stopped handing out work; drain in-flight cells and
+    // release the PJRT clients before exiting
+    pool.join();
+    res
 }
 
 fn cmd_submit(cli: &Cli) -> Result<()> {
@@ -1266,15 +1399,21 @@ fn cmd_submit(cli: &Cli) -> Result<()> {
 
 fn print_job_views(jobs: &[server::JobView]) {
     println!(
-        "{:<18} {:<8} {:>13}  {}",
-        "ticket", "state", "done/planned", "name"
+        "{:<18} {:<8} {:>13}  {:<22} {}",
+        "ticket", "state", "done/planned", "compiles/hits/disk", "name"
     );
     for j in jobs {
         let done =
             j.done.map(|d| d.to_string()).unwrap_or_else(|| "?".to_string());
+        let stats = match &j.stats {
+            Some(s) => {
+                format!("{}/{}/{}", s.compiles, s.hits, s.disk_hits)
+            }
+            None => "-".to_string(),
+        };
         println!(
-            "{:<18} {:<8} {:>6}/{:<6}  {}",
-            j.ticket, j.state, done, j.planned, j.name
+            "{:<18} {:<8} {:>6}/{:<6}  {:<22} {}",
+            j.ticket, j.state, done, j.planned, stats, j.name
         );
         if let Some(e) = &j.error {
             println!("    error: {e}");

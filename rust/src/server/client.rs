@@ -144,6 +144,21 @@ impl Client {
         }
     }
 
+    /// Ask the daemon to prune finished job dirs by age and/or byte
+    /// budget. Returns `(jobs removed, bytes freed)`.
+    pub fn gc(
+        &mut self,
+        max_age: Option<f64>,
+        max_bytes: Option<u64>,
+    ) -> Result<(usize, u64)> {
+        match self.call_ok(&Request::Gc { max_age, max_bytes })? {
+            Response::GcDone { removed, bytes_freed } => {
+                Ok((removed, bytes_freed))
+            }
+            other => bail!("unexpected reply to gc: {other:?}"),
+        }
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call_ok(&Request::Shutdown)? {
             Response::ShuttingDown => Ok(()),

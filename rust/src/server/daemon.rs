@@ -1,13 +1,20 @@
 //! The `cpt serve` daemon: a TCP accept loop, one connection-handler
-//! thread per client, and a single executor thread that drains the job
-//! queue through the existing campaign machinery (global worker pool,
-//! nested `RunStore` dirs, resume-on-reopen).
+//! thread per client, and `--concurrent-jobs` executor threads that
+//! drain the job queue through the existing campaign machinery — in
+//! production every executor routes its job onto one persistent
+//! [`crate::coordinator::pool::WorkerPool`], so concurrent jobs
+//! multiplex over shared workers (fair-share claiming) and a job
+//! sharing a model fingerprint with an earlier one reuses the workers'
+//! warm executable caches instead of recompiling.
 //!
 //! Execution is injected as a [`CampaignExec`] closure so the whole
 //! daemon — protocol, dedupe, job lifecycle, crash recovery — is
 //! testable with fabricated cell runners and no PJRT runtime;
-//! production wires `coordinator::campaign::run_campaign` over the
-//! artifact manifest.
+//! production wires `coordinator::campaign::run_campaign_pooled` over
+//! the artifact manifest, plus a [`DrainHook`] that shuts the pool down
+//! when the daemon stops (in-flight cells finish, each interrupted job
+//! reports [`crate::coordinator::pool::Drained`] and is demoted back to
+//! `queued` — durable for resume on the next daemon start).
 //!
 //! Dedupe semantics: the job ticket is the campaign content hash, and
 //! the daemon derives it server-side from the submitted spec bytes.
@@ -24,25 +31,31 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::jobs::{self, JobRecord, JobState};
+use super::jobs::{self, JobRecord, JobState, JobStats};
 use super::proto::{self, ErrorCode, Request, Response};
 use crate::config::toml::TomlDoc;
 use crate::coordinator::campaign::{
     CampaignPlan, CampaignRunOpts, CampaignRunResult, CampaignSpec,
-    SchedulerKind,
+    SchedulerKind, SchedulerStats,
 };
 use crate::coordinator::lease::Clock;
-use crate::coordinator::{report, ShardId};
+use crate::coordinator::{pool, report, ShardId};
 use crate::util::{self, FrameError};
 
 /// How accepted jobs are executed. Production: a closure over
-/// `run_campaign(&manifest, plan, opts)`. Tests: `run_campaign_global`
+/// `run_campaign_pooled(plan, opts, ..)` sharing one [`pool::WorkerPool`]
+/// across jobs. Tests: `run_campaign_global` (or a pooled equivalent)
 /// with a fabricated `CellRunner` and an execution counter.
 pub type CampaignExec = Arc<
     dyn Fn(&CampaignPlan, &CampaignRunOpts) -> Result<CampaignRunResult>
         + Send
         + Sync,
 >;
+
+/// Invoked once when the daemon begins stopping, before the executor
+/// threads are joined — production passes `pool.shutdown()` so in-flight
+/// cells finish and interrupted jobs drain as [`pool::Drained`].
+pub type DrainHook = Arc<dyn Fn() + Send + Sync>;
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
@@ -52,8 +65,14 @@ pub struct ServeOpts {
     /// Bind address, e.g. `127.0.0.1:0` (the bound address — with the
     /// real port — is written to `<root>/serve-addr`).
     pub listen: String,
-    /// Worker-pool size for each job's global scheduler.
+    /// Worker-pool size shared by all concurrent jobs.
     pub jobs: usize,
+    /// Jobs admitted to the pool at once (executor threads). The pool's
+    /// fair-share claiming splits workers across them.
+    pub concurrent: usize,
+    /// Allow non-loopback `--listen` binds. The daemon has no
+    /// authentication, so exposing it beyond localhost is opt-in.
+    pub allow_remote: bool,
     pub verbose: bool,
 }
 
@@ -70,6 +89,7 @@ struct Inner {
     exec_jobs: usize,
     verbose: bool,
     exec: CampaignExec,
+    drain: Option<DrainHook>,
     clock: Arc<dyn Clock>,
     state: Mutex<ServeState>,
     wake: Condvar,
@@ -83,7 +103,20 @@ struct Inner {
 pub struct Server {
     inner: Arc<Inner>,
     accept: Option<std::thread::JoinHandle<()>>,
-    executor: Option<std::thread::JoinHandle<()>>,
+    executors: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Whether a `host:port` listen string names a loopback interface.
+fn is_loopback_listen(listen: &str) -> bool {
+    let host = match listen.rsplit_once(':') {
+        Some((h, _)) => h,
+        None => listen,
+    };
+    let host = host.trim_start_matches('[').trim_end_matches(']');
+    if host.eq_ignore_ascii_case("localhost") {
+        return true;
+    }
+    host.parse::<std::net::IpAddr>().map_or(false, |ip| ip.is_loopback())
 }
 
 impl Server {
@@ -92,8 +125,17 @@ impl Server {
     pub fn start(
         opts: ServeOpts,
         exec: CampaignExec,
+        drain: Option<DrainHook>,
         clock: Arc<dyn Clock>,
     ) -> Result<Server> {
+        if !opts.allow_remote && !is_loopback_listen(&opts.listen) {
+            bail!(
+                "refusing to bind non-localhost listen address '{}': the \
+                 daemon has no authentication; pass --allow-remote to \
+                 expose it beyond loopback",
+                opts.listen
+            );
+        }
         jobs::init_serve_root(&opts.root)?;
         let mut state = ServeState {
             jobs: HashMap::new(),
@@ -139,21 +181,24 @@ impl Server {
             exec_jobs: opts.jobs,
             verbose: opts.verbose,
             exec,
+            drain,
             clock,
             state: Mutex::new(state),
             wake: Condvar::new(),
             stop: AtomicBool::new(false),
             addr,
         });
-        let executor = {
-            let inner = inner.clone();
-            std::thread::spawn(move || executor_loop(&inner))
-        };
+        let executors = (0..opts.concurrent.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || executor_loop(&inner))
+            })
+            .collect();
         let accept = {
             let inner = inner.clone();
             std::thread::spawn(move || accept_loop(&inner, listener))
         };
-        Ok(Server { inner, accept: Some(accept), executor: Some(executor) })
+        Ok(Server { inner, accept: Some(accept), executors })
     }
 
     /// The bound address (host:port), useful with `--listen *:0`.
@@ -172,7 +217,7 @@ impl Server {
         if let Some(h) = self.accept.take() {
             h.join().map_err(|_| anyhow!("accept thread panicked"))?;
         }
-        if let Some(h) = self.executor.take() {
+        for h in self.executors.drain(..) {
             h.join().map_err(|_| anyhow!("executor thread panicked"))?;
         }
         Ok(())
@@ -208,6 +253,11 @@ fn recover_plan(root: &std::path::Path, rec: &JobRecord) -> Result<CampaignPlan>
 
 fn trigger_stop(inner: &Arc<Inner>) {
     inner.stop.store(true, Ordering::SeqCst);
+    // drain the shared worker pool (idempotent): in-flight cells finish,
+    // interrupted jobs return `Drained` and demote themselves to queued
+    if let Some(drain) = &inner.drain {
+        drain();
+    }
     inner.wake.notify_all();
     // the accept loop blocks in accept(2); a throwaway self-connection
     // unblocks it so it can observe the stop flag
@@ -312,9 +362,41 @@ fn handle_request(inner: &Arc<Inner>, req: &Request) -> Response {
         Request::Status { ticket } => status(inner, ticket),
         Request::Result { ticket } => result(inner, ticket),
         Request::Jobs => jobs_list(inner),
+        Request::Gc { max_age, max_bytes } => gc(inner, *max_age, *max_bytes),
         // handled by the connection loop; answering here keeps the
         // match total
         Request::Shutdown => Response::ShuttingDown,
+    }
+}
+
+/// Prune finished job dirs by age/byte budget. Runs under the state
+/// lock so no job can transition (or be submitted) mid-prune; queued and
+/// running jobs are never touched.
+fn gc(
+    inner: &Arc<Inner>,
+    max_age: Option<f64>,
+    max_bytes: Option<u64>,
+) -> Response {
+    let mut st = inner.state.lock().unwrap();
+    let now = inner.clock.now();
+    match jobs::gc_serve_root(&inner.root, max_age, max_bytes, now) {
+        Ok(out) => {
+            for t in &out.removed {
+                st.jobs.remove(t);
+            }
+            if inner.verbose && !out.removed.is_empty() {
+                eprintln!(
+                    "[serve] gc pruned {} job(s), {} bytes",
+                    out.removed.len(),
+                    out.bytes_freed
+                );
+            }
+            Response::GcDone {
+                removed: out.removed.len(),
+                bytes_freed: out.bytes_freed,
+            }
+        }
+        Err(e) => internal(e),
     }
 }
 
@@ -442,11 +524,15 @@ fn set_state(
     ticket: &str,
     state: JobState,
     error: Option<String>,
+    stats: Option<JobStats>,
 ) {
     let mut st = inner.state.lock().unwrap();
     if let Some(rec) = st.jobs.get_mut(ticket) {
         rec.state = state;
         rec.error = error;
+        if let Some(s) = stats {
+            rec.stats = Some(s);
+        }
         if state.is_terminal() {
             rec.finished = Some(inner.clock.now());
         }
@@ -458,14 +544,35 @@ fn set_state(
     }
 }
 
-/// The single executor: drains the queue FIFO, one campaign at a time,
-/// each through the injected exec over a nested campaign root opened
-/// with resume semantics (fresh and recovered jobs share one path).
+/// This job's share of the shared pool's work, summed over the workers
+/// that ran its cells.
+fn job_stats_of(sched: &SchedulerStats) -> JobStats {
+    let mut s = JobStats::default();
+    for w in &sched.workers {
+        s.compiles += w.compiles;
+        s.compile_seconds += w.compile_seconds;
+        s.hits += w.hits;
+        s.disk_hits += w.disk_hits;
+        s.misses += w.misses;
+    }
+    s
+}
+
+/// One of `--concurrent-jobs` executors: each claims the next queued
+/// ticket FIFO and runs it through the injected exec over a nested
+/// campaign root opened with resume semantics (fresh and recovered jobs
+/// share one path). Concurrent executors multiplex over the shared
+/// worker pool, whose fair-share claiming keeps a small job from
+/// queueing behind a large one. Stop is checked *before* claiming, so a
+/// shutdown leaves queued jobs durable for the next daemon start.
 fn executor_loop(inner: &Arc<Inner>) {
     loop {
         let (ticket, plan) = {
             let mut st = inner.state.lock().unwrap();
             loop {
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
                 if let Some(t) = st.queue.pop_front() {
                     match st.plans.remove(&t) {
                         Some(p) => break (t, p),
@@ -473,23 +580,15 @@ fn executor_loop(inner: &Arc<Inner>) {
                         None => continue,
                     }
                 }
-                if inner.stop.load(Ordering::SeqCst) {
-                    return;
-                }
                 st = inner.wake.wait(st).unwrap();
             }
         };
         run_job(inner, &ticket, &plan);
-        if inner.stop.load(Ordering::SeqCst) {
-            // drain no further after a shutdown request; queued jobs
-            // stay durable and resume on the next daemon start
-            return;
-        }
     }
 }
 
 fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
-    set_state(inner, ticket, JobState::Running, None);
+    set_state(inner, ticket, JobState::Running, None, None);
     if inner.verbose {
         eprintln!("[serve] running job {ticket}");
     }
@@ -512,19 +611,30 @@ fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
                 .iter()
                 .map(|m| (m.name.as_str(), m.outcomes.as_slice())),
         )
-        .map(|_| ())
+        .map(|()| result)
     });
     match outcome {
-        Ok(()) => {
-            set_state(inner, ticket, JobState::Done, None);
+        Ok(result) => {
+            let stats = result.scheduler.as_ref().map(job_stats_of);
+            set_state(inner, ticket, JobState::Done, None, stats);
             if inner.verbose {
                 eprintln!("[serve] job {ticket} done");
+            }
+        }
+        Err(e) if e.downcast_ref::<pool::Drained>().is_some() => {
+            // shutdown drained the pool mid-job: every recorded cell is
+            // durable in the nested campaign root, so demote to queued —
+            // the next daemon start resumes it instead of reporting a
+            // failure
+            set_state(inner, ticket, JobState::Queued, None, None);
+            if inner.verbose {
+                eprintln!("[serve] job {ticket} drained; queued for resume");
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
             eprintln!("[serve] job {ticket} failed: {msg}");
-            set_state(inner, ticket, JobState::Failed, Some(msg));
+            set_state(inner, ticket, JobState::Failed, Some(msg), None);
         }
     }
 }

@@ -87,6 +87,48 @@ impl std::fmt::Display for JobState {
     }
 }
 
+/// This job's share of the shared worker pool's compile/cache work,
+/// recorded when the job completes. Zero `compiles` with nonzero `hits`
+/// is the cross-job warm-start signature: every executable this job
+/// needed was already compiled by an earlier job on the same pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JobStats {
+    pub compiles: usize,
+    pub compile_seconds: f64,
+    pub hits: usize,
+    pub disk_hits: usize,
+    pub misses: usize,
+}
+
+impl JobStats {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("compiles", json::num(self.compiles as f64)),
+            ("compile_seconds", json::num(self.compile_seconds)),
+            ("hits", json::num(self.hits as f64)),
+            ("disk_hits", json::num(self.disk_hits as f64)),
+            ("misses", json::num(self.misses as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobStats> {
+        Ok(JobStats {
+            compiles: j.get("compiles")?.as_usize()?,
+            compile_seconds: j.get("compile_seconds")?.as_f64()?,
+            hits: j.get("hits")?.as_usize()?,
+            disk_hits: j.get("disk_hits")?.as_usize()?,
+            misses: j.get("misses")?.as_usize()?,
+        })
+    }
+}
+
+fn opt_stats(j: &Json, key: &str) -> Result<Option<JobStats>> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(JobStats::from_json(v)?)),
+    }
+}
+
 /// The durable per-job record behind `jobs/<ticket>/job.json`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobRecord {
@@ -103,6 +145,9 @@ pub struct JobRecord {
     pub finished: Option<f64>,
     /// Failure message, for `Failed` jobs.
     pub error: Option<String>,
+    /// Pool accounting for this job, once done. Optional in the JSON
+    /// (readers of older records see `None`), so the schema stays v1.
+    pub stats: Option<JobStats>,
 }
 
 impl JobRecord {
@@ -130,6 +175,13 @@ impl JobRecord {
                     None => Json::Null,
                 },
             ),
+            (
+                "stats",
+                match &self.stats {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -153,6 +205,7 @@ impl JobRecord {
             submitted: j.get("submitted")?.as_f64()?,
             finished: opt_f64(j, "finished")?,
             error: opt_str(j, "error")?,
+            stats: opt_stats(j, "stats")?,
         })
     }
 
@@ -203,6 +256,8 @@ pub struct JobView {
     pub done: Option<usize>,
     pub submitted: f64,
     pub error: Option<String>,
+    /// Pool accounting, once the job is done.
+    pub stats: Option<JobStats>,
 }
 
 impl JobView {
@@ -227,6 +282,13 @@ impl JobView {
                     None => Json::Null,
                 },
             ),
+            (
+                "stats",
+                match &self.stats {
+                    Some(s) => s.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -243,6 +305,7 @@ impl JobView {
             done,
             submitted: j.get("submitted")?.as_f64()?,
             error: opt_str(j, "error")?,
+            stats: opt_stats(j, "stats")?,
         })
     }
 }
@@ -372,6 +435,7 @@ pub fn view(root: &Path, rec: &JobRecord) -> JobView {
         done,
         submitted: rec.submitted,
         error: rec.error.clone(),
+        stats: rec.stats,
     }
 }
 
@@ -409,6 +473,87 @@ pub fn read_result_files(
     Ok(files)
 }
 
+/// What [`gc_serve_root`] pruned.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GcOutcome {
+    /// Tickets whose job dirs were removed, in removal order.
+    pub removed: Vec<String>,
+    pub bytes_freed: u64,
+}
+
+fn dir_size(path: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(path) else { return 0 };
+    let mut total = 0u64;
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            total += dir_size(&p);
+        } else if let Ok(md) = entry.metadata() {
+            total += md.len();
+        }
+    }
+    total
+}
+
+/// Prune finished job dirs (the serve root's result cache) by budget.
+/// Only terminal jobs are candidates — queued and running jobs are never
+/// touched. Two independent budgets compose:
+///
+/// * `max_age`: remove terminal jobs whose completion time is more than
+///   this many seconds before `now`.
+/// * `max_bytes`: if the remaining terminal job dirs still exceed this
+///   many bytes, evict least-recently-finished first until they fit.
+///
+/// With both `None` this is a no-op that reports nothing removed.
+pub fn gc_serve_root(
+    root: &Path,
+    max_age: Option<f64>,
+    max_bytes: Option<u64>,
+    now: f64,
+) -> Result<GcOutcome> {
+    let mut out = GcOutcome::default();
+    if max_age.is_none() && max_bytes.is_none() {
+        return Ok(out);
+    }
+    // terminal jobs, least-recently-finished first (never-finished
+    // terminal records sort oldest — they predate the finished field)
+    let mut terminal: Vec<(JobRecord, u64)> = list_jobs(root)?
+        .into_iter()
+        .filter(|r| r.state.is_terminal())
+        .map(|r| {
+            let size = dir_size(&job_dir(root, &r.ticket));
+            (r, size)
+        })
+        .collect();
+    terminal.sort_by(|a, b| {
+        let fa = a.0.finished.unwrap_or(f64::NEG_INFINITY);
+        let fb = b.0.finished.unwrap_or(f64::NEG_INFINITY);
+        fa.partial_cmp(&fb)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.0.ticket.cmp(&b.0.ticket))
+    });
+    let mut live_bytes: u64 = terminal.iter().map(|(_, s)| s).sum();
+    for (rec, size) in terminal {
+        let expired = max_age.map_or(false, |age| {
+            rec.finished.map_or(true, |f| f + age <= now)
+        });
+        let over_budget = max_bytes.map_or(false, |cap| live_bytes > cap);
+        if !expired && !over_budget {
+            if max_bytes.is_none() {
+                continue; // age-only pass: keep scanning younger jobs
+            }
+            break; // within byte budget, and the list only gets younger
+        }
+        let dir = job_dir(root, &rec.ticket);
+        std::fs::remove_dir_all(&dir)
+            .with_context(|| format!("remove {}", dir.display()))?;
+        live_bytes = live_bytes.saturating_sub(size);
+        out.bytes_freed += size;
+        out.removed.push(rec.ticket);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,7 +573,31 @@ mod tests {
             submitted,
             finished: None,
             error: None,
+            stats: None,
         }
+    }
+
+    fn done_record(ticket: &str, finished: f64, payload: usize) -> JobRecord {
+        let mut rec = record(ticket, finished - 1.0);
+        rec.state = JobState::Done;
+        rec.finished = Some(finished);
+        rec.stats = Some(JobStats {
+            compiles: 1,
+            compile_seconds: 0.5,
+            hits: payload,
+            disk_hits: 0,
+            misses: 1,
+        });
+        rec
+    }
+
+    /// Store a terminal record plus `payload` bytes of fake artifacts.
+    fn store_done(root: &Path, ticket: &str, finished: f64, payload: usize) {
+        let rec = done_record(ticket, finished, payload);
+        rec.store(root).unwrap();
+        let csv = job_dir(root, ticket).join(JOB_CSV_DIR);
+        std::fs::create_dir_all(&csv).unwrap();
+        std::fs::write(csv.join("a.csv"), vec![b'x'; payload]).unwrap();
     }
 
     #[test]
@@ -480,6 +649,63 @@ mod tests {
         )
         .unwrap();
         assert!(init_serve_root(&root).is_err(), "wrong kind refused");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn job_stats_round_trip_and_stay_optional() {
+        let root = tmp("stats");
+        init_serve_root(&root).unwrap();
+        let rec = done_record("aa11", 9.0, 3);
+        rec.store(&root).unwrap();
+        let back = JobRecord::load(&job_dir(&root, "aa11")).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.stats.unwrap().hits, 3);
+        // records without the stats field (older daemons) still decode
+        let plain = record("bb22", 1.0);
+        let j = plain.to_json();
+        let decoded = JobRecord::from_json(&j).unwrap();
+        assert_eq!(decoded.stats, None);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_prunes_by_age_without_touching_live_jobs() {
+        let root = tmp("gc_age");
+        init_serve_root(&root).unwrap();
+        store_done(&root, "old1", 10.0, 8);
+        store_done(&root, "new1", 90.0, 8);
+        record("live", 5.0).store(&root).unwrap(); // queued: untouchable
+        let out = gc_serve_root(&root, Some(50.0), None, 100.0).unwrap();
+        assert_eq!(out.removed, vec!["old1"]);
+        assert!(out.bytes_freed > 0);
+        assert!(!job_dir(&root, "old1").exists());
+        assert!(job_dir(&root, "new1").exists());
+        assert!(job_dir(&root, "live").exists());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_evicts_least_recently_finished_to_fit_the_byte_budget() {
+        let root = tmp("gc_bytes");
+        init_serve_root(&root).unwrap();
+        store_done(&root, "t1", 10.0, 4000);
+        store_done(&root, "t2", 20.0, 4000);
+        store_done(&root, "t3", 30.0, 4000);
+        // budget fits roughly one job dir: the two oldest go, LRU first
+        let total = dir_size(&job_dir(&root, "t1"));
+        let out =
+            gc_serve_root(&root, None, Some(total + total / 2), 100.0)
+                .unwrap();
+        assert_eq!(out.removed, vec!["t1", "t2"]);
+        assert!(job_dir(&root, "t3").exists());
+        // already within budget: nothing more to do
+        let out2 =
+            gc_serve_root(&root, None, Some(total * 2), 100.0).unwrap();
+        assert!(out2.removed.is_empty());
+        // no budgets: explicit no-op
+        let out3 = gc_serve_root(&root, None, None, 100.0).unwrap();
+        assert_eq!(out3, GcOutcome::default());
         std::fs::remove_dir_all(&root).ok();
     }
 

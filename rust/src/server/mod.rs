@@ -13,8 +13,9 @@
 //! - [`jobs`] — durable job records and the serve-root directory
 //!   layout (`serve.json`, `serve-addr`, `jobs/<ticket>/...`).
 //! - [`daemon`] — the server: accept loop, connection handlers, and
-//!   the executor thread that drains the queue through the campaign
-//!   machinery.
+//!   `--concurrent-jobs` executor threads that drain the queue through
+//!   one persistent shared worker pool (fair-share scheduling,
+//!   cross-job warm compiles, graceful drain on shutdown).
 //! - [`client`] — the blocking client behind `cpt submit|jobs|result`.
 
 pub mod client;
@@ -23,8 +24,8 @@ pub mod jobs;
 pub mod proto;
 
 pub use client::Client;
-pub use daemon::{CampaignExec, ServeOpts, Server};
-pub use jobs::{JobRecord, JobState, JobView};
+pub use daemon::{CampaignExec, DrainHook, ServeOpts, Server};
+pub use jobs::{JobRecord, JobState, JobStats, JobView};
 
 use std::path::PathBuf;
 
@@ -43,6 +44,9 @@ pub struct ServeConfig {
     pub root: Option<PathBuf>,
     pub listen: Option<String>,
     pub jobs: Option<usize>,
+    /// Jobs admitted to the shared worker pool at once
+    /// (`--concurrent-jobs`).
+    pub concurrent_jobs: Option<usize>,
 }
 
 impl ServeConfig {
@@ -62,9 +66,14 @@ impl ServeConfig {
                         v.as_usize().context("serve key 'jobs'")?,
                     )
                 }
+                "concurrent_jobs" => {
+                    cfg.concurrent_jobs = Some(
+                        v.as_usize().context("serve key 'concurrent_jobs'")?,
+                    )
+                }
                 other => bail!(
                     "unknown [serve] key '{other}' (known: root, listen, \
-                     jobs)"
+                     jobs, concurrent_jobs)"
                 ),
             }
         }
@@ -80,13 +89,14 @@ mod tests {
     fn serve_config_reads_the_serve_section() {
         let doc = TomlDoc::parse(
             "[serve]\nroot = \"/tmp/sroot\"\nlisten = \"127.0.0.1:7777\"\n\
-             jobs = 3\n",
+             jobs = 3\nconcurrent_jobs = 2\n",
         )
         .unwrap();
         let cfg = ServeConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.root.as_deref(), Some(std::path::Path::new("/tmp/sroot")));
         assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:7777"));
         assert_eq!(cfg.jobs, Some(3));
+        assert_eq!(cfg.concurrent_jobs, Some(2));
         // absent section → all defaults
         let doc = TomlDoc::parse("[sweep]\nmodel = \"mlp\"\n").unwrap();
         assert_eq!(

@@ -102,6 +102,10 @@ pub enum Request {
     Status { ticket: String },
     Result { ticket: String },
     Jobs,
+    /// Prune finished job dirs by age and/or byte budget (queued and
+    /// running jobs are never touched). Both fields optional; with
+    /// neither, the daemon prunes nothing.
+    Gc { max_age: Option<f64>, max_bytes: Option<u64> },
     Shutdown,
 }
 
@@ -130,6 +134,11 @@ pub enum Response {
     Jobs {
         jobs: Vec<JobView>,
     },
+    /// What a `gc` request pruned.
+    GcDone {
+        removed: usize,
+        bytes_freed: u64,
+    },
     ShuttingDown,
     Error {
         code: ErrorCode,
@@ -156,6 +165,15 @@ pub fn encode_request(req: &Request) -> String {
             pairs.push(("ticket", json::s(ticket)));
         }
         Request::Jobs => pairs.push(("verb", json::s("jobs"))),
+        Request::Gc { max_age, max_bytes } => {
+            pairs.push(("verb", json::s("gc")));
+            if let Some(age) = max_age {
+                pairs.push(("max_age", json::num(*age)));
+            }
+            if let Some(bytes) = max_bytes {
+                pairs.push(("max_bytes", json::num(*bytes as f64)));
+            }
+        }
         Request::Shutdown => pairs.push(("verb", json::s("shutdown"))),
     }
     json::obj(pairs).to_string_compact()
@@ -203,6 +221,12 @@ pub fn encode_response(resp: &Response) -> String {
                 "jobs",
                 Json::Arr(jobs.iter().map(|j| j.to_json()).collect()),
             ));
+        }
+        Response::GcDone { removed, bytes_freed } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("gc_done")));
+            pairs.push(("removed", json::num(*removed as f64)));
+            pairs.push(("bytes_freed", json::num(*bytes_freed as f64)));
         }
         Response::ShuttingDown => {
             pairs.push(("ok", Json::Bool(true)));
@@ -278,6 +302,18 @@ pub fn decode_request(
             )),
         }
     };
+    let opt_num_field =
+        |key: &str| -> std::result::Result<Option<f64>, (ErrorCode, String)> {
+            match j.opt(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => v.as_f64().map(Some).map_err(|_| {
+                    (
+                        ErrorCode::BadRequest,
+                        format!("'{key}' is not a number"),
+                    )
+                }),
+            }
+        };
     match verb {
         "ping" => Ok(Request::Ping),
         "jobs" => Ok(Request::Jobs),
@@ -285,11 +321,15 @@ pub fn decode_request(
         "submit" => Ok(Request::Submit { spec_toml: str_field("spec_toml")? }),
         "status" => Ok(Request::Status { ticket: str_field("ticket")? }),
         "result" => Ok(Request::Result { ticket: str_field("ticket")? }),
+        "gc" => Ok(Request::Gc {
+            max_age: opt_num_field("max_age")?,
+            max_bytes: opt_num_field("max_bytes")?.map(|b| b as u64),
+        }),
         other => Err((
             ErrorCode::UnknownVerb,
             format!(
                 "unknown verb '{other}' (known: ping, submit, status, \
-                 result, jobs, shutdown)"
+                 result, jobs, gc, shutdown)"
             ),
         )),
     }
@@ -343,6 +383,10 @@ pub fn decode_response(frame: &[u8]) -> Result<Response> {
             }
             Ok(Response::Jobs { jobs })
         }
+        "gc_done" => Ok(Response::GcDone {
+            removed: j.get("removed")?.as_usize()?,
+            bytes_freed: j.get("bytes_freed")?.as_f64()? as u64,
+        }),
         other => bail!("unknown reply kind '{other}'"),
     }
 }

@@ -3,7 +3,11 @@
 //! to the same spec through the direct campaign path, identical
 //! resubmissions must dedupe to zero new executions, simultaneous
 //! submissions must collapse to one job, and a daemon restarted over a
-//! dead daemon's debris must recover its interrupted jobs.
+//! dead daemon's debris must recover its interrupted jobs. The pooled
+//! half drives the shared persistent worker pool exactly as `cpt serve`
+//! wires it: cross-job warm compiles, fair-share scheduling between
+//! concurrent jobs, graceful drain on shutdown, gc over the wire, and
+//! the non-loopback bind guard.
 
 mod common;
 
@@ -15,11 +19,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use common::{fab_outcome, tmp_dir};
 use cpt::config::toml::TomlDoc;
 use cpt::coordinator::campaign::{
-    run_campaign_global, CampaignRunOpts, SchedulerKind,
+    run_campaign_global, run_campaign_pooled, CampaignRunOpts, SchedulerKind,
 };
-use cpt::coordinator::exec::{CellError, CellRunner, ExecMember};
+use cpt::coordinator::exec::{CacheStats, CellError, CellRunner, ExecMember};
 use cpt::coordinator::lease::TestClock;
-use cpt::coordinator::report;
+use cpt::coordinator::{pool, report};
 use cpt::prelude::*;
 use cpt::server::{jobs, Client, JobRecord, JobState, ServeOpts, Server};
 
@@ -44,6 +48,54 @@ fn campaign_toml() -> String {
      q_maxes = [8.0]\n\
      trials = 1\n\
      steps = 10\n"
+        .to_string()
+}
+
+/// A second, distinct spec (its own ticket) sharing the same model —
+/// the cross-job warm-compile assertions submit this after
+/// [`campaign_toml`].
+fn campaign_toml2() -> String {
+    "[campaign]\n\
+     name = \"servecamp2\"\n\
+     \n\
+     [[campaign.sweep]]\n\
+     name = \"c\"\n\
+     model = \"mlp\"\n\
+     schedules = [\"RR\", \"STATIC\"]\n\
+     q_maxes = [8.0]\n\
+     trials = 1\n\
+     steps = 12\n"
+        .to_string()
+}
+
+/// 18 cells — enough runway for a small job to overtake it, and for a
+/// shutdown to land mid-flight.
+fn big_campaign_toml() -> String {
+    "[campaign]\n\
+     name = \"bigcamp\"\n\
+     \n\
+     [[campaign.sweep]]\n\
+     name = \"big\"\n\
+     model = \"mlp\"\n\
+     schedules = [\"CR\", \"RR\", \"STATIC\"]\n\
+     q_maxes = [4.0, 6.0, 8.0]\n\
+     trials = 2\n\
+     steps = 8\n"
+        .to_string()
+}
+
+/// 2 cells — the latecomer fair-share must let finish first.
+fn small_campaign_toml() -> String {
+    "[campaign]\n\
+     name = \"smallcamp\"\n\
+     \n\
+     [[campaign.sweep]]\n\
+     name = \"small\"\n\
+     model = \"mlp\"\n\
+     schedules = [\"CR\"]\n\
+     q_maxes = [8.0]\n\
+     trials = 2\n\
+     steps = 8\n"
         .to_string()
 }
 
@@ -136,8 +188,101 @@ fn serve_opts(root: &Path) -> ServeOpts {
         root: root.to_path_buf(),
         listen: "127.0.0.1:0".to_string(),
         jobs: 2,
+        concurrent: 1,
+        allow_remote: false,
         verbose: false,
     }
+}
+
+/// Pool worker with per-worker compile tracking: first sight of a
+/// fingerprint is a compile (and a cache miss), every later cell is a
+/// hit. The cross-job warm-start assertions hang off the compile
+/// counter staying flat on the second job.
+struct PoolRunner {
+    compiled: Vec<String>,
+    compiles: Arc<AtomicUsize>,
+    cells: Arc<AtomicUsize>,
+    stats: CacheStats,
+    sleep_ms: u64,
+}
+
+impl CellRunner for PoolRunner {
+    fn run_cell(
+        &mut self,
+        member: &ExecMember,
+        cell: &SweepCell,
+        cell_index: usize,
+        _per_step_logs: bool,
+    ) -> Result<RunOutcome, CellError> {
+        if self.compiled.iter().any(|f| f == &member.fingerprint) {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+            self.compiled.push(member.fingerprint.clone());
+            self.compiles.fetch_add(1, Ordering::SeqCst);
+        }
+        if self.sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.sleep_ms,
+            ));
+        }
+        self.cells.fetch_add(1, Ordering::SeqCst);
+        Ok(fab_outcome(&member.model, cell, cell_index))
+    }
+
+    fn compile_stats(&self) -> (usize, f64) {
+        (self.compiled.len(), 0.0)
+    }
+
+    fn has_cached(&self, fingerprint: &str) -> bool {
+        self.compiled.iter().any(|f| f == fingerprint)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// A shared persistent pool over [`PoolRunner`] workers — the daemon's
+/// production wiring, minus PJRT.
+fn test_pool(
+    size: usize,
+    compiles: &Arc<AtomicUsize>,
+    cells: &Arc<AtomicUsize>,
+    sleep_ms: u64,
+) -> Arc<pool::WorkerPool> {
+    let compiles = compiles.clone();
+    let cells = cells.clone();
+    let factory: Arc<pool::WorkerFactory> = Arc::new(move |_| {
+        Ok(Box::new(PoolRunner {
+            compiled: Vec::new(),
+            compiles: compiles.clone(),
+            cells: cells.clone(),
+            stats: CacheStats::default(),
+            sleep_ms,
+        }) as Box<dyn CellRunner>)
+    });
+    Arc::new(pool::WorkerPool::new(size, "test", factory))
+}
+
+/// The serve exec shape `cpt serve` builds: every job routes through
+/// one shared pool via `run_campaign_pooled`. `order` records campaign
+/// names as their jobs complete (the fair-share assertion).
+fn pooled_exec(
+    pool: &Arc<pool::WorkerPool>,
+    order: Option<Arc<Mutex<Vec<String>>>>,
+) -> cpt::server::CampaignExec {
+    let pool = pool.clone();
+    Arc::new(move |plan, opts| {
+        let fps = fingerprints(plan);
+        let res = run_campaign_pooled(plan, opts, &fps, None, &pool);
+        if res.is_ok() {
+            if let Some(order) = &order {
+                order.lock().unwrap().push(plan.name.clone());
+            }
+        }
+        res
+    })
 }
 
 #[test]
@@ -179,6 +324,7 @@ fn submit_poll_fetch_is_byte_identical_to_direct_campaign_and_caches() {
     let srv = Server::start(
         serve_opts(&serve_root),
         counting_exec(execs.clone(), cells.clone(), None),
+        None,
         Arc::new(TestClock::new(100.0)),
     )
     .unwrap();
@@ -257,6 +403,7 @@ fn simultaneous_identical_submissions_execute_exactly_once() {
     let srv = Server::start(
         serve_opts(&tmp.join("serve")),
         counting_exec(execs.clone(), cells.clone(), Some(gate.clone())),
+        None,
         Arc::new(TestClock::new(0.0)),
     )
     .unwrap();
@@ -329,6 +476,7 @@ fn restart_recovers_interrupted_jobs_and_fences_tampered_specs() {
         submitted: 1.0,
         finished: None,
         error: None,
+        stats: None,
     }
     .store(&serve_root)
     .unwrap();
@@ -346,6 +494,7 @@ fn restart_recovers_interrupted_jobs_and_fences_tampered_specs() {
         submitted: 2.0,
         finished: None,
         error: None,
+        stats: None,
     }
     .store(&serve_root)
     .unwrap();
@@ -355,6 +504,7 @@ fn restart_recovers_interrupted_jobs_and_fences_tampered_specs() {
     let srv = Server::start(
         serve_opts(&serve_root),
         counting_exec(execs.clone(), cells.clone(), None),
+        None,
         Arc::new(TestClock::new(50.0)),
     )
     .unwrap();
@@ -388,6 +538,7 @@ fn a_failed_job_reports_its_error_and_leaves_the_daemon_healthy() {
     let srv = Server::start(
         serve_opts(&tmp.join("serve")),
         exec,
+        None,
         Arc::new(TestClock::new(0.0)),
     )
     .unwrap();
@@ -413,6 +564,343 @@ fn a_failed_job_reports_its_error_and_leaves_the_daemon_healthy() {
     let err = client.wait_done(&ticket, 5).unwrap_err().to_string();
     assert!(err.contains("injected executor failure"), "{err}");
     // the executor survives a failed job
+    client.ping().unwrap();
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn a_second_job_sharing_the_model_compiles_nothing_new() {
+    let tmp = tmp_dir("serve_warm");
+    let compiles = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    // one worker, so exactly one compile can ever satisfy both jobs
+    let pool = test_pool(1, &compiles, &cells, 0);
+    let mut opts = serve_opts(&tmp.join("serve"));
+    opts.jobs = 1;
+    let srv = Server::start(
+        opts,
+        pooled_exec(&pool, None),
+        None,
+        Arc::new(TestClock::new(7.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+
+    let plan1 = plan_of(&campaign_toml());
+    let (t1, _, _) = client.submit(&campaign_toml()).unwrap();
+    let v1 = client.wait_done(&t1, 5).unwrap();
+    assert_eq!(compiles.load(Ordering::SeqCst), 1);
+    let s1 = v1.stats.expect("done job records pool stats");
+    assert_eq!(s1.compiles, 1);
+    assert_eq!(s1.misses, 1);
+    assert_eq!(s1.hits, plan1.total_cells() - 1);
+
+    // a distinct spec (fresh ticket, fresh cells) sharing the model
+    // fingerprint: the warm pool compiles nothing for it
+    let plan2 = plan_of(&campaign_toml2());
+    let (t2, _, attached) = client.submit(&campaign_toml2()).unwrap();
+    assert_ne!(t2, t1, "distinct specs must get distinct tickets");
+    assert!(!attached);
+    let v2 = client.wait_done(&t2, 5).unwrap();
+    assert_eq!(
+        compiles.load(Ordering::SeqCst),
+        1,
+        "the second job recompiled a model the pool already holds"
+    );
+    let s2 = v2.stats.expect("done job records pool stats");
+    assert_eq!(s2.compiles, 0, "cross-job warm start: {s2:?}");
+    assert_eq!(s2.hits, plan2.total_cells());
+    // `cpt jobs` surfaces both jobs' split accounting
+    let listed = client.jobs().unwrap();
+    assert_eq!(listed.len(), 2);
+    for j in &listed {
+        assert!(j.stats.is_some(), "done job {} lost its stats", j.ticket);
+    }
+
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    pool.join();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn fair_share_lets_a_small_job_finish_while_a_big_one_runs() {
+    let tmp = tmp_dir("serve_fair");
+    let compiles = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let pool = test_pool(2, &compiles, &cells, 25);
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let mut opts = serve_opts(&tmp.join("serve"));
+    opts.concurrent = 2;
+    let srv = Server::start(
+        opts,
+        pooled_exec(&pool, Some(order.clone())),
+        None,
+        Arc::new(TestClock::new(0.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+
+    let big_plan = plan_of(&big_campaign_toml());
+    let (big, _, _) = client.submit(&big_campaign_toml()).unwrap();
+    // wait until the big job owns the pool (live done/planned counts
+    // over the wire — the `cpt jobs --connect` progress surface)
+    loop {
+        let v = client.status(&big).unwrap();
+        if v.state == JobState::Running && v.done.unwrap_or(0) >= 2 {
+            assert_eq!(v.planned, big_plan.total_cells());
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(3));
+    }
+
+    let (small, _, _) = client.submit(&small_campaign_toml()).unwrap();
+    let sv = client.wait_done(&small, 5).unwrap();
+    assert_eq!(sv.state, JobState::Done);
+    assert_ne!(
+        client.status(&big).unwrap().state,
+        JobState::Done,
+        "fair-share: the 18-cell job beat the 2-cell job submitted \
+         behind it"
+    );
+    client.wait_done(&big, 5).unwrap();
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec!["smallcamp".to_string(), "bigcamp".to_string()]
+    );
+
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    pool.join();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn concurrent_jobs_fetch_byte_identical_csvs_to_direct_runs() {
+    let tmp = tmp_dir("serve_pair");
+    // ground truth: each spec through the direct campaign path
+    let specs = [campaign_toml(), campaign_toml2()];
+    let mut truths = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let plan = plan_of(spec);
+        let direct = run_campaign_global(
+            &plan,
+            &CampaignRunOpts {
+                root: tmp.join(format!("direct{i}")),
+                shard: ShardId::single(),
+                jobs: 2,
+                resume: false,
+                verbose: false,
+                scheduler: SchedulerKind::Global,
+            },
+            &fingerprints(&plan),
+            None,
+            |_| Ok(CountingRunner { cells: Arc::new(AtomicUsize::new(0)) }),
+        )
+        .unwrap();
+        let dir = tmp.join(format!("truth{i}"));
+        report::write_campaign_csv_tree(
+            &dir,
+            direct
+                .members
+                .iter()
+                .map(|m| (m.name.as_str(), m.outcomes.as_slice())),
+        )
+        .unwrap();
+        truths.push(dir);
+    }
+
+    let compiles = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let pool = test_pool(2, &compiles, &cells, 2);
+    let mut opts = serve_opts(&tmp.join("serve"));
+    opts.concurrent = 2;
+    let srv = Server::start(
+        opts,
+        pooled_exec(&pool, None),
+        None,
+        Arc::new(TestClock::new(0.0)),
+    )
+    .unwrap();
+    let addr = srv.addr().to_string();
+
+    // both jobs in flight at once, cells interleaved on shared workers
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|spec| {
+            let addr = addr.clone();
+            let spec = spec.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let (t, _, _) = c.submit(&spec).unwrap();
+                c.wait_done(&t, 5).unwrap();
+                c.result_files(&t).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (files, dir) in results.iter().zip(&truths) {
+        assert!(!files.is_empty());
+        for (name, data) in files {
+            let want = std::fs::read_to_string(dir.join(name)).unwrap();
+            assert_eq!(
+                data, &want,
+                "{name} differs between the concurrent pool and the \
+                 direct campaign"
+            );
+        }
+    }
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    srv.wait().unwrap();
+    pool.join();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn shutdown_drains_in_flight_jobs_and_a_restart_resumes_them() {
+    let tmp = tmp_dir("serve_drain");
+    let serve_root = tmp.join("serve");
+    let plan = plan_of(&big_campaign_toml());
+    let compiles = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let pool = test_pool(2, &compiles, &cells, 40);
+    let drain: cpt::server::DrainHook = {
+        let pool = pool.clone();
+        Arc::new(move || pool.shutdown())
+    };
+    let srv = Server::start(
+        serve_opts(&serve_root),
+        pooled_exec(&pool, None),
+        Some(drain),
+        Arc::new(TestClock::new(10.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let (ticket, _, _) = client.submit(&big_campaign_toml()).unwrap();
+    loop {
+        let v = client.status(&ticket).unwrap();
+        if v.done.unwrap_or(0) >= 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(3));
+    }
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    pool.join();
+
+    let ran_first = cells.load(Ordering::SeqCst);
+    assert!(ran_first >= 2, "drain fired before any cell ran");
+    assert!(
+        ran_first < plan.total_cells(),
+        "job finished before the drain; nothing left to resume"
+    );
+    // the drained job is durably queued — not failed, not lost
+    let views = jobs::serve_status(&serve_root).unwrap();
+    assert_eq!(views.len(), 1);
+    assert_eq!(
+        views[0].state,
+        JobState::Queued,
+        "a drained job must requeue for the next daemon"
+    );
+
+    // a fresh daemon over the same root resumes it; recorded cells are
+    // never re-executed
+    let pool2 = test_pool(2, &compiles, &cells, 0);
+    let srv2 = Server::start(
+        serve_opts(&serve_root),
+        pooled_exec(&pool2, None),
+        None,
+        Arc::new(TestClock::new(20.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv2.addr()).unwrap();
+    let v = client.wait_done(&ticket, 5).unwrap();
+    assert_eq!(v.state, JobState::Done);
+    assert_eq!(v.done, Some(plan.total_cells()));
+    assert_eq!(
+        cells.load(Ordering::SeqCst),
+        plan.total_cells(),
+        "every cell must run exactly once across the drain/restart"
+    );
+    client.result_files(&ticket).unwrap();
+
+    client.shutdown().unwrap();
+    srv2.wait().unwrap();
+    pool2.join();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn gc_over_the_wire_prunes_finished_jobs_only() {
+    let tmp = tmp_dir("serve_gc_wire");
+    let execs = Arc::new(AtomicUsize::new(0));
+    let cells = Arc::new(AtomicUsize::new(0));
+    let srv = Server::start(
+        serve_opts(&tmp.join("serve")),
+        counting_exec(execs.clone(), cells.clone(), None),
+        None,
+        Arc::new(TestClock::new(100.0)),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.addr()).unwrap();
+    let (ticket, _, _) = client.submit(&campaign_toml()).unwrap();
+    client.wait_done(&ticket, 5).unwrap();
+
+    // no policy → nothing pruned
+    assert_eq!(client.gc(None, None).unwrap(), (0, 0));
+    // everything finished at t=100 is stale under max_age 0
+    let (removed, freed) = client.gc(Some(0.0), None).unwrap();
+    assert_eq!(removed, 1);
+    assert!(freed > 0, "a pruned job dir must free bytes");
+    let err = client.status(&ticket).unwrap_err().to_string();
+    assert!(err.contains("unknown_ticket"), "{err}");
+    assert!(client.jobs().unwrap().is_empty());
+
+    // a pruned spec resubmits as a fresh job and runs again
+    let (t2, s2, attached) = client.submit(&campaign_toml()).unwrap();
+    assert_eq!(t2, ticket, "the ticket is still the spec hash");
+    assert_eq!(s2, JobState::Queued);
+    assert!(!attached);
+    client.wait_done(&t2, 5).unwrap();
+    assert_eq!(execs.load(Ordering::SeqCst), 2);
+
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn non_loopback_listens_are_refused_without_allow_remote() {
+    let tmp = tmp_dir("serve_bind");
+    let exec: cpt::server::CampaignExec =
+        Arc::new(|_, _| anyhow::bail!("no exec in bind tests"));
+    let mut opts = serve_opts(&tmp.join("serve"));
+    opts.listen = "0.0.0.0:0".to_string();
+    let err = Server::start(
+        opts,
+        exec.clone(),
+        None,
+        Arc::new(TestClock::new(0.0)),
+    )
+    .map(|_| ())
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("--allow-remote"), "{err}");
+    assert!(err.contains("0.0.0.0:0"), "{err}");
+
+    // the same bind is accepted once explicitly allowed
+    let mut opts = serve_opts(&tmp.join("serve2"));
+    opts.listen = "0.0.0.0:0".to_string();
+    opts.allow_remote = true;
+    let srv =
+        Server::start(opts, exec, None, Arc::new(TestClock::new(0.0)))
+            .unwrap();
+    let port = srv.addr().rsplit(':').next().unwrap().to_string();
+    let mut client = Client::connect(&format!("127.0.0.1:{port}")).unwrap();
     client.ping().unwrap();
     client.shutdown().unwrap();
     srv.wait().unwrap();

@@ -19,7 +19,7 @@ use cpt::server::proto::{
     self, decode_request, decode_response, encode_request, encode_response,
     ErrorCode, Request, Response, MAX_FRAME_BYTES,
 };
-use cpt::server::{Client, JobState, JobView, ServeOpts, Server};
+use cpt::server::{Client, JobState, JobStats, JobView, ServeOpts, Server};
 use cpt::util::prng::Pcg32;
 use cpt::util::propcheck::propcheck;
 use cpt::util::{read_frame, write_frame};
@@ -64,22 +64,42 @@ fn rand_view(rng: &mut Pcg32) -> JobView {
             0 => Some(rand_string(rng)),
             _ => None,
         },
+        stats: match rng.below(3) {
+            0 => Some(JobStats {
+                compiles: rng.below(10) as usize,
+                compile_seconds: rng.next_u32() as f64 / 7.0,
+                hits: rng.below(100) as usize,
+                disk_hits: rng.below(100) as usize,
+                misses: rng.below(100) as usize,
+            }),
+            _ => None,
+        },
     }
 }
 
 fn rand_request(rng: &mut Pcg32) -> Request {
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Request::Ping,
         1 => Request::Submit { spec_toml: rand_string(rng) },
         2 => Request::Status { ticket: rand_string(rng) },
         3 => Request::Result { ticket: rand_string(rng) },
         4 => Request::Jobs,
+        5 => Request::Gc {
+            max_age: match rng.below(3) {
+                0 => None,
+                _ => Some(rng.next_u32() as f64 / 7.0),
+            },
+            max_bytes: match rng.below(3) {
+                0 => None,
+                _ => Some(rng.next_u32() as u64),
+            },
+        },
         _ => Request::Shutdown,
     }
 }
 
 fn rand_response(rng: &mut Pcg32) -> Response {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => Response::Pong,
         1 => Response::Submitted {
             ticket: format!("{:016x}", rng.next_u32()),
@@ -98,6 +118,10 @@ fn rand_response(rng: &mut Pcg32) -> Response {
             jobs: (0..rng.below(4)).map(|_| rand_view(rng)).collect(),
         },
         5 => Response::ShuttingDown,
+        6 => Response::GcDone {
+            removed: rng.below(20) as usize,
+            bytes_freed: rng.next_u32() as u64,
+        },
         _ => Response::Error {
             code: ErrorCode::BadSpec,
             message: rand_string(rng),
@@ -165,6 +189,10 @@ fn malformed_request_frames_map_to_typed_errors() {
             b"{\"v\": 1, \"verb\": \"result\", \"ticket\": null}",
             ErrorCode::BadRequest,
         ),
+        (
+            b"{\"v\": 1, \"verb\": \"gc\", \"max_age\": \"old\"}",
+            ErrorCode::BadRequest,
+        ),
     ];
     for (frame, want) in cases {
         match decode_request(frame) {
@@ -194,9 +222,12 @@ fn proto_server(root: &Path) -> Server {
             root: root.to_path_buf(),
             listen: "127.0.0.1:0".to_string(),
             jobs: 1,
+            concurrent: 1,
+            allow_remote: false,
             verbose: false,
         },
         exec,
+        None,
         Arc::new(TestClock::new(0.0)),
     )
     .unwrap()

@@ -9,11 +9,14 @@
 # sweeps) whose merged CSVs must be byte-identical to the sequential
 # pass, and a lease-claim sweep where one claimer is killed and one
 # stalls mid-run yet the survivors' CSVs match the static-shard
-# baseline, and a `cpt serve` daemon pass whose fetched CSVs must be
-# byte-identical to the direct campaign and whose identical
-# resubmission must be a spec-hash cache hit — so the bench targets and
-# the whole coordinator surface are compiled-and-exercised without
-# paying full bench cost.
+# baseline, and a `cpt serve` daemon pass (--concurrent-jobs 2, one
+# persistent shared worker pool) whose fetched CSVs must be
+# byte-identical to the direct campaign, whose identical resubmission
+# must be a spec-hash cache hit, whose second distinct shared-model
+# campaign must report zero cross-job compiles, and whose finished job
+# dirs `cpt gc --max-age` prunes — so the bench targets and the whole
+# coordinator surface are compiled-and-exercised without paying full
+# bench cost.
 #
 #   scripts/check.sh            # fmt + clippy + tests
 #   scripts/check.sh --unit     # fmt + lib unit tests + the non-PJRT
@@ -371,21 +374,48 @@ EOF
     $CPT gc "$AOT_DIR" >/dev/null
     echo "aot smoke: CSVs byte-identical across cold, warm, and corrupted-cache runs"
 
-    echo "== serve smoke (daemon submit/poll/fetch + spec-hash cache hit on resubmit)"
-    # A long-running `cpt serve` daemon over the same campaign spec. The
-    # first submission executes through the global pool; the fetched
-    # CSVs must be byte-identical to the direct-campaign ground truth
-    # in campout/. The second, identical submission must be answered
-    # straight from the store — the client prints the cache-hit line,
-    # i.e. zero new compiles/cells — and fetch the same bytes. `cpt
-    # status` on the serve root and `cpt jobs` over the wire must both
-    # list the finished job, and `cpt shutdown` must stop the daemon
-    # cleanly (exit 0).
+    echo "== serve smoke (shared pool: 2 jobs, cross-job warm compiles + spec-hash cache hit)"
+    # A long-running `cpt serve` daemon with the persistent shared
+    # worker pool (--concurrent-jobs 2). The first submission executes
+    # through the pool; its fetched CSVs must be byte-identical to the
+    # direct-campaign ground truth in campout/. The identical
+    # resubmission must be answered straight from the store (cache-hit
+    # line, zero new compiles/cells). A second, distinct campaign
+    # sharing the same model is then submitted: its CSVs must match its
+    # own direct ground truth AND its per-job pool stats in `cpt jobs`
+    # must show zero compiles — the cross-job warm start. Finally the
+    # daemon shuts down cleanly and `cpt gc --max-age` prunes the
+    # finished job dirs from the serve root.
+    CAMP2_TOML="$SMOKE_DIR/campaign2.toml"
+    cat > "$CAMP2_TOML" <<'EOF'
+[campaign]
+name = "smoke2"
+
+[[campaign.sweep]]
+name = "d"
+model = "mlp"
+schedules = ["CR", "RR"]
+q_maxes = [8]
+trials = 1
+steps = 9
+
+[[campaign.sweep]]
+name = "e"
+model = "mlp"
+schedules = ["CR", "STATIC"]
+q_maxes = [8]
+trials = 1
+steps = 12
+EOF
+    # direct ground truth for the second campaign
+    $CPT campaign --file "$CAMP2_TOML" --run-dir "$SMOKE_DIR/camp2direct" \
+      --jobs 2 --scheduler global --csv-dir "$SMOKE_DIR/campout2"
     SERVE_ROOT="$SMOKE_DIR/serve"
     # run the daemon from the built binary (not `cargo run`) so the
     # trap's kill reaches the daemon itself, never a cargo wrapper
     cargo build --release --quiet --bin cpt
-    target/release/cpt serve --root "$SERVE_ROOT" --listen 127.0.0.1:0 --jobs 2 \
+    target/release/cpt serve --root "$SERVE_ROOT" --listen 127.0.0.1:0 \
+      --jobs 2 --concurrent-jobs 2 \
       > "$SMOKE_DIR/serve.log" 2>&1 &
     SERVE_PID=$!
     trap 'kill "$SERVE_PID" 2>/dev/null || true; rm -rf "$SMOKE_DIR"' EXIT
@@ -432,6 +462,23 @@ EOF
       echo "check.sh: cpt jobs should list the finished job over the wire" >&2
       exit 1
     fi
+    # second, distinct campaign on the warm pool: byte-identical CSVs,
+    # zero compiles (4 cells, all in-memory cache hits -> "0/4/0" in the
+    # compiles/hits/disk column of `cpt jobs`)
+    $CPT submit --connect "$ADDR" --file "$CAMP2_TOML" --wait \
+      --out "$SMOKE_DIR/servefetch3"
+    for f in d.csv e.csv campaign.csv; do
+      if ! diff "$SMOKE_DIR/campout2/$f" "$SMOKE_DIR/servefetch3/$f"; then
+        echo "check.sh: served $f differs from the second campaign's direct ground truth" >&2
+        exit 1
+      fi
+    done
+    JOBS_OUT="$($CPT jobs --connect "$ADDR")"
+    if ! echo "$JOBS_OUT" | grep -q " 0/4/0 "; then
+      echo "check.sh: second job should report zero compiles (cross-job warm start)" >&2
+      echo "$JOBS_OUT" >&2
+      exit 1
+    fi
     $CPT shutdown --connect "$ADDR"
     if ! wait "$SERVE_PID"; then
       echo "check.sh: serve daemon did not exit cleanly after shutdown" >&2
@@ -439,7 +486,16 @@ EOF
       exit 1
     fi
     trap 'rm -rf "$SMOKE_DIR"' EXIT
-    echo "serve smoke: resubmission served from the cache; fetched CSVs byte-identical to the direct campaign"
+    # serve-root gc: both finished job dirs are prunable once aged out
+    GC_OUT="$($CPT gc "$SERVE_ROOT" --max-age 0)"
+    case "$GC_OUT" in
+      *"removed 2 finished job dir(s)"*) ;;
+      *)
+        echo "check.sh: serve-root gc should prune both finished jobs" >&2
+        echo "$GC_OUT" >&2
+        exit 1 ;;
+    esac
+    echo "serve smoke: resubmission cached, cross-job compiles zero, fetched CSVs byte-identical to direct runs"
 
     echo "== fig_campaign_sched bench (executable-cache compile accounting)"
     cargo bench --bench fig_campaign_sched
