@@ -347,7 +347,7 @@ impl AotStore {
                     live.push((edir, recency(&live_stamp(&edir)), sz));
                 }
                 Err(err) => {
-                    eprintln!(
+                    crate::log_warn!(
                         "[gc] note: aot entry {} damaged ({err:#}); removed",
                         edir.display()
                     );
@@ -425,7 +425,7 @@ pub fn store_for_run() -> Result<Option<AotStore>> {
     if let Err(reason) = crate::runtime::exec_serialization_support() {
         static NOTE: std::sync::Once = std::sync::Once::new();
         NOTE.call_once(|| {
-            eprintln!(
+            crate::log_warn!(
                 "[aot] note: CPT_AOT_CACHE is set but this backend cannot \
                  serialize executables ({reason}); falling back to plain \
                  compiles"

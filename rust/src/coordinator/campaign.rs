@@ -791,7 +791,7 @@ pub fn open_campaign_root(
         // the name is a label (it keys the default CSV dir), deliberately
         // outside the campaign hash — a rename is legitimate, so relabel
         // the root instead of refusing a content-identical resume
-        eprintln!(
+        crate::log_info!(
             "[campaign] note: relabeling root {} from '{}' to '{}' \
              (member set is unchanged)",
             root.display(),
@@ -955,7 +955,7 @@ fn run_campaign_sequential(
         spec.verbose = opts.verbose;
         spec.model_fingerprint = Some(fp);
         if opts.verbose {
-            eprintln!(
+            crate::log_info!(
                 "[campaign {}] sweep '{}' ({}, shard {})",
                 plan.name, m.name, m.spec.model, opts.shard
             );
@@ -1000,7 +1000,7 @@ where
     let mut prep = prepare_members(plan, opts, fingerprints, jobs)?;
 
     if opts.verbose {
-        eprintln!(
+        crate::log_info!(
             "[campaign {}] global scheduler: {} cell(s) across {} member(s) \
              on {} worker(s)",
             plan.name,
@@ -1051,7 +1051,7 @@ pub fn run_campaign_pooled(
     let mut prep = prepare_members(plan, opts, fingerprints, pool.size())?;
 
     if opts.verbose {
-        eprintln!(
+        crate::log_info!(
             "[campaign {}] pooled scheduler: {} cell(s) across {} member(s) \
              on a {}-worker shared pool",
             plan.name,
@@ -1127,7 +1127,7 @@ fn prepare_members(
             }
         }
         if opts.verbose && res > 0 {
-            eprintln!(
+            crate::log_info!(
                 "[campaign {}] '{}': resumed {res}/{} cells from {}",
                 plan.name,
                 m.name,

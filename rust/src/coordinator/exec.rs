@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::aot::{self, AotStore};
 use super::store::RunStore;
 use super::{run_one_with_policy, RunOutcome, SweepCell};
+use crate::obs::trace::{self, Event};
 use crate::policy::PolicySpec;
 use crate::runtime::{LoadedModel, ModelSpec, Runtime};
 
@@ -336,7 +337,7 @@ impl Drop for ClaimGuard<'_> {
 }
 
 enum Msg {
-    Done { item: usize, out: Box<RunOutcome> },
+    Done { item: usize, worker: usize, out: Box<RunOutcome> },
     RunErr { item: usize, err: anyhow::Error },
     SetupErr { model: String, err: anyhow::Error },
     SourceErr { err: anyhow::Error },
@@ -382,7 +383,7 @@ where
         // workers run with per-step logging off (interleaved multi-cell
         // step logs would be unreadable); say so instead of silently
         // dropping the output the user asked for
-        eprintln!(
+        crate::log_info!(
             "[{} j{jobs}] note: per-step training logs are disabled when \
              more than one worker runs; per-cell summaries only",
             req.label
@@ -427,7 +428,7 @@ where
                     match make_worker(w) {
                         Ok(r) => break r,
                         Err(e) if init_attempt < SETUP_ATTEMPTS => {
-                            eprintln!(
+                            crate::log_warn!(
                                 "[{label}] note: worker {w} setup failed \
                                  (attempt {init_attempt}/{SETUP_ATTEMPTS}): \
                                  {e:#}; retrying",
@@ -459,6 +460,7 @@ where
                     // (claim order never affects results, only compiles).
                     // When nothing is claimable and a source exists, one
                     // worker at a time consults it for more items.
+                    let claim_t0 = Instant::now();
                     let claimed: Option<(usize, ExecItem)> = {
                         let mut q = queue.lock().unwrap();
                         loop {
@@ -580,6 +582,21 @@ where
                     };
                     let Some((i, it)) = claimed else { break };
                     let m = &req.members[it.member];
+                    // Span accounting (no-ops unless --trace installed a
+                    // tracer): queue-wait is the time blocked claiming;
+                    // compile vs exec is split by the runner's own
+                    // compile-seconds delta across this one cell.
+                    if trace::enabled() {
+                        trace::set_cell_ctx(w, it.member, it.cell_index);
+                        let wait = claim_t0.elapsed().as_secs_f64();
+                        trace::emit(
+                            Event::new(trace::now() - wait, "claim")
+                                .dur(wait),
+                        );
+                    }
+                    let (bc, bsec) = runner.compile_stats();
+                    let bcache = runner.cache_stats();
+                    let cell_t0 = Instant::now();
                     let mut guard = ClaimGuard {
                         queue,
                         available,
@@ -594,6 +611,44 @@ where
                         per_step_logs,
                     );
                     guard.armed = false; // no panic: arms settle the claim
+                    if trace::enabled() {
+                        if res.is_ok() {
+                            let wall = cell_t0.elapsed().as_secs_f64();
+                            let (ac, asec) = runner.compile_stats();
+                            let acache = runner.cache_stats();
+                            let dsec = (asec - bsec).max(0.0).min(wall);
+                            let now = trace::now();
+                            let outcome = if acache.hits > bcache.hits {
+                                "hit"
+                            } else if acache.disk_hits > bcache.disk_hits {
+                                "disk_hit"
+                            } else if acache.misses > bcache.misses {
+                                "miss"
+                            } else {
+                                ""
+                            };
+                            if ac > bc {
+                                trace::emit(
+                                    Event::new(now - wall, "compile")
+                                        .dur(dsec)
+                                        .tag_str("fp", &m.fingerprint)
+                                        .tag_str("outcome", outcome),
+                                );
+                            }
+                            trace::emit(
+                                Event::new(now - wall + dsec, "exec")
+                                    .dur(wall - dsec)
+                                    .tag_str("name", &m.name)
+                                    .tag_str("model", &m.model)
+                                    .tag_str("fp", &m.fingerprint)
+                                    .tag_str("outcome", outcome),
+                            );
+                        }
+                        // sink writes happen here, at the cell boundary —
+                        // never inside the train loop
+                        trace::flush();
+                        trace::clear_cell_ctx();
+                    }
                     match res {
                         Ok(out) => {
                             {
@@ -604,7 +659,11 @@ where
                             available.notify_all();
                             cells += 1;
                             if tx
-                                .send(Msg::Done { item: i, out: Box::new(out) })
+                                .send(Msg::Done {
+                                    item: i,
+                                    worker: w,
+                                    out: Box::new(out),
+                                })
                                 .is_err()
                             {
                                 break;
@@ -626,7 +685,7 @@ where
                             if *n < SETUP_ATTEMPTS {
                                 // transient? back off and try again
                                 retries += 1;
-                                eprintln!(
+                                crate::log_warn!(
                                     "[{label}] note: worker {w} setup for \
                                      model '{}' failed (attempt \
                                      {n}/{SETUP_ATTEMPTS}): {err:#}; \
@@ -680,7 +739,7 @@ where
         // Collector: the only thread that touches slots and sinks.
         for msg in rx {
             match msg {
-                Msg::Done { item, out } => {
+                Msg::Done { item, worker, out } => {
                     let it = queue.lock().unwrap().items[item].clone();
                     let m = &req.members[it.member];
                     if req.verbose {
@@ -689,7 +748,7 @@ where
                         } else {
                             format!("{}:{}", m.name, m.model)
                         };
-                        eprintln!(
+                        crate::log_info!(
                             "[{} j{jobs}] {who} {} qmax={} trial={} -> metric={:.4} ({:.3} GBitOps)",
                             req.label,
                             out.schedule,
@@ -702,7 +761,20 @@ where
                     if store_err.is_none() && halt_err.is_none() {
                         let mut stored = true;
                         if let Some(st) = sinks[it.member].as_mut() {
-                            match st.record_cell(it.cell_index, &out) {
+                            let rec_t0 = Instant::now();
+                            let rec = st.record_cell(it.cell_index, &out);
+                            if trace::enabled() {
+                                let d = rec_t0.elapsed().as_secs_f64();
+                                trace::emit(
+                                    Event::new(trace::now() - d, "record")
+                                        .dur(d)
+                                        .worker(worker)
+                                        .member(it.member)
+                                        .cell(it.cell_index),
+                                );
+                                trace::flush();
+                            }
+                            match rec {
                                 Ok(Recorded::Stored) => {}
                                 Ok(Recorded::Refused(reason)) => {
                                     // the cell is complete globally, just
@@ -710,7 +782,7 @@ where
                                     stored = false;
                                     refused += 1;
                                     if req.verbose {
-                                        eprintln!(
+                                        crate::log_info!(
                                             "[{}] note: cell {} not \
                                              recorded here: {reason}",
                                             req.label, it.cell_index
@@ -839,7 +911,7 @@ where
         } else {
             format!("a worker could not compile model '{model}'")
         };
-        eprintln!(
+        crate::log_warn!(
             "[{}] note: {what} ({e:#}); all cells completed on the \
              remaining workers",
             req.label
@@ -1040,7 +1112,7 @@ impl PjrtCellRunner {
     fn note_once(&mut self, msg: &str) {
         if !self.aot_noted {
             self.aot_noted = true;
-            eprintln!("[aot] note: {msg}");
+            crate::log_warn!("[aot] note: {msg}");
         }
     }
 }

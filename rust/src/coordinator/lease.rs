@@ -74,6 +74,8 @@ use super::exec::{
 use super::plan::{ClaimerId, ShardId, SweepPlan};
 use super::store::{self, CellEntry, ManifestSummary, RunStore};
 use super::{RunOutcome, SweepCell, SweepSpec, SweepTiming};
+use crate::obs::metrics;
+use crate::obs::trace::{self, Event};
 use crate::runtime::{Manifest, ModelSpec};
 use crate::util::hash::fnv1a64_hex;
 use crate::util::json::{num, obj, s, Json};
@@ -534,8 +536,20 @@ fn heartbeat_loop(state: &ClaimState, stop: &AtomicBool) {
             continue;
         }
         next = Instant::now() + period;
-        if let Err(e) = state.extend_held() {
-            eprintln!("[{}] note: heartbeat failed: {e:#}", state.label);
+        match state.extend_held() {
+            Ok(()) => {
+                metrics::global().inc("lease.heartbeats", 1);
+                if trace::enabled() {
+                    trace::emit(Event::new(trace::now(), "lease_heartbeat"));
+                    trace::flush(); // this thread has no cell boundary
+                }
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "[{}] note: heartbeat failed: {e:#}",
+                    state.label
+                );
+            }
         }
     }
 }
@@ -612,16 +626,51 @@ impl ItemSource for ClaimSource<'_> {
                 if !publish_exclusive(&path, bytes.as_bytes())? {
                     continue; // a peer won this generation first
                 }
-                if let Some(l) = &lease {
-                    inner.stolen += 1;
-                    eprintln!(
-                        "[{}] claimer '{me}' stole cell {ci} of '{}' from \
-                         '{}' (lease generation {} expired)",
-                        st.label,
-                        member_label(member),
-                        l.claimer,
-                        l.generation
-                    );
+                match &lease {
+                    Some(l) => {
+                        inner.stolen += 1;
+                        metrics::global().inc("lease.stolen", 1);
+                        if trace::enabled() {
+                            trace::emit(
+                                Event::new(now, "lease_steal")
+                                    .member(mi)
+                                    .cell(ci)
+                                    .tag_str("from", &l.claimer)
+                                    .tag_num(
+                                        "generation",
+                                        next_gen as f64,
+                                    ),
+                            );
+                        }
+                        crate::log_debug!(
+                            "[{}] claimer '{me}' stole cell {ci} of '{}' \
+                             from '{}' (lease generation {} expired)",
+                            st.label,
+                            member_label(member),
+                            l.claimer,
+                            l.generation
+                        );
+                    }
+                    None => {
+                        metrics::global().inc("lease.acquired", 1);
+                        if trace::enabled() {
+                            trace::emit(
+                                Event::new(now, "lease_acquire")
+                                    .member(mi)
+                                    .cell(ci)
+                                    .tag_num(
+                                        "generation",
+                                        next_gen as f64,
+                                    ),
+                            );
+                        }
+                        crate::log_debug!(
+                            "[{}] claimer '{me}' acquired cell {ci} of '{}' \
+                             (generation {next_gen})",
+                            st.label,
+                            member_label(member)
+                        );
+                    }
                 }
                 inner.held.insert((mi, ci), next_gen);
                 inner.enqueued.insert((mi, ci));
@@ -638,7 +687,7 @@ impl ItemSource for ClaimSource<'_> {
         }
         if !items.is_empty() {
             if st.verbose {
-                eprintln!(
+                crate::log_info!(
                     "[{}] claimer '{me}' claimed {} cell(s) \
                      ({uncommitted} uncommitted overall)",
                     st.label,
@@ -690,13 +739,13 @@ impl ItemSource for ClaimSource<'_> {
             let bytes =
                 encode_lease(st.cfg.claimer.as_str(), *generation, expired);
             if let Err(e) = write_atomic(&path, bytes.as_bytes()) {
-                eprintln!(
+                crate::log_warn!(
                     "[{}] note: failed to release lease for cell {ci}: {e:#}",
                     st.label
                 );
             }
         }
-        eprintln!(
+        crate::log_warn!(
             "[{}] note: no worker in this process can compile \
              '{fingerprint}'; released {} lease(s) for other claimers",
             st.label,
@@ -706,6 +755,26 @@ impl ItemSource for ClaimSource<'_> {
 }
 
 // ---- the cell sink (fenced commit) --------------------------------------
+
+/// Account one refused commit: metrics counter, trace event, and a
+/// debug line (refusals are normal in claim mode — a peer got there
+/// first — so they stay out of the default log level).
+fn lease_refuse(st: &ClaimState, member: usize, cell: usize, why: &str) {
+    metrics::global().inc("lease.refused", 1);
+    if trace::enabled() {
+        trace::emit(
+            Event::new(st.cfg.clock.now(), "lease_refuse")
+                .member(member)
+                .cell(cell)
+                .tag_str("why", why),
+        );
+    }
+    crate::log_debug!(
+        "[{}] claimer '{}' refused commit of cell {cell} ({why})",
+        st.label,
+        st.cfg.claimer
+    );
+}
 
 struct ClaimSink<'a> {
     state: &'a ClaimState,
@@ -725,6 +794,7 @@ impl CellSink for ClaimSink<'_> {
         let Some(my_gen) = my_gen else {
             // settled while in flight (a peer committed it and a refill
             // observed that) — nothing of ours to write
+            lease_refuse(st, self.member, index, "no_lease");
             return Ok(Recorded::Refused("no lease held for this cell".into()));
         };
         // Fencing: commit only under the *current* lease. If a higher
@@ -744,6 +814,7 @@ impl CellSink for ClaimSink<'_> {
                     format!("'{}' (lease generation {})", l.claimer, l.generation)
                 })
                 .unwrap_or_else(|| "an unknown claimer".into());
+            lease_refuse(st, self.member, index, "lease_lost");
             return Ok(Recorded::Refused(format!("lease lost to {who}")));
         }
         // Artifact first, claimer-suffixed so racing writers can never
@@ -781,10 +852,12 @@ impl CellSink for ClaimSink<'_> {
             // the window since the fence check; its entry is the cell —
             // delete our unreferenced artifact
             std::fs::remove_file(member.dir.join(&file)).ok();
+            lease_refuse(st, self.member, index, "commit_race");
             return Ok(Recorded::Refused(
                 "committed by another claimer first".into(),
             ));
         }
+        metrics::global().inc("lease.committed", 1);
         if let Some(n) = st.cfg.stall_after_cells {
             if st.fresh.fetch_add(1, Ordering::SeqCst) + 1 == n
                 && st.cfg.stall_secs > 0.0
@@ -793,7 +866,7 @@ impl CellSink for ClaimSink<'_> {
                 // claims) long enough for our leases to expire and be
                 // stolen, then wake up and discover the theft
                 st.suspended.store(true, Ordering::SeqCst);
-                eprintln!(
+                crate::log_info!(
                     "[{}] claimer '{}' stalling {:.1}s after {n} committed \
                      cell(s) (CPT_STALL_AFTER_CELLS injection)",
                     st.label, st.cfg.claimer, st.cfg.stall_secs
@@ -842,7 +915,7 @@ fn seed_from_manifest(member: &ClaimMember, me: &ClaimerId) -> Result<()> {
             &ms.spec_hash,
             index,
         ) {
-            eprintln!(
+            crate::log_warn!(
                 "[lease] note: cell {index} artifact invalid ({err:#}); it \
                  will be recomputed"
             );
@@ -977,7 +1050,7 @@ where
         committed.push(have);
     }
     if verbose && resumed_per_member.iter().sum::<usize>() > 0 {
-        eprintln!(
+        crate::log_info!(
             "[{label}] {} cell(s) already committed on the claim board",
             resumed_per_member.iter().sum::<usize>()
         );

@@ -160,7 +160,7 @@ impl SweepSpec {
     /// CPT_RUN_DIR sees where artifacts land and how to inspect them.
     pub fn log_run_dir(&self) {
         if let Some(dir) = &self.run_dir {
-            eprintln!(
+            crate::log_info!(
                 "[sweep] persisting cell artifacts under {0} — inspect \
                  progress with `cpt status {0}`",
                 dir.display()
@@ -169,26 +169,10 @@ impl SweepSpec {
     }
 }
 
-/// Strict env-var parsing: `Ok(None)` when unset, the parsed value when
-/// set and valid, and a loud error otherwise. Every numeric knob
-/// (CPT_HALT_AFTER_CELLS, CPT_STALL_AFTER_CELLS, CPT_LEASE_SECS, ...)
-/// goes through here — a typo'd value must abort the run, not silently
-/// disable the behavior the operator asked for.
-pub(crate) fn env_parse<T: std::str::FromStr>(name: &str) -> Result<Option<T>>
-where
-    T::Err: std::fmt::Display,
-{
-    match std::env::var(name) {
-        Err(std::env::VarError::NotPresent) => Ok(None),
-        Err(std::env::VarError::NotUnicode(_)) => {
-            anyhow::bail!("{name} is set but is not valid UTF-8")
-        }
-        Ok(v) => match v.trim().parse::<T>() {
-            Ok(x) => Ok(Some(x)),
-            Err(e) => anyhow::bail!("{name}='{v}' is invalid: {e}"),
-        },
-    }
-}
+// Strict env-var parsing lives in `util` now (the obs logger needs it
+// for CPT_LOG); re-exported here so `super::env_parse` callers in
+// exec/lease stay unchanged.
+pub(crate) use crate::util::env_parse;
 
 /// Crash-injection point for the resume tests: with CPT_HALT_AFTER_CELLS=N
 /// set, the executor's collector aborts the run after recording N freshly
@@ -475,7 +459,7 @@ pub fn run_sweep_timed(
     }
     if spec.verbose && resumed > 0 {
         if let Some(st) = &store {
-            eprintln!(
+            crate::log_info!(
                 "[sweep] resumed {resumed}/{} cells from {}",
                 owned.len(),
                 st.dir().display()

@@ -48,6 +48,8 @@ use super::exec::{
     Recorded, WorkerStats,
 };
 use super::RunOutcome;
+use crate::obs::trace::{self, Event};
+use crate::obs::metrics;
 
 /// Builds one worker's backend on its own pool thread (a runner never
 /// crosses threads). Shared by every worker, so `Send + Sync`.
@@ -297,7 +299,7 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
         match make(w) {
             Ok(r) => break r,
             Err(e) if init_attempt < exec::SETUP_ATTEMPTS => {
-                eprintln!(
+                crate::log_warn!(
                     "[{label}] note: pool worker {w} setup failed (attempt \
                      {init_attempt}/{}): {e:#}; retrying",
                     exec::SETUP_ATTEMPTS
@@ -306,7 +308,7 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
                 init_attempt += 1;
             }
             Err(e) => {
-                eprintln!(
+                crate::log_warn!(
                     "[{label}] note: pool worker {w} failed to initialize: \
                      {e:#}"
                 );
@@ -319,9 +321,15 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
     };
     // Worker-local transient-setup attempt counts per fingerprint.
     let mut attempts: HashMap<String, usize> = HashMap::new();
+    // Which job caused this worker's compile of each fingerprint — a
+    // later cache hit under a *different* job is a cross-job warm hit
+    // (the thing the pool exists to deliver; counted in the global
+    // metrics registry and surfaced by `cpt stats`).
+    let mut compiled_by_job: HashMap<String, u64> = HashMap::new();
     loop {
         // Claim under the lock: fair-share across jobs (least in-flight
         // wins, attach order ties), model-affine within the job.
+        let claim_t0 = std::time::Instant::now();
         let claimed = {
             let mut st = shared.state.lock().unwrap();
             loop {
@@ -385,8 +393,19 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
             }
         };
         let Some((jid, i, it, m)) = claimed else { break };
+        if trace::enabled() {
+            trace::set_cell_ctx(w, it.member, it.cell_index);
+            let wait = claim_t0.elapsed().as_secs_f64();
+            trace::emit(
+                Event::new(trace::now() - wait, "claim")
+                    .dur(wait)
+                    .tag_num("job", jid as f64),
+            );
+        }
+        metrics::global().inc("pool.claims", 1);
         let (bc, bsec) = runner.compile_stats();
         let bcache = runner.cache_stats();
+        let cell_t0 = std::time::Instant::now();
         let mut guard = CellGuard {
             shared,
             job: jid,
@@ -410,6 +429,57 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
                     disk_hits: acache.disk_hits - bcache.disk_hits,
                     misses: acache.misses - bcache.misses,
                 };
+                if stats.compiles > 0 {
+                    compiled_by_job.insert(m.fingerprint.clone(), jid);
+                }
+                let cross_job_warm = stats.compiles == 0
+                    && stats.hits > 0
+                    && compiled_by_job
+                        .get(&m.fingerprint)
+                        .map_or(true, |&j| j != jid);
+                if cross_job_warm {
+                    metrics::global().inc("pool.cross_job_warm_hits", 1);
+                    crate::log_debug!(
+                        "[{label}] pool worker {w} warm-hit model '{}' for \
+                         job {jid} (compiled under an earlier job)",
+                        m.model
+                    );
+                }
+                if trace::enabled() {
+                    let wall = cell_t0.elapsed().as_secs_f64();
+                    let dsec =
+                        stats.compile_seconds.max(0.0).min(wall);
+                    let now = trace::now();
+                    let outcome = if stats.hits > 0 {
+                        if cross_job_warm { "cross_job_hit" } else { "hit" }
+                    } else if stats.disk_hits > 0 {
+                        "disk_hit"
+                    } else if stats.misses > 0 {
+                        "miss"
+                    } else {
+                        ""
+                    };
+                    if stats.compiles > 0 {
+                        trace::emit(
+                            Event::new(now - wall, "compile")
+                                .dur(dsec)
+                                .tag_str("fp", &m.fingerprint)
+                                .tag_str("outcome", outcome)
+                                .tag_num("job", jid as f64),
+                        );
+                    }
+                    trace::emit(
+                        Event::new(now - wall + dsec, "exec")
+                            .dur(wall - dsec)
+                            .tag_str("name", &m.name)
+                            .tag_str("model", &m.model)
+                            .tag_str("fp", &m.fingerprint)
+                            .tag_str("outcome", outcome)
+                            .tag_num("job", jid as f64),
+                    );
+                    trace::flush();
+                    trace::clear_cell_ctx();
+                }
                 let mut st = shared.state.lock().unwrap();
                 if let Some(job) = st.jobs.get_mut(&jid) {
                     job.state[i] = ItemState::Done;
@@ -427,6 +497,10 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
                 shared.work.notify_all();
             }
             Err(CellError::Setup(err)) => {
+                if trace::enabled() {
+                    trace::flush();
+                    trace::clear_cell_ctx();
+                }
                 let n = {
                     let e = attempts.entry(m.fingerprint.clone()).or_insert(0);
                     *e += 1;
@@ -464,7 +538,7 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
                 }
                 shared.work.notify_all();
                 if !give_up {
-                    eprintln!(
+                    crate::log_warn!(
                         "[{label}] note: pool worker {w} setup for model \
                          '{}' failed (attempt {n}/{}): {err_msg}; retrying",
                         m.model,
@@ -474,6 +548,10 @@ fn worker_main(shared: &Shared, w: usize, make: &WorkerFactory, label: &str) {
                 }
             }
             Err(CellError::Run(err)) => {
+                if trace::enabled() {
+                    trace::flush();
+                    trace::clear_cell_ctx();
+                }
                 let mut st = shared.state.lock().unwrap();
                 if let Some(job) = st.jobs.get_mut(&jid) {
                     job.state[i] = ItemState::Done;
@@ -641,7 +719,7 @@ impl WorkerPool {
                         } else {
                             format!("{}:{}", m.name, m.model)
                         };
-                        eprintln!(
+                        crate::log_info!(
                             "[{} pool] {who} {} qmax={} trial={} -> \
                              metric={:.4} ({:.3} GBitOps)",
                             req.label,
@@ -655,13 +733,26 @@ impl WorkerPool {
                     if store_err.is_none() && halt_err.is_none() {
                         let mut stored = true;
                         if let Some(sk) = sinks[it.member].as_mut() {
-                            match sk.record_cell(it.cell_index, &out) {
+                            let rec_t0 = std::time::Instant::now();
+                            let rec = sk.record_cell(it.cell_index, &out);
+                            if trace::enabled() {
+                                let d = rec_t0.elapsed().as_secs_f64();
+                                trace::emit(
+                                    Event::new(trace::now() - d, "record")
+                                        .dur(d)
+                                        .worker(stats.worker)
+                                        .member(it.member)
+                                        .cell(it.cell_index),
+                                );
+                                trace::flush();
+                            }
+                            match rec {
                                 Ok(Recorded::Stored) => {}
                                 Ok(Recorded::Refused(reason)) => {
                                     stored = false;
                                     refused += 1;
                                     if req.verbose {
-                                        eprintln!(
+                                        crate::log_info!(
                                             "[{}] note: cell {} not \
                                              recorded here: {reason}",
                                             req.label, it.cell_index
@@ -766,7 +857,7 @@ impl WorkerPool {
                     } else {
                         format!("a worker could not compile model '{model}'")
                     };
-                    eprintln!(
+                    crate::log_warn!(
                         "[{}] note: {what} ({e:#}); all cells completed on \
                          the remaining workers",
                         req.label

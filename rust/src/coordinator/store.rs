@@ -330,7 +330,7 @@ impl RunStore {
         ) {
             Ok(out) => Some(out),
             Err(err) => {
-                eprintln!(
+                crate::log_warn!(
                     "[store] note: cell {index} artifact invalid ({err:#}); \
                      it will be recomputed"
                 );
@@ -662,7 +662,7 @@ pub fn compact_run_dir(dir: &Path) -> Result<GcStats> {
         let bytes = match std::fs::read(&path) {
             Ok(b) => b,
             Err(err) => {
-                eprintln!(
+                crate::log_warn!(
                     "[gc] note: cell {index} artifact unreadable ({err}); \
                      skipped"
                 );
@@ -671,7 +671,7 @@ pub fn compact_run_dir(dir: &Path) -> Result<GcStats> {
             }
         };
         if fnv1a64_hex(&bytes) != e.checksum {
-            eprintln!(
+            crate::log_warn!(
                 "[gc] note: cell {index} artifact fails its checksum; \
                  skipped (resume will recompute it)"
             );

@@ -37,6 +37,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod quant;
 pub mod runtime;

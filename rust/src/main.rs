@@ -30,6 +30,12 @@
 //!                                on an AOT cache dir: sweep + evict
 //!   cache     status|gc          inspect / collect the persistent AOT
 //!                                executable cache (CPT_AOT_CACHE)
+//!   trace     DIR                per-worker/per-member timeline breakdown
+//!                                of a traced run (`--trace` on sweep,
+//!                                campaign, or serve)
+//!   stats     --connect A        a serve daemon's self-description:
+//!                                uptime, jobs by state, request/error
+//!                                counters, pool compile/cache totals
 //!   range-test --model M [...]   precision range test (discovers q_min)
 //!   preset    --file F.toml      run a sweep described by a preset file
 //!
@@ -61,6 +67,9 @@ fn main() {
 }
 
 fn run() -> Result<()> {
+    // strict CPT_LOG parsing up front: an unparsable level fails the
+    // whole invocation loudly instead of silently logging at the default
+    cpt::obs::log::init_from_env()?;
     let cli = Cli::from_env()?;
     match cli.command.as_str() {
         "info" => cmd_info(&cli),
@@ -70,6 +79,8 @@ fn run() -> Result<()> {
         "campaign" => cmd_campaign(&cli),
         "merge" => cmd_merge(&cli),
         "status" => cmd_status(&cli),
+        "trace" => cmd_trace(&cli),
+        "stats" => cmd_stats(&cli),
         "gc" => cmd_gc(&cli),
         "cache" => cmd_cache(&cli),
         "range-test" => cmd_range_test(&cli),
@@ -106,7 +117,7 @@ USAGE: cpt <subcommand> [flags]
   sweep --model M [--schedules CR,RR,... | --policy P] [--qmaxes 6,8]
         [--trials N] [--steps N] [--cycles N] [--jobs N] [--csv PATH]
         [--verbose] [--shard I/N] [--run-dir DIR] [--resume]
-        [--claim NAME]
+        [--claim NAME] [--trace]
                                 full schedule sweep (one figure panel);
                                 with --policy P the schedule axis
                                 collapses to the policy (adaptive cells:
@@ -130,6 +141,7 @@ USAGE: cpt <subcommand> [flags]
   campaign --file configs/X.toml [--run-dir ROOT] [--shard I/N]
            [--jobs N] [--scheduler global|sequential] [--resume]
            [--csv-dir DIR] [--verbose] [--policy P] [--claim NAME]
+           [--trace]
                                 run a multi-sweep figure campaign: the
                                 TOML's [[campaign.sweep]] members execute
                                 in canonical (name-sorted) order, one
@@ -170,7 +182,7 @@ USAGE: cpt <subcommand> [flags]
                                 job records
   serve --root DIR [--listen 127.0.0.1:0] [--jobs N]
         [--concurrent-jobs N] [--allow-remote] [--file F.toml]
-        [--verbose] [--aot-cache DIR]
+        [--verbose] [--aot-cache DIR] [--trace]
                                 long-running campaign service: accepts
                                 campaign specs over a line-delimited
                                 JSON protocol on localhost TCP (bound
@@ -213,6 +225,21 @@ USAGE: cpt <subcommand> [flags]
                                 stay durable), drained and queued jobs
                                 resume on the next `cpt serve` of the
                                 same root
+  trace TRACED_DIR [--json] [--top N]
+                                per-worker and per-member timeline
+                                breakdown of a traced run (sweep run dir,
+                                campaign root, or serve root run with
+                                --trace): queue-wait/compile/exec/record
+                                seconds per worker, compile/exec per
+                                member, and the top N slowest cells;
+                                tracing is off by default and
+                                result-inert — traced CSVs are
+                                byte-identical to untraced ones
+  stats --connect HOST:PORT [--json]
+                                a serve daemon's self-description:
+                                uptime, job counts by state, request and
+                                typed-error counters, and pool
+                                compile/cache totals over finished jobs
   gc DIR [--max-age S] [--max-bytes N] | gc --connect HOST:PORT [...]
                                 compact recorded cell artifacts (strip
                                 per-step histories, keep every scalar);
@@ -258,7 +285,10 @@ ENV: CPT_ARTIFACTS (default: artifacts), CPT_RESULTS (default: results),
      worker goes dark for STALL_SECS after N committed cells),
      CPT_AOT_CACHE (persistent AOT executable cache dir; sweep/campaign/
      preset also accept --aot-cache DIR, which overrides the env),
-     CPT_AOT_CACHE_CAP (gc byte budget for that cache);
+     CPT_AOT_CACHE_CAP (gc byte budget for that cache),
+     CPT_LOG (stderr log level: error|warn|info|debug, default: info —
+     warn silences operational chatter, debug exposes per-cell
+     claim/lease/steal detail);
      every knob fails loudly on an unparsable value"
     );
 }
@@ -386,6 +416,17 @@ fn apply_aot_flag(cli: &Cli) {
     }
 }
 
+/// `--trace` installs the process-global span tracer, writing JSONL
+/// event files under `<root>/trace/`. Tracing is result-inert: the run's
+/// CSVs are byte-identical with and without it (gated in check.sh).
+fn install_tracer(root: &Path) -> Result<()> {
+    let tracer = cpt::obs::trace::Tracer::create_system(root)?;
+    if !cpt::obs::trace::install(tracer) {
+        bail!("a tracer is already installed for this process");
+    }
+    Ok(())
+}
+
 /// Apply the shared sharding/persistence flags to a sweep spec.
 fn apply_shard_flags(cli: &Cli, spec: &mut SweepSpec) -> Result<()> {
     if let Some(sh) = cli.flag("shard") {
@@ -508,7 +549,7 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "model", "schedules", "policy", "qmaxes", "trials", "steps",
         "cycles", "jobs", "csv", "verbose", "shard", "run-dir", "resume",
-        "claim", "aot-cache",
+        "claim", "aot-cache", "trace",
     ])?;
     apply_aot_flag(cli);
     let model = cli.require("model")?;
@@ -538,6 +579,13 @@ fn cmd_sweep(cli: &Cli) -> Result<()> {
     spec.jobs = cli.usize_or("jobs", spec.jobs)?;
     spec.verbose = cli.bool("verbose");
     apply_shard_flags(cli, &mut spec)?;
+    if cli.bool("trace") {
+        let dir = spec.run_dir.clone().context(
+            "--trace needs --run-dir: trace files live under the run dir \
+             (inspect them with `cpt trace DIR`)",
+        )?;
+        install_tracer(&dir)?;
+    }
 
     let manifest = Manifest::load(artifacts_dir())?;
     let (outs, timing) = match cli.flag("claim") {
@@ -605,7 +653,7 @@ fn report_campaign(
 fn cmd_campaign(cli: &Cli) -> Result<()> {
     cli.check_known(&[
         "file", "run-dir", "shard", "jobs", "resume", "verbose", "csv-dir",
-        "scheduler", "policy", "claim", "aot-cache",
+        "scheduler", "policy", "claim", "aot-cache", "trace",
     ])?;
     apply_aot_flag(cli);
     let path = cli.require("file")?;
@@ -633,6 +681,9 @@ fn cmd_campaign(cli: &Cli) -> Result<()> {
             "a campaign needs its root directory: pass --run-dir or set \
              run_dir in [campaign]",
         )?;
+    if cli.bool("trace") {
+        install_tracer(&root)?;
+    }
     let shard = match cli.flag("shard") {
         Some(s) => ShardId::parse(s)?,
         None => ShardId::single(),
@@ -1263,6 +1314,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         "file",
         "verbose",
         "aot-cache",
+        "trace",
     ])?;
     apply_aot_flag(cli);
     let cfg = match cli.flag("file") {
@@ -1277,6 +1329,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             "cpt serve needs its root directory: pass --root or set root \
              in [serve] of --file",
         )?;
+    if cli.bool("trace") {
+        install_tracer(&root)?;
+    }
     let listen = cli
         .flag("listen")
         .map(str::to_string)
@@ -1444,6 +1499,69 @@ fn cmd_result(cli: &Cli) -> Result<()> {
     let mut client = Client::connect(addr)?;
     let files = client.fetch_result(ticket, &out)?;
     println!("wrote {} CSV file(s) under {}", files.len(), out.display());
+    Ok(())
+}
+
+fn cmd_trace(cli: &Cli) -> Result<()> {
+    cli.check_known(&["json", "top"])?;
+    if cli.positional.len() != 1 {
+        bail!("usage: cpt trace TRACED_DIR [--json] [--top N]");
+    }
+    let dir = Path::new(&cli.positional[0]);
+    let top = cli.usize_or("top", 5)?;
+    let events = cpt::obs::trace::read_root(dir)?;
+    if events.is_empty() {
+        bail!(
+            "no trace events under {} — re-run the sweep/campaign/serve \
+             with --trace",
+            dir.display()
+        );
+    }
+    let summary = cpt::obs::analyze::summarize(&events, top);
+    if cli.bool("json") {
+        println!("{}", summary.to_json().to_string_pretty());
+    } else {
+        print!("{}", summary.render_text());
+    }
+    Ok(())
+}
+
+fn cmd_stats(cli: &Cli) -> Result<()> {
+    cli.check_known(&["connect", "json"])?;
+    let mut client = Client::connect(cli.require("connect")?)?;
+    let s = client.stats()?;
+    if cli.bool("json") {
+        println!("{}", s.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("uptime: {:.1}s", s.uptime_seconds);
+    let jobs: Vec<String> = s
+        .jobs_by_state
+        .iter()
+        .map(|(k, n)| format!("{n} {k}"))
+        .collect();
+    println!(
+        "jobs: {}",
+        if jobs.is_empty() { "none".to_string() } else { jobs.join(", ") }
+    );
+    println!("requests answered: {}", s.requests);
+    if s.errors_by_code.is_empty() {
+        println!("errors: none");
+    } else {
+        println!("errors:");
+        for (code, n) in &s.errors_by_code {
+            println!("  {code:<20} {n}");
+        }
+    }
+    println!(
+        "pool (finished jobs): {} compile(s) ({:.2}s compiling), {} cache \
+         hit(s) ({} from disk), {} miss(es)",
+        s.pool.compiles,
+        s.pool.compile_seconds,
+        s.pool.hits,
+        s.pool.disk_hits,
+        s.pool.misses
+    );
     Ok(())
 }
 

@@ -1,0 +1,369 @@
+//! Trace analyzer: rebuild per-worker timelines from a run's JSONL
+//! trace (`cpt trace DIR`).
+//!
+//! The executor emits four span kinds per cell — `claim` (time spent
+//! blocked waiting for a claimable cell), `compile`, `exec`, and
+//! `record` — all carrying worker/member/cell coordinates. This module
+//! folds them into the answers the ISSUE motivates: where did the wall
+//! clock of a campaign go, per worker and per member, and which cells
+//! were slowest. Everything else in the trace (trainer `chunk` events,
+//! lease/daemon events) is counted by kind but not broken down here.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+use super::trace::Event;
+
+/// Per-worker wall-clock breakdown in seconds.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerBreakdown {
+    pub worker: usize,
+    pub cells: usize,
+    pub queue_wait: f64,
+    pub compile: f64,
+    pub exec: f64,
+    pub record: f64,
+}
+
+impl WorkerBreakdown {
+    /// Accounted wall seconds: the sum of the four span kinds. For a
+    /// healthy trace this agrees with the worker's busy wall clock
+    /// within tolerance (the gap is claim-loop bookkeeping).
+    pub fn total(&self) -> f64 {
+        self.queue_wait + self.compile + self.exec + self.record
+    }
+}
+
+/// Per-member compile/exec totals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemberBreakdown {
+    pub member: usize,
+    /// Display label from the first exec event's `name`/`model` tag.
+    pub label: String,
+    pub cells: usize,
+    pub compile: f64,
+    pub exec: f64,
+}
+
+/// One of the top-k slowest cells (compile + exec seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlowCell {
+    pub member: usize,
+    pub cell: usize,
+    pub worker: Option<usize>,
+    pub seconds: f64,
+}
+
+/// The folded trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    pub events: usize,
+    /// Event counts by kind, sorted by kind name.
+    pub kinds: Vec<(String, usize)>,
+    /// Trace time span `[first t, last t + dur]` in clock seconds.
+    pub t_min: f64,
+    pub t_max: f64,
+    pub workers: Vec<WorkerBreakdown>,
+    pub members: Vec<MemberBreakdown>,
+    pub slowest: Vec<SlowCell>,
+}
+
+/// Fold raw events into a [`TraceSummary`] keeping the `top_k` slowest
+/// cells. Events missing the coordinates a table needs are skipped for
+/// that table only — a partial trace still summarizes.
+pub fn summarize(events: &[Event], top_k: usize) -> TraceSummary {
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    let mut workers: BTreeMap<usize, WorkerBreakdown> = BTreeMap::new();
+    let mut members: BTreeMap<usize, MemberBreakdown> = BTreeMap::new();
+    let mut cells: BTreeMap<(usize, usize), (f64, Option<usize>)> =
+        BTreeMap::new();
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for ev in events {
+        *kinds.entry(ev.kind.clone()).or_insert(0) += 1;
+        t_min = t_min.min(ev.t);
+        t_max = t_max.max(ev.t + ev.dur.unwrap_or(0.0));
+        let dur = ev.dur.unwrap_or(0.0);
+        if let Some(w) = ev.worker {
+            let wb = workers.entry(w).or_insert_with(|| WorkerBreakdown {
+                worker: w,
+                ..WorkerBreakdown::default()
+            });
+            match ev.kind.as_str() {
+                "claim" => wb.queue_wait += dur,
+                "compile" => wb.compile += dur,
+                "exec" => {
+                    wb.exec += dur;
+                    wb.cells += 1;
+                }
+                "record" => wb.record += dur,
+                _ => {}
+            }
+        }
+        if let Some(m) = ev.member {
+            if ev.kind == "compile" || ev.kind == "exec" {
+                let mb =
+                    members.entry(m).or_insert_with(|| MemberBreakdown {
+                        member: m,
+                        ..MemberBreakdown::default()
+                    });
+                if ev.kind == "compile" {
+                    mb.compile += dur;
+                } else {
+                    mb.exec += dur;
+                    mb.cells += 1;
+                    if mb.label.is_empty() {
+                        let name = ev.tag_as_str("name");
+                        let model = ev.tag_as_str("model");
+                        mb.label = if name.is_empty() {
+                            model.to_string()
+                        } else if model.is_empty() {
+                            name.to_string()
+                        } else {
+                            format!("{name}:{model}")
+                        };
+                    }
+                }
+                if let Some(c) = ev.cell {
+                    let slot = cells.entry((m, c)).or_insert((0.0, None));
+                    slot.0 += dur;
+                    slot.1 = slot.1.or(ev.worker);
+                }
+            }
+        }
+    }
+    if events.is_empty() {
+        t_min = 0.0;
+        t_max = 0.0;
+    }
+    let mut slowest: Vec<SlowCell> = cells
+        .into_iter()
+        .map(|((m, c), (secs, w))| SlowCell {
+            member: m,
+            cell: c,
+            worker: w,
+            seconds: secs,
+        })
+        .collect();
+    slowest.sort_by(|a, b| {
+        b.seconds
+            .partial_cmp(&a.seconds)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.member.cmp(&b.member))
+            .then(a.cell.cmp(&b.cell))
+    });
+    slowest.truncate(top_k);
+    TraceSummary {
+        events: events.len(),
+        kinds: kinds.into_iter().collect(),
+        t_min,
+        t_max,
+        workers: workers.into_values().collect(),
+        members: members.into_values().collect(),
+        slowest,
+    }
+}
+
+impl TraceSummary {
+    pub fn to_json(&self) -> Json {
+        let kinds = Json::Obj(
+            self.kinds
+                .iter()
+                .map(|(k, n)| (k.clone(), json::num(*n as f64)))
+                .collect(),
+        );
+        let workers = Json::Arr(
+            self.workers
+                .iter()
+                .map(|w| {
+                    json::obj(vec![
+                        ("worker", json::num(w.worker as f64)),
+                        ("cells", json::num(w.cells as f64)),
+                        ("queue_wait_seconds", json::num(w.queue_wait)),
+                        ("compile_seconds", json::num(w.compile)),
+                        ("exec_seconds", json::num(w.exec)),
+                        ("record_seconds", json::num(w.record)),
+                        ("total_seconds", json::num(w.total())),
+                    ])
+                })
+                .collect(),
+        );
+        let members = Json::Arr(
+            self.members
+                .iter()
+                .map(|m| {
+                    json::obj(vec![
+                        ("member", json::num(m.member as f64)),
+                        ("label", json::s(&m.label)),
+                        ("cells", json::num(m.cells as f64)),
+                        ("compile_seconds", json::num(m.compile)),
+                        ("exec_seconds", json::num(m.exec)),
+                    ])
+                })
+                .collect(),
+        );
+        let slowest = Json::Arr(
+            self.slowest
+                .iter()
+                .map(|c| {
+                    json::obj(vec![
+                        ("member", json::num(c.member as f64)),
+                        ("cell", json::num(c.cell as f64)),
+                        (
+                            "worker",
+                            c.worker
+                                .map_or(Json::Null, |w| json::num(w as f64)),
+                        ),
+                        ("seconds", json::num(c.seconds)),
+                    ])
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("events", json::num(self.events as f64)),
+            ("kinds", kinds),
+            ("t_min", json::num(self.t_min)),
+            ("t_max", json::num(self.t_max)),
+            ("workers", workers),
+            ("members", members),
+            ("slowest_cells", slowest),
+        ])
+    }
+
+    /// Human-readable report (the default `cpt trace` output).
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let span = (self.t_max - self.t_min).max(0.0);
+        let _ = writeln!(
+            out,
+            "trace: {} events over {:.3}s ({} workers, {} members)",
+            self.events,
+            span,
+            self.workers.len(),
+            self.members.len()
+        );
+        if !self.kinds.is_empty() {
+            let kinds: Vec<String> = self
+                .kinds
+                .iter()
+                .map(|(k, n)| format!("{k}={n}"))
+                .collect();
+            let _ = writeln!(out, "kinds: {}", kinds.join(" "));
+        }
+        for w in &self.workers {
+            let _ = writeln!(
+                out,
+                "worker {}: cells={} queue-wait={:.3}s compile={:.3}s \
+                 exec={:.3}s record={:.3}s total={:.3}s",
+                w.worker,
+                w.cells,
+                w.queue_wait,
+                w.compile,
+                w.exec,
+                w.record,
+                w.total()
+            );
+        }
+        for m in &self.members {
+            let label = if m.label.is_empty() {
+                String::new()
+            } else {
+                format!(" ({})", m.label)
+            };
+            let _ = writeln!(
+                out,
+                "member {}{label}: cells={} compile={:.3}s exec={:.3}s",
+                m.member, m.cells, m.compile, m.exec
+            );
+        }
+        if !self.slowest.is_empty() {
+            let _ = writeln!(out, "slowest cells:");
+            for (i, c) in self.slowest.iter().enumerate() {
+                let who = c
+                    .worker
+                    .map_or("?".to_string(), |w| w.to_string());
+                let _ = writeln!(
+                    out,
+                    "  {}. member {} cell {} worker {who}: {:.3}s",
+                    i + 1,
+                    c.member,
+                    c.cell,
+                    c.seconds
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell_events(
+        t0: f64,
+        w: usize,
+        m: usize,
+        c: usize,
+        wait: f64,
+        compile: f64,
+        exec: f64,
+    ) -> Vec<Event> {
+        let mut evs = vec![Event::new(t0, "claim").worker(w).dur(wait)];
+        let mut t = t0 + wait;
+        if compile > 0.0 {
+            evs.push(
+                Event::new(t, "compile")
+                    .worker(w)
+                    .member(m)
+                    .cell(c)
+                    .dur(compile)
+                    .tag_str("outcome", "miss"),
+            );
+            t += compile;
+        }
+        evs.push(
+            Event::new(t, "exec")
+                .worker(w)
+                .member(m)
+                .cell(c)
+                .dur(exec)
+                .tag_str("name", "a")
+                .tag_str("model", "mlp"),
+        );
+        evs
+    }
+
+    #[test]
+    fn breakdown_sums_match_fabricated_wall() {
+        let mut evs = Vec::new();
+        evs.extend(cell_events(0.0, 0, 0, 0, 0.1, 1.0, 2.0));
+        evs.extend(cell_events(3.1, 0, 0, 1, 0.2, 0.0, 2.0));
+        evs.extend(cell_events(0.0, 1, 0, 2, 0.5, 1.5, 1.0));
+        let s = summarize(&evs, 2);
+        assert_eq!(s.workers.len(), 2);
+        let w0 = &s.workers[0];
+        assert_eq!(w0.cells, 2);
+        assert!((w0.total() - (0.1 + 1.0 + 2.0 + 0.2 + 2.0)).abs() < 1e-9);
+        let w1 = &s.workers[1];
+        assert!((w1.total() - 3.0).abs() < 1e-9);
+        assert_eq!(s.members[0].label, "a:mlp");
+        assert_eq!(s.slowest.len(), 2);
+        assert_eq!(s.slowest[0].cell, 0, "{:?}", s.slowest);
+        assert!((s.slowest[0].seconds - 3.0).abs() < 1e-9);
+        let text = s.render_text();
+        assert!(text.contains("worker 0"), "{text}");
+        assert!(text.contains("compile="), "{text}");
+    }
+
+    #[test]
+    fn empty_trace_summarizes_cleanly() {
+        let s = summarize(&[], 5);
+        assert_eq!(s.events, 0);
+        assert_eq!(s.t_min, 0.0);
+        assert_eq!(s.t_max, 0.0);
+        assert!(s.render_text().contains("0 events"));
+    }
+}

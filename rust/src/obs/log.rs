@@ -1,0 +1,183 @@
+//! Leveled stderr logger behind the `CPT_LOG` knob.
+//!
+//! Four levels — `error < warn < info < debug` — with `info` the
+//! default, so existing operational output is unchanged unless the
+//! operator asks otherwise: `CPT_LOG=warn` silences the per-run chatter
+//! (resume notes, claim summaries), `CPT_LOG=debug` exposes claim/steal
+//! detail that was previously `--verbose`-only or absent. Parsing is
+//! strict via [`crate::util::env_parse`], like every other `CPT_*`
+//! knob: `CPT_LOG=vrbose` aborts loudly instead of silently logging at
+//! the default level.
+//!
+//! Messages go to stderr with no added prefix or timestamp — the
+//! existing `[label] note: ...` conventions already carry provenance,
+//! and keeping the bytes identical means routing a message through the
+//! logger is observable only through the level gate. Use the crate-root
+//! macros (`crate::log_warn!` et al.); they skip formatting entirely
+//! when the level is off.
+
+use std::str::FromStr;
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+/// Log severity, ordered so that `Error < Warn < Info < Debug` — a
+/// message is emitted when its level is `<=` the configured one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for Level {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Level, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" | "err" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (expected error, warn, info, \
+                 or debug)"
+            )),
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// Resolve `CPT_LOG` strictly and pin the process-wide level. The CLI
+/// calls this first thing in `run()` so a bad value becomes a clean
+/// command-line error; later calls are no-ops returning the pinned
+/// level.
+pub fn init_from_env() -> Result<Level> {
+    let lvl = crate::util::env_parse::<Level>("CPT_LOG")?.unwrap_or(Level::Info);
+    Ok(*LEVEL.get_or_init(|| lvl))
+}
+
+/// The active level. Library contexts (tests, embedders) that never ran
+/// [`init_from_env`] resolve lazily here; an unparsable `CPT_LOG` still
+/// fails loudly — by panic, since there is no error channel — rather
+/// than logging at a level the operator did not ask for.
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        match crate::util::env_parse::<Level>("CPT_LOG") {
+            Ok(l) => l.unwrap_or(Level::Info),
+            Err(e) => panic!("{e:#}"),
+        }
+    })
+}
+
+/// Would a message at `lvl` be emitted?
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Emit one line to stderr if `lvl` passes the gate. Callers go through
+/// the `log_*!` macros, which defer formatting behind this check.
+pub fn emit(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("{args}");
+    }
+}
+
+/// Log at [`Level::Error`]: failures the run cannot ignore.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Error,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Warn`]: degraded-but-continuing conditions (retries,
+/// refused writes, invalid artifacts).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Warn,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Info`]: normal operational landmarks (run dirs,
+/// resume summaries, job lifecycle).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Info,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Debug`]: per-claim / per-steal detail, hidden by
+/// default.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Debug,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!("WARN".parse::<Level>().unwrap(), Level::Warn);
+        assert_eq!("warning".parse::<Level>().unwrap(), Level::Warn);
+        assert_eq!("debug".parse::<Level>().unwrap(), Level::Debug);
+        assert_eq!("err".parse::<Level>().unwrap(), Level::Error);
+        let e = "loud".parse::<Level>().unwrap_err();
+        assert!(e.contains("unknown log level"), "{e}");
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(lvl.as_str().parse::<Level>().unwrap(), lvl);
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! histograms with deterministic JSON snapshots.
+//!
+//! Hot paths pay one atomic op per update: counters hand out
+//! `Arc<AtomicU64>` handles so a worker loop increments without
+//! touching the registry lock, and the by-name convenience methods
+//! (`inc`, `observe`, `set_gauge`) take the registry's map lock only to
+//! find-or-create the slot. Snapshots iterate the `BTreeMap`s, so two
+//! snapshots of the same state serialize byte-identically — the
+//! property the `stats` wire verb and the tests lean on.
+//!
+//! The process-global registry ([`global`]) backs the coordinator and
+//! lease instrumentation; the serve daemon holds its *own* `Registry`
+//! instance so concurrent daemons in one test process don't bleed
+//! counts into each other.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+struct HistData {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// One histogram's snapshot: count/sum/min/max (no buckets — the
+/// analyzer derives distributions from the trace, not from here).
+/// An empty histogram reports `min = max = 0.0` so snapshots stay
+/// deterministic and JSON-safe (no NaN/Inf).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Deterministic point-in-time view of a [`Registry`]: every vector is
+/// sorted by metric name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl Snapshot {
+    /// Counter value by exact name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// All counters under `prefix.`, with the prefix stripped — how the
+    /// daemon turns `serve.errors.bad_frame = 3` into an errors table.
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        let full = format!("{prefix}.");
+        self.counters
+            .iter()
+            .filter(|(n, _)| n.starts_with(&full))
+            .map(|(n, v)| (n[full.len()..].to_string(), *v))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(n, v)| (n.clone(), json::num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(n, v)| (n.clone(), json::num(*v)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(n, h)| {
+                    (
+                        n.clone(),
+                        json::obj(vec![
+                            ("count", json::num(h.count as f64)),
+                            ("sum", json::num(h.sum)),
+                            ("min", json::num(h.min)),
+                            ("max", json::num(h.max)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+/// Named counters/gauges/histograms. Cheap to update, deterministic to
+/// snapshot; see the module docs for the locking story.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    /// Gauges store f64 bits in an AtomicU64.
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Mutex<HistData>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Find-or-create a counter and return its handle; increments on the
+    /// handle are lock-free, so hot loops resolve the name once.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// One-shot increment by name (locks the map to resolve the slot).
+    pub fn inc(&self, name: &str, by: u64) {
+        self.counter(name).fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let slot = {
+            let mut m = self.gauges.lock().unwrap();
+            m.entry(name.to_string()).or_default().clone()
+        };
+        slot.store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record one observation into a histogram (latencies, sizes).
+    pub fn observe(&self, name: &str, value: f64) {
+        let slot = {
+            let mut m = self.hists.lock().unwrap();
+            m.entry(name.to_string()).or_default().clone()
+        };
+        let mut h = slot.lock().unwrap();
+        if h.count == 0 {
+            h.min = value;
+            h.max = value;
+        } else {
+            h.min = h.min.min(value);
+            h.max = h.max.max(value);
+        }
+        h.count += 1;
+        h.sum += value;
+    }
+
+    /// Sorted, deterministic view of everything recorded so far.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, v)| (n.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, v)| {
+                (n.clone(), f64::from_bits(v.load(Ordering::Relaxed)))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| {
+                let h = *h.lock().unwrap();
+                (
+                    n.clone(),
+                    HistSnapshot {
+                        count: h.count,
+                        sum: h.sum,
+                        min: h.min,
+                        max: h.max,
+                    },
+                )
+            })
+            .collect();
+        Snapshot { counters, gauges, hists }
+    }
+}
+
+/// The process-wide registry used by coordinator/lease/pool
+/// instrumentation. Daemons construct their own [`Registry`] instead so
+/// per-daemon stats stay isolated.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_sorted() {
+        let r = Registry::new();
+        r.inc("b.two", 2);
+        r.inc("a.one", 1);
+        let h = r.counter("b.two");
+        h.fetch_add(3, Ordering::Relaxed);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.counters,
+            vec![("a.one".to_string(), 1), ("b.two".to_string(), 5)]
+        );
+        assert_eq!(snap.counter("b.two"), 5);
+        assert_eq!(snap.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histograms_track_count_sum_min_max() {
+        let r = Registry::new();
+        r.observe("lat", 2.0);
+        r.observe("lat", 0.5);
+        r.observe("lat", 1.0);
+        let snap = r.snapshot();
+        let (_, h) = &snap.hists[0];
+        assert_eq!(h.count, 3);
+        assert!((h.sum - 3.5).abs() < 1e-12);
+        assert_eq!(h.min, 0.5);
+        assert_eq!(h.max, 2.0);
+        assert!((h.mean() - 3.5 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic() {
+        let r = Registry::new();
+        r.inc("z", 1);
+        r.inc("a", 2);
+        r.set_gauge("g", 0.25);
+        r.observe("h", 1.5);
+        let a = r.snapshot().to_json().to_string_compact();
+        let b = r.snapshot().to_json().to_string_compact();
+        assert_eq!(a, b);
+        assert!(a.contains("\"counters\""), "{a}");
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed
+                .get("counters")
+                .unwrap()
+                .get("a")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            2
+        );
+    }
+
+    #[test]
+    fn prefix_extraction_strips_the_prefix() {
+        let r = Registry::new();
+        r.inc("serve.errors.bad_frame", 3);
+        r.inc("serve.errors.unknown_verb", 1);
+        r.inc("serve.requests", 9);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.counters_with_prefix("serve.errors"),
+            vec![
+                ("bad_frame".to_string(), 3),
+                ("unknown_verb".to_string(), 1)
+            ]
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! Observability: leveled logging, a metrics registry, and structured
+//! span tracing — dependency-free, off the hot path by default.
+//!
+//! Three cooperating pieces (rust/DESIGN-obs.md has the full contract):
+//!
+//! * [`log`] — a leveled stderr logger behind the strict `CPT_LOG` knob
+//!   (`error|warn|info|debug`, default `info`), used via the crate-root
+//!   `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros.
+//! * [`metrics`] — named counters/gauges/histograms with deterministic
+//!   JSON snapshots; a process [`metrics::global`] registry for the
+//!   coordinator plus per-instance registries for daemons.
+//! * [`trace`] + [`analyze`] — a span/event tracer writing durable
+//!   JSONL under `<root>/trace/` (installed by `--trace`, inert
+//!   otherwise) and the folding logic behind `cpt trace DIR`.
+
+pub mod analyze;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::Level;
+pub use metrics::Registry;
+pub use trace::{Event, Tracer};

@@ -1,0 +1,425 @@
+//! Structured span/event tracing with a durable JSONL sink.
+//!
+//! An [`Event`] is one timestamped record — a point event or a span
+//! (when `dur` is set) — tagged with the worker/member/cell coordinates
+//! it happened at plus free-form key/value tags (model fingerprints,
+//! cache outcomes, q_t values). Events serialize one-per-line as
+//! compact JSON (the encoder escapes newlines, so a line is always one
+//! event) into `<root>/trace/trace-<pid>.jsonl`.
+//!
+//! Overhead contract (see rust/DESIGN-obs.md):
+//!
+//! * **Off by default.** Without [`install`] (the `--trace` flag),
+//!   [`enabled`] is one `OnceLock::get` and every emit is a no-op —
+//!   nothing is formatted, allocated, or locked.
+//! * **Per-thread buffers.** [`emit`] pushes onto a `thread_local` Vec;
+//!   no lock, no I/O. The sink is only touched by [`flush`], which
+//!   workers call at cell boundaries — never inside the train loop.
+//! * **Result-inert.** Tracing writes only under `<root>/trace/`;
+//!   manifests, artifacts, and CSVs are byte-identical with tracing on
+//!   or off (gated in scripts/check.sh).
+//!
+//! Crash tolerance: a process killed mid-write leaves at most one
+//! truncated tail line per file; [`read_file`] skips unparsable lines
+//! instead of failing, so `cpt trace` always works on a dead run's
+//! directory. Timestamps come from an injectable
+//! [`Clock`](crate::coordinator::lease::Clock) so tests fabricate
+//! deterministic timelines.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::lease::{Clock, SystemClock};
+use crate::util::json::{self, Json};
+
+/// One trace record. `t` is seconds on the tracer's clock (UNIX epoch
+/// in production, fabricated in tests); `dur` turns the event into a
+/// span of that many seconds ending at emit time semantics are up to
+/// the emitter — this module only records what it is given.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub kind: String,
+    pub dur: Option<f64>,
+    pub worker: Option<usize>,
+    pub member: Option<usize>,
+    pub cell: Option<usize>,
+    pub tags: BTreeMap<String, Json>,
+}
+
+impl Event {
+    pub fn new(t: f64, kind: &str) -> Event {
+        Event {
+            t,
+            kind: kind.to_string(),
+            dur: None,
+            worker: None,
+            member: None,
+            cell: None,
+            tags: BTreeMap::new(),
+        }
+    }
+
+    pub fn dur(mut self, seconds: f64) -> Event {
+        self.dur = Some(seconds);
+        self
+    }
+
+    pub fn worker(mut self, w: usize) -> Event {
+        self.worker = Some(w);
+        self
+    }
+
+    pub fn member(mut self, m: usize) -> Event {
+        self.member = Some(m);
+        self
+    }
+
+    pub fn cell(mut self, c: usize) -> Event {
+        self.cell = Some(c);
+        self
+    }
+
+    pub fn tag(mut self, key: &str, value: Json) -> Event {
+        self.tags.insert(key.to_string(), value);
+        self
+    }
+
+    pub fn tag_str(self, key: &str, value: &str) -> Event {
+        self.tag(key, json::s(value))
+    }
+
+    pub fn tag_num(self, key: &str, value: f64) -> Event {
+        self.tag(key, json::num(value))
+    }
+
+    /// Tag accessor: string value or "" when absent/not a string.
+    pub fn tag_as_str(&self, key: &str) -> &str {
+        match self.tags.get(key) {
+            Some(Json::Str(s)) => s,
+            _ => "",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("t".to_string(), json::num(self.t));
+        m.insert("kind".to_string(), json::s(&self.kind));
+        if let Some(d) = self.dur {
+            m.insert("dur".to_string(), json::num(d));
+        }
+        if let Some(w) = self.worker {
+            m.insert("worker".to_string(), json::num(w as f64));
+        }
+        if let Some(mi) = self.member {
+            m.insert("member".to_string(), json::num(mi as f64));
+        }
+        if let Some(c) = self.cell {
+            m.insert("cell".to_string(), json::num(c as f64));
+        }
+        if !self.tags.is_empty() {
+            m.insert("tags".to_string(), Json::Obj(self.tags.clone()));
+        }
+        Json::Obj(m)
+    }
+
+    /// One compact JSONL line (no raw newline — the encoder escapes
+    /// them inside strings).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json(v: &Json) -> Result<Event> {
+        let t = v.get("t")?.as_f64()?;
+        let kind = v.get("kind")?.as_str()?.to_string();
+        let mut ev = Event::new(t, &kind);
+        if let Some(d) = v.opt("dur") {
+            ev.dur = Some(d.as_f64()?);
+        }
+        if let Some(w) = v.opt("worker") {
+            ev.worker = Some(w.as_usize()?);
+        }
+        if let Some(m) = v.opt("member") {
+            ev.member = Some(m.as_usize()?);
+        }
+        if let Some(c) = v.opt("cell") {
+            ev.cell = Some(c.as_usize()?);
+        }
+        if let Some(tags) = v.opt("tags") {
+            ev.tags = tags.as_obj()?.clone();
+        }
+        Ok(ev)
+    }
+
+    pub fn parse_line(line: &str) -> Result<Event> {
+        Event::from_json(&Json::parse(line)?)
+    }
+}
+
+/// The durable sink: one append-mode JSONL file per process under
+/// `<root>/trace/`, plus an atomically written `meta-<pid>.json`
+/// recording the schema version (the one place the atomic-write util
+/// applies — event lines are appended, which is inherently sequential).
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    sink: Mutex<std::io::BufWriter<std::fs::File>>,
+    path: PathBuf,
+}
+
+/// Trace schema version, recorded in each writer's meta file.
+pub const TRACE_VERSION: usize = 1;
+
+impl Tracer {
+    /// Open a sink under `<root>/trace/` with the given clock.
+    pub fn create(root: &Path, clock: Arc<dyn Clock>) -> Result<Arc<Tracer>> {
+        let dir = root.join("trace");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let pid = std::process::id();
+        json::obj(vec![
+            ("version", json::num(TRACE_VERSION as f64)),
+            ("pid", json::num(pid as f64)),
+        ])
+        .write_atomic(dir.join(format!("meta-{pid}.json")))?;
+        let path = dir.join(format!("trace-{pid}.jsonl"));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Ok(Arc::new(Tracer {
+            clock,
+            sink: Mutex::new(std::io::BufWriter::new(file)),
+            path,
+        }))
+    }
+
+    /// [`Tracer::create`] on the system clock — the production path.
+    pub fn create_system(root: &Path) -> Result<Arc<Tracer>> {
+        Tracer::create(root, Arc::new(SystemClock))
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append a batch of events as JSONL and flush to the OS. Tracing
+    /// is best-effort by contract: an I/O failure warns once and drops
+    /// events rather than failing the run it observes.
+    pub fn append(&self, events: &[Event]) {
+        if events.is_empty() {
+            return;
+        }
+        static WARNED: AtomicBool = AtomicBool::new(false);
+        let mut sink = self.sink.lock().unwrap();
+        let res = (|| -> std::io::Result<()> {
+            for ev in events {
+                sink.write_all(ev.to_line().as_bytes())?;
+                sink.write_all(b"\n")?;
+            }
+            sink.flush()
+        })();
+        if let Err(e) = res {
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "[trace] note: dropping trace events ({}: {e}); the run \
+                     itself is unaffected",
+                    self.path.display()
+                );
+            }
+        }
+    }
+}
+
+// ---- process-global tracer + per-thread buffers ---------------------------
+
+static TRACER: OnceLock<Arc<Tracer>> = OnceLock::new();
+
+/// Install the process tracer (the `--trace` flag). First caller wins;
+/// returns whether this call installed it.
+pub fn install(tracer: Arc<Tracer>) -> bool {
+    TRACER.set(tracer).is_ok()
+}
+
+/// Cheap hot-path gate: is a tracer installed?
+pub fn enabled() -> bool {
+    TRACER.get().is_some()
+}
+
+/// Seconds on the installed tracer's clock (0.0 when tracing is off —
+/// callers always gate on [`enabled`] first).
+pub fn now() -> f64 {
+    TRACER.get().map_or(0.0, |t| t.now())
+}
+
+#[derive(Clone, Copy, Default)]
+struct Ctx {
+    worker: Option<usize>,
+    member: Option<usize>,
+    cell: Option<usize>,
+}
+
+thread_local! {
+    static CTX: std::cell::Cell<Ctx> = std::cell::Cell::new(Ctx::default());
+    static BUF: std::cell::RefCell<Vec<Event>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
+/// Pin this thread's cell coordinates; events emitted here (including
+/// from the trainer running inside `run_cell`) inherit them unless set
+/// explicitly. Workers call this right after claiming a cell.
+pub fn set_cell_ctx(worker: usize, member: usize, cell: usize) {
+    CTX.with(|c| {
+        c.set(Ctx {
+            worker: Some(worker),
+            member: Some(member),
+            cell: Some(cell),
+        })
+    });
+}
+
+pub fn clear_cell_ctx() {
+    CTX.with(|c| c.set(Ctx::default()));
+}
+
+/// Buffer one event on this thread (no lock, no I/O). Missing
+/// worker/member/cell fields are filled from the thread's cell context;
+/// fields the caller set explicitly win. No-op when tracing is off.
+pub fn emit(mut ev: Event) {
+    if !enabled() {
+        return;
+    }
+    let ctx = CTX.with(|c| c.get());
+    ev.worker = ev.worker.or(ctx.worker);
+    ev.member = ev.member.or(ctx.member);
+    ev.cell = ev.cell.or(ctx.cell);
+    BUF.with(|b| b.borrow_mut().push(ev));
+}
+
+/// Drain this thread's buffer into the sink. Workers call this at cell
+/// boundaries; collectors after recording; the CLI before exit.
+pub fn flush() {
+    let Some(tracer) = TRACER.get() else { return };
+    let events = BUF.with(|b| std::mem::take(&mut *b.borrow_mut()));
+    tracer.append(&events);
+}
+
+// ---- readers --------------------------------------------------------------
+
+/// Parse one JSONL trace file, skipping lines that don't parse (the
+/// truncated tail a crash leaves, or foreign garbage) — never fatal.
+pub fn read_file(path: &Path) -> Result<Vec<Event>> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut out = Vec::new();
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Ok(ev) = Event::parse_line(line) {
+            out.push(ev);
+        }
+    }
+    Ok(out)
+}
+
+/// All events under a root's `trace/` dir (or the dir itself when
+/// `root` already ends in trace files), files in name order, events
+/// sorted by timestamp. An absent directory is an empty trace.
+pub fn read_root(root: &Path) -> Result<Vec<Event>> {
+    let dir = if root.join("trace").is_dir() {
+        root.join("trace")
+    } else {
+        root.to_path_buf()
+    };
+    if !dir.is_dir() {
+        return Ok(Vec::new());
+    }
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .with_context(|| format!("read dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().and_then(|x| x.to_str()) == Some("jsonl")
+        })
+        .collect();
+    files.sort();
+    let mut events = Vec::new();
+    for f in files {
+        events.extend(read_file(&f)?);
+    }
+    events.sort_by(|a, b| {
+        a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::lease::TestClock;
+
+    #[test]
+    fn event_json_round_trips_with_all_fields() {
+        let ev = Event::new(12.5, "compile")
+            .dur(0.75)
+            .worker(3)
+            .member(1)
+            .cell(7)
+            .tag_str("fp", "abc123")
+            .tag_num("q_t", 8.0);
+        let back = Event::parse_line(&ev.to_line()).unwrap();
+        assert_eq!(ev, back);
+    }
+
+    #[test]
+    fn event_line_never_contains_raw_newline() {
+        let ev = Event::new(0.0, "note").tag_str("msg", "a\nb\r\tc\u{1}");
+        let line = ev.to_line();
+        assert!(!line.contains('\n'), "{line}");
+        assert_eq!(Event::parse_line(&line).unwrap(), ev);
+    }
+
+    #[test]
+    fn tracer_appends_and_reader_skips_truncated_tail() {
+        let dir = std::env::temp_dir().join("cpt_trace_sink_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let clock = Arc::new(TestClock::new(100.0));
+        let tracer = Tracer::create(&dir, clock.clone()).unwrap();
+        tracer.append(&[
+            Event::new(tracer.now(), "a").worker(0),
+            Event::new(tracer.now(), "b").worker(1).dur(0.5),
+        ]);
+        // simulate a crash mid-line: append a truncated record
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(tracer.path())
+                .unwrap();
+            f.write_all(b"{\"t\":101,\"kind\":\"tru").unwrap();
+        }
+        let events = read_root(&dir).unwrap();
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert_eq!(events[0].kind, "a");
+        assert_eq!(events[1].dur, Some(0.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_root_on_missing_dir_is_empty() {
+        let dir = std::env::temp_dir().join("cpt_trace_missing_test");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(read_root(&dir).unwrap().is_empty());
+    }
+}

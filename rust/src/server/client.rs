@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::jobs::{JobState, JobView};
-use super::proto::{self, Request, Response};
+use super::proto::{self, Request, Response, ServeStats};
 use crate::util;
 
 pub struct Client {
@@ -156,6 +156,15 @@ impl Client {
                 Ok((removed, bytes_freed))
             }
             other => bail!("unexpected reply to gc: {other:?}"),
+        }
+    }
+
+    /// Fetch the daemon's self-description: uptime, jobs by state,
+    /// request/error counters, pool compile/cache totals.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.call_ok(&Request::Stats)? {
+            Response::Stats { stats } => Ok(stats),
+            other => bail!("unexpected reply to stats: {other:?}"),
         }
     }
 

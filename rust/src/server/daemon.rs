@@ -32,7 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::jobs::{self, JobRecord, JobState, JobStats};
-use super::proto::{self, ErrorCode, Request, Response};
+use super::proto::{self, ErrorCode, Request, Response, ServeStats};
 use crate::config::toml::TomlDoc;
 use crate::coordinator::campaign::{
     CampaignPlan, CampaignRunOpts, CampaignRunResult, CampaignSpec,
@@ -40,6 +40,7 @@ use crate::coordinator::campaign::{
 };
 use crate::coordinator::lease::Clock;
 use crate::coordinator::{pool, report, ShardId};
+use crate::obs::metrics::Registry;
 use crate::util::{self, FrameError};
 
 /// How accepted jobs are executed. Production: a closure over
@@ -95,6 +96,18 @@ struct Inner {
     wake: Condvar,
     stop: AtomicBool,
     addr: String,
+    /// Daemon start time (clock seconds) — the `stats` uptime base.
+    start: f64,
+    /// Per-daemon counters (request/error/latency); deliberately not the
+    /// process-global registry so parallel test daemons stay isolated.
+    metrics: Registry,
+}
+
+impl Inner {
+    fn count_error(&self, code: ErrorCode) {
+        self.metrics
+            .inc(&format!("serve.errors.{}", code.as_str()), 1);
+    }
 }
 
 /// A running daemon. Dropping it does NOT stop the threads — call
@@ -176,6 +189,7 @@ impl Server {
             opts.root.join(jobs::SERVE_ADDR_FILE),
             addr.as_bytes(),
         )?;
+        let start = clock.now();
         let inner = Arc::new(Inner {
             root: opts.root,
             exec_jobs: opts.jobs,
@@ -187,6 +201,8 @@ impl Server {
             wake: Condvar::new(),
             stop: AtomicBool::new(false),
             addr,
+            start,
+            metrics: Registry::new(),
         });
         let executors = (0..opts.concurrent.max(1))
             .map(|_| {
@@ -301,6 +317,7 @@ fn handle_conn(inner: &Arc<Inner>, stream: TcpStream) {
             Ok(Some(frame)) => frame,
             Ok(None) => return, // clean EOF on a frame boundary
             Err(FrameError::Truncated) => {
+                inner.count_error(ErrorCode::BadFrame);
                 let _ = send(
                     &mut writer,
                     &Response::Error {
@@ -313,6 +330,7 @@ fn handle_conn(inner: &Arc<Inner>, stream: TcpStream) {
                 return;
             }
             Err(FrameError::TooLarge { max }) => {
+                inner.count_error(ErrorCode::FrameTooLarge);
                 let _ = send(
                     &mut writer,
                     &Response::Error {
@@ -341,6 +359,8 @@ fn handle_conn(inner: &Arc<Inner>, stream: TcpStream) {
                 }
             }
             Err((code, message)) => {
+                inner.metrics.inc("serve.requests", 1);
+                inner.count_error(code);
                 if send(&mut writer, &Response::Error { code, message })
                     .is_err()
                 {
@@ -356,6 +376,19 @@ fn internal(e: anyhow::Error) -> Response {
 }
 
 fn handle_request(inner: &Arc<Inner>, req: &Request) -> Response {
+    let t0 = std::time::Instant::now();
+    inner.metrics.inc("serve.requests", 1);
+    let resp = dispatch(inner, req);
+    inner
+        .metrics
+        .observe("serve.request_seconds", t0.elapsed().as_secs_f64());
+    if let Response::Error { code, .. } = &resp {
+        inner.count_error(*code);
+    }
+    resp
+}
+
+fn dispatch(inner: &Arc<Inner>, req: &Request) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Submit { spec_toml } => submit(inner, spec_toml),
@@ -363,9 +396,46 @@ fn handle_request(inner: &Arc<Inner>, req: &Request) -> Response {
         Request::Result { ticket } => result(inner, ticket),
         Request::Jobs => jobs_list(inner),
         Request::Gc { max_age, max_bytes } => gc(inner, *max_age, *max_bytes),
+        Request::Stats => stats(inner),
         // handled by the connection loop; answering here keeps the
         // match total
         Request::Shutdown => Response::ShuttingDown,
+    }
+}
+
+/// The `stats` verb: uptime, job counts by state, the request/error
+/// counters, and pool compile/cache work summed over finished jobs.
+fn stats(inner: &Arc<Inner>) -> Response {
+    let (jobs_by_state, pool) = {
+        let st = inner.state.lock().unwrap();
+        let mut by_state: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        let mut pool = JobStats::default();
+        for rec in st.jobs.values() {
+            *by_state.entry(rec.state.as_str()).or_insert(0) += 1;
+            if let Some(s) = &rec.stats {
+                pool.compiles += s.compiles;
+                pool.compile_seconds += s.compile_seconds;
+                pool.hits += s.hits;
+                pool.disk_hits += s.disk_hits;
+                pool.misses += s.misses;
+            }
+        }
+        let by_state: Vec<(String, usize)> = by_state
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+        (by_state, pool)
+    };
+    let snap = inner.metrics.snapshot();
+    Response::Stats {
+        stats: ServeStats {
+            uptime_seconds: (inner.clock.now() - inner.start).max(0.0),
+            jobs_by_state,
+            requests: snap.counter("serve.requests"),
+            errors_by_code: snap.counters_with_prefix("serve.errors"),
+            pool,
+        },
     }
 }
 
@@ -385,7 +455,7 @@ fn gc(
                 st.jobs.remove(t);
             }
             if inner.verbose && !out.removed.is_empty() {
-                eprintln!(
+                crate::log_info!(
                     "[serve] gc pruned {} job(s), {} bytes",
                     out.removed.len(),
                     out.bytes_freed
@@ -430,6 +500,7 @@ fn submit(inner: &Arc<Inner>, spec_toml: &str) -> Response {
         submitted: inner.clock.now(),
         finished: None,
         error: None,
+        stats: None,
     };
     // durable before visible: spec bytes + job record hit disk before
     // the registry/queue learn the ticket, so a crash between the two
@@ -447,7 +518,7 @@ fn submit(inner: &Arc<Inner>, spec_toml: &str) -> Response {
     st.queue.push_back(ticket.clone());
     inner.wake.notify_all();
     if inner.verbose {
-        eprintln!("[serve] queued job {ticket} ({planned} cells)");
+        crate::log_info!("[serve] queued job {ticket} ({planned} cells)");
     }
     Response::Submitted {
         ticket,
@@ -539,7 +610,7 @@ fn set_state(
         if let Err(e) = rec.store(&inner.root) {
             // the in-memory registry is still correct; the durable copy
             // will be healed by the next transition or recovery pass
-            eprintln!("[serve] warning: persisting job {ticket}: {e:#}");
+            crate::log_warn!("[serve] warning: persisting job {ticket}: {e:#}");
         }
     }
 }
@@ -590,7 +661,7 @@ fn executor_loop(inner: &Arc<Inner>) {
 fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
     set_state(inner, ticket, JobState::Running, None, None);
     if inner.verbose {
-        eprintln!("[serve] running job {ticket}");
+        crate::log_info!("[serve] running job {ticket}");
     }
     let dir = jobs::job_dir(&inner.root, ticket);
     let opts = CampaignRunOpts {
@@ -618,7 +689,7 @@ fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
             let stats = result.scheduler.as_ref().map(job_stats_of);
             set_state(inner, ticket, JobState::Done, None, stats);
             if inner.verbose {
-                eprintln!("[serve] job {ticket} done");
+                crate::log_info!("[serve] job {ticket} done");
             }
         }
         Err(e) if e.downcast_ref::<pool::Drained>().is_some() => {
@@ -628,12 +699,14 @@ fn run_job(inner: &Arc<Inner>, ticket: &str, plan: &CampaignPlan) {
             // failure
             set_state(inner, ticket, JobState::Queued, None, None);
             if inner.verbose {
-                eprintln!("[serve] job {ticket} drained; queued for resume");
+                crate::log_info!(
+                    "[serve] job {ticket} drained; queued for resume"
+                );
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            eprintln!("[serve] job {ticket} failed: {msg}");
+            crate::log_warn!("[serve] job {ticket} failed: {msg}");
             set_state(inner, ticket, JobState::Failed, Some(msg), None);
         }
     }

@@ -26,6 +26,7 @@ pub mod proto;
 pub use client::Client;
 pub use daemon::{CampaignExec, DrainHook, ServeOpts, Server};
 pub use jobs::{JobRecord, JobState, JobStats, JobView};
+pub use proto::ServeStats;
 
 use std::path::PathBuf;
 

@@ -16,7 +16,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::jobs::{JobState, JobView};
+use super::jobs::{JobState, JobStats, JobView};
 use crate::util::json::{self, Json};
 
 /// Wire schema version. A request with any other `v` is answered with
@@ -106,7 +106,87 @@ pub enum Request {
     /// running jobs are never touched). Both fields optional; with
     /// neither, the daemon prunes nothing.
     Gc { max_age: Option<f64>, max_bytes: Option<u64> },
+    /// Daemon self-description: uptime, job counts by state, request and
+    /// typed-error counters, pool compile/cache totals.
+    Stats,
     Shutdown,
+}
+
+/// The `stats` reply payload: a point-in-time snapshot of the daemon's
+/// metrics registry plus durable job accounting. Count lists are
+/// `(key, count)` pairs in the daemon's (sorted) emission order and
+/// round-trip verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeStats {
+    pub uptime_seconds: f64,
+    /// Jobs per lifecycle state (`queued`/`running`/`done`/`failed`),
+    /// only states with at least one job.
+    pub jobs_by_state: Vec<(String, usize)>,
+    /// Total request frames answered (including error replies).
+    pub requests: u64,
+    /// Error replies per [`ErrorCode`] string, only codes seen.
+    pub errors_by_code: Vec<(String, u64)>,
+    /// Pool compile/cache work summed over finished jobs.
+    pub pool: JobStats,
+}
+
+impl ServeStats {
+    pub fn to_json(&self) -> Json {
+        let counts = |pairs: &[(String, f64)]| {
+            Json::Arr(
+                pairs
+                    .iter()
+                    .map(|(k, n)| {
+                        json::obj(vec![
+                            ("key", json::s(k)),
+                            ("n", json::num(*n)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let jobs: Vec<(String, f64)> = self
+            .jobs_by_state
+            .iter()
+            .map(|(k, n)| (k.clone(), *n as f64))
+            .collect();
+        let errs: Vec<(String, f64)> = self
+            .errors_by_code
+            .iter()
+            .map(|(k, n)| (k.clone(), *n as f64))
+            .collect();
+        json::obj(vec![
+            ("uptime_seconds", json::num(self.uptime_seconds)),
+            ("jobs_by_state", counts(&jobs)),
+            ("requests", json::num(self.requests as f64)),
+            ("errors_by_code", counts(&errs)),
+            ("pool", self.pool.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeStats> {
+        let mut jobs_by_state = Vec::new();
+        for e in j.get("jobs_by_state")?.as_arr()? {
+            jobs_by_state.push((
+                e.get("key")?.as_str()?.to_string(),
+                e.get("n")?.as_usize()?,
+            ));
+        }
+        let mut errors_by_code = Vec::new();
+        for e in j.get("errors_by_code")?.as_arr()? {
+            errors_by_code.push((
+                e.get("key")?.as_str()?.to_string(),
+                e.get("n")?.as_f64()? as u64,
+            ));
+        }
+        Ok(ServeStats {
+            uptime_seconds: j.get("uptime_seconds")?.as_f64()?,
+            jobs_by_state,
+            requests: j.get("requests")?.as_f64()? as u64,
+            errors_by_code,
+            pool: JobStats::from_json(j.get("pool")?)?,
+        })
+    }
 }
 
 /// A daemon reply.
@@ -138,6 +218,9 @@ pub enum Response {
     GcDone {
         removed: usize,
         bytes_freed: u64,
+    },
+    Stats {
+        stats: ServeStats,
     },
     ShuttingDown,
     Error {
@@ -174,6 +257,7 @@ pub fn encode_request(req: &Request) -> String {
                 pairs.push(("max_bytes", json::num(*bytes as f64)));
             }
         }
+        Request::Stats => pairs.push(("verb", json::s("stats"))),
         Request::Shutdown => pairs.push(("verb", json::s("shutdown"))),
     }
     json::obj(pairs).to_string_compact()
@@ -227,6 +311,11 @@ pub fn encode_response(resp: &Response) -> String {
             pairs.push(("reply", json::s("gc_done")));
             pairs.push(("removed", json::num(*removed as f64)));
             pairs.push(("bytes_freed", json::num(*bytes_freed as f64)));
+        }
+        Response::Stats { stats } => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.push(("reply", json::s("stats")));
+            pairs.push(("stats", stats.to_json()));
         }
         Response::ShuttingDown => {
             pairs.push(("ok", Json::Bool(true)));
@@ -317,6 +406,7 @@ pub fn decode_request(
     match verb {
         "ping" => Ok(Request::Ping),
         "jobs" => Ok(Request::Jobs),
+        "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         "submit" => Ok(Request::Submit { spec_toml: str_field("spec_toml")? }),
         "status" => Ok(Request::Status { ticket: str_field("ticket")? }),
@@ -329,7 +419,7 @@ pub fn decode_request(
             ErrorCode::UnknownVerb,
             format!(
                 "unknown verb '{other}' (known: ping, submit, status, \
-                 result, jobs, gc, shutdown)"
+                 result, jobs, gc, stats, shutdown)"
             ),
         )),
     }
@@ -386,6 +476,9 @@ pub fn decode_response(frame: &[u8]) -> Result<Response> {
         "gc_done" => Ok(Response::GcDone {
             removed: j.get("removed")?.as_usize()?,
             bytes_freed: j.get("bytes_freed")?.as_f64()? as u64,
+        }),
+        "stats" => Ok(Response::Stats {
+            stats: ServeStats::from_json(j.get("stats")?)?,
         }),
         other => bail!("unknown reply kind '{other}'"),
     }

@@ -37,6 +37,7 @@ use xla::Literal;
 
 use crate::data::Dataset;
 use crate::metrics::History;
+use crate::obs::trace::{self, Event};
 use crate::policy::{ChunkFeedback, PrecisionPolicy, StaticPolicy};
 use crate::quant::BitOpsAccountant;
 use crate::runtime::{HostTensor, LiteralArena, LoadedModel, TrainState};
@@ -169,7 +170,7 @@ impl<'m, 'd> Trainer<'m, 'd> {
                 // parallel sweep workers run quiet (their stderr would
                 // interleave across threads)
                 if self.cfg.verbose {
-                    eprintln!(
+                    crate::log_info!(
                         "[train {}] total_steps {total} not a multiple of chunk {chunk} — running the last {} step(s) via the k=1 artifact",
                         self.model.spec.name,
                         total - step,
@@ -198,7 +199,24 @@ impl<'m, 'd> Trainer<'m, 'd> {
                 &seeds,
                 self.cfg.q_bwd,
             )?;
-            exec_s += t0.elapsed().as_secs_f64();
+            let chunk_s = t0.elapsed().as_secs_f64();
+            exec_s += chunk_s;
+
+            if trace::enabled() {
+                // worker/member/cell inherited from the thread's cell
+                // context; the executor flushes at the cell boundary
+                let mean_q =
+                    q_fwd.iter().map(|&q| q as f64).sum::<f64>() / k as f64;
+                trace::emit(
+                    Event::new(trace::now() - chunk_s, "chunk")
+                        .dur(chunk_s)
+                        .tag_num("step", step as f64)
+                        .tag_num("k", k as f64)
+                        .tag_num("q_t", q_fwd[k - 1] as f64)
+                        .tag_num("mean_q", mean_q)
+                        .tag_num("loss", res.losses[k - 1] as f64),
+                );
+            }
 
             acc.record_steps(&q_fwd);
             for (i, (&l, &m)) in
@@ -226,7 +244,7 @@ impl<'m, 'd> Trainer<'m, 'd> {
                 let (el, em) = self.evaluate(&state)?;
                 hist.evals.push((step, el, em));
                 if self.cfg.verbose {
-                    eprintln!(
+                    crate::log_info!(
                         "[train {}] step {step}/{total} q={} loss={:.4} eval_loss={el:.4} eval_metric={em:.4}",
                         self.model.spec.name,
                         q_fwd[k - 1],

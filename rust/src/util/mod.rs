@@ -15,6 +15,26 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+/// Strict env-var parsing: `Ok(None)` when unset, the parsed value when
+/// set and valid, and a loud error otherwise. Every `CPT_*` knob goes
+/// through here so a typo'd value aborts the run instead of silently
+/// falling back to a default.
+pub fn env_parse<T: std::str::FromStr>(name: &str) -> Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            anyhow::bail!("{name} is set but is not valid UTF-8")
+        }
+        Ok(v) => match v.trim().parse::<T>() {
+            Ok(x) => Ok(Some(x)),
+            Err(e) => anyhow::bail!("{name}='{v}' is invalid: {e}"),
+        },
+    }
+}
+
 /// Stage a unique `.tmp` sibling of `path` holding `bytes`, fsynced.
 /// The name embeds the pid and a process-wide counter so two writers —
 /// threads or *processes* sharing a directory — can never truncate each

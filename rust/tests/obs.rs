@@ -1,0 +1,322 @@
+//! The obs subsystem end to end (the CI `test-unit` tier — no PJRT):
+//! event JSONL round trips under adversarial strings, durable-sink
+//! recovery from a crash-truncated tail, metrics snapshot determinism,
+//! and the `cpt trace` analyzer on a fabricated two-worker run whose
+//! span breakdown must account for each worker's wall clock.
+
+mod common;
+
+use std::io::Write;
+use std::sync::Arc;
+
+use common::tmp_dir;
+use cpt::coordinator::lease::TestClock;
+use cpt::obs::analyze::summarize;
+use cpt::obs::log::Level;
+use cpt::obs::metrics::Registry;
+use cpt::obs::trace::{read_root, Event, Tracer};
+use cpt::util::json::{self, Json};
+use cpt::util::prng::Pcg32;
+use cpt::util::propcheck::propcheck;
+
+/// Strings over an alphabet chosen to stress the JSONL invariant:
+/// quotes, backslashes, raw newlines/tabs (which the compact encoder
+/// must escape — an unescaped one would split the line), braces,
+/// control chars, unicode.
+fn rand_string(rng: &mut Pcg32) -> String {
+    const ALPHABET: [char; 16] = [
+        'a', 'Z', '0', '"', '\\', '\n', '\t', '{', '}', ':', ',', ' ',
+        'λ', '→', '\u{1}', '/',
+    ];
+    let len = rng.below(24) as usize;
+    (0..len)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u32) as usize])
+        .collect()
+}
+
+fn rand_event(rng: &mut Pcg32) -> Event {
+    // awkward but finite floats (bit-exact JSON round trip is part of
+    // the contract under test)
+    let t = rng.next_u32() as f64 / 7.0;
+    let mut ev = Event::new(t, &rand_string(rng));
+    if rng.below(2) == 0 {
+        ev = ev.dur(rng.next_u32() as f64 / 7.0);
+    }
+    if rng.below(2) == 0 {
+        ev = ev.worker(rng.below(8) as usize);
+    }
+    if rng.below(2) == 0 {
+        ev = ev.member(rng.below(8) as usize);
+    }
+    if rng.below(2) == 0 {
+        ev = ev.cell(rng.below(100) as usize);
+    }
+    for _ in 0..rng.below(4) {
+        let key = rand_string(rng);
+        ev = if rng.below(2) == 0 {
+            ev.tag(&key, json::s(&rand_string(rng)))
+        } else {
+            ev.tag(&key, json::num(rng.next_u32() as f64 / 7.0))
+        };
+    }
+    ev
+}
+
+#[test]
+fn event_lines_round_trip_adversarial_strings() {
+    propcheck(128, |rng| {
+        let ev = rand_event(rng);
+        let line = ev.to_line();
+        cpt::prop_assert!(!line.contains('\n'), "raw newline: {line:?}");
+        let back = Event::parse_line(&line)
+            .map_err(|e| format!("parse {line:?}: {e:#}"))?;
+        cpt::prop_assert!(back == ev, "{back:?} != {ev:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn sink_survives_crash_truncated_tail() {
+    let root = tmp_dir("obs_truncated");
+    let clock = Arc::new(TestClock::new(50.0));
+    let tracer = Tracer::create(&root, clock).unwrap();
+    let good = vec![
+        Event::new(51.0, "claim").dur(0.5).worker(0),
+        Event::new(52.0, "exec").dur(1.0).worker(0),
+    ];
+    tracer.append(&good);
+    // a crash mid-write leaves a partial last line (no newline), and a
+    // foreign tool might leave plain garbage; neither may be fatal
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(tracer.path())
+        .unwrap();
+    f.write_all(b"not json at all\n").unwrap();
+    f.write_all(b"{\"t\":53.0,\"kind\":\"tru").unwrap();
+    drop(f);
+    let events = read_root(&root).unwrap();
+    assert_eq!(events, good);
+    // pointing at the trace dir itself (not its parent) also works
+    let direct = read_root(&root.join("trace")).unwrap();
+    assert_eq!(direct, good);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn metrics_snapshots_are_order_independent_and_deterministic() {
+    // the same multiset of updates, applied in two different orders,
+    // must serialize byte-identically — what `cpt stats` leans on
+    let a = Registry::new();
+    a.inc("pool.claims", 3);
+    a.observe("serve.request_seconds", 0.25);
+    a.inc("serve.errors.bad_frame", 1);
+    a.observe("serve.request_seconds", 1.5);
+    a.set_gauge("queue.depth", 4.0);
+    a.inc("pool.claims", 2);
+
+    let b = Registry::new();
+    b.set_gauge("queue.depth", 4.0);
+    b.inc("serve.errors.bad_frame", 1);
+    b.observe("serve.request_seconds", 1.5);
+    b.inc("pool.claims", 5);
+    b.observe("serve.request_seconds", 0.25);
+
+    let sa = a.snapshot();
+    let sb = b.snapshot();
+    let ja = sa.to_json().to_string_compact();
+    let jb = sb.to_json().to_string_compact();
+    assert_eq!(ja, jb);
+    assert_eq!(sa.counter("pool.claims"), 5);
+    assert_eq!(
+        sa.counters_with_prefix("serve.errors"),
+        vec![("bad_frame".to_string(), 1)]
+    );
+    let (name, h) = &sa.hists[0];
+    assert_eq!(name, "serve.request_seconds");
+    assert_eq!(h.count, 2);
+    assert_eq!(h.min, 0.25);
+    assert_eq!(h.max, 1.5);
+    assert!((h.sum - 1.75).abs() < 1e-12);
+}
+
+/// The four spans of one fabricated cell, tiling
+/// `[t0, t0 + claim + compile + exec + record)` exactly the way the
+/// executor emits them.
+#[allow(clippy::too_many_arguments)]
+fn cell_spans(
+    t0: f64,
+    w: usize,
+    m: usize,
+    c: usize,
+    claim: f64,
+    compile: f64,
+    exec: f64,
+    record: f64,
+) -> Vec<Event> {
+    let outcome = if compile > 0.0 { "miss" } else { "hit" };
+    vec![
+        Event::new(t0, "claim")
+            .dur(claim)
+            .worker(w)
+            .member(m)
+            .cell(c),
+        Event::new(t0 + claim, "compile")
+            .dur(compile)
+            .worker(w)
+            .member(m)
+            .cell(c)
+            .tag_str("outcome", outcome),
+        Event::new(t0 + claim + compile, "exec")
+            .dur(exec)
+            .worker(w)
+            .member(m)
+            .cell(c)
+            .tag_str("name", "mlp")
+            .tag_str("model", "m8"),
+        Event::new(t0 + claim + compile + exec, "record")
+            .dur(record)
+            .worker(w)
+            .member(m)
+            .cell(c),
+    ]
+}
+
+#[test]
+fn two_worker_trace_accounts_for_wall_clock() {
+    let root = tmp_dir("obs_two_workers");
+    let clock = Arc::new(TestClock::new(100.0));
+    let tracer = Tracer::create(&root, clock).unwrap();
+    // worker 0 runs member 0 cells 0 and 1 back to back: 8.6s of wall
+    let mut w0 = cell_spans(100.0, 0, 0, 0, 0.5, 2.0, 3.0, 0.25);
+    w0.extend(cell_spans(105.75, 0, 0, 1, 0.1, 0.0, 2.5, 0.25));
+    tracer.append(&w0);
+    // worker 1 runs member 1 cell 0: 6.75s of wall — written as a
+    // second trace file, the multi-process layout read_root merges
+    let w1 = cell_spans(100.0, 1, 1, 0, 0.75, 1.5, 4.0, 0.5);
+    let w1_path = root.join("trace").join("trace-w1.jsonl");
+    let mut f = std::fs::File::create(w1_path).unwrap();
+    for ev in &w1 {
+        writeln!(f, "{}", ev.to_line()).unwrap();
+    }
+    drop(f);
+
+    let events = read_root(&root).unwrap();
+    assert_eq!(events.len(), 12);
+    // the merged stream is timestamp-sorted across files
+    for pair in events.windows(2) {
+        assert!(pair[0].t <= pair[1].t);
+    }
+
+    let s = summarize(&events, 2);
+    assert_eq!(s.events, 12);
+    assert_eq!(
+        s.kinds,
+        vec![
+            ("claim".to_string(), 3),
+            ("compile".to_string(), 3),
+            ("exec".to_string(), 3),
+            ("record".to_string(), 3),
+        ]
+    );
+    assert_eq!(s.t_min, 100.0);
+    assert!((s.t_max - 108.6).abs() < 1e-9, "t_max={}", s.t_max);
+
+    // per-worker claim+compile+exec+record must account for the wall
+    // clock each worker was busy, within float-sum tolerance
+    assert_eq!(s.workers.len(), 2);
+    let w0b = &s.workers[0];
+    assert_eq!((w0b.worker, w0b.cells), (0, 2));
+    assert!((w0b.queue_wait - 0.6).abs() < 1e-9);
+    assert!((w0b.compile - 2.0).abs() < 1e-9);
+    assert!((w0b.exec - 5.5).abs() < 1e-9);
+    assert!((w0b.record - 0.5).abs() < 1e-9);
+    assert!((w0b.total() - 8.6).abs() < 1e-9, "total={}", w0b.total());
+    let w1b = &s.workers[1];
+    assert_eq!((w1b.worker, w1b.cells), (1, 1));
+    assert!((w1b.total() - 6.75).abs() < 1e-9, "total={}", w1b.total());
+
+    // member table: labels from exec tags, compile/exec attribution
+    assert_eq!(s.members.len(), 2);
+    assert_eq!(s.members[0].label, "mlp:m8");
+    assert!((s.members[0].compile - 2.0).abs() < 1e-9);
+    assert!((s.members[0].exec - 5.5).abs() < 1e-9);
+    assert_eq!(s.members[1].cells, 1);
+
+    // slowest cells by compile+exec: (m1,c0)=5.5 then (m0,c0)=5.0
+    assert_eq!(s.slowest.len(), 2);
+    let top = &s.slowest[0];
+    assert_eq!((top.member, top.cell, top.worker), (1, 0, Some(1)));
+    assert!((top.seconds - 5.5).abs() < 1e-9);
+    assert_eq!((s.slowest[1].member, s.slowest[1].cell), (0, 0));
+
+    // the text report carries the rows check.sh greps for
+    let text = s.render_text();
+    assert!(text.contains("worker 0:"), "{text}");
+    assert!(text.contains("worker 1:"), "{text}");
+    assert!(text.contains("compile="), "{text}");
+    assert!(text.contains("slowest cells:"), "{text}");
+    assert!(text.ends_with('\n'), "{text:?}");
+
+    // the JSON report mirrors the same totals
+    let j = s.to_json();
+    let workers = match j.get("workers").unwrap() {
+        Json::Arr(v) => v.clone(),
+        other => panic!("workers not an array: {other:?}"),
+    };
+    assert_eq!(workers.len(), 2);
+    let w0j = &workers[0];
+    let total0 = w0j.get("total_seconds").unwrap().as_f64().unwrap();
+    assert!((total0 - 8.6).abs() < 1e-9, "total0={total0}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn summarize_invariants_hold_on_random_traces() {
+    propcheck(64, |rng| {
+        let n = rng.below(40) as usize;
+        let events: Vec<Event> = (0..n).map(|_| rand_event(rng)).collect();
+        let top_k = rng.below(5) as usize;
+        let s = summarize(&events, top_k);
+        cpt::prop_assert!(s.events == n, "events={} n={n}", s.events);
+        cpt::prop_assert!(
+            s.slowest.len() <= top_k,
+            "slowest {} > top_k {top_k}",
+            s.slowest.len()
+        );
+        for pair in s.slowest.windows(2) {
+            cpt::prop_assert!(
+                pair[0].seconds >= pair[1].seconds,
+                "slowest not sorted: {} < {}",
+                pair[0].seconds,
+                pair[1].seconds
+            );
+        }
+        let kind_total: usize = s.kinds.iter().map(|(_, c)| c).sum();
+        cpt::prop_assert!(kind_total == n, "kinds {kind_total} != {n}");
+        for w in &s.workers {
+            let sum = w.queue_wait + w.compile + w.exec + w.record;
+            cpt::prop_assert!(
+                (w.total() - sum).abs() < 1e-9,
+                "total {} != parts {sum}",
+                w.total()
+            );
+        }
+        cpt::prop_assert!(
+            s.t_max >= s.t_min || n == 0,
+            "t range inverted: [{}, {}]",
+            s.t_min,
+            s.t_max
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn log_level_parsing_is_strict() {
+    assert_eq!("warn".parse::<Level>().unwrap(), Level::Warn);
+    assert_eq!("WARNING".parse::<Level>().unwrap(), Level::Warn);
+    assert_eq!("err".parse::<Level>().unwrap(), Level::Error);
+    assert_eq!("debug".parse::<Level>().unwrap(), Level::Debug);
+    let e = "vrbose".parse::<Level>().unwrap_err();
+    assert!(e.contains("unknown log level 'vrbose'"), "{e}");
+}

@@ -17,7 +17,7 @@ use common::tmp_dir;
 use cpt::coordinator::lease::TestClock;
 use cpt::server::proto::{
     self, decode_request, decode_response, encode_request, encode_response,
-    ErrorCode, Request, Response, MAX_FRAME_BYTES,
+    ErrorCode, Request, Response, ServeStats, MAX_FRAME_BYTES,
 };
 use cpt::server::{Client, JobState, JobStats, JobView, ServeOpts, Server};
 use cpt::util::prng::Pcg32;
@@ -78,7 +78,7 @@ fn rand_view(rng: &mut Pcg32) -> JobView {
 }
 
 fn rand_request(rng: &mut Pcg32) -> Request {
-    match rng.below(7) {
+    match rng.below(8) {
         0 => Request::Ping,
         1 => Request::Submit { spec_toml: rand_string(rng) },
         2 => Request::Status { ticket: rand_string(rng) },
@@ -94,12 +94,33 @@ fn rand_request(rng: &mut Pcg32) -> Request {
                 _ => Some(rng.next_u32() as u64),
             },
         },
+        6 => Request::Stats,
         _ => Request::Shutdown,
     }
 }
 
+fn rand_serve_stats(rng: &mut Pcg32) -> ServeStats {
+    ServeStats {
+        uptime_seconds: rng.next_u32() as f64 / 7.0,
+        jobs_by_state: (0..rng.below(4))
+            .map(|_| (rand_string(rng), rng.below(50) as usize))
+            .collect(),
+        requests: rng.next_u32() as u64,
+        errors_by_code: (0..rng.below(4))
+            .map(|_| (rand_string(rng), rng.next_u32() as u64))
+            .collect(),
+        pool: JobStats {
+            compiles: rng.below(10) as usize,
+            compile_seconds: rng.next_u32() as f64 / 7.0,
+            hits: rng.below(100) as usize,
+            disk_hits: rng.below(100) as usize,
+            misses: rng.below(100) as usize,
+        },
+    }
+}
+
 fn rand_response(rng: &mut Pcg32) -> Response {
-    match rng.below(8) {
+    match rng.below(9) {
         0 => Response::Pong,
         1 => Response::Submitted {
             ticket: format!("{:016x}", rng.next_u32()),
@@ -122,6 +143,7 @@ fn rand_response(rng: &mut Pcg32) -> Response {
             removed: rng.below(20) as usize,
             bytes_freed: rng.next_u32() as u64,
         },
+        7 => Response::Stats { stats: rand_serve_stats(rng) },
         _ => Response::Error {
             code: ErrorCode::BadSpec,
             message: rand_string(rng),
@@ -331,6 +353,31 @@ fn live_daemon_answers_every_malformed_input_with_a_typed_error() {
     client.ping().unwrap();
 
     // clean shutdown: acknowledged, then the daemon exits
+    client.shutdown().unwrap();
+    srv.wait().unwrap();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The `stats` verb against a live daemon: the counters must reflect
+/// the traffic this very connection generated, and the reply must
+/// round-trip through the real client.
+#[test]
+fn live_daemon_reports_stats() {
+    let root = tmp_dir("serve_proto_stats");
+    let srv = proto_server(&root);
+    let addr = srv.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+    // one typed application error so the error table is non-empty
+    let err = client.status("aaaabbbbccccdddd").unwrap_err().to_string();
+    assert!(err.contains("unknown_ticket"), "{err}");
+    let s = client.stats().unwrap();
+    assert!(s.uptime_seconds >= 0.0);
+    assert!(s.jobs_by_state.is_empty(), "{:?}", s.jobs_by_state);
+    // at least ping + status + this stats call
+    assert!(s.requests >= 3, "requests={}", s.requests);
+    assert_eq!(s.errors_by_code, vec![("unknown_ticket".to_string(), 1)]);
+    assert_eq!(s.pool, JobStats::default());
     client.shutdown().unwrap();
     srv.wait().unwrap();
     std::fs::remove_dir_all(&root).ok();

@@ -13,8 +13,12 @@
 # persistent shared worker pool) whose fetched CSVs must be
 # byte-identical to the direct campaign, whose identical resubmission
 # must be a spec-hash cache hit, whose second distinct shared-model
-# campaign must report zero cross-job compiles, and whose finished job
-# dirs `cpt gc --max-age` prunes — so the bench targets and the whole
+# campaign must report zero cross-job compiles, whose `cpt stats` verb
+# must answer live, and whose finished job dirs `cpt gc --max-age`
+# prunes — plus a `--trace` campaign whose merged CSVs must be
+# byte-identical to the traceless ground truth (tracing is
+# result-inert) and whose JSONL trace `cpt trace` must fold into
+# per-worker timelines — so the bench targets and the whole
 # coordinator surface are compiled-and-exercised without paying full
 # bench cost.
 #
@@ -23,7 +27,8 @@
 #                               # integration files (tests/campaign.rs,
 #                               # tests/global_sched.rs, tests/policy.rs,
 #                               # tests/lease.rs, tests/aot.rs,
-#                               # tests/serve_proto.rs, tests/serve.rs);
+#                               # tests/serve_proto.rs, tests/serve.rs,
+#                               # tests/obs.rs);
 #                               # needs no HLO artifacts — the CI
 #                               # test-unit job runs this tier
 #   scripts/check.sh --smoke    # ... + perf_hotpath + fig_campaign_sched
@@ -91,6 +96,8 @@ if [ "$UNIT" = 1 ]; then
   cargo test -q --test serve_proto
   echo "== cargo test -q --test serve (fabricated serve daemon: dedupe, recovery, failure)"
   cargo test -q --test serve
+  echo "== cargo test -q --test obs (trace round-trip, truncated tail, metrics, analyzer)"
+  cargo test -q --test obs
   echo "check.sh: OK (unit tier)"
   exit 0
 fi
@@ -286,6 +293,46 @@ EOF
     done
     echo "global-scheduler smoke: killed+resumed global-pool shards merge byte-identically to the sequential scheduler"
 
+    echo "== trace smoke (--trace campaign: result-inert, analyzable timelines)"
+    # Tracing is result-inert by contract: the same campaign with
+    # --trace must produce byte-identical merged CSVs, with the trace
+    # living only under <run-dir>/trace/. The analyzer must then
+    # reconstruct per-worker timelines with compile/exec breakdowns
+    # from the traced run's JSONL.
+    T1="$SMOKE_DIR/tcamp1"
+    T2="$SMOKE_DIR/tcamp2"
+    $CPT campaign --file "$CAMP_TOML" --run-dir "$T1" --shard 1/2 --jobs 2 --scheduler global --trace
+    $CPT campaign --file "$CAMP_TOML" --run-dir "$T2" --shard 2/2 --jobs 2 --scheduler global --trace
+    $CPT merge --csv-dir "$SMOKE_DIR/campout_traced" "$T1" "$T2"
+    for f in a.csv b.csv c.csv campaign.csv; do
+      if ! diff "$SMOKE_DIR/campout/$f" "$SMOKE_DIR/campout_traced/$f"; then
+        echo "check.sh: $f differs with tracing on — tracing is not result-inert" >&2
+        exit 1
+      fi
+    done
+    if [ ! -d "$T1/trace" ]; then
+      echo "check.sh: --trace produced no trace/ dir under the run dir" >&2
+      exit 1
+    fi
+    TRACE_OUT="$($CPT trace "$T1")"
+    if ! echo "$TRACE_OUT" | grep -q "^worker "; then
+      echo "check.sh: cpt trace did not report a per-worker breakdown" >&2
+      echo "$TRACE_OUT" >&2
+      exit 1
+    fi
+    if ! echo "$TRACE_OUT" | grep -q "compile="; then
+      echo "check.sh: cpt trace worker rows are missing the compile column" >&2
+      echo "$TRACE_OUT" >&2
+      exit 1
+    fi
+    # strict CPT_LOG parsing: a typo'd level is a loud startup error,
+    # never a silent fallback to the default
+    if CPT_LOG=vrbose $CPT status "$T1" >/dev/null 2>&1; then
+      echo "check.sh: unparsable CPT_LOG should fail loudly" >&2
+      exit 1
+    fi
+    echo "trace smoke: traced CSVs byte-identical to traceless; cpt trace reconstructs worker timelines"
+
     echo "== lease-claim sweep smoke (one claimer killed, one stalled; vs the static-shard baseline)"
     # Dynamic claiming must survive dead and wedged claimers and still
     # match the static path byte-for-byte on the deterministic CSV
@@ -477,6 +524,24 @@ EOF
     if ! echo "$JOBS_OUT" | grep -q " 0/4/0 "; then
       echo "check.sh: second job should report zero compiles (cross-job warm start)" >&2
       echo "$JOBS_OUT" >&2
+      exit 1
+    fi
+    # the stats verb: uptime, jobs by state, request/error counters,
+    # pool compile/hit totals — answered live before shutdown
+    STATS_OUT="$($CPT stats --connect "$ADDR")"
+    if ! echo "$STATS_OUT" | grep -q "uptime:"; then
+      echo "check.sh: cpt stats did not report uptime" >&2
+      echo "$STATS_OUT" >&2
+      exit 1
+    fi
+    if ! echo "$STATS_OUT" | grep -q "requests answered:"; then
+      echo "check.sh: cpt stats did not report the request counter" >&2
+      echo "$STATS_OUT" >&2
+      exit 1
+    fi
+    if ! echo "$STATS_OUT" | grep -q "done"; then
+      echo "check.sh: cpt stats jobs-by-state should list the finished jobs" >&2
+      echo "$STATS_OUT" >&2
       exit 1
     fi
     $CPT shutdown --connect "$ADDR"
